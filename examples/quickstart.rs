@@ -1,0 +1,72 @@
+//! Quickstart: compress a small synthetic tensor, inspect the trade-off,
+//! save/load the `.tcz`, and decode entries three ways (bulk XLA decode,
+//! pure-Rust log-time point decode, decompress-to-npy).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+use tensorcodec::compress::{load_tcz, save_tcz, Decompressor};
+use tensorcodec::coordinator::{TrainConfig, Trainer};
+use tensorcodec::datasets;
+use tensorcodec::metrics::fitness;
+
+fn main() -> Result<()> {
+    // 1. A small Uber-like spatio-temporal count tensor (Table II recipe).
+    let tensor = datasets::by_name("uber", 0.15, 7)?;
+    println!(
+        "tensor: shape {:?}, {} entries, {:.1} KiB raw (f64)",
+        tensor.shape(),
+        tensor.len(),
+        (tensor.len() * 8) as f64 / 1024.0
+    );
+
+    // 2. Compress with TensorCodec (NTTD + folding + reordering).
+    let cfg = TrainConfig {
+        rank: 6,
+        hidden: 6,
+        epochs: 25,
+        lr: 1e-2,
+        reorder_every: 5,
+        verbose: true,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&tensor, cfg)?;
+    println!(
+        "folded: {:?} (d'={})",
+        trainer.spec().folded_shape,
+        trainer.spec().dp
+    );
+    let model = trainer.fit()?;
+    println!(
+        "fitness {:.4} | {} params | {} B compressed | {:.1}x smaller",
+        model.fitness,
+        model.params.num_params(),
+        model.reported_size_bytes(),
+        (tensor.len() * 8) as f64 / model.reported_size_bytes() as f64
+    );
+
+    // 3. Round-trip through the container format.
+    let path = std::env::temp_dir().join("quickstart.tcz");
+    save_tcz(&path, &model)?;
+    let loaded = load_tcz(&path)?;
+    println!("saved + loaded {} bytes", std::fs::metadata(&path)?.len());
+
+    // 4. Point decodes via the pure-Rust O(d' (h² + hR²)) path (Thm 3).
+    let mut dec = Decompressor::new(loaded);
+    for idx in [[0usize, 0, 0], [10, 2, 50], [20, 3, 100]] {
+        println!(
+            "X{idx:?} = {:.3} (true {:.3})",
+            dec.get(&idx),
+            tensor.at(&idx)
+        );
+    }
+
+    // 5. Full reconstruction agrees with the fitness measured at fit time.
+    let approx = dec.reconstruct_all();
+    println!(
+        "decoded fitness {:.4} (trained {:.4})",
+        fitness(tensor.data(), approx.data()),
+        model.fitness
+    );
+    Ok(())
+}

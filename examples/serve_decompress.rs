@@ -1,0 +1,120 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! 1. Generates a PEMS-like traffic tensor (Table II recipe).
+//! 2. Compresses it with TensorCodec (L2/L1 train-step artifacts driven by
+//!    the L3 coordinator: minibatch Adam + TSP init + LSH reordering).
+//! 3. Starts the batched decompression service (L3 router/batcher in front
+//!    of the XLA forward artifact) and fires concurrent point-query load
+//!    from many client threads.
+//! 4. Reports compression ratio, fitness, decode latency percentiles and
+//!    throughput — the serving-style metrics of the reproduction.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_decompress`
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use tensorcodec::coordinator::batcher::BatchPolicy;
+use tensorcodec::coordinator::server::DecodeServer;
+use tensorcodec::coordinator::{TrainConfig, Trainer};
+use tensorcodec::datasets;
+use tensorcodec::metrics::Timer;
+use tensorcodec::util::Pcg64;
+
+fn main() -> Result<()> {
+    // ---- 1. workload ----
+    let tensor = datasets::by_name("pems", 0.12, 3)?;
+    println!(
+        "[driver] tensor {:?} ({} entries, {:.1} MiB raw f64)",
+        tensor.shape(),
+        tensor.len(),
+        (tensor.len() * 8) as f64 / (1024.0 * 1024.0)
+    );
+
+    // ---- 2. compress ----
+    let cfg = TrainConfig {
+        rank: 8,
+        hidden: 8,
+        epochs: 15,
+        lr: 1e-2,
+        reorder_every: 5,
+        swap_samples: 128,
+        verbose: true,
+        ..Default::default()
+    };
+    let t_fit = Timer::start();
+    let mut trainer = Trainer::new(&tensor, cfg)?;
+    let model = trainer.fit()?;
+    println!(
+        "[driver] compressed in {:.1}s: fitness {:.4}, {} B ({:.1}x)",
+        t_fit.seconds(),
+        model.fitness,
+        model.reported_size_bytes(),
+        (tensor.len() * 8) as f64 / model.reported_size_bytes() as f64
+    );
+
+    // ---- 3. serve ----
+    let shape = model.spec.orig_shape.clone();
+    let server = DecodeServer::start(
+        model,
+        BatchPolicy {
+            max_batch: 8192,
+            max_wait: std::time::Duration::from_micros(500),
+            queue_depth: 65536,
+        },
+    )?;
+
+    let n_clients = 8;
+    let queries_per_client = 4000;
+    let errors = Arc::new(AtomicUsize::new(0));
+    let t_serve = Timer::start();
+    let mut latencies_all: Vec<f64> = Vec::new();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let handle = server.handle();
+        let shape = shape.clone();
+        let errors = errors.clone();
+        handles.push(std::thread::spawn(move || -> Vec<f64> {
+            let mut rng = Pcg64::seeded(100 + c as u64);
+            let mut lat = Vec::with_capacity(queries_per_client);
+            for _ in 0..queries_per_client {
+                let idx: Vec<usize> = shape.iter().map(|&n| rng.below(n)).collect();
+                let t0 = Timer::start();
+                match handle.get(&idx) {
+                    Ok(v) if v.is_finite() => lat.push(t0.millis()),
+                    _ => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            lat
+        }));
+    }
+    for h in handles {
+        latencies_all.extend(h.join().expect("client thread"));
+    }
+    let wall = t_serve.seconds();
+    let stats = server.shutdown()?;
+
+    // ---- 4. report ----
+    latencies_all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = latencies_all.len();
+    let pct = |p: f64| latencies_all[(p * (total - 1) as f64) as usize];
+    println!("[driver] served {total} point queries from {n_clients} clients");
+    println!(
+        "[driver] throughput {:.0} q/s | latency p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms",
+        total as f64 / wall,
+        pct(0.50),
+        pct(0.95),
+        pct(0.99)
+    );
+    println!(
+        "[driver] batches {} (avg {:.0} q/batch), execute time {:.1}s of {:.1}s wall, errors {}",
+        stats.batches,
+        stats.requests as f64 / stats.batches.max(1) as f64,
+        stats.execute_seconds,
+        wall,
+        errors.load(Ordering::Relaxed)
+    );
+    Ok(())
+}

@@ -1,0 +1,165 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts + manifest.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the published ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts`` (incremental: a config is re-lowered only when
+its artifact file is missing or any compile-path source is newer). Output:
+
+  artifacts/<name>.hlo.txt    one per ArtifactCfg
+  artifacts/manifest.json     parameter layout + entry-point signatures,
+                              consumed by rust/src/runtime + nttd/params.rs
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_sds(cfg) -> list:
+    if cfg.variant == "tc":
+        shapes = model.param_shapes(cfg.dp, cfg.vocab, cfg.h, cfg.r)
+        names = model.PARAM_NAMES
+    else:
+        shapes = model.nk_param_shapes(cfg.dp, cfg.vocab, cfg.h)
+        names = model.NK_PARAM_NAMES
+    return [_sds(shapes[n]) for n in names]
+
+
+def lower_cfg(cfg) -> str:
+    """Lower one artifact config to HLO text."""
+    params = _param_sds(cfg)
+    idx = _sds((cfg.batch, cfg.dp), jnp.int32)
+    if cfg.kind == "fwd":
+        fwd = model.forward if cfg.variant == "tc" else model.nk_forward
+
+        def entry(*args):
+            return (fwd(list(args[:-1]), args[-1]),)
+
+        lowered = jax.jit(entry).lower(*params, idx)
+    else:
+        step = model.train_step if cfg.variant == "tc" else model.nk_train_step
+        t = _sds(())
+        targets = _sds((cfg.batch,))
+        weights = _sds((cfg.batch,))
+        lr = _sds(())
+        lowered = jax.jit(step).lower(
+            *params, *params, *params, t, idx, targets, weights, lr
+        )
+    return to_hlo_text(lowered)
+
+
+def manifest_entry(cfg) -> dict:
+    if cfg.variant == "tc":
+        shapes = model.param_shapes(cfg.dp, cfg.vocab, cfg.h, cfg.r)
+        names = list(model.PARAM_NAMES)
+    else:
+        shapes = model.nk_param_shapes(cfg.dp, cfg.vocab, cfg.h)
+        names = list(model.NK_PARAM_NAMES)
+    return {
+        "name": cfg.name,
+        "file": cfg.filename,
+        "variant": cfg.variant,
+        "kind": cfg.kind,
+        "dp": cfg.dp,
+        "vocab": cfg.vocab,
+        "h": cfg.h,
+        "r": cfg.r,
+        "batch": cfg.batch,
+        "params": [{"name": n, "shape": list(shapes[n])} for n in names],
+        # Entry-point input order (informative; Rust hard-codes the same):
+        # fwd:   params..., idx[B,dp]i32 -> (vals[B],)
+        # train: params..., m..., v..., t, idx, targets, weights, lr
+        #        -> (params'..., m'..., v'..., loss)
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="re-lower everything")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact-name substrings"
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfgs = configs.all_configs()
+    if args.only:
+        keys = args.only.split(",")
+        cfgs = [c for c in cfgs if any(k in c.name for k in keys)]
+
+    manifest = {"vocab": configs.VOCAB, "artifacts": []}
+    n_lowered = 0
+    t_start = time.time()
+    for cfg in cfgs:
+        path = os.path.join(args.out_dir, cfg.filename)
+        manifest["artifacts"].append(manifest_entry(cfg))
+        if not args.force and os.path.exists(path):
+            continue
+        t0 = time.time()
+        text = lower_cfg(cfg)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+        n_lowered += 1
+        print(
+            f"[aot] {cfg.name}: {len(text) / 1024:.0f} KiB in "
+            f"{time.time() - t0:.1f}s",
+            flush=True,
+        )
+
+    # Atomic writes: concurrent Rust readers see the old or new manifest,
+    # never a torn one.
+    jtmp = os.path.join(args.out_dir, "manifest.json.tmp")
+    with open(jtmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(jtmp, os.path.join(args.out_dir, "manifest.json"))
+    # Plain-text twin of the manifest for the (serde-free) Rust runtime.
+    ttmp = os.path.join(args.out_dir, "manifest.txt.tmp")
+    with open(ttmp, "w") as f:
+        f.write(f"vocab {configs.VOCAB}\n")
+        for ent in manifest["artifacts"]:
+            params = ",".join(
+                f"{p['name']}:{'x'.join(str(d) for d in p['shape'])}"
+                for p in ent["params"]
+            )
+            f.write(
+                f"artifact {ent['name']} {ent['file']} {ent['variant']} "
+                f"{ent['kind']} {ent['dp']} {ent['vocab']} {ent['h']} "
+                f"{ent['r']} {ent['batch']} {params}\n"
+            )
+    os.replace(ttmp, os.path.join(args.out_dir, "manifest.txt"))
+    print(
+        f"[aot] {n_lowered} lowered / {len(cfgs)} total in "
+        f"{time.time() - t_start:.1f}s -> {args.out_dir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

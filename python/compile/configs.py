@@ -1,0 +1,71 @@
+"""Artifact configuration matrix for AOT lowering.
+
+AOT shapes are static, so every (variant, dp, V, h, R, B) tuple the Rust
+side may execute needs its own HLO artifact. This module is the single
+source of truth for that matrix; ``aot.py`` lowers it and writes
+``artifacts/manifest.json`` so the Rust runtime can pick artifacts without
+any Python at runtime.
+
+Sizing rationale (see DESIGN.md §6):
+  * dp (folded order) 6..13 covers every dataset recipe at both full and
+    scaled sizes; fwd-only dp up to 18 covers the Fig. 6 reconstruction-
+    scaling sweep (mode sizes up to 2^18 need no training).
+  * (h, R) pairs cover the Fig. 3 budget points, the Fig. 4 ablations and
+    the Fig. 8 expressiveness generator (R = h = 5).
+  * Batch sizes: TRAIN_B for SGD steps, FWD_B for bulk reconstruction.
+    Ragged batches are padded by the Rust side (zero weight / discarded
+    tail), keeping shapes static.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+VOCAB = 32  # max folded mode length; folding policy guarantees <= this
+TRAIN_B = 2048
+FWD_B = 8192
+SERVE_B = 512  # latency-oriented forward batch for the decode server
+
+TC_DP_RANGE = range(5, 14)  # trainable configs
+TC_FWD_ONLY_DP_RANGE = range(14, 19)  # Fig. 6 scaling sweep (fwd only)
+TC_HR = ((5, 5), (6, 6), (8, 8), (10, 10))
+NK_DP_RANGE = range(5, 14)
+NK_H = (8, 12)
+
+
+@dataclass(frozen=True)
+class ArtifactCfg:
+    variant: str  # "tc" | "nk"
+    kind: str  # "fwd" | "train"
+    dp: int
+    vocab: int
+    h: int
+    r: int  # 0 for nk
+    batch: int
+
+    @property
+    def name(self) -> str:
+        if self.variant == "tc":
+            return f"tc_{self.kind}_dp{self.dp}_h{self.h}_r{self.r}_b{self.batch}"
+        return f"nk_{self.kind}_dp{self.dp}_h{self.h}_b{self.batch}"
+
+    @property
+    def filename(self) -> str:
+        return f"{self.name}.hlo.txt"
+
+
+def all_configs() -> list:
+    cfgs = []
+    for dp in TC_DP_RANGE:
+        for h, r in TC_HR:
+            cfgs.append(ArtifactCfg("tc", "fwd", dp, VOCAB, h, r, FWD_B))
+            cfgs.append(ArtifactCfg("tc", "fwd", dp, VOCAB, h, r, SERVE_B))
+            cfgs.append(ArtifactCfg("tc", "train", dp, VOCAB, h, r, TRAIN_B))
+    for dp in TC_FWD_ONLY_DP_RANGE:
+        cfgs.append(ArtifactCfg("tc", "fwd", dp, VOCAB, 8, 8, FWD_B))
+        cfgs.append(ArtifactCfg("tc", "fwd", dp, VOCAB, 8, 8, SERVE_B))
+    for dp in NK_DP_RANGE:
+        for h in NK_H:
+            cfgs.append(ArtifactCfg("nk", "fwd", dp, VOCAB, h, 0, FWD_B))
+            cfgs.append(ArtifactCfg("nk", "train", dp, VOCAB, h, 0, TRAIN_B))
+    return cfgs

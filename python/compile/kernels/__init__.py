@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for TensorCodec's NTTD hot path.
+
+``tt_chain`` — batched TT-core chain product.
+``lstm_cell`` — fused LSTM cell for the auto-regressive core generator.
+``ref`` — pure-jnp oracles (pytest ground truth + custom_vjp backward).
+"""
+
+from .lstm_cell import lstm_cell
+from .tt_chain import tt_chain
+from . import ref
+
+__all__ = ["lstm_cell", "tt_chain", "ref"]

@@ -1,0 +1,126 @@
+"""Pallas kernel: fused LSTM cell (the NTTD core-generator hot spot).
+
+One time step of the auto-regressive core generator (Alg. 2 line 3 of the
+TensorCodec paper): both gate matmuls, the bias add, all four gate
+non-linearities and the state update fused into a single kernel, so the
+[B,4h] gate pre-activations never round-trip to HBM.
+
+TPU mapping: the grid tiles the batch; the two [4h,h] weight matrices are
+broadcast into VMEM once per program (h<=16 => 4 KiB each) and the gate
+matmuls are MXU-shaped. On this image the kernel runs with
+``interpret=True`` (see tt_chain.py).
+
+custom_vjp backward is the standard LSTM cell rule in pure jnp, recomputing
+the gates from residuals (x, hp, cp, weights) instead of storing them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_B = 128
+
+
+def _lstm_kernel(x_ref, hp_ref, cp_ref, wih_ref, whh_ref, b_ref, h_ref, c_ref):
+    x = x_ref[...]
+    hp = hp_ref[...]
+    cp = cp_ref[...]
+    z = (
+        jnp.dot(x, wih_ref[...].T, preferred_element_type=jnp.float32)
+        + jnp.dot(hp, whh_ref[...].T, preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    hdim = x.shape[1]
+    i = jax.nn.sigmoid(z[:, :hdim])
+    f = jax.nn.sigmoid(z[:, hdim : 2 * hdim])
+    g = jnp.tanh(z[:, 2 * hdim : 3 * hdim])
+    o = jax.nn.sigmoid(z[:, 3 * hdim :])
+    c_new = f * cp + i * g
+    h_ref[...] = o * jnp.tanh(c_new)
+    c_ref[...] = c_new
+
+
+def _pick_block(bsz: int, want: int = DEFAULT_BLOCK_B) -> int:
+    bt = min(bsz, want)
+    while bsz % bt != 0:
+        bt -= 1
+    return bt
+
+
+@jax.jit
+def _lstm_cell_pallas(x, hp, cp, w_ih, w_hh, b):
+    bsz, hdim = x.shape
+    bt = _pick_block(bsz)
+    grid = (bsz // bt,)
+    out_sds = jax.ShapeDtypeStruct((bsz, hdim), x.dtype)
+    return pl.pallas_call(
+        _lstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, hdim), lambda i: (i, 0)),
+            pl.BlockSpec((bt, hdim), lambda i: (i, 0)),
+            pl.BlockSpec((bt, hdim), lambda i: (i, 0)),
+            pl.BlockSpec((4 * hdim, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((4 * hdim, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((4 * hdim,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, hdim), lambda i: (i, 0)),
+            pl.BlockSpec((bt, hdim), lambda i: (i, 0)),
+        ],
+        out_shape=[out_sds, out_sds],
+        interpret=True,
+    )(x, hp, cp, w_ih, w_hh, b)
+
+
+@jax.custom_vjp
+def lstm_cell(x, hp, cp, w_ih, w_hh, b):
+    """Differentiable fused LSTM cell.
+
+    Args:
+      x, hp, cp: [B, h] input / previous hidden / previous cell state.
+      w_ih, w_hh: [4h, h] weights (gate order i, f, g, o).
+      b: [4h] bias.
+
+    Returns: (h_new, c_new), each [B, h].
+    """
+    h_new, c_new = _lstm_cell_pallas(x, hp, cp, w_ih, w_hh, b)
+    return h_new, c_new
+
+
+def _lstm_fwd(x, hp, cp, w_ih, w_hh, b):
+    h_new, c_new = _lstm_cell_pallas(x, hp, cp, w_ih, w_hh, b)
+    return (h_new, c_new), (x, hp, cp, w_ih, w_hh, b, c_new)
+
+
+def _lstm_bwd(res, cot):
+    x, hp, cp, w_ih, w_hh, b, c_new = res
+    dh, dc = cot
+    _, _, (i, f, g, o) = ref.lstm_cell_gates_ref(x, hp, cp, w_ih, w_hh, b)
+    tc = jnp.tanh(c_new)
+    do = dh * tc
+    dct = dc + dh * o * (1.0 - tc * tc)
+    di = dct * g
+    df = dct * cp
+    dg = dct * i
+    dcp = dct * f
+    dzi = di * i * (1.0 - i)
+    dzf = df * f * (1.0 - f)
+    dzg = dg * (1.0 - g * g)
+    dzo = do * o * (1.0 - o)
+    dz = jnp.concatenate([dzi, dzf, dzg, dzo], axis=1)  # [B, 4h]
+    dx = dz @ w_ih
+    dhp = dz @ w_hh
+    dwih = dz.T @ x
+    dwhh = dz.T @ hp
+    db = jnp.sum(dz, axis=0)
+    return dx, dhp, dcp, dwih, dwhh, db
+
+
+lstm_cell.defvjp(_lstm_fwd, _lstm_bwd)

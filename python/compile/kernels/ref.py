@@ -1,0 +1,171 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth for correctness: ``pytest python/tests`` asserts
+that every Pallas kernel (run under ``interpret=True``) matches these
+implementations to float32 tolerance across a hypothesis-driven sweep of
+shapes. They are also reused as the *backward* pass of the kernels'
+``custom_vjp`` (Pallas interpret kernels are not generally differentiable),
+so the train-step artifact is exactly "Pallas forward, ref backward".
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, hp, cp, w_ih, w_hh, b):
+    """One LSTM cell step.
+
+    Args:
+      x:    [B, h]   input at this time step.
+      hp:   [B, h]   previous hidden state.
+      cp:   [B, h]   previous cell state.
+      w_ih: [4h, h]  input-to-hidden weights (gate order i, f, g, o).
+      w_hh: [4h, h]  hidden-to-hidden weights.
+      b:    [4h]     bias.
+
+    Returns:
+      (h_new, c_new), each [B, h].
+    """
+    z = x @ w_ih.T + hp @ w_hh.T + b
+    hdim = x.shape[1]
+    zi, zf, zg, zo = (
+        z[:, :hdim],
+        z[:, hdim : 2 * hdim],
+        z[:, 2 * hdim : 3 * hdim],
+        z[:, 3 * hdim :],
+    )
+    i = jnp.reciprocal(1.0 + jnp.exp(-zi))
+    f = jnp.reciprocal(1.0 + jnp.exp(-zf))
+    g = jnp.tanh(zg)
+    o = jnp.reciprocal(1.0 + jnp.exp(-zo))
+    c_new = f * cp + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_cell_gates_ref(x, hp, cp, w_ih, w_hh, b):
+    """Same as :func:`lstm_cell_ref` but also returns the activated gates.
+
+    Used by the custom_vjp backward pass, which recomputes gates from the
+    saved residuals rather than storing them.
+    """
+    z = x @ w_ih.T + hp @ w_hh.T + b
+    hdim = x.shape[1]
+    zi, zf, zg, zo = (
+        z[:, :hdim],
+        z[:, hdim : 2 * hdim],
+        z[:, 2 * hdim : 3 * hdim],
+        z[:, 3 * hdim :],
+    )
+    i = jnp.reciprocal(1.0 + jnp.exp(-zi))
+    f = jnp.reciprocal(1.0 + jnp.exp(-zf))
+    g = jnp.tanh(zg)
+    o = jnp.reciprocal(1.0 + jnp.exp(-zo))
+    c_new = f * cp + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new, (i, f, g, o)
+
+
+def tt_chain_ref(t1, mids, td):
+    """Batched TT-core chain product (Alg. 2 line 8 of the paper).
+
+    Args:
+      t1:   [B, R]        first core (row vector T_1 in R^{1xR}).
+      mids: [B, M, R, R]  middle cores T_2..T_{d'-1}.
+      td:   [B, R]        last core (column vector T_{d'} in R^{Rx1}).
+
+    Returns:
+      [B] approximated entries  t1 . (prod_k mids_k) . td
+    """
+    v = t1
+    for k in range(mids.shape[1]):
+        v = jnp.einsum("br,brs->bs", v, mids[:, k])
+    return jnp.sum(v * td, axis=1)
+
+
+def tt_chain_prefixes_ref(t1, mids, td):
+    """Chain product together with all prefix row-vectors v_0..v_M.
+
+    v_0 = t1, v_k = v_{k-1} @ mids_k. Returned prefixes have shape
+    [B, M+1, R]; used by the custom_vjp backward.
+    """
+    v = t1
+    prefixes = [v]
+    for k in range(mids.shape[1]):
+        v = jnp.einsum("br,brs->bs", v, mids[:, k])
+        prefixes.append(v)
+    out = jnp.sum(v * td, axis=1)
+    return out, jnp.stack(prefixes, axis=1)
+
+
+def tt_chain_vjp_ref(t1, mids, td, g):
+    """Backward pass for the chain product given output cotangent ``g`` [B].
+
+    Returns (dt1, dmids, dtd) with the same shapes as the inputs.
+    """
+    _, prefixes = tt_chain_prefixes_ref(t1, mids, td)
+    m = mids.shape[1]
+    dtd = g[:, None] * prefixes[:, m]
+    dv = g[:, None] * td  # cotangent of v_M
+    dmids = []
+    for k in range(m - 1, -1, -1):
+        # out depends on mids_k through v_k = v_{k-1} @ mids_k
+        dmids.append(jnp.einsum("br,bs->brs", prefixes[:, k], dv))
+        dv = jnp.einsum("bs,brs->br", dv, mids[:, k])
+    dmids = jnp.stack(dmids[::-1], axis=1)
+    return dv, dmids, dtd
+
+
+def nttd_forward_ref(emb, w_ih, w_hh, b_lstm, w1, b1, wm, bm, wd, bd, idx):
+    """End-to-end NTTD forward in pure jnp (Alg. 2 of the paper).
+
+    Args:
+      emb:  [dp, V, h] per-position embedding tables for the folded modes.
+      w_ih, w_hh, b_lstm: LSTM parameters ([4h,h], [4h,h], [4h]).
+      w1, b1: first-core head  ([R, h], [R]).
+      wm, bm: middle-core head ([R*R, h], [R*R]).
+      wd, bd: last-core head   ([R, h], [R]).
+      idx:  [B, dp] int32 folded mode indices.
+
+    Returns: [B] approximated entries.
+    """
+    dp = emb.shape[0]
+    hdim = emb.shape[2]
+    bsz = idx.shape[0]
+    e = emb[jnp.arange(dp)[None, :], idx]  # [B, dp, h]
+    h = jnp.zeros((bsz, hdim), emb.dtype)
+    c = jnp.zeros((bsz, hdim), emb.dtype)
+    hs = []
+    for t in range(dp):
+        h, c = lstm_cell_ref(e[:, t], h, c, w_ih, w_hh, b_lstm)
+        hs.append(h)
+    rank = w1.shape[0]
+    t1 = hs[0] @ w1.T + b1  # [B, R]
+    td = hs[-1] @ wd.T + bd  # [B, R]
+    mids = jnp.stack(
+        [(hs[t] @ wm.T + bm).reshape(bsz, rank, rank) for t in range(1, dp - 1)],
+        axis=1,
+    )  # [B, M, R, R]
+    return tt_chain_ref(t1, mids, td)
+
+
+def neukron_forward_ref(emb, w_ih, w_hh, b_lstm, w_out, b_out, idx):
+    """NeuKron-style forward: LSTM over folded digits, scalar head on the
+    final hidden state. Used as the oracle for the NeuKron baseline variant.
+
+    Args:
+      w_out: [1, h], b_out: [1].
+      idx: [B, dp] int32.
+
+    Returns: [B].
+    """
+    dp = emb.shape[0]
+    hdim = emb.shape[2]
+    bsz = idx.shape[0]
+    e = emb[jnp.arange(dp)[None, :], idx]
+    h = jnp.zeros((bsz, hdim), emb.dtype)
+    c = jnp.zeros((bsz, hdim), emb.dtype)
+    for t in range(dp):
+        h, c = lstm_cell_ref(e[:, t], h, c, w_ih, w_hh, b_lstm)
+    return (h @ w_out.T + b_out)[:, 0]

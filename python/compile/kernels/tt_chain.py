@@ -1,0 +1,96 @@
+"""Pallas kernel: batched TT-core chain product (the NTTD hot spot).
+
+Computes ``out[b] = t1[b] . mids[b,0] . mids[b,1] ... mids[b,M-1] . td[b]``
+for a batch of entries — Alg. 2 line 8 of the TensorCodec paper, i.e. the
+per-entry reconstruction product that dominates the decode path.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the batch
+dimension so each program holds ``(Bt*M*R*R + 2*Bt*R + Bt) * 4`` bytes in
+VMEM; the inner loop is a sequence of small (R<=16) matvec contractions that
+lower onto the MXU as batched matmuls. On this image the kernel must run
+with ``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls), which
+executes the same trace with jnp semantics — numerics are identical.
+
+The kernel carries a ``custom_vjp`` whose backward is the pure-jnp
+prefix/suffix-product rule from ``ref.py`` so the train-step artifact can
+differentiate through it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default batch tile. 128 rows x (R<=16)^2 cores keeps the working set far
+# under the ~16 MiB VMEM budget while filling the 128-lane vector unit.
+DEFAULT_BLOCK_B = 128
+
+
+def _chain_kernel(t1_ref, mids_ref, td_ref, o_ref):
+    """One grid step: full chain product for a [Bt] tile of the batch."""
+    v = t1_ref[...]  # [Bt, R]
+    m = mids_ref.shape[1]
+    for k in range(m):  # M is static; unrolled at trace time
+        v = jnp.einsum(
+            "br,brs->bs", v, mids_ref[:, k], preferred_element_type=jnp.float32
+        )
+    o_ref[...] = jnp.sum(v * td_ref[...], axis=1)
+
+
+def _pick_block(bsz: int, want: int = DEFAULT_BLOCK_B) -> int:
+    """Largest divisor of ``bsz`` that is <= ``want`` (grid must tile B)."""
+    bt = min(bsz, want)
+    while bsz % bt != 0:
+        bt -= 1
+    return bt
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def _tt_chain_pallas(t1, mids, td, block_b=None):
+    bsz, rank = t1.shape
+    m = mids.shape[1]
+    bt = _pick_block(bsz) if block_b is None else block_b
+    grid = (bsz // bt,)
+    return pl.pallas_call(
+        _chain_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, rank), lambda i: (i, 0)),
+            pl.BlockSpec((bt, m, rank, rank), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((bt, rank), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bsz,), t1.dtype),
+        interpret=True,  # CPU PJRT: Mosaic custom-calls are not executable
+    )(t1, mids, td)
+
+
+@jax.custom_vjp
+def tt_chain(t1, mids, td):
+    """Differentiable batched chain product.
+
+    Args:
+      t1:   [B, R]       first TT core rows.
+      mids: [B, M, R, R] middle TT cores.
+      td:   [B, R]       last TT core columns.
+
+    Returns: [B].
+    """
+    return _tt_chain_pallas(t1, mids, td)
+
+
+def _tt_chain_fwd(t1, mids, td):
+    return _tt_chain_pallas(t1, mids, td), (t1, mids, td)
+
+
+def _tt_chain_bwd(res, g):
+    t1, mids, td = res
+    return ref.tt_chain_vjp_ref(t1, mids, td, g)
+
+
+tt_chain.defvjp(_tt_chain_fwd, _tt_chain_bwd)

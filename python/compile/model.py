@@ -1,0 +1,235 @@
+"""L2: the NTTD model (TensorCodec's neural TT decomposition) in JAX.
+
+Defines the parameter layout shared with the Rust coordinator (see
+``PARAM_NAMES`` / ``param_shapes`` — the AOT manifest serialises these so
+Rust can marshal flat f32 buffers without Python), the forward pass built on
+the L1 Pallas kernels, and a fused Adam train step. Everything here is
+build-time only: ``aot.py`` lowers these functions to HLO text once and the
+Rust runtime executes the artifacts.
+
+Model (paper Alg. 2), for a folded tensor of order ``dp`` with folded mode
+lengths <= ``V``:
+
+  e_k   = Emb[k, i_k]                       (per-position embedding, [h])
+  h_1..h_dp = LSTM(e_1..e_dp)               (fused Pallas cell)
+  T_1   = W1 h_1 + b1                       ([1, R] row)
+  T_k   = Wm h_k + bm, 2 <= k <= dp-1       ([R, R], shared head = paper's
+                                             shared W, b in Alg. 2 line 6)
+  T_dp  = Wd h_dp + bd                      ([R, 1] column)
+  x_hat = T_1 T_2 ... T_dp                  (Pallas chain product)
+
+Training minimises weighted squared error (weights let the Rust side pad
+ragged final batches with zero-weight rows, keeping batch shapes static).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lstm_cell, tt_chain
+from .kernels import ref as kref
+
+# Canonical parameter order. The AOT manifest and the Rust `nttd::params`
+# module both index parameters by position in this list.
+PARAM_NAMES = (
+    "emb",
+    "w_ih",
+    "w_hh",
+    "b_lstm",
+    "w1",
+    "b1",
+    "wm",
+    "bm",
+    "wd",
+    "bd",
+)
+
+# NeuKron baseline variant: same LSTM trunk, scalar output head.
+NK_PARAM_NAMES = ("emb", "w_ih", "w_hh", "b_lstm", "w_out", "b_out")
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+GRAD_CLIP_NORM = 5.0  # global-norm clip; stabilises early chain products
+
+
+def param_shapes(dp: int, vocab: int, h: int, r: int) -> dict:
+    """Shapes of every NTTD parameter, keyed by PARAM_NAMES entries."""
+    return {
+        "emb": (dp, vocab, h),
+        "w_ih": (4 * h, h),
+        "w_hh": (4 * h, h),
+        "b_lstm": (4 * h,),
+        "w1": (r, h),
+        "b1": (r,),
+        "wm": (r * r, h),
+        "bm": (r * r,),
+        "wd": (r, h),
+        "bd": (r,),
+    }
+
+
+def nk_param_shapes(dp: int, vocab: int, h: int) -> dict:
+    """Shapes of the NeuKron-variant parameters."""
+    return {
+        "emb": (dp, vocab, h),
+        "w_ih": (4 * h, h),
+        "w_hh": (4 * h, h),
+        "b_lstm": (4 * h,),
+        "w_out": (1, h),
+        "b_out": (1,),
+    }
+
+
+def init_params(seed: int, dp: int, vocab: int, h: int, r: int) -> list:
+    """Initialise NTTD parameters (same scheme the Rust side replicates).
+
+    Core heads are biased so every middle core starts near the identity and
+    the end cores near 1/sqrt(R), making the initial chain product ~1 (the
+    coordinator normalises tensors to zero mean / unit variance, so this is
+    the right scale).
+    """
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 8)
+    scale_w = 0.1 / jnp.sqrt(h)
+    shapes = param_shapes(dp, vocab, h, r)
+    emb = 0.3 * jax.random.normal(ks[0], shapes["emb"], jnp.float32)
+    w_ih = jax.random.uniform(
+        ks[1], shapes["w_ih"], jnp.float32, -1.0, 1.0
+    ) / jnp.sqrt(h)
+    w_hh = jax.random.uniform(
+        ks[2], shapes["w_hh"], jnp.float32, -1.0, 1.0
+    ) / jnp.sqrt(h)
+    b_lstm = jnp.zeros(shapes["b_lstm"], jnp.float32)
+    w1 = scale_w * jax.random.normal(ks[3], shapes["w1"], jnp.float32)
+    b1 = jnp.full(shapes["b1"], 1.0 / jnp.sqrt(r), jnp.float32)
+    wm = scale_w * jax.random.normal(ks[4], shapes["wm"], jnp.float32)
+    bm = jnp.eye(r, dtype=jnp.float32).reshape(-1)
+    wd = scale_w * jax.random.normal(ks[5], shapes["wd"], jnp.float32)
+    bd = jnp.full(shapes["bd"], 1.0 / jnp.sqrt(r), jnp.float32)
+    return [emb, w_ih, w_hh, b_lstm, w1, b1, wm, bm, wd, bd]
+
+
+def init_nk_params(seed: int, dp: int, vocab: int, h: int) -> list:
+    """Initialise NeuKron-variant parameters."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    shapes = nk_param_shapes(dp, vocab, h)
+    emb = 0.3 * jax.random.normal(ks[0], shapes["emb"], jnp.float32)
+    w_ih = jax.random.uniform(
+        ks[1], shapes["w_ih"], jnp.float32, -1.0, 1.0
+    ) / jnp.sqrt(h)
+    w_hh = jax.random.uniform(
+        ks[2], shapes["w_hh"], jnp.float32, -1.0, 1.0
+    ) / jnp.sqrt(h)
+    b_lstm = jnp.zeros(shapes["b_lstm"], jnp.float32)
+    w_out = 0.5 * jax.random.normal(ks[3], shapes["w_out"], jnp.float32)
+    b_out = jnp.zeros(shapes["b_out"], jnp.float32)
+    return [emb, w_ih, w_hh, b_lstm, w_out, b_out]
+
+
+def _lstm_trunk(emb, w_ih, w_hh, b_lstm, idx):
+    """Embedding lookup + LSTM scan; returns all hidden states [dp, B, h]."""
+    dp, _, hdim = emb.shape
+    bsz = idx.shape[0]
+    e = emb[jnp.arange(dp)[None, :], idx]  # [B, dp, h]
+    e_t = jnp.transpose(e, (1, 0, 2))  # [dp, B, h]
+    h0 = jnp.zeros((bsz, hdim), emb.dtype)
+    c0 = jnp.zeros((bsz, hdim), emb.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h2, c2 = lstm_cell(x_t, h, c, w_ih, w_hh, b_lstm)
+        return (h2, c2), h2
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), e_t)
+    return hs  # [dp, B, h]
+
+
+def forward(params: list, idx) -> jnp.ndarray:
+    """NTTD forward on the Pallas kernels. ``idx``: [B, dp] int32 -> [B]."""
+    emb, w_ih, w_hh, b_lstm, w1, b1, wm, bm, wd, bd = params
+    dp = emb.shape[0]
+    bsz = idx.shape[0]
+    rank = w1.shape[0]
+    hs = _lstm_trunk(emb, w_ih, w_hh, b_lstm, idx)
+    t1 = hs[0] @ w1.T + b1  # [B, R]
+    td = hs[dp - 1] @ wd.T + bd  # [B, R]
+    mids = jnp.einsum("mbh,ph->mbp", hs[1 : dp - 1], wm) + bm  # [M, B, R*R]
+    mids = jnp.transpose(mids, (1, 0, 2)).reshape(bsz, dp - 2, rank, rank)
+    return tt_chain(t1, mids, td)
+
+
+def forward_ref(params: list, idx) -> jnp.ndarray:
+    """Pure-jnp forward (oracle for tests; no Pallas)."""
+    return kref.nttd_forward_ref(*params, idx)
+
+
+def nk_forward(params: list, idx) -> jnp.ndarray:
+    """NeuKron-variant forward on the Pallas LSTM cell."""
+    emb, w_ih, w_hh, b_lstm, w_out, b_out = params
+    hs = _lstm_trunk(emb, w_ih, w_hh, b_lstm, idx)
+    return (hs[-1] @ w_out.T + b_out)[:, 0]
+
+
+def nk_forward_ref(params: list, idx) -> jnp.ndarray:
+    return kref.neukron_forward_ref(*params, idx)
+
+
+def weighted_mse(pred, targets, weights):
+    """sum(w * (pred - y)^2) / max(sum(w), 1). Zero-weight rows are padding."""
+    num = jnp.sum(weights * (pred - targets) ** 2)
+    den = jnp.maximum(jnp.sum(weights), 1.0)
+    return num / den
+
+
+def _loss(params, idx, targets, weights, fwd):
+    return weighted_mse(fwd(params, idx), targets, weights)
+
+
+def _adam_update(params, grads, m, v, t, lr):
+    """One Adam step with global-norm gradient clipping."""
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    scale = jnp.minimum(1.0, GRAD_CLIP_NORM / (gnorm + 1e-12))
+    grads = [g * scale for g in grads]
+    b1t = 1.0 - ADAM_B1**t
+    b2t = 1.0 - ADAM_B2**t
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        m2 = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = m2 / b1t
+        vhat = v2 / b2t
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(m2)
+        new_v.append(v2)
+    return new_p, new_m, new_v
+
+
+def make_train_step(fwd):
+    """Build a fused train step for a given forward function.
+
+    Signature (all leading lists in PARAM_NAMES order):
+      (params..., m..., v..., t, idx, targets, weights, lr)
+        -> (params'..., m'..., v'..., loss)
+
+    ``t`` is the 1-based Adam step count as f32.
+    """
+    def train_step(*args):
+        nparams = (len(args) - 5) // 3  # 5 trailing: t, idx, targets, weights, lr
+        params = list(args[:nparams])
+        m = list(args[nparams : 2 * nparams])
+        v = list(args[2 * nparams : 3 * nparams])
+        t, idx, targets, weights, lr = args[3 * nparams :]
+        loss, grads = jax.value_and_grad(
+            lambda p: _loss(p, idx, targets, weights, fwd)
+        )(params)
+        new_p, new_m, new_v = _adam_update(params, grads, m, v, t, lr)
+        return tuple(new_p + new_m + new_v + [loss])
+
+    return train_step
+
+
+train_step = make_train_step(forward)
+nk_train_step = make_train_step(nk_forward)

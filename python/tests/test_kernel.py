@@ -1,0 +1,197 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer: every kernel is
+swept over shapes/dtypes with hypothesis and asserted allclose against
+``kernels.ref``. The custom_vjp backward passes are additionally checked
+against ``jax.grad`` of the reference implementations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lstm_cell, tt_chain, ref
+from compile.kernels.tt_chain import _pick_block
+
+RTOL = 2e-4  # chains of up to 12 matmuls: summation-order float drift
+ATOL = 2e-4
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- tt_chain
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3, 64, 128, 255, 256]),
+    m=st.integers(min_value=1, max_value=12),
+    r=st.sampled_from([1, 2, 4, 5, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_tt_chain_matches_ref(b, m, r, seed):
+    rng = np.random.default_rng(seed)
+    t1 = _rand(rng, b, r)
+    mids = _rand(rng, b, m, r, r) * 0.5
+    td = _rand(rng, b, r)
+    got = tt_chain(t1, mids, td)
+    want = ref.tt_chain_ref(t1, mids, td)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_tt_chain_identity_cores():
+    """Identity middle cores: product reduces to <t1, td>."""
+    b, m, r = 8, 5, 4
+    rng = np.random.default_rng(0)
+    t1 = _rand(rng, b, r)
+    td = _rand(rng, b, r)
+    mids = jnp.broadcast_to(jnp.eye(r, dtype=jnp.float32), (b, m, r, r))
+    got = tt_chain(t1, mids, td)
+    np.testing.assert_allclose(got, jnp.sum(t1 * td, axis=1), rtol=RTOL, atol=ATOL)
+
+
+def test_tt_chain_single_mid_is_bilinear_form():
+    b, r = 4, 3
+    rng = np.random.default_rng(1)
+    t1 = _rand(rng, b, r)
+    mid = _rand(rng, b, 1, r, r)
+    td = _rand(rng, b, r)
+    want = jnp.einsum("br,brs,bs->b", t1, mid[:, 0], td)
+    np.testing.assert_allclose(tt_chain(t1, mid, td), want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([2, 64, 128]),
+    m=st.integers(min_value=1, max_value=8),
+    r=st.sampled_from([2, 4, 8]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_tt_chain_grad_matches_ref_grad(b, m, r, seed):
+    rng = np.random.default_rng(seed)
+    t1 = _rand(rng, b, r)
+    mids = _rand(rng, b, m, r, r) * 0.5
+    td = _rand(rng, b, r)
+    g = _rand(rng, b)
+
+    def loss_k(a, mm, d):
+        return jnp.sum(tt_chain(a, mm, d) * g)
+
+    def loss_r(a, mm, d):
+        return jnp.sum(ref.tt_chain_ref(a, mm, d) * g)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(t1, mids, td)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(t1, mids, td)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_pick_block_divides():
+    for b in [1, 2, 7, 128, 200, 255, 2048, 8192]:
+        bt = _pick_block(b)
+        assert b % bt == 0 and 1 <= bt <= 128
+
+
+# --------------------------------------------------------------- lstm_cell
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 64, 128, 255, 256]),
+    h=st.sampled_from([1, 2, 4, 5, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lstm_cell_matches_ref(b, h, seed):
+    rng = np.random.default_rng(seed)
+    x, hp, cp = _rand(rng, b, h), _rand(rng, b, h), _rand(rng, b, h)
+    wih, whh = _rand(rng, 4 * h, h), _rand(rng, 4 * h, h)
+    bias = _rand(rng, 4 * h)
+    got_h, got_c = lstm_cell(x, hp, cp, wih, whh, bias)
+    want_h, want_c = ref.lstm_cell_ref(x, hp, cp, wih, whh, bias)
+    np.testing.assert_allclose(got_h, want_h, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(got_c, want_c, rtol=RTOL, atol=ATOL)
+
+
+def test_lstm_cell_zero_input_zero_state():
+    """All-zero inputs with zero bias: gates are 0.5/0.5/0/0.5 => h=c=0."""
+    b, h = 4, 8
+    z = jnp.zeros((b, h), jnp.float32)
+    w = jnp.zeros((4 * h, h), jnp.float32)
+    bias = jnp.zeros((4 * h,), jnp.float32)
+    got_h, got_c = lstm_cell(z, z, z, w, w, bias)
+    np.testing.assert_allclose(got_h, 0.0, atol=1e-7)
+    np.testing.assert_allclose(got_c, 0.0, atol=1e-7)
+
+
+def test_lstm_cell_forget_gate_saturation():
+    """Huge forget bias, zero input/output paths: c' ~= c_prev."""
+    b, h = 3, 4
+    rng = np.random.default_rng(2)
+    cp = _rand(rng, b, h)
+    z = jnp.zeros((b, h), jnp.float32)
+    w = jnp.zeros((4 * h, h), jnp.float32)
+    bias = jnp.concatenate(
+        [
+            jnp.full((h,), -30.0),  # input gate ~ 0
+            jnp.full((h,), 30.0),  # forget gate ~ 1
+            jnp.zeros((h,)),
+            jnp.zeros((h,)),
+        ]
+    ).astype(jnp.float32)
+    _, got_c = lstm_cell(z, z, cp, w, w, bias)
+    np.testing.assert_allclose(got_c, cp, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([2, 64, 128]),
+    h=st.sampled_from([2, 4, 8]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lstm_cell_grad_matches_ref_grad(b, h, seed):
+    rng = np.random.default_rng(seed)
+    x, hp, cp = _rand(rng, b, h), _rand(rng, b, h), _rand(rng, b, h)
+    wih, whh = _rand(rng, 4 * h, h), _rand(rng, 4 * h, h)
+    bias = _rand(rng, 4 * h)
+    gh, gc = _rand(rng, b, h), _rand(rng, b, h)
+
+    def loss(fn):
+        def inner(*args):
+            hn, cn = fn(*args)
+            return jnp.sum(hn * gh) + jnp.sum(cn * gc)
+
+        return inner
+
+    args = (x, hp, cp, wih, whh, bias)
+    gk = jax.grad(loss(lstm_cell), argnums=tuple(range(6)))(*args)
+    gr = jax.grad(loss(ref.lstm_cell_ref), argnums=tuple(range(6)))(*args)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------- ref-internal invariants
+
+
+def test_tt_chain_vjp_ref_shapes():
+    rng = np.random.default_rng(3)
+    t1, mids, td = _rand(rng, 5, 4), _rand(rng, 5, 3, 4, 4), _rand(rng, 5, 4)
+    g = _rand(rng, 5)
+    dt1, dm, dtd = ref.tt_chain_vjp_ref(t1, mids, td, g)
+    assert dt1.shape == t1.shape
+    assert dm.shape == mids.shape
+    assert dtd.shape == td.shape
+
+
+def test_prefixes_consistent_with_output():
+    rng = np.random.default_rng(4)
+    t1, mids, td = _rand(rng, 6, 3), _rand(rng, 6, 4, 3, 3), _rand(rng, 6, 3)
+    out, pref = ref.tt_chain_prefixes_ref(t1, mids, td)
+    np.testing.assert_allclose(out, ref.tt_chain_ref(t1, mids, td), rtol=RTOL)
+    np.testing.assert_allclose(pref[:, 0], t1, rtol=RTOL)
+    np.testing.assert_allclose(
+        jnp.sum(pref[:, -1] * td, axis=1), out, rtol=RTOL, atol=ATOL
+    )

@@ -1,0 +1,185 @@
+"""L2 correctness: NTTD model shapes, training dynamics, Adam step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def _idx(rng, b, dp, vocab):
+    return jnp.asarray(rng.integers(0, vocab, (b, dp)), jnp.int32)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    dp=st.integers(min_value=3, max_value=12),
+    h=st.sampled_from([4, 8]),
+    r=st.sampled_from([4, 8]),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_forward_matches_ref(dp, h, r, seed):
+    rng = np.random.default_rng(seed)
+    params = model.init_params(seed, dp, 32, h, r)
+    idx = _idx(rng, 128, dp, 32)
+    got = model.forward(params, idx)
+    want = model.forward_ref(params, idx)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_param_shapes_match_init():
+    dp, v, h, r = 9, 32, 8, 8
+    shapes = model.param_shapes(dp, v, h, r)
+    params = model.init_params(0, dp, v, h, r)
+    assert len(params) == len(model.PARAM_NAMES)
+    for name, p in zip(model.PARAM_NAMES, params):
+        assert tuple(p.shape) == shapes[name], name
+
+
+def test_nk_param_shapes_match_init():
+    dp, v, h = 9, 32, 8
+    shapes = model.nk_param_shapes(dp, v, h)
+    params = model.init_nk_params(0, dp, v, h)
+    assert len(params) == len(model.NK_PARAM_NAMES)
+    for name, p in zip(model.NK_PARAM_NAMES, params):
+        assert tuple(p.shape) == shapes[name], name
+
+
+def test_init_chain_product_near_one():
+    """Identity-biased heads: initial predictions should be ~1."""
+    params = model.init_params(0, 10, 32, 8, 8)
+    rng = np.random.default_rng(0)
+    out = model.forward(params, _idx(rng, 256, 10, 32))
+    assert float(jnp.mean(jnp.abs(out - 1.0))) < 0.5
+
+
+def test_nk_forward_matches_ref():
+    rng = np.random.default_rng(1)
+    params = model.init_nk_params(1, 8, 32, 8)
+    idx = _idx(rng, 64, 8, 32)
+    np.testing.assert_allclose(
+        model.nk_forward(params, idx),
+        model.nk_forward_ref(params, idx),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_weighted_mse_ignores_zero_weight_rows():
+    pred = jnp.asarray([1.0, 2.0, 100.0])
+    y = jnp.asarray([1.0, 0.0, 0.0])
+    w = jnp.asarray([1.0, 1.0, 0.0])
+    assert float(model.weighted_mse(pred, y, w)) == pytest.approx(2.0)
+
+
+def test_weighted_mse_all_zero_weights_is_zero():
+    pred = jnp.asarray([5.0, 5.0])
+    y = jnp.zeros(2)
+    w = jnp.zeros(2)
+    assert float(model.weighted_mse(pred, y, w)) == 0.0
+
+
+def _run_steps(params, idx, y, w, n_steps, lr=5e-3):
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    np_ = len(params)
+    loss0 = loss = None
+    step = jax.jit(model.train_step)
+    for t in range(1, n_steps + 1):
+        out = step(*params, *m, *v, jnp.float32(t), idx, y, w, jnp.float32(lr))
+        params = list(out[:np_])
+        m = list(out[np_ : 2 * np_])
+        v = list(out[2 * np_ : 3 * np_])
+        loss = float(out[-1])
+        if loss0 is None:
+            loss0 = loss
+    return params, loss0, loss
+
+
+def test_train_step_reduces_loss():
+    """Overfit a small random batch: loss must drop substantially."""
+    dp, v, h, r, b = 7, 32, 8, 8, 256
+    rng = np.random.default_rng(7)
+    params = model.init_params(7, dp, v, h, r)
+    idx = _idx(rng, b, dp, v)
+    y = jnp.asarray(rng.standard_normal(b), jnp.float32)
+    w = jnp.ones((b,), jnp.float32)
+    _, loss0, loss = _run_steps(params, idx, y, w, 60)
+    assert loss < 0.7 * loss0, (loss0, loss)
+
+
+def test_nk_train_step_reduces_loss():
+    dp, v, h, b = 7, 32, 8, 256
+    rng = np.random.default_rng(9)
+    params = model.init_nk_params(9, dp, v, h)
+    idx = _idx(rng, b, dp, v)
+    y = jnp.asarray(rng.standard_normal(b), jnp.float32)
+    w = jnp.ones((b,), jnp.float32)
+    m = [jnp.zeros_like(p) for p in params]
+    vv = [jnp.zeros_like(p) for p in params]
+    np_ = len(params)
+    step = jax.jit(model.nk_train_step)
+    loss0 = loss = None
+    for t in range(1, 61):
+        out = step(
+            *params, *m, *vv, jnp.float32(t), idx, y, w, jnp.float32(5e-3)
+        )
+        params = list(out[:np_])
+        m = list(out[np_ : 2 * np_])
+        vv = list(out[2 * np_ : 3 * np_])
+        loss = float(out[-1])
+        if loss0 is None:
+            loss0 = loss
+    assert loss < 0.7 * loss0, (loss0, loss)
+
+
+def test_train_step_zero_weight_rows_do_not_move_loss():
+    """Padding rows (weight 0) must not affect the computed loss."""
+    dp, v, h, r, b = 6, 32, 4, 4, 128
+    rng = np.random.default_rng(3)
+    params = model.init_params(3, dp, v, h, r)
+    idx = _idx(rng, b, dp, v)
+    y = jnp.asarray(rng.standard_normal(b), jnp.float32)
+    w = jnp.ones((b,), jnp.float32)
+    m = [jnp.zeros_like(p) for p in params]
+    vv = [jnp.zeros_like(p) for p in params]
+    out_full = model.train_step(
+        *params, *m, *vv, jnp.float32(1), idx, y, w, jnp.float32(1e-3)
+    )
+    # corrupt the padded half but zero its weight
+    y2 = y.at[64:].set(999.0)
+    w2 = w.at[64:].set(0.0)
+    y1 = y.at[64:].set(0.0)
+    out_a = model.train_step(
+        *params, *m, *vv, jnp.float32(1), idx, y2, w2, jnp.float32(1e-3)
+    )
+    out_b = model.train_step(
+        *params, *m, *vv, jnp.float32(1), idx, y1, w2, jnp.float32(1e-3)
+    )
+    np.testing.assert_allclose(out_a[-1], out_b[-1], rtol=1e-6)
+    for pa, pb in zip(out_a[:10], out_b[:10]):
+        np.testing.assert_allclose(pa, pb, rtol=1e-5, atol=1e-6)
+
+
+def test_adam_update_matches_manual():
+    """Single-scalar Adam sanity check against the closed form."""
+    p = [jnp.asarray([2.0], jnp.float32)]
+    g = [jnp.asarray([0.5], jnp.float32)]
+    m = [jnp.zeros(1, jnp.float32)]
+    v = [jnp.zeros(1, jnp.float32)]
+    new_p, new_m, new_v = model._adam_update(p, g, m, v, jnp.float32(1.0), 0.1)
+    # t=1: mhat = g, vhat = g^2  =>  step = lr * g/(|g|+eps) = lr * sign(g)
+    np.testing.assert_allclose(float(new_p[0][0]), 2.0 - 0.1, rtol=1e-4)
+    np.testing.assert_allclose(float(new_m[0][0]), 0.05, rtol=1e-5)
+    np.testing.assert_allclose(float(new_v[0][0]), 0.001 * 0.25, rtol=1e-4)
+
+
+def test_grad_clip_engages_on_huge_grads():
+    p = [jnp.asarray([0.0], jnp.float32)]
+    g = [jnp.asarray([1e6], jnp.float32)]
+    m = [jnp.zeros(1, jnp.float32)]
+    v = [jnp.zeros(1, jnp.float32)]
+    new_p, _, _ = model._adam_update(p, g, m, v, jnp.float32(1.0), 0.1)
+    assert np.isfinite(float(new_p[0][0]))

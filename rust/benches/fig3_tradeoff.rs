@@ -1,0 +1,64 @@
+//! Figure 3: compressed size vs fitness trade-off — TensorCodec against
+//! all seven baselines on every Table-II dataset at two size budgets.
+//!
+//! The paper's claim reproduced here (in *shape*, not absolute numbers —
+//! our substrate is synthetic data on CPU): TensorCodec dominates the
+//! trade-off, i.e. at matched sizes its fitness is the highest, most
+//! dramatically on smooth-but-high-rank data (Stock) and least so on
+//! extremely sparse data (Uber), where NeuKron is designed to shine.
+
+use tensorcodec::datasets::{by_name, ALL_DATASETS};
+use tensorcodec::harness::{bench_epochs, bench_scale, print_row, run_baselines, run_tc};
+use tensorcodec::metrics::CsvSink;
+
+fn main() {
+    let scale = bench_scale();
+    let epochs = bench_epochs();
+    let budgets: &[(usize, usize)] = &[(6, 6), (10, 10)]; // (h, R) points
+    let mut csv = CsvSink::create(
+        "fig3_tradeoff.csv",
+        "dataset,method,budget,bytes,fitness,seconds",
+    )
+    .unwrap();
+    println!("=== Fig. 3: size vs fitness (scale {scale}, epochs {epochs}) ===");
+    for rec in ALL_DATASETS {
+        if !tensorcodec::harness::keep_dataset(rec.name) {
+            continue;
+        }
+        let tensor = by_name(rec.name, scale, 7).unwrap();
+        for (bi, &(h, r)) in budgets.iter().enumerate() {
+            let tc = match run_tc(&tensor, h, r, epochs) {
+                Ok(tc) => tc,
+                Err(e) => {
+                    eprintln!("[fig3] {}: {e:#}", rec.name);
+                    continue;
+                }
+            };
+            print_row(rec.name, "TC", tc.bytes, tc.fitness, tc.seconds);
+            csv.row(&[
+                rec.name.into(),
+                "TC".into(),
+                bi.to_string(),
+                tc.bytes.to_string(),
+                format!("{:.4}", tc.fitness),
+                format!("{:.2}", tc.seconds),
+            ])
+            .unwrap();
+            let budget_params = tc.bytes / 8;
+            for b in run_baselines(&tensor, budget_params, epochs) {
+                let fit = b.fitness(&tensor);
+                print_row(rec.name, b.name, b.bytes, fit, b.seconds);
+                csv.row(&[
+                    rec.name.into(),
+                    b.name.into(),
+                    bi.to_string(),
+                    b.bytes.to_string(),
+                    format!("{fit:.4}"),
+                    format!("{:.2}", b.seconds),
+                ])
+                .unwrap();
+            }
+        }
+    }
+    println!("csv -> {}", csv.path().display());
+}

@@ -1,0 +1,134 @@
+//! Figure 4: ablation study on the four small datasets.
+//!
+//!   TC    — full TensorCodec (repeated reordering + TSP init + NTTD)
+//!   TC-R  — no repeated reordering (reorder_every = 0)
+//!   TC-T  — additionally no TSP order initialisation
+//!   TC-N  — additionally no neural core generator: plain TT-SVD on the
+//!           folded tensor at a matched parameter count
+//!
+//! Expected shape (paper Fig. 4): fitness increases monotonically as
+//! components are added, TC-N worst by a wide margin.
+
+use tensorcodec::baselines::ttd;
+use tensorcodec::config::TrainConfig;
+use tensorcodec::coordinator::Trainer;
+use tensorcodec::datasets::by_name;
+use tensorcodec::harness::{bench_epochs, bench_scale, print_row};
+use tensorcodec::metrics::CsvSink;
+use tensorcodec::tensor::{DenseTensor, FoldSpec};
+
+/// TC-N: TT-SVD applied to the *folded* tensor (phantom entries zero),
+/// with rank chosen so the parameter count is closest to `budget_params`.
+fn tc_n(tensor: &DenseTensor, budget_params: usize) -> (usize, f64) {
+    let spec = FoldSpec::auto(tensor.shape(), 0).unwrap();
+    // materialise the folded tensor
+    let mut folded = DenseTensor::zeros(&spec.folded_shape);
+    let d = tensor.order();
+    let mut folded_idx = vec![0usize; spec.dp];
+    let mut idx = vec![0usize; d];
+    for lin in 0..tensor.len() {
+        let mut rem = lin;
+        for k in (0..d).rev() {
+            idx[k] = rem % tensor.shape()[k];
+            rem /= tensor.shape()[k];
+        }
+        spec.fold_index(&idx, &mut folded_idx);
+        folded.set(&folded_idx, tensor.data()[lin]);
+    }
+    let rank = ttd::rank_for_budget(&spec.folded_shape, budget_params).max(1);
+    let tt = ttd::tt_svd(&folded, rank, 0);
+    // fitness over the real entries only
+    let mut err = 0.0f64;
+    let mut den = 0.0f64;
+    for lin in 0..tensor.len() {
+        let mut rem = lin;
+        for k in (0..d).rev() {
+            idx[k] = rem % tensor.shape()[k];
+            rem /= tensor.shape()[k];
+        }
+        spec.fold_index(&idx, &mut folded_idx);
+        let x = tensor.data()[lin] as f64;
+        let xh = tt.entry(&folded_idx);
+        err += (x - xh) * (x - xh);
+        den += x * x;
+    }
+    let fitness = 1.0 - (err / den.max(1e-30)).sqrt();
+    (tt.num_params() * 8, fitness)
+}
+
+fn main() {
+    let scale = bench_scale();
+    let epochs = bench_epochs();
+    let datasets = ["uber", "air", "action", "activity"];
+    let mut csv =
+        CsvSink::create("fig4_ablation.csv", "dataset,variant,bytes,fitness").unwrap();
+    println!("=== Fig. 4: ablation (scale {scale}, epochs {epochs}) ===");
+    for name in datasets {
+        let tensor = by_name(name, scale, 7).unwrap();
+        let epochs = tensorcodec::harness::effective_epochs(tensor.len(), epochs);
+        let variants: Vec<(&str, TrainConfig)> = vec![
+            (
+                "TC",
+                TrainConfig {
+                    rank: 6,
+                    hidden: 6,
+                    epochs,
+                    lr: 1e-2,
+                    reorder_every: 4,
+                    swap_samples: 128,
+                    ..Default::default()
+                },
+            ),
+            (
+                "TC-R",
+                TrainConfig {
+                    rank: 6,
+                    hidden: 6,
+                    epochs,
+                    lr: 1e-2,
+                    reorder_every: 0,
+                    ..Default::default()
+                },
+            ),
+            (
+                "TC-T",
+                TrainConfig {
+                    rank: 6,
+                    hidden: 6,
+                    epochs,
+                    lr: 1e-2,
+                    reorder_every: 0,
+                    no_tsp_init: true,
+                    ..Default::default()
+                },
+            ),
+        ];
+        let mut budget = 0usize;
+        for (label, cfg) in variants {
+            match Trainer::new(&tensor, cfg).and_then(|mut tr| tr.fit()) {
+                Ok(model) => {
+                    budget = model.params.num_params();
+                    print_row(name, label, model.reported_size_bytes(), model.fitness, 0.0);
+                    csv.row(&[
+                        name.into(),
+                        label.into(),
+                        model.reported_size_bytes().to_string(),
+                        format!("{:.4}", model.fitness),
+                    ])
+                    .unwrap();
+                }
+                Err(e) => eprintln!("[fig4] {name}/{label}: {e:#}"),
+            }
+        }
+        let (bytes, fitness) = tc_n(&tensor, budget.max(500));
+        print_row(name, "TC-N", bytes, fitness, 0.0);
+        csv.row(&[
+            name.into(),
+            "TC-N".into(),
+            bytes.to_string(),
+            format!("{fitness:.4}"),
+        ])
+        .unwrap();
+    }
+    println!("csv -> {}", csv.path().display());
+}

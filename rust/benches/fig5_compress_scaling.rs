@@ -1,0 +1,66 @@
+//! Figure 5: compression time scales near-linearly with the number of
+//! entries. Synthetic 4-order tensors with uniform entries, growing by
+//! ~2x per step; we time the paper's three phases separately (order init,
+//! one epoch of model update, one reordering round) exactly as §V-D does.
+
+use tensorcodec::config::TrainConfig;
+use tensorcodec::coordinator::Trainer;
+use tensorcodec::metrics::{CsvSink, Timer};
+use tensorcodec::tensor::DenseTensor;
+
+fn main() {
+    let sizes: Vec<[usize; 4]> = vec![
+        [12, 12, 12, 12],
+        [16, 14, 14, 14],
+        [20, 16, 16, 16],
+        [24, 20, 18, 18],
+        [28, 24, 22, 20],
+        [32, 28, 26, 24],
+    ];
+    let mut csv = CsvSink::create(
+        "fig5_compress_scaling.csv",
+        "entries,init_s,epoch_s,total_s,per_entry_us",
+    )
+    .unwrap();
+    println!("=== Fig. 5: compression-time scaling (4-order, 1 epoch + 1 reorder) ===");
+    let mut prev: Option<(usize, f64)> = None;
+    for shape in &sizes {
+        let t = DenseTensor::random_uniform(shape, 5);
+        let n = t.len();
+        let cfg = TrainConfig {
+            rank: 8,
+            hidden: 8,
+            epochs: 1,
+            lr: 1e-2,
+            reorder_every: 1,
+            swap_samples: 128,
+            ..Default::default()
+        };
+        let timer = Timer::start();
+        let mut trainer = Trainer::new(&t, cfg).unwrap();
+        let model = trainer.fit().unwrap();
+        let total = timer.seconds();
+        let per_entry_us = total * 1e6 / n as f64;
+        println!(
+            "{n:>10} entries  init {:>6.2}s  epoch {:>6.2}s  total {:>6.2}s  ({per_entry_us:.2} us/entry)",
+            model.init_seconds, model.train_seconds, total
+        );
+        if let Some((pn, pt)) = prev {
+            let growth_n = n as f64 / pn as f64;
+            let growth_t = total / pt;
+            println!(
+                "            growth: entries x{growth_n:.2}, time x{growth_t:.2} (linear => similar)"
+            );
+        }
+        prev = Some((n, total));
+        csv.row(&[
+            n.to_string(),
+            format!("{:.3}", model.init_seconds),
+            format!("{:.3}", model.train_seconds),
+            format!("{total:.3}"),
+            format!("{per_entry_us:.3}"),
+        ])
+        .unwrap();
+    }
+    println!("csv -> {}", csv.path().display());
+}

@@ -1,0 +1,80 @@
+//! Figure 6: reconstruction time is logarithmic in the largest mode size.
+//!
+//! Synthetic order-3 and order-4 tensors with mode sizes 2^6..2^14; we
+//! decode a fixed number of uniformly-sampled entries from a random NTTD
+//! model (no training needed — Theorem 3 is about the decode path) and
+//! report total time. Expected: time grows ~linearly in log2(N_max),
+//! i.e. each row adds a near-constant increment while N_max doubles.
+
+use tensorcodec::metrics::{CsvSink, Timer};
+use tensorcodec::nttd::ModelParams;
+use tensorcodec::runtime::{ForwardExec, Runtime};
+use tensorcodec::tensor::FoldSpec;
+use tensorcodec::util::Pcg64;
+
+const N_ENTRIES: usize = 1 << 15;
+
+fn main() {
+    let mut rt = Runtime::cpu().unwrap();
+    let mut csv = CsvSink::create(
+        "fig6_reconstruct_scaling.csv",
+        "order,n_max,dp,seconds,us_per_entry",
+    )
+    .unwrap();
+    println!("=== Fig. 6: reconstruction-time scaling ({N_ENTRIES} entries/point) ===");
+    for order in [3usize, 4] {
+        println!("-- order {order} --");
+        for log_n in (6..=14).step_by(2) {
+            let n = 1usize << log_n;
+            let shape = vec![n; order];
+            let spec = match FoldSpec::auto(&shape, 0) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("skip {shape:?}: {e}");
+                    continue;
+                }
+            };
+            let info = match rt.find("tc", "fwd", spec.dp, 8, 8) {
+                Ok(i) => i,
+                Err(e) => {
+                    eprintln!("skip dp={}: {e:#}", spec.dp);
+                    continue;
+                }
+            };
+            let params = ModelParams::init_tc(0, spec.dp, 32, 8, 8);
+            let mut fwd = ForwardExec::new(&mut rt, &info, &params).unwrap();
+            // sample entries + fold
+            let mut rng = Pcg64::seeded(log_n as u64);
+            let mut idx = vec![0i32; N_ENTRIES * spec.dp];
+            let mut coord = vec![0usize; order];
+            for row in 0..N_ENTRIES {
+                for c in coord.iter_mut() {
+                    *c = rng.below(n);
+                }
+                spec.fold_index_i32(&coord, &mut idx[row * spec.dp..(row + 1) * spec.dp]);
+            }
+            // warm up (compile already cached per dp by `find`+new)
+            let mut out = Vec::new();
+            fwd.run(&idx[..spec.dp * 256], &mut out).unwrap();
+            out.clear();
+            let timer = Timer::start();
+            fwd.run(&idx, &mut out).unwrap();
+            let secs = timer.seconds();
+            println!(
+                "N_max 2^{log_n:<2}  d'={:<2}  {:>7.3}s  ({:.2} us/entry)",
+                spec.dp,
+                secs,
+                secs * 1e6 / N_ENTRIES as f64
+            );
+            csv.row(&[
+                order.to_string(),
+                n.to_string(),
+                spec.dp.to_string(),
+                format!("{secs:.4}"),
+                format!("{:.3}", secs * 1e6 / N_ENTRIES as f64),
+            ])
+            .unwrap();
+        }
+    }
+    println!("csv -> {}", csv.path().display());
+}

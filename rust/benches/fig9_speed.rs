@@ -1,0 +1,34 @@
+//! Figure 9: total compression time per method.
+//!
+//! Expected shape (paper): the neural methods (TensorCodec, NeuKron) are
+//! orders of magnitude slower than the classical decompositions, with
+//! TensorCodec faster than NeuKron; SZ3/TTHRESH are fastest.
+
+use tensorcodec::datasets::by_name;
+use tensorcodec::harness::{bench_epochs, bench_scale, run_baselines, run_tc};
+use tensorcodec::metrics::CsvSink;
+
+fn main() {
+    let scale = bench_scale();
+    let epochs = bench_epochs();
+    let datasets = ["uber", "air", "action", "activity"];
+    let mut csv = CsvSink::create("fig9_speed.csv", "dataset,method,seconds").unwrap();
+    println!("=== Fig. 9: total compression time (scale {scale}, epochs {epochs}) ===");
+    for name in datasets {
+        let tensor = by_name(name, scale, 7).unwrap();
+        match run_tc(&tensor, 6, 6, epochs) {
+            Ok(tc) => {
+                println!("{name:<10} {:<10} {:>8.2}s", "TC", tc.seconds);
+                csv.row(&[name.into(), "TC".into(), format!("{:.3}", tc.seconds)])
+                    .unwrap();
+                for b in run_baselines(&tensor, tc.bytes / 8, epochs) {
+                    println!("{name:<10} {:<10} {:>8.2}s", b.name, b.seconds);
+                    csv.row(&[name.into(), b.name.into(), format!("{:.3}", b.seconds)])
+                        .unwrap();
+                }
+            }
+            Err(e) => eprintln!("[fig9] {name}: {e:#}"),
+        }
+    }
+    println!("csv -> {}", csv.path().display());
+}

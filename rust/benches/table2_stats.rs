@@ -1,0 +1,50 @@
+//! Table II: dataset statistics (size, order, folded order, density,
+//! smoothness) — paper values vs the synthetic recipes at bench scale.
+
+use tensorcodec::datasets::{by_name, ALL_DATASETS};
+use tensorcodec::harness::bench_scale;
+use tensorcodec::metrics::CsvSink;
+use tensorcodec::tensor::{stats, FoldSpec};
+
+fn main() {
+    let scale = bench_scale();
+    let mut csv = CsvSink::create(
+        "table2_stats.csv",
+        "dataset,shape,order,folded_order,density,density_paper,smoothness,smoothness_paper",
+    )
+    .unwrap();
+    println!("=== Table II: dataset statistics (scale {scale}) ===");
+    println!(
+        "{:<10} {:<22} {:>5} {:>7} {:>16} {:>20}",
+        "dataset", "shape", "order", "folded", "density (paper)", "smoothness (paper)"
+    );
+    for r in ALL_DATASETS {
+        let t = by_name(r.name, scale, 7).unwrap();
+        let spec = FoldSpec::auto(t.shape(), 0).unwrap();
+        let density = stats::density(&t);
+        let smooth = stats::smoothness(&t, 20_000, 0);
+        println!(
+            "{:<10} {:<22} {:>5} {:>7} {:>8.3} ({:>5.3}) {:>12.3} ({:>5.3})",
+            r.name,
+            format!("{:?}", t.shape()),
+            t.order(),
+            spec.dp,
+            density,
+            r.density,
+            smooth,
+            r.smoothness
+        );
+        csv.row(&[
+            r.name.to_string(),
+            format!("{:?}", t.shape()).replace(',', "x"),
+            t.order().to_string(),
+            spec.dp.to_string(),
+            format!("{density:.4}"),
+            format!("{:.4}", r.density),
+            format!("{smooth:.4}"),
+            format!("{:.4}", r.smoothness),
+        ])
+        .unwrap();
+    }
+    println!("csv -> {}", csv.path().display());
+}

@@ -1,0 +1,146 @@
+//! CP Decomposition via alternating least squares (the paper's CPD
+//! baseline, Carroll & Chang 1970).
+
+use super::{unfold, BaselineResult};
+use crate::linalg::{solve_least_squares, Mat};
+use crate::metrics::Timer;
+use crate::tensor::DenseTensor;
+use crate::util::Pcg64;
+
+/// CP factors: `factors[k]` is `[N_k, R]`.
+#[derive(Debug, Clone)]
+pub struct CpFactors {
+    pub shape: Vec<usize>,
+    pub rank: usize,
+    pub factors: Vec<Mat>,
+}
+
+impl CpFactors {
+    pub fn num_params(&self) -> usize {
+        self.shape.iter().map(|&n| n * self.rank).sum()
+    }
+
+    /// Khatri-Rao product of all factors except mode `k`, row-major
+    /// `[Π_{m≠k} N_m, R]` with the same flattening order as [`unfold`].
+    fn khatri_rao_excluding(&self, k: usize) -> Mat {
+        let r = self.rank;
+        let modes: Vec<usize> = (0..self.shape.len()).filter(|&m| m != k).collect();
+        let rows: usize = modes.iter().map(|&m| self.shape[m]).product();
+        let mut out = Mat::zeros(rows, r);
+        let mut idx = vec![0usize; modes.len()];
+        for row in 0..rows {
+            for c in 0..r {
+                let mut prod = 1.0;
+                for (pos, &m) in modes.iter().enumerate() {
+                    prod *= self.factors[m].at(idx[pos], c);
+                }
+                out.set(row, c, prod);
+            }
+            // advance odometer (last mode fastest — matches unfold order)
+            for pos in (0..modes.len()).rev() {
+                idx[pos] += 1;
+                if idx[pos] < self.shape[modes[pos]] {
+                    break;
+                }
+                idx[pos] = 0;
+            }
+        }
+        out
+    }
+
+    pub fn reconstruct(&self) -> DenseTensor {
+        let kr = self.khatri_rao_excluding(0); // [rest, R]
+        let m = self.factors[0].matmul(&kr.transpose()); // [N_0, rest]
+        super::fold_back(&m, &self.shape, 0)
+    }
+}
+
+/// CP-ALS for `iters` sweeps at rank `r`.
+pub fn cp_als(t: &DenseTensor, r: usize, iters: usize, seed: u64) -> CpFactors {
+    let shape = t.shape().to_vec();
+    let d = shape.len();
+    let mut rng = Pcg64::seeded(seed ^ 0xc9a1);
+    let mut cp = CpFactors {
+        shape: shape.clone(),
+        rank: r,
+        factors: shape.iter().map(|&n| Mat::gaussian(n, r, &mut rng)).collect(),
+    };
+    let unfoldings: Vec<Mat> = (0..d).map(|k| unfold(t, k)).collect();
+    for _ in 0..iters {
+        for k in 0..d {
+            let kr = cp.khatri_rao_excluding(k); // [rest, R]
+            // solve  A_k · krᵀ ≈ X_(k)  ⇔  kr · A_kᵀ ≈ X_(k)ᵀ
+            let xt = unfoldings[k].transpose(); // [rest, N_k]
+            let akt = solve_least_squares(&kr, &xt); // [R, N_k]
+            cp.factors[k] = akt.transpose();
+        }
+    }
+    cp
+}
+
+/// Run the CPD baseline.
+pub fn run(t: &DenseTensor, rank: usize, iters: usize, seed: u64) -> BaselineResult {
+    let timer = Timer::start();
+    let cp = cp_als(t, rank, iters, seed);
+    let approx = cp.reconstruct();
+    BaselineResult {
+        name: "CPD",
+        approx,
+        bytes: cp.num_params() * 8,
+        seconds: timer.seconds(),
+    }
+}
+
+/// Largest rank whose parameter count `R·ΣN_k` fits the budget (≥1).
+pub fn rank_for_budget(shape: &[usize], budget_params: usize) -> usize {
+    let per_rank: usize = shape.iter().sum();
+    (budget_params / per_rank).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cp_random(shape: &[usize], r: usize, seed: u64) -> DenseTensor {
+        let mut rng = Pcg64::seeded(seed);
+        let cp = CpFactors {
+            shape: shape.to_vec(),
+            rank: r,
+            factors: shape
+                .iter()
+                .map(|&n| Mat::gaussian(n, r, &mut rng))
+                .collect(),
+        };
+        cp.reconstruct()
+    }
+
+    #[test]
+    fn recovers_exact_cp_tensor() {
+        let t = cp_random(&[8, 7, 6], 3, 0);
+        let res = run(&t, 3, 30, 1);
+        let fit = res.fitness(&t);
+        assert!(fit > 0.99, "fit={fit}");
+    }
+
+    #[test]
+    fn rank1_on_rank1_is_exact() {
+        let t = cp_random(&[5, 6, 4], 1, 2);
+        let res = run(&t, 1, 20, 0);
+        assert!(res.fitness(&t) > 0.999);
+    }
+
+    #[test]
+    fn als_monotone_improvement_tendency() {
+        let t = DenseTensor::random_uniform(&[6, 6, 6], 3);
+        let f_few = run(&t, 4, 2, 0).fitness(&t);
+        let f_many = run(&t, 4, 25, 0).fitness(&t);
+        assert!(f_many >= f_few - 0.02, "{f_few} -> {f_many}");
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let t = DenseTensor::random_uniform(&[4, 5, 6], 0);
+        let res = run(&t, 3, 2, 0);
+        assert_eq!(res.bytes, (4 + 5 + 6) * 3 * 8);
+    }
+}

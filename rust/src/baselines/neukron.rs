@@ -1,0 +1,35 @@
+//! NeuKron-style baseline (Kwon et al. 2023): an auto-regressive LSTM over
+//! hierarchical (Kronecker-power) index digits predicting each entry with a
+//! scalar head.
+//!
+//! Shares the folded-digit machinery and the AOT runtime with TensorCodec
+//! (variant `nk` artifacts) at a matched parameter budget — the essential
+//! structural difference the paper evaluates: Kronecker-style scalar
+//! generation vs NTTD's TT-core generation.
+
+use super::BaselineResult;
+use crate::config::TrainConfig;
+use crate::coordinator::Trainer;
+use crate::nttd::Variant;
+use crate::tensor::DenseTensor;
+use anyhow::Result;
+
+/// Run the NeuKron baseline. `hidden` must have `nk` artifacts (8 or 12 in
+/// the default matrix).
+pub fn run(t: &DenseTensor, cfg: &TrainConfig) -> Result<BaselineResult> {
+    let mut trainer = Trainer::with_variant(t, cfg.clone(), Variant::Nk)?;
+    let model = trainer.fit()?;
+    let bytes = model.reported_size_bytes();
+    let seconds = model.train_seconds + model.init_seconds;
+    // reconstruct through the already-warm runtime
+    let approx = {
+        let mut dec = crate::compress::Decompressor::new(model);
+        dec.reconstruct_all()
+    };
+    Ok(BaselineResult {
+        name: "NeuKron",
+        approx,
+        bytes,
+        seconds,
+    })
+}

@@ -1,0 +1,167 @@
+//! SZ3-like error-bounded compressor (Zhao et al. 2021): Lorenzo /
+//! interpolation prediction from already-decoded neighbours + uniform
+//! quantisation of residuals within an absolute error bound + Huffman.
+//!
+//! This is the smoothness-exploiting competitor: on smooth tensors the
+//! residuals concentrate near zero and Huffman crushes them; on rough
+//! tensors most entries fall out of the quantiser range and get stored
+//! raw, exactly the degradation the paper observes for SZ3.
+
+use super::BaselineResult;
+use crate::coding::huffman_encode;
+use crate::metrics::Timer;
+use crate::tensor::DenseTensor;
+
+/// Quantiser symbol cap: bins in `[-CAP, CAP)` (alphabet 2·CAP+1, symbol
+/// 2·CAP is the outlier escape). Keeps the Huffman table small.
+const CAP: i64 = 511;
+
+/// d-dimensional Lorenzo predictor from decoded neighbours.
+/// pred(i) = Σ_{∅≠S⊆dims} (−1)^{|S|+1} · decoded(i − 1_S), 0 outside.
+fn lorenzo_predict(decoded: &[f32], shape: &[usize], strides: &[usize], idx: &[usize]) -> f32 {
+    let d = shape.len();
+    let mut pred = 0.0f32;
+    // iterate non-empty subsets of dims via bitmask
+    'subset: for mask in 1u32..(1 << d) {
+        let mut off = 0usize;
+        for k in 0..d {
+            if mask & (1 << k) != 0 {
+                if idx[k] == 0 {
+                    continue 'subset;
+                }
+                off += strides[k];
+            }
+        }
+        let lin: usize = idx
+            .iter()
+            .zip(strides)
+            .map(|(&i, &s)| i * s)
+            .sum::<usize>()
+            - off;
+        let sign = if mask.count_ones() % 2 == 1 { 1.0 } else { -1.0 };
+        pred += sign * decoded[lin];
+    }
+    pred
+}
+
+/// Run the SZ3-like baseline at absolute error bound `abs_err`
+/// (as a fraction of the tensor's value std when `relative` is true).
+pub fn run(t: &DenseTensor, rel_err: f64, _seed: u64) -> BaselineResult {
+    let timer = Timer::start();
+    let (_, std) = t.mean_std();
+    let abs_err = (rel_err * std as f64).max(1e-12) as f32;
+    let step = 2.0 * abs_err;
+    let shape = t.shape().to_vec();
+    let d = shape.len();
+    let mut strides = vec![1usize; d];
+    for k in (0..d.saturating_sub(1)).rev() {
+        strides[k] = strides[k + 1] * shape[k + 1];
+    }
+    let n = t.len();
+    let mut decoded = vec![0.0f32; n];
+    let mut symbols: Vec<u16> = Vec::with_capacity(n);
+    let mut outliers: Vec<f32> = Vec::new();
+    let mut idx = vec![0usize; d];
+    for lin in 0..n {
+        let mut rem = lin;
+        for k in (0..d).rev() {
+            idx[k] = rem % shape[k];
+            rem /= shape[k];
+        }
+        let pred = lorenzo_predict(&decoded, &shape, &strides, &idx);
+        let x = t.data()[lin];
+        let bin = ((x - pred) / step).round();
+        if bin.abs() as i64 >= CAP || !bin.is_finite() {
+            // outlier: store raw
+            symbols.push((2 * CAP) as u16);
+            outliers.push(x);
+            decoded[lin] = x;
+        } else {
+            symbols.push((bin as i64 + CAP) as u16);
+            decoded[lin] = pred + bin * step;
+        }
+    }
+    let coded = huffman_encode(&symbols, (2 * CAP + 1) as usize);
+    let bytes = coded.len() + outliers.len() * 4 + 16;
+    let approx = DenseTensor::from_data(&shape, decoded);
+    BaselineResult {
+        name: "SZ3",
+        approx,
+        bytes,
+        seconds: timer.seconds(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn error_bound_respected() {
+        let t = DenseTensor::random_uniform(&[12, 10, 8], 0);
+        let (_, std) = t.mean_std();
+        for rel in [0.5f64, 0.1, 0.01] {
+            let res = run(&t, rel, 0);
+            let bound = (rel * std as f64) as f32 * 1.001;
+            for (a, b) in t.data().iter().zip(res.approx.data()) {
+                assert!((a - b).abs() <= bound, "rel={rel}: {} > {bound}", (a - b).abs());
+            }
+        }
+    }
+
+    #[test]
+    fn smooth_data_compresses_hard() {
+        // smooth ramp: Lorenzo residuals ~0 => tiny output (~1 KiB of the
+        // size is the fixed Huffman code-length header)
+        let n = 96;
+        let data: Vec<f32> = (0..n * n)
+            .map(|i| (i / n) as f32 * 0.1 + (i % n) as f32 * 0.05)
+            .collect();
+        let t = DenseTensor::from_data(&[n, n], data);
+        let res = run(&t, 0.05, 0);
+        assert!(res.fitness(&t) > 0.9);
+        assert!(
+            res.bytes < n * n, // < 1 byte/entry vs 8 raw
+            "{} bytes for {} entries",
+            res.bytes,
+            n * n
+        );
+    }
+
+    #[test]
+    fn rough_data_degrades() {
+        // white noise: residuals as large as the data; at a tight bound the
+        // symbol stream carries ~full entropy, so compression is poor
+        let mut rng = Pcg64::seeded(1);
+        let data: Vec<f32> = (0..4096).map(|_| rng.normal() * 10.0).collect();
+        let t = DenseTensor::from_data(&[64, 64], data);
+        let smooth_bytes = run(&t, 0.5, 0).bytes;
+        let tight = run(&t, 0.01, 0);
+        assert!(tight.bytes > smooth_bytes * 2, "{} vs {smooth_bytes}", tight.bytes);
+    }
+
+    #[test]
+    fn tighter_bound_higher_fitness() {
+        let t = DenseTensor::random_uniform(&[16, 16, 16], 3);
+        let loose = run(&t, 0.5, 0).fitness(&t);
+        let tight = run(&t, 0.02, 0).fitness(&t);
+        assert!(tight > loose, "{loose} vs {tight}");
+    }
+
+    #[test]
+    fn lorenzo_2d_exact_on_bilinear() {
+        // f(i,j) = a + b·i + c·j is exactly predicted by 2-D Lorenzo
+        let (rows, cols) = (8usize, 9usize);
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|l| {
+                let (i, j) = (l / cols, l % cols);
+                2.0 + 0.5 * i as f32 + 0.25 * j as f32
+            })
+            .collect();
+        let t = DenseTensor::from_data(&[rows, cols], data);
+        let res = run(&t, 1e-6, 0);
+        // only first row/col carry non-zero residuals
+        assert!(res.fitness(&t) > 0.999999);
+    }
+}

@@ -1,0 +1,247 @@
+//! Tensor-Ring Decomposition via ALS (the paper's TRD baseline,
+//! Zhao et al. 2019): entry (i_1..i_d) ≈ tr(G_1(i_1) · ... · G_d(i_d))
+//! with every core slice an r×r matrix (the ring closes the trace).
+
+use super::{unfold, BaselineResult};
+use crate::linalg::{solve_least_squares, Mat};
+use crate::metrics::Timer;
+use crate::tensor::DenseTensor;
+use crate::util::Pcg64;
+
+/// Ring cores: `cores[k]` is `[N_k, r, r]` row-major (slice-major).
+#[derive(Debug, Clone)]
+pub struct TrCores {
+    pub shape: Vec<usize>,
+    pub rank: usize,
+    pub cores: Vec<Vec<f64>>,
+}
+
+impl TrCores {
+    pub fn num_params(&self) -> usize {
+        self.shape.iter().map(|&n| n * self.rank * self.rank).sum()
+    }
+
+    fn slice<'a>(&'a self, k: usize, i: usize) -> &'a [f64] {
+        let rr = self.rank * self.rank;
+        &self.cores[k][i * rr..(i + 1) * rr]
+    }
+
+    /// tr(G_1(i_1)···G_d(i_d)).
+    pub fn entry(&self, idx: &[usize]) -> f64 {
+        let r = self.rank;
+        let mut m = self.slice(0, idx[0]).to_vec();
+        let mut tmp = vec![0.0f64; r * r];
+        for k in 1..self.shape.len() {
+            let g = self.slice(k, idx[k]);
+            tmp.fill(0.0);
+            for a in 0..r {
+                for c in 0..r {
+                    let v = m[a * r + c];
+                    if v == 0.0 {
+                        continue;
+                    }
+                    for b in 0..r {
+                        tmp[a * r + b] += v * g[c * r + b];
+                    }
+                }
+            }
+            std::mem::swap(&mut m, &mut tmp);
+        }
+        (0..r).map(|a| m[a * r + a]).sum()
+    }
+
+    pub fn reconstruct(&self) -> DenseTensor {
+        let mut out = DenseTensor::zeros(&self.shape);
+        let n = out.len();
+        let d = self.shape.len();
+        let mut idx = vec![0usize; d];
+        for lin in 0..n {
+            let mut rem = lin;
+            for k in (0..d).rev() {
+                idx[k] = rem % self.shape[k];
+                rem /= self.shape[k];
+            }
+            out.data_mut()[lin] = self.entry(&idx) as f32;
+        }
+        out
+    }
+
+    /// Q(i_rest) for mode k: product of the other cores' slices in ring
+    /// order (k+1 … d, 1 … k−1). Entry = <G_k(i_k), Qᵀ>_F.
+    fn env_matrix(&self, k: usize, rest: &[usize]) -> Vec<f64> {
+        let r = self.rank;
+        let d = self.shape.len();
+        let mut m: Option<Vec<f64>> = None;
+        let mut tmp = vec![0.0f64; r * r];
+        let mut ri = 0usize;
+        // modes in ring order starting after k
+        for off in 1..d {
+            let mode = (k + off) % d;
+            // rest is ordered by ascending mode index (unfold order)
+            let pos = if mode < k { mode } else { mode - 1 };
+            let i = rest[pos];
+            let g = self.slice(mode, i);
+            match &mut m {
+                None => m = Some(g.to_vec()),
+                Some(mm) => {
+                    tmp.fill(0.0);
+                    for a in 0..r {
+                        for c in 0..r {
+                            let v = mm[a * r + c];
+                            if v == 0.0 {
+                                continue;
+                            }
+                            for b in 0..r {
+                                tmp[a * r + b] += v * g[c * r + b];
+                            }
+                        }
+                    }
+                    mm.copy_from_slice(&tmp);
+                }
+            }
+            ri += 1;
+        }
+        let _ = ri;
+        m.unwrap()
+    }
+}
+
+/// TR-ALS: `iters` sweeps at ring rank `r`.
+pub fn tr_als(t: &DenseTensor, r: usize, iters: usize, seed: u64) -> TrCores {
+    let shape = t.shape().to_vec();
+    let d = shape.len();
+    let mut rng = Pcg64::seeded(seed ^ 0x7269);
+    let scale = 1.0 / (r as f32);
+    let mut tr = TrCores {
+        shape: shape.clone(),
+        rank: r,
+        cores: shape
+            .iter()
+            .map(|&n| {
+                (0..n * r * r)
+                    .map(|_| (rng.normal() * scale) as f64 + if rng.uniform() < 0.1 { 0.1 } else { 0.0 })
+                    .collect()
+            })
+            .collect(),
+    };
+    let rr = r * r;
+    for _ in 0..iters {
+        for k in 0..d {
+            let rest_total = t.len() / shape[k];
+            // design matrix: row per rest-combo, columns = vec(Qᵀ)
+            let mut design = Mat::zeros(rest_total, rr);
+            let rest_shape: Vec<usize> = (0..d).filter(|&m| m != k).map(|m| shape[m]).collect();
+            let mut rest = vec![0usize; rest_shape.len()];
+            for row in 0..rest_total {
+                let q = tr.env_matrix(k, &rest);
+                // <G, Qᵀ> = Σ_{a,b} G[a,b] Q[b,a]
+                for a in 0..r {
+                    for b in 0..r {
+                        design.set(row, a * r + b, q[b * r + a]);
+                    }
+                }
+                // odometer, last mode fastest (matches unfold order)
+                for pos in (0..rest_shape.len()).rev() {
+                    rest[pos] += 1;
+                    if rest[pos] < rest_shape[pos] {
+                        break;
+                    }
+                    rest[pos] = 0;
+                }
+            }
+            let rhs = unfold(t, k).transpose(); // [rest_total, N_k]
+            let sol = solve_least_squares(&design, &rhs); // [rr, N_k]
+            for i in 0..shape[k] {
+                for c in 0..rr {
+                    tr.cores[k][i * rr + c] = sol.at(c, i);
+                }
+            }
+        }
+    }
+    tr
+}
+
+/// Run the TRD baseline.
+pub fn run(t: &DenseTensor, rank: usize, iters: usize, seed: u64) -> BaselineResult {
+    let timer = Timer::start();
+    let tr = tr_als(t, rank, iters, seed);
+    let approx = tr.reconstruct();
+    BaselineResult {
+        name: "TRD",
+        approx,
+        bytes: tr.num_params() * 8,
+        seconds: timer.seconds(),
+    }
+}
+
+/// Largest ring rank with `r²·ΣN_k ≤ budget` (≥1).
+pub fn rank_for_budget(shape: &[usize], budget_params: usize) -> usize {
+    let sum_n: usize = shape.iter().sum();
+    let mut r = 1usize;
+    while (r + 1) * (r + 1) * sum_n <= budget_params && r < 64 {
+        r += 1;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr_random(shape: &[usize], r: usize, seed: u64) -> DenseTensor {
+        let mut rng = Pcg64::seeded(seed);
+        let tr = TrCores {
+            shape: shape.to_vec(),
+            rank: r,
+            cores: shape
+                .iter()
+                .map(|&n| (0..n * r * r).map(|_| rng.normal() as f64 * 0.5).collect())
+                .collect(),
+        };
+        tr.reconstruct()
+    }
+
+    #[test]
+    fn recovers_exact_tr_tensor() {
+        let t = tr_random(&[5, 6, 4], 2, 0);
+        let res = run(&t, 2, 12, 3);
+        let fit = res.fitness(&t);
+        assert!(fit > 0.95, "fit={fit}");
+    }
+
+    #[test]
+    fn trace_entry_consistent_with_reconstruct() {
+        let t = tr_random(&[4, 3, 5], 2, 1);
+        let tr = tr_als(&t, 2, 4, 0);
+        let rec = tr.reconstruct();
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..30 {
+            let idx = [rng.below(4), rng.below(3), rng.below(5)];
+            assert!(((tr.entry(&idx) as f32) - rec.at(&idx)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let t = DenseTensor::random_uniform(&[4, 5, 3], 0);
+        let res = run(&t, 2, 1, 0);
+        assert_eq!(res.bytes, (4 + 5 + 3) * 4 * 8);
+    }
+
+    #[test]
+    fn ring_rank1_equals_cp_rank1_structure() {
+        // rank-1 ring = rank-1 CP (scalar cores): ALS should fit a
+        // separable tensor perfectly
+        let a: Vec<f32> = (0..5).map(|i| 1.0 + i as f32).collect();
+        let b: Vec<f32> = (0..4).map(|i| 0.5 + i as f32 * 0.3).collect();
+        let mut data = vec![0.0f32; 20];
+        for i in 0..5 {
+            for j in 0..4 {
+                data[i * 4 + j] = a[i] * b[j];
+            }
+        }
+        let t = DenseTensor::from_data(&[5, 4], data);
+        let res = run(&t, 1, 15, 0);
+        assert!(res.fitness(&t) > 0.999, "fit={}", res.fitness(&t));
+    }
+}

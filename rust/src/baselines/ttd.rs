@@ -1,0 +1,249 @@
+//! Tensor-Train Decomposition via TT-SVD (Oseledets 2011) — the paper's
+//! TTD baseline and the decomposition backbone of the TENSORCODEC-N
+//! ablation (plain TTD applied to the folded tensor).
+
+use super::BaselineResult;
+use crate::linalg::{truncated_svd, Mat};
+use crate::metrics::Timer;
+use crate::tensor::DenseTensor;
+
+/// TT cores: `cores[k]` has shape `[r_{k-1}, N_k, r_k]` (row-major).
+#[derive(Debug, Clone)]
+pub struct TtCores {
+    pub shape: Vec<usize>,
+    pub ranks: Vec<usize>, // length d+1, ranks[0] = ranks[d] = 1
+    pub cores: Vec<Vec<f64>>,
+}
+
+impl TtCores {
+    /// Total number of stored scalars: Σ r_{k-1} N_k r_k.
+    pub fn num_params(&self) -> usize {
+        self.cores.iter().map(|c| c.len()).sum()
+    }
+
+    /// Reconstruct the full tensor by sequential contraction.
+    pub fn reconstruct(&self) -> DenseTensor {
+        let d = self.shape.len();
+        // M: [prod_so_far, r_k]
+        let mut m = Mat::from_rows(self.shape[0], self.ranks[1], self.cores[0].clone());
+        for k in 1..d {
+            let rk_1 = self.ranks[k];
+            let rk = self.ranks[k + 1];
+            let nk = self.shape[k];
+            // core as [r_{k-1}, N_k * r_k]
+            let core = Mat::from_rows(rk_1, nk * rk, self.cores[k].clone());
+            let nm = m.matmul(&core); // [prod, N_k * r_k]
+            let prod = nm.rows * nk;
+            m = Mat::from_rows(prod, rk, nm.data);
+        }
+        let data: Vec<f32> = m.data.iter().map(|&v| v as f32).collect();
+        DenseTensor::from_data(&self.shape, data)
+    }
+
+    /// Approximate a single entry: product of core slices (O(d R²)).
+    pub fn entry(&self, idx: &[usize]) -> f64 {
+        let d = self.shape.len();
+        let mut v = vec![0.0f64; self.ranks[1]];
+        // first core row
+        let r1 = self.ranks[1];
+        v.copy_from_slice(&self.cores[0][idx[0] * r1..(idx[0] + 1) * r1]);
+        for k in 1..d {
+            let rk_1 = self.ranks[k];
+            let rk = self.ranks[k + 1];
+            let nk = self.shape[k];
+            let core = &self.cores[k];
+            let mut nv = vec![0.0f64; rk];
+            for a in 0..rk_1 {
+                let va = v[a];
+                if va == 0.0 {
+                    continue;
+                }
+                let base = (a * nk + idx[k]) * rk;
+                for (b, nvb) in nv.iter_mut().enumerate() {
+                    *nvb += va * core[base + b];
+                }
+            }
+            v = nv;
+        }
+        v[0]
+    }
+}
+
+/// TT-SVD with a uniform cap `max_rank` on all TT ranks.
+pub fn tt_svd(t: &DenseTensor, max_rank: usize, seed: u64) -> TtCores {
+    let shape = t.shape().to_vec();
+    let d = shape.len();
+    let mut ranks = vec![1usize; d + 1];
+    let mut cores: Vec<Vec<f64>> = Vec::with_capacity(d);
+    // C starts as the full tensor as [N_1, rest]
+    let mut c = Mat::from_rows(
+        shape[0],
+        t.len() / shape[0],
+        t.data().iter().map(|&v| v as f64).collect(),
+    );
+    for k in 0..d - 1 {
+        let rows = ranks[k] * shape[k];
+        let cols = c.data.len() / rows;
+        let m = Mat::from_rows(rows, cols, c.data);
+        let r = max_rank.min(rows).min(cols);
+        let svd = truncated_svd(&m, r, seed.wrapping_add(k as u64));
+        ranks[k + 1] = svd.s.len();
+        cores.push(svd.u.data.clone()); // [r_{k-1} * N_k, r_k] row-major
+        // C <- diag(S) Vᵀ  => rows r_k, cols = cols
+        let rk = ranks[k + 1];
+        let mut next = Mat::zeros(rk, cols);
+        for i in 0..rk {
+            for j in 0..cols {
+                next.data[i * cols + j] = svd.s[i] * svd.v.at(j, i);
+            }
+        }
+        // reshape for next step: [r_k * N_{k+1}, cols / N_{k+1}]
+        c = next;
+    }
+    cores.push(c.data);
+    TtCores {
+        shape,
+        ranks,
+        cores,
+    }
+}
+
+/// Run the TTD baseline at a given uniform max rank.
+pub fn run(t: &DenseTensor, max_rank: usize, seed: u64) -> BaselineResult {
+    let timer = Timer::start();
+    let tt = tt_svd(t, max_rank, seed);
+    let approx = tt.reconstruct();
+    BaselineResult {
+        name: "TTD",
+        approx,
+        bytes: tt.num_params() * 8,
+        seconds: timer.seconds(),
+    }
+}
+
+/// Smallest uniform rank whose TT parameter count stays within `budget`
+/// doubles; at least 1.
+pub fn rank_for_budget(shape: &[usize], budget_params: usize) -> usize {
+    let mut r = 1usize;
+    loop {
+        let next = r + 1;
+        let params = tt_param_count(shape, next);
+        if params > budget_params {
+            return r;
+        }
+        r = next;
+        if r > 512 {
+            return r;
+        }
+    }
+}
+
+/// Σ r_{k-1} N_k r_k for a uniform rank (clipped at the ends like TT-SVD).
+pub fn tt_param_count(shape: &[usize], rank: usize) -> usize {
+    let d = shape.len();
+    let mut total = 0usize;
+    let mut ranks = vec![1usize; d + 1];
+    // forward/backward clipping identical to what TT-SVD can realise
+    let mut left = 1usize;
+    for k in 0..d {
+        left = (left * shape[k]).min(rank);
+        ranks[k + 1] = left;
+    }
+    let mut right = 1usize;
+    for k in (1..=d).rev() {
+        right = (right * shape[k - 1]).min(rank);
+        ranks[k - 1] = ranks[k - 1].min(right);
+    }
+    ranks[0] = 1;
+    ranks[d] = 1;
+    for k in 0..d {
+        total += ranks[k] * shape[k] * ranks[k + 1];
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tt_random_tensor(shape: &[usize], rank: usize, seed: u64) -> DenseTensor {
+        // generate an exactly TT-rank-`rank` tensor from random cores
+        let mut rng = crate::util::Pcg64::seeded(seed);
+        let d = shape.len();
+        let mut ranks = vec![rank; d + 1];
+        ranks[0] = 1;
+        ranks[d] = 1;
+        let cores: Vec<Vec<f64>> = (0..d)
+            .map(|k| {
+                (0..ranks[k] * shape[k] * ranks[k + 1])
+                    .map(|_| rng.normal() as f64 * 0.5)
+                    .collect()
+            })
+            .collect();
+        TtCores {
+            shape: shape.to_vec(),
+            ranks,
+            cores,
+        }
+        .reconstruct()
+    }
+
+    #[test]
+    fn recovers_exact_tt_tensor() {
+        let t = tt_random_tensor(&[6, 7, 5], 3, 0);
+        let tt = tt_svd(&t, 3, 1);
+        let rec = tt.reconstruct();
+        let fit = crate::metrics::fitness(t.data(), rec.data());
+        assert!(fit > 0.999, "fit={fit}");
+    }
+
+    #[test]
+    fn full_rank_is_lossless() {
+        let t = DenseTensor::random_uniform(&[4, 5, 3], 2);
+        let tt = tt_svd(&t, 64, 0);
+        let rec = tt.reconstruct();
+        let fit = crate::metrics::fitness(t.data(), rec.data());
+        assert!(fit > 0.9999, "fit={fit}");
+    }
+
+    #[test]
+    fn entry_matches_reconstruct() {
+        let t = DenseTensor::random_uniform(&[5, 4, 6], 3);
+        let tt = tt_svd(&t, 3, 0);
+        let rec = tt.reconstruct();
+        let mut rng = crate::util::Pcg64::seeded(1);
+        for _ in 0..50 {
+            let idx = [rng.below(5), rng.below(4), rng.below(6)];
+            let want = rec.at(&idx) as f64;
+            let got = tt.entry(&idx);
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn higher_rank_never_worse() {
+        let t = DenseTensor::random_uniform(&[8, 9, 7], 4);
+        let f2 = run(&t, 2, 0).fitness(&t);
+        let f6 = run(&t, 6, 0).fitness(&t);
+        assert!(f6 >= f2 - 1e-9, "{f2} vs {f6}");
+    }
+
+    #[test]
+    fn param_count_matches_tt_svd() {
+        let shape = [6usize, 7, 5];
+        for rank in [1usize, 2, 3, 8] {
+            let t = DenseTensor::random_uniform(&shape, 5);
+            let tt = tt_svd(&t, rank, 0);
+            assert_eq!(tt.num_params(), tt_param_count(&shape, rank), "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn rank_for_budget_monotone() {
+        let shape = [20usize, 30, 25];
+        let r1 = rank_for_budget(&shape, 1000);
+        let r2 = rank_for_budget(&shape, 10_000);
+        assert!(r2 >= r1);
+        assert!(tt_param_count(&shape, r2) <= 10_000);
+    }
+}

@@ -1,0 +1,187 @@
+//! Tucker Decomposition via HOSVD initialisation + HOOI refinement (the
+//! paper's TKD baseline, Tucker 1966).
+
+use super::{fold_back, unfold, BaselineResult};
+use crate::linalg::{truncated_svd, Mat};
+use crate::metrics::Timer;
+use crate::tensor::DenseTensor;
+
+/// Tucker model: core `[r_1 .. r_d]` + factor matrices `[N_k, r_k]`.
+#[derive(Debug, Clone)]
+pub struct TuckerModel {
+    pub shape: Vec<usize>,
+    pub ranks: Vec<usize>,
+    pub core: DenseTensor,
+    pub factors: Vec<Mat>,
+}
+
+impl TuckerModel {
+    pub fn num_params(&self) -> usize {
+        self.core.len()
+            + self
+                .shape
+                .iter()
+                .zip(&self.ranks)
+                .map(|(&n, &r)| n * r)
+                .sum::<usize>()
+    }
+
+    pub fn reconstruct(&self) -> DenseTensor {
+        // successively expand each mode: X = G ×_1 U_1 ×_2 U_2 ...
+        let mut cur = self.core.clone();
+        for k in 0..self.shape.len() {
+            cur = mode_product(&cur, &self.factors[k], k, false);
+        }
+        cur
+    }
+}
+
+/// Mode-k product: `transpose=false` computes `T ×_k U` (U is `[N_k, r_k]`,
+/// replaces mode length r_k by N_k); `transpose=true` applies `Uᵀ`.
+pub fn mode_product(t: &DenseTensor, u: &Mat, k: usize, transpose: bool) -> DenseTensor {
+    let m = unfold(t, k); // [len_k, rest]
+    let prod = if transpose {
+        u.t_matmul(&m) // [r_k, rest]
+    } else {
+        u.matmul(&m) // [N_k, rest]
+    };
+    let mut new_shape = t.shape().to_vec();
+    new_shape[k] = prod.rows;
+    fold_back(&prod, &new_shape, k)
+}
+
+/// HOSVD + `iters` HOOI sweeps at uniform rank cap.
+pub fn hooi(t: &DenseTensor, ranks: &[usize], iters: usize, seed: u64) -> TuckerModel {
+    let shape = t.shape().to_vec();
+    let d = shape.len();
+    let ranks: Vec<usize> = ranks
+        .iter()
+        .zip(&shape)
+        .map(|(&r, &n)| r.min(n).max(1))
+        .collect();
+    // HOSVD init: U_k = top singular vectors of the mode-k unfolding.
+    let mut factors: Vec<Mat> = (0..d)
+        .map(|k| {
+            let m = unfold(t, k);
+            truncated_svd(&m, ranks[k], seed.wrapping_add(k as u64)).u
+        })
+        .collect();
+    // HOOI sweeps
+    for it in 0..iters {
+        for k in 0..d {
+            // project on all modes but k, then SVD
+            let mut y = t.clone();
+            for m in 0..d {
+                if m != k {
+                    y = mode_product(&y, &factors[m], m, true);
+                }
+            }
+            let ym = unfold(&y, k);
+            factors[k] = truncated_svd(&ym, ranks[k], seed ^ ((it * d + k) as u64)).u;
+        }
+    }
+    // core = X ×_k U_kᵀ for all k
+    let mut core = t.clone();
+    for k in 0..d {
+        core = mode_product(&core, &factors[k], k, true);
+    }
+    TuckerModel {
+        shape,
+        ranks,
+        core,
+        factors,
+    }
+}
+
+/// Run the TKD baseline at a uniform rank.
+pub fn run(t: &DenseTensor, rank: usize, iters: usize, seed: u64) -> BaselineResult {
+    let timer = Timer::start();
+    let ranks = vec![rank; t.order()];
+    let model = hooi(t, &ranks, iters, seed);
+    let approx = model.reconstruct();
+    BaselineResult {
+        name: "TKD",
+        approx,
+        bytes: model.num_params() * 8,
+        seconds: timer.seconds(),
+    }
+}
+
+/// Largest uniform rank fitting the budget: r^d + r·ΣN_k ≤ budget.
+pub fn rank_for_budget(shape: &[usize], budget_params: usize) -> usize {
+    let d = shape.len() as u32;
+    let sum_n: usize = shape.iter().sum();
+    let mut r = 1usize;
+    while (r + 1).pow(d) + (r + 1) * sum_n <= budget_params && r < 256 {
+        r += 1;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn tucker_random(shape: &[usize], rank: usize, seed: u64) -> DenseTensor {
+        let mut rng = Pcg64::seeded(seed);
+        let core_shape = vec![rank; shape.len()];
+        let n: usize = core_shape.iter().product();
+        let core = DenseTensor::from_data(
+            &core_shape,
+            (0..n).map(|_| rng.normal()).collect(),
+        );
+        let factors: Vec<Mat> = shape
+            .iter()
+            .map(|&nk| Mat::gaussian(nk, rank, &mut rng))
+            .collect();
+        let model = TuckerModel {
+            shape: shape.to_vec(),
+            ranks: core_shape,
+            core,
+            factors,
+        };
+        model.reconstruct()
+    }
+
+    #[test]
+    fn mode_product_shapes() {
+        let t = DenseTensor::random_uniform(&[4, 5, 6], 0);
+        let u = Mat::gaussian(5, 2, &mut Pcg64::seeded(0));
+        let y = mode_product(&t, &u, 1, true);
+        assert_eq!(y.shape(), &[4, 2, 6]);
+        let z = mode_product(&y, &u, 1, false);
+        assert_eq!(z.shape(), &[4, 5, 6]);
+    }
+
+    #[test]
+    fn recovers_exact_tucker_tensor() {
+        let t = tucker_random(&[8, 7, 6], 3, 1);
+        let res = run(&t, 3, 3, 0);
+        let fit = res.fitness(&t);
+        assert!(fit > 0.999, "fit={fit}");
+    }
+
+    #[test]
+    fn full_rank_lossless() {
+        let t = DenseTensor::random_uniform(&[4, 4, 4], 3);
+        let res = run(&t, 4, 1, 0);
+        assert!(res.fitness(&t) > 0.9999);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let t = DenseTensor::random_uniform(&[5, 6, 7], 0);
+        let res = run(&t, 2, 1, 0);
+        assert_eq!(res.bytes, (8 + 2 * (5 + 6 + 7)) * 8);
+    }
+
+    #[test]
+    fn budget_rank_fits() {
+        let shape = [30usize, 40, 20];
+        for budget in [500usize, 5000, 50_000] {
+            let r = rank_for_budget(&shape, budget);
+            assert!(r.pow(3) + r * 90 <= budget.max(91 + 1), "r={r}");
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! MSB-first bit-level writer/reader over byte buffers.
+//!
+//! Used to pack the per-mode permutations at `⌈log2 N_k⌉` bits per index —
+//! exactly the `N_k log2 N_k`-bit accounting the paper charges reordering
+//! methods for — and by the Huffman coder.
+
+/// MSB-first bit writer.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `v`, most significant first. `n <= 64`.
+    pub fn write_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        for i in (0..n).rev() {
+            let bit = ((v >> i) & 1) as u8;
+            self.cur = (self.cur << 1) | bit;
+            self.nbits += 1;
+            if self.nbits == 8 {
+                self.buf.push(self.cur);
+                self.cur = 0;
+                self.nbits = 0;
+            }
+        }
+    }
+
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Number of bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush (zero-padding the final byte) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.cur <<= 8 - self.nbits;
+            self.buf.push(self.cur);
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Read `n` bits (MSB-first). Returns None on underrun.
+    pub fn read_bits(&mut self, n: u32) -> Option<u64> {
+        if self.pos + n as usize > self.buf.len() * 8 {
+            return None;
+        }
+        let mut v = 0u64;
+        for _ in 0..n {
+            let byte = self.buf[self.pos / 8];
+            let bit = (byte >> (7 - (self.pos % 8))) & 1;
+            v = (v << 1) | bit as u64;
+            self.pos += 1;
+        }
+        Some(v)
+    }
+
+    pub fn read_bit(&mut self) -> Option<bool> {
+        self.read_bits(1).map(|b| b == 1)
+    }
+
+    pub fn bits_remaining(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+}
+
+/// Pack a permutation of `[n]` at `⌈log2 n⌉` bits per element.
+pub fn pack_permutation(perm: &[usize]) -> Vec<u8> {
+    let n = perm.len();
+    let bits = crate::util::ceil_log2(n.max(2));
+    let mut w = BitWriter::new();
+    for &p in perm {
+        debug_assert!(p < n);
+        w.write_bits(p as u64, bits);
+    }
+    w.finish()
+}
+
+/// Inverse of [`pack_permutation`].
+pub fn unpack_permutation(buf: &[u8], n: usize) -> Option<Vec<usize>> {
+    let bits = crate::util::ceil_log2(n.max(2));
+    let mut r = BitReader::new(buf);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let v = r.read_bits(bits)? as usize;
+        if v >= n {
+            return None;
+        }
+        out.push(v);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_bits() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xffff, 16);
+        w.write_bits(0, 1);
+        w.write_bits(42, 13);
+        let bit_len = w.bit_len();
+        assert_eq!(bit_len, 33);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(3), Some(0b101));
+        assert_eq!(r.read_bits(16), Some(0xffff));
+        assert_eq!(r.read_bits(1), Some(0));
+        assert_eq!(r.read_bits(13), Some(42));
+    }
+
+    #[test]
+    fn underrun_returns_none() {
+        let buf = [0xab];
+        let mut r = BitReader::new(&buf);
+        assert!(r.read_bits(8).is_some());
+        assert!(r.read_bits(1).is_none());
+    }
+
+    #[test]
+    fn permutation_roundtrip_random() {
+        let mut rng = Pcg64::seeded(4);
+        for n in [1usize, 2, 3, 10, 100, 963, 1317] {
+            let perm = rng.permutation(n);
+            let packed = pack_permutation(&perm);
+            // byte size matches the paper's N ceil(log2 N) bits accounting
+            let bits = crate::util::ceil_log2(n.max(2)) as usize;
+            assert_eq!(packed.len(), (n * bits + 7) / 8);
+            let got = unpack_permutation(&packed, n).unwrap();
+            assert_eq!(got, perm);
+        }
+    }
+
+    #[test]
+    fn unpack_rejects_out_of_range() {
+        // all-ones buffer decodes to values >= n for non-power-of-two n
+        let buf = vec![0xff; 8];
+        assert!(unpack_permutation(&buf, 5).is_none());
+    }
+}

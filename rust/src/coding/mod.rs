@@ -1,0 +1,13 @@
+//! Lossless coding substrate: bit-level IO, canonical Huffman, run-length
+//! encoding and scalar quantisers. Powers the `.tcz` permutation packing
+//! and the SZ3-like / TTHRESH-like baselines.
+
+pub mod bitio;
+pub mod huffman;
+pub mod quantize;
+pub mod rle;
+
+pub use bitio::{BitReader, BitWriter};
+pub use huffman::{huffman_decode, huffman_encode};
+pub use quantize::{dequantize_uniform, quantize_uniform};
+pub use rle::{rle_decode, rle_encode};

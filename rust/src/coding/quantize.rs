@@ -1,0 +1,139 @@
+//! Scalar quantisers: uniform mid-rise quantisation (SZ-style error-bounded
+//! coding) and f32 -> f16 narrowing for compact parameter storage.
+
+/// Quantise values to integer bins of width `2*abs_err`, centred so the
+/// reconstruction error is at most `abs_err`. Returns (bins, offset) where
+/// stored symbols are `bin - offset >= 0`.
+pub fn quantize_uniform(values: &[f32], abs_err: f32) -> (Vec<i64>, f64) {
+    let step = (2.0 * abs_err) as f64;
+    let bins = values
+        .iter()
+        .map(|&v| (v as f64 / step).round() as i64)
+        .collect();
+    (bins, step)
+}
+
+/// Inverse of [`quantize_uniform`] (second element is the step width).
+pub fn dequantize_uniform(bins: &[i64], step: f64) -> Vec<f32> {
+    bins.iter().map(|&b| (b as f64 * step) as f32).collect()
+}
+
+/// IEEE 754 binary16 encode (round-to-nearest-even), no f16 type needed.
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32;
+    let mut frac = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if frac != 0 { 0x200 } else { 0 };
+    }
+    exp = exp - 127 + 15;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp <= 0 {
+        // subnormal or zero
+        if exp < -10 {
+            return sign;
+        }
+        frac |= 0x0080_0000;
+        let shift = (14 - exp) as u32;
+        let sub = frac >> shift;
+        let rem = frac & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let rounded = sub + u32::from(rem > half || (rem == half && (sub & 1) == 1));
+        return sign | rounded as u16;
+    }
+    let sub = frac >> 13;
+    let rem = frac & 0x1fff;
+    let mut out = ((exp as u32) << 10) | sub;
+    if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+        out += 1; // may carry into exponent — still correct
+    }
+    sign | out as u16
+}
+
+/// IEEE 754 binary16 decode.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign
+        } else {
+            // subnormal: normalise
+            let mut e = -1i32;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            f &= 0x3ff;
+            sign | (((127 - 15 + e + 1) as u32) << 23) | (f << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (frac << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn quantize_respects_error_bound() {
+        let mut rng = Pcg64::seeded(0);
+        let vals: Vec<f32> = (0..10_000).map(|_| rng.normal() * 10.0).collect();
+        for abs_err in [0.5f32, 0.01, 1e-4] {
+            let (bins, step) = quantize_uniform(&vals, abs_err);
+            let rec = dequantize_uniform(&bins, step);
+            for (v, r) in vals.iter().zip(&rec) {
+                assert!(
+                    (v - r).abs() <= abs_err * 1.01, // f32 step rounding slack
+                    "err {} > {abs_err}",
+                    (v - r).abs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f16_roundtrip_exact_for_representables() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v);
+        }
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..10_000 {
+            let v = rng.normal() * 10.0;
+            let r = f16_bits_to_f32(f32_to_f16_bits(v));
+            let rel = ((v - r) / v.abs().max(1e-3)).abs();
+            assert!(rel < 1e-3, "v={v} r={r}");
+        }
+    }
+
+    #[test]
+    fn f16_specials() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_bits_to_f32(0x7c01).is_nan() || f16_bits_to_f32(0x7e00).is_nan());
+        assert_eq!(f32_to_f16_bits(1e10), 0x7c00); // overflow to inf
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-0.0)).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 6e-8f32;
+        let r = f16_bits_to_f32(f32_to_f16_bits(tiny));
+        assert!((r - tiny).abs() < 6e-8);
+    }
+}

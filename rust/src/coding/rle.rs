@@ -1,0 +1,73 @@
+//! Byte-oriented run-length encoding (TTHRESH-style coefficient coding).
+
+/// Encode as (value, run_len) pairs with u8 run lengths (runs split at 255).
+pub fn rle_encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < data.len() {
+        let v = data[i];
+        let mut run = 1usize;
+        while i + run < data.len() && data[i + run] == v && run < 255 {
+            run += 1;
+        }
+        out.push(v);
+        out.push(run as u8);
+        i += run;
+    }
+    out
+}
+
+/// Inverse of [`rle_encode`].
+pub fn rle_decode(data: &[u8]) -> Option<Vec<u8>> {
+    if data.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::new();
+    for pair in data.chunks_exact(2) {
+        let (v, run) = (pair[0], pair[1] as usize);
+        if run == 0 {
+            return None;
+        }
+        out.extend(std::iter::repeat(v).take(run));
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_runs() {
+        let data = [0u8, 0, 0, 1, 1, 2, 0, 0, 0, 0];
+        let enc = rle_encode(&data);
+        assert_eq!(rle_decode(&enc).unwrap(), data);
+        assert!(enc.len() < data.len());
+    }
+
+    #[test]
+    fn roundtrip_long_run() {
+        let data = vec![9u8; 1000];
+        let enc = rle_encode(&data);
+        assert_eq!(rle_decode(&enc).unwrap(), data);
+        assert_eq!(enc.len(), 2 * ((1000 + 254) / 255));
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Pcg64::seeded(0);
+        let data: Vec<u8> = (0..5000).map(|_| (rng.below(4)) as u8).collect();
+        assert_eq!(rle_decode(&rle_encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn empty() {
+        assert_eq!(rle_decode(&rle_encode(&[])).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn rejects_odd_length() {
+        assert!(rle_decode(&[1u8, 2, 3]).is_none());
+    }
+}

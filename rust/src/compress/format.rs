@@ -1,0 +1,269 @@
+//! `.tcz` binary serialisation.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "TCZ1" | u8 version | u8 variant | u8 dtype | u8 d
+//! u16 dp | u16 vocab | u16 h | u16 r
+//! f32 mean | f32 std | f64 fitness
+//! u64 shape[d]
+//! u8 factors[d][dp]
+//! u64 n_params | params (dtype-encoded, artifact order, flattened)
+//! per mode: packed π_k at ⌈log2 N_k⌉ bits per index
+//! ```
+
+use super::CompressedModel;
+use crate::coding::bitio::{pack_permutation, unpack_permutation};
+use crate::coding::quantize::{f16_bits_to_f32, f32_to_f16_bits};
+use crate::config::ParamDtype;
+use crate::nttd::{ModelParams, Variant};
+use crate::reorder::Orders;
+use crate::tensor::FoldSpec;
+use crate::util::ceil_log2;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"TCZ1";
+const VERSION: u8 = 1;
+
+fn encode_params(flat: &[f32], dtype: ParamDtype, out: &mut Vec<u8>) {
+    match dtype {
+        ParamDtype::F64 => {
+            for &v in flat {
+                out.extend_from_slice(&(v as f64).to_le_bytes());
+            }
+        }
+        ParamDtype::F32 => {
+            for &v in flat {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        ParamDtype::F16 => {
+            for &v in flat {
+                out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+            }
+        }
+    }
+}
+
+fn decode_params(bytes: &[u8], dtype: ParamDtype, n: usize) -> Result<Vec<f32>> {
+    let need = n * dtype.bytes();
+    if bytes.len() < need {
+        bail!("param payload truncated: {} < {need}", bytes.len());
+    }
+    let out = match dtype {
+        ParamDtype::F64 => bytes[..need]
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+            .collect(),
+        ParamDtype::F32 => bytes[..need]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+        ParamDtype::F16 => bytes[..need]
+            .chunks_exact(2)
+            .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+            .collect(),
+    };
+    Ok(out)
+}
+
+/// Serialise a model to a `.tcz` file.
+pub fn save_tcz(path: &Path, m: &CompressedModel) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.push(VERSION);
+    buf.push(match m.params.variant {
+        Variant::Tc => 0,
+        Variant::Nk => 1,
+    });
+    buf.push(m.param_dtype.tag());
+    let d = m.spec.d();
+    if d > 255 || m.spec.dp > u16::MAX as usize {
+        bail!("tensor order out of range");
+    }
+    buf.push(d as u8);
+    buf.extend_from_slice(&(m.spec.dp as u16).to_le_bytes());
+    buf.extend_from_slice(&(m.params.vocab as u16).to_le_bytes());
+    buf.extend_from_slice(&(m.params.h as u16).to_le_bytes());
+    buf.extend_from_slice(&(m.params.r as u16).to_le_bytes());
+    buf.extend_from_slice(&m.mean.to_le_bytes());
+    buf.extend_from_slice(&m.std.to_le_bytes());
+    buf.extend_from_slice(&m.fitness.to_le_bytes());
+    for &n in &m.spec.orig_shape {
+        buf.extend_from_slice(&(n as u64).to_le_bytes());
+    }
+    for row in &m.spec.factors {
+        for &f in row {
+            if f > 255 {
+                bail!("fold factor out of range");
+            }
+            buf.push(f as u8);
+        }
+    }
+    let flat = m.params.flatten();
+    buf.extend_from_slice(&(flat.len() as u64).to_le_bytes());
+    encode_params(&flat, m.param_dtype, &mut buf);
+    for perm in &m.orders.perms {
+        buf.extend_from_slice(&pack_permutation(perm));
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Deserialise a `.tcz` file.
+pub fn load_tcz(path: &Path) -> Result<CompressedModel> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut bytes)?;
+    let mut off = 0usize;
+    let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+        if *off + n > bytes.len() {
+            bail!("tcz truncated at offset {}", *off);
+        }
+        let s = &bytes[*off..*off + n];
+        *off += n;
+        Ok(s)
+    };
+    if take(&mut off, 4)? != MAGIC {
+        bail!("not a .tcz file");
+    }
+    let version = take(&mut off, 1)?[0];
+    if version != VERSION {
+        bail!("unsupported tcz version {version}");
+    }
+    let variant = match take(&mut off, 1)?[0] {
+        0 => Variant::Tc,
+        1 => Variant::Nk,
+        v => bail!("bad variant {v}"),
+    };
+    let dtype = ParamDtype::from_tag(take(&mut off, 1)?[0])?;
+    let d = take(&mut off, 1)?[0] as usize;
+    let dp = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+    let vocab = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+    let h = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+    let r = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+    let mean = f32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
+    let std = f32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
+    let fitness = f64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+    let mut shape = Vec::with_capacity(d);
+    for _ in 0..d {
+        shape.push(u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize);
+    }
+    let mut factors = vec![vec![0usize; dp]; d];
+    for row in factors.iter_mut() {
+        for v in row.iter_mut() {
+            *v = take(&mut off, 1)?[0] as usize;
+        }
+    }
+    let spec = FoldSpec::from_factors(&shape, &factors);
+    let n_params = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
+    let flat = decode_params(&bytes[off..], dtype, n_params)?;
+    off += n_params * dtype.bytes();
+    let params = ModelParams::from_flat(variant, dp, vocab, h, r, &flat)?;
+    let mut perms = Vec::with_capacity(d);
+    for &n in &shape {
+        let bits = ceil_log2(n.max(2)) as usize;
+        let nbytes = (n * bits).div_ceil(8);
+        let packed = take(&mut off, nbytes)?;
+        let perm = unpack_permutation(packed, n)
+            .with_context(|| "corrupt permutation block")?;
+        perms.push(perm);
+    }
+    let orders = Orders { perms };
+    if !orders.is_valid() {
+        bail!("permutations in file are not bijections");
+    }
+    Ok(CompressedModel {
+        spec,
+        orders,
+        params,
+        mean,
+        std,
+        fitness,
+        param_dtype: dtype,
+        train_seconds: 0.0,
+        init_seconds: 0.0,
+        epochs_run: 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::toy_model;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("tcz_format_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let m = toy_model(0);
+        let p = tmp("a.tcz");
+        save_tcz(&p, &m).unwrap();
+        let l = load_tcz(&p).unwrap();
+        assert_eq!(l.params.bufs, m.params.bufs);
+        assert_eq!(l.orders, m.orders);
+        assert_eq!(l.spec, m.spec);
+        assert_eq!(l.mean, m.mean);
+        assert_eq!(l.std, m.std);
+        assert_eq!(l.fitness, m.fitness);
+    }
+
+    #[test]
+    fn roundtrip_f16_lossy_but_close() {
+        let mut m = toy_model(1);
+        m.param_dtype = ParamDtype::F16;
+        let p = tmp("b.tcz");
+        save_tcz(&p, &m).unwrap();
+        let l = load_tcz(&p).unwrap();
+        for (a, b) in m.params.flatten().iter().zip(l.params.flatten().iter()) {
+            assert!((a - b).abs() <= a.abs().max(1e-2) * 2e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_f64() {
+        let mut m = toy_model(2);
+        m.param_dtype = ParamDtype::F64;
+        let p = tmp("c.tcz");
+        save_tcz(&p, &m).unwrap();
+        let l = load_tcz(&p).unwrap();
+        assert_eq!(l.params.bufs, m.params.bufs);
+    }
+
+    #[test]
+    fn file_size_close_to_reported() {
+        let m = toy_model(3);
+        let p = tmp("d.tcz");
+        save_tcz(&p, &m).unwrap();
+        let on_disk = std::fs::metadata(&p).unwrap().len() as usize;
+        let reported = m.reported_size_bytes();
+        // header overhead only (few dozen bytes)
+        assert!(on_disk >= reported);
+        assert!(on_disk < reported + 256, "{on_disk} vs {reported}");
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let m = toy_model(4);
+        let p = tmp("e.tcz");
+        save_tcz(&p, &m).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[0] = b'X';
+        let p2 = tmp("e2.tcz");
+        std::fs::write(&p2, &bytes).unwrap();
+        assert!(load_tcz(&p2).is_err());
+        // truncation
+        let p3 = tmp("e3.tcz");
+        let orig = std::fs::read(&p).unwrap();
+        std::fs::write(&p3, &orig[..orig.len() / 2]).unwrap();
+        assert!(load_tcz(&p3).is_err());
+    }
+}

@@ -1,0 +1,258 @@
+//! Configuration system: typed training/serving configs, a small
+//! `key = value` config-file parser, and CLI-style override handling.
+//!
+//! No serde in the vendored dependency set, so the parser is hand-rolled:
+//! it accepts `key = value` lines, `#` comments, and blank lines, and the
+//! same `key=value` syntax in CLI overrides, so
+//! `tensorcodec compress --config run.toml --set epochs=50` works with a
+//! single code path.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parameter storage precision for the `.tcz` container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamDtype {
+    F64,
+    F32,
+    F16,
+}
+
+impl ParamDtype {
+    pub fn bytes(&self) -> usize {
+        match self {
+            ParamDtype::F64 => 8,
+            ParamDtype::F32 => 4,
+            ParamDtype::F16 => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f64" => Ok(ParamDtype::F64),
+            "f32" => Ok(ParamDtype::F32),
+            "f16" => Ok(ParamDtype::F16),
+            other => bail!("unknown param dtype {other} (f64|f32|f16)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ParamDtype::F64 => "f64",
+            ParamDtype::F32 => "f32",
+            ParamDtype::F16 => "f16",
+        }
+    }
+
+    pub fn tag(&self) -> u8 {
+        match self {
+            ParamDtype::F64 => 0,
+            ParamDtype::F32 => 1,
+            ParamDtype::F16 => 2,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<Self> {
+        match t {
+            0 => Ok(ParamDtype::F64),
+            1 => Ok(ParamDtype::F32),
+            2 => Ok(ParamDtype::F16),
+            other => bail!("bad dtype tag {other}"),
+        }
+    }
+}
+
+/// Full configuration for one TensorCodec compression run (Alg. 1).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// TT rank R.
+    pub rank: usize,
+    /// LSTM hidden dimension h.
+    pub hidden: usize,
+    /// Maximum training epochs.
+    pub epochs: usize,
+    /// Adam learning rate.
+    pub lr: f32,
+    /// RNG seed (init, shuffling, LSH).
+    pub seed: u64,
+    /// Update π every this many epochs (Alg. 3). 0 disables repeated
+    /// reordering (the paper's TENSORCODEC-R ablation).
+    pub reorder_every: usize,
+    /// Skip the metric-TSP order initialisation (TENSORCODEC-T ablation).
+    pub no_tsp_init: bool,
+    /// Entries sampled per slice when evaluating swap candidates
+    /// (usize::MAX = exact full-slice evaluation).
+    pub swap_samples: usize,
+    /// Force a minimum folded order d' (0 = automatic).
+    pub min_dp: usize,
+    /// Stop when relative fitness improvement over a window drops below
+    /// this threshold.
+    pub tol: f64,
+    /// Storage precision for parameters in the `.tcz` output.
+    pub param_dtype: ParamDtype,
+    /// Cap on train batches per epoch (subsampling for huge tensors;
+    /// usize::MAX = full epoch).
+    pub max_batches_per_epoch: usize,
+    /// Print progress.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            rank: 8,
+            hidden: 8,
+            epochs: 40,
+            lr: 5e-3,
+            seed: 0,
+            reorder_every: 5,
+            no_tsp_init: false,
+            swap_samples: 512,
+            min_dp: 0,
+            tol: 1e-4,
+            param_dtype: ParamDtype::F32,
+            max_batches_per_epoch: usize::MAX,
+            verbose: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply one `key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "rank" | "r" => self.rank = value.parse().context("rank")?,
+            "hidden" | "h" => self.hidden = value.parse().context("hidden")?,
+            "epochs" => self.epochs = value.parse().context("epochs")?,
+            "lr" => self.lr = value.parse().context("lr")?,
+            "seed" => self.seed = value.parse().context("seed")?,
+            "reorder_every" => self.reorder_every = value.parse().context("reorder_every")?,
+            "no_tsp_init" => self.no_tsp_init = value.parse().context("no_tsp_init")?,
+            "swap_samples" => self.swap_samples = value.parse().context("swap_samples")?,
+            "min_dp" => self.min_dp = value.parse().context("min_dp")?,
+            "tol" => self.tol = value.parse().context("tol")?,
+            "param_dtype" => self.param_dtype = ParamDtype::parse(value)?,
+            "max_batches_per_epoch" => {
+                self.max_batches_per_epoch = value.parse().context("max_batches_per_epoch")?
+            }
+            "verbose" => self.verbose = value.parse().context("verbose")?,
+            other => bail!("unknown config key `{other}`"),
+        }
+        Ok(())
+    }
+
+    /// Load from a `key = value` file.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let mut cfg = TrainConfig::default();
+        for (k, v) in parse_kv_file(path)? {
+            cfg.set(&k, &v)?;
+        }
+        Ok(cfg)
+    }
+}
+
+/// Parse a `key = value` file into ordered pairs.
+pub fn parse_kv_file(path: &Path) -> Result<Vec<(String, String)>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read config {}", path.display()))?;
+    parse_kv_str(&text)
+}
+
+/// Parse `key = value` lines (comments with `#`).
+pub fn parse_kv_str(text: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        out.push((
+            k.trim().to_string(),
+            v.trim().trim_matches('"').to_string(),
+        ));
+    }
+    Ok(out)
+}
+
+/// Ordered CLI-style overrides (`--set k=v` accumulates).
+pub fn apply_overrides(cfg: &mut TrainConfig, overrides: &[String]) -> Result<()> {
+    for ov in overrides {
+        let (k, v) = ov
+            .split_once('=')
+            .with_context(|| format!("override `{ov}`: expected key=value"))?;
+        cfg.set(k.trim(), v.trim())?;
+    }
+    Ok(())
+}
+
+/// Simple free-form key-value map for experiment manifests.
+pub type KvMap = BTreeMap<String, String>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kv_with_comments() {
+        let kvs = parse_kv_str("# comment\nrank = 10\n\nlr=0.001 # tail\n").unwrap();
+        assert_eq!(
+            kvs,
+            vec![
+                ("rank".to_string(), "10".to_string()),
+                ("lr".to_string(), "0.001".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn config_set_roundtrip() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("rank", "12").unwrap();
+        cfg.set("h", "6").unwrap();
+        cfg.set("param_dtype", "f16").unwrap();
+        cfg.set("no_tsp_init", "true").unwrap();
+        assert_eq!(cfg.rank, 12);
+        assert_eq!(cfg.hidden, 6);
+        assert_eq!(cfg.param_dtype, ParamDtype::F16);
+        assert!(cfg.no_tsp_init);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = TrainConfig::default();
+        assert!(cfg.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn overrides_apply_in_order() {
+        let mut cfg = TrainConfig::default();
+        apply_overrides(
+            &mut cfg,
+            &["epochs=5".to_string(), "epochs=9".to_string()],
+        )
+        .unwrap();
+        assert_eq!(cfg.epochs, 9);
+    }
+
+    #[test]
+    fn dtype_tags_roundtrip() {
+        for d in [ParamDtype::F64, ParamDtype::F32, ParamDtype::F16] {
+            assert_eq!(ParamDtype::from_tag(d.tag()).unwrap(), d);
+        }
+        assert!(ParamDtype::from_tag(9).is_err());
+    }
+
+    #[test]
+    fn config_file_parse() {
+        let dir = std::env::temp_dir().join("tcz_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.conf");
+        std::fs::write(&p, "rank = 6\nhidden = 6\nepochs = 3\n").unwrap();
+        let cfg = TrainConfig::from_file(&p).unwrap();
+        assert_eq!((cfg.rank, cfg.hidden, cfg.epochs), (6, 6, 3));
+    }
+}

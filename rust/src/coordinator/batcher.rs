@@ -1,0 +1,165 @@
+//! Dynamic request batcher for the decompression service.
+//!
+//! Decode requests (entry coordinates) arrive on a channel from many client
+//! threads; the batcher coalesces them into blocks of up to `max_batch`
+//! entries, flushing either when full or after `max_wait` — the same
+//! batching policy a serving system (vLLM-style router) applies, adapted to
+//! entry decoding. Backpressure is a bounded queue: producers block when
+//! the service is saturated.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::time::{Duration, Instant};
+
+/// One decode request: entry coordinates + a reply channel.
+pub struct DecodeRequest {
+    pub coords: Vec<usize>,
+    pub reply: SyncSender<f32>,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_depth: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8192,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 65536,
+        }
+    }
+}
+
+/// Create the request channel with the policy's backpressure bound.
+pub fn request_channel(policy: &BatchPolicy) -> (SyncSender<DecodeRequest>, Receiver<DecodeRequest>) {
+    sync_channel(policy.queue_depth)
+}
+
+/// Collect the next batch from the queue: waits for the first request
+/// (polling `stop`), then drains greedily until `max_batch` or `max_wait`
+/// elapses. Returns `None` when the channel is closed and drained, or when
+/// `stop` is set while idle (live handles would otherwise keep the channel
+/// open forever).
+pub fn next_batch(
+    rx: &Receiver<DecodeRequest>,
+    policy: &BatchPolicy,
+    stop: &std::sync::atomic::AtomicBool,
+) -> Option<Vec<DecodeRequest>> {
+    use std::sync::atomic::Ordering;
+    let first = loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(req) => break req,
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Acquire) {
+                    return None;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return None,
+        }
+    };
+    let mut batch = Vec::with_capacity(policy.max_batch.min(1024));
+    batch.push(first);
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(req) => batch.push(req),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::thread;
+
+    fn stop_flag() -> AtomicBool {
+        AtomicBool::new(false)
+    }
+
+    #[test]
+    fn batches_coalesce() {
+        let stop = stop_flag();
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+            queue_depth: 64,
+        };
+        let (tx, rx) = request_channel(&policy);
+        let producer = thread::spawn(move || {
+            for i in 0..20usize {
+                let (rtx, _rrx) = sync_channel(1);
+                tx.send(DecodeRequest {
+                    coords: vec![i],
+                    reply: rtx,
+                })
+                .unwrap();
+            }
+        });
+        producer.join().unwrap();
+        let b1 = next_batch(&rx, &policy, &stop).unwrap();
+        assert_eq!(b1.len(), 8);
+        let b2 = next_batch(&rx, &policy, &stop).unwrap();
+        assert_eq!(b2.len(), 8);
+        let b3 = next_batch(&rx, &policy, &stop).unwrap();
+        assert_eq!(b3.len(), 4);
+        // channel closed + drained -> None
+        assert!(next_batch(&rx, &policy, &stop).is_none());
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let stop = stop_flag();
+        let policy = BatchPolicy {
+            max_batch: 1000,
+            max_wait: Duration::from_millis(5),
+            queue_depth: 16,
+        };
+        let (tx, rx) = request_channel(&policy);
+        let (rtx, _rrx) = sync_channel(1);
+        tx.send(DecodeRequest {
+            coords: vec![0],
+            reply: rtx,
+        })
+        .unwrap();
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy, &stop).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+        drop(tx);
+    }
+
+    #[test]
+    fn none_on_closed_channel() {
+        let stop = stop_flag();
+        let policy = BatchPolicy::default();
+        let (tx, rx) = request_channel(&policy);
+        drop(tx);
+        assert!(next_batch(&rx, &policy, &stop).is_none());
+    }
+
+    #[test]
+    fn stop_flag_unblocks_idle_wait() {
+        // live sender (simulating a leaked DecodeHandle) + stop set:
+        // next_batch must return None instead of blocking forever
+        let policy = BatchPolicy::default();
+        let (tx, rx) = request_channel(&policy);
+        let stop = stop_flag();
+        stop.store(true, Ordering::Release);
+        let t0 = Instant::now();
+        assert!(next_batch(&rx, &policy, &stop).is_none());
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        drop(tx);
+    }
+}

@@ -1,0 +1,8 @@
+//! The L3 coordinator: TensorCodec's compression loop (Alg. 1), bulk
+//! reconstruction, and the batched decompression service.
+
+pub mod batcher;
+pub mod server;
+pub mod trainer;
+
+pub use trainer::{Reconstructor, TrainConfig, Trainer};

@@ -1,0 +1,220 @@
+//! Threaded decompression server.
+//!
+//! Architecture (Python-free request path):
+//!
+//! ```text
+//!   clients ──► bounded request queue ──► batcher ──► ForwardExec (XLA)
+//!      ▲                                                 │
+//!      └───────────────── per-request reply channels ◄───┘
+//! ```
+//!
+//! The XLA executor is not `Send`, so it lives on the single executor
+//! thread; clients talk to it through [`DecodeHandle`] (cloneable,
+//! thread-safe). The bounded queue provides backpressure; the batcher
+//! turns point queries into full artifact batches.
+
+use super::batcher::{next_batch, request_channel, BatchPolicy, DecodeRequest};
+use crate::compress::CompressedModel;
+use crate::coordinator::Reconstructor;
+use crate::runtime::{ForwardExec, Runtime};
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Client-side handle to the decode service.
+#[derive(Clone)]
+pub struct DecodeHandle {
+    tx: SyncSender<DecodeRequest>,
+    d: usize,
+}
+
+impl DecodeHandle {
+    /// Decode one entry (blocks until the batcher flushes).
+    pub fn get(&self, coords: &[usize]) -> Result<f32> {
+        assert_eq!(coords.len(), self.d);
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(DecodeRequest {
+                coords: coords.to_vec(),
+                reply: rtx,
+            })
+            .ok()
+            .context("decode service stopped")?;
+        rrx.recv().context("decode service dropped reply")
+    }
+}
+
+/// A running decode service (executor thread + batcher).
+pub struct DecodeServer {
+    handle: Option<JoinHandle<Result<ServerStats>>>,
+    tx: Option<SyncSender<DecodeRequest>>,
+    stop: Arc<AtomicBool>,
+    d: usize,
+}
+
+/// Aggregate statistics reported by the executor thread at shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub execute_seconds: f64,
+}
+
+impl DecodeServer {
+    /// Spawn the executor thread for a compressed model.
+    pub fn start(model: CompressedModel, policy: BatchPolicy) -> Result<DecodeServer> {
+        let d = model.spec.d();
+        let (tx, rx) = request_channel(&policy);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_worker = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("tcz-decode".into())
+            .spawn(move || -> Result<ServerStats> {
+                let mut rt = Runtime::cpu()?;
+                let (variant, dp, h, r) = (
+                    model.params.variant.as_str(),
+                    model.spec.dp,
+                    model.params.h,
+                    model.params.r,
+                );
+                let bulk_info = rt.find(variant, "fwd", dp, h, r)?;
+                let mut bulk = ForwardExec::new(&mut rt, &bulk_info, &model.params)?;
+                // Latency-oriented small-batch artifact when available:
+                // point-query batches then pay a ~B=512 execute instead of
+                // padding out to the bulk batch (§Perf P1).
+                let mut small = rt
+                    .manifest()
+                    .find_batch(variant, "fwd", dp, h, r, 512)
+                    .cloned()
+                    .map(|info| ForwardExec::new(&mut rt, &info, &model.params))
+                    .transpose()?;
+                let mut stats = ServerStats::default();
+                let mut coords_flat: Vec<usize> = Vec::new();
+                let mut values: Vec<f32> = Vec::new();
+                while let Some(batch) = next_batch(&rx, &policy, &stop_worker) {
+                    coords_flat.clear();
+                    for req in &batch {
+                        coords_flat.extend_from_slice(&req.coords);
+                    }
+                    values.clear();
+                    let t0 = crate::metrics::Timer::start();
+                    {
+                        let fwd = match &mut small {
+                            Some(s) if batch.len() <= s.batch() => s,
+                            _ => &mut bulk,
+                        };
+                        let mut recon = Reconstructor::over_exec(fwd, &model);
+                        recon.decode(&coords_flat, &mut values)?;
+                    }
+                    stats.execute_seconds += t0.seconds();
+                    stats.requests += batch.len() as u64;
+                    stats.batches += 1;
+                    for (req, &v) in batch.iter().zip(&values) {
+                        let _ = req.reply.send(v); // client may have gone
+                    }
+                }
+                Ok(stats)
+            })?;
+        Ok(DecodeServer {
+            handle: Some(handle),
+            tx: Some(tx),
+            stop,
+            d,
+        })
+    }
+
+    /// A cloneable client handle.
+    pub fn handle(&self) -> DecodeHandle {
+        DecodeHandle {
+            tx: self.tx.as_ref().expect("server running").clone(),
+            d: self.d,
+        }
+    }
+
+    /// Stop accepting requests, drain, and return stats.
+    ///
+    /// Safe even when [`DecodeHandle`] clones are still alive: the worker
+    /// also polls the stop flag while idle.
+    pub fn shutdown(mut self) -> Result<ServerStats> {
+        self.stop.store(true, Ordering::Release);
+        drop(self.tx.take());
+        self.handle
+            .take()
+            .expect("not yet joined")
+            .join()
+            .map_err(|_| anyhow::anyhow!("decode thread panicked"))?
+    }
+}
+
+impl Drop for DecodeServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// TCP front-end: serves decode requests over a line protocol.
+///
+/// Protocol: client sends one entry per line as comma-separated original
+/// coordinates (`"3,17,201\n"`); server replies with the decoded value
+/// (`"42.5\n"`) or `"ERR <msg>\n"`. One thread per connection; all
+/// connections share the batcher, so concurrent clients are coalesced
+/// into large XLA batches automatically.
+pub fn serve_tcp(
+    model: CompressedModel,
+    addr: &str,
+    policy: BatchPolicy,
+    max_conns: usize,
+) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let shape = model.spec.orig_shape.clone();
+    let server = DecodeServer::start(model, policy)?;
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("bind {addr}"))?;
+    eprintln!("[tcz] serving decode requests on {addr} (shape {shape:?})");
+    let mut workers = Vec::new();
+    for conn in listener.incoming().take(max_conns) {
+        let stream = conn?;
+        let handle = server.handle();
+        let shape = shape.clone();
+        workers.push(std::thread::spawn(move || {
+            let peer = stream.peer_addr().ok();
+            let mut out = stream.try_clone().expect("clone stream");
+            let reader = BufReader::new(stream);
+            for line in reader.lines() {
+                let line = match line {
+                    Ok(l) => l,
+                    Err(_) => break,
+                };
+                let coords: Result<Vec<usize>, _> =
+                    line.trim().split(',').map(|s| s.trim().parse()).collect();
+                let reply = match coords {
+                    Ok(c)
+                        if c.len() == shape.len()
+                            && c.iter().zip(&shape).all(|(&i, &n)| i < n) =>
+                    {
+                        match handle.get(&c) {
+                            Ok(v) => format!("{v}\n"),
+                            Err(e) => format!("ERR {e}\n"),
+                        }
+                    }
+                    _ => format!("ERR bad coords (want {} dims in-range)\n", shape.len()),
+                };
+                if out.write_all(reply.as_bytes()).is_err() {
+                    break;
+                }
+            }
+            let _ = peer;
+        }));
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    server.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,454 @@
+//! The compression coordinator (paper Alg. 1).
+//!
+//! Alternates (a) minibatch Adam updates of the NTTD parameters through the
+//! fused train-step artifact and (b) reordering updates of π (Alg. 3:
+//! LSH-proposed disjoint swaps, accepted when they reduce the loss), until
+//! fitness converges or the epoch budget is exhausted. The Adam state is
+//! re-initialised after every accepted reorder round, exactly as the paper
+//! prescribes (the loss surface changes under π).
+//!
+//! All heavy compute flows through the AOT artifacts; this module only
+//! builds index/target batches and makes decisions.
+
+pub use crate::config::TrainConfig;
+
+use crate::compress::CompressedModel;
+use crate::metrics::Timer;
+use crate::nttd::{ModelParams, Variant};
+use crate::reorder::{lsh, tsp, Orders};
+use crate::runtime::{ForwardExec, Runtime, TrainExec};
+use crate::tensor::{DenseTensor, FoldSpec};
+use crate::util::Pcg64;
+use anyhow::{Context, Result};
+
+/// Compression trainer for one tensor.
+pub struct Trainer<'a> {
+    tensor: &'a DenseTensor,
+    cfg: TrainConfig,
+    pub variant: Variant,
+    spec: FoldSpec,
+    orders: Orders,
+    rt: Runtime,
+    texec: TrainExec,
+    fwd: ForwardExec,
+    mean: f32,
+    std: f32,
+    rng: Pcg64,
+    init_seconds: f64,
+    /// scratch buffers (avoid per-batch allocation)
+    idx_buf: Vec<i32>,
+    tgt_buf: Vec<f32>,
+    w_buf: Vec<f32>,
+    coord_buf: Vec<usize>,
+    orig_buf: Vec<usize>,
+}
+
+impl<'a> Trainer<'a> {
+    /// Build a TensorCodec trainer (NTTD variant).
+    pub fn new(tensor: &'a DenseTensor, cfg: TrainConfig) -> Result<Self> {
+        Self::with_variant(tensor, cfg, Variant::Tc)
+    }
+
+    /// Build a trainer for either variant (Nk = NeuKron-style baseline).
+    pub fn with_variant(
+        tensor: &'a DenseTensor,
+        cfg: TrainConfig,
+        variant: Variant,
+    ) -> Result<Self> {
+        let mut rt = Runtime::cpu()?;
+        let vocab = rt.manifest().vocab;
+        let (h, r) = match variant {
+            Variant::Tc => (cfg.hidden, cfg.rank),
+            Variant::Nk => (cfg.hidden, 0),
+        };
+        // The folded order must have an AOT artifact; bump d' upward until
+        // one exists (small tensors may fold below the artifact matrix).
+        let mut spec = FoldSpec::auto(tensor.shape(), cfg.min_dp)
+            .context("cannot fold input tensor")?;
+        while rt
+            .manifest()
+            .find(variant.as_str(), "train", spec.dp, h, r)
+            .is_none()
+            && spec.dp < crate::tensor::fold::MAX_DP
+        {
+            spec = FoldSpec::auto(tensor.shape(), spec.dp + 1)?;
+        }
+        let train_info = rt.find(variant.as_str(), "train", spec.dp, h, r)?;
+        let fwd_info = rt.find(variant.as_str(), "fwd", spec.dp, h, r)?;
+        let params = match variant {
+            Variant::Tc => ModelParams::init_tc(cfg.seed, spec.dp, vocab, h, r),
+            Variant::Nk => ModelParams::init_nk(cfg.seed, spec.dp, vocab, h),
+        };
+        let texec = TrainExec::new(&mut rt, &train_info, params.clone())?;
+        let fwd = ForwardExec::new(&mut rt, &fwd_info, &params)?;
+
+        let (mean, std) = tensor.mean_std();
+        let std = if std > 1e-12 { std } else { 1.0 };
+        let rng = Pcg64::seeded(cfg.seed ^ 0x7e45);
+
+        // Order initialisation (2-approx metric TSP on slice distances),
+        // timed separately so the Fig. 5 bench can report per-phase costs.
+        let t0 = Timer::start();
+        let orders = if cfg.no_tsp_init {
+            Orders::identity(tensor.shape())
+        } else {
+            Orders {
+                perms: (0..tensor.order())
+                    .map(|k| tsp::init_order(tensor, k, cfg.seed.wrapping_add(k as u64)))
+                    .collect(),
+            }
+        };
+        let init_seconds = t0.seconds();
+
+        let dp = spec.dp;
+        let b = texec.batch();
+        Ok(Trainer {
+            tensor,
+            cfg,
+            variant,
+            spec,
+            orders,
+            rt,
+            texec,
+            fwd,
+            mean,
+            std,
+            rng,
+            init_seconds,
+            idx_buf: vec![0i32; b * dp],
+            tgt_buf: vec![0f32; b],
+            w_buf: vec![0f32; b],
+            coord_buf: vec![0usize; tensor.order()],
+            orig_buf: vec![0usize; tensor.order()],
+        })
+    }
+
+    pub fn spec(&self) -> &FoldSpec {
+        &self.spec
+    }
+
+    pub fn orders(&self) -> &Orders {
+        &self.orders
+    }
+
+    /// Fill one training row: entry `lin` of the reordered tensor X_π.
+    #[inline]
+    fn fill_row(&mut self, row: usize, lin: usize) {
+        let dp = self.spec.dp;
+        // unravel lin into reordered coordinates
+        let mut rem = lin;
+        for k in (0..self.tensor.order()).rev() {
+            let n = self.tensor.shape()[k];
+            self.coord_buf[k] = rem % n;
+            rem /= n;
+        }
+        self.orders.to_original(&self.coord_buf, &mut self.orig_buf);
+        self.spec
+            .fold_index_i32(&self.coord_buf, &mut self.idx_buf[row * dp..(row + 1) * dp]);
+        let x = self.tensor.at(&self.orig_buf);
+        self.tgt_buf[row] = (x - self.mean) / self.std;
+        self.w_buf[row] = 1.0;
+    }
+
+    /// One epoch of minibatch Adam over a shuffled entry order.
+    /// Returns the mean normalised squared error over the epoch.
+    /// `lr` is supplied per epoch (the fit loop decays it exponentially —
+    /// the artifact takes lr as a runtime input, so no re-lowering).
+    fn run_epoch(&mut self, entry_order: &mut Vec<u32>, lr: f32) -> Result<f64> {
+        let n = self.tensor.len();
+        let b = self.texec.batch();
+        if entry_order.len() != n {
+            *entry_order = (0..n as u32).collect();
+        }
+        self.rng.shuffle(entry_order);
+        let max_batches = self.cfg.max_batches_per_epoch;
+        let mut loss_sum = 0.0f64;
+        let mut weight_sum = 0.0f64;
+        let mut batch_i = 0usize;
+        let mut done = 0usize;
+        while done < n && batch_i < max_batches {
+            let take = (n - done).min(b);
+            for row in 0..take {
+                self.fill_row(row, entry_order[done + row] as usize);
+            }
+            // pad ragged tail with zero-weight duplicates of row 0
+            if take < b {
+                let dp = self.spec.dp;
+                for row in take..b {
+                    let (src, dst) = self.idx_buf.split_at_mut(row * dp);
+                    dst[..dp].copy_from_slice(&src[..dp]);
+                    self.tgt_buf[row] = 0.0;
+                    self.w_buf[row] = 0.0;
+                }
+            }
+            let loss = self
+                .texec
+                .step(&self.idx_buf, &self.tgt_buf, &self.w_buf, lr)?;
+            loss_sum += loss as f64 * take as f64;
+            weight_sum += take as f64;
+            done += take;
+            batch_i += 1;
+        }
+        Ok(loss_sum / weight_sum.max(1.0))
+    }
+
+    /// Fitness estimated from the epoch's mean normalised MSE:
+    /// ‖X−X̂‖² = std² · N · mse, so fitness ≈ 1 − std·sqrt(N·mse)/‖X‖.
+    fn fitness_from_mse(&self, mse: f64) -> f64 {
+        let frob = self.tensor.frobenius().max(1e-30);
+        1.0 - (self.std as f64) * (mse * self.tensor.len() as f64).sqrt() / frob
+    }
+
+    /// One reordering round (Alg. 3) over every mode. Returns the number
+    /// of accepted swaps.
+    fn reorder_round(&mut self) -> Result<usize> {
+        // Refresh forward executor with the current parameters once.
+        self.fwd.set_params(self.texec.params())?;
+        let d = self.tensor.order();
+        let mut accepted = 0usize;
+        for k in 0..d {
+            let pairs = lsh::propose_pairs(self.tensor, &self.orders, k, &mut self.rng);
+            if pairs.is_empty() {
+                continue;
+            }
+            accepted += self.eval_and_apply_swaps(k, &pairs)?;
+        }
+        if accepted > 0 {
+            // the loss surface changed; restart Adam (paper §IV-B)
+            self.texec.reset_optimizer();
+        }
+        Ok(accepted)
+    }
+
+    /// Evaluate Δloss for each candidate pair on sampled slice entries and
+    /// apply beneficial swaps (Alg. 3 lines 22-24).
+    fn eval_and_apply_swaps(&mut self, k: usize, pairs: &[(usize, usize)]) -> Result<usize> {
+        let d = self.tensor.order();
+        let dp = self.spec.dp;
+        let slice_len = self.tensor.len() / self.tensor.shape()[k];
+        let s = self.cfg.swap_samples.min(slice_len);
+        // Sample `s` rest-coordinates (shared across the pair so the
+        // comparison is exact on those positions).
+        let mut rest: Vec<usize> = Vec::with_capacity(s * (d - 1));
+        for _ in 0..s {
+            for m in 0..d {
+                if m != k {
+                    rest.push(self.rng.below(self.tensor.shape()[m]));
+                }
+            }
+        }
+        // Build predictions for both slice positions of every pair.
+        let n_rows = pairs.len() * 2 * s;
+        let mut idx = vec![0i32; n_rows * dp];
+        let mut coord = vec![0usize; d];
+        for (pi, &(a, b)) in pairs.iter().enumerate() {
+            for (which, pos) in [a, b].into_iter().enumerate() {
+                for si in 0..s {
+                    let mut ri = 0usize;
+                    for m in 0..d {
+                        coord[m] = if m == k {
+                            pos
+                        } else {
+                            let v = rest[si * (d - 1) + ri];
+                            ri += 1;
+                            v
+                        };
+                    }
+                    let row = (pi * 2 + which) * s + si;
+                    self.spec
+                        .fold_index_i32(&coord, &mut idx[row * dp..(row + 1) * dp]);
+                }
+            }
+        }
+        let mut preds = Vec::with_capacity(n_rows);
+        self.fwd.run(&idx, &mut preds)?;
+        // Targets under the current and swapped orders.
+        let mut accepted = 0usize;
+        let mut orig = vec![0usize; d];
+        for (pi, &(a, b)) in pairs.iter().enumerate() {
+            let mut delta = 0.0f64;
+            for si in 0..s {
+                let p_a = preds[(pi * 2) * s + si] as f64;
+                let p_b = preds[(pi * 2 + 1) * s + si] as f64;
+                // target values at (a, rest) and (b, rest) under current π
+                let mut ri = 0usize;
+                for m in 0..d {
+                    coord[m] = if m == k {
+                        a
+                    } else {
+                        let v = rest[si * (d - 1) + ri];
+                        ri += 1;
+                        v
+                    };
+                }
+                self.orders.to_original(&coord, &mut orig);
+                let x_a = ((self.tensor.at(&orig) - self.mean) / self.std) as f64;
+                coord[k] = b;
+                self.orders.to_original(&coord, &mut orig);
+                let x_b = ((self.tensor.at(&orig) - self.mean) / self.std) as f64;
+                // Δ = [swapped] − [current]
+                delta += (p_a - x_b).powi(2) + (p_b - x_a).powi(2)
+                    - (p_a - x_a).powi(2)
+                    - (p_b - x_b).powi(2);
+            }
+            if delta < 0.0 {
+                self.orders.swap(k, a, b);
+                accepted += 1;
+            }
+        }
+        Ok(accepted)
+    }
+
+    /// Run Alg. 1 to convergence (or the epoch budget) and return the
+    /// compressed model. The final fitness is measured *exactly* over all
+    /// entries through the forward artifact.
+    pub fn fit(&mut self) -> Result<CompressedModel> {
+        let t0 = Timer::start();
+        let mut entry_order: Vec<u32> = Vec::new();
+        let mut best_fit = f64::NEG_INFINITY;
+        let mut stale = 0usize;
+        let mut epochs_run = 0usize;
+        for epoch in 0..self.cfg.epochs {
+            // exponential decay to lr/10 across the epoch budget (the
+            // paper trains Adam to convergence; decaying recovers most of
+            // the long-run fitness within a CPU-scale budget)
+            let frac = epoch as f32 / self.cfg.epochs.max(1) as f32;
+            let lr = self.cfg.lr * 10f32.powf(-frac);
+            let mse = self.run_epoch(&mut entry_order, lr)?;
+            let fit_est = self.fitness_from_mse(mse);
+            epochs_run = epoch + 1;
+            let mut swaps = 0;
+            if self.cfg.reorder_every > 0 && (epoch + 1) % self.cfg.reorder_every == 0 {
+                swaps = self.reorder_round()?;
+            }
+            if self.cfg.verbose {
+                eprintln!(
+                    "[tc] epoch {epoch}: mse={mse:.5} fitness~{fit_est:.4} swaps={swaps}"
+                );
+            }
+            if fit_est > best_fit + self.cfg.tol {
+                best_fit = fit_est;
+                stale = 0;
+            } else {
+                stale += 1;
+                // patience scales with the epoch budget: long runs make
+                // slow-but-steady progress per epoch, short runs should
+                // not stop before they have really started
+                if stale >= (self.cfg.epochs / 5).max(8) {
+                    break;
+                }
+            }
+        }
+        let train_seconds = t0.seconds();
+        let model = CompressedModel {
+            spec: self.spec.clone(),
+            orders: self.orders.clone(),
+            params: self.texec.params().clone(),
+            mean: self.mean,
+            std: self.std,
+            fitness: 0.0,
+            param_dtype: self.cfg.param_dtype,
+            train_seconds,
+            init_seconds: self.init_seconds,
+            epochs_run,
+        };
+        let mut model = model;
+        model.fitness = self.exact_fitness(&model)?;
+        Ok(model)
+    }
+
+    /// Exact fitness of a model against the training tensor, decoded in
+    /// bulk through the forward artifact.
+    pub fn exact_fitness(&mut self, model: &CompressedModel) -> Result<f64> {
+        self.fwd.set_params(&model.params)?;
+        let mut recon = Reconstructor::over_exec(&mut self.fwd, model);
+        let approx = recon.reconstruct_all()?;
+        Ok(crate::metrics::fitness(self.tensor.data(), approx.data()))
+    }
+
+    /// Expose the runtime (used by benches to reuse the compile cache).
+    pub fn runtime(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+}
+
+/// Bulk decoder over the forward artifact (higher throughput than the
+/// pure-Rust `compress::Decompressor`; identical numerics).
+pub struct Reconstructor<'e, 'm> {
+    fwd: &'e mut ForwardExec,
+    model: &'m CompressedModel,
+    inverses: Vec<Vec<usize>>,
+}
+
+impl<'e, 'm> Reconstructor<'e, 'm> {
+    /// Wrap an already-bound forward executor (params must match `model`).
+    pub fn over_exec(fwd: &'e mut ForwardExec, model: &'m CompressedModel) -> Self {
+        let inverses = model.orders.inverses();
+        Reconstructor {
+            fwd,
+            model,
+            inverses,
+        }
+    }
+
+    /// Decode a batch of entries at original coordinates (row-major
+    /// `[n, d]`), appending denormalised values to `out`.
+    pub fn decode(&mut self, orig_idx: &[usize], out: &mut Vec<f32>) -> Result<()> {
+        let d = self.model.spec.d();
+        let dp = self.model.spec.dp;
+        assert_eq!(orig_idx.len() % d, 0);
+        let n = orig_idx.len() / d;
+        let mut idx = vec![0i32; n * dp];
+        let mut reordered = vec![0usize; d];
+        for row in 0..n {
+            for k in 0..d {
+                reordered[k] = self.inverses[k][orig_idx[row * d + k]];
+            }
+            self.model
+                .spec
+                .fold_index_i32(&reordered, &mut idx[row * dp..(row + 1) * dp]);
+        }
+        let start = out.len();
+        self.fwd.run(&idx, out)?;
+        for v in &mut out[start..] {
+            *v = self.model.mean + self.model.std * *v;
+        }
+        Ok(())
+    }
+
+    /// Decode every entry (row-major) into a dense tensor.
+    pub fn reconstruct_all(&mut self) -> Result<DenseTensor> {
+        let shape = self.model.spec.orig_shape.clone();
+        let d = shape.len();
+        let n: usize = shape.iter().product();
+        let dp = self.model.spec.dp;
+        let chunk = self.fwd.batch() * 4;
+        let mut out = Vec::with_capacity(n);
+        let mut idx = vec![0i32; chunk * dp];
+        let mut coord = vec![0usize; d];
+        let mut reordered = vec![0usize; d];
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(chunk);
+            for row in 0..take {
+                let mut rem = done + row;
+                for k in (0..d).rev() {
+                    coord[k] = rem % shape[k];
+                    rem /= shape[k];
+                }
+                for k in 0..d {
+                    reordered[k] = self.inverses[k][coord[k]];
+                }
+                self.model
+                    .spec
+                    .fold_index_i32(&reordered, &mut idx[row * dp..(row + 1) * dp]);
+            }
+            self.fwd.run(&idx[..take * dp], &mut out)?;
+            done += take;
+        }
+        for v in &mut out {
+            *v = self.model.mean + self.model.std * *v;
+        }
+        Ok(DenseTensor::from_data(&shape, out))
+    }
+}

@@ -1,0 +1,170 @@
+//! Shared support for the figure/table benchmark binaries
+//! (`rust/benches/*.rs`, `harness = false`): uniform method runners, the
+//! budget-matching logic the paper uses ("hyperparameters of the compared
+//! methods were configured to yield similar compressed sizes"), and env
+//! knobs so `cargo bench` stays tractable on CPU while remaining faithful
+//! in shape.
+//!
+//! Env knobs:
+//!   TCZ_BENCH_SCALE   mode scale for dataset recipes (default 0.10)
+//!   TCZ_BENCH_EPOCHS  TensorCodec/NeuKron epochs      (default 12)
+
+use crate::baselines::{cp, neukron, sz, tring, tthresh, ttd, tucker, BaselineResult};
+use crate::compress::CompressedModel;
+use crate::config::TrainConfig;
+use crate::coordinator::Trainer;
+use crate::tensor::DenseTensor;
+use anyhow::Result;
+
+pub fn bench_scale() -> f64 {
+    std::env::var("TCZ_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.10)
+}
+
+/// Optional dataset filter: comma-separated names in TCZ_BENCH_DATASETS.
+pub fn bench_dataset_filter() -> Option<Vec<String>> {
+    std::env::var("TCZ_BENCH_DATASETS")
+        .ok()
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+}
+
+pub fn keep_dataset(name: &str) -> bool {
+    bench_dataset_filter()
+        .map(|f| f.iter().any(|x| x == name))
+        .unwrap_or(true)
+}
+
+pub fn bench_epochs() -> usize {
+    std::env::var("TCZ_BENCH_EPOCHS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12)
+}
+
+/// One TensorCodec run at a budget point.
+pub struct TcRun {
+    pub model: CompressedModel,
+    pub bytes: usize,
+    pub fitness: f64,
+    pub seconds: f64,
+}
+
+/// Scale the epoch budget so small tensors still get a meaningful number
+/// of SGD steps (an "epoch" of a 4k-entry tensor is just 2 steps).
+pub fn effective_epochs(n_entries: usize, epochs: usize) -> usize {
+    // CPU-budget compromise: the paper trains to convergence (up to 24h
+    // on GPUs); ~800 steps with lr decay recovers most of the achievable
+    // fitness at bench scale while keeping the full suite under an hour.
+    const TARGET_STEPS: usize = 800;
+    const TRAIN_B: usize = 2048;
+    let steps_per_epoch = n_entries.div_ceil(TRAIN_B).max(1);
+    epochs.max((TARGET_STEPS.div_ceil(steps_per_epoch)).min(100))
+}
+
+/// Fit TensorCodec with (h, R) and return the summary.
+pub fn run_tc(tensor: &DenseTensor, h: usize, r: usize, epochs: usize) -> Result<TcRun> {
+    let cfg = TrainConfig {
+        rank: r,
+        hidden: h,
+        epochs: effective_epochs(tensor.len(), epochs),
+        lr: 1e-2,
+        reorder_every: 4,
+        swap_samples: 128,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(tensor, cfg)?;
+    let model = trainer.fit()?;
+    Ok(TcRun {
+        bytes: model.reported_size_bytes(),
+        fitness: model.fitness,
+        seconds: model.train_seconds + model.init_seconds,
+        model,
+    })
+}
+
+/// All seven baselines, each configured to land near `budget_params`
+/// double-precision parameters (TTHRESH/SZ3 are error-bound-driven; the
+/// chosen settings bracket the same size regime).
+pub fn run_baselines(
+    tensor: &DenseTensor,
+    budget_params: usize,
+    epochs: usize,
+) -> Vec<BaselineResult> {
+    let shape = tensor.shape();
+    let mut out = Vec::new();
+    out.push(ttd::run(tensor, ttd::rank_for_budget(shape, budget_params), 0));
+    out.push(cp::run(
+        tensor,
+        cp::rank_for_budget(shape, budget_params),
+        10,
+        0,
+    ));
+    out.push(tucker::run(
+        tensor,
+        tucker::rank_for_budget(shape, budget_params),
+        2,
+        0,
+    ));
+    out.push(tring::run(
+        tensor,
+        tring::rank_for_budget(shape, budget_params),
+        3,
+        0,
+    ));
+    // TTHRESH codes coefficients at ~bits/64 of a double, so its Tucker
+    // rank can be ~4x the budget rank at 10-bit quantisation.
+    out.push(tthresh::run(
+        tensor,
+        tucker::rank_for_budget(shape, budget_params * 5),
+        10,
+        0,
+    ));
+    // SZ3's size is driven by its error bound: binary-search the bound so
+    // the coded size lands near the byte budget (paper: "configured to
+    // yield similar compressed sizes").
+    out.push(sz_at_budget(tensor, budget_params * 8));
+    let nk_cfg = TrainConfig {
+        rank: 0,
+        hidden: 8,
+        epochs: effective_epochs(tensor.len(), epochs),
+        lr: 1e-2,
+        reorder_every: 4,
+        swap_samples: 128,
+        ..Default::default()
+    };
+    match neukron::run(tensor, &nk_cfg) {
+        Ok(r) => out.push(r),
+        Err(e) => eprintln!("[bench] NeuKron failed: {e:#}"),
+    }
+    out
+}
+
+/// SZ3 run whose coded size is steered toward `budget_bytes` by a grid
+/// search on the relative error bound.
+pub fn sz_at_budget(tensor: &DenseTensor, budget_bytes: usize) -> BaselineResult {
+    let mut best: Option<BaselineResult> = None;
+    for rel in [2.0f64, 1.0, 0.6, 0.35, 0.2, 0.1, 0.05, 0.02] {
+        let res = sz::run(tensor, rel, 0);
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                let d_new = (res.bytes as f64 / budget_bytes as f64).ln().abs();
+                let d_old = (b.bytes as f64 / budget_bytes as f64).ln().abs();
+                d_new < d_old
+            }
+        };
+        if better {
+            best = Some(res);
+        }
+    }
+    best.unwrap()
+}
+
+/// Pretty row printer shared by the figure benches.
+pub fn print_row(dataset: &str, method: &str, bytes: usize, fitness: f64, seconds: f64) {
+    println!(
+        "{dataset:<10} {method:<10} {bytes:>10} B   fitness {fitness:>7.4}   {seconds:>7.2}s"
+    );
+}

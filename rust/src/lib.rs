@@ -1,0 +1,34 @@
+//! # TensorCodec
+//!
+//! A production reproduction of *"TensorCodec: Compact Lossy Compression of
+//! Tensors without Strong Data Assumptions"* (Kwon, Ko, Jung, Shin; 2023) as
+//! a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas kernels (TT-core chain product, fused LSTM cell) lowered
+//!   at build time into the model HLO (`python/compile/kernels/`).
+//! * **L2** — the NTTD model (embedding → LSTM → core heads → chain product)
+//!   plus a fused Adam train step, AOT-lowered to HLO-text artifacts
+//!   (`python/compile/{model,aot}.py`, `artifacts/*.hlo.txt`).
+//! * **L3** — this crate: the compression coordinator (alternating θ/π
+//!   optimisation, folding, TSP/LSH reordering), the `.tcz` container
+//!   format, a batched decompression server, all seven baselines from the
+//!   paper's evaluation and every substrate they need (dense tensors,
+//!   QR/SVD, Huffman/RLE/bit-IO, synthetic dataset generators).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the model
+//! once, then the `tensorcodec` binary is self-contained.
+
+pub mod baselines;
+pub mod coding;
+pub mod harness;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod linalg;
+pub mod metrics;
+pub mod nttd;
+pub mod reorder;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,163 @@
+//! Row-major f64 matrix with the handful of operations the baselines need.
+
+use crate::util::Pcg64;
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal() as f64).collect();
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// `self * other` (ikj loop order, cache-friendly for row-major).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let orow = i * out.cols;
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = k * other.cols;
+                for j in 0..other.cols {
+                    out.data[orow + j] += a * other.data[brow + j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * other` without materialising the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.cols, other.cols);
+        for r in 0..self.rows {
+            let arow = r * self.cols;
+            let brow = r * other.cols;
+            for i in 0..self.cols {
+                let a = self.data[arow + i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = i * out.cols;
+                for j in 0..other.cols {
+                    out.data[orow + j] += a * other.data[brow + j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&v| v * v).sum::<f64>().sqrt()
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Column `j` copied out.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_rows(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Mat::from_rows(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit() {
+        let mut rng = Pcg64::seeded(0);
+        let a = Mat::gaussian(7, 4, &mut rng);
+        let b = Mat::gaussian(7, 5, &mut rng);
+        let got = a.t_matmul(&b);
+        let want = a.transpose().matmul(&b);
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Mat::gaussian(4, 4, &mut rng);
+        let i = Mat::eye(4);
+        assert_eq!(a.matmul(&i).data, a.data);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Mat::gaussian(3, 6, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

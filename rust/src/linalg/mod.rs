@@ -1,0 +1,11 @@
+//! Dense linear-algebra substrate (f64), built from scratch for the
+//! baseline compressors: matrices, Householder QR, randomized truncated
+//! SVD, and least-squares solves. No external BLAS/LAPACK.
+
+pub mod mat;
+pub mod qr;
+pub mod svd;
+
+pub use mat::Mat;
+pub use qr::{qr_thin, solve_least_squares};
+pub use svd::{truncated_svd, Svd};

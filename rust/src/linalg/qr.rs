@@ -1,0 +1,178 @@
+//! Householder QR decomposition and least-squares solves.
+
+use super::Mat;
+
+/// Thin QR: `a = q * r` with `q` (m x n, orthonormal columns) and `r`
+/// (n x n, upper triangular). Requires `m >= n`.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr_thin requires rows >= cols");
+    let mut r = a.clone();
+    // Householder vectors stored per column.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // v = x - sign(x0)*|x| e1 over rows k..m of column k
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += r.at(i, k) * r.at(i, k);
+        }
+        let norm = norm.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        let x0 = r.at(k, k);
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        v[0] = x0 - alpha;
+        for i in k + 1..m {
+            v[i - k] = r.at(i, k);
+        }
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 > 0.0 {
+            // apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..]
+            for j in k..n {
+                let mut dot = 0.0;
+                for i in k..m {
+                    dot += v[i - k] * r.at(i, j);
+                }
+                let coef = 2.0 * dot / vnorm2;
+                for i in k..m {
+                    let val = r.at(i, j) - coef * v[i - k];
+                    r.set(i, j, val);
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // Build thin Q by applying the Householder reflectors to I (thin).
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q.at(i, j);
+            }
+            let coef = 2.0 * dot / vnorm2;
+            for i in k..m {
+                let val = q.at(i, j) - coef * v[i - k];
+                q.set(i, j, val);
+            }
+        }
+    }
+    // Zero the sub-diagonal of thin R.
+    let mut r_thin = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_thin.set(i, j, r.at(i, j));
+        }
+    }
+    (q, r_thin)
+}
+
+/// Solve `min_x ||a x - b||` column-wise via QR; returns x (n x rhs).
+/// Singular diagonal entries are regularised (Tikhonov-style epsilon).
+pub fn solve_least_squares(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows);
+    let (q, r) = qr_thin(a);
+    let qtb = q.t_matmul(b); // n x rhs
+    let n = a.cols;
+    let mut x = Mat::zeros(n, b.cols);
+    let eps = 1e-12 * (1.0 + r.frobenius());
+    for c in 0..b.cols {
+        for i in (0..n).rev() {
+            let mut s = qtb.at(i, c);
+            for j in i + 1..n {
+                s -= r.at(i, j) * x.at(j, c);
+            }
+            let d = r.at(i, i);
+            let d = if d.abs() < eps {
+                if d >= 0.0 {
+                    eps
+                } else {
+                    -eps
+                }
+            } else {
+                d
+            };
+            x.set(i, c, s / d);
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn qr_reconstructs_and_q_orthonormal() {
+        let mut rng = Pcg64::seeded(0);
+        for (m, n) in [(6, 4), (10, 10), (30, 3), (5, 1)] {
+            let a = Mat::gaussian(m, n, &mut rng);
+            let (q, r) = qr_thin(&a);
+            let qr = q.matmul(&r);
+            for (x, y) in qr.data.iter().zip(&a.data) {
+                assert!((x - y).abs() < 1e-9, "m={m} n={n}");
+            }
+            let qtq = q.t_matmul(&q);
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((qtq.at(i, j) - want).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Mat::gaussian(8, 5, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..5 {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn least_squares_exact_when_consistent() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Mat::gaussian(12, 4, &mut rng);
+        let x_true = Mat::gaussian(4, 2, &mut rng);
+        let b = a.matmul(&x_true);
+        let x = solve_least_squares(&a, &b);
+        for (got, want) in x.data.iter().zip(&x_true.data) {
+            assert!((got - want).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn least_squares_residual_orthogonal() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Mat::gaussian(20, 5, &mut rng);
+        let b = Mat::gaussian(20, 1, &mut rng);
+        let x = solve_least_squares(&a, &b);
+        let ax = a.matmul(&x);
+        // residual r = b - ax must satisfy aᵀ r ≈ 0
+        let mut r = b.clone();
+        for i in 0..r.data.len() {
+            r.data[i] -= ax.data[i];
+        }
+        let atr = a.t_matmul(&r);
+        for v in &atr.data {
+            assert!(v.abs() < 1e-8, "residual not orthogonal: {v}");
+        }
+    }
+}

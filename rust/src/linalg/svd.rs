@@ -1,0 +1,267 @@
+//! Truncated SVD via randomized subspace iteration (Halko-Martinsson-Tropp)
+//! on top of the Householder QR, with a one-sided Jacobi fallback for the
+//! small core factorisation. Powers TT-SVD, HOOI and TTHRESH.
+
+use super::{qr_thin, Mat};
+use crate::util::Pcg64;
+
+/// A rank-r factorisation `a ≈ u * diag(s) * vᵀ`.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Mat,      // m x r
+    pub s: Vec<f64>, // r
+    pub v: Mat,      // n x r
+}
+
+/// Exact SVD of a small matrix by one-sided Jacobi rotations on columns.
+/// Suitable for matrices up to a few hundred columns.
+pub fn jacobi_svd(a: &Mat) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    let mut u = a.clone(); // becomes U * diag(s)
+    let mut v = Mat::eye(n);
+    let max_sweeps = 60;
+    let tol = 1e-14;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                // 2x2 Gram block
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let x = u.at(i, p);
+                    let y = u.at(i, q);
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                off += apq * apq;
+                if apq.abs() <= tol * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let x = u.at(i, p);
+                    let y = u.at(i, q);
+                    u.set(i, p, c * x - s * y);
+                    u.set(i, q, s * x + c * y);
+                }
+                for i in 0..n {
+                    let x = v.at(i, p);
+                    let y = v.at(i, q);
+                    v.set(i, p, c * x - s * y);
+                    v.set(i, q, s * x + c * y);
+                }
+            }
+        }
+        if off.sqrt() < tol {
+            break;
+        }
+    }
+    // column norms of u are the singular values
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigma: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| u.at(i, j) * u.at(i, j)).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&a_, &b_| sigma[b_].partial_cmp(&sigma[a_]).unwrap());
+    let mut u_out = Mat::zeros(m, n);
+    let mut v_out = Mat::zeros(n, n);
+    let mut s_out = vec![0.0; n];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let sj = sigma[old_j];
+        s_out[new_j] = sj;
+        let inv = if sj > 1e-300 { 1.0 / sj } else { 0.0 };
+        for i in 0..m {
+            u_out.set(i, new_j, u.at(i, old_j) * inv);
+        }
+        for i in 0..n {
+            v_out.set(i, new_j, v.at(i, old_j));
+        }
+    }
+    sigma.sort_by(|a_, b_| b_.partial_cmp(a_).unwrap());
+    Svd {
+        u: u_out,
+        s: s_out,
+        v: v_out,
+    }
+}
+
+/// Rank-`r` truncated SVD via randomized subspace iteration.
+///
+/// `n_iter` power iterations (2 is plenty for compression use) and
+/// oversampling 8. Falls back to Jacobi when the matrix is small.
+pub fn truncated_svd(a: &Mat, r: usize, seed: u64) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    let r = r.min(m).min(n).max(1);
+    if n <= r + 8 || n <= 32 {
+        let full = jacobi_svd(a);
+        return truncate(full, r);
+    }
+    if m < n {
+        // factorise the transpose and swap
+        let at = a.transpose();
+        let svd_t = truncated_svd(&at, r, seed);
+        return Svd {
+            u: svd_t.v,
+            s: svd_t.s,
+            v: svd_t.u,
+        };
+    }
+    let p = (r + 8).min(n);
+    let mut rng = Pcg64::seeded(seed ^ 0x5eed_5eed);
+    let omega = Mat::gaussian(n, p, &mut rng);
+    let mut y = a.matmul(&omega); // m x p
+    let (mut q, _) = qr_thin(&y);
+    for _ in 0..2 {
+        let z = a.t_matmul(&q); // n x p
+        let (qz, _) = qr_thin(&z);
+        y = a.matmul(&qz);
+        let (qq, _) = qr_thin(&y);
+        q = qq;
+    }
+    let b = q.t_matmul(a); // p x n  (small)
+    let bt = b.transpose(); // n x p
+    let svd_small = jacobi_svd(&bt); // bt = U_b S V_bᵀ => b = V_b S U_bᵀ
+    // a ≈ q b = (q V_b) S U_bᵀ
+    let u = q.matmul(&svd_small.v);
+    let svd = Svd {
+        u,
+        s: svd_small.s,
+        v: svd_small.u,
+    };
+    truncate(svd, r)
+}
+
+fn truncate(svd: Svd, r: usize) -> Svd {
+    let r = r.min(svd.s.len());
+    let m = svd.u.rows;
+    let n = svd.v.rows;
+    let mut u = Mat::zeros(m, r);
+    let mut v = Mat::zeros(n, r);
+    for i in 0..m {
+        for j in 0..r {
+            u.set(i, j, svd.u.at(i, j));
+        }
+    }
+    for i in 0..n {
+        for j in 0..r {
+            v.set(i, j, svd.v.at(i, j));
+        }
+    }
+    Svd {
+        u,
+        s: svd.s[..r].to_vec(),
+        v,
+    }
+}
+
+impl Svd {
+    /// Reconstruct `u diag(s) vᵀ`.
+    pub fn reconstruct(&self) -> Mat {
+        let r = self.s.len();
+        let mut us = self.u.clone();
+        for i in 0..us.rows {
+            for j in 0..r {
+                let val = us.at(i, j) * self.s[j];
+                us.set(i, j, val);
+            }
+        }
+        let vt = self.v.transpose();
+        us.matmul(&vt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seeded(seed);
+        let a = Mat::gaussian(m, r, &mut rng);
+        let b = Mat::gaussian(r, n, &mut rng);
+        a.matmul(&b)
+    }
+
+    #[test]
+    fn jacobi_exact_on_diag() {
+        let mut a = Mat::zeros(4, 3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, 2.0);
+        a.set(2, 2, 1.0);
+        let svd = jacobi_svd(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-10);
+        assert!((svd.s[1] - 2.0).abs() < 1e-10);
+        assert!((svd.s[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Mat::gaussian(10, 7, &mut rng);
+        let svd = jacobi_svd(&a);
+        let rec = svd.reconstruct();
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn truncated_recovers_low_rank_exactly() {
+        let a = low_rank(60, 40, 5, 1);
+        let svd = truncated_svd(&a, 5, 0);
+        let rec = svd.reconstruct();
+        let mut err = 0.0f64;
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            err += (x - y) * (x - y);
+        }
+        let rel = err.sqrt() / a.frobenius();
+        assert!(rel < 1e-7, "rel={rel}");
+    }
+
+    #[test]
+    fn truncated_wide_matrix() {
+        let a = low_rank(20, 100, 4, 2);
+        let svd = truncated_svd(&a, 4, 3);
+        let rel = {
+            let rec = svd.reconstruct();
+            let mut err = 0.0;
+            for (x, y) in rec.data.iter().zip(&a.data) {
+                err += (x - y) * (x - y);
+            }
+            err.sqrt() / a.frobenius()
+        };
+        assert!(rel < 1e-7, "rel={rel}");
+    }
+
+    #[test]
+    fn truncation_error_bounded_by_tail_singular_values() {
+        // full-rank random matrix: rank-r error should be close to optimal
+        let mut rng = Pcg64::seeded(7);
+        let a = Mat::gaussian(50, 30, &mut rng);
+        let full = jacobi_svd(&a);
+        let r = 10;
+        let opt: f64 = full.s[r..].iter().map(|s| s * s).sum::<f64>().sqrt();
+        let tr = truncated_svd(&a, r, 1);
+        let rec = tr.reconstruct();
+        let mut err = 0.0;
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            err += (x - y) * (x - y);
+        }
+        let err = err.sqrt();
+        assert!(err < opt * 1.05 + 1e-9, "err={err} opt={opt}");
+    }
+
+    #[test]
+    fn singular_values_descending() {
+        let mut rng = Pcg64::seeded(8);
+        let a = Mat::gaussian(40, 25, &mut rng);
+        let svd = truncated_svd(&a, 10, 0);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+}

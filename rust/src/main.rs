@@ -1,0 +1,301 @@
+//! `tensorcodec` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   compress    fit a TensorCodec model to a tensor, write a `.tcz`
+//!   decompress  decode a `.tcz` back into a dense `.npy`
+//!   get         decode single entries (pure-Rust log-time path)
+//!   eval        fitness of a `.tcz` against its source tensor
+//!   stats       dataset statistics (Table II row)
+//!   gen         generate a synthetic dataset recipe to `.npy`
+//!   serve       TCP decode service over a compressed model
+//!   info        print `.tcz` metadata
+//!
+//! Inputs are either `--dataset <recipe>` (synthetic Table-II corpus) or
+//! `--input <file.npy>` (any little-endian f32/f64 C-order array).
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use tensorcodec::compress::{load_tcz, save_tcz, Decompressor};
+use tensorcodec::config::{apply_overrides, TrainConfig};
+use tensorcodec::coordinator::batcher::BatchPolicy;
+use tensorcodec::coordinator::{server, Trainer};
+use tensorcodec::datasets;
+use tensorcodec::tensor::{stats, DenseTensor};
+use tensorcodec::util::npy;
+
+/// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut argv = std::env::args().skip(1);
+        let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = Vec::new();
+        let mut bools = Vec::new();
+        let rest: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    flags.push((key.to_string(), rest[i + 1].clone()));
+                    i += 2;
+                } else {
+                    bools.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected positional argument `{a}`");
+            }
+        }
+        Ok(Args { cmd, flags, bools })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn req(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .with_context(|| format!("missing required flag --{key}"))
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+
+    fn get_all(&self, key: &str) -> Vec<String> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.clone())
+            .collect()
+    }
+}
+
+fn load_tensor(args: &Args) -> Result<DenseTensor> {
+    if let Some(name) = args.get("dataset") {
+        let scale: f64 = args.get("scale").unwrap_or("0.25").parse()?;
+        let seed: u64 = args.get("data-seed").unwrap_or("7").parse()?;
+        datasets::by_name(name, scale, seed)
+    } else if let Some(path) = args.get("input") {
+        let arr = npy::read_f32(&PathBuf::from(path))?;
+        Ok(DenseTensor::from_data(&arr.shape, arr.data))
+    } else {
+        bail!("provide --dataset <name> or --input <file.npy>")
+    }
+}
+
+fn build_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        TrainConfig::from_file(&PathBuf::from(path))?
+    } else {
+        TrainConfig::default()
+    };
+    apply_overrides(&mut cfg, &args.get_all("set"))?;
+    if args.has("verbose") {
+        cfg.verbose = true;
+    }
+    Ok(cfg)
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let tensor = load_tensor(args)?;
+    let cfg = build_config(args)?;
+    let out = PathBuf::from(args.req("out")?);
+    eprintln!(
+        "[tcz] compressing shape {:?} ({} entries) R={} h={} epochs={}",
+        tensor.shape(),
+        tensor.len(),
+        cfg.rank,
+        cfg.hidden,
+        cfg.epochs
+    );
+    let mut trainer = Trainer::new(&tensor, cfg)?;
+    let model = trainer.fit()?;
+    save_tcz(&out, &model)?;
+    let orig_bytes = tensor.len() * 8; // paper stores doubles
+    let comp_bytes = model.reported_size_bytes();
+    println!(
+        "fitness={:.4} compressed={}B original={}B ratio={:.1}x init={:.1}s train={:.1}s epochs={}",
+        model.fitness,
+        comp_bytes,
+        orig_bytes,
+        orig_bytes as f64 / comp_bytes as f64,
+        model.init_seconds,
+        model.train_seconds,
+        model.epochs_run
+    );
+    Ok(())
+}
+
+fn cmd_decompress(args: &Args) -> Result<()> {
+    let model = load_tcz(&PathBuf::from(args.req("model")?))?;
+    let out = PathBuf::from(args.req("out")?);
+    let mut dec = Decompressor::new(model);
+    let t = dec.reconstruct_all();
+    npy::write_f32(&out, t.shape(), t.data())?;
+    println!("wrote {:?} to {}", t.shape(), out.display());
+    Ok(())
+}
+
+fn cmd_get(args: &Args) -> Result<()> {
+    let model = load_tcz(&PathBuf::from(args.req("model")?))?;
+    let shape = model.spec.orig_shape.clone();
+    let mut dec = Decompressor::new(model);
+    for spec in args.get_all("index") {
+        let idx: Vec<usize> = spec
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().context("bad index"))
+            .collect::<Result<_>>()?;
+        if idx.len() != shape.len() || idx.iter().zip(&shape).any(|(&i, &n)| i >= n) {
+            bail!("index {spec} out of range for shape {shape:?}");
+        }
+        println!("{spec} -> {}", dec.get(&idx));
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = load_tcz(&PathBuf::from(args.req("model")?))?;
+    let tensor = load_tensor(args)?;
+    if tensor.shape() != model.spec.orig_shape.as_slice() {
+        bail!(
+            "tensor shape {:?} != model shape {:?}",
+            tensor.shape(),
+            model.spec.orig_shape
+        );
+    }
+    let mut dec = Decompressor::new(model);
+    let approx = dec.reconstruct_all();
+    let fit = tensorcodec::metrics::fitness(tensor.data(), approx.data());
+    println!(
+        "fitness={fit:.4} size={}B",
+        dec.model.reported_size_bytes()
+    );
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let tensor = load_tensor(args)?;
+    let density = stats::density(&tensor);
+    let smooth = stats::smoothness(&tensor, 20_000, 0);
+    println!(
+        "shape={:?} order={} entries={} density={:.3} smoothness={:.3}",
+        tensor.shape(),
+        tensor.order(),
+        tensor.len(),
+        density,
+        smooth
+    );
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let tensor = load_tensor(args)?;
+    let out = PathBuf::from(args.req("out")?);
+    npy::write_f32(&out, tensor.shape(), tensor.data())?;
+    println!("wrote {:?} to {}", tensor.shape(), out.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = load_tcz(&PathBuf::from(args.req("model")?))?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7070").to_string();
+    let max_conns: usize = args.get("max-conns").unwrap_or("64").parse()?;
+    let policy = BatchPolicy {
+        max_batch: args.get("max-batch").unwrap_or("8192").parse()?,
+        max_wait: std::time::Duration::from_micros(
+            args.get("max-wait-us").unwrap_or("2000").parse()?,
+        ),
+        queue_depth: args.get("queue-depth").unwrap_or("65536").parse()?,
+    };
+    server::serve_tcp(model, &addr, policy, max_conns)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let model = load_tcz(&PathBuf::from(args.req("model")?))?;
+    println!("variant:   {}", model.params.variant.as_str());
+    println!("shape:     {:?}", model.spec.orig_shape);
+    println!(
+        "folded:    {:?} (d'={})",
+        model.spec.folded_shape, model.spec.dp
+    );
+    println!("rank/hid:  R={} h={}", model.params.r, model.params.h);
+    println!("params:    {}", model.params.num_params());
+    println!("dtype:     {}", model.param_dtype.as_str());
+    println!("size:      {} bytes", model.reported_size_bytes());
+    println!("fitness:   {:.4}", model.fitness);
+    println!("mean/std:  {} / {}", model.mean, model.std);
+    Ok(())
+}
+
+fn usage() {
+    eprintln!(
+        "tensorcodec — compact lossy tensor compression (TensorCodec reproduction)
+
+USAGE: tensorcodec <command> [flags]
+
+COMMANDS
+  compress    --dataset <name>|--input <x.npy> --out <m.tcz>
+              [--scale 0.25] [--data-seed 7] [--config run.conf]
+              [--set k=v ...] [--verbose]
+  decompress  --model <m.tcz> --out <recon.npy>
+  get         --model <m.tcz> --index i,j,k [--index ...]
+  eval        --model <m.tcz> --dataset <name> [--scale ..] [--data-seed ..]
+  stats       --dataset <name> [--scale ..]
+  gen         --dataset <name> --out <x.npy> [--scale ..] [--data-seed ..]
+  serve       --model <m.tcz> [--addr 127.0.0.1:7070] [--max-batch 8192]
+              [--max-wait-us 2000] [--max-conns 64]
+  info        --model <m.tcz>
+
+DATASETS: {}",
+        datasets::ALL_DATASETS
+            .iter()
+            .map(|r| r.name)
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+}
+
+fn main() {
+    let args = match Args::parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    let result = match args.cmd.as_str() {
+        "compress" => cmd_compress(&args),
+        "decompress" => cmd_decompress(&args),
+        "get" => cmd_get(&args),
+        "eval" => cmd_eval(&args),
+        "stats" => cmd_stats(&args),
+        "gen" => cmd_gen(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

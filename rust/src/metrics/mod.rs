@@ -1,0 +1,125 @@
+//! Metrics: fitness (the paper's accuracy measure), wall-clock timers and
+//! CSV emission for the benchmark harness.
+
+use std::time::Instant;
+
+/// Fitness = 1 − ‖X − X̂‖_F / ‖X‖_F (paper §V-A). Higher is better.
+pub fn fitness(orig: &[f32], approx: &[f32]) -> f64 {
+    assert_eq!(orig.len(), approx.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&a, &b) in orig.iter().zip(approx) {
+        let d = (a - b) as f64;
+        num += d * d;
+        den += (a as f64) * (a as f64);
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 1.0 } else { f64::NEG_INFINITY };
+    }
+    1.0 - (num / den).sqrt()
+}
+
+/// Normalised RMSE helper used by a few benches.
+pub fn rel_error(orig: &[f32], approx: &[f32]) -> f64 {
+    1.0 - fitness(orig, approx)
+}
+
+/// A named wall-clock timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+}
+
+/// Append rows to a CSV file under `target/bench-out/` (creating header on
+/// first write). Used by every figure bench so results can be re-plotted.
+pub struct CsvSink {
+    path: std::path::PathBuf,
+    wrote_header: bool,
+}
+
+impl CsvSink {
+    pub fn create(name: &str, header: &str) -> std::io::Result<CsvSink> {
+        let dir = std::path::Path::new("target/bench-out");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(name);
+        std::fs::write(&path, format!("{header}\n"))?;
+        Ok(CsvSink {
+            path,
+            wrote_header: true,
+        })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.path)?;
+        writeln!(f, "{}", fields.join(","))?;
+        let _ = self.wrote_header;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fitness_perfect_is_one() {
+        let x = vec![1.0f32, -2.0, 3.0];
+        assert!((fitness(&x, &x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fitness_zero_approx() {
+        let x = vec![3.0f32, 4.0];
+        let z = vec![0.0f32, 0.0];
+        // ||x - 0|| / ||x|| = 1 => fitness 0
+        assert!(fitness(&x, &z).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fitness_matches_manual() {
+        let x = vec![1.0f32, 0.0];
+        let y = vec![0.0f32, 0.0];
+        // err = 1, norm = 1 -> 0; partial error:
+        let y2 = vec![0.5f32, 0.0];
+        assert!((fitness(&x, &y2) - 0.5).abs() < 1e-9);
+        assert!(fitness(&x, &y).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.seconds() >= 0.004);
+    }
+
+    #[test]
+    fn csv_sink_writes() {
+        let mut sink = CsvSink::create("test_metrics.csv", "a,b").unwrap();
+        sink.row(&["1".into(), "2".into()]).unwrap();
+        let text = std::fs::read_to_string(sink.path()).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+}

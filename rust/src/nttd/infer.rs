@@ -1,0 +1,221 @@
+//! Pure-Rust NTTD forward pass (f32, numerically matching
+//! `python/compile/kernels/ref.py`).
+//!
+//! Two jobs: (a) integration-test oracle — the XLA artifacts must agree
+//! with this to float tolerance; (b) runtime fallback for decoding single
+//! entries without spinning up the PJRT client (used by the CLI `get`
+//! command and by the reconstruction-scaling bench at tiny batch sizes).
+
+use super::params::{ModelParams, Variant};
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Scratch space for one forward evaluation (reused across entries so the
+/// hot path performs zero allocations).
+#[derive(Debug)]
+pub struct InferScratch {
+    h: Vec<f32>,
+    c: Vec<f32>,
+    z: Vec<f32>,
+    hs: Vec<f32>, // dp * h hidden states
+    v: Vec<f32>,  // chain row vector
+    core: Vec<f32>,
+    v_next: Vec<f32>,
+}
+
+impl InferScratch {
+    pub fn new(dp: usize, h: usize, r: usize) -> Self {
+        InferScratch {
+            h: vec![0.0; h],
+            c: vec![0.0; h],
+            z: vec![0.0; 4 * h],
+            hs: vec![0.0; dp * h],
+            v: vec![0.0; r.max(1)],
+            core: vec![0.0; r.max(1) * r.max(1)],
+            v_next: vec![0.0; r.max(1)],
+        }
+    }
+}
+
+/// Run the LSTM trunk over the folded digits, filling `scratch.hs`.
+fn lstm_trunk(p: &ModelParams, digits: &[i32], scratch: &mut InferScratch) {
+    let (dp, h) = (p.dp, p.h);
+    debug_assert_eq!(digits.len(), dp);
+    let emb = p.get("emb");
+    let w_ih = p.get("w_ih");
+    let w_hh = p.get("w_hh");
+    let b = p.get("b_lstm");
+    scratch.h.fill(0.0);
+    scratch.c.fill(0.0);
+    for t in 0..dp {
+        let tok = digits[t] as usize;
+        debug_assert!(tok < p.vocab);
+        let x = &emb[(t * p.vocab + tok) * h..(t * p.vocab + tok) * h + h];
+        // z = x @ w_ihᵀ + h @ w_hhᵀ + b  (w_* are [4h, h] row-major)
+        for g in 0..4 * h {
+            let wi = &w_ih[g * h..g * h + h];
+            let wh = &w_hh[g * h..g * h + h];
+            let mut acc = b[g];
+            for j in 0..h {
+                acc += x[j] * wi[j] + scratch.h[j] * wh[j];
+            }
+            scratch.z[g] = acc;
+        }
+        for j in 0..h {
+            let i_g = sigmoid(scratch.z[j]);
+            let f_g = sigmoid(scratch.z[h + j]);
+            let g_g = scratch.z[2 * h + j].tanh();
+            let o_g = sigmoid(scratch.z[3 * h + j]);
+            let c_new = f_g * scratch.c[j] + i_g * g_g;
+            scratch.c[j] = c_new;
+            scratch.h[j] = o_g * c_new.tanh();
+        }
+        scratch.hs[t * h..(t + 1) * h].copy_from_slice(&scratch.h);
+    }
+}
+
+/// Approximate one entry of the folded tensor (Alg. 2 of the paper).
+///
+/// `digits` are the folded mode indices (length `dp`, each `< vocab`).
+pub fn forward_one(p: &ModelParams, digits: &[i32], scratch: &mut InferScratch) -> f32 {
+    lstm_trunk(p, digits, scratch);
+    let (dp, h) = (p.dp, p.h);
+    match p.variant {
+        Variant::Nk => {
+            let w_out = p.get("w_out");
+            let b_out = p.get("b_out");
+            let hl = &scratch.hs[(dp - 1) * h..dp * h];
+            let mut acc = b_out[0];
+            for j in 0..h {
+                acc += w_out[j] * hl[j];
+            }
+            acc
+        }
+        Variant::Tc => {
+            let r = p.r;
+            let w1 = p.get("w1");
+            let b1 = p.get("b1");
+            let wm = p.get("wm");
+            let bm = p.get("bm");
+            let wd = p.get("wd");
+            let bd = p.get("bd");
+            // T1 = w1 @ h_0 + b1  -> row vector v
+            let h0 = &scratch.hs[..h];
+            for i in 0..r {
+                let w = &w1[i * h..(i + 1) * h];
+                let mut acc = b1[i];
+                for j in 0..h {
+                    acc += w[j] * h0[j];
+                }
+                scratch.v[i] = acc;
+            }
+            // middle cores
+            for t in 1..dp - 1 {
+                let ht = &scratch.hs[t * h..(t + 1) * h];
+                for i in 0..r * r {
+                    let w = &wm[i * h..(i + 1) * h];
+                    let mut acc = bm[i];
+                    for j in 0..h {
+                        acc += w[j] * ht[j];
+                    }
+                    scratch.core[i] = acc;
+                }
+                // v_next = v @ core  (core row-major [r, r])
+                for s in 0..r {
+                    let mut acc = 0.0;
+                    for q in 0..r {
+                        acc += scratch.v[q] * scratch.core[q * r + s];
+                    }
+                    scratch.v_next[s] = acc;
+                }
+                scratch.v.copy_from_slice(&scratch.v_next);
+            }
+            // Td = wd @ h_last + bd; out = <v, td>
+            let hl = &scratch.hs[(dp - 1) * h..dp * h];
+            let mut out = 0.0;
+            for i in 0..r {
+                let w = &wd[i * h..(i + 1) * h];
+                let mut acc = bd[i];
+                for j in 0..h {
+                    acc += w[j] * hl[j];
+                }
+                out += scratch.v[i] * acc;
+            }
+            out
+        }
+    }
+}
+
+/// Batched convenience wrapper: `idx` is row-major `[n, dp]`.
+pub fn forward_batch(p: &ModelParams, idx: &[i32], out: &mut Vec<f32>) {
+    let dp = p.dp;
+    assert_eq!(idx.len() % dp, 0);
+    let n = idx.len() / dp;
+    let mut scratch = InferScratch::new(dp, p.h, p.r);
+    out.clear();
+    out.reserve(n);
+    for b in 0..n {
+        out.push(forward_one(p, &idx[b * dp..(b + 1) * dp], &mut scratch));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn initial_params_give_near_one() {
+        // identity-biased init => chain product ~1 (mirrors python test)
+        let p = ModelParams::init_tc(0, 10, 32, 8, 8);
+        let mut rng = Pcg64::seeded(0);
+        let mut scratch = InferScratch::new(10, 8, 8);
+        let mut sum_abs_dev = 0.0f32;
+        let n = 200;
+        for _ in 0..n {
+            let digits: Vec<i32> = (0..10).map(|_| rng.below(32) as i32).collect();
+            let out = forward_one(&p, &digits, &mut scratch);
+            sum_abs_dev += (out - 1.0).abs();
+        }
+        assert!(sum_abs_dev / (n as f32) < 0.5);
+    }
+
+    #[test]
+    fn deterministic_and_digit_sensitive() {
+        let p = ModelParams::init_tc(1, 8, 32, 6, 6);
+        let mut s = InferScratch::new(8, 6, 6);
+        let a: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let b: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 9];
+        let va = forward_one(&p, &a, &mut s);
+        let va2 = forward_one(&p, &a, &mut s);
+        let vb = forward_one(&p, &b, &mut s);
+        assert_eq!(va, va2);
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn nk_forward_runs() {
+        let p = ModelParams::init_nk(2, 9, 32, 8);
+        let mut s = InferScratch::new(9, 8, 0);
+        let digits: Vec<i32> = vec![0; 9];
+        let v = forward_one(&p, &digits, &mut s);
+        assert!(v.is_finite());
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let p = ModelParams::init_tc(3, 7, 32, 5, 5);
+        let mut rng = Pcg64::seeded(3);
+        let n = 33;
+        let idx: Vec<i32> = (0..n * 7).map(|_| rng.below(32) as i32).collect();
+        let mut out = Vec::new();
+        forward_batch(&p, &idx, &mut out);
+        let mut s = InferScratch::new(7, 5, 5);
+        for b in 0..n {
+            let one = forward_one(&p, &idx[b * 7..(b + 1) * 7], &mut s);
+            assert_eq!(out[b], one);
+        }
+    }
+}

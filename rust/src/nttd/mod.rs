@@ -1,0 +1,9 @@
+//! NTTD model state on the Rust side: parameter container (layout shared
+//! with the AOT manifest), initialisation mirroring
+//! `python/compile/model.init_params`, and a pure-Rust forward pass used as
+//! an oracle against the XLA artifacts and as a no-runtime fallback.
+
+pub mod infer;
+pub mod params;
+
+pub use params::{ModelParams, Variant};

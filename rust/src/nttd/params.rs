@@ -1,0 +1,270 @@
+//! NTTD parameter container.
+//!
+//! Parameter order and shapes are the contract with the AOT artifacts:
+//! they mirror `python/compile/model.PARAM_NAMES` / `param_shapes` exactly
+//! (checked at load time against `artifacts/manifest.txt`).
+
+use crate::util::Pcg64;
+use anyhow::{bail, Result};
+
+/// Which model family the parameters belong to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// TensorCodec's NTTD (embedding → LSTM → TT-core heads → chain).
+    Tc,
+    /// NeuKron-style baseline (embedding → LSTM → scalar head).
+    Nk,
+}
+
+impl Variant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Tc => "tc",
+            Variant::Nk => "nk",
+        }
+    }
+
+    /// Parameter names, in artifact order.
+    pub fn param_names(&self) -> &'static [&'static str] {
+        match self {
+            Variant::Tc => &[
+                "emb", "w_ih", "w_hh", "b_lstm", "w1", "b1", "wm", "bm", "wd", "bd",
+            ],
+            Variant::Nk => &["emb", "w_ih", "w_hh", "b_lstm", "w_out", "b_out"],
+        }
+    }
+
+    /// Parameter shapes for a given configuration (r ignored for Nk).
+    pub fn param_shapes(&self, dp: usize, vocab: usize, h: usize, r: usize) -> Vec<Vec<usize>> {
+        match self {
+            Variant::Tc => vec![
+                vec![dp, vocab, h],
+                vec![4 * h, h],
+                vec![4 * h, h],
+                vec![4 * h],
+                vec![r, h],
+                vec![r],
+                vec![r * r, h],
+                vec![r * r],
+                vec![r, h],
+                vec![r],
+            ],
+            Variant::Nk => vec![
+                vec![dp, vocab, h],
+                vec![4 * h, h],
+                vec![4 * h, h],
+                vec![4 * h],
+                vec![1, h],
+                vec![1],
+            ],
+        }
+    }
+}
+
+/// A full set of model parameters (flat f32 buffers in artifact order).
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub variant: Variant,
+    pub dp: usize,
+    pub vocab: usize,
+    pub h: usize,
+    pub r: usize,
+    /// One flat buffer per parameter, artifact order.
+    pub bufs: Vec<Vec<f32>>,
+    /// Shapes matching `bufs`.
+    pub shapes: Vec<Vec<usize>>,
+}
+
+impl ModelParams {
+    /// Number of scalar parameters (the paper's compressed-size unit).
+    pub fn num_params(&self) -> usize {
+        self.bufs.iter().map(|b| b.len()).sum()
+    }
+
+    /// Initialise TensorCodec parameters (mirrors `model.init_params`:
+    /// identity-biased middle cores, 1/sqrt(R) end cores, so the initial
+    /// chain product is ~1 on normalised data).
+    pub fn init_tc(seed: u64, dp: usize, vocab: usize, h: usize, r: usize) -> Self {
+        let variant = Variant::Tc;
+        let shapes = variant.param_shapes(dp, vocab, h, r);
+        let mut rng = Pcg64::seeded(seed);
+        let scale_w = 0.1 / (h as f32).sqrt();
+        let inv_sqrt_h = 1.0 / (h as f32).sqrt();
+        let inv_sqrt_r = 1.0 / (r as f32).sqrt();
+        let mut bufs = Vec::with_capacity(shapes.len());
+        for (i, shape) in shapes.iter().enumerate() {
+            let n: usize = shape.iter().product();
+            let buf: Vec<f32> = match i {
+                0 => (0..n).map(|_| 0.3 * rng.normal()).collect(),
+                1 | 2 => (0..n)
+                    .map(|_| (rng.uniform() * 2.0 - 1.0) * inv_sqrt_h)
+                    .collect(),
+                3 => vec![0.0; n],
+                4 | 8 => (0..n).map(|_| scale_w * rng.normal()).collect(),
+                5 | 9 => vec![inv_sqrt_r; n],
+                6 => (0..n).map(|_| scale_w * rng.normal()).collect(),
+                7 => {
+                    // identity matrix flattened
+                    let mut b = vec![0.0; n];
+                    for j in 0..r {
+                        b[j * r + j] = 1.0;
+                    }
+                    b
+                }
+                _ => unreachable!(),
+            };
+            bufs.push(buf);
+        }
+        ModelParams {
+            variant,
+            dp,
+            vocab,
+            h,
+            r,
+            bufs,
+            shapes,
+        }
+    }
+
+    /// Initialise NeuKron-variant parameters (mirrors `model.init_nk_params`).
+    pub fn init_nk(seed: u64, dp: usize, vocab: usize, h: usize) -> Self {
+        let variant = Variant::Nk;
+        let shapes = variant.param_shapes(dp, vocab, h, 0);
+        let mut rng = Pcg64::seeded(seed);
+        let inv_sqrt_h = 1.0 / (h as f32).sqrt();
+        let mut bufs = Vec::with_capacity(shapes.len());
+        for (i, shape) in shapes.iter().enumerate() {
+            let n: usize = shape.iter().product();
+            let buf: Vec<f32> = match i {
+                0 => (0..n).map(|_| 0.3 * rng.normal()).collect(),
+                1 | 2 => (0..n)
+                    .map(|_| (rng.uniform() * 2.0 - 1.0) * inv_sqrt_h)
+                    .collect(),
+                3 => vec![0.0; n],
+                4 => (0..n).map(|_| 0.5 * rng.normal()).collect(),
+                5 => vec![0.0; n],
+                _ => unreachable!(),
+            };
+            bufs.push(buf);
+        }
+        ModelParams {
+            variant,
+            dp,
+            vocab,
+            h,
+            r: 0,
+            bufs,
+            shapes,
+        }
+    }
+
+    /// Flatten all parameters into one buffer (serialisation order).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_params());
+        for b in &self.bufs {
+            out.extend_from_slice(b);
+        }
+        out
+    }
+
+    /// Rebuild from a flat buffer (inverse of [`Self::flatten`]).
+    pub fn from_flat(
+        variant: Variant,
+        dp: usize,
+        vocab: usize,
+        h: usize,
+        r: usize,
+        flat: &[f32],
+    ) -> Result<Self> {
+        let shapes = variant.param_shapes(dp, vocab, h, r);
+        let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        if flat.len() != total {
+            bail!("flat buffer has {} values, expected {total}", flat.len());
+        }
+        let mut bufs = Vec::with_capacity(shapes.len());
+        let mut off = 0;
+        for s in &shapes {
+            let n: usize = s.iter().product();
+            bufs.push(flat[off..off + n].to_vec());
+            off += n;
+        }
+        Ok(ModelParams {
+            variant,
+            dp,
+            vocab,
+            h,
+            r,
+            bufs,
+            shapes,
+        })
+    }
+
+    /// Named accessor (panics on unknown name — internal use).
+    pub fn get(&self, name: &str) -> &[f32] {
+        let pos = self
+            .variant
+            .param_names()
+            .iter()
+            .position(|&n| n == name)
+            .unwrap_or_else(|| panic!("no param {name}"));
+        &self.bufs[pos]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tc_shapes_total() {
+        let p = ModelParams::init_tc(0, 9, 32, 8, 8);
+        // emb 9*32*8 + 2*(32*8) + 32 + (8*8+8) + (64*8+64) + (8*8+8)
+        let expect = 9 * 32 * 8 + 2 * (32 * 8) + 32 + (64 + 8) + (512 + 64) + (64 + 8);
+        assert_eq!(p.num_params(), expect);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let p = ModelParams::init_tc(3, 7, 32, 5, 5);
+        let flat = p.flatten();
+        let q = ModelParams::from_flat(Variant::Tc, 7, 32, 5, 5, &flat).unwrap();
+        assert_eq!(p.bufs, q.bufs);
+    }
+
+    #[test]
+    fn from_flat_rejects_wrong_len() {
+        let p = ModelParams::init_tc(0, 6, 32, 4, 4);
+        let mut flat = p.flatten();
+        flat.pop();
+        assert!(ModelParams::from_flat(Variant::Tc, 6, 32, 4, 4, &flat).is_err());
+    }
+
+    #[test]
+    fn bm_is_identity() {
+        let p = ModelParams::init_tc(1, 8, 32, 6, 4);
+        let bm = p.get("bm");
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert_eq!(bm[i * 4 + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = ModelParams::init_tc(5, 8, 32, 8, 8);
+        let b = ModelParams::init_tc(5, 8, 32, 8, 8);
+        assert_eq!(a.bufs, b.bufs);
+        let c = ModelParams::init_tc(6, 8, 32, 8, 8);
+        assert_ne!(a.bufs, c.bufs);
+    }
+
+    #[test]
+    fn nk_init_shapes() {
+        let p = ModelParams::init_nk(0, 10, 32, 8);
+        assert_eq!(p.bufs.len(), 6);
+        assert_eq!(p.shapes[4], vec![1, 8]);
+        assert_eq!(p.num_params(), 10 * 32 * 8 + 2 * 256 + 32 + 8 + 1);
+    }
+}

@@ -1,0 +1,187 @@
+//! Swap-candidate proposal via locality-sensitive hashing (Alg. 3 of the
+//! paper, lines 2-21).
+//!
+//! For mode k: sample one index from each consecutive (even, odd) pair,
+//! project the corresponding slices of the *reordered* tensor onto a
+//! random direction (normalised dot product), bucket the projections into
+//! ⌊N_k/8⌋ equal-width buckets, and pair indices within a bucket using the
+//! XOR trick — for sampled i1, i2 the emitted candidates are (i1, i2⊕1)
+//! and (i1⊕1, i2), which tends to move similar slices next to each other
+//! when a swap is accepted. Leftover indices are paired randomly. All
+//! returned pairs are disjoint, so the trainer can evaluate and apply them
+//! independently (the paper evaluates them in parallel on GPUs).
+
+use super::Orders;
+use crate::tensor::DenseTensor;
+use crate::util::Pcg64;
+
+/// Build disjoint swap-candidate pairs for mode `k` (positions in the
+/// current arrangement X_π).
+pub fn propose_pairs(
+    t: &DenseTensor,
+    orders: &Orders,
+    k: usize,
+    rng: &mut Pcg64,
+) -> Vec<(usize, usize)> {
+    let n = t.shape()[k];
+    if n < 4 {
+        return Vec::new();
+    }
+    // Lines 3-5: sample one of each (2j, 2j+1) pair of *positions*.
+    let mut sampled = Vec::with_capacity(n / 2);
+    let mut j = 0;
+    while j + 1 < n {
+        let pick = if rng.uniform() < 0.5 { j } else { j + 1 };
+        sampled.push(pick);
+        j += 2;
+    }
+    // Lines 6-10: project each sampled slice onto a random direction,
+    // normalised (the paper normalises by ||r|| ||v||; the constant ||r||
+    // scales every value identically so only ||v|| matters for bucketing).
+    let slice_len = t.len() / n;
+    let mut dir = vec![0.0f32; slice_len];
+    for v in dir.iter_mut() {
+        *v = rng.normal();
+    }
+    let dir_norm = dir.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    let mut proj: Vec<(f64, usize)> = sampled
+        .iter()
+        .map(|&pos| {
+            let old = orders.perms[k][pos];
+            let dot = t.slice_dot(k, old, &dir);
+            let norm = t.slice_norm(k, old).max(1e-12);
+            (dot / (norm * dir_norm), pos)
+        })
+        .collect();
+    // Lines 11-15: equal-width buckets over the projected range.
+    let num_buckets = (n / 8).max(1);
+    let min_p = proj.iter().map(|p| p.0).fold(f64::INFINITY, f64::min);
+    let max_p = proj.iter().map(|p| p.0).fold(f64::NEG_INFINITY, f64::max);
+    let width = ((max_p - min_p) / num_buckets as f64).max(1e-12);
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); num_buckets];
+    for &(p, pos) in &proj {
+        let b = (((p - min_p) / width) as usize).min(num_buckets - 1);
+        buckets[b].push(pos);
+    }
+    proj.clear();
+
+    // Lines 16-21: XOR-pairing within buckets; leftovers paired randomly.
+    let mut used = vec![false; n];
+    let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(n / 2);
+    let mut leftovers: Vec<usize> = Vec::new();
+    let mut try_push = |a: usize, b: usize, used: &mut Vec<bool>| {
+        if a < n && b < n && a != b && !used[a] && !used[b] {
+            used[a] = true;
+            used[b] = true;
+            pairs.push((a, b));
+            true
+        } else {
+            false
+        }
+    };
+    for bucket in &mut buckets {
+        rng.shuffle(bucket);
+        while bucket.len() > 1 {
+            let i1 = bucket.pop().unwrap();
+            let i2 = bucket.pop().unwrap();
+            // AddPairs(b, S, xor=True): (i1, i2^1) and (i1^1, i2)
+            try_push(i1, i2 ^ 1, &mut used);
+            try_push(i1 ^ 1, i2, &mut used);
+        }
+        if let Some(rest) = bucket.pop() {
+            leftovers.push(rest);
+            leftovers.push(rest ^ 1);
+        }
+    }
+    for pos in 0..n {
+        if !used[pos] && !leftovers.contains(&pos) {
+            leftovers.push(pos);
+        }
+    }
+    leftovers.retain(|&p| p < n && !used[p]);
+    leftovers.sort_unstable();
+    leftovers.dedup();
+    rng.shuffle(&mut leftovers);
+    while leftovers.len() > 1 {
+        let a = leftovers.pop().unwrap();
+        let b = leftovers.pop().unwrap();
+        try_push(a, b, &mut used);
+    }
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_disjoint(pairs: &[(usize, usize)], n: usize) {
+        let mut seen = vec![false; n];
+        for &(a, b) in pairs {
+            assert!(a < n && b < n && a != b);
+            assert!(!seen[a], "position {a} reused");
+            assert!(!seen[b], "position {b} reused");
+            seen[a] = true;
+            seen[b] = true;
+        }
+    }
+
+    #[test]
+    fn pairs_are_disjoint_and_in_range() {
+        let t = DenseTensor::random_uniform(&[64, 10, 6], 0);
+        let orders = Orders::identity(t.shape());
+        let mut rng = Pcg64::seeded(1);
+        for k in 0..3 {
+            let pairs = propose_pairs(&t, &orders, k, &mut rng);
+            check_disjoint(&pairs, t.shape()[k]);
+        }
+    }
+
+    #[test]
+    fn covers_a_good_fraction_of_indices() {
+        let t = DenseTensor::random_uniform(&[100, 8, 8], 3);
+        let orders = Orders::identity(t.shape());
+        let mut rng = Pcg64::seeded(2);
+        let pairs = propose_pairs(&t, &orders, 0, &mut rng);
+        // at least a quarter of indices should be covered per round
+        assert!(pairs.len() * 2 >= 25, "only {} pairs", pairs.len());
+    }
+
+    #[test]
+    fn tiny_mode_yields_nothing() {
+        let t = DenseTensor::random_uniform(&[3, 4], 0);
+        let orders = Orders::identity(t.shape());
+        let mut rng = Pcg64::seeded(0);
+        assert!(propose_pairs(&t, &orders, 0, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn similar_slices_tend_to_be_paired_toward_adjacency() {
+        // two groups of identical slices; pairs should mostly propose
+        // swaps whose acceptance would juxtapose same-group slices
+        let n = 32;
+        let m = 16;
+        let mut data = vec![0.0f32; n * m];
+        let mut rng = Pcg64::seeded(9);
+        // interleave groups: even rows ~ 0, odd rows ~ 10
+        for r in 0..n {
+            let base = if r % 2 == 0 { 0.0 } else { 10.0 };
+            for c in 0..m {
+                data[r * m + c] = base + 0.01 * rng.normal();
+            }
+        }
+        let t = DenseTensor::from_data(&[n, m], data);
+        let orders = Orders::identity(t.shape());
+        let pairs = propose_pairs(&t, &orders, 0, &mut rng);
+        check_disjoint(&pairs, n);
+        assert!(!pairs.is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let t = DenseTensor::random_uniform(&[40, 12], 5);
+        let orders = Orders::identity(t.shape());
+        let a = propose_pairs(&t, &orders, 0, &mut Pcg64::seeded(7));
+        let b = propose_pairs(&t, &orders, 0, &mut Pcg64::seeded(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,118 @@
+//! Mode-index reordering (Section IV-D of the paper).
+//!
+//! * [`Orders`] — the set π of per-mode bijections (compressed alongside θ).
+//! * [`tsp`] — order initialisation: 2-approximate metric TSP over slice
+//!   distances (Prim MST + preorder walk, heaviest cycle edge dropped).
+//! * [`lsh`] — per-epoch swap proposals: slices are projected onto a random
+//!   direction, bucketed (locality-sensitive hashing for Euclidean
+//!   distance), and paired with the paper's XOR trick; the trainer accepts
+//!   a swap when it reduces the loss (Alg. 3 lines 22-24).
+
+pub mod lsh;
+pub mod tsp;
+
+use crate::util::Pcg64;
+
+/// The set π = (π_1..π_d). `perms[k][new_index] = old_index`, i.e. entry
+/// `(i_1..i_d)` of the reordered tensor X_π is `X(π_1(i_1)..π_d(i_d))` —
+/// exactly the paper's convention.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Orders {
+    pub perms: Vec<Vec<usize>>,
+}
+
+impl Orders {
+    /// Identity orders for a given shape.
+    pub fn identity(shape: &[usize]) -> Orders {
+        Orders {
+            perms: shape.iter().map(|&n| (0..n).collect()).collect(),
+        }
+    }
+
+    /// Random orders (used in tests / ablations).
+    pub fn random(shape: &[usize], rng: &mut Pcg64) -> Orders {
+        Orders {
+            perms: shape.iter().map(|&n| rng.permutation(n)).collect(),
+        }
+    }
+
+    pub fn shape(&self) -> Vec<usize> {
+        self.perms.iter().map(|p| p.len()).collect()
+    }
+
+    /// Map a reordered index to the original index (apply π).
+    #[inline]
+    pub fn to_original(&self, reordered: &[usize], out: &mut [usize]) {
+        for (k, &i) in reordered.iter().enumerate() {
+            out[k] = self.perms[k][i];
+        }
+    }
+
+    /// Inverse permutations: `inv[k][old_index] = new_index`.
+    pub fn inverses(&self) -> Vec<Vec<usize>> {
+        self.perms
+            .iter()
+            .map(|p| {
+                let mut inv = vec![0usize; p.len()];
+                for (new_i, &old_i) in p.iter().enumerate() {
+                    inv[old_i] = new_i;
+                }
+                inv
+            })
+            .collect()
+    }
+
+    /// Swap the images of two positions in mode `k` (Alg. 3 line 24).
+    pub fn swap(&mut self, k: usize, i: usize, j: usize) {
+        self.perms[k].swap(i, j);
+    }
+
+    /// Validity check: every perm must be a bijection.
+    pub fn is_valid(&self) -> bool {
+        self.perms.iter().all(|p| {
+            let mut seen = vec![false; p.len()];
+            p.iter().all(|&x| {
+                if x >= p.len() || seen[x] {
+                    false
+                } else {
+                    seen[x] = true;
+                    true
+                }
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_maps_to_self() {
+        let o = Orders::identity(&[3, 4]);
+        let mut out = [9usize; 2];
+        o.to_original(&[2, 3], &mut out);
+        assert_eq!(out, [2, 3]);
+        assert!(o.is_valid());
+    }
+
+    #[test]
+    fn inverses_compose_to_identity() {
+        let mut rng = Pcg64::seeded(0);
+        let o = Orders::random(&[7, 5, 9], &mut rng);
+        let inv = o.inverses();
+        for k in 0..3 {
+            for old in 0..o.perms[k].len() {
+                assert_eq!(o.perms[k][inv[k][old]], old);
+            }
+        }
+    }
+
+    #[test]
+    fn swap_keeps_bijection() {
+        let mut rng = Pcg64::seeded(1);
+        let mut o = Orders::random(&[10], &mut rng);
+        o.swap(0, 2, 7);
+        assert!(o.is_valid());
+    }
+}

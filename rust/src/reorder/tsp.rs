@@ -1,0 +1,249 @@
+//! Order initialisation via 2-approximate metric TSP (paper Eq. 6).
+//!
+//! Nodes are mode-k slices, edge weights are Frobenius distances between
+//! slices. The classic 2-approximation builds an MST (Prim), walks it in
+//! preorder to get a tour, and — following the paper — the heaviest edge of
+//! the tour is deleted to obtain a path; node i of the path becomes π_k(i).
+//!
+//! For large modes the O(N_k² · slice) distance evaluations dominate, so
+//! slices are first sketched by projection onto `SKETCH_DIM` random
+//! Gaussian directions (Johnson-Lindenstrauss); distances in sketch space
+//! approximate Frobenius distances well enough for ordering purposes. The
+//! sketch kicks in only above a work threshold, so small tensors still get
+//! exact distances.
+
+use crate::tensor::DenseTensor;
+use crate::util::Pcg64;
+
+const SKETCH_DIM: usize = 64;
+/// Above this many f32 mults for the exact distance matrix, sketch first.
+const EXACT_WORK_LIMIT: usize = 200_000_000;
+
+/// Compute the initial order for mode `k`: a permutation `perm` with
+/// `perm[position] = slice index`, minimising Eq. 6 approximately.
+pub fn init_order(t: &DenseTensor, k: usize, seed: u64) -> Vec<usize> {
+    let n = t.shape()[k];
+    if n <= 2 {
+        return (0..n).collect();
+    }
+    let slice_len = t.len() / n;
+    let exact_work = n * n * slice_len / 2;
+    if exact_work <= EXACT_WORK_LIMIT {
+        let dist = |i: usize, j: usize| t.slice_distance(k, i, j);
+        mst_preorder_path(n, dist)
+    } else {
+        let sketches = sketch_slices(t, k, seed);
+        let dist = move |i: usize, j: usize| {
+            let a = &sketches[i * SKETCH_DIM..(i + 1) * SKETCH_DIM];
+            let b = &sketches[j * SKETCH_DIM..(j + 1) * SKETCH_DIM];
+            a.iter()
+                .zip(b)
+                .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        mst_preorder_path(n, dist)
+    }
+}
+
+/// Project each mode-k slice onto SKETCH_DIM random Gaussian directions.
+/// JL scaling (1/sqrt(dim)) keeps sketch distances ≈ true distances.
+fn sketch_slices(t: &DenseTensor, k: usize, seed: u64) -> Vec<f32> {
+    let n = t.shape()[k];
+    let slice_len = t.len() / n;
+    let mut rng = Pcg64::new(seed, 0x73ce7c5);
+    let scale = 1.0 / (SKETCH_DIM as f32).sqrt();
+    let mut sketches = vec![0.0f32; n * SKETCH_DIM];
+    let mut dir = vec![0.0f32; slice_len];
+    for s in 0..SKETCH_DIM {
+        for v in dir.iter_mut() {
+            *v = rng.normal() * scale;
+        }
+        for i in 0..n {
+            sketches[i * SKETCH_DIM + s] = t.slice_dot(k, i, &dir) as f32;
+        }
+    }
+    sketches
+}
+
+/// Prim MST + preorder walk + heaviest-tour-edge deletion.
+fn mst_preorder_path(n: usize, dist: impl Fn(usize, usize) -> f64) -> Vec<usize> {
+    // Prim from node 0.
+    let mut in_tree = vec![false; n];
+    let mut best = vec![f64::INFINITY; n];
+    let mut parent = vec![usize::MAX; n];
+    best[0] = 0.0;
+    for _ in 0..n {
+        let u = (0..n)
+            .filter(|&i| !in_tree[i])
+            .min_by(|&a, &b| best[a].partial_cmp(&best[b]).unwrap())
+            .unwrap();
+        in_tree[u] = true;
+        for v in 0..n {
+            if !in_tree[v] {
+                let d = dist(u, v);
+                if d < best[v] {
+                    best[v] = d;
+                    parent[v] = u;
+                }
+            }
+        }
+    }
+    // children lists, preorder DFS (iterative)
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for v in 1..n {
+        children[parent[v]].push(v);
+    }
+    let mut tour = Vec::with_capacity(n);
+    let mut stack = vec![0usize];
+    while let Some(u) = stack.pop() {
+        tour.push(u);
+        // push children in reverse so the first child is visited first
+        for &c in children[u].iter().rev() {
+            stack.push(c);
+        }
+    }
+    // close the tour, drop the heaviest edge, unroll to a path
+    let mut heaviest = 0usize; // index of edge (tour[i], tour[i+1 mod n])
+    let mut heaviest_w = f64::NEG_INFINITY;
+    for i in 0..n {
+        let w = dist(tour[i], tour[(i + 1) % n]);
+        if w > heaviest_w {
+            heaviest_w = w;
+            heaviest = i;
+        }
+    }
+    // path starts after the heaviest edge
+    (0..n).map(|i| tour[(heaviest + 1 + i) % n]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Sum of adjacent-slice distances (the Eq. 6 objective).
+    fn order_cost(t: &DenseTensor, k: usize, order: &[usize]) -> f64 {
+        order
+            .windows(2)
+            .map(|w| t.slice_distance(k, w[0], w[1]))
+            .sum()
+    }
+
+    fn shuffled_ramp_tensor() -> (DenseTensor, Vec<usize>) {
+        // rows of a matrix are points on a line, shuffled; optimal order is
+        // the sorted order.
+        let n = 24;
+        let m = 16;
+        let mut rng = Pcg64::seeded(0);
+        let perm = rng.permutation(n);
+        let mut data = vec![0.0f32; n * m];
+        for (row, &v) in perm.iter().enumerate() {
+            for c in 0..m {
+                data[row * m + c] = v as f32;
+            }
+        }
+        (DenseTensor::from_data(&[n, m], data), perm)
+    }
+
+    #[test]
+    fn recovers_linear_order() {
+        let (t, _) = shuffled_ramp_tensor();
+        let order = init_order(&t, 0, 0);
+        // on a metric line the 2-approx recovers the exact sorted order
+        let values: Vec<f32> = order.iter().map(|&i| t.at(&[i, 0])).collect();
+        let ascending = values.windows(2).all(|w| w[0] <= w[1]);
+        let descending = values.windows(2).all(|w| w[0] >= w[1]);
+        assert!(
+            ascending || descending,
+            "order not monotone: {values:?}"
+        );
+    }
+
+    #[test]
+    fn cost_no_worse_than_identity_or_random() {
+        let mut rng = Pcg64::seeded(3);
+        let data: Vec<f32> = (0..30 * 40)
+            .map(|i| ((i % 17) as f32).sin() + rng.normal() * 0.3)
+            .collect();
+        let t = DenseTensor::from_data(&[30, 40], data);
+        let order = init_order(&t, 0, 1);
+        let ident: Vec<usize> = (0..30).collect();
+        let random = rng.permutation(30);
+        let c_tsp = order_cost(&t, 0, &order);
+        let c_id = order_cost(&t, 0, &ident);
+        let c_rand = order_cost(&t, 0, &random);
+        assert!(c_tsp <= c_id * 1.0001, "tsp {c_tsp} vs id {c_id}");
+        assert!(c_tsp <= c_rand * 1.0001, "tsp {c_tsp} vs rand {c_rand}");
+    }
+
+    #[test]
+    fn output_is_permutation() {
+        let t = DenseTensor::random_uniform(&[13, 5, 4], 7);
+        for k in 0..3 {
+            let order = init_order(&t, k, 2);
+            let mut seen = vec![false; t.shape()[k]];
+            for &i in &order {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_preserves_order_quality() {
+        // force the sketch path by constructing with a low threshold via
+        // sketch_slices directly: sketch distances correlate with true ones
+        // structured rows (varying scales) so true pairwise distances have
+        // real spread — uniform noise concentrates distances and makes the
+        // correlation statistic meaningless
+        let mut rng = Pcg64::seeded(11);
+        let mut data = vec![0.0f32; 20 * 50];
+        for r in 0..20 {
+            let scale = (r as f32 * 0.35).exp().min(30.0);
+            for c in 0..50 {
+                data[r * 50 + c] = scale * (0.5 + rng.normal());
+            }
+        }
+        let t = DenseTensor::from_data(&[20, 50], data);
+        let sk = sketch_slices(&t, 0, 5);
+        let mut exact = Vec::new();
+        let mut approx = Vec::new();
+        for i in 0..20 {
+            for j in (i + 1)..20 {
+                exact.push(t.slice_distance(0, i, j));
+                let a = &sk[i * SKETCH_DIM..(i + 1) * SKETCH_DIM];
+                let b = &sk[j * SKETCH_DIM..(j + 1) * SKETCH_DIM];
+                approx.push(
+                    a.iter()
+                        .zip(b)
+                        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                        .sum::<f64>()
+                        .sqrt(),
+                );
+            }
+        }
+        // Pearson correlation must be strong
+        let n = exact.len() as f64;
+        let me = exact.iter().sum::<f64>() / n;
+        let ma = approx.iter().sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut ve = 0.0;
+        let mut va = 0.0;
+        for (e, a) in exact.iter().zip(&approx) {
+            cov += (e - me) * (a - ma);
+            ve += (e - me) * (e - me);
+            va += (a - ma) * (a - ma);
+        }
+        let corr = cov / (ve.sqrt() * va.sqrt());
+        assert!(corr > 0.7, "corr={corr}");
+    }
+
+    #[test]
+    fn tiny_modes() {
+        let t = DenseTensor::random_uniform(&[1, 8], 0);
+        assert_eq!(init_order(&t, 0, 0), vec![0]);
+        let t2 = DenseTensor::random_uniform(&[2, 8], 0);
+        let o = init_order(&t2, 0, 0);
+        assert_eq!(o.len(), 2);
+    }
+}

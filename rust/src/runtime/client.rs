@@ -1,0 +1,83 @@
+//! PJRT client wrapper with a compiled-executable cache.
+
+use super::manifest::{default_dir, ArtifactInfo, Manifest};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// A PJRT CPU client plus the artifact inventory and a compile cache.
+///
+/// Not `Send`: XLA objects hold raw pointers. The coordinator confines the
+/// runtime to a dedicated executor thread and communicates over channels.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over the default artifacts directory.
+    pub fn cpu() -> Result<Runtime> {
+        Self::with_dir(&default_dir())
+    }
+
+    /// Create a CPU runtime over an explicit artifacts directory.
+    pub fn with_dir(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Find artifact metadata by configuration.
+    pub fn find(
+        &self,
+        variant: &str,
+        kind: &str,
+        dp: usize,
+        h: usize,
+        r: usize,
+    ) -> Result<ArtifactInfo> {
+        self.manifest
+            .find(variant, kind, dp, h, r)
+            .cloned()
+            .with_context(|| {
+                format!(
+                    "no artifact {variant}/{kind} dp={dp} h={h} r={r}; \
+                     available budgets at this dp: {:?} (re-run `make artifacts` \
+                     after extending python/compile/configs.py)",
+                    self.manifest.trainable_budgets(variant, dp)
+                )
+            })
+    }
+
+    /// Load + compile an artifact (cached per runtime).
+    pub fn compile(&mut self, info: &ArtifactInfo) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.get(&info.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(info);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {}", info.name))?;
+        let exe = Rc::new(exe);
+        self.cache.insert(info.name.clone(), exe.clone());
+        Ok(exe)
+    }
+}

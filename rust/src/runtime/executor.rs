@@ -1,0 +1,237 @@
+//! Executors: typed wrappers around the compiled artifacts.
+//!
+//! `ForwardExec` runs bulk entry reconstruction (`params, idx -> values`);
+//! `TrainExec` owns the optimisation state and runs the fused
+//! forward+backward+Adam step. Both marshal flat f32/i32 host buffers into
+//! XLA literals; the batch shape is fixed by the artifact, with ragged
+//! tails padded (and masked by zero weights on the train path).
+
+use super::client::Runtime;
+use super::manifest::ArtifactInfo;
+use crate::nttd::ModelParams;
+use anyhow::{bail, Context, Result};
+use std::rc::Rc;
+
+fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+fn param_literals(params: &ModelParams) -> Result<Vec<xla::Literal>> {
+    params
+        .bufs
+        .iter()
+        .zip(&params.shapes)
+        .map(|(buf, shape)| lit_f32(buf, shape))
+        .collect()
+}
+
+/// Bulk reconstruction executor.
+pub struct ForwardExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub info: ArtifactInfo,
+    param_lits: Vec<xla::Literal>,
+    /// scratch for padded final chunks
+    pad_idx: Vec<i32>,
+}
+
+impl ForwardExec {
+    /// Compile (cached) and bind parameters.
+    pub fn new(rt: &mut Runtime, info: &ArtifactInfo, params: &ModelParams) -> Result<Self> {
+        if info.kind != "fwd" {
+            bail!("ForwardExec needs a fwd artifact, got {}", info.name);
+        }
+        let exe = rt.compile(info)?;
+        Ok(ForwardExec {
+            exe,
+            info: info.clone(),
+            param_lits: param_literals(params)?,
+            pad_idx: vec![0i32; info.batch * info.dp],
+        })
+    }
+
+    /// Re-bind parameters (after a train step batch).
+    pub fn set_params(&mut self, params: &ModelParams) -> Result<()> {
+        self.param_lits = param_literals(params)?;
+        Ok(())
+    }
+
+    pub fn batch(&self) -> usize {
+        self.info.batch
+    }
+
+    pub fn dp(&self) -> usize {
+        self.info.dp
+    }
+
+    /// Reconstruct `n = idx.len()/dp` entries; appends to `out`.
+    ///
+    /// `idx` is row-major `[n, dp]` folded digits. Chunks of `batch` are
+    /// executed; the ragged tail is padded with zeros and discarded.
+    pub fn run(&mut self, idx: &[i32], out: &mut Vec<f32>) -> Result<()> {
+        let dp = self.info.dp;
+        let b = self.info.batch;
+        assert_eq!(idx.len() % dp, 0);
+        let n = idx.len() / dp;
+        out.reserve(n);
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(b);
+            let chunk = &idx[done * dp..(done + take) * dp];
+            let lit = if take == b {
+                lit_i32(chunk, &[b, dp])?
+            } else {
+                self.pad_idx[..take * dp].copy_from_slice(chunk);
+                self.pad_idx[take * dp..].fill(0);
+                lit_i32(&self.pad_idx, &[b, dp])?
+            };
+            let mut args: Vec<&xla::Literal> = self.param_lits.iter().collect();
+            args.push(&lit);
+            let result = self.exe.execute::<&xla::Literal>(&args)?[0][0]
+                .to_literal_sync()
+                .context("fetch fwd result")?;
+            let vals = result.to_tuple1()?;
+            let v = vals.to_vec::<f32>()?;
+            out.extend_from_slice(&v[..take]);
+            done += take;
+        }
+        Ok(())
+    }
+}
+
+/// Training executor: owns parameters and Adam state.
+pub struct TrainExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub info: ArtifactInfo,
+    params: ModelParams,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: u64,
+}
+
+impl TrainExec {
+    pub fn new(rt: &mut Runtime, info: &ArtifactInfo, params: ModelParams) -> Result<Self> {
+        if info.kind != "train" {
+            bail!("TrainExec needs a train artifact, got {}", info.name);
+        }
+        // Validate the parameter layout against the manifest.
+        if info.params.len() != params.bufs.len() {
+            bail!(
+                "artifact {} expects {} params, model has {}",
+                info.name,
+                info.params.len(),
+                params.bufs.len()
+            );
+        }
+        for ((name, shape), have) in info.params.iter().zip(&params.shapes) {
+            if shape != have {
+                bail!("param {name}: artifact shape {shape:?} != model {have:?}");
+            }
+        }
+        let exe = rt.compile(info)?;
+        let m = params.bufs.iter().map(|b| vec![0.0; b.len()]).collect();
+        let v = params.bufs.iter().map(|b| vec![0.0; b.len()]).collect();
+        Ok(TrainExec {
+            exe,
+            info: info.clone(),
+            params,
+            m,
+            v,
+            t: 0,
+        })
+    }
+
+    pub fn params(&self) -> &ModelParams {
+        &self.params
+    }
+
+    pub fn batch(&self) -> usize {
+        self.info.batch
+    }
+
+    pub fn dp(&self) -> usize {
+        self.info.dp
+    }
+
+    /// Re-initialise the Adam state (the paper does this after each
+    /// reordering step, since the loss surface changes).
+    pub fn reset_optimizer(&mut self) {
+        for b in &mut self.m {
+            b.fill(0.0);
+        }
+        for b in &mut self.v {
+            b.fill(0.0);
+        }
+        self.t = 0;
+    }
+
+    /// One fused train step over a full `[batch, dp]` index block.
+    ///
+    /// `weights` masks padded rows (0.0 = ignore). Returns the batch loss.
+    pub fn step(
+        &mut self,
+        idx: &[i32],
+        targets: &[f32],
+        weights: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let b = self.info.batch;
+        let dp = self.info.dp;
+        assert_eq!(idx.len(), b * dp);
+        assert_eq!(targets.len(), b);
+        assert_eq!(weights.len(), b);
+        self.t += 1;
+
+        let n = self.params.bufs.len();
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(3 * n + 5);
+        for (buf, shape) in self.params.bufs.iter().zip(&self.params.shapes) {
+            lits.push(lit_f32(buf, shape)?);
+        }
+        for (buf, shape) in self.m.iter().zip(&self.params.shapes) {
+            lits.push(lit_f32(buf, shape)?);
+        }
+        for (buf, shape) in self.v.iter().zip(&self.params.shapes) {
+            lits.push(lit_f32(buf, shape)?);
+        }
+        lits.push(xla::Literal::from(self.t as f32));
+        lits.push(lit_i32(idx, &[b, dp])?);
+        lits.push(lit_f32(targets, &[b])?);
+        lits.push(lit_f32(weights, &[b])?);
+        lits.push(xla::Literal::from(lr));
+
+        let args: Vec<&xla::Literal> = lits.iter().collect();
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .context("fetch train result")?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 3 * n + 1 {
+            bail!("train step returned {} outputs, want {}", outs.len(), 3 * n + 1);
+        }
+        for (i, out) in outs.iter().enumerate().take(n) {
+            out.copy_raw_to(&mut self.params.bufs[i])?;
+        }
+        for i in 0..n {
+            outs[n + i].copy_raw_to(&mut self.m[i])?;
+        }
+        for i in 0..n {
+            outs[2 * n + i].copy_raw_to(&mut self.v[i])?;
+        }
+        let loss: f32 = outs[3 * n].get_first_element()?;
+        Ok(loss)
+    }
+}

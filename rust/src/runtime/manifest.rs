@@ -1,0 +1,215 @@
+//! Parser for `artifacts/manifest.txt` (the serde-free twin of
+//! `manifest.json` that `python/compile/aot.py` emits).
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub variant: String, // "tc" | "nk"
+    pub kind: String,    // "fwd" | "train"
+    pub dp: usize,
+    pub vocab: usize,
+    pub h: usize,
+    pub r: usize,
+    pub batch: usize,
+    /// (param name, shape) in entry-point order.
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+/// The full artifact inventory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let mut vocab = 0usize;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            match fields[0] {
+                "vocab" => {
+                    vocab = fields
+                        .get(1)
+                        .context("vocab line missing value")?
+                        .parse()?;
+                }
+                "artifact" => {
+                    if fields.len() != 11 {
+                        bail!("manifest line {}: expected 11 fields", lineno + 1);
+                    }
+                    let params = fields[10]
+                        .split(',')
+                        .map(|p| -> Result<(String, Vec<usize>)> {
+                            let (name, dims) = p
+                                .split_once(':')
+                                .with_context(|| format!("bad param spec {p}"))?;
+                            let shape = dims
+                                .split('x')
+                                .map(|d| d.parse::<usize>().context("bad dim"))
+                                .collect::<Result<Vec<_>>>()?;
+                            Ok((name.to_string(), shape))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    artifacts.push(ArtifactInfo {
+                        name: fields[1].to_string(),
+                        file: fields[2].to_string(),
+                        variant: fields[3].to_string(),
+                        kind: fields[4].to_string(),
+                        dp: fields[5].parse()?,
+                        vocab: fields[6].parse()?,
+                        h: fields[7].parse()?,
+                        r: fields[8].parse()?,
+                        batch: fields[9].parse()?,
+                        params,
+                    });
+                }
+                other => bail!("manifest line {}: unknown tag {other}", lineno + 1),
+            }
+        }
+        if vocab == 0 || artifacts.is_empty() {
+            bail!("manifest at {} is empty/invalid", path.display());
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            vocab,
+            artifacts,
+        })
+    }
+
+    /// Find an artifact by configuration; when several batch sizes exist
+    /// the largest is returned (bulk-throughput default).
+    pub fn find(
+        &self,
+        variant: &str,
+        kind: &str,
+        dp: usize,
+        h: usize,
+        r: usize,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.variant == variant && a.kind == kind && a.dp == dp && a.h == h && a.r == r
+            })
+            .max_by_key(|a| a.batch)
+    }
+
+    /// Find an artifact with an exact batch size.
+    pub fn find_batch(
+        &self,
+        variant: &str,
+        kind: &str,
+        dp: usize,
+        h: usize,
+        r: usize,
+        batch: usize,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.variant == variant
+                && a.kind == kind
+                && a.dp == dp
+                && a.h == h
+                && a.r == r
+                && a.batch == batch
+        })
+    }
+
+    /// All distinct (h, r) pairs with both fwd and train artifacts at `dp`.
+    pub fn trainable_budgets(&self, variant: &str, dp: usize) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.variant == variant && a.kind == "train" && a.dp == dp)
+            .filter(|a| self.find(variant, "fwd", dp, a.h, a.r).is_some())
+            .map(|a| (a.h, a.r))
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    pub fn artifact_path(&self, info: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&info.file)
+    }
+}
+
+/// Default artifacts directory: `$TENSORCODEC_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("TENSORCODEC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(content: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tcz_manifest_{}", content.len()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), content).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = write_manifest(
+            "vocab 32\n\
+             artifact tc_fwd_dp9_h8_r8_b8192 f.hlo.txt tc fwd 9 32 8 8 8192 emb:9x32x8,b1:8\n\
+             artifact tc_train_dp9_h8_r8_b2048 t.hlo.txt tc train 9 32 8 8 2048 emb:9x32x8,b1:8\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.vocab, 32);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find("tc", "fwd", 9, 8, 8).unwrap();
+        assert_eq!(a.batch, 8192);
+        assert_eq!(a.params[0], ("emb".to_string(), vec![9, 32, 8]));
+        assert!(m.find("tc", "fwd", 10, 8, 8).is_none());
+        assert_eq!(m.trainable_budgets("tc", 9), vec![(8, 8)]);
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = std::env::temp_dir().join("tcz_manifest_nonexistent");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_line() {
+        let dir = write_manifest("vocab 32\nartifact short line\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() > 50);
+            assert!(m.find("tc", "train", 9, 8, 8).is_some());
+            assert!(m.find("tc", "fwd", 18, 8, 8).is_some());
+            assert!(m.find("nk", "train", 9, 8, 0).is_some());
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-lowered HLO-text artifacts and executes
+//! them from the Rust hot path (no Python anywhere at runtime).
+//!
+//! The pattern follows `/opt/xla-example/load_hlo/`:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+
+pub mod client;
+pub mod executor;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use executor::{ForwardExec, TrainExec};
+pub use manifest::{ArtifactInfo, Manifest};

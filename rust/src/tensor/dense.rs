@@ -1,0 +1,334 @@
+//! Row-major dense tensor of f32 values.
+
+use crate::util::Pcg64;
+
+/// A d-order dense tensor, row-major (last mode fastest).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseTensor {
+    shape: Vec<usize>,
+    strides: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl DenseTensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self::from_data(shape, vec![0.0; n])
+    }
+
+    /// Take ownership of a row-major buffer.
+    pub fn from_data(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        assert!(!shape.is_empty(), "0-order tensors are not supported");
+        let strides = Self::row_major_strides(shape);
+        DenseTensor {
+            shape: shape.to_vec(),
+            strides,
+            data,
+        }
+    }
+
+    fn row_major_strides(shape: &[usize]) -> Vec<usize> {
+        let mut strides = vec![1usize; shape.len()];
+        for k in (0..shape.len().saturating_sub(1)).rev() {
+            strides[k] = strides[k + 1] * shape[k + 1];
+        }
+        strides
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn order(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Largest mode length (the paper's `N_max`).
+    pub fn n_max(&self) -> usize {
+        *self.shape.iter().max().unwrap()
+    }
+
+    /// Linear offset of a multi-index.
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        idx.iter()
+            .zip(&self.strides)
+            .map(|(i, s)| i * s)
+            .sum::<usize>()
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Decompose a linear offset back into a multi-index.
+    pub fn unravel(&self, mut lin: usize) -> Vec<usize> {
+        let mut idx = vec![0usize; self.shape.len()];
+        for k in 0..self.shape.len() {
+            idx[k] = lin / self.strides[k];
+            lin %= self.strides[k];
+        }
+        idx
+    }
+
+    /// Frobenius norm (Eq. 1 of the paper), accumulated in f64.
+    pub fn frobenius(&self) -> f64 {
+        self.data
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// ‖self − other‖_F (shapes must match).
+    pub fn frobenius_diff(&self, other: &DenseTensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Copy the values of the `i`-th slice along mode `k` into `out`.
+    ///
+    /// The slice is the sub-tensor `X(:,..,i,..,:)` flattened row-major
+    /// with mode `k` removed; its length is `len()/shape[k]`.
+    pub fn copy_slice(&self, k: usize, i: usize, out: &mut Vec<f32>) {
+        out.clear();
+        let slice_len = self.len() / self.shape[k];
+        out.reserve(slice_len);
+        let inner: usize = self.strides[k]; // product of mode lengths after k
+        let outer = self.len() / (inner * self.shape[k]);
+        let base = i * inner;
+        for o in 0..outer {
+            let start = o * inner * self.shape[k] + base;
+            out.extend_from_slice(&self.data[start..start + inner]);
+        }
+    }
+
+    /// Frobenius distance between slice `i` and slice `j` along mode `k`,
+    /// computed in place without materialising either slice.
+    pub fn slice_distance(&self, k: usize, i: usize, j: usize) -> f64 {
+        let inner = self.strides[k];
+        let outer = self.len() / (inner * self.shape[k]);
+        let mut acc = 0.0f64;
+        for o in 0..outer {
+            let row = o * inner * self.shape[k];
+            let a = row + i * inner;
+            let b = row + j * inner;
+            for t in 0..inner {
+                let d = (self.data[a + t] - self.data[b + t]) as f64;
+                acc += d * d;
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// Dot product of slice `i` (along mode `k`) with a vector of slice
+    /// length — used by the LSH projection in the reorderer.
+    pub fn slice_dot(&self, k: usize, i: usize, v: &[f32]) -> f64 {
+        let inner = self.strides[k];
+        let outer = self.len() / (inner * self.shape[k]);
+        debug_assert_eq!(v.len(), inner * outer);
+        let mut acc = 0.0f64;
+        for o in 0..outer {
+            let a = o * inner * self.shape[k] + i * inner;
+            let vb = o * inner;
+            for t in 0..inner {
+                acc += self.data[a + t] as f64 * v[vb + t] as f64;
+            }
+        }
+        acc
+    }
+
+    /// Norm of slice `i` along mode `k`.
+    pub fn slice_norm(&self, k: usize, i: usize) -> f64 {
+        let inner = self.strides[k];
+        let outer = self.len() / (inner * self.shape[k]);
+        let mut acc = 0.0f64;
+        for o in 0..outer {
+            let a = o * inner * self.shape[k] + i * inner;
+            for t in 0..inner {
+                acc += (self.data[a + t] as f64).powi(2);
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// Materialise the tensor with mode-`k` indices permuted:
+    /// `out(i_k) = self(perm[i_k])` — i.e. `perm` maps new index → old.
+    pub fn permute_mode(&self, k: usize, perm: &[usize]) -> DenseTensor {
+        assert_eq!(perm.len(), self.shape[k]);
+        let mut out = DenseTensor::zeros(&self.shape);
+        let inner = self.strides[k];
+        let outer = self.len() / (inner * self.shape[k]);
+        for o in 0..outer {
+            let row = o * inner * self.shape[k];
+            for (new_i, &old_i) in perm.iter().enumerate() {
+                let dst = row + new_i * inner;
+                let src = row + old_i * inner;
+                out.data[dst..dst + inner].copy_from_slice(&self.data[src..src + inner]);
+            }
+        }
+        out
+    }
+
+    /// Mean and population standard deviation of all entries.
+    pub fn mean_std(&self) -> (f32, f32) {
+        let n = self.len() as f64;
+        let mean = self.data.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = self
+            .data
+            .iter()
+            .map(|&v| (v as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        (mean as f32, var.sqrt() as f32)
+    }
+
+    /// Tensor with i.i.d. uniform [0,1) entries (scalability experiments).
+    pub fn random_uniform(shape: &[usize], seed: u64) -> Self {
+        let mut rng = Pcg64::seeded(seed);
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.uniform()).collect();
+        Self::from_data(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t3() -> DenseTensor {
+        // shape [2,3,2], data 0..12
+        DenseTensor::from_data(&[2, 3, 2], (0..12).map(|i| i as f32).collect())
+    }
+
+    #[test]
+    fn strides_and_indexing() {
+        let t = t3();
+        assert_eq!(t.at(&[0, 0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 0, 1]), 1.0);
+        assert_eq!(t.at(&[0, 1, 0]), 2.0);
+        assert_eq!(t.at(&[1, 0, 0]), 6.0);
+        assert_eq!(t.at(&[1, 2, 1]), 11.0);
+    }
+
+    #[test]
+    fn unravel_inverts_offset() {
+        let t = t3();
+        for lin in 0..t.len() {
+            let idx = t.unravel(lin);
+            assert_eq!(t.offset(&idx), lin);
+        }
+    }
+
+    #[test]
+    fn frobenius_matches_manual() {
+        let t = DenseTensor::from_data(&[2, 2], vec![3.0, 4.0, 0.0, 0.0]);
+        assert!((t.frobenius() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn copy_slice_mode1() {
+        let t = t3();
+        let mut s = Vec::new();
+        t.copy_slice(1, 1, &mut s); // entries with middle index 1
+        assert_eq!(s, vec![2.0, 3.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn slice_distance_matches_copy() {
+        let t = t3();
+        for k in 0..3 {
+            for i in 0..t.shape()[k] {
+                for j in 0..t.shape()[k] {
+                    let (mut a, mut b) = (Vec::new(), Vec::new());
+                    t.copy_slice(k, i, &mut a);
+                    t.copy_slice(k, j, &mut b);
+                    let manual: f64 = a
+                        .iter()
+                        .zip(&b)
+                        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                        .sum::<f64>()
+                        .sqrt();
+                    assert!((t.slice_distance(k, i, j) - manual).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn permute_mode_roundtrip() {
+        let t = t3();
+        let perm = vec![2, 0, 1];
+        let p = t.permute_mode(1, &perm);
+        for i0 in 0..2 {
+            for i1 in 0..3 {
+                for i2 in 0..2 {
+                    assert_eq!(p.at(&[i0, i1, i2]), t.at(&[i0, perm[i1], i2]));
+                }
+            }
+        }
+        // applying the inverse permutation restores the tensor
+        let mut inv = vec![0usize; 3];
+        for (new_i, &old_i) in perm.iter().enumerate() {
+            inv[old_i] = new_i;
+        }
+        assert_eq!(p.permute_mode(1, &inv), t);
+    }
+
+    #[test]
+    fn slice_dot_matches_copy() {
+        let t = t3();
+        let v: Vec<f32> = (0..4).map(|i| (i as f32) * 0.25 - 0.5).collect();
+        for i in 0..3 {
+            let mut s = Vec::new();
+            t.copy_slice(1, i, &mut s);
+            let manual: f64 = s.iter().zip(&v).map(|(&a, &b)| (a * b) as f64).sum();
+            assert!((t.slice_dot(1, i, &v) - manual).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn mean_std_of_constant() {
+        let t = DenseTensor::from_data(&[4], vec![2.0; 4]);
+        let (m, s) = t.mean_std();
+        assert!((m - 2.0).abs() < 1e-6 && s.abs() < 1e-6);
+    }
+}

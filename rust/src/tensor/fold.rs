@@ -1,0 +1,423 @@
+//! TT-tensor folding (Section IV-C of the paper, Eq. 4).
+//!
+//! Folds a d-order tensor of shape `N_1 x .. x N_d` into a d'-order tensor
+//! whose mode lengths are small products of per-mode factors `n_{k,l}`:
+//! mode `l` of the folded tensor has length `Π_k n_{k,l}`. Each original
+//! mode index is decomposed into `d'` mixed-radix digits (radices
+//! `n_{k,1..d'}`, most-significant first) and the folded mode-`l` index
+//! combines the l-th digits of all original modes.
+//!
+//! When `Π_l n_{k,l} > N_k` the folded tensor contains *phantom* entries;
+//! they are never trained on and never queried (the coordinator filters
+//! them), matching the paper's "extra entries ... are disregarded".
+//!
+//! Factor selection follows the paper's recipe: mostly 2s with a few
+//! factors up to 5 so that the padded size stays close to `N_k` (for
+//! PEMS-SF-like modes this reproduces the paper's own 1024/160/512
+//! paddings), and factors are packed across positions so that every folded
+//! mode length stays within the AOT vocabulary bound `V`.
+
+use anyhow::{bail, Result};
+
+/// Maximum folded mode length — must match `python/compile/configs.VOCAB`.
+pub const VOCAB: usize = 32;
+/// Largest single folding factor the paper uses.
+const MAX_FACTOR: usize = 5;
+/// Largest folded order with an AOT artifact (see configs.py).
+pub const MAX_DP: usize = 18;
+
+/// A fold plan: which factor of which original mode lands in which folded
+/// position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FoldSpec {
+    /// Original tensor shape (length d).
+    pub orig_shape: Vec<usize>,
+    /// Folded order d'.
+    pub dp: usize,
+    /// `factors[k][l]` = n_{k,l}; every row has length `dp`.
+    pub factors: Vec<Vec<usize>>,
+    /// Folded shape: `folded_shape[l] = Π_k factors[k][l]` (length d').
+    pub folded_shape: Vec<usize>,
+    /// Padded per-mode sizes: `padded[k] = Π_l factors[k][l] >= N_k`.
+    pub padded: Vec<usize>,
+    /// `place[k][l] = Π_{m>l} factors[k][m]` (digit place values).
+    place: Vec<Vec<usize>>,
+    /// `comb[k][l] = Π_{m>k} factors[m][l]` (digit combination weights).
+    comb: Vec<Vec<usize>>,
+}
+
+/// Minimal `c1*c2*2^e >= n` with `c1,c2 in 1..=MAX_FACTOR`, at most
+/// `max_len` total factors. Returns the factor list, descending.
+fn factorize_mode(n: usize, max_len: usize) -> Option<Vec<usize>> {
+    let mut best: Option<(usize, Vec<usize>)> = None;
+    for c1 in 1..=MAX_FACTOR {
+        for c2 in 1..=c1 {
+            let c = c1 * c2;
+            let mut e = 0u32;
+            while c << e < n {
+                e += 1;
+            }
+            let prod = c << e;
+            let count = e as usize + usize::from(c1 > 1) + usize::from(c2 > 1);
+            if count > max_len {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some((bp, bf)) => prod < *bp || (prod == *bp && count < bf.len()),
+            };
+            if better {
+                let mut f = Vec::with_capacity(count);
+                if c1 > 1 {
+                    f.push(c1);
+                }
+                if c2 > 1 {
+                    f.push(c2);
+                }
+                f.extend(std::iter::repeat(2).take(e as usize));
+                best = Some((prod, f));
+            }
+        }
+    }
+    best.map(|(_, f)| f)
+}
+
+impl FoldSpec {
+    /// Build a fold plan automatically (paper §IV-C policy).
+    ///
+    /// `min_dp` lets callers force a higher folded order (e.g. benchmark
+    /// sweeps); the folded order always satisfies `dp > d` and every folded
+    /// mode length is `<= VOCAB`.
+    pub fn auto(shape: &[usize], min_dp: usize) -> Result<FoldSpec> {
+        let d = shape.len();
+        if d == 0 {
+            bail!("empty shape");
+        }
+        if shape.iter().any(|&n| n == 0) {
+            bail!("zero-length mode");
+        }
+        // Lower bound on d': every mode must fit, and d' > d.
+        let mut dp = min_dp.max(d + 1).max(2);
+        'outer: while dp <= MAX_DP {
+            // Factor every mode.
+            let mut mode_factors = Vec::with_capacity(d);
+            for &n in shape {
+                match factorize_mode(n, dp) {
+                    Some(f) => mode_factors.push(f),
+                    None => {
+                        dp += 1;
+                        continue 'outer;
+                    }
+                }
+            }
+            // LPT-style packing: place factors (globally descending) into
+            // the position with the smallest running product, among the
+            // positions this mode has not used yet.
+            let mut factors = vec![vec![1usize; dp]; d];
+            let mut prod = vec![1usize; dp];
+            let mut items: Vec<(usize, usize)> = Vec::new(); // (factor, mode)
+            for (k, fs) in mode_factors.iter().enumerate() {
+                for &f in fs {
+                    items.push((f, k));
+                }
+            }
+            items.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+            for (f, k) in items {
+                let mut best_l = usize::MAX;
+                for l in 0..dp {
+                    if factors[k][l] != 1 {
+                        continue;
+                    }
+                    if best_l == usize::MAX || prod[l] < prod[best_l] {
+                        best_l = l;
+                    }
+                }
+                if best_l == usize::MAX || prod[best_l] * f > VOCAB {
+                    dp += 1;
+                    continue 'outer;
+                }
+                factors[k][best_l] = f;
+                prod[best_l] *= f;
+            }
+            // Note: factor order within a mode is whatever the packing
+            // produced; any mixed-radix digit order works (position 0 is
+            // always the most significant place), so locality — nearby
+            // original indices differing only in late digits — holds
+            // regardless.
+            return Ok(Self::from_factors(shape, &factors));
+        }
+        bail!(
+            "cannot fold shape {:?} within dp <= {} and vocab {}",
+            shape,
+            MAX_DP,
+            VOCAB
+        )
+    }
+
+    /// Build from an explicit factor matrix (rows = original modes).
+    pub fn from_factors(shape: &[usize], factors: &[Vec<usize>]) -> FoldSpec {
+        let d = shape.len();
+        let dp = factors[0].len();
+        assert!(factors.iter().all(|f| f.len() == dp));
+        let padded: Vec<usize> = factors.iter().map(|f| f.iter().product()).collect();
+        for (k, (&n, &p)) in shape.iter().zip(&padded).enumerate() {
+            assert!(p >= n, "mode {k}: padded {p} < size {n}");
+        }
+        let folded_shape: Vec<usize> = (0..dp)
+            .map(|l| factors.iter().map(|f| f[l]).product())
+            .collect();
+        let mut place = vec![vec![1usize; dp]; d];
+        for k in 0..d {
+            for l in (0..dp.saturating_sub(1)).rev() {
+                place[k][l] = place[k][l + 1] * factors[k][l + 1];
+            }
+        }
+        let mut comb = vec![vec![1usize; dp]; d];
+        for l in 0..dp {
+            for k in (0..d.saturating_sub(1)).rev() {
+                comb[k][l] = comb[k + 1][l] * factors[k + 1][l];
+            }
+        }
+        FoldSpec {
+            orig_shape: shape.to_vec(),
+            dp,
+            factors: factors.to_vec(),
+            folded_shape,
+            padded,
+            place,
+            comb,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.orig_shape.len()
+    }
+
+    /// Number of *real* (non-phantom) entries = Π N_k.
+    pub fn num_real(&self) -> usize {
+        self.orig_shape.iter().product()
+    }
+
+    /// Number of folded entries = Π padded_k (>= num_real).
+    pub fn num_padded(&self) -> usize {
+        self.padded.iter().product()
+    }
+
+    /// Map an original multi-index to folded digits (Eq. 4 forward).
+    ///
+    /// `out` must have length `dp`; every produced digit is
+    /// `< folded_shape[l] <= VOCAB`.
+    #[inline]
+    pub fn fold_index(&self, orig: &[usize], out: &mut [usize]) {
+        debug_assert_eq!(orig.len(), self.d());
+        debug_assert_eq!(out.len(), self.dp);
+        out.fill(0);
+        for k in 0..self.d() {
+            debug_assert!(orig[k] < self.padded[k]);
+            let mut rem = orig[k];
+            for l in 0..self.dp {
+                let digit = rem / self.place[k][l];
+                rem %= self.place[k][l];
+                out[l] += digit * self.comb[k][l];
+            }
+        }
+    }
+
+    /// Map folded digits back to the original multi-index (Eq. 4 inverse).
+    ///
+    /// Returns `false` when the digits address a phantom entry (some
+    /// recovered index `>= N_k`).
+    #[inline]
+    pub fn unfold_index(&self, folded: &[usize], out: &mut [usize]) -> bool {
+        debug_assert_eq!(folded.len(), self.dp);
+        debug_assert_eq!(out.len(), self.d());
+        out.fill(0);
+        for l in 0..self.dp {
+            let mut rem = folded[l];
+            for k in 0..self.d() {
+                let digit = rem / self.comb[k][l];
+                rem %= self.comb[k][l];
+                out[k] += digit * self.place[k][l];
+            }
+        }
+        out.iter().zip(&self.orig_shape).all(|(&i, &n)| i < n)
+    }
+
+    /// Fold directly into i32 digits (the dtype the XLA artifacts take).
+    #[inline]
+    pub fn fold_index_i32(&self, orig: &[usize], out: &mut [i32]) {
+        debug_assert_eq!(out.len(), self.dp);
+        out.fill(0);
+        for k in 0..self.d() {
+            let mut rem = orig[k];
+            for l in 0..self.dp {
+                let digit = rem / self.place[k][l];
+                rem %= self.place[k][l];
+                out[l] += (digit * self.comb[k][l]) as i32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn factorize_at_least_as_tight_as_paper() {
+        // PEMS-SF paddings from the paper: 963 -> 1024, 144 -> 160, 440 -> 512.
+        // Our search must never be worse (it is sometimes strictly better:
+        // 144 -> 144 exactly, 440 -> 480).
+        for (n, paper) in [(963usize, 1024usize), (144, 160), (440, 512)] {
+            let prod: usize = factorize_mode(n, 10).unwrap().iter().product();
+            assert!(prod >= n && prod <= paper, "n={n}: got {prod}");
+        }
+    }
+
+    #[test]
+    fn factorize_exact_powers() {
+        let f = factorize_mode(256, 8).unwrap();
+        assert_eq!(f.iter().product::<usize>(), 256);
+        assert!(f.len() <= 8);
+        assert_eq!(factorize_mode(1, 4).unwrap(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn auto_respects_bounds() {
+        for shape in [
+            vec![183, 24, 1140],
+            vec![5600, 362, 6],
+            vec![100, 570, 567],
+            vec![963, 144, 440],
+            vec![337, 570, 320],
+            vec![1317, 88, 916],
+            vec![265, 265, 28, 35],
+            vec![192, 288, 30, 120],
+        ] {
+            let spec = FoldSpec::auto(&shape, 0).unwrap();
+            assert!(spec.dp > shape.len(), "{shape:?}: dp {} too small", spec.dp);
+            assert!(spec.dp <= MAX_DP);
+            for (l, &fl) in spec.folded_shape.iter().enumerate() {
+                assert!(fl <= VOCAB, "{shape:?}: folded mode {l} = {fl} > {VOCAB}");
+            }
+            for (k, &n) in shape.iter().enumerate() {
+                assert!(spec.padded[k] >= n);
+                // padding overhead per mode stays modest (< 2x)
+                assert!(spec.padded[k] < 2 * n, "mode {k}: {} vs {n}", spec.padded[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn fold_unfold_roundtrip_exhaustive_small() {
+        let spec = FoldSpec::auto(&[6, 10, 4], 0).unwrap();
+        let mut folded = vec![0usize; spec.dp];
+        let mut back = vec![0usize; 3];
+        let mut seen = std::collections::HashSet::new();
+        for i0 in 0..6 {
+            for i1 in 0..10 {
+                for i2 in 0..4 {
+                    let orig = [i0, i1, i2];
+                    spec.fold_index(&orig, &mut folded);
+                    for (l, &f) in folded.iter().enumerate() {
+                        assert!(f < spec.folded_shape[l]);
+                    }
+                    assert!(seen.insert(folded.clone()), "collision at {orig:?}");
+                    assert!(spec.unfold_index(&folded, &mut back));
+                    assert_eq!(back, orig);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_unfold_roundtrip_random_large() {
+        let shape = vec![963, 144, 440];
+        let spec = FoldSpec::auto(&shape, 0).unwrap();
+        let mut rng = Pcg64::seeded(9);
+        let mut folded = vec![0usize; spec.dp];
+        let mut back = vec![0usize; shape.len()];
+        for _ in 0..20_000 {
+            let orig: Vec<usize> = shape.iter().map(|&n| rng.below(n)).collect();
+            spec.fold_index(&orig, &mut folded);
+            assert!(spec.unfold_index(&folded, &mut back));
+            assert_eq!(back, orig);
+        }
+    }
+
+    #[test]
+    fn phantom_entries_detected() {
+        // shape 6 padded to 8 along a mode: folded indices covering 6..8
+        // must unfold to out-of-range and report false.
+        let spec = FoldSpec::auto(&[6, 4], 0).unwrap();
+        let mut n_phantom = 0;
+        let mut folded = vec![0usize; spec.dp];
+        let mut back = vec![0usize; 2];
+        let mut lin_iter = vec![0usize; spec.dp];
+        loop {
+            folded.copy_from_slice(&lin_iter);
+            if !spec.unfold_index(&folded, &mut back) {
+                n_phantom += 1;
+            }
+            // advance odometer
+            let mut l = spec.dp;
+            loop {
+                if l == 0 {
+                    break;
+                }
+                l -= 1;
+                lin_iter[l] += 1;
+                if lin_iter[l] < spec.folded_shape[l] {
+                    break;
+                }
+                lin_iter[l] = 0;
+                if l == 0 {
+                    let total = spec.num_padded();
+                    assert_eq!(total - spec.num_real(), n_phantom);
+                    return;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn neighboring_indices_share_high_digits() {
+        // Locality: indices i and i+1 in one mode share all digits except a
+        // suffix (carries only propagate upward from the least significant).
+        let spec = FoldSpec::auto(&[64, 64, 64], 0).unwrap();
+        let mut a = vec![0usize; spec.dp];
+        let mut b = vec![0usize; spec.dp];
+        let mut diff_hist = 0usize;
+        for i in 0..63 {
+            spec.fold_index(&[i, 10, 10], &mut a);
+            spec.fold_index(&[i + 1, 10, 10], &mut b);
+            let first_diff = (0..spec.dp).find(|&l| a[l] != b[l]).unwrap();
+            // at least half the transitions should only touch the last digit
+            if first_diff == spec.dp - 1 {
+                diff_hist += 1;
+            }
+        }
+        assert!(diff_hist >= 31, "only {diff_hist} single-digit transitions");
+    }
+
+    #[test]
+    fn i32_fold_matches_usize_fold() {
+        let spec = FoldSpec::auto(&[50, 30], 0).unwrap();
+        let mut rng = Pcg64::seeded(3);
+        let mut a = vec![0usize; spec.dp];
+        let mut b = vec![0i32; spec.dp];
+        for _ in 0..1000 {
+            let orig = [rng.below(50), rng.below(30)];
+            spec.fold_index(&orig, &mut a);
+            spec.fold_index_i32(&orig, &mut b);
+            assert!(a.iter().zip(&b).all(|(&x, &y)| x as i32 == y));
+        }
+    }
+
+    #[test]
+    fn min_dp_forced() {
+        let spec = FoldSpec::auto(&[64, 64, 64], 12).unwrap();
+        assert!(spec.dp >= 12);
+    }
+}

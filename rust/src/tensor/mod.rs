@@ -1,0 +1,8 @@
+//! Dense tensor substrate: storage, slicing, statistics, TT-tensor folding.
+
+pub mod dense;
+pub mod fold;
+pub mod stats;
+
+pub use dense::DenseTensor;
+pub use fold::FoldSpec;

@@ -1,0 +1,126 @@
+//! Dataset statistics from Table II of the paper: density and smoothness.
+
+use super::DenseTensor;
+
+/// Fraction of non-zero entries.
+pub fn density(t: &DenseTensor) -> f64 {
+    let nz = t.data().iter().filter(|&&v| v != 0.0).count();
+    nz as f64 / t.len() as f64
+}
+
+/// Smoothness as defined in §V-A of the paper:
+/// `1 − E_i[σ3(i)] / σ`, where `σ3(i)` is the standard deviation of the
+/// 3^d-window centred at position i (clipped at the boundary) and `σ` is
+/// the global standard deviation.
+///
+/// For large tensors the expectation is estimated over `max_centers`
+/// uniformly sampled positions (deterministic seed), which matches the
+/// paper's statistic to within sampling error.
+pub fn smoothness(t: &DenseTensor, max_centers: usize, seed: u64) -> f64 {
+    let (_, sigma) = t.mean_std();
+    if sigma == 0.0 {
+        return 1.0;
+    }
+    let d = t.order();
+    let shape = t.shape().to_vec();
+    let n = t.len();
+
+    let mut rng = crate::util::Pcg64::seeded(seed);
+    let centers: Vec<usize> = if n <= max_centers {
+        (0..n).collect()
+    } else {
+        (0..max_centers).map(|_| rng.below(n)).collect()
+    };
+
+    let mut idx = vec![0usize; d];
+    let mut cursor = vec![0usize; d];
+    let mut sum_sigma3 = 0.0f64;
+    for &lin in &centers {
+        idx.copy_from_slice(&t.unravel(lin));
+        // iterate the 3^d window around idx, clipped to bounds
+        let lo: Vec<usize> = idx.iter().map(|&i| i.saturating_sub(1)).collect();
+        let hi: Vec<usize> = idx
+            .iter()
+            .zip(&shape)
+            .map(|(&i, &nk)| (i + 1).min(nk - 1))
+            .collect();
+        cursor.copy_from_slice(&lo);
+        let mut cnt = 0usize;
+        let mut s = 0.0f64;
+        let mut s2 = 0.0f64;
+        loop {
+            let v = t.at(&cursor) as f64;
+            s += v;
+            s2 += v * v;
+            cnt += 1;
+            // odometer over [lo, hi]
+            let mut k = d;
+            loop {
+                if k == 0 {
+                    break;
+                }
+                k -= 1;
+                cursor[k] += 1;
+                if cursor[k] <= hi[k] {
+                    break;
+                }
+                cursor[k] = lo[k];
+                if k == 0 {
+                    let mean = s / cnt as f64;
+                    let var = (s2 / cnt as f64 - mean * mean).max(0.0);
+                    sum_sigma3 += var.sqrt();
+                    cnt = 0;
+                    break;
+                }
+            }
+            if cnt == 0 {
+                break;
+            }
+        }
+    }
+    let e_sigma3 = sum_sigma3 / centers.len() as f64;
+    1.0 - e_sigma3 / sigma as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn density_counts_zeros() {
+        let t = DenseTensor::from_data(&[2, 2], vec![0.0, 1.0, 2.0, 0.0]);
+        assert!((density(&t) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smoothness_of_constant_gradient_is_high() {
+        // slowly varying ramp: local σ3 tiny relative to global σ
+        let n = 64;
+        let data: Vec<f32> = (0..n * n).map(|i| (i / n) as f32).collect();
+        let t = DenseTensor::from_data(&[n, n], data);
+        let s = smoothness(&t, 4096, 0);
+        assert!(s > 0.9, "s={s}");
+    }
+
+    #[test]
+    fn smoothness_of_white_noise_is_low() {
+        let mut rng = Pcg64::seeded(1);
+        let data: Vec<f32> = (0..32 * 32 * 8).map(|_| rng.normal()).collect();
+        let t = DenseTensor::from_data(&[32, 32, 8], data);
+        let s = smoothness(&t, 4096, 0);
+        assert!(s < 0.25, "s={s}");
+    }
+
+    #[test]
+    fn smoothness_sampling_close_to_full() {
+        let mut rng = Pcg64::seeded(2);
+        let data: Vec<f32> = (0..20 * 20)
+            .map(|i| ((i / 20) as f32 * 0.3).sin() + 0.05 * rng.normal())
+            .collect();
+        let t = DenseTensor::from_data(&[20, 20], data);
+        let full = smoothness(&t, usize::MAX, 0);
+        let sampled = smoothness(&t, 200, 7);
+        assert!((full - sampled).abs() < 0.1, "{full} vs {sampled}");
+    }
+}

@@ -1,0 +1,47 @@
+//! Shared substrates: deterministic RNG, `.npy` IO, small helpers.
+
+pub mod npy;
+pub mod rng;
+
+pub use rng::Pcg64;
+
+/// Smallest `bt <= want` that divides `b` (mirrors the Pallas `_pick_block`).
+pub fn pick_block(b: usize, want: usize) -> usize {
+    let mut bt = b.min(want).max(1);
+    while b % bt != 0 {
+        bt -= 1;
+    }
+    bt
+}
+
+/// ceil(log2(n)) for n >= 1; number of bits needed to index `[n]` is
+/// `ceil_log2(n)` (with at least 1 bit for n == 1 handled by callers).
+pub fn ceil_log2(n: usize) -> u32 {
+    assert!(n >= 1);
+    usize::BITS - (n - 1).leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_block_divides() {
+        for b in [1usize, 2, 7, 100, 128, 255, 2048, 8192] {
+            let bt = pick_block(b, 128);
+            assert_eq!(b % bt, 0);
+            assert!(bt <= 128 && bt >= 1);
+        }
+    }
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
+    }
+}

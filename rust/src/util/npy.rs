@@ -1,0 +1,191 @@
+//! Minimal NumPy `.npy` (format 1.0) reader/writer for f32/f64 arrays.
+//!
+//! Lets users round-trip tensors with the Python ecosystem (and lets the
+//! pytest suite cross-check Rust-generated data) without a serde
+//! dependency. Only C-order little-endian `<f4`/`<f8` arrays are supported,
+//! which is all this project produces or consumes.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// An n-dimensional f32 array loaded from / destined for a `.npy` file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+fn build_header(descr: &str, shape: &[usize]) -> Vec<u8> {
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut dict = format!(
+        "{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // Pad with spaces so that len(magic+version+len+dict) % 64 == 0.
+    let unpadded = MAGIC.len() + 2 + 2 + dict.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    dict.push_str(&" ".repeat(pad));
+    dict.push('\n');
+    let mut out = Vec::with_capacity(MAGIC.len() + 4 + dict.len());
+    out.extend_from_slice(MAGIC);
+    out.push(1); // major
+    out.push(0); // minor
+    out.extend_from_slice(&(dict.len() as u16).to_le_bytes());
+    out.extend_from_slice(dict.as_bytes());
+    out
+}
+
+/// Write an f32 array as `.npy`.
+pub fn write_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(&build_header("<f4", shape))?;
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+fn parse_header(header: &str) -> Result<(String, bool, Vec<usize>)> {
+    let get = |key: &str| -> Result<&str> {
+        let pat = format!("'{key}':");
+        let start = header
+            .find(&pat)
+            .with_context(|| format!("missing {key} in npy header"))?
+            + pat.len();
+        Ok(header[start..].trim_start())
+    };
+    let descr_rest = get("descr")?;
+    let descr = descr_rest
+        .trim_start_matches('\'')
+        .split('\'')
+        .next()
+        .unwrap_or("")
+        .to_string();
+    let fortran = get("fortran_order")?.starts_with("True");
+    let shape_rest = get("shape")?;
+    let close = shape_rest.find(')').context("unterminated shape")?;
+    let inner = &shape_rest[1..close];
+    let shape: Vec<usize> = inner
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().context("bad shape dim"))
+        .collect::<Result<_>>()?;
+    Ok((descr, fortran, shape))
+}
+
+/// Read a `.npy` file holding `<f4` or `<f8` data (f64 is narrowed to f32).
+pub fn read_f32(path: &Path) -> Result<NpyArray> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic[..6] != MAGIC {
+        bail!("not a .npy file: {}", path.display());
+    }
+    let major = magic[6];
+    let hlen = if major == 1 {
+        let mut b = [0u8; 2];
+        f.read_exact(&mut b)?;
+        u16::from_le_bytes(b) as usize
+    } else {
+        let mut b = [0u8; 4];
+        f.read_exact(&mut b)?;
+        u32::from_le_bytes(b) as usize
+    };
+    let mut header = vec![0u8; hlen];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8_lossy(&header).to_string();
+    let (descr, fortran, shape) = parse_header(&header)?;
+    if fortran {
+        bail!("fortran_order=True not supported");
+    }
+    let n: usize = shape.iter().product();
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    let data = match descr.as_str() {
+        "<f4" => {
+            if raw.len() < n * 4 {
+                bail!("truncated npy payload");
+            }
+            raw.chunks_exact(4)
+                .take(n)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        }
+        "<f8" => {
+            if raw.len() < n * 8 {
+                bail!("truncated npy payload");
+            }
+            raw.chunks_exact(8)
+                .take(n)
+                .map(|c| {
+                    f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                        as f32
+                })
+                .collect()
+        }
+        other => bail!("unsupported dtype {other}"),
+    };
+    Ok(NpyArray { shape, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = std::env::temp_dir().join("tcz_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.npy");
+        let shape = vec![3, 4, 2];
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5 - 3.0).collect();
+        write_f32(&path, &shape, &data).unwrap();
+        let arr = read_f32(&path).unwrap();
+        assert_eq!(arr.shape, shape);
+        assert_eq!(arr.data, data);
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let dir = std::env::temp_dir().join("tcz_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.npy");
+        write_f32(&path, &[5], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let arr = read_f32(&path).unwrap();
+        assert_eq!(arr.shape, vec![5]);
+        assert_eq!(arr.data.len(), 5);
+    }
+
+    #[test]
+    fn readable_by_numpy_header_rules() {
+        // header blob length must be a multiple of 64
+        let h = build_header("<f4", &[10, 20]);
+        assert_eq!(h.len() % 64, 0);
+        assert_eq!(&h[..6], MAGIC);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("tcz_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.npy");
+        std::fs::write(&path, b"not an npy file at all").unwrap();
+        assert!(read_f32(&path).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! End-to-end CLI test: gen → compress → info → get → eval → decompress,
+//! driving the real binary the way a user would.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> PathBuf {
+    let mut p = PathBuf::from(env!("CARGO_BIN_EXE_tensorcodec"));
+    if !p.exists() {
+        p = PathBuf::from("target/release/tensorcodec");
+    }
+    p
+}
+
+fn artifacts_ready() -> bool {
+    tensorcodec::runtime::manifest::default_dir()
+        .join("manifest.txt")
+        .exists()
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn tensorcodec");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn full_cli_pipeline() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let dir = std::env::temp_dir().join("tcz_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let npy = dir.join("x.npy");
+    let tcz = dir.join("x.tcz");
+    let rec = dir.join("rec.npy");
+
+    // gen a small tensor
+    let (ok, out) = run(&[
+        "gen",
+        "--dataset",
+        "action",
+        "--scale",
+        "0.06",
+        "--data-seed",
+        "3",
+        "--out",
+        npy.to_str().unwrap(),
+    ]);
+    assert!(ok, "gen failed: {out}");
+
+    // compress it from the .npy path
+    let (ok, out) = run(&[
+        "compress",
+        "--input",
+        npy.to_str().unwrap(),
+        "--out",
+        tcz.to_str().unwrap(),
+        "--set",
+        "epochs=6",
+        "--set",
+        "r=5",
+        "--set",
+        "h=5",
+        "--set",
+        "reorder_every=3",
+    ]);
+    assert!(ok, "compress failed: {out}");
+    assert!(out.contains("fitness="), "no fitness line: {out}");
+
+    // info
+    let (ok, out) = run(&["info", "--model", tcz.to_str().unwrap()]);
+    assert!(ok && out.contains("params:"), "info failed: {out}");
+
+    // get a couple of entries
+    let (ok, out) = run(&[
+        "get",
+        "--model",
+        tcz.to_str().unwrap(),
+        "--index",
+        "0,0,0",
+        "--index",
+        "1,2,3",
+    ]);
+    assert!(ok && out.matches("->").count() == 2, "get failed: {out}");
+
+    // out-of-range index must fail
+    let (ok, _) = run(&[
+        "get",
+        "--model",
+        tcz.to_str().unwrap(),
+        "--index",
+        "9999,0,0",
+    ]);
+    assert!(!ok, "out-of-range get should fail");
+
+    // decompress and check the .npy exists with the right shape header
+    let (ok, out) = run(&[
+        "decompress",
+        "--model",
+        tcz.to_str().unwrap(),
+        "--out",
+        rec.to_str().unwrap(),
+    ]);
+    assert!(ok, "decompress failed: {out}");
+    let arr = tensorcodec::util::npy::read_f32(&rec).unwrap();
+    let orig = tensorcodec::util::npy::read_f32(&npy).unwrap();
+    assert_eq!(arr.shape, orig.shape);
+
+    // stats on a recipe
+    let (ok, out) = run(&["stats", "--dataset", "uber", "--scale", "0.06"]);
+    assert!(ok && out.contains("density="), "stats failed: {out}");
+
+    // unknown flags / commands fail cleanly
+    let (ok, _) = run(&["frobnicate"]);
+    assert!(!ok);
+}

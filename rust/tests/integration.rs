@@ -1,0 +1,195 @@
+//! Integration tests across runtime + coordinator: the XLA artifacts must
+//! agree with the pure-Rust oracle, training must reduce loss and produce
+//! a loadable `.tcz`, and the decode server must serve correct values.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); they are skipped
+//! with a message otherwise.
+
+use tensorcodec::compress::{load_tcz, save_tcz, Decompressor};
+use tensorcodec::coordinator::{TrainConfig, Trainer};
+use tensorcodec::nttd::{infer, ModelParams};
+use tensorcodec::runtime::{ForwardExec, Runtime, TrainExec};
+use tensorcodec::tensor::DenseTensor;
+use tensorcodec::util::Pcg64;
+
+fn artifacts_ready() -> bool {
+    tensorcodec::runtime::manifest::default_dir()
+        .join("manifest.txt")
+        .exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn xla_forward_matches_rust_oracle() {
+    require_artifacts!();
+    let mut rt = Runtime::cpu().unwrap();
+    for (dp, h, r) in [(7usize, 8usize, 8usize), (9, 5, 5), (11, 10, 10)] {
+        let params = ModelParams::init_tc(42, dp, 32, h, r);
+        let info = rt.find("tc", "fwd", dp, h, r).unwrap();
+        let mut fwd = ForwardExec::new(&mut rt, &info, &params).unwrap();
+        let mut rng = Pcg64::seeded(dp as u64);
+        let n = 3000; // exercises padding (not a multiple of the batch)
+        let idx: Vec<i32> = (0..n * dp).map(|_| rng.below(32) as i32).collect();
+        let mut got = Vec::new();
+        fwd.run(&idx, &mut got).unwrap();
+        let mut want = Vec::new();
+        infer::forward_batch(&params, &idx, &mut want);
+        assert_eq!(got.len(), n);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                "dp={dp} row {i}: xla {a} vs oracle {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_nk_forward_matches_rust_oracle() {
+    require_artifacts!();
+    let mut rt = Runtime::cpu().unwrap();
+    let (dp, h) = (8usize, 8usize);
+    let params = ModelParams::init_nk(7, dp, 32, h);
+    let info = rt.find("nk", "fwd", dp, h, 0).unwrap();
+    let mut fwd = ForwardExec::new(&mut rt, &info, &params).unwrap();
+    let mut rng = Pcg64::seeded(1);
+    let n = 500;
+    let idx: Vec<i32> = (0..n * dp).map(|_| rng.below(32) as i32).collect();
+    let mut got = Vec::new();
+    fwd.run(&idx, &mut got).unwrap();
+    let mut want = Vec::new();
+    infer::forward_batch(&params, &idx, &mut want);
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    require_artifacts!();
+    let mut rt = Runtime::cpu().unwrap();
+    let (dp, h, r) = (7usize, 8usize, 8usize);
+    let info = rt.find("tc", "train", dp, h, r).unwrap();
+    let b = info.batch;
+    let params = ModelParams::init_tc(0, dp, 32, h, r);
+    let mut tr = TrainExec::new(&mut rt, &info, params).unwrap();
+    let mut rng = Pcg64::seeded(3);
+    let idx: Vec<i32> = (0..b * dp).map(|_| rng.below(32) as i32).collect();
+    let targets: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+    let weights = vec![1.0f32; b];
+    let first = tr.step(&idx, &targets, &weights, 5e-3).unwrap();
+    let mut last = first;
+    for _ in 0..30 {
+        last = tr.step(&idx, &targets, &weights, 5e-3).unwrap();
+    }
+    assert!(
+        last < 0.8 * first,
+        "loss did not drop: {first} -> {last}"
+    );
+}
+
+#[test]
+fn end_to_end_compress_roundtrip_smooth_tensor() {
+    require_artifacts!();
+    // A smooth separable tensor is easy to fit: fitness must get high and
+    // the whole save -> load -> decode chain must agree with the trainer.
+    let shape = [24usize, 20, 18];
+    let n: usize = shape.iter().product();
+    let mut data = vec![0.0f32; n];
+    for i in 0..shape[0] {
+        for j in 0..shape[1] {
+            for k in 0..shape[2] {
+                data[(i * shape[1] + j) * shape[2] + k] = (i as f32 * 0.3).sin()
+                    + (j as f32 * 0.25).cos() * 0.5
+                    + k as f32 * 0.05;
+            }
+        }
+    }
+    let t = DenseTensor::from_data(&shape, data);
+    let cfg = TrainConfig {
+        rank: 6,
+        hidden: 6,
+        epochs: 40,
+        lr: 1e-2,
+        reorder_every: 4,
+        swap_samples: 64,
+        seed: 5,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&t, cfg).unwrap();
+    let model = trainer.fit().unwrap();
+    assert!(
+        model.fitness > 0.7,
+        "fitness too low on easy tensor: {}",
+        model.fitness
+    );
+
+    // save -> load -> pure-Rust decode must match the measured fitness
+    let dir = std::env::temp_dir().join("tcz_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("smooth.tcz");
+    save_tcz(&path, &model).unwrap();
+    let loaded = load_tcz(&path).unwrap();
+    assert_eq!(loaded.params.bufs, model.params.bufs);
+    let mut dec = Decompressor::new(loaded);
+    let approx = dec.reconstruct_all();
+    let fit = tensorcodec::metrics::fitness(t.data(), approx.data());
+    assert!(
+        (fit - model.fitness).abs() < 5e-3,
+        "decoded fitness {fit} vs trained {}",
+        model.fitness
+    );
+}
+
+#[test]
+fn decode_server_serves_correct_values() {
+    require_artifacts!();
+    use tensorcodec::coordinator::batcher::BatchPolicy;
+    use tensorcodec::coordinator::server::DecodeServer;
+
+    let t = DenseTensor::random_uniform(&[12, 10, 8], 1);
+    let cfg = TrainConfig {
+        rank: 5,
+        hidden: 5,
+        epochs: 2,
+        reorder_every: 0,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&t, cfg).unwrap();
+    let model = trainer.fit().unwrap();
+    let mut dec = Decompressor::new(model.clone());
+
+    let server = DecodeServer::start(
+        model,
+        BatchPolicy {
+            max_batch: 256,
+            max_wait: std::time::Duration::from_millis(1),
+            queue_depth: 1024,
+        },
+    )
+    .unwrap();
+    let handle = server.handle();
+    let mut rng = Pcg64::seeded(9);
+    let mut checked = 0;
+    for _ in 0..200 {
+        let idx = [rng.below(12), rng.below(10), rng.below(8)];
+        let got = handle.get(&idx).unwrap();
+        let want = dec.get(&idx);
+        assert!(
+            (got - want).abs() < 1e-4 * (1.0 + want.abs()),
+            "{idx:?}: {got} vs {want}"
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 200);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, 200);
+}
