@@ -45,7 +45,7 @@ fn main() {
             ])
             .unwrap();
             let budget_params = tc.bytes / 8;
-            for b in run_baselines(&tensor, budget_params, epochs) {
+            for mut b in run_baselines(&tensor, budget_params, epochs) {
                 let fit = b.fitness(&tensor);
                 print_row(rec.name, b.name, b.bytes, fit, b.seconds);
                 csv.row(&[

@@ -1,9 +1,8 @@
 //! CP Decomposition via alternating least squares (the paper's CPD
 //! baseline, Carroll & Chang 1970).
 
-use super::{unfold, BaselineResult};
+use super::unfold;
 use crate::linalg::{solve_least_squares, Mat};
-use crate::metrics::Timer;
 use crate::tensor::DenseTensor;
 use crate::util::Pcg64;
 
@@ -53,6 +52,20 @@ impl CpFactors {
         let m = self.factors[0].matmul(&kr.transpose()); // [N_0, rest]
         super::fold_back(&m, &self.shape, 0)
     }
+
+    /// Single entry: Σ_r Π_k A_k[i_k, r] — O(dR) point decode.
+    pub fn entry(&self, idx: &[usize]) -> f64 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut acc = 0.0f64;
+        for c in 0..self.rank {
+            let mut prod = 1.0f64;
+            for (k, &i) in idx.iter().enumerate() {
+                prod *= self.factors[k].at(i, c);
+            }
+            acc += prod;
+        }
+        acc
+    }
 }
 
 /// CP-ALS for `iters` sweeps at rank `r`.
@@ -78,19 +91,6 @@ pub fn cp_als(t: &DenseTensor, r: usize, iters: usize, seed: u64) -> CpFactors {
     cp
 }
 
-/// Run the CPD baseline.
-pub fn run(t: &DenseTensor, rank: usize, iters: usize, seed: u64) -> BaselineResult {
-    let timer = Timer::start();
-    let cp = cp_als(t, rank, iters, seed);
-    let approx = cp.reconstruct();
-    BaselineResult {
-        name: "CPD",
-        approx,
-        bytes: cp.num_params() * 8,
-        seconds: timer.seconds(),
-    }
-}
-
 /// Largest rank whose parameter count `R·ΣN_k` fits the budget (≥1).
 pub fn rank_for_budget(shape: &[usize], budget_params: usize) -> usize {
     let per_rank: usize = shape.iter().sum();
@@ -114,33 +114,50 @@ mod tests {
         cp.reconstruct()
     }
 
+    fn fit_at(t: &DenseTensor, rank: usize, iters: usize, seed: u64) -> f64 {
+        let rec = cp_als(t, rank, iters, seed).reconstruct();
+        crate::metrics::fitness(t.data(), rec.data())
+    }
+
     #[test]
     fn recovers_exact_cp_tensor() {
         let t = cp_random(&[8, 7, 6], 3, 0);
-        let res = run(&t, 3, 30, 1);
-        let fit = res.fitness(&t);
+        let fit = fit_at(&t, 3, 30, 1);
         assert!(fit > 0.99, "fit={fit}");
     }
 
     #[test]
     fn rank1_on_rank1_is_exact() {
         let t = cp_random(&[5, 6, 4], 1, 2);
-        let res = run(&t, 1, 20, 0);
-        assert!(res.fitness(&t) > 0.999);
+        assert!(fit_at(&t, 1, 20, 0) > 0.999);
     }
 
     #[test]
     fn als_monotone_improvement_tendency() {
         let t = DenseTensor::random_uniform(&[6, 6, 6], 3);
-        let f_few = run(&t, 4, 2, 0).fitness(&t);
-        let f_many = run(&t, 4, 25, 0).fitness(&t);
+        let f_few = fit_at(&t, 4, 2, 0);
+        let f_many = fit_at(&t, 4, 25, 0);
         assert!(f_many >= f_few - 0.02, "{f_few} -> {f_many}");
     }
 
     #[test]
-    fn bytes_accounting() {
+    fn param_accounting() {
         let t = DenseTensor::random_uniform(&[4, 5, 6], 0);
-        let res = run(&t, 3, 2, 0);
-        assert_eq!(res.bytes, (4 + 5 + 6) * 3 * 8);
+        let cp = cp_als(&t, 3, 2, 0);
+        assert_eq!(cp.num_params(), (4 + 5 + 6) * 3);
+    }
+
+    #[test]
+    fn entry_matches_reconstruct() {
+        let t = DenseTensor::random_uniform(&[5, 4, 6], 1);
+        let cp = cp_als(&t, 3, 5, 0);
+        let rec = cp.reconstruct();
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..40 {
+            let idx = [rng.below(5), rng.below(4), rng.below(6)];
+            let want = rec.at(&idx) as f64;
+            let got = cp.entry(&idx);
+            assert!((got - want).abs() < 1e-5 * (1.0 + want.abs()), "{got} vs {want}");
+        }
     }
 }

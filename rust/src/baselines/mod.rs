@@ -11,9 +11,12 @@
 //! | SZ3  | [`sz`]      | Lorenzo predictor + error-bounded quantisation + Huffman |
 //! | NeuKron | [`neukron`] | LSTM over folded digits, scalar head (shared AOT runtime) |
 //!
-//! Every baseline reports its compressed size in bytes under the same
-//! accounting the paper uses (double-precision parameters for the
-//! decomposition methods; actual coded bytes for TTHRESH/SZ3).
+//! Each module exposes its *structured* compressed form (TT cores, CP
+//! factors, a Tucker model, ring cores, coded symbol streams) — the
+//! [`crate::codec`] layer wraps these behind the uniform
+//! `Codec`/`Artifact` API, handles budget matching, and owns the `.tcz`
+//! container round-trip. Size accounting follows the paper: doubles for
+//! the decomposition methods, actual coded bytes for TTHRESH/SZ3.
 
 pub mod cp;
 pub mod neukron;
@@ -23,89 +26,6 @@ pub mod tthresh;
 pub mod ttd;
 pub mod tucker;
 
-use crate::tensor::DenseTensor;
-
-/// Uniform result type for the benchmark harness.
-#[derive(Debug, Clone)]
-pub struct BaselineResult {
-    pub name: &'static str,
-    pub approx: DenseTensor,
-    /// Compressed size in bytes (paper accounting).
-    pub bytes: usize,
-    pub seconds: f64,
-}
-
-impl BaselineResult {
-    pub fn fitness(&self, orig: &DenseTensor) -> f64 {
-        crate::metrics::fitness(orig.data(), self.approx.data())
-    }
-}
-
-/// Mode-k unfolding: `[N_k, len/N_k]` with mode-k index as rows and the
-/// remaining modes flattened row-major (in mode order, k removed).
-pub(crate) fn unfold(t: &DenseTensor, k: usize) -> crate::linalg::Mat {
-    let shape = t.shape();
-    let nk = shape[k];
-    let cols = t.len() / nk;
-    let mut m = crate::linalg::Mat::zeros(nk, cols);
-    let inner: usize = shape[k + 1..].iter().product();
-    let outer = t.len() / (inner * nk);
-    let data = t.data();
-    for o in 0..outer {
-        for i in 0..nk {
-            let src = (o * nk + i) * inner;
-            let dst_base = i * cols + o * inner;
-            for t_ in 0..inner {
-                m.data[dst_base + t_] = data[src + t_] as f64;
-            }
-        }
-    }
-    m
-}
-
-/// Inverse of [`unfold`].
-pub(crate) fn fold_back(m: &crate::linalg::Mat, shape: &[usize], k: usize) -> DenseTensor {
-    let nk = shape[k];
-    let len: usize = shape.iter().product();
-    let inner: usize = shape[k + 1..].iter().product();
-    let outer = len / (inner * nk);
-    let cols = len / nk;
-    let mut data = vec![0.0f32; len];
-    for o in 0..outer {
-        for i in 0..nk {
-            let dst = (o * nk + i) * inner;
-            let src_base = i * cols + o * inner;
-            for t_ in 0..inner {
-                data[dst + t_] = m.data[src_base + t_] as f32;
-            }
-        }
-    }
-    DenseTensor::from_data(shape, data)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn unfold_fold_roundtrip() {
-        let t = DenseTensor::random_uniform(&[4, 5, 3], 0);
-        for k in 0..3 {
-            let m = unfold(&t, k);
-            assert_eq!(m.rows, t.shape()[k]);
-            let back = fold_back(&m, t.shape(), k);
-            assert_eq!(back, t);
-        }
-    }
-
-    #[test]
-    fn unfold_entries_correct() {
-        let t = DenseTensor::from_data(&[2, 2, 2], (0..8).map(|i| i as f32).collect());
-        let m0 = unfold(&t, 0);
-        assert_eq!(m0.row(0), &[0.0, 1.0, 2.0, 3.0]);
-        assert_eq!(m0.row(1), &[4.0, 5.0, 6.0, 7.0]);
-        let m1 = unfold(&t, 1);
-        assert_eq!(m1.row(0), &[0.0, 1.0, 4.0, 5.0]);
-        assert_eq!(m1.row(1), &[2.0, 3.0, 6.0, 7.0]);
-    }
-}
+// Mode-k matricisation lives in the tensor substrate; re-exported here for
+// the decomposition baselines' internal use.
+pub(crate) use crate::tensor::{fold_back, unfold};

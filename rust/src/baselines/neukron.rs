@@ -7,29 +7,17 @@
 //! structural difference the paper evaluates: Kronecker-style scalar
 //! generation vs NTTD's TT-core generation.
 
-use super::BaselineResult;
+use crate::compress::CompressedModel;
 use crate::config::TrainConfig;
 use crate::coordinator::Trainer;
 use crate::nttd::Variant;
 use crate::tensor::DenseTensor;
 use anyhow::Result;
 
-/// Run the NeuKron baseline. `hidden` must have `nk` artifacts (8 or 12 in
-/// the default matrix).
-pub fn run(t: &DenseTensor, cfg: &TrainConfig) -> Result<BaselineResult> {
+/// Fit the NeuKron baseline. `cfg.hidden` must have `nk` artifacts (8 or
+/// 12 in the default matrix); the returned model decodes through the same
+/// `Decompressor` / `.tcz` machinery as TensorCodec.
+pub fn fit(t: &DenseTensor, cfg: &TrainConfig) -> Result<CompressedModel> {
     let mut trainer = Trainer::with_variant(t, cfg.clone(), Variant::Nk)?;
-    let model = trainer.fit()?;
-    let bytes = model.reported_size_bytes();
-    let seconds = model.train_seconds + model.init_seconds;
-    // reconstruct through the already-warm runtime
-    let approx = {
-        let mut dec = crate::compress::Decompressor::new(model);
-        dec.reconstruct_all()
-    };
-    Ok(BaselineResult {
-        name: "NeuKron",
-        approx,
-        bytes,
-        seconds,
-    })
+    trainer.fit()
 }

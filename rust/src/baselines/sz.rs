@@ -6,15 +6,37 @@
 //! residuals concentrate near zero and Huffman crushes them; on rough
 //! tensors most entries fall out of the quantiser range and get stored
 //! raw, exactly the degradation the paper observes for SZ3.
+//!
+//! The compressed form is a real coded stream ([`SzStream`]): quantiser
+//! symbols + outlier values + the step size. Decoding replays the
+//! prediction loop, so an encode→decode round trip is bit-exact with the
+//! decoded tensor the encoder tracked internally.
 
-use super::BaselineResult;
 use crate::coding::huffman_encode;
-use crate::metrics::Timer;
 use crate::tensor::DenseTensor;
 
 /// Quantiser symbol cap: bins in `[-CAP, CAP)` (alphabet 2·CAP+1, symbol
 /// 2·CAP is the outlier escape). Keeps the Huffman table small.
-const CAP: i64 = 511;
+pub(crate) const CAP: i64 = 511;
+/// Symbol alphabet size (including the escape symbol).
+pub(crate) const ALPHABET: usize = (2 * CAP + 1) as usize;
+/// The outlier escape symbol.
+const ESCAPE: u16 = (2 * CAP) as u16;
+
+/// The SZ3-like compressed representation: one quantiser symbol per entry
+/// (escape symbol for outliers) plus the raw outlier values.
+#[derive(Debug, Clone)]
+pub struct SzStream {
+    pub shape: Vec<usize>,
+    /// Quantiser step (2 × the absolute error bound).
+    pub step: f32,
+    /// One symbol per entry, row-major.
+    pub symbols: Vec<u16>,
+    /// Raw values for escape symbols, in encounter order.
+    pub outliers: Vec<f32>,
+    /// Coded size in bytes (Huffman symbols + raw outliers + headers).
+    pub coded_bytes: usize,
+}
 
 /// d-dimensional Lorenzo predictor from decoded neighbours.
 /// pred(i) = Σ_{∅≠S⊆dims} (−1)^{|S|+1} · decoded(i − 1_S), 0 outside.
@@ -44,19 +66,25 @@ fn lorenzo_predict(decoded: &[f32], shape: &[usize], strides: &[usize], idx: &[u
     pred
 }
 
-/// Run the SZ3-like baseline at absolute error bound `abs_err`
-/// (as a fraction of the tensor's value std when `relative` is true).
-pub fn run(t: &DenseTensor, rel_err: f64, _seed: u64) -> BaselineResult {
-    let timer = Timer::start();
-    let (_, std) = t.mean_std();
-    let abs_err = (rel_err * std as f64).max(1e-12) as f32;
-    let step = 2.0 * abs_err;
-    let shape = t.shape().to_vec();
+fn row_major_strides(shape: &[usize]) -> Vec<usize> {
     let d = shape.len();
     let mut strides = vec![1usize; d];
     for k in (0..d.saturating_sub(1)).rev() {
         strides[k] = strides[k + 1] * shape[k + 1];
     }
+    strides
+}
+
+/// Encode at relative error bound `rel_err` (as a fraction of the value
+/// std). Returns the coded stream; [`SzStream::decode`] reproduces the
+/// decoded tensor the encoder saw, bit-for-bit.
+pub fn compress(t: &DenseTensor, rel_err: f64) -> SzStream {
+    let (_, std) = t.mean_std();
+    let abs_err = (rel_err * std as f64).max(1e-12) as f32;
+    let step = 2.0 * abs_err;
+    let shape = t.shape().to_vec();
+    let d = shape.len();
+    let strides = row_major_strides(&shape);
     let n = t.len();
     let mut decoded = vec![0.0f32; n];
     let mut symbols: Vec<u16> = Vec::with_capacity(n);
@@ -73,7 +101,7 @@ pub fn run(t: &DenseTensor, rel_err: f64, _seed: u64) -> BaselineResult {
         let bin = ((x - pred) / step).round();
         if bin.abs() as i64 >= CAP || !bin.is_finite() {
             // outlier: store raw
-            symbols.push((2 * CAP) as u16);
+            symbols.push(ESCAPE);
             outliers.push(x);
             decoded[lin] = x;
         } else {
@@ -81,30 +109,67 @@ pub fn run(t: &DenseTensor, rel_err: f64, _seed: u64) -> BaselineResult {
             decoded[lin] = pred + bin * step;
         }
     }
-    let coded = huffman_encode(&symbols, (2 * CAP + 1) as usize);
-    let bytes = coded.len() + outliers.len() * 4 + 16;
-    let approx = DenseTensor::from_data(&shape, decoded);
-    BaselineResult {
-        name: "SZ3",
-        approx,
-        bytes,
-        seconds: timer.seconds(),
+    let coded = huffman_encode(&symbols, ALPHABET);
+    let coded_bytes = coded.len() + outliers.len() * 4 + 16;
+    SzStream {
+        shape,
+        step,
+        symbols,
+        outliers,
+        coded_bytes,
+    }
+}
+
+impl SzStream {
+    /// Replay the prediction loop: reproduces exactly the decoded tensor
+    /// the encoder tracked (same float operations in the same order).
+    pub fn decode(&self) -> DenseTensor {
+        let d = self.shape.len();
+        let strides = row_major_strides(&self.shape);
+        let n: usize = self.shape.iter().product();
+        debug_assert_eq!(n, self.symbols.len());
+        let mut decoded = vec![0.0f32; n];
+        let mut idx = vec![0usize; d];
+        let mut oi = 0usize;
+        for lin in 0..n {
+            let mut rem = lin;
+            for k in (0..d).rev() {
+                idx[k] = rem % self.shape[k];
+                rem /= self.shape[k];
+            }
+            let s = self.symbols[lin];
+            if s == ESCAPE {
+                decoded[lin] = self.outliers[oi];
+                oi += 1;
+            } else {
+                let pred = lorenzo_predict(&decoded, &self.shape, &strides, &idx);
+                let bin = (s as i64 - CAP) as f32;
+                decoded[lin] = pred + bin * self.step;
+            }
+        }
+        DenseTensor::from_data(&self.shape, decoded)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::fitness;
     use crate::util::Pcg64;
+
+    fn run_fit(t: &DenseTensor, rel: f64) -> f64 {
+        let approx = compress(t, rel).decode();
+        fitness(t.data(), approx.data())
+    }
 
     #[test]
     fn error_bound_respected() {
         let t = DenseTensor::random_uniform(&[12, 10, 8], 0);
         let (_, std) = t.mean_std();
         for rel in [0.5f64, 0.1, 0.01] {
-            let res = run(&t, rel, 0);
+            let approx = compress(&t, rel).decode();
             let bound = (rel * std as f64) as f32 * 1.001;
-            for (a, b) in t.data().iter().zip(res.approx.data()) {
+            for (a, b) in t.data().iter().zip(approx.data()) {
                 assert!((a - b).abs() <= bound, "rel={rel}: {} > {bound}", (a - b).abs());
             }
         }
@@ -119,12 +184,12 @@ mod tests {
             .map(|i| (i / n) as f32 * 0.1 + (i % n) as f32 * 0.05)
             .collect();
         let t = DenseTensor::from_data(&[n, n], data);
-        let res = run(&t, 0.05, 0);
-        assert!(res.fitness(&t) > 0.9);
+        let stream = compress(&t, 0.05);
+        assert!(fitness(t.data(), stream.decode().data()) > 0.9);
         assert!(
-            res.bytes < n * n, // < 1 byte/entry vs 8 raw
+            stream.coded_bytes < n * n, // < 1 byte/entry vs 8 raw
             "{} bytes for {} entries",
-            res.bytes,
+            stream.coded_bytes,
             n * n
         );
     }
@@ -136,16 +201,16 @@ mod tests {
         let mut rng = Pcg64::seeded(1);
         let data: Vec<f32> = (0..4096).map(|_| rng.normal() * 10.0).collect();
         let t = DenseTensor::from_data(&[64, 64], data);
-        let smooth_bytes = run(&t, 0.5, 0).bytes;
-        let tight = run(&t, 0.01, 0);
-        assert!(tight.bytes > smooth_bytes * 2, "{} vs {smooth_bytes}", tight.bytes);
+        let smooth_bytes = compress(&t, 0.5).coded_bytes;
+        let tight_bytes = compress(&t, 0.01).coded_bytes;
+        assert!(tight_bytes > smooth_bytes * 2, "{tight_bytes} vs {smooth_bytes}");
     }
 
     #[test]
     fn tighter_bound_higher_fitness() {
         let t = DenseTensor::random_uniform(&[16, 16, 16], 3);
-        let loose = run(&t, 0.5, 0).fitness(&t);
-        let tight = run(&t, 0.02, 0).fitness(&t);
+        let loose = run_fit(&t, 0.5);
+        let tight = run_fit(&t, 0.02);
         assert!(tight > loose, "{loose} vs {tight}");
     }
 
@@ -160,8 +225,24 @@ mod tests {
             })
             .collect();
         let t = DenseTensor::from_data(&[rows, cols], data);
-        let res = run(&t, 1e-6, 0);
         // only first row/col carry non-zero residuals
-        assert!(res.fitness(&t) > 0.999999);
+        assert!(run_fit(&t, 1e-6) > 0.999999);
+    }
+
+    #[test]
+    fn decode_replays_encoder_exactly() {
+        let mut rng = Pcg64::seeded(7);
+        let data: Vec<f32> = (0..900).map(|_| rng.normal() * 3.0).collect();
+        let t = DenseTensor::from_data(&[30, 30], data);
+        let stream = compress(&t, 0.1);
+        let a = stream.decode();
+        let b = stream.decode();
+        assert_eq!(a.data(), b.data());
+        // error bound holds after the replayed decode too
+        let (_, std) = t.mean_std();
+        let bound = 0.1f32 * std * 1.001;
+        for (x, y) in t.data().iter().zip(a.data()) {
+            assert!((x - y).abs() <= bound);
+        }
     }
 }

@@ -2,9 +2,8 @@
 //! Zhao et al. 2019): entry (i_1..i_d) ≈ tr(G_1(i_1) · ... · G_d(i_d))
 //! with every core slice an r×r matrix (the ring closes the trace).
 
-use super::{unfold, BaselineResult};
+use super::unfold;
 use crate::linalg::{solve_least_squares, Mat};
-use crate::metrics::Timer;
 use crate::tensor::DenseTensor;
 use crate::util::Pcg64;
 
@@ -161,19 +160,6 @@ pub fn tr_als(t: &DenseTensor, r: usize, iters: usize, seed: u64) -> TrCores {
     tr
 }
 
-/// Run the TRD baseline.
-pub fn run(t: &DenseTensor, rank: usize, iters: usize, seed: u64) -> BaselineResult {
-    let timer = Timer::start();
-    let tr = tr_als(t, rank, iters, seed);
-    let approx = tr.reconstruct();
-    BaselineResult {
-        name: "TRD",
-        approx,
-        bytes: tr.num_params() * 8,
-        seconds: timer.seconds(),
-    }
-}
-
 /// Largest ring rank with `r²·ΣN_k ≤ budget` (≥1).
 pub fn rank_for_budget(shape: &[usize], budget_params: usize) -> usize {
     let sum_n: usize = shape.iter().sum();
@@ -201,11 +187,15 @@ mod tests {
         tr.reconstruct()
     }
 
+    fn fit_at(t: &DenseTensor, rank: usize, iters: usize, seed: u64) -> f64 {
+        let rec = tr_als(t, rank, iters, seed).reconstruct();
+        crate::metrics::fitness(t.data(), rec.data())
+    }
+
     #[test]
     fn recovers_exact_tr_tensor() {
         let t = tr_random(&[5, 6, 4], 2, 0);
-        let res = run(&t, 2, 12, 3);
-        let fit = res.fitness(&t);
+        let fit = fit_at(&t, 2, 12, 3);
         assert!(fit > 0.95, "fit={fit}");
     }
 
@@ -222,10 +212,10 @@ mod tests {
     }
 
     #[test]
-    fn bytes_accounting() {
+    fn param_accounting() {
         let t = DenseTensor::random_uniform(&[4, 5, 3], 0);
-        let res = run(&t, 2, 1, 0);
-        assert_eq!(res.bytes, (4 + 5 + 3) * 4 * 8);
+        let tr = tr_als(&t, 2, 1, 0);
+        assert_eq!(tr.num_params(), (4 + 5 + 3) * 4);
     }
 
     #[test]
@@ -241,7 +231,7 @@ mod tests {
             }
         }
         let t = DenseTensor::from_data(&[5, 4], data);
-        let res = run(&t, 1, 15, 0);
-        assert!(res.fitness(&t) > 0.999, "fit={}", res.fitness(&t));
+        let fit = fit_at(&t, 1, 15, 0);
+        assert!(fit > 0.999, "fit={fit}");
     }
 }

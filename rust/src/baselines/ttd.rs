@@ -2,9 +2,7 @@
 //! TTD baseline and the decomposition backbone of the TENSORCODEC-N
 //! ablation (plain TTD applied to the folded tensor).
 
-use super::BaselineResult;
 use crate::linalg::{truncated_svd, Mat};
-use crate::metrics::Timer;
 use crate::tensor::DenseTensor;
 
 /// TT cores: `cores[k]` has shape `[r_{k-1}, N_k, r_k]` (row-major).
@@ -105,19 +103,6 @@ pub fn tt_svd(t: &DenseTensor, max_rank: usize, seed: u64) -> TtCores {
         shape,
         ranks,
         cores,
-    }
-}
-
-/// Run the TTD baseline at a given uniform max rank.
-pub fn run(t: &DenseTensor, max_rank: usize, seed: u64) -> BaselineResult {
-    let timer = Timer::start();
-    let tt = tt_svd(t, max_rank, seed);
-    let approx = tt.reconstruct();
-    BaselineResult {
-        name: "TTD",
-        approx,
-        bytes: tt.num_params() * 8,
-        seconds: timer.seconds(),
     }
 }
 
@@ -223,8 +208,12 @@ mod tests {
     #[test]
     fn higher_rank_never_worse() {
         let t = DenseTensor::random_uniform(&[8, 9, 7], 4);
-        let f2 = run(&t, 2, 0).fitness(&t);
-        let f6 = run(&t, 6, 0).fitness(&t);
+        let fit_at = |rank: usize| {
+            let rec = tt_svd(&t, rank, 0).reconstruct();
+            crate::metrics::fitness(t.data(), rec.data())
+        };
+        let f2 = fit_at(2);
+        let f6 = fit_at(6);
         assert!(f6 >= f2 - 1e-9, "{f2} vs {f6}");
     }
 

@@ -5,11 +5,15 @@
 //! the same pipeline shape (orthogonal transform → aggressive lossless
 //! coding of quantised coefficients) with a uniform quantiser, which is
 //! what the size/error trade-off hinges on.
+//!
+//! The compressed form is [`TthreshCoded`]: per-block quantiser symbols and
+//! scales (core first, then each factor matrix). Dequantisation is
+//! deterministic, so serialising symbols + scales round-trips the decoded
+//! tensor bit-for-bit.
 
 use super::tucker::{hooi, TuckerModel};
-use super::BaselineResult;
 use crate::coding::{huffman_encode, rle_encode};
-use crate::metrics::Timer;
+use crate::linalg::Mat;
 use crate::tensor::DenseTensor;
 
 /// Quantise a coefficient vector to `bits` bits (symmetric around 0).
@@ -47,47 +51,93 @@ fn coded_size(symbols: &[u16], bits: u32) -> usize {
     huff.min(rle_total) + 16
 }
 
-/// Run the TTHRESH-like baseline: Tucker at `rank` + `bits`-bit coding.
-pub fn run(t: &DenseTensor, rank: usize, bits: u32, seed: u64) -> BaselineResult {
-    let timer = Timer::start();
+/// The TTHRESH-like compressed representation: `1 + d` coefficient blocks
+/// (core, then one per factor matrix), each quantised independently
+/// (their dynamic ranges differ by orders of magnitude).
+#[derive(Debug, Clone)]
+pub struct TthreshCoded {
+    pub shape: Vec<usize>,
+    /// Realised Tucker ranks (clipped to mode lengths by HOOI).
+    pub ranks: Vec<usize>,
+    pub bits: u32,
+    /// Quantiser symbols per block, block order: core, factor 0, ….
+    pub blocks: Vec<Vec<u16>>,
+    /// Per-block dequantisation scales (same order as `blocks`).
+    pub scales: Vec<f64>,
+    /// Coded size in bytes (best of Huffman / split-byte RLE, per block).
+    pub coded_bytes: usize,
+}
+
+/// Compress: Tucker at uniform `rank` + `bits`-bit coding of coefficients.
+pub fn compress(t: &DenseTensor, rank: usize, bits: u32, seed: u64) -> TthreshCoded {
     let ranks = vec![rank; t.order()];
     let model = hooi(t, &ranks, 1, seed);
-    // Per-block quantisation (core and each factor separately — their
-    // scales differ by orders of magnitude; real TTHRESH likewise codes
-    // the core and the factor columns with independent ranges).
-    let mut bytes = 0usize;
-    let quant_block = |vals: &[f64], bytes: &mut usize| -> Vec<f64> {
-        let (symbols, scale) = quantize_coeffs(vals, bits);
-        *bytes += coded_size(&symbols, bits);
-        dequantize_coeffs(&symbols, scale, bits)
-    };
+    let mut blocks = Vec::with_capacity(1 + model.factors.len());
+    let mut scales = Vec::with_capacity(1 + model.factors.len());
+    let mut coded_bytes = 0usize;
     let core_vals: Vec<f64> = model.core.data().iter().map(|&v| v as f64).collect();
-    let core_deq = quant_block(&core_vals, &mut bytes);
-    let mut qmodel = TuckerModel {
-        shape: model.shape.clone(),
-        ranks: model.ranks.clone(),
-        core: DenseTensor::from_data(
-            model.core.shape(),
-            core_deq.iter().map(|&v| v as f32).collect(),
-        ),
-        factors: model.factors.clone(),
-    };
-    for f in &mut qmodel.factors {
-        let deq = quant_block(&f.data.clone(), &mut bytes);
-        f.data.copy_from_slice(&deq);
+    let (sym, scale) = quantize_coeffs(&core_vals, bits);
+    coded_bytes += coded_size(&sym, bits);
+    blocks.push(sym);
+    scales.push(scale);
+    for f in &model.factors {
+        let (sym, scale) = quantize_coeffs(&f.data, bits);
+        coded_bytes += coded_size(&sym, bits);
+        blocks.push(sym);
+        scales.push(scale);
     }
-    let approx = qmodel.reconstruct();
-    BaselineResult {
-        name: "TTHRESH",
-        approx,
-        bytes,
-        seconds: timer.seconds(),
+    TthreshCoded {
+        shape: model.shape,
+        ranks: model.ranks,
+        bits,
+        blocks,
+        scales,
+        coded_bytes,
+    }
+}
+
+impl TthreshCoded {
+    /// Dequantise back into a Tucker model (deterministic: the same
+    /// symbols and scales always produce the same model).
+    pub fn to_model(&self) -> TuckerModel {
+        let core_deq = dequantize_coeffs(&self.blocks[0], self.scales[0], self.bits);
+        let core = DenseTensor::from_data(
+            &self.ranks,
+            core_deq.iter().map(|&v| v as f32).collect(),
+        );
+        let factors: Vec<Mat> = self
+            .shape
+            .iter()
+            .zip(&self.ranks)
+            .enumerate()
+            .map(|(k, (&n, &r))| {
+                let deq = dequantize_coeffs(&self.blocks[k + 1], self.scales[k + 1], self.bits);
+                Mat::from_rows(n, r, deq)
+            })
+            .collect();
+        TuckerModel {
+            shape: self.shape.clone(),
+            ranks: self.ranks.clone(),
+            core,
+            factors,
+        }
+    }
+
+    /// Decode the full tensor.
+    pub fn decode(&self) -> DenseTensor {
+        self.to_model().reconstruct()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::fitness;
+
+    fn run_fit(t: &DenseTensor, rank: usize, bits: u32) -> f64 {
+        let approx = compress(t, rank, bits, 0).decode();
+        fitness(t.data(), approx.data())
+    }
 
     #[test]
     fn quantize_roundtrip_error_bounded() {
@@ -104,8 +154,8 @@ mod tests {
     #[test]
     fn more_bits_more_accurate() {
         let t = DenseTensor::random_uniform(&[8, 8, 8], 0);
-        let f8 = run(&t, 6, 8, 0).fitness(&t);
-        let f16 = run(&t, 6, 16, 0).fitness(&t);
+        let f8 = run_fit(&t, 6, 8);
+        let f16 = run_fit(&t, 6, 16);
         assert!(f16 >= f8 - 1e-6, "{f8} vs {f16}");
     }
 
@@ -118,8 +168,17 @@ mod tests {
             .map(|i| ((i / (n * n)) as f32 * 0.2).sin())
             .collect();
         let t = DenseTensor::from_data(&[n, n, n], data);
-        let res = run(&t, 8, 10, 0);
+        let coded = compress(&t, 8, 10, 0);
         let raw = (8usize.pow(3) + 3 * 8 * n) * 8;
-        assert!(res.bytes < raw, "{} vs {raw}", res.bytes);
+        assert!(coded.coded_bytes < raw, "{} vs {raw}", coded.coded_bytes);
+    }
+
+    #[test]
+    fn decode_is_deterministic() {
+        let t = DenseTensor::random_uniform(&[6, 7, 5], 2);
+        let coded = compress(&t, 3, 10, 1);
+        let a = coded.decode();
+        let b = coded.decode();
+        assert_eq!(a.data(), b.data());
     }
 }

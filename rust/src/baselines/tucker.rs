@@ -1,9 +1,8 @@
 //! Tucker Decomposition via HOSVD initialisation + HOOI refinement (the
 //! paper's TKD baseline, Tucker 1966).
 
-use super::{fold_back, unfold, BaselineResult};
+use super::{fold_back, unfold};
 use crate::linalg::{truncated_svd, Mat};
-use crate::metrics::Timer;
 use crate::tensor::DenseTensor;
 
 /// Tucker model: core `[r_1 .. r_d]` + factor matrices `[N_k, r_k]`.
@@ -33,6 +32,28 @@ impl TuckerModel {
             cur = mode_product(&cur, &self.factors[k], k, false);
         }
         cur
+    }
+
+    /// Single entry: Σ_j G[j] Π_k U_k[i_k, j_k] — O(d·Πr_k) point decode
+    /// (the core is small by construction).
+    pub fn entry(&self, idx: &[usize]) -> f64 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let d = self.shape.len();
+        let mut j = vec![0usize; d];
+        let mut acc = 0.0f64;
+        for (lin, &g) in self.core.data().iter().enumerate() {
+            let mut rem = lin;
+            for k in (0..d).rev() {
+                j[k] = rem % self.ranks[k];
+                rem /= self.ranks[k];
+            }
+            let mut prod = g as f64;
+            for k in 0..d {
+                prod *= self.factors[k].at(idx[k], j[k]);
+            }
+            acc += prod;
+        }
+        acc
     }
 }
 
@@ -93,18 +114,10 @@ pub fn hooi(t: &DenseTensor, ranks: &[usize], iters: usize, seed: u64) -> Tucker
     }
 }
 
-/// Run the TKD baseline at a uniform rank.
-pub fn run(t: &DenseTensor, rank: usize, iters: usize, seed: u64) -> BaselineResult {
-    let timer = Timer::start();
+/// HOOI at a uniform rank (convenience used by the codec layer).
+pub fn hooi_uniform(t: &DenseTensor, rank: usize, iters: usize, seed: u64) -> TuckerModel {
     let ranks = vec![rank; t.order()];
-    let model = hooi(t, &ranks, iters, seed);
-    let approx = model.reconstruct();
-    BaselineResult {
-        name: "TKD",
-        approx,
-        bytes: model.num_params() * 8,
-        seconds: timer.seconds(),
-    }
+    hooi(t, &ranks, iters, seed)
 }
 
 /// Largest uniform rank fitting the budget: r^d + r·ΣN_k ≤ budget.
@@ -154,26 +167,43 @@ mod tests {
         assert_eq!(z.shape(), &[4, 5, 6]);
     }
 
+    fn fit_at(t: &DenseTensor, rank: usize, iters: usize, seed: u64) -> f64 {
+        let rec = hooi_uniform(t, rank, iters, seed).reconstruct();
+        crate::metrics::fitness(t.data(), rec.data())
+    }
+
     #[test]
     fn recovers_exact_tucker_tensor() {
         let t = tucker_random(&[8, 7, 6], 3, 1);
-        let res = run(&t, 3, 3, 0);
-        let fit = res.fitness(&t);
+        let fit = fit_at(&t, 3, 3, 0);
         assert!(fit > 0.999, "fit={fit}");
     }
 
     #[test]
     fn full_rank_lossless() {
         let t = DenseTensor::random_uniform(&[4, 4, 4], 3);
-        let res = run(&t, 4, 1, 0);
-        assert!(res.fitness(&t) > 0.9999);
+        assert!(fit_at(&t, 4, 1, 0) > 0.9999);
     }
 
     #[test]
-    fn bytes_accounting() {
+    fn param_accounting() {
         let t = DenseTensor::random_uniform(&[5, 6, 7], 0);
-        let res = run(&t, 2, 1, 0);
-        assert_eq!(res.bytes, (8 + 2 * (5 + 6 + 7)) * 8);
+        let model = hooi_uniform(&t, 2, 1, 0);
+        assert_eq!(model.num_params(), 8 + 2 * (5 + 6 + 7));
+    }
+
+    #[test]
+    fn entry_matches_reconstruct() {
+        let t = DenseTensor::random_uniform(&[5, 4, 6], 2);
+        let model = hooi_uniform(&t, 3, 1, 0);
+        let rec = model.reconstruct();
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..40 {
+            let idx = [rng.below(5), rng.below(4), rng.below(6)];
+            let want = rec.at(&idx) as f64;
+            let got = model.entry(&idx);
+            assert!((got - want).abs() < 1e-4 * (1.0 + want.abs()), "{got} vs {want}");
+        }
     }
 
     #[test]

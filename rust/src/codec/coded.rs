@@ -1,0 +1,424 @@
+//! Coded-stream codecs: the TTHRESH-like and SZ3-like compressors. Their
+//! artifacts carry real entropy-coded payloads (quantiser symbols through
+//! the canonical Huffman coder), so on-disk size tracks the reported coded
+//! size instead of ballooning to raw floats.
+
+use super::container::{
+    checked_len, put_f32, put_f64, put_u32, put_u64, read_shape, shape_header, Cursor,
+};
+use super::{
+    closest_to_bytes, rel_error_search, Artifact, ArtifactMeta, Budget, Codec, CodecConfig,
+};
+use crate::baselines::sz::{self, SzStream};
+use crate::baselines::tthresh::{self, TthreshCoded};
+use crate::baselines::tucker;
+use crate::coding::{huffman_decode, huffman_encode};
+use crate::metrics::Timer;
+use crate::tensor::DenseTensor;
+use anyhow::{bail, Result};
+use std::io::Write;
+
+// ---------------------------------------------------------------------
+// TTHRESH
+// ---------------------------------------------------------------------
+
+/// Quantised Tucker coefficients with lazy decode.
+pub struct TthreshArtifact {
+    pub coded: TthreshCoded,
+    decoded: Option<DenseTensor>,
+    pub seconds: f64,
+}
+
+impl TthreshArtifact {
+    pub fn new(coded: TthreshCoded, seconds: f64) -> Self {
+        TthreshArtifact {
+            coded,
+            decoded: None,
+            seconds,
+        }
+    }
+
+    fn decoded(&mut self) -> &DenseTensor {
+        if self.decoded.is_none() {
+            self.decoded = Some(self.coded.decode());
+        }
+        self.decoded.as_ref().unwrap()
+    }
+}
+
+impl Artifact for TthreshArtifact {
+    fn get(&mut self, idx: &[usize]) -> f32 {
+        self.decoded().at(idx)
+    }
+
+    fn decode_all(&mut self) -> DenseTensor {
+        // hand the cache over instead of cloning — callers typically cache
+        // the result themselves, and keeping two dense copies alive doubles
+        // peak memory; a later get() just re-decodes
+        match self.decoded.take() {
+            Some(t) => t,
+            None => self.coded.decode(),
+        }
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.coded.coded_bytes
+    }
+
+    fn meta(&self) -> ArtifactMeta {
+        ArtifactMeta {
+            method: "tthresh",
+            shape: self.coded.shape.clone(),
+            size_bytes: self.coded.coded_bytes,
+            fitness: None,
+            seconds: self.seconds,
+        }
+    }
+
+    fn write(&self, w: &mut dyn Write) -> Result<()> {
+        let c = &self.coded;
+        let mut out = Vec::new();
+        shape_header(&mut out, &c.shape)?;
+        for &r in &c.ranks {
+            put_u64(&mut out, r as u64);
+        }
+        put_u32(&mut out, c.bits);
+        // the reported size uses best-of(Huffman, split-byte RLE) per
+        // block while the payload always stores Huffman; persist the
+        // accounting value so it survives the round trip exactly
+        put_u64(&mut out, c.coded_bytes as u64);
+        let alphabet = 1usize << c.bits;
+        for (block, &scale) in c.blocks.iter().zip(&c.scales) {
+            put_f64(&mut out, scale);
+            let coded = huffman_encode(block, alphabet);
+            put_u64(&mut out, coded.len() as u64);
+            out.extend_from_slice(&coded);
+        }
+        w.write_all(&out)?;
+        Ok(())
+    }
+}
+
+/// TTHRESH-like codec: Tucker transform + quantisation + Huffman/RLE.
+pub struct TthreshCodec;
+
+impl Codec for TthreshCodec {
+    fn name(&self) -> &'static str {
+        "tthresh"
+    }
+
+    fn label(&self) -> &'static str {
+        "TTHRESH"
+    }
+
+    fn tag(&self) -> u8 {
+        6
+    }
+
+    fn compress(
+        &self,
+        t: &DenseTensor,
+        budget: &Budget,
+        cfg: &CodecConfig,
+    ) -> Result<Box<dyn Artifact>> {
+        let bits = cfg.quant_bits;
+        if !(2..=16).contains(&bits) {
+            bail!("tthresh: quantiser bits must be in 2..=16, got {bits}");
+        }
+        let seed = cfg.seed;
+        let build = |rank: usize| -> Result<Box<dyn Artifact>> {
+            let timer = Timer::start();
+            let coded = tthresh::compress(t, rank, bits, seed);
+            Ok(Box::new(TthreshArtifact::new(coded, timer.seconds())))
+        };
+        match budget.target_params() {
+            // TTHRESH codes coefficients at ~bits/64 of a double, so its
+            // Tucker rank can be ~5x the budget rank at 10-bit quantisation
+            // (the paper matches on coded bytes, not raw parameters).
+            Some(p) => build(tucker::rank_for_budget(t.shape(), p.saturating_mul(5))),
+            None => {
+                let Budget::RelError(e) = *budget else { unreachable!() };
+                rel_error_search(t, e, 32, build)
+            }
+        }
+    }
+
+    fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {
+        let mut c = Cursor::new(payload);
+        let shape = read_shape(&mut c)?;
+        let d = shape.len();
+        let ranks = c.u64_vec(d)?;
+        if ranks.iter().zip(&shape).any(|(&r, &n)| r == 0 || r > n) {
+            bail!("bad Tucker ranks");
+        }
+        let bits = c.u32()?;
+        if !(2..=16).contains(&bits) {
+            bail!("bad quantiser bits {bits}");
+        }
+        let coded_bytes = c.u64()? as usize;
+        let core_len = checked_len(&ranks)?;
+        let mut blocks = Vec::with_capacity(1 + d);
+        let mut scales = Vec::with_capacity(1 + d);
+        for b in 0..=d {
+            scales.push(c.f64()?);
+            let clen = c.count(1)?;
+            let symbols = huffman_decode(c.take(clen)?)?;
+            let want = if b == 0 {
+                core_len
+            } else {
+                checked_len(&[shape[b - 1], ranks[b - 1]])?
+            };
+            if symbols.len() != want {
+                bail!("block {b} has {} symbols, wanted {want}", symbols.len());
+            }
+            if symbols.iter().any(|&s| (s as usize) >= (1usize << bits)) {
+                bail!("block {b} has symbols outside the {bits}-bit alphabet");
+            }
+            blocks.push(symbols);
+        }
+        Ok(Box::new(TthreshArtifact::new(
+            TthreshCoded {
+                shape,
+                ranks,
+                bits,
+                blocks,
+                scales,
+                coded_bytes,
+            },
+            0.0,
+        )))
+    }
+}
+
+// ---------------------------------------------------------------------
+// SZ
+// ---------------------------------------------------------------------
+
+/// SZ3-like coded stream with lazy decode.
+pub struct SzArtifact {
+    pub stream: SzStream,
+    decoded: Option<DenseTensor>,
+    pub seconds: f64,
+}
+
+impl SzArtifact {
+    pub fn new(stream: SzStream, seconds: f64) -> Self {
+        SzArtifact {
+            stream,
+            decoded: None,
+            seconds,
+        }
+    }
+
+    fn decoded(&mut self) -> &DenseTensor {
+        if self.decoded.is_none() {
+            self.decoded = Some(self.stream.decode());
+        }
+        self.decoded.as_ref().unwrap()
+    }
+}
+
+impl Artifact for SzArtifact {
+    fn get(&mut self, idx: &[usize]) -> f32 {
+        self.decoded().at(idx)
+    }
+
+    fn decode_all(&mut self) -> DenseTensor {
+        // hand the cache over instead of cloning (see TthreshArtifact)
+        match self.decoded.take() {
+            Some(t) => t,
+            None => self.stream.decode(),
+        }
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.stream.coded_bytes
+    }
+
+    fn meta(&self) -> ArtifactMeta {
+        ArtifactMeta {
+            method: "sz",
+            shape: self.stream.shape.clone(),
+            size_bytes: self.stream.coded_bytes,
+            fitness: None,
+            seconds: self.seconds,
+        }
+    }
+
+    fn write(&self, w: &mut dyn Write) -> Result<()> {
+        let s = &self.stream;
+        let mut out = Vec::new();
+        shape_header(&mut out, &s.shape)?;
+        put_f32(&mut out, s.step);
+        put_u64(&mut out, s.outliers.len() as u64);
+        for &v in &s.outliers {
+            put_f32(&mut out, v);
+        }
+        let coded = huffman_encode(&s.symbols, sz::ALPHABET);
+        put_u64(&mut out, coded.len() as u64);
+        out.extend_from_slice(&coded);
+        w.write_all(&out)?;
+        Ok(())
+    }
+}
+
+/// SZ3-like codec: Lorenzo prediction + error-bounded quantisation +
+/// Huffman.
+pub struct SzCodec;
+
+impl Codec for SzCodec {
+    fn name(&self) -> &'static str {
+        "sz"
+    }
+
+    fn label(&self) -> &'static str {
+        "SZ3"
+    }
+
+    fn tag(&self) -> u8 {
+        7
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["sz3"]
+    }
+
+    fn compress(
+        &self,
+        t: &DenseTensor,
+        budget: &Budget,
+        cfg: &CodecConfig,
+    ) -> Result<Box<dyn Artifact>> {
+        let build = |rel: f64| -> Result<Box<dyn Artifact>> {
+            let timer = Timer::start();
+            let stream = sz::compress(t, rel);
+            Ok(Box::new(SzArtifact::new(stream, timer.seconds())))
+        };
+        match *budget {
+            // Error-bound-driven: take the bound directly.
+            Budget::RelError(e) => build(e),
+            // Size-driven: grid-search the bound whose coded size lands
+            // nearest the byte target (the paper: "configured to yield
+            // similar compressed sizes").
+            _ => {
+                let target = budget.target_bytes().unwrap();
+                closest_to_bytes(&cfg.sz_grid, target, build)
+            }
+        }
+    }
+
+    fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {
+        let mut c = Cursor::new(payload);
+        let shape = read_shape(&mut c)?;
+        let step = c.f32()?;
+        if !step.is_finite() || step <= 0.0 {
+            bail!("bad quantiser step {step}");
+        }
+        let n_outliers = c.count(4)?;
+        let outliers = c.f32_vec(n_outliers)?;
+        let clen = c.count(1)?;
+        let symbols = huffman_decode(c.take(clen)?)?;
+        let n = checked_len(&shape)?;
+        if symbols.len() != n {
+            bail!("symbol stream has {} entries, tensor has {n}", symbols.len());
+        }
+        let escape = (sz::ALPHABET - 1) as u16;
+        if symbols.iter().any(|&s| s as usize >= sz::ALPHABET) {
+            bail!("symbols outside the SZ alphabet");
+        }
+        let n_escapes = symbols.iter().filter(|&&s| s == escape).count();
+        if n_escapes != outliers.len() {
+            bail!(
+                "escape count {n_escapes} does not match {} outliers",
+                outliers.len()
+            );
+        }
+        let coded_bytes = clen + outliers.len() * 4 + 16;
+        Ok(Box::new(SzArtifact::new(
+            SzStream {
+                shape,
+                step,
+                symbols,
+                outliers,
+                coded_bytes,
+            },
+            0.0,
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::container::{artifact_from_bytes, artifact_to_bytes};
+    use crate::codec::by_name;
+
+    fn roundtrip(method: &str, t: &DenseTensor, budget: Budget) -> usize {
+        let codec = by_name(method).unwrap();
+        let mut a = codec.compress(t, &budget, &CodecConfig::default()).unwrap();
+        let before = a.decode_all();
+        let reported = a.size_bytes();
+        let bytes = artifact_to_bytes(a.as_ref()).unwrap();
+        let mut b = artifact_from_bytes(&bytes).unwrap();
+        assert_eq!(b.meta().method, codec.name());
+        assert_eq!(b.size_bytes(), reported);
+        let after = b.decode_all();
+        assert_eq!(
+            before.data(),
+            after.data(),
+            "{method}: decode must be bit-identical after save/load"
+        );
+        let idx = before.unravel(before.len() / 3);
+        assert_eq!(b.get(&idx), before.at(&idx));
+        bytes.len()
+    }
+
+    #[test]
+    fn sz_roundtrip_and_disk_size_tracks_reported() {
+        let t = DenseTensor::random_uniform(&[12, 10, 8], 0);
+        let codec = by_name("sz").unwrap();
+        let mut a = codec
+            .compress(&t, &Budget::RelError(0.1), &CodecConfig::default())
+            .unwrap();
+        let reported = a.size_bytes();
+        let _ = a.decode_all();
+        let disk = artifact_to_bytes(a.as_ref()).unwrap().len();
+        // on-disk = coded stream + small headers; must be the same order
+        // of magnitude as the reported coded size, not raw-float size
+        assert!(disk < reported * 2 + 4096, "disk {disk} vs reported {reported}");
+        roundtrip("sz", &t, Budget::RelError(0.1));
+    }
+
+    #[test]
+    fn sz_byte_budget_lands_near_target() {
+        let t = DenseTensor::random_uniform(&[16, 12, 10], 1);
+        let codec = by_name("sz").unwrap();
+        let loose = codec
+            .compress(&t, &Budget::Bytes(1_000_000), &CodecConfig::default())
+            .unwrap()
+            .size_bytes();
+        let tight = codec
+            .compress(&t, &Budget::Bytes(600), &CodecConfig::default())
+            .unwrap()
+            .size_bytes();
+        // a much larger byte budget must never produce a smaller stream
+        assert!(loose >= tight, "{loose} vs {tight}");
+    }
+
+    #[test]
+    fn tthresh_roundtrip() {
+        let t = DenseTensor::random_uniform(&[8, 7, 6], 2);
+        roundtrip("tthresh", &t, Budget::Params(600));
+    }
+
+    #[test]
+    fn tthresh_corrupt_symbol_stream_rejected() {
+        let t = DenseTensor::random_uniform(&[6, 5, 4], 3);
+        let codec = by_name("tthresh").unwrap();
+        let a = codec
+            .compress(&t, &Budget::Params(300), &CodecConfig::default())
+            .unwrap();
+        let bytes = artifact_to_bytes(a.as_ref()).unwrap();
+        assert!(artifact_from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! The method-tagged `.tcz` v2 container.
+//!
+//! v2 layout (little-endian):
+//! ```text
+//! magic "TCZ2" | u8 version = 2 | u8 method_tag | u8 reserved[2]
+//! u64 payload_len | payload (codec-specific, written by Artifact::write)
+//! ```
+//!
+//! v1 files (magic "TCZ1", written by `compress::format::save_tcz`) carry a
+//! bare TensorCodec/NeuKron model; [`load_artifact`] still accepts them and
+//! wraps the model in a neural artifact, so every `.tcz` ever written keeps
+//! loading.
+
+use super::neural::NeuralArtifact;
+use super::{by_name, by_tag, Artifact};
+use crate::compress::format::decode_model;
+use crate::nttd::Variant;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+const MAGIC_V2: &[u8; 4] = b"TCZ2";
+const MAGIC_V1: &[u8; 4] = b"TCZ1";
+const VERSION_V2: u8 = 2;
+
+/// Serialise an artifact into a full v2 container byte stream.
+pub fn artifact_to_bytes(artifact: &dyn Artifact) -> Result<Vec<u8>> {
+    let meta = artifact.meta();
+    let codec = by_name(meta.method)
+        .with_context(|| format!("artifact method `{}` is not registered", meta.method))?;
+    let mut payload = Vec::new();
+    artifact.write(&mut payload)?;
+    let mut out = Vec::with_capacity(payload.len() + 16);
+    out.extend_from_slice(MAGIC_V2);
+    out.push(VERSION_V2);
+    out.push(codec.tag());
+    out.extend_from_slice(&[0u8, 0u8]); // reserved
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Deserialise an artifact from container bytes (v2, or legacy v1).
+pub fn artifact_from_bytes(bytes: &[u8]) -> Result<Box<dyn Artifact>> {
+    if bytes.len() < 4 {
+        bail!("not a .tcz file (too short)");
+    }
+    if &bytes[..4] == MAGIC_V1 {
+        // Legacy v1: a bare TensorCodec/NeuKron model.
+        let model = decode_model(bytes)?;
+        let method = match model.params.variant {
+            Variant::Tc => "tensorcodec",
+            Variant::Nk => "neukron",
+        };
+        return Ok(Box::new(NeuralArtifact::from_model(model, method)));
+    }
+    if &bytes[..4] != MAGIC_V2 {
+        bail!("not a .tcz file");
+    }
+    if bytes.len() < 16 {
+        bail!("tcz v2 header truncated");
+    }
+    let version = bytes[4];
+    if version != VERSION_V2 {
+        bail!("unsupported tcz version {version}");
+    }
+    let tag = bytes[5];
+    let payload_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    if bytes.len() < 16 + payload_len {
+        bail!(
+            "tcz payload truncated: {} < {payload_len}",
+            bytes.len() - 16
+        );
+    }
+    let codec = by_tag(tag).with_context(|| format!("unknown codec tag {tag}"))?;
+    codec
+        .read_artifact(&bytes[16..16 + payload_len])
+        .with_context(|| format!("decoding {} artifact", codec.name()))
+}
+
+/// Save an artifact to a v2 `.tcz` file.
+pub fn save_artifact(path: &Path, artifact: &dyn Artifact) -> Result<()> {
+    let bytes = artifact_to_bytes(artifact)?;
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Load an artifact from a `.tcz` file (v2 or legacy v1).
+pub fn load_artifact(path: &Path) -> Result<Box<dyn Artifact>> {
+    let bytes = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+    artifact_from_bytes(&bytes)
+}
+
+// ---------------------------------------------------------------------
+// Little-endian payload primitives shared by the artifact serialisers.
+// ---------------------------------------------------------------------
+
+pub(crate) fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+/// Overflow-checked product of size fields read from untrusted payloads —
+/// a corrupt file must fail with a clean error, not wrap in release mode
+/// and index out of bounds later.
+pub(crate) fn checked_len(parts: &[usize]) -> Result<usize> {
+    parts
+        .iter()
+        .try_fold(1usize, |acc, &p| acc.checked_mul(p))
+        .with_context(|| format!("size fields overflow: {parts:?}"))
+}
+
+/// Shared payload framing: `u8 order | u64 shape[order]`.
+pub(crate) fn shape_header(out: &mut Vec<u8>, shape: &[usize]) -> Result<()> {
+    if shape.len() > 255 {
+        bail!("tensor order out of range");
+    }
+    put_u8(out, shape.len() as u8);
+    for &n in shape {
+        put_u64(out, n as u64);
+    }
+    Ok(())
+}
+
+/// Inverse of [`shape_header`], with basic sanity checks.
+pub(crate) fn read_shape(c: &mut Cursor) -> Result<Vec<usize>> {
+    let d = c.u8()? as usize;
+    if d == 0 {
+        bail!("zero-order tensor");
+    }
+    let shape = c.u64_vec(d)?;
+    if shape.iter().any(|&n| n == 0) {
+        bail!("zero-length mode");
+    }
+    Ok(shape)
+}
+
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over a payload slice.
+pub(crate) struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, off: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.buf.len() {
+            bail!("payload truncated at offset {}", self.off);
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A length-checked count field (guards against absurd allocations on
+    /// corrupt input: the count can never exceed the remaining bytes).
+    pub fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        if n.saturating_mul(elem_bytes) > self.buf.len() - self.off {
+            bail!("corrupt count {n} at offset {}", self.off);
+        }
+        Ok(n)
+    }
+
+    pub fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>> {
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn u64_vec(&mut self, n: usize) -> Result<Vec<usize>> {
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect())
+    }
+}

@@ -1,0 +1,590 @@
+//! Factorisation codecs: TT (TT-SVD), CP (ALS), Tucker (HOOI) and
+//! tensor-ring (ALS). Their artifacts are the factor sets themselves,
+//! stored as doubles — exactly the paper's parameter accounting.
+
+use super::container::{
+    checked_len, put_f32, put_f64, put_u64, read_shape, shape_header, Cursor,
+};
+use super::{
+    largest_within, rel_error_search, Artifact, ArtifactMeta, Budget, Codec, CodecConfig,
+};
+use crate::baselines::cp::{cp_als, CpFactors};
+use crate::baselines::tring::{tr_als, TrCores};
+use crate::baselines::ttd::{tt_param_count, tt_svd, TtCores};
+use crate::baselines::tucker::{hooi_uniform, TuckerModel};
+use crate::linalg::Mat;
+use crate::metrics::Timer;
+use crate::tensor::DenseTensor;
+use anyhow::{bail, Result};
+use std::io::Write;
+
+// ---------------------------------------------------------------------
+// TT
+// ---------------------------------------------------------------------
+
+/// Tensor-train factor set.
+pub struct TtArtifact {
+    pub tt: TtCores,
+    pub seconds: f64,
+}
+
+impl Artifact for TtArtifact {
+    fn get(&mut self, idx: &[usize]) -> f32 {
+        self.tt.entry(idx) as f32
+    }
+
+    fn decode_all(&mut self) -> DenseTensor {
+        self.tt.reconstruct()
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.tt.num_params() * 8
+    }
+
+    fn meta(&self) -> ArtifactMeta {
+        ArtifactMeta {
+            method: "ttd",
+            shape: self.tt.shape.clone(),
+            size_bytes: self.size_bytes(),
+            fitness: None,
+            seconds: self.seconds,
+        }
+    }
+
+    fn write(&self, w: &mut dyn Write) -> Result<()> {
+        let mut out = Vec::new();
+        shape_header(&mut out, &self.tt.shape)?;
+        for &r in &self.tt.ranks {
+            put_u64(&mut out, r as u64);
+        }
+        for core in &self.tt.cores {
+            put_u64(&mut out, core.len() as u64);
+            for &v in core {
+                put_f64(&mut out, v);
+            }
+        }
+        w.write_all(&out)?;
+        Ok(())
+    }
+}
+
+/// TT-SVD codec (the paper's TTD baseline).
+pub struct TtdCodec;
+
+impl Codec for TtdCodec {
+    fn name(&self) -> &'static str {
+        "ttd"
+    }
+
+    fn label(&self) -> &'static str {
+        "TTD"
+    }
+
+    fn tag(&self) -> u8 {
+        2
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["tt"]
+    }
+
+    fn compress(
+        &self,
+        t: &DenseTensor,
+        budget: &Budget,
+        cfg: &CodecConfig,
+    ) -> Result<Box<dyn Artifact>> {
+        let seed = cfg.seed;
+        let build = |rank: usize| -> Result<Box<dyn Artifact>> {
+            let timer = Timer::start();
+            let tt = tt_svd(t, rank, seed);
+            Ok(Box::new(TtArtifact {
+                tt,
+                seconds: timer.seconds(),
+            }))
+        };
+        match budget.target_params() {
+            Some(p) => build(largest_within(p, 512, |r| tt_param_count(t.shape(), r))),
+            None => {
+                let Budget::RelError(e) = *budget else { unreachable!() };
+                rel_error_search(t, e, 256, build)
+            }
+        }
+    }
+
+    fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {
+        let mut c = Cursor::new(payload);
+        let shape = read_shape(&mut c)?;
+        let d = shape.len();
+        let ranks = c.u64_vec(d + 1)?;
+        if ranks[0] != 1 || ranks[d] != 1 {
+            bail!("bad TT boundary ranks");
+        }
+        let mut cores = Vec::with_capacity(d);
+        for k in 0..d {
+            let n = c.count(8)?;
+            if n != checked_len(&[ranks[k], shape[k], ranks[k + 1]])? {
+                bail!("TT core {k} has {n} values, wanted r·N·r");
+            }
+            cores.push(c.f64_vec(n)?);
+        }
+        Ok(Box::new(TtArtifact {
+            tt: TtCores {
+                shape,
+                ranks,
+                cores,
+            },
+            seconds: 0.0,
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// CP
+// ---------------------------------------------------------------------
+
+/// CP factor set.
+pub struct CpArtifact {
+    pub cp: CpFactors,
+    pub seconds: f64,
+}
+
+impl Artifact for CpArtifact {
+    fn get(&mut self, idx: &[usize]) -> f32 {
+        self.cp.entry(idx) as f32
+    }
+
+    fn decode_all(&mut self) -> DenseTensor {
+        self.cp.reconstruct()
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.cp.num_params() * 8
+    }
+
+    fn meta(&self) -> ArtifactMeta {
+        ArtifactMeta {
+            method: "cpd",
+            shape: self.cp.shape.clone(),
+            size_bytes: self.size_bytes(),
+            fitness: None,
+            seconds: self.seconds,
+        }
+    }
+
+    fn write(&self, w: &mut dyn Write) -> Result<()> {
+        let mut out = Vec::new();
+        shape_header(&mut out, &self.cp.shape)?;
+        put_u64(&mut out, self.cp.rank as u64);
+        for f in &self.cp.factors {
+            for &v in &f.data {
+                put_f64(&mut out, v);
+            }
+        }
+        w.write_all(&out)?;
+        Ok(())
+    }
+}
+
+/// CP-ALS codec (the paper's CPD baseline).
+pub struct CpdCodec;
+
+impl Codec for CpdCodec {
+    fn name(&self) -> &'static str {
+        "cpd"
+    }
+
+    fn label(&self) -> &'static str {
+        "CPD"
+    }
+
+    fn tag(&self) -> u8 {
+        3
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["cp"]
+    }
+
+    fn compress(
+        &self,
+        t: &DenseTensor,
+        budget: &Budget,
+        cfg: &CodecConfig,
+    ) -> Result<Box<dyn Artifact>> {
+        let iters = cfg.iters.unwrap_or(10);
+        let seed = cfg.seed;
+        let build = |rank: usize| -> Result<Box<dyn Artifact>> {
+            let timer = Timer::start();
+            let cp = cp_als(t, rank, iters, seed);
+            Ok(Box::new(CpArtifact {
+                cp,
+                seconds: timer.seconds(),
+            }))
+        };
+        match budget.target_params() {
+            Some(p) => build(crate::baselines::cp::rank_for_budget(t.shape(), p)),
+            None => {
+                let Budget::RelError(e) = *budget else { unreachable!() };
+                rel_error_search(t, e, 128, build)
+            }
+        }
+    }
+
+    fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {
+        let mut c = Cursor::new(payload);
+        let shape = read_shape(&mut c)?;
+        let rank = c.count(1)?;
+        if rank == 0 {
+            bail!("CP rank must be positive");
+        }
+        let factors: Vec<Mat> = shape
+            .iter()
+            .map(|&n| -> Result<Mat> {
+                Ok(Mat::from_rows(n, rank, c.f64_vec(checked_len(&[n, rank])?)?))
+            })
+            .collect::<Result<_>>()?;
+        Ok(Box::new(CpArtifact {
+            cp: CpFactors {
+                shape,
+                rank,
+                factors,
+            },
+            seconds: 0.0,
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tucker
+// ---------------------------------------------------------------------
+
+/// Tucker core + factor matrices.
+pub struct TuckerArtifact {
+    pub model: TuckerModel,
+    pub seconds: f64,
+}
+
+impl Artifact for TuckerArtifact {
+    fn get(&mut self, idx: &[usize]) -> f32 {
+        self.model.entry(idx) as f32
+    }
+
+    fn decode_all(&mut self) -> DenseTensor {
+        self.model.reconstruct()
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.model.num_params() * 8
+    }
+
+    fn meta(&self) -> ArtifactMeta {
+        ArtifactMeta {
+            method: "tkd",
+            shape: self.model.shape.clone(),
+            size_bytes: self.size_bytes(),
+            fitness: None,
+            seconds: self.seconds,
+        }
+    }
+
+    fn write(&self, w: &mut dyn Write) -> Result<()> {
+        let mut out = Vec::new();
+        shape_header(&mut out, &self.model.shape)?;
+        for &r in &self.model.ranks {
+            put_u64(&mut out, r as u64);
+        }
+        for &v in self.model.core.data() {
+            put_f32(&mut out, v);
+        }
+        for f in &self.model.factors {
+            for &v in &f.data {
+                put_f64(&mut out, v);
+            }
+        }
+        w.write_all(&out)?;
+        Ok(())
+    }
+}
+
+/// HOOI codec (the paper's TKD baseline).
+pub struct TuckerCodec;
+
+impl Codec for TuckerCodec {
+    fn name(&self) -> &'static str {
+        "tkd"
+    }
+
+    fn label(&self) -> &'static str {
+        "TKD"
+    }
+
+    fn tag(&self) -> u8 {
+        4
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["tucker"]
+    }
+
+    fn compress(
+        &self,
+        t: &DenseTensor,
+        budget: &Budget,
+        cfg: &CodecConfig,
+    ) -> Result<Box<dyn Artifact>> {
+        let iters = cfg.iters.unwrap_or(2);
+        let seed = cfg.seed;
+        let build = |rank: usize| -> Result<Box<dyn Artifact>> {
+            let timer = Timer::start();
+            let model = hooi_uniform(t, rank, iters, seed);
+            Ok(Box::new(TuckerArtifact {
+                model,
+                seconds: timer.seconds(),
+            }))
+        };
+        match budget.target_params() {
+            Some(p) => build(crate::baselines::tucker::rank_for_budget(t.shape(), p)),
+            None => {
+                let Budget::RelError(e) = *budget else { unreachable!() };
+                rel_error_search(t, e, 64, build)
+            }
+        }
+    }
+
+    fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {
+        let mut c = Cursor::new(payload);
+        let shape = read_shape(&mut c)?;
+        let d = shape.len();
+        let ranks = c.u64_vec(d)?;
+        if ranks.iter().zip(&shape).any(|(&r, &n)| r == 0 || r > n) {
+            bail!("bad Tucker ranks");
+        }
+        let core_len = checked_len(&ranks)?;
+        let core = DenseTensor::from_data(&ranks, c.f32_vec(core_len)?);
+        let factors: Vec<Mat> = shape
+            .iter()
+            .zip(&ranks)
+            .map(|(&n, &r)| -> Result<Mat> {
+                Ok(Mat::from_rows(n, r, c.f64_vec(checked_len(&[n, r])?)?))
+            })
+            .collect::<Result<_>>()?;
+        Ok(Box::new(TuckerArtifact {
+            model: TuckerModel {
+                shape,
+                ranks,
+                core,
+                factors,
+            },
+            seconds: 0.0,
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tensor ring
+// ---------------------------------------------------------------------
+
+/// Tensor-ring core set.
+pub struct TrArtifact {
+    pub tr: TrCores,
+    pub seconds: f64,
+}
+
+impl Artifact for TrArtifact {
+    fn get(&mut self, idx: &[usize]) -> f32 {
+        self.tr.entry(idx) as f32
+    }
+
+    fn decode_all(&mut self) -> DenseTensor {
+        self.tr.reconstruct()
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.tr.num_params() * 8
+    }
+
+    fn meta(&self) -> ArtifactMeta {
+        ArtifactMeta {
+            method: "trd",
+            shape: self.tr.shape.clone(),
+            size_bytes: self.size_bytes(),
+            fitness: None,
+            seconds: self.seconds,
+        }
+    }
+
+    fn write(&self, w: &mut dyn Write) -> Result<()> {
+        let mut out = Vec::new();
+        shape_header(&mut out, &self.tr.shape)?;
+        put_u64(&mut out, self.tr.rank as u64);
+        for core in &self.tr.cores {
+            for &v in core {
+                put_f64(&mut out, v);
+            }
+        }
+        w.write_all(&out)?;
+        Ok(())
+    }
+}
+
+/// Tensor-ring ALS codec (the paper's TRD baseline).
+pub struct TringCodec;
+
+impl Codec for TringCodec {
+    fn name(&self) -> &'static str {
+        "trd"
+    }
+
+    fn label(&self) -> &'static str {
+        "TRD"
+    }
+
+    fn tag(&self) -> u8 {
+        5
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["tring", "tr"]
+    }
+
+    fn compress(
+        &self,
+        t: &DenseTensor,
+        budget: &Budget,
+        cfg: &CodecConfig,
+    ) -> Result<Box<dyn Artifact>> {
+        let iters = cfg.iters.unwrap_or(3);
+        let seed = cfg.seed;
+        let build = |rank: usize| -> Result<Box<dyn Artifact>> {
+            let timer = Timer::start();
+            let tr = tr_als(t, rank, iters, seed);
+            Ok(Box::new(TrArtifact {
+                tr,
+                seconds: timer.seconds(),
+            }))
+        };
+        match budget.target_params() {
+            Some(p) => build(crate::baselines::tring::rank_for_budget(t.shape(), p)),
+            None => {
+                let Budget::RelError(e) = *budget else { unreachable!() };
+                rel_error_search(t, e, 32, build)
+            }
+        }
+    }
+
+    fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {
+        let mut c = Cursor::new(payload);
+        let shape = read_shape(&mut c)?;
+        let rank = c.count(1)?;
+        if rank == 0 {
+            bail!("ring rank must be positive");
+        }
+        let cores: Vec<Vec<f64>> = shape
+            .iter()
+            .map(|&n| -> Result<Vec<f64>> { c.f64_vec(checked_len(&[n, rank, rank])?) })
+            .collect::<Result<_>>()?;
+        Ok(Box::new(TrArtifact {
+            tr: TrCores { shape, rank, cores },
+            seconds: 0.0,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::container::{artifact_from_bytes, artifact_to_bytes};
+    use crate::codec::{by_name, Budget, CodecConfig};
+
+    fn roundtrip(method: &str, t: &DenseTensor, budget: Budget) {
+        let codec = by_name(method).unwrap();
+        let mut a = codec.compress(t, &budget, &CodecConfig::default()).unwrap();
+        let before = a.decode_all();
+        let reported = a.size_bytes();
+        let bytes = artifact_to_bytes(a.as_ref()).unwrap();
+        let mut b = artifact_from_bytes(&bytes).unwrap();
+        assert_eq!(b.meta().method, codec.name());
+        assert_eq!(b.meta().shape, t.shape().to_vec());
+        assert_eq!(b.size_bytes(), reported);
+        let after = b.decode_all();
+        assert_eq!(
+            before.data(),
+            after.data(),
+            "{method}: decode must be bit-identical after save/load"
+        );
+        // point decode agrees with bulk decode
+        for lin in [0usize, before.len() / 2, before.len() - 1] {
+            let idx = before.unravel(lin);
+            let got = b.get(&idx);
+            let want = before.data()[lin];
+            assert!(
+                (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "{method} at {idx:?}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn ttd_roundtrip() {
+        let t = DenseTensor::random_uniform(&[6, 5, 4], 0);
+        roundtrip("ttd", &t, Budget::Params(400));
+    }
+
+    #[test]
+    fn cpd_roundtrip() {
+        let t = DenseTensor::random_uniform(&[6, 5, 4], 1);
+        roundtrip("cpd", &t, Budget::Params(120));
+    }
+
+    #[test]
+    fn tkd_roundtrip() {
+        let t = DenseTensor::random_uniform(&[6, 5, 4], 2);
+        roundtrip("tkd", &t, Budget::Params(200));
+    }
+
+    #[test]
+    fn trd_roundtrip() {
+        let t = DenseTensor::random_uniform(&[6, 5, 4], 3);
+        roundtrip("trd", &t, Budget::Params(240));
+    }
+
+    #[test]
+    fn bytes_budget_equivalent_to_params() {
+        let t = DenseTensor::random_uniform(&[6, 5, 4], 4);
+        let codec = by_name("ttd").unwrap();
+        let cfg = CodecConfig::default();
+        let a = codec.compress(&t, &Budget::Params(300), &cfg).unwrap();
+        let b = codec.compress(&t, &Budget::Bytes(2400), &cfg).unwrap();
+        assert_eq!(a.size_bytes(), b.size_bytes());
+    }
+
+    #[test]
+    fn rel_error_budget_reaches_target() {
+        // full-rank TT is lossless, so a loose relative error is reachable
+        let t = DenseTensor::random_uniform(&[5, 4, 3], 5);
+        let codec = by_name("ttd").unwrap();
+        let mut a = codec
+            .compress(&t, &Budget::RelError(0.05), &CodecConfig::default())
+            .unwrap();
+        let approx = a.decode_all();
+        let fit = crate::metrics::fitness(t.data(), approx.data());
+        assert!(fit >= 0.95, "fit={fit}");
+    }
+
+    #[test]
+    fn corrupt_payload_rejected() {
+        let t = DenseTensor::random_uniform(&[4, 4, 3], 6);
+        let codec = by_name("ttd").unwrap();
+        let a = codec
+            .compress(&t, &Budget::Params(200), &CodecConfig::default())
+            .unwrap();
+        let bytes = artifact_to_bytes(a.as_ref()).unwrap();
+        // truncate payload
+        assert!(artifact_from_bytes(&bytes[..bytes.len() - 9]).is_err());
+        // corrupt the method tag to an unknown value
+        let mut bad = bytes.clone();
+        bad[5] = 99;
+        assert!(artifact_from_bytes(&bad).is_err());
+    }
+}

@@ -68,8 +68,10 @@ fn decode_params(bytes: &[u8], dtype: ParamDtype, n: usize) -> Result<Vec<f32>> 
     Ok(out)
 }
 
-/// Serialise a model to a `.tcz` file.
-pub fn save_tcz(path: &Path, m: &CompressedModel) -> Result<()> {
+/// Serialise a model into the v1 `.tcz` byte layout (no file IO). The v2
+/// method-tagged container (`crate::codec::container`) embeds this same
+/// byte stream as the payload for TensorCodec/NeuKron artifacts.
+pub fn encode_model(m: &CompressedModel) -> Result<Vec<u8>> {
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(MAGIC);
     buf.push(VERSION);
@@ -107,18 +109,20 @@ pub fn save_tcz(path: &Path, m: &CompressedModel) -> Result<()> {
     for perm in &m.orders.perms {
         buf.extend_from_slice(&pack_permutation(perm));
     }
+    Ok(buf)
+}
+
+/// Serialise a model to a v1 `.tcz` file.
+pub fn save_tcz(path: &Path, m: &CompressedModel) -> Result<()> {
+    let buf = encode_model(m)?;
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
     f.write_all(&buf)?;
     Ok(())
 }
 
-/// Deserialise a `.tcz` file.
-pub fn load_tcz(path: &Path) -> Result<CompressedModel> {
-    let mut bytes = Vec::new();
-    std::fs::File::open(path)
-        .with_context(|| format!("open {}", path.display()))?
-        .read_to_end(&mut bytes)?;
+/// Deserialise the v1 `.tcz` byte layout (inverse of [`encode_model`]).
+pub fn decode_model(bytes: &[u8]) -> Result<CompressedModel> {
     let mut off = 0usize;
     let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
         if *off + n > bytes.len() {
@@ -189,6 +193,15 @@ pub fn load_tcz(path: &Path) -> Result<CompressedModel> {
         init_seconds: 0.0,
         epochs_run: 0,
     })
+}
+
+/// Deserialise a v1 `.tcz` file.
+pub fn load_tcz(path: &Path) -> Result<CompressedModel> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut bytes)?;
+    decode_model(&bytes)
 }
 
 #[cfg(test)]

@@ -37,13 +37,16 @@ pub struct CompressedModel {
 impl CompressedModel {
     /// Compressed size in bytes under the paper's accounting:
     /// parameters at `param_dtype` precision + Σ_k N_k⌈log2 N_k⌉ bits.
+    /// Modes with `N_k ≤ 1` have exactly one ordering and are charged 0
+    /// bits (the paper's `N_k log2 N_k` is 0 there).
     pub fn reported_size_bytes(&self) -> usize {
         let param_bytes = self.params.num_params() * self.param_dtype.bytes();
         let perm_bits: usize = self
             .spec
             .orig_shape
             .iter()
-            .map(|&n| n * ceil_log2(n.max(2)) as usize)
+            .filter(|&&n| n > 1)
+            .map(|&n| n * ceil_log2(n) as usize)
             .sum();
         param_bytes + perm_bits.div_ceil(8)
     }
@@ -112,7 +115,7 @@ impl Decompressor {
 }
 
 /// Save/load round-trip is in [`format`]; re-exported here for callers.
-pub use format::{load_tcz, save_tcz};
+pub use format::{decode_model, encode_model, load_tcz, save_tcz};
 
 #[allow(unused)]
 fn _doc_only() {}
@@ -148,6 +151,33 @@ mod tests {
         let perm_bits = 12 * ceil_log2(12) as usize
             + 9 * ceil_log2(9) as usize
             + 5 * ceil_log2(5) as usize;
+        assert_eq!(
+            m.reported_size_bytes(),
+            m.params.num_params() * 4 + perm_bits.div_ceil(8)
+        );
+    }
+
+    #[test]
+    fn reported_size_skips_singleton_modes() {
+        // A mode with N_k = 1 has exactly one ordering: the paper's
+        // N_k log2 N_k accounting charges 0 bits, not 1.
+        let spec = FoldSpec::auto(&[12, 1, 5], 0).unwrap();
+        let params = crate::nttd::ModelParams::init_tc(0, spec.dp, 32, 5, 5);
+        let mut rng = crate::util::Pcg64::seeded(0);
+        let orders = Orders::random(&spec.orig_shape, &mut rng);
+        let m = CompressedModel {
+            spec,
+            orders,
+            params,
+            mean: 0.0,
+            std: 1.0,
+            fitness: 0.0,
+            param_dtype: ParamDtype::F32,
+            train_seconds: 0.0,
+            init_seconds: 0.0,
+            epochs_run: 0,
+        };
+        let perm_bits = 12 * ceil_log2(12) as usize + 5 * ceil_log2(5) as usize;
         assert_eq!(
             m.reported_size_bytes(),
             m.params.num_params() * 4 + perm_bits.div_ceil(8)

@@ -14,6 +14,7 @@
 //! turns point queries into full artifact batches.
 
 use super::batcher::{next_batch, request_channel, BatchPolicy, DecodeRequest};
+use crate::codec::Artifact;
 use crate::compress::CompressedModel;
 use crate::coordinator::Reconstructor;
 use crate::runtime::{ForwardExec, Runtime};
@@ -176,7 +177,8 @@ pub fn serve_tcp(
     let server = DecodeServer::start(model, policy)?;
     let listener = std::net::TcpListener::bind(addr)
         .with_context(|| format!("bind {addr}"))?;
-    eprintln!("[tcz] serving decode requests on {addr} (shape {shape:?})");
+    let local = listener.local_addr()?;
+    eprintln!("[tcz] serving decode requests on {local} (shape {shape:?})");
     let mut workers = Vec::new();
     for conn in listener.incoming().take(max_conns) {
         let stream = conn?;
@@ -216,5 +218,66 @@ pub fn serve_tcp(
         let _ = w.join();
     }
     server.shutdown()?;
+    Ok(())
+}
+
+/// Method-agnostic TCP front-end: serves point queries from *any*
+/// [`Artifact`] (same line protocol as [`serve_tcp`]).
+///
+/// Baseline artifacts have no XLA batch path — decode goes through the
+/// artifact's own `get`, serialised by a mutex. That is the right shape
+/// for factor-set artifacts (O(dR²) per entry, no batching to win) and
+/// keeps the server surface identical across every codec.
+pub fn serve_artifact_tcp(
+    artifact: Box<dyn Artifact>,
+    addr: &str,
+    max_conns: usize,
+) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::Mutex;
+    let meta = artifact.meta();
+    let shape = meta.shape.clone();
+    let shared = Arc::new(Mutex::new(artifact));
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr()?;
+    eprintln!(
+        "[tcz] serving {} artifact on {local} (shape {shape:?})",
+        meta.method
+    );
+    let mut workers = Vec::new();
+    for conn in listener.incoming().take(max_conns) {
+        let stream = conn?;
+        let shared = shared.clone();
+        let shape = shape.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut out = stream.try_clone().expect("clone stream");
+            let reader = BufReader::new(stream);
+            for line in reader.lines() {
+                let line = match line {
+                    Ok(l) => l,
+                    Err(_) => break,
+                };
+                let coords: Result<Vec<usize>, _> =
+                    line.trim().split(',').map(|s| s.trim().parse()).collect();
+                let reply = match coords {
+                    Ok(c)
+                        if c.len() == shape.len()
+                            && c.iter().zip(&shape).all(|(&i, &n)| i < n) =>
+                    {
+                        let v = shared.lock().expect("artifact lock").get(&c);
+                        format!("{v}\n")
+                    }
+                    _ => format!("ERR bad coords (want {} dims in-range)\n", shape.len()),
+                };
+                if out.write_all(reply.as_bytes()).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+    for w in workers {
+        let _ = w.join();
+    }
     Ok(())
 }

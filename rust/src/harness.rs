@@ -1,18 +1,20 @@
 //! Shared support for the figure/table benchmark binaries
-//! (`rust/benches/*.rs`, `harness = false`): uniform method runners, the
-//! budget-matching logic the paper uses ("hyperparameters of the compared
-//! methods were configured to yield similar compressed sizes"), and env
-//! knobs so `cargo bench` stays tractable on CPU while remaining faithful
-//! in shape.
+//! (`rust/benches/*.rs`, `harness = false`): budget-matched method runs
+//! over the [`crate::codec`] registry (the paper: "hyperparameters of the
+//! compared methods were configured to yield similar compressed sizes"),
+//! and env knobs so `cargo bench` stays tractable on CPU while remaining
+//! faithful in shape.
 //!
 //! Env knobs:
-//!   TCZ_BENCH_SCALE   mode scale for dataset recipes (default 0.10)
-//!   TCZ_BENCH_EPOCHS  TensorCodec/NeuKron epochs      (default 12)
+//!   TCZ_BENCH_SCALE     mode scale for dataset recipes   (default 0.10)
+//!   TCZ_BENCH_EPOCHS    TensorCodec/NeuKron epochs       (default 12)
+//!   TCZ_BENCH_DATASETS  comma-separated dataset filter   (default: all)
 
-use crate::baselines::{cp, neukron, sz, tring, tthresh, ttd, tucker, BaselineResult};
+use crate::codec::{self, Artifact, Budget, CodecConfig};
 use crate::compress::CompressedModel;
 use crate::config::TrainConfig;
 use crate::coordinator::Trainer;
+use crate::metrics::Timer;
 use crate::tensor::DenseTensor;
 use anyhow::Result;
 
@@ -84,82 +86,85 @@ pub fn run_tc(tensor: &DenseTensor, h: usize, r: usize, epochs: usize) -> Result
     })
 }
 
-/// All seven baselines, each configured to land near `budget_params`
-/// double-precision parameters (TTHRESH/SZ3 are error-bound-driven; the
-/// chosen settings bracket the same size regime).
+/// One baseline run: a thin view over the codec [`Artifact`], with the
+/// decoded tensor cached after the first use.
+pub struct BaselineResult {
+    /// Paper-style method label ("TTD", "SZ3", …).
+    pub name: &'static str,
+    /// Compressed size in bytes (paper accounting).
+    pub bytes: usize,
+    /// Compression wall-clock.
+    pub seconds: f64,
+    pub artifact: Box<dyn Artifact>,
+    approx: Option<DenseTensor>,
+}
+
+impl BaselineResult {
+    pub fn new(name: &'static str, artifact: Box<dyn Artifact>, seconds: f64) -> Self {
+        BaselineResult {
+            name,
+            bytes: artifact.size_bytes(),
+            seconds,
+            artifact,
+            approx: None,
+        }
+    }
+
+    /// The decoded tensor (decoded once, then cached).
+    pub fn approx(&mut self) -> &DenseTensor {
+        if self.approx.is_none() {
+            self.approx = Some(self.artifact.decode_all());
+        }
+        self.approx.as_ref().unwrap()
+    }
+
+    pub fn fitness(&mut self, orig: &DenseTensor) -> f64 {
+        let approx = self.approx();
+        crate::metrics::fitness(orig.data(), approx.data())
+    }
+}
+
+/// All seven baselines from the registry, each budget-matched to
+/// `budget_params` double-precision parameters through the shared
+/// [`Budget`] contract (the per-method size heuristics live inside the
+/// codecs themselves).
 pub fn run_baselines(
     tensor: &DenseTensor,
     budget_params: usize,
     epochs: usize,
 ) -> Vec<BaselineResult> {
-    let shape = tensor.shape();
-    let mut out = Vec::new();
-    out.push(ttd::run(tensor, ttd::rank_for_budget(shape, budget_params), 0));
-    out.push(cp::run(
-        tensor,
-        cp::rank_for_budget(shape, budget_params),
-        10,
-        0,
-    ));
-    out.push(tucker::run(
-        tensor,
-        tucker::rank_for_budget(shape, budget_params),
-        2,
-        0,
-    ));
-    out.push(tring::run(
-        tensor,
-        tring::rank_for_budget(shape, budget_params),
-        3,
-        0,
-    ));
-    // TTHRESH codes coefficients at ~bits/64 of a double, so its Tucker
-    // rank can be ~4x the budget rank at 10-bit quantisation.
-    out.push(tthresh::run(
-        tensor,
-        tucker::rank_for_budget(shape, budget_params * 5),
-        10,
-        0,
-    ));
-    // SZ3's size is driven by its error bound: binary-search the bound so
-    // the coded size lands near the byte budget (paper: "configured to
-    // yield similar compressed sizes").
-    out.push(sz_at_budget(tensor, budget_params * 8));
-    let nk_cfg = TrainConfig {
-        rank: 0,
-        hidden: 8,
-        epochs: effective_epochs(tensor.len(), epochs),
-        lr: 1e-2,
-        reorder_every: 4,
-        swap_samples: 128,
+    let cfg = CodecConfig {
+        train: TrainConfig {
+            rank: 0,
+            hidden: 8,
+            epochs: effective_epochs(tensor.len(), epochs),
+            lr: 1e-2,
+            reorder_every: 4,
+            swap_samples: 128,
+            ..Default::default()
+        },
         ..Default::default()
     };
-    match neukron::run(tensor, &nk_cfg) {
-        Ok(r) => out.push(r),
-        Err(e) => eprintln!("[bench] NeuKron failed: {e:#}"),
-    }
-    out
-}
-
-/// SZ3 run whose coded size is steered toward `budget_bytes` by a grid
-/// search on the relative error bound.
-pub fn sz_at_budget(tensor: &DenseTensor, budget_bytes: usize) -> BaselineResult {
-    let mut best: Option<BaselineResult> = None;
-    for rel in [2.0f64, 1.0, 0.6, 0.35, 0.2, 0.1, 0.05, 0.02] {
-        let res = sz::run(tensor, rel, 0);
-        let better = match &best {
-            None => true,
-            Some(b) => {
-                let d_new = (res.bytes as f64 / budget_bytes as f64).ln().abs();
-                let d_old = (b.bytes as f64 / budget_bytes as f64).ln().abs();
-                d_new < d_old
+    let budget = Budget::Params(budget_params);
+    let mut out = Vec::new();
+    for c in codec::registry() {
+        if c.name() == "tensorcodec" {
+            continue;
+        }
+        let timer = Timer::start();
+        match c.compress(tensor, &budget, &cfg) {
+            Ok(artifact) => {
+                // prefer the artifact's own compression time: for budget
+                // searches (SZ's error-bound grid) the outer wall-clock
+                // includes every rejected candidate
+                let own = artifact.meta().seconds;
+                let seconds = if own > 0.0 { own } else { timer.seconds() };
+                out.push(BaselineResult::new(c.label(), artifact, seconds));
             }
-        };
-        if better {
-            best = Some(res);
+            Err(e) => eprintln!("[bench] {} failed: {e:#}", c.label()),
         }
     }
-    best.unwrap()
+    out
 }
 
 /// Pretty row printer shared by the figure benches.

@@ -10,15 +10,25 @@
 //!   plus a fused Adam train step, AOT-lowered to HLO-text artifacts
 //!   (`python/compile/{model,aot}.py`, `artifacts/*.hlo.txt`).
 //! * **L3** — this crate: the compression coordinator (alternating θ/π
-//!   optimisation, folding, TSP/LSH reordering), the `.tcz` container
-//!   format, a batched decompression server, all seven baselines from the
-//!   paper's evaluation and every substrate they need (dense tensors,
-//!   QR/SVD, Huffman/RLE/bit-IO, synthetic dataset generators).
+//!   optimisation, folding, TSP/LSH reordering), the unified codec layer,
+//!   the `.tcz` container format, a batched decompression server, all seven
+//!   baselines from the paper's evaluation and every substrate they need
+//!   (dense tensors, QR/SVD, Huffman/RLE/bit-IO, synthetic dataset
+//!   generators).
+//!
+//! Every compression method lives behind the [`codec`] registry: TensorCodec
+//! itself plus TTD/CPD/TKD/TRD/TTHRESH/SZ3/NeuKron all implement
+//! [`codec::Codec`] (compress to a budget) and produce a [`codec::Artifact`]
+//! (point/bulk decode, paper-accounting size, method-tagged `.tcz` v2
+//! serialisation). `codec::by_name("ttd")` is the one lookup the CLI, the
+//! benchmark harness and the decode server all share; adding a codec is a
+//! one-file change.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the model
 //! once, then the `tensorcodec` binary is self-contained.
 
 pub mod baselines;
+pub mod codec;
 pub mod coding;
 pub mod harness;
 pub mod compress;

@@ -1,29 +1,64 @@
 //! `tensorcodec` CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   compress    fit a TensorCodec model to a tensor, write a `.tcz`
+//!   compress    compress a tensor with any registered codec, write a `.tcz`
 //!   decompress  decode a `.tcz` back into a dense `.npy`
 //!   get         decode single entries (pure-Rust log-time path)
 //!   eval        fitness of a `.tcz` against its source tensor
 //!   stats       dataset statistics (Table II row)
 //!   gen         generate a synthetic dataset recipe to `.npy`
-//!   serve       TCP decode service over a compressed model
+//!   serve       TCP decode service over any compressed artifact
 //!   info        print `.tcz` metadata
+//!   methods     list the registered codecs
 //!
 //! Inputs are either `--dataset <recipe>` (synthetic Table-II corpus) or
-//! `--input <file.npy>` (any little-endian f32/f64 C-order array).
+//! `--input <file.npy>` (any little-endian f32/f64 C-order array). The
+//! codec is chosen with `--method <name>` (default: tensorcodec); budgets
+//! with `--budget-params N`, `--budget-bytes N` or `--rel-error X`.
 
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
-use tensorcodec::compress::{load_tcz, save_tcz, Decompressor};
+use tensorcodec::codec::{self, Artifact, Budget, CodecConfig, TensorCodecCodec};
 use tensorcodec::config::{apply_overrides, TrainConfig};
 use tensorcodec::coordinator::batcher::BatchPolicy;
-use tensorcodec::coordinator::{server, Trainer};
+use tensorcodec::coordinator::server;
 use tensorcodec::datasets;
+use tensorcodec::metrics::Timer;
 use tensorcodec::tensor::{stats, DenseTensor};
 use tensorcodec::util::npy;
 
-/// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
+/// Flags that never take a value.
+const BOOL_FLAGS: &[&str] = &["verbose", "method-agnostic", "help"];
+
+/// Flags that take a value (`--key value` or `--key=value`).
+const VALUE_FLAGS: &[&str] = &[
+    "dataset",
+    "input",
+    "out",
+    "model",
+    "index",
+    "addr",
+    "max-conns",
+    "max-batch",
+    "max-wait-us",
+    "queue-depth",
+    "config",
+    "set",
+    "scale",
+    "data-seed",
+    "method",
+    "budget-params",
+    "budget-bytes",
+    "rel-error",
+    "seed",
+    "iters",
+    "quant-bits",
+];
+
+/// Minimal flag parser: `--key value` / `--key=value` pairs plus a fixed
+/// set of boolean `--key` flags. Unknown flags are errors, not silently
+/// ignored (so the classic `--set--verbose` typo is caught), and values
+/// that legitimately begin with `--` can always be passed as `--key=value`.
 struct Args {
     cmd: String,
     flags: Vec<(String, String)>,
@@ -34,22 +69,41 @@ impl Args {
     fn parse() -> Result<Args> {
         let mut argv = std::env::args().skip(1);
         let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+        let rest: Vec<String> = argv.collect();
+        Self::parse_from(cmd, &rest)
+    }
+
+    fn parse_from(cmd: String, rest: &[String]) -> Result<Args> {
         let mut flags = Vec::new();
         let mut bools = Vec::new();
-        let rest: Vec<String> = argv.collect();
         let mut i = 0;
         while i < rest.len() {
             let a = &rest[i];
-            if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
-                    flags.push((key.to_string(), rest[i + 1].clone()));
-                    i += 2;
-                } else {
-                    bools.push(key.to_string());
-                    i += 1;
-                }
-            } else {
+            let Some(body) = a.strip_prefix("--") else {
                 bail!("unexpected positional argument `{a}`");
+            };
+            if let Some((k, v)) = body.split_once('=') {
+                if k.is_empty() {
+                    bail!("malformed flag `{a}`");
+                }
+                if !VALUE_FLAGS.contains(&k) {
+                    bail!("unknown flag --{k}");
+                }
+                flags.push((k.to_string(), v.to_string()));
+                i += 1;
+            } else if BOOL_FLAGS.contains(&body) {
+                bools.push(body.to_string());
+                i += 1;
+            } else if !VALUE_FLAGS.contains(&body) {
+                bail!("unknown boolean flag --{body} (see `tensorcodec help`)");
+            } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                flags.push((body.to_string(), rest[i + 1].clone()));
+                i += 2;
+            } else {
+                bail!(
+                    "flag --{body} needs a value (use `--{body} <value>`, or \
+                     `--{body}=<value>` if the value starts with `--`)"
+                );
             }
         }
         Ok(Args { cmd, flags, bools })
@@ -107,50 +161,139 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
+fn build_codec_config(args: &Args) -> Result<CodecConfig> {
+    let mut cfg = CodecConfig {
+        train: build_config(args)?,
+        ..Default::default()
+    };
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse().context("seed")?;
+    }
+    if let Some(s) = args.get("iters") {
+        cfg.iters = Some(s.parse().context("iters")?);
+    }
+    if let Some(s) = args.get("quant-bits") {
+        cfg.quant_bits = s.parse().context("quant-bits")?;
+        if !(2..=16).contains(&cfg.quant_bits) {
+            bail!("--quant-bits must be in 2..=16, got {}", cfg.quant_bits);
+        }
+    }
+    Ok(cfg)
+}
+
+fn parse_budget(args: &Args) -> Result<Option<Budget>> {
+    let picked: Vec<&str> = ["budget-params", "budget-bytes", "rel-error"]
+        .into_iter()
+        .filter(|&k| args.get(k).is_some())
+        .collect();
+    if picked.len() > 1 {
+        bail!("pick at most one of --budget-params / --budget-bytes / --rel-error");
+    }
+    if let Some(v) = args.get("budget-params") {
+        return Ok(Some(Budget::Params(v.parse().context("budget-params")?)));
+    }
+    if let Some(v) = args.get("budget-bytes") {
+        return Ok(Some(Budget::Bytes(v.parse().context("budget-bytes")?)));
+    }
+    if let Some(v) = args.get("rel-error") {
+        return Ok(Some(Budget::RelError(v.parse().context("rel-error")?)));
+    }
+    Ok(None)
+}
+
+fn resolve_method(args: &Args) -> Result<&'static dyn codec::Codec> {
+    let name = args.get("method").unwrap_or("tensorcodec");
+    codec::by_name(name).with_context(|| {
+        format!(
+            "unknown method `{name}` (known: {})",
+            method_names().join(", ")
+        )
+    })
+}
+
+fn method_names() -> Vec<&'static str> {
+    codec::registry().iter().map(|c| c.name()).collect()
+}
+
+/// When `--method` is given on a load command, require the file to match.
+fn check_method(args: &Args, meta: &codec::ArtifactMeta) -> Result<()> {
+    if let Some(name) = args.get("method") {
+        let want = codec::by_name(name)
+            .with_context(|| format!("unknown method `{name}`"))?;
+        if want.name() != meta.method {
+            bail!(
+                "file holds a {} artifact, but --method {} was requested",
+                meta.method,
+                want.name()
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
     let tensor = load_tensor(args)?;
-    let cfg = build_config(args)?;
+    let cdc = resolve_method(args)?;
+    let ccfg = build_codec_config(args)?;
+    let budget = parse_budget(args)?;
     let out = PathBuf::from(args.req("out")?);
     eprintln!(
-        "[tcz] compressing shape {:?} ({} entries) R={} h={} epochs={}",
+        "[tcz] compressing shape {:?} ({} entries) with {}",
         tensor.shape(),
         tensor.len(),
-        cfg.rank,
-        cfg.hidden,
-        cfg.epochs
+        cdc.name()
     );
-    let mut trainer = Trainer::new(&tensor, cfg)?;
-    let model = trainer.fit()?;
-    save_tcz(&out, &model)?;
+    let timer = Timer::start();
+    let mut artifact: Box<dyn Artifact> = match budget {
+        Some(b) => cdc.compress(&tensor, &b, &ccfg)?,
+        // No budget given: TensorCodec honours the exact TrainConfig
+        // (`--set r=.. h=..`); other codecs default to ~5% of the raw
+        // double size, the paper's mid-budget regime.
+        None if cdc.name() == "tensorcodec" => {
+            TensorCodecCodec::compress_with_config(&tensor, &ccfg.train)?
+        }
+        None => {
+            let default_params = (tensor.len() / 20).max(64);
+            eprintln!("[tcz] no budget given: targeting {default_params} parameters");
+            cdc.compress(&tensor, &Budget::Params(default_params), &ccfg)?
+        }
+    };
+    let seconds = timer.seconds();
+    codec::save_artifact(&out, artifact.as_ref())?;
+    let meta = artifact.meta();
+    let fit = meta.fitness.unwrap_or_else(|| {
+        let approx = artifact.decode_all();
+        tensorcodec::metrics::fitness(tensor.data(), approx.data())
+    });
     let orig_bytes = tensor.len() * 8; // paper stores doubles
-    let comp_bytes = model.reported_size_bytes();
+    let comp_bytes = meta.size_bytes;
     println!(
-        "fitness={:.4} compressed={}B original={}B ratio={:.1}x init={:.1}s train={:.1}s epochs={}",
-        model.fitness,
+        "method={} fitness={:.4} compressed={}B original={}B ratio={:.1}x seconds={:.1}",
+        meta.method,
+        fit,
         comp_bytes,
         orig_bytes,
         orig_bytes as f64 / comp_bytes as f64,
-        model.init_seconds,
-        model.train_seconds,
-        model.epochs_run
+        seconds
     );
     Ok(())
 }
 
 fn cmd_decompress(args: &Args) -> Result<()> {
-    let model = load_tcz(&PathBuf::from(args.req("model")?))?;
+    let mut artifact = codec::load_artifact(&PathBuf::from(args.req("model")?))?;
+    check_method(args, &artifact.meta())?;
     let out = PathBuf::from(args.req("out")?);
-    let mut dec = Decompressor::new(model);
-    let t = dec.reconstruct_all();
+    let t = artifact.decode_all();
     npy::write_f32(&out, t.shape(), t.data())?;
     println!("wrote {:?} to {}", t.shape(), out.display());
     Ok(())
 }
 
 fn cmd_get(args: &Args) -> Result<()> {
-    let model = load_tcz(&PathBuf::from(args.req("model")?))?;
-    let shape = model.spec.orig_shape.clone();
-    let mut dec = Decompressor::new(model);
+    let mut artifact = codec::load_artifact(&PathBuf::from(args.req("model")?))?;
+    let meta = artifact.meta();
+    check_method(args, &meta)?;
+    let shape = meta.shape;
     for spec in args.get_all("index") {
         let idx: Vec<usize> = spec
             .split(',')
@@ -159,28 +302,26 @@ fn cmd_get(args: &Args) -> Result<()> {
         if idx.len() != shape.len() || idx.iter().zip(&shape).any(|(&i, &n)| i >= n) {
             bail!("index {spec} out of range for shape {shape:?}");
         }
-        println!("{spec} -> {}", dec.get(&idx));
+        println!("{spec} -> {}", artifact.get(&idx));
     }
     Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let model = load_tcz(&PathBuf::from(args.req("model")?))?;
+    let mut artifact = codec::load_artifact(&PathBuf::from(args.req("model")?))?;
+    let meta = artifact.meta();
+    check_method(args, &meta)?;
     let tensor = load_tensor(args)?;
-    if tensor.shape() != model.spec.orig_shape.as_slice() {
+    if tensor.shape() != meta.shape.as_slice() {
         bail!(
-            "tensor shape {:?} != model shape {:?}",
+            "tensor shape {:?} != artifact shape {:?}",
             tensor.shape(),
-            model.spec.orig_shape
+            meta.shape
         );
     }
-    let mut dec = Decompressor::new(model);
-    let approx = dec.reconstruct_all();
+    let approx = artifact.decode_all();
     let fit = tensorcodec::metrics::fitness(tensor.data(), approx.data());
-    println!(
-        "fitness={fit:.4} size={}B",
-        dec.model.reported_size_bytes()
-    );
+    println!("method={} fitness={fit:.4} size={}B", meta.method, meta.size_bytes);
     Ok(())
 }
 
@@ -208,33 +349,66 @@ fn cmd_gen(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let model = load_tcz(&PathBuf::from(args.req("model")?))?;
+    let artifact = codec::load_artifact(&PathBuf::from(args.req("model")?))?;
+    check_method(args, &artifact.meta())?;
     let addr = args.get("addr").unwrap_or("127.0.0.1:7070").to_string();
     let max_conns: usize = args.get("max-conns").unwrap_or("64").parse()?;
-    let policy = BatchPolicy {
-        max_batch: args.get("max-batch").unwrap_or("8192").parse()?,
-        max_wait: std::time::Duration::from_micros(
-            args.get("max-wait-us").unwrap_or("2000").parse()?,
-        ),
-        queue_depth: args.get("queue-depth").unwrap_or("65536").parse()?,
-    };
-    server::serve_tcp(model, &addr, policy, max_conns)
+    let runtime_ready = tensorcodec::runtime::manifest::default_dir()
+        .join("manifest.txt")
+        .exists();
+    if !args.has("method-agnostic") && runtime_ready {
+        // Neural artifacts get the XLA-batched server when the AOT
+        // artifacts are available; everything else falls through to the
+        // method-agnostic path.
+        if let Some(model) = artifact.as_model().cloned() {
+            let policy = BatchPolicy {
+                max_batch: args.get("max-batch").unwrap_or("8192").parse()?,
+                max_wait: std::time::Duration::from_micros(
+                    args.get("max-wait-us").unwrap_or("2000").parse()?,
+                ),
+                queue_depth: args.get("queue-depth").unwrap_or("65536").parse()?,
+            };
+            return server::serve_tcp(model, &addr, policy, max_conns);
+        }
+    }
+    server::serve_artifact_tcp(artifact, &addr, max_conns)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let model = load_tcz(&PathBuf::from(args.req("model")?))?;
-    println!("variant:   {}", model.params.variant.as_str());
-    println!("shape:     {:?}", model.spec.orig_shape);
-    println!(
-        "folded:    {:?} (d'={})",
-        model.spec.folded_shape, model.spec.dp
-    );
-    println!("rank/hid:  R={} h={}", model.params.r, model.params.h);
-    println!("params:    {}", model.params.num_params());
-    println!("dtype:     {}", model.param_dtype.as_str());
-    println!("size:      {} bytes", model.reported_size_bytes());
-    println!("fitness:   {:.4}", model.fitness);
-    println!("mean/std:  {} / {}", model.mean, model.std);
+    let artifact = codec::load_artifact(&PathBuf::from(args.req("model")?))?;
+    let meta = artifact.meta();
+    check_method(args, &meta)?;
+    println!("method:    {}", meta.method);
+    println!("shape:     {:?}", meta.shape);
+    println!("size:      {} bytes", meta.size_bytes);
+    if let Some(fit) = meta.fitness {
+        println!("fitness:   {fit:.4}");
+    }
+    if let Some(model) = artifact.as_model() {
+        println!("variant:   {}", model.params.variant.as_str());
+        println!(
+            "folded:    {:?} (d'={})",
+            model.spec.folded_shape, model.spec.dp
+        );
+        println!("rank/hid:  R={} h={}", model.params.r, model.params.h);
+        println!("params:    {}", model.params.num_params());
+        println!("dtype:     {}", model.param_dtype.as_str());
+        println!("mean/std:  {} / {}", model.mean, model.std);
+    }
+    Ok(())
+}
+
+fn cmd_methods() -> Result<()> {
+    println!("{:<12} {:<9} {:<4} aliases", "name", "label", "tag");
+    for c in codec::registry() {
+        println!(
+            "{:<12} {:<9} {:<4} {}",
+            c.name(),
+            c.label(),
+            c.tag(),
+            c.aliases().join(", ")
+        );
+    }
     Ok(())
 }
 
@@ -246,18 +420,25 @@ USAGE: tensorcodec <command> [flags]
 
 COMMANDS
   compress    --dataset <name>|--input <x.npy> --out <m.tcz>
+              [--method <codec>] [--budget-params N|--budget-bytes N|--rel-error X]
               [--scale 0.25] [--data-seed 7] [--config run.conf]
-              [--set k=v ...] [--verbose]
-  decompress  --model <m.tcz> --out <recon.npy>
-  get         --model <m.tcz> --index i,j,k [--index ...]
+              [--set k=v ...] [--seed 0] [--iters N] [--quant-bits 10] [--verbose]
+  decompress  --model <m.tcz> --out <recon.npy> [--method <codec>]
+  get         --model <m.tcz> --index i,j,k [--index ...] [--method <codec>]
   eval        --model <m.tcz> --dataset <name> [--scale ..] [--data-seed ..]
   stats       --dataset <name> [--scale ..]
   gen         --dataset <name> --out <x.npy> [--scale ..] [--data-seed ..]
-  serve       --model <m.tcz> [--addr 127.0.0.1:7070] [--max-batch 8192]
-              [--max-wait-us 2000] [--max-conns 64]
+  serve       --model <m.tcz> [--addr 127.0.0.1:7070] [--method-agnostic]
+              [--max-batch 8192] [--max-wait-us 2000] [--max-conns 64]
   info        --model <m.tcz>
+  methods     list registered codecs
 
+Flags accept `--key value` and `--key=value`; use the `=` form for values
+that start with `--`.
+
+METHODS:  {}
 DATASETS: {}",
+        method_names().join(", "),
         datasets::ALL_DATASETS
             .iter()
             .map(|r| r.name)
@@ -275,6 +456,10 @@ fn main() {
             std::process::exit(2);
         }
     };
+    if args.has("help") {
+        usage();
+        return;
+    }
     let result = match args.cmd.as_str() {
         "compress" => cmd_compress(&args),
         "decompress" => cmd_decompress(&args),
@@ -284,6 +469,7 @@ fn main() {
         "gen" => cmd_gen(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
+        "methods" => cmd_methods(),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -297,5 +483,61 @@ fn main() {
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Args;
+
+    fn parse(rest: &[&str]) -> anyhow::Result<Args> {
+        let rest: Vec<String> = rest.iter().map(|s| s.to_string()).collect();
+        Args::parse_from("test".into(), &rest)
+    }
+
+    #[test]
+    fn key_value_and_equals_forms() {
+        let a = parse(&["--dataset", "uber", "--scale=0.1"]).unwrap();
+        assert_eq!(a.get("dataset"), Some("uber"));
+        assert_eq!(a.get("scale"), Some("0.1"));
+    }
+
+    #[test]
+    fn equals_form_allows_leading_dashes() {
+        let a = parse(&["--set=--weird--"]).unwrap();
+        assert_eq!(a.get("set"), Some("--weird--"));
+    }
+
+    #[test]
+    fn unknown_boolean_flag_reported() {
+        let e = parse(&["--frobnicate"]).err().expect("should fail");
+        assert!(e.to_string().contains("unknown boolean flag"));
+    }
+
+    #[test]
+    fn set_verbose_typo_reported() {
+        // `--set--verbose` must not silently parse as a bool
+        assert!(parse(&["--set--verbose"]).is_err());
+        assert!(parse(&["--set--verbose", "epochs=5"]).is_err());
+    }
+
+    #[test]
+    fn value_flag_without_value_reported() {
+        let e = parse(&["--set", "--verbose"]).err().expect("should fail");
+        assert!(e.to_string().contains("needs a value"), "{e}");
+    }
+
+    #[test]
+    fn bool_flags_parse() {
+        let a = parse(&["--verbose", "--method-agnostic"]).unwrap();
+        assert!(a.has("verbose"));
+        assert!(a.has("method-agnostic"));
+    }
+
+    #[test]
+    fn repeated_flags_accumulate_and_last_wins() {
+        let a = parse(&["--set", "epochs=5", "--set", "epochs=9"]).unwrap();
+        assert_eq!(a.get_all("set"), vec!["epochs=5", "epochs=9"]);
+        assert_eq!(a.get("set"), Some("epochs=9"));
     }
 }

@@ -1,8 +1,11 @@
-//! Dense tensor substrate: storage, slicing, statistics, TT-tensor folding.
+//! Dense tensor substrate: storage, slicing, statistics, TT-tensor
+//! folding, and mode-k (un)folding into matrices.
 
 pub mod dense;
 pub mod fold;
 pub mod stats;
+pub mod unfold;
 
 pub use dense::DenseTensor;
 pub use fold::FoldSpec;
+pub use unfold::{fold_back, unfold};

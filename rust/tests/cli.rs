@@ -124,3 +124,214 @@ fn full_cli_pipeline() {
     let (ok, _) = run(&["frobnicate"]);
     assert!(!ok);
 }
+
+/// Baseline codecs need no XLA artifacts: the whole
+/// gen → compress --method ttd → info → get → decompress → eval pipeline
+/// runs pure-Rust.
+#[test]
+fn baseline_codec_cli_pipeline() {
+    let dir = std::env::temp_dir().join("tcz_cli_baseline_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let npy = dir.join("x.npy");
+    let tcz = dir.join("x_ttd.tcz");
+    let rec = dir.join("rec_ttd.npy");
+
+    let (ok, out) = run(&[
+        "gen",
+        "--dataset",
+        "action",
+        "--scale=0.06",
+        "--data-seed",
+        "3",
+        "--out",
+        npy.to_str().unwrap(),
+    ]);
+    assert!(ok, "gen failed: {out}");
+
+    let (ok, out) = run(&[
+        "compress",
+        "--method",
+        "ttd",
+        "--budget-params",
+        "2000",
+        "--input",
+        npy.to_str().unwrap(),
+        "--out",
+        tcz.to_str().unwrap(),
+    ]);
+    assert!(ok, "compress --method ttd failed: {out}");
+    assert!(out.contains("method=ttd"), "no method line: {out}");
+    assert!(out.contains("fitness="), "no fitness line: {out}");
+
+    let (ok, out) = run(&["info", "--model", tcz.to_str().unwrap()]);
+    assert!(ok && out.contains("method:    ttd"), "info failed: {out}");
+
+    let (ok, out) = run(&[
+        "get",
+        "--model",
+        tcz.to_str().unwrap(),
+        "--index",
+        "0,0,0",
+        "--index",
+        "1,2,3",
+    ]);
+    assert!(ok && out.matches("->").count() == 2, "get failed: {out}");
+
+    // --method acts as an expectation check on load commands
+    let (ok, out) = run(&[
+        "info",
+        "--model",
+        tcz.to_str().unwrap(),
+        "--method",
+        "sz",
+    ]);
+    assert!(!ok && out.contains("ttd"), "method mismatch not caught: {out}");
+
+    let (ok, out) = run(&[
+        "decompress",
+        "--model",
+        tcz.to_str().unwrap(),
+        "--out",
+        rec.to_str().unwrap(),
+    ]);
+    assert!(ok, "decompress failed: {out}");
+    let arr = tensorcodec::util::npy::read_f32(&rec).unwrap();
+    let orig = tensorcodec::util::npy::read_f32(&npy).unwrap();
+    assert_eq!(arr.shape, orig.shape);
+
+    let (ok, out) = run(&[
+        "eval",
+        "--model",
+        tcz.to_str().unwrap(),
+        "--input",
+        npy.to_str().unwrap(),
+    ]);
+    assert!(ok && out.contains("fitness="), "eval failed: {out}");
+
+    // methods lists the registry
+    let (ok, out) = run(&["methods"]);
+    assert!(ok && out.contains("tensorcodec") && out.contains("tthresh"));
+}
+
+#[test]
+fn flag_parser_rejects_unknown_and_accepts_equals() {
+    // --key=value form works
+    let (ok, out) = run(&["stats", "--dataset=uber", "--scale=0.06"]);
+    assert!(ok && out.contains("density="), "equals form failed: {out}");
+    // unknown boolean flag is reported, not ignored
+    let (ok, out) = run(&["stats", "--dataset", "uber", "--frob"]);
+    assert!(!ok && out.contains("unknown boolean flag"), "{out}");
+    // the classic --set--verbose typo is caught
+    let (ok, out) = run(&["stats", "--dataset", "uber", "--set--verbose"]);
+    assert!(!ok, "typo accepted: {out}");
+    // a value flag followed by another flag is an error, not a bool
+    let (ok, out) = run(&["stats", "--dataset", "--verbose"]);
+    assert!(!ok && out.contains("needs a value"), "{out}");
+}
+
+/// `compress --method ttd` + `serve --method-agnostic`: the TCP server
+/// answers point queries from a baseline artifact end-to-end.
+#[test]
+fn serve_method_agnostic_answers_queries() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::process::Stdio;
+
+    let dir = std::env::temp_dir().join("tcz_cli_serve_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let npy = dir.join("x.npy");
+    let tcz = dir.join("x_ttd.tcz");
+    let (ok, out) = run(&[
+        "gen",
+        "--dataset",
+        "action",
+        "--scale",
+        "0.06",
+        "--data-seed",
+        "5",
+        "--out",
+        npy.to_str().unwrap(),
+    ]);
+    assert!(ok, "gen failed: {out}");
+    let (ok, out) = run(&[
+        "compress",
+        "--method",
+        "ttd",
+        "--budget-params",
+        "1500",
+        "--input",
+        npy.to_str().unwrap(),
+        "--out",
+        tcz.to_str().unwrap(),
+    ]);
+    assert!(ok, "compress failed: {out}");
+
+    // expected value from the CLI get path
+    let (ok, get_out) = run(&["get", "--model", tcz.to_str().unwrap(), "--index", "1,2,3"]);
+    assert!(ok, "get failed: {get_out}");
+    let want: f32 = get_out
+        .lines()
+        .find_map(|l| l.split("-> ").nth(1))
+        .expect("get output")
+        .trim()
+        .parse()
+        .expect("get value");
+
+    // serve on an ephemeral port; one connection, then the server exits
+    let mut child = Command::new(bin())
+        .args([
+            "serve",
+            "--model",
+            tcz.to_str().unwrap(),
+            "--method-agnostic",
+            "--addr",
+            "127.0.0.1:0",
+            "--max-conns",
+            "1",
+        ])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .stderr(Stdio::piped())
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn serve");
+    let stderr = child.stderr.take().expect("child stderr");
+    let mut lines = BufReader::new(stderr).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("serve exited before announcing address")
+            .expect("read stderr");
+        if let Some(pos) = line.find(" on ") {
+            if line.contains("serving") {
+                let rest = &line[pos + 4..];
+                break rest.split_whitespace().next().unwrap().to_string();
+            }
+        }
+    };
+
+    let stream = std::net::TcpStream::connect(&addr).expect("connect");
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    let mut out_stream = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    // valid query
+    out_stream.write_all(b"1,2,3\n").unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let got: f32 = reply.trim().parse().expect("numeric reply");
+    assert!(
+        (got - want).abs() <= 1e-5 * (1.0 + want.abs()),
+        "served {got} vs get {want}"
+    );
+    // malformed query
+    out_stream.write_all(b"1,2\n").unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    assert!(reply.starts_with("ERR"), "bad coords accepted: {reply}");
+    drop(out_stream);
+    drop(reader);
+
+    // with max-conns 1 the server drains and exits after the connection
+    let status = child.wait().expect("serve wait");
+    assert!(status.success(), "serve exited with {status:?}");
+}

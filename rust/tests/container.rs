@@ -1,0 +1,199 @@
+//! `.tcz` container tests: corrupted/truncated/wrong-version error paths,
+//! the v1→v2 backward-compatibility guarantee (over a checked-in golden
+//! file), and save→load→get round trips for several codecs through the
+//! `Artifact::write` path.
+
+use std::path::PathBuf;
+use tensorcodec::codec::{self, neural::NeuralArtifact, Artifact, Budget, CodecConfig};
+use tensorcodec::compress::{load_tcz, save_tcz, CompressedModel};
+use tensorcodec::config::ParamDtype;
+use tensorcodec::nttd::ModelParams;
+use tensorcodec::reorder::Orders;
+use tensorcodec::tensor::{DenseTensor, FoldSpec};
+use tensorcodec::util::Pcg64;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("tcz_container_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn toy_model(seed: u64) -> CompressedModel {
+    let spec = FoldSpec::auto(&[12, 9, 5], 0).unwrap();
+    let params = ModelParams::init_tc(seed, spec.dp, 32, 5, 5);
+    let mut rng = Pcg64::seeded(seed);
+    let orders = Orders::random(&spec.orig_shape, &mut rng);
+    CompressedModel {
+        spec,
+        orders,
+        params,
+        mean: 0.25,
+        std: 1.5,
+        fitness: 0.8,
+        param_dtype: ParamDtype::F32,
+        train_seconds: 1.0,
+        init_seconds: 0.1,
+        epochs_run: 3,
+    }
+}
+
+#[test]
+fn corrupted_magic_rejected() {
+    let t = DenseTensor::random_uniform(&[6, 5, 4], 0);
+    let codec = codec::by_name("ttd").unwrap();
+    let a = codec
+        .compress(&t, &Budget::Params(300), &CodecConfig::default())
+        .unwrap();
+    let p = tmp("magic.tcz");
+    codec::save_artifact(&p, a.as_ref()).unwrap();
+    let mut bytes = std::fs::read(&p).unwrap();
+    bytes[0] = b'X';
+    let p2 = tmp("magic_bad.tcz");
+    std::fs::write(&p2, &bytes).unwrap();
+    let err = codec::load_artifact(&p2).unwrap_err();
+    assert!(err.to_string().contains("not a .tcz"), "{err:#}");
+}
+
+#[test]
+fn truncated_header_rejected() {
+    let t = DenseTensor::random_uniform(&[6, 5, 4], 1);
+    let codec = codec::by_name("ttd").unwrap();
+    let a = codec
+        .compress(&t, &Budget::Params(300), &CodecConfig::default())
+        .unwrap();
+    let p = tmp("trunc.tcz");
+    codec::save_artifact(&p, a.as_ref()).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    for cut in [2usize, 9, 15] {
+        let p2 = tmp("trunc_bad.tcz");
+        std::fs::write(&p2, &bytes[..cut]).unwrap();
+        assert!(codec::load_artifact(&p2).is_err(), "cut at {cut} accepted");
+    }
+    // truncated payload (past the header) must fail too
+    let p3 = tmp("trunc_payload.tcz");
+    std::fs::write(&p3, &bytes[..bytes.len() - 7]).unwrap();
+    assert!(codec::load_artifact(&p3).is_err());
+}
+
+#[test]
+fn wrong_version_rejected() {
+    let t = DenseTensor::random_uniform(&[6, 5, 4], 2);
+    let codec = codec::by_name("ttd").unwrap();
+    let a = codec
+        .compress(&t, &Budget::Params(300), &CodecConfig::default())
+        .unwrap();
+    let p = tmp("ver.tcz");
+    codec::save_artifact(&p, a.as_ref()).unwrap();
+    let mut bytes = std::fs::read(&p).unwrap();
+    bytes[4] = 9; // version byte
+    let p2 = tmp("ver_bad.tcz");
+    std::fs::write(&p2, &bytes).unwrap();
+    let err = codec::load_artifact(&p2).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err:#}");
+}
+
+#[test]
+fn unknown_method_tag_rejected() {
+    let t = DenseTensor::random_uniform(&[6, 5, 4], 3);
+    let codec = codec::by_name("ttd").unwrap();
+    let a = codec
+        .compress(&t, &Budget::Params(300), &CodecConfig::default())
+        .unwrap();
+    let p = tmp("tag.tcz");
+    codec::save_artifact(&p, a.as_ref()).unwrap();
+    let mut bytes = std::fs::read(&p).unwrap();
+    bytes[5] = 250; // method tag
+    let p2 = tmp("tag_bad.tcz");
+    std::fs::write(&p2, &bytes).unwrap();
+    let err = codec::load_artifact(&p2).unwrap_err();
+    assert!(err.to_string().contains("tag"), "{err:#}");
+}
+
+/// A v1 `.tcz` written before the v2 container existed (checked-in golden
+/// file, see `data/make_golden_v1.py`) must keep loading — both through
+/// the legacy `load_tcz` and through the unified `load_artifact`.
+#[test]
+fn golden_v1_file_still_loads() {
+    let golden = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/golden_v1.tcz");
+    // legacy loader
+    let model = load_tcz(&golden).unwrap();
+    assert_eq!(model.spec.orig_shape, vec![6, 4]);
+    assert_eq!(model.spec.dp, 3);
+    assert_eq!((model.params.h, model.params.r), (4, 3));
+    assert_eq!(model.params.num_params(), 603);
+    assert_eq!(model.mean, 0.25);
+    assert_eq!(model.std, 1.5);
+    assert_eq!(model.fitness, 0.8);
+    // unified loader wraps it in a tensorcodec artifact
+    let mut artifact = codec::load_artifact(&golden).unwrap();
+    let meta = artifact.meta();
+    assert_eq!(meta.method, "tensorcodec");
+    assert_eq!(meta.shape, vec![6, 4]);
+    let decoded = artifact.decode_all();
+    assert_eq!(decoded.shape(), &[6, 4]);
+    for &v in decoded.data() {
+        assert!(v.is_finite());
+    }
+    // both paths decode identically
+    let mut dec = tensorcodec::compress::Decompressor::new(model);
+    for i in 0..6 {
+        for j in 0..4 {
+            assert_eq!(artifact.get(&[i, j]), dec.get(&[i, j]));
+        }
+    }
+}
+
+/// A v1 file written by today's `save_tcz` also loads through the unified
+/// path (same guarantee, exercised against the current writer).
+#[test]
+fn v1_save_loads_via_unified_path() {
+    let m = toy_model(5);
+    let p = tmp("v1.tcz");
+    save_tcz(&p, &m).unwrap();
+    let mut artifact = codec::load_artifact(&p).unwrap();
+    assert_eq!(artifact.meta().method, "tensorcodec");
+    let mut dec = tensorcodec::compress::Decompressor::new(m);
+    for idx in [[0usize, 0, 0], [11, 8, 4], [5, 3, 2]] {
+        assert_eq!(artifact.get(&idx), dec.get(&idx));
+    }
+}
+
+/// compress → save → load → get/decode_all for three codecs through the
+/// `Artifact::write` path, decoded output bit-identical.
+#[test]
+fn save_load_roundtrip_three_codecs() {
+    let t = DenseTensor::random_uniform(&[8, 6, 5], 4);
+    for (method, budget) in [
+        ("ttd", Budget::Params(500)),
+        ("sz", Budget::RelError(0.1)),
+        ("tkd", Budget::Params(400)),
+    ] {
+        let codec = codec::by_name(method).unwrap();
+        let mut a = codec.compress(&t, &budget, &CodecConfig::default()).unwrap();
+        let before = a.decode_all();
+        let p = tmp(&format!("rt_{method}.tcz"));
+        codec::save_artifact(&p, a.as_ref()).unwrap();
+        let mut b = codec::load_artifact(&p).unwrap();
+        assert_eq!(b.meta().method, method);
+        assert_eq!(b.size_bytes(), a.size_bytes());
+        let after = b.decode_all();
+        assert_eq!(before.data(), after.data(), "{method} not bit-identical");
+        // point decode agrees with bulk decode (factor-set entry products
+        // reassociate floats, so compare within a tight tolerance)
+        let idx = [3usize, 2, 1];
+        let (got, want) = (b.get(&idx), after.at(&idx));
+        assert!(
+            (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+            "{method} point decode: {got} vs {want}"
+        );
+    }
+    // and the tensorcodec artifact itself (model-backed, no training needed)
+    let m = toy_model(6);
+    let mut a = NeuralArtifact::from_model(m, "tensorcodec");
+    let before = a.decode_all();
+    let p = tmp("rt_tensorcodec.tcz");
+    codec::save_artifact(&p, &a).unwrap();
+    let mut b = codec::load_artifact(&p).unwrap();
+    assert_eq!(b.meta().method, "tensorcodec");
+    assert_eq!(before.data(), b.decode_all().data());
+}

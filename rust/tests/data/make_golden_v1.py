@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Regenerate golden_v1.tcz: a v1 (pre-method-tag) `.tcz` container.
+
+The file pins the legacy layout written by `compress::format::save_tcz`
+before the v2 framing existed, so `codec::container::load_artifact` must
+keep accepting it forever. Layout (little-endian):
+
+  magic "TCZ1" | u8 version=1 | u8 variant | u8 dtype | u8 d
+  u16 dp | u16 vocab | u16 h | u16 r
+  f32 mean | f32 std | f64 fitness
+  u64 shape[d]
+  u8 factors[d][dp]
+  u64 n_params | params (f32 each, artifact order, flattened)
+  per mode: packed identity permutation at ceil(log2 max(N_k,2)) bits
+"""
+
+import math
+import struct
+from pathlib import Path
+
+D = 2
+SHAPE = [6, 4]
+DP = 3
+FACTORS = [[2, 2, 2], [1, 2, 2]]  # padded: 8 >= 6, 4 >= 4
+VOCAB, H, R = 32, 4, 3
+MEAN, STD, FITNESS = 0.25, 1.5, 0.8
+
+# Parameter shapes mirror nttd::Variant::Tc::param_shapes(dp, vocab, h, r).
+PARAM_SHAPES = [
+    [DP, VOCAB, H],
+    [4 * H, H],
+    [4 * H, H],
+    [4 * H],
+    [R, H],
+    [R],
+    [R * R, H],
+    [R * R],
+    [R, H],
+    [R],
+]
+
+
+def n_params() -> int:
+    return sum(math.prod(s) for s in PARAM_SHAPES)
+
+
+def pack_permutation(perm: list, n: int) -> bytes:
+    bits = max(1, math.ceil(math.log2(max(n, 2))))
+    acc, nacc, out = 0, 0, bytearray()
+    for p in perm:
+        acc = (acc << bits) | p
+        nacc += bits
+        while nacc >= 8:
+            nacc -= 8
+            out.append((acc >> nacc) & 0xFF)
+    if nacc:
+        out.append((acc << (8 - nacc)) & 0xFF)
+    return bytes(out)
+
+
+def main() -> None:
+    buf = bytearray()
+    buf += b"TCZ1"
+    buf += struct.pack("<BBBB", 1, 0, 1, D)  # version, variant=tc, dtype=f32, d
+    buf += struct.pack("<HHHH", DP, VOCAB, H, R)
+    buf += struct.pack("<ffd", MEAN, STD, FITNESS)
+    for n in SHAPE:
+        buf += struct.pack("<Q", n)
+    for row in FACTORS:
+        buf += bytes(row)
+    total = n_params()
+    buf += struct.pack("<Q", total)
+    # deterministic params: a bounded sinusoid keeps decode finite
+    for i in range(total):
+        buf += struct.pack("<f", math.sin(i * 0.37) * 0.1)
+    for n in SHAPE:
+        buf += pack_permutation(list(range(n)), n)
+    out = Path(__file__).parent / "golden_v1.tcz"
+    out.write_bytes(bytes(buf))
+    print(f"wrote {out} ({len(buf)} bytes, {total} params)")
+
+
+if __name__ == "__main__":
+    main()
