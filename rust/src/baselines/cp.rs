@@ -68,6 +68,55 @@ impl CpFactors {
     }
 }
 
+/// Incremental CP entry evaluator with per-mode prefix products.
+///
+/// `part[k]` caches the elementwise product `Π_{m≤k} A_m[i_m, ·]` (length
+/// R), so a lexicographically sorted batch only recomputes the factors
+/// past the longest shared coordinate prefix. Arithmetic mirrors
+/// [`CpFactors::entry`] op-for-op, so values are bit-identical to it.
+pub struct CpChain<'a> {
+    cp: &'a CpFactors,
+    /// Row-major `[d, R]`: `part[k*R + c]` = product over modes `0..=k`.
+    part: Vec<f64>,
+    prev: Vec<usize>,
+}
+
+impl<'a> CpChain<'a> {
+    pub fn new(cp: &'a CpFactors) -> Self {
+        let d = cp.shape.len();
+        CpChain {
+            part: vec![0.0f64; d * cp.rank],
+            prev: vec![usize::MAX; d],
+            cp,
+        }
+    }
+
+    /// Evaluate one entry, reusing cached prefixes shared with the
+    /// previous call. Bit-identical to [`CpFactors::entry`].
+    pub fn entry(&mut self, idx: &[usize]) -> f64 {
+        let cp = self.cp;
+        let d = cp.shape.len();
+        let r = cp.rank;
+        debug_assert_eq!(idx.len(), d);
+        let mut l = 0;
+        while l < d && self.prev[l] == idx[l] {
+            l += 1;
+        }
+        for k in l..d {
+            for c in 0..r {
+                let prev = if k == 0 { 1.0f64 } else { self.part[(k - 1) * r + c] };
+                self.part[k * r + c] = prev * cp.factors[k].at(idx[k], c);
+            }
+            self.prev[k] = idx[k];
+        }
+        let mut acc = 0.0f64;
+        for c in 0..r {
+            acc += self.part[(d - 1) * r + c];
+        }
+        acc
+    }
+}
+
 /// CP-ALS for `iters` sweeps at rank `r`.
 pub fn cp_als(t: &DenseTensor, r: usize, iters: usize, seed: u64) -> CpFactors {
     let shape = t.shape().to_vec();
@@ -145,6 +194,29 @@ mod tests {
         let t = DenseTensor::random_uniform(&[4, 5, 6], 0);
         let cp = cp_als(&t, 3, 2, 0);
         assert_eq!(cp.num_params(), (4 + 5 + 6) * 3);
+    }
+
+    #[test]
+    fn chain_bit_exact_with_entry() {
+        let t = DenseTensor::random_uniform(&[6, 5, 4], 4);
+        let cp = cp_als(&t, 3, 3, 0);
+        let mut rng = Pcg64::seeded(5);
+        let mut batch: Vec<Vec<usize>> = (0..300)
+            .map(|_| vec![rng.below(6), rng.below(5), rng.below(4)])
+            .collect();
+        for sort in [false, true] {
+            if sort {
+                batch.sort();
+            }
+            let mut chain = CpChain::new(&cp);
+            for idx in &batch {
+                assert_eq!(
+                    chain.entry(idx).to_bits(),
+                    cp.entry(idx).to_bits(),
+                    "idx {idx:?} (sorted={sort})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -105,6 +105,69 @@ impl TrCores {
     }
 }
 
+/// Incremental tensor-ring entry evaluator with per-mode prefix products.
+///
+/// `prefix[k]` caches the r×r matrix product `G_1(i_1)···G_{k+1}(i_{k+1})`,
+/// so a lexicographically sorted batch only recomputes the slices past the
+/// longest shared coordinate prefix. Arithmetic mirrors
+/// [`TrCores::entry`] op-for-op, so values are bit-identical to it.
+pub struct TrChain<'a> {
+    tr: &'a TrCores,
+    /// Row-major `[d, r*r]`.
+    prefix: Vec<f64>,
+    prev: Vec<usize>,
+}
+
+impl<'a> TrChain<'a> {
+    pub fn new(tr: &'a TrCores) -> Self {
+        let d = tr.shape.len();
+        TrChain {
+            prefix: vec![0.0f64; d * tr.rank * tr.rank],
+            prev: vec![usize::MAX; d],
+            tr,
+        }
+    }
+
+    /// Evaluate one entry, reusing cached prefixes shared with the
+    /// previous call. Bit-identical to [`TrCores::entry`].
+    pub fn entry(&mut self, idx: &[usize]) -> f64 {
+        let tr = self.tr;
+        let d = tr.shape.len();
+        let r = tr.rank;
+        let rr = r * r;
+        debug_assert_eq!(idx.len(), d);
+        let mut l = 0;
+        while l < d && self.prev[l] == idx[l] {
+            l += 1;
+        }
+        for k in l..d {
+            if k == 0 {
+                self.prefix[..rr].copy_from_slice(tr.slice(0, idx[0]));
+            } else {
+                let g = tr.slice(k, idx[k]);
+                let (head, tail) = self.prefix.split_at_mut(k * rr);
+                let m = &head[(k - 1) * rr..k * rr];
+                let out = &mut tail[..rr];
+                out.fill(0.0);
+                for a in 0..r {
+                    for c in 0..r {
+                        let v = m[a * r + c];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        for b in 0..r {
+                            out[a * r + b] += v * g[c * r + b];
+                        }
+                    }
+                }
+            }
+            self.prev[k] = idx[k];
+        }
+        let last = &self.prefix[(d - 1) * rr..d * rr];
+        (0..r).map(|a| last[a * r + a]).sum()
+    }
+}
+
 /// TR-ALS: `iters` sweeps at ring rank `r`.
 pub fn tr_als(t: &DenseTensor, r: usize, iters: usize, seed: u64) -> TrCores {
     let shape = t.shape().to_vec();
@@ -216,6 +279,29 @@ mod tests {
         let t = DenseTensor::random_uniform(&[4, 5, 3], 0);
         let tr = tr_als(&t, 2, 1, 0);
         assert_eq!(tr.num_params(), (4 + 5 + 3) * 4);
+    }
+
+    #[test]
+    fn chain_bit_exact_with_entry() {
+        let t = tr_random(&[5, 4, 6], 2, 3);
+        let tr = tr_als(&t, 2, 2, 0);
+        let mut rng = Pcg64::seeded(7);
+        let mut batch: Vec<Vec<usize>> = (0..300)
+            .map(|_| vec![rng.below(5), rng.below(4), rng.below(6)])
+            .collect();
+        for sort in [false, true] {
+            if sort {
+                batch.sort();
+            }
+            let mut chain = TrChain::new(&tr);
+            for idx in &batch {
+                assert_eq!(
+                    chain.entry(idx).to_bits(),
+                    tr.entry(idx).to_bits(),
+                    "idx {idx:?} (sorted={sort})"
+                );
+            }
+        }
     }
 
     #[test]

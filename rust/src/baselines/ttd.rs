@@ -67,6 +67,69 @@ impl TtCores {
     }
 }
 
+/// Incremental TT entry evaluator with per-mode prefix row vectors.
+///
+/// `prefix[k]` caches the chain row vector after contracting modes
+/// `0..=k`, so a lexicographically sorted batch only recomputes the cores
+/// past the longest shared prefix — an O(d R²) entry drops to O((d−L) R²)
+/// when `L` leading coordinates repeat. Arithmetic mirrors
+/// [`TtCores::entry`] op-for-op, so values are bit-identical to it.
+pub struct TtChain<'a> {
+    tt: &'a TtCores,
+    prefix: Vec<Vec<f64>>,
+    prev: Vec<usize>,
+}
+
+impl<'a> TtChain<'a> {
+    pub fn new(tt: &'a TtCores) -> Self {
+        let d = tt.shape.len();
+        TtChain {
+            prefix: (0..d).map(|k| vec![0.0f64; tt.ranks[k + 1]]).collect(),
+            prev: vec![usize::MAX; d],
+            tt,
+        }
+    }
+
+    /// Evaluate one entry, reusing cached prefixes shared with the
+    /// previous call. Bit-identical to [`TtCores::entry`].
+    pub fn entry(&mut self, idx: &[usize]) -> f64 {
+        let tt = self.tt;
+        let d = tt.shape.len();
+        debug_assert_eq!(idx.len(), d);
+        let mut l = 0;
+        while l < d && self.prev[l] == idx[l] {
+            l += 1;
+        }
+        for k in l..d {
+            if k == 0 {
+                let r1 = tt.ranks[1];
+                self.prefix[0].copy_from_slice(&tt.cores[0][idx[0] * r1..(idx[0] + 1) * r1]);
+            } else {
+                let rk_1 = tt.ranks[k];
+                let rk = tt.ranks[k + 1];
+                let nk = tt.shape[k];
+                let core = &tt.cores[k];
+                let (head, tail) = self.prefix.split_at_mut(k);
+                let v = &head[k - 1];
+                let nv = &mut tail[0];
+                nv.fill(0.0);
+                for a in 0..rk_1 {
+                    let va = v[a];
+                    if va == 0.0 {
+                        continue;
+                    }
+                    let base = (a * nk + idx[k]) * rk;
+                    for (b, nvb) in nv.iter_mut().enumerate() {
+                        *nvb += va * core[base + b];
+                    }
+                }
+            }
+            self.prev[k] = idx[k];
+        }
+        self.prefix[d - 1][0]
+    }
+}
+
 /// TT-SVD with a uniform cap `max_rank` on all TT ranks.
 pub fn tt_svd(t: &DenseTensor, max_rank: usize, seed: u64) -> TtCores {
     let shape = t.shape().to_vec();
@@ -202,6 +265,29 @@ mod tests {
             let want = rec.at(&idx) as f64;
             let got = tt.entry(&idx);
             assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn chain_bit_exact_with_entry() {
+        let t = DenseTensor::random_uniform(&[6, 5, 4], 7);
+        let tt = tt_svd(&t, 3, 0);
+        let mut rng = crate::util::Pcg64::seeded(2);
+        let mut batch: Vec<Vec<usize>> = (0..400)
+            .map(|_| vec![rng.below(6), rng.below(5), rng.below(4)])
+            .collect();
+        for sort in [false, true] {
+            if sort {
+                batch.sort();
+            }
+            let mut chain = TtChain::new(&tt);
+            for idx in &batch {
+                assert_eq!(
+                    chain.entry(idx).to_bits(),
+                    tt.entry(idx).to_bits(),
+                    "idx {idx:?} (sorted={sort})"
+                );
+            }
         }
     }
 

@@ -57,6 +57,74 @@ impl TuckerModel {
     }
 }
 
+/// Incremental Tucker entry evaluator with per-mode partial products.
+///
+/// `part[k]` caches, for every core element, the running product
+/// `G[j] · Π_{m≤k} U_m[i_m, j_m]`, so a lexicographically sorted batch
+/// only recomputes the factor rows past the longest shared coordinate
+/// prefix (the core is small by construction, so each level is one
+/// core-sized sweep). Arithmetic mirrors [`TuckerModel::entry`]
+/// op-for-op, so values are bit-identical to it.
+pub struct TuckerChain<'a> {
+    m: &'a TuckerModel,
+    /// Row-major `[d, core_len]`.
+    part: Vec<f64>,
+    /// `digits[k][lin]` = mode-k core index of core element `lin`.
+    digits: Vec<Vec<usize>>,
+    prev: Vec<usize>,
+}
+
+impl<'a> TuckerChain<'a> {
+    pub fn new(m: &'a TuckerModel) -> Self {
+        let d = m.shape.len();
+        let len = m.core.len();
+        let mut digits = vec![vec![0usize; len]; d];
+        for lin in 0..len {
+            let mut rem = lin;
+            for k in (0..d).rev() {
+                digits[k][lin] = rem % m.ranks[k];
+                rem /= m.ranks[k];
+            }
+        }
+        TuckerChain {
+            part: vec![0.0f64; d * len],
+            digits,
+            prev: vec![usize::MAX; d],
+            m,
+        }
+    }
+
+    /// Evaluate one entry, reusing cached partial products shared with the
+    /// previous call. Bit-identical to [`TuckerModel::entry`].
+    pub fn entry(&mut self, idx: &[usize]) -> f64 {
+        let m = self.m;
+        let d = m.shape.len();
+        let len = m.core.len();
+        debug_assert_eq!(idx.len(), d);
+        let mut l = 0;
+        while l < d && self.prev[l] == idx[l] {
+            l += 1;
+        }
+        for k in l..d {
+            let digits = &self.digits[k];
+            for lin in 0..len {
+                let prev = if k == 0 {
+                    m.core.data()[lin] as f64
+                } else {
+                    self.part[(k - 1) * len + lin]
+                };
+                self.part[k * len + lin] = prev * m.factors[k].at(idx[k], digits[lin]);
+            }
+            self.prev[k] = idx[k];
+        }
+        let mut acc = 0.0f64;
+        for lin in 0..len {
+            acc += self.part[(d - 1) * len + lin];
+        }
+        acc
+    }
+}
+
 /// Mode-k product: `transpose=false` computes `T ×_k U` (U is `[N_k, r_k]`,
 /// replaces mode length r_k by N_k); `transpose=true` applies `Uᵀ`.
 pub fn mode_product(t: &DenseTensor, u: &Mat, k: usize, transpose: bool) -> DenseTensor {
@@ -203,6 +271,29 @@ mod tests {
             let want = rec.at(&idx) as f64;
             let got = model.entry(&idx);
             assert!((got - want).abs() < 1e-4 * (1.0 + want.abs()), "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn chain_bit_exact_with_entry() {
+        let t = DenseTensor::random_uniform(&[6, 5, 4], 6);
+        let model = hooi_uniform(&t, 3, 1, 0);
+        let mut rng = Pcg64::seeded(6);
+        let mut batch: Vec<Vec<usize>> = (0..300)
+            .map(|_| vec![rng.below(6), rng.below(5), rng.below(4)])
+            .collect();
+        for sort in [false, true] {
+            if sort {
+                batch.sort();
+            }
+            let mut chain = TuckerChain::new(&model);
+            for idx in &batch {
+                assert_eq!(
+                    chain.entry(idx).to_bits(),
+                    model.entry(idx).to_bits(),
+                    "idx {idx:?} (sorted={sort})"
+                );
+            }
         }
     }
 

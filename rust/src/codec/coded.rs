@@ -51,6 +51,18 @@ impl Artifact for TthreshArtifact {
         self.decoded().at(idx)
     }
 
+    fn resident_bytes(&self) -> usize {
+        // point decode caches the full dense tensor — charge it, or a
+        // serving cache budget counts a few KB while holding a tensor
+        let dense = self
+            .coded
+            .shape
+            .iter()
+            .product::<usize>()
+            .saturating_mul(4);
+        self.size_bytes().max(dense)
+    }
+
     fn decode_all(&mut self) -> DenseTensor {
         // hand the cache over instead of cloning — callers typically cache
         // the result themselves, and keeping two dense copies alive doubles
@@ -221,6 +233,17 @@ impl SzArtifact {
 impl Artifact for SzArtifact {
     fn get(&mut self, idx: &[usize]) -> f32 {
         self.decoded().at(idx)
+    }
+
+    fn resident_bytes(&self) -> usize {
+        // point decode caches the full dense tensor (see TthreshArtifact)
+        let dense = self
+            .stream
+            .shape
+            .iter()
+            .product::<usize>()
+            .saturating_mul(4);
+        self.size_bytes().max(dense)
     }
 
     fn decode_all(&mut self) -> DenseTensor {

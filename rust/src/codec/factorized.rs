@@ -6,12 +6,13 @@ use super::container::{
     checked_len, put_f32, put_f64, put_u64, read_shape, shape_header, Cursor,
 };
 use super::{
-    largest_within, rel_error_search, Artifact, ArtifactMeta, Budget, Codec, CodecConfig,
+    decode_sorted_scatter, largest_within, rel_error_search, Artifact, ArtifactMeta, Budget,
+    Codec, CodecConfig,
 };
-use crate::baselines::cp::{cp_als, CpFactors};
-use crate::baselines::tring::{tr_als, TrCores};
-use crate::baselines::ttd::{tt_param_count, tt_svd, TtCores};
-use crate::baselines::tucker::{hooi_uniform, TuckerModel};
+use crate::baselines::cp::{cp_als, CpChain, CpFactors};
+use crate::baselines::tring::{tr_als, TrChain, TrCores};
+use crate::baselines::ttd::{tt_param_count, tt_svd, TtChain, TtCores};
+use crate::baselines::tucker::{hooi_uniform, TuckerChain, TuckerModel};
 use crate::linalg::Mat;
 use crate::metrics::Timer;
 use crate::tensor::DenseTensor;
@@ -26,11 +27,32 @@ use std::io::Write;
 pub struct TtArtifact {
     pub tt: TtCores,
     pub seconds: f64,
+    bulk_calls: u64,
+}
+
+impl TtArtifact {
+    pub fn new(tt: TtCores, seconds: f64) -> Self {
+        TtArtifact {
+            tt,
+            seconds,
+            bulk_calls: 0,
+        }
+    }
 }
 
 impl Artifact for TtArtifact {
     fn get(&mut self, idx: &[usize]) -> f32 {
         self.tt.entry(idx) as f32
+    }
+
+    fn decode_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
+        self.bulk_calls += 1;
+        let mut chain = TtChain::new(&self.tt);
+        decode_sorted_scatter(coords, out, |idx| chain.entry(idx) as f32);
+    }
+
+    fn decode_many_calls(&self) -> u64 {
+        self.bulk_calls
     }
 
     fn decode_all(&mut self) -> DenseTensor {
@@ -98,10 +120,7 @@ impl Codec for TtdCodec {
         let build = |rank: usize| -> Result<Box<dyn Artifact>> {
             let timer = Timer::start();
             let tt = tt_svd(t, rank, seed);
-            Ok(Box::new(TtArtifact {
-                tt,
-                seconds: timer.seconds(),
-            }))
+            Ok(Box::new(TtArtifact::new(tt, timer.seconds())))
         };
         match budget.target_params() {
             Some(p) => build(largest_within(p, 512, |r| tt_param_count(t.shape(), r))),
@@ -128,14 +147,14 @@ impl Codec for TtdCodec {
             }
             cores.push(c.f64_vec(n)?);
         }
-        Ok(Box::new(TtArtifact {
-            tt: TtCores {
+        Ok(Box::new(TtArtifact::new(
+            TtCores {
                 shape,
                 ranks,
                 cores,
             },
-            seconds: 0.0,
-        }))
+            0.0,
+        )))
     }
 }
 
@@ -147,11 +166,32 @@ impl Codec for TtdCodec {
 pub struct CpArtifact {
     pub cp: CpFactors,
     pub seconds: f64,
+    bulk_calls: u64,
+}
+
+impl CpArtifact {
+    pub fn new(cp: CpFactors, seconds: f64) -> Self {
+        CpArtifact {
+            cp,
+            seconds,
+            bulk_calls: 0,
+        }
+    }
 }
 
 impl Artifact for CpArtifact {
     fn get(&mut self, idx: &[usize]) -> f32 {
         self.cp.entry(idx) as f32
+    }
+
+    fn decode_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
+        self.bulk_calls += 1;
+        let mut chain = CpChain::new(&self.cp);
+        decode_sorted_scatter(coords, out, |idx| chain.entry(idx) as f32);
+    }
+
+    fn decode_many_calls(&self) -> u64 {
+        self.bulk_calls
     }
 
     fn decode_all(&mut self) -> DenseTensor {
@@ -217,10 +257,7 @@ impl Codec for CpdCodec {
         let build = |rank: usize| -> Result<Box<dyn Artifact>> {
             let timer = Timer::start();
             let cp = cp_als(t, rank, iters, seed);
-            Ok(Box::new(CpArtifact {
-                cp,
-                seconds: timer.seconds(),
-            }))
+            Ok(Box::new(CpArtifact::new(cp, timer.seconds())))
         };
         match budget.target_params() {
             Some(p) => build(crate::baselines::cp::rank_for_budget(t.shape(), p)),
@@ -244,14 +281,14 @@ impl Codec for CpdCodec {
                 Ok(Mat::from_rows(n, rank, c.f64_vec(checked_len(&[n, rank])?)?))
             })
             .collect::<Result<_>>()?;
-        Ok(Box::new(CpArtifact {
-            cp: CpFactors {
+        Ok(Box::new(CpArtifact::new(
+            CpFactors {
                 shape,
                 rank,
                 factors,
             },
-            seconds: 0.0,
-        }))
+            0.0,
+        )))
     }
 }
 
@@ -263,11 +300,32 @@ impl Codec for CpdCodec {
 pub struct TuckerArtifact {
     pub model: TuckerModel,
     pub seconds: f64,
+    bulk_calls: u64,
+}
+
+impl TuckerArtifact {
+    pub fn new(model: TuckerModel, seconds: f64) -> Self {
+        TuckerArtifact {
+            model,
+            seconds,
+            bulk_calls: 0,
+        }
+    }
 }
 
 impl Artifact for TuckerArtifact {
     fn get(&mut self, idx: &[usize]) -> f32 {
         self.model.entry(idx) as f32
+    }
+
+    fn decode_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
+        self.bulk_calls += 1;
+        let mut chain = TuckerChain::new(&self.model);
+        decode_sorted_scatter(coords, out, |idx| chain.entry(idx) as f32);
+    }
+
+    fn decode_many_calls(&self) -> u64 {
+        self.bulk_calls
     }
 
     fn decode_all(&mut self) -> DenseTensor {
@@ -338,10 +396,7 @@ impl Codec for TuckerCodec {
         let build = |rank: usize| -> Result<Box<dyn Artifact>> {
             let timer = Timer::start();
             let model = hooi_uniform(t, rank, iters, seed);
-            Ok(Box::new(TuckerArtifact {
-                model,
-                seconds: timer.seconds(),
-            }))
+            Ok(Box::new(TuckerArtifact::new(model, timer.seconds())))
         };
         match budget.target_params() {
             Some(p) => build(crate::baselines::tucker::rank_for_budget(t.shape(), p)),
@@ -369,15 +424,15 @@ impl Codec for TuckerCodec {
                 Ok(Mat::from_rows(n, r, c.f64_vec(checked_len(&[n, r])?)?))
             })
             .collect::<Result<_>>()?;
-        Ok(Box::new(TuckerArtifact {
-            model: TuckerModel {
+        Ok(Box::new(TuckerArtifact::new(
+            TuckerModel {
                 shape,
                 ranks,
                 core,
                 factors,
             },
-            seconds: 0.0,
-        }))
+            0.0,
+        )))
     }
 }
 
@@ -389,11 +444,32 @@ impl Codec for TuckerCodec {
 pub struct TrArtifact {
     pub tr: TrCores,
     pub seconds: f64,
+    bulk_calls: u64,
+}
+
+impl TrArtifact {
+    pub fn new(tr: TrCores, seconds: f64) -> Self {
+        TrArtifact {
+            tr,
+            seconds,
+            bulk_calls: 0,
+        }
+    }
 }
 
 impl Artifact for TrArtifact {
     fn get(&mut self, idx: &[usize]) -> f32 {
         self.tr.entry(idx) as f32
+    }
+
+    fn decode_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
+        self.bulk_calls += 1;
+        let mut chain = TrChain::new(&self.tr);
+        decode_sorted_scatter(coords, out, |idx| chain.entry(idx) as f32);
+    }
+
+    fn decode_many_calls(&self) -> u64 {
+        self.bulk_calls
     }
 
     fn decode_all(&mut self) -> DenseTensor {
@@ -459,10 +535,7 @@ impl Codec for TringCodec {
         let build = |rank: usize| -> Result<Box<dyn Artifact>> {
             let timer = Timer::start();
             let tr = tr_als(t, rank, iters, seed);
-            Ok(Box::new(TrArtifact {
-                tr,
-                seconds: timer.seconds(),
-            }))
+            Ok(Box::new(TrArtifact::new(tr, timer.seconds())))
         };
         match budget.target_params() {
             Some(p) => build(crate::baselines::tring::rank_for_budget(t.shape(), p)),
@@ -484,10 +557,10 @@ impl Codec for TringCodec {
             .iter()
             .map(|&n| -> Result<Vec<f64>> { c.f64_vec(checked_len(&[n, rank, rank])?) })
             .collect::<Result<_>>()?;
-        Ok(Box::new(TrArtifact {
-            tr: TrCores { shape, rank, cores },
-            seconds: 0.0,
-        }))
+        Ok(Box::new(TrArtifact::new(
+            TrCores { shape, rank, cores },
+            0.0,
+        )))
     }
 }
 
@@ -547,6 +620,36 @@ mod tests {
     fn trd_roundtrip() {
         let t = DenseTensor::random_uniform(&[6, 5, 4], 3);
         roundtrip("trd", &t, Budget::Params(240));
+    }
+
+    #[test]
+    fn decode_many_bit_exact_with_get_and_counts() {
+        let t = DenseTensor::random_uniform(&[6, 5, 4], 9);
+        for (method, budget) in [
+            ("ttd", Budget::Params(400)),
+            ("cpd", Budget::Params(120)),
+            ("tkd", Budget::Params(200)),
+            ("trd", Budget::Params(240)),
+        ] {
+            let codec = by_name(method).unwrap();
+            let mut a = codec.compress(&t, &budget, &CodecConfig::default()).unwrap();
+            assert_eq!(a.decode_many_calls(), 0, "{method}");
+            let mut rng = crate::util::Pcg64::seeded(13);
+            let coords: Vec<Vec<usize>> = (0..500)
+                .map(|_| vec![rng.below(6), rng.below(5), rng.below(4)])
+                .collect();
+            let mut bulk = Vec::new();
+            a.decode_many(&coords, &mut bulk);
+            assert_eq!(bulk.len(), coords.len());
+            assert_eq!(a.decode_many_calls(), 1, "{method}: bulk path not taken");
+            for (c, &v) in coords.iter().zip(&bulk) {
+                assert_eq!(
+                    v.to_bits(),
+                    a.get(c).to_bits(),
+                    "{method} at {c:?}: bulk decode differs from get"
+                );
+            }
+        }
     }
 
     #[test]

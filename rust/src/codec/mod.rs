@@ -6,8 +6,10 @@
 //!   config) -> Box<dyn Artifact>` plus the deserialiser for its artifact
 //!   payload. All codecs are unit structs registered in a static
 //!   [`registry`]; `by_name("ttd")` / `by_tag(2)` look them up.
-//! * [`Artifact`] — a compressed tensor: point decode (`get`), bulk decode
-//!   (`decode_all`), paper-accounting `size_bytes`, [`ArtifactMeta`], and
+//! * [`Artifact`] — a compressed tensor: point decode (`get`), batched
+//!   decode (`decode_many`, overridden with prefix-reuse core chains by
+//!   the structured artifacts), full decode (`decode_all`),
+//!   paper-accounting `size_bytes`, [`ArtifactMeta`], and
 //!   `write` into the method-tagged `.tcz` v2 container
 //!   ([`container::save_artifact`] / [`container::load_artifact`]; v1
 //!   TensorCodec files still load).
@@ -121,6 +123,36 @@ pub struct ArtifactMeta {
 pub trait Artifact: Send {
     /// Decode one entry at original coordinates.
     fn get(&mut self, idx: &[usize]) -> f32;
+    /// Decode a batch of entries, appending one value per coordinate
+    /// vector to `out` in request order. Coordinates must be in range and
+    /// of the tensor's order (callers such as the serving shards validate
+    /// first).
+    ///
+    /// The default loops [`Artifact::get`]. Structured artifacts
+    /// (TT/CP/Tucker/TR factor sets, the neural codecs) override it with a
+    /// prefix-reuse chain evaluator: the batch is decoded in
+    /// lexicographic order so shared coordinate prefixes amortise the
+    /// per-mode core products, then scattered back to request order.
+    /// Overrides must stay bit-identical to `get` — the serving layer
+    /// mixes both paths freely.
+    fn decode_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
+        out.reserve(coords.len());
+        for c in coords {
+            out.push(self.get(c));
+        }
+    }
+    /// How many times the overridden bulk path has run (test hook).
+    /// Artifacts that inherit the default `decode_many` report 0.
+    fn decode_many_calls(&self) -> u64 {
+        0
+    }
+    /// Approximate bytes this artifact holds resident while serving
+    /// queries — what a cache byte budget should charge. Defaults to the
+    /// compressed size; artifacts that materialise a dense decode on
+    /// first `get` (TTHRESH, SZ) report that instead.
+    fn resident_bytes(&self) -> usize {
+        self.size_bytes()
+    }
     /// Decode every entry into a dense tensor.
     fn decode_all(&mut self) -> DenseTensor;
     /// Compressed size in bytes under the paper's accounting.
@@ -175,6 +207,24 @@ static REGISTRY: [&dyn Codec; 8] = [
 /// The static codec registry.
 pub fn registry() -> &'static [&'static dyn Codec] {
     &REGISTRY
+}
+
+/// Decode `coords` through `eval` in lexicographic order, scattering the
+/// results back into request order — the shared skeleton of every
+/// [`Artifact::decode_many`] override (prefix-reuse chains are fastest on
+/// a sorted batch; correctness does not depend on the input order).
+pub(crate) fn decode_sorted_scatter(
+    coords: &[Vec<usize>],
+    out: &mut Vec<f32>,
+    mut eval: impl FnMut(&[usize]) -> f32,
+) {
+    let mut order: Vec<usize> = (0..coords.len()).collect();
+    order.sort_unstable_by(|&a, &b| coords[a].cmp(&coords[b]));
+    let base = out.len();
+    out.resize(base + coords.len(), 0.0);
+    for &i in &order {
+        out[base + i] = eval(&coords[i]);
+    }
 }
 
 /// Look a codec up by canonical name or alias (case-insensitive).

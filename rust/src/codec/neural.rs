@@ -33,6 +33,7 @@ pub struct NeuralArtifact {
     dec: Decompressor,
     method: &'static str,
     seconds: f64,
+    bulk_calls: u64,
 }
 
 impl NeuralArtifact {
@@ -42,6 +43,7 @@ impl NeuralArtifact {
             dec: Decompressor::new(model),
             method,
             seconds,
+            bulk_calls: 0,
         }
     }
 
@@ -53,6 +55,15 @@ impl NeuralArtifact {
 impl Artifact for NeuralArtifact {
     fn get(&mut self, idx: &[usize]) -> f32 {
         self.dec.get(idx)
+    }
+
+    fn decode_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
+        self.bulk_calls += 1;
+        self.dec.get_many(coords, out);
+    }
+
+    fn decode_many_calls(&self) -> u64 {
+        self.bulk_calls
     }
 
     fn decode_all(&mut self) -> DenseTensor {
@@ -226,6 +237,22 @@ mod tests {
         // point decode agrees with bulk decode
         for idx in [[0usize, 0, 0], [11, 8, 4], [5, 3, 2]] {
             assert_eq!(b.get(&idx), after.at(&idx));
+        }
+    }
+
+    #[test]
+    fn neural_decode_many_bit_exact_with_get() {
+        let model = toy_model(14);
+        let mut a = NeuralArtifact::from_model(model, "tensorcodec");
+        let mut rng = crate::util::Pcg64::seeded(15);
+        let coords: Vec<Vec<usize>> = (0..300)
+            .map(|_| vec![rng.below(12), rng.below(9), rng.below(5)])
+            .collect();
+        let mut bulk = Vec::new();
+        a.decode_many(&coords, &mut bulk);
+        assert_eq!(a.decode_many_calls(), 1);
+        for (c, &v) in coords.iter().zip(&bulk) {
+            assert_eq!(v.to_bits(), a.get(c).to_bits(), "{c:?}");
         }
     }
 

@@ -63,15 +63,17 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
         if frac == 0 {
             sign
         } else {
-            // subnormal: normalise
-            let mut e = -1i32;
+            // subnormal: frac × 2⁻²⁴; after `s` shifts the leading bit
+            // sits at 2^10, so the value is 1.f × 2^(−14−s) and the f32
+            // exponent field is 127 − 14 − s = 113 − s.
+            let mut shifts = 0u32;
             let mut f = frac;
             while f & 0x400 == 0 {
                 f <<= 1;
-                e -= 1;
+                shifts += 1;
             }
             f &= 0x3ff;
-            sign | (((127 - 15 + e + 1) as u32) << 23) | (f << 13)
+            sign | ((113 - shifts) << 23) | (f << 13)
         }
     } else if exp == 0x1f {
         sign | 0x7f80_0000 | (frac << 13)
@@ -135,5 +137,19 @@ mod tests {
         let tiny = 6e-8f32;
         let r = f16_bits_to_f32(f32_to_f16_bits(tiny));
         assert!((r - tiny).abs() < 6e-8);
+    }
+
+    #[test]
+    fn f16_subnormal_decode_exact() {
+        // regression: subnormal decode was off by one exponent (half the
+        // true value). Pin the exact values: 0x0001 = 2^-24 (smallest
+        // subnormal), 0x0200 = 2^-15, 0x03ff = 1023 * 2^-24 (largest).
+        assert_eq!(f16_bits_to_f32(0x0001), 2f32.powi(-24));
+        assert_eq!(f16_bits_to_f32(0x0200), 2f32.powi(-15));
+        assert_eq!(f16_bits_to_f32(0x03ff), 1023.0 * 2f32.powi(-24));
+        // and encode is its exact inverse across the subnormal range
+        for h in 1u16..0x0400 {
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(h)), h, "{h:#06x}");
+        }
     }
 }

@@ -100,6 +100,41 @@ impl Decompressor {
         self.model.mean + self.model.std * y
     }
 
+    /// Decode a batch of entries at original coordinates, appending one
+    /// value per coordinate vector to `out` in request order.
+    ///
+    /// The batch is folded to digit strings, decoded in lexicographic
+    /// digit order through [`crate::nttd::infer::PrefixDecoder`] (LSTM and
+    /// TT-chain state of the longest shared prefix is reused), and
+    /// scattered back — bit-identical to calling [`Decompressor::get`]
+    /// per entry.
+    pub fn get_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
+        let dp = self.model.spec.dp;
+        let d = self.model.spec.d();
+        let n = coords.len();
+        let mut digits = vec![0i32; n * dp];
+        for (row, c) in coords.iter().enumerate() {
+            debug_assert_eq!(c.len(), d);
+            for (k, &i) in c.iter().enumerate() {
+                self.reordered[k] = self.inverses[k][i];
+            }
+            self.model
+                .spec
+                .fold_index_i32(&self.reordered, &mut digits[row * dp..(row + 1) * dp]);
+        }
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_unstable_by(|&a, &b| {
+            digits[a * dp..(a + 1) * dp].cmp(&digits[b * dp..(b + 1) * dp])
+        });
+        let base = out.len();
+        out.resize(base + n, 0.0);
+        let mut dec = crate::nttd::infer::PrefixDecoder::new(&self.model.params);
+        for &row in &order {
+            let y = dec.decode(&digits[row * dp..(row + 1) * dp]);
+            out[base + row] = self.model.mean + self.model.std * y;
+        }
+    }
+
     /// Decode every entry into a dense tensor (small-tensor convenience).
     pub fn reconstruct_all(&mut self) -> DenseTensor {
         let shape = self.model.spec.orig_shape.clone();
@@ -191,6 +226,22 @@ mod tests {
         let mut d2 = Decompressor::new(m);
         for idx in [[0usize, 0, 0], [11, 8, 4], [5, 3, 2]] {
             assert_eq!(d1.get(&idx), d2.get(&idx));
+        }
+    }
+
+    #[test]
+    fn get_many_bit_exact_with_get() {
+        let m = toy_model(3);
+        let mut d = Decompressor::new(m);
+        let mut rng = crate::util::Pcg64::seeded(4);
+        let coords: Vec<Vec<usize>> = (0..400)
+            .map(|_| vec![rng.below(12), rng.below(9), rng.below(5)])
+            .collect();
+        let mut bulk = Vec::new();
+        d.get_many(&coords, &mut bulk);
+        assert_eq!(bulk.len(), coords.len());
+        for (c, &v) in coords.iter().zip(&bulk) {
+            assert_eq!(v.to_bits(), d.get(c).to_bits(), "{c:?}");
         }
     }
 

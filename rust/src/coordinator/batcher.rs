@@ -7,6 +7,7 @@
 //! entry decoding. Backpressure is a bounded queue: producers block when
 //! the service is saturated.
 
+use anyhow::{Context, Result};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
 
@@ -14,6 +15,41 @@ use std::time::{Duration, Instant};
 pub struct DecodeRequest {
     pub coords: Vec<usize>,
     pub reply: SyncSender<f32>,
+}
+
+/// Client half of the request/reply handshake: enqueue one request, await
+/// its reply. Shared by every front-end over a decode queue
+/// (`DecodeHandle`, the store shards).
+pub fn request_one(tx: &SyncSender<DecodeRequest>, coords: &[usize]) -> Result<f32> {
+    let (rtx, rrx) = sync_channel(1);
+    tx.send(DecodeRequest {
+        coords: coords.to_vec(),
+        reply: rtx,
+    })
+    .ok()
+    .context("decode service stopped")?;
+    rrx.recv().context("decode service dropped reply")
+}
+
+/// Enqueue a whole block before awaiting the first reply (so the batcher
+/// coalesces it into as few flushes as possible); replies come back in
+/// request order. Callers validate coordinates first.
+pub fn request_many(tx: &SyncSender<DecodeRequest>, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
+    let mut replies = Vec::with_capacity(coords.len());
+    for c in coords {
+        let (rtx, rrx) = sync_channel(1);
+        tx.send(DecodeRequest {
+            coords: c.clone(),
+            reply: rtx,
+        })
+        .ok()
+        .context("decode service stopped")?;
+        replies.push(rrx);
+    }
+    replies
+        .into_iter()
+        .map(|r| r.recv().context("decode service dropped reply"))
+        .collect()
 }
 
 /// Batching policy knobs.

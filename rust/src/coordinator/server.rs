@@ -13,14 +13,16 @@
 //! thread-safe). The bounded queue provides backpressure; the batcher
 //! turns point queries into full artifact batches.
 
-use super::batcher::{next_batch, request_channel, BatchPolicy, DecodeRequest};
+use super::batcher::{
+    next_batch, request_channel, request_many, request_one, BatchPolicy, DecodeRequest,
+};
 use crate::codec::Artifact;
 use crate::compress::CompressedModel;
 use crate::coordinator::Reconstructor;
 use crate::runtime::{ForwardExec, Runtime};
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -32,18 +34,33 @@ pub struct DecodeHandle {
 }
 
 impl DecodeHandle {
+    /// Arity check shared by the request paths: a malformed client request
+    /// must surface as an `Err`, never panic a serving thread.
+    fn check_arity(&self, coords: &[usize]) -> Result<()> {
+        if coords.len() != self.d {
+            anyhow::bail!(
+                "bad coords: got {} dimensions, model has {}",
+                coords.len(),
+                self.d
+            );
+        }
+        Ok(())
+    }
+
     /// Decode one entry (blocks until the batcher flushes).
     pub fn get(&self, coords: &[usize]) -> Result<f32> {
-        assert_eq!(coords.len(), self.d);
-        let (rtx, rrx) = sync_channel(1);
-        self.tx
-            .send(DecodeRequest {
-                coords: coords.to_vec(),
-                reply: rtx,
-            })
-            .ok()
-            .context("decode service stopped")?;
-        rrx.recv().context("decode service dropped reply")
+        self.check_arity(coords)?;
+        request_one(&self.tx, coords)
+    }
+
+    /// Decode a batch of entries, returned in request order. All requests
+    /// are enqueued before the first reply is awaited, so the batcher
+    /// coalesces the whole block into as few XLA executions as possible.
+    pub fn get_many(&self, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
+        for c in coords {
+            self.check_arity(c)?;
+        }
+        request_many(&self.tx, coords)
     }
 }
 
@@ -280,4 +297,28 @@ pub fn serve_artifact_tcp(
         let _ = w.join();
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    /// Regression: a wrong-arity request must return `Err` from the
+    /// client-side check — it used to `assert_eq!` and kill the calling
+    /// thread — and must not enqueue anything.
+    #[test]
+    fn wrong_arity_is_an_error_not_a_panic() {
+        let (tx, rx) = sync_channel(4);
+        let handle = DecodeHandle { tx, d: 3 };
+        let err = handle.get(&[1, 2]).unwrap_err();
+        assert!(err.to_string().contains("bad coords"), "{err:#}");
+        assert!(handle.get(&[1, 2, 3, 4]).is_err());
+        let err = handle
+            .get_many(&[vec![0, 0, 0], vec![0, 0]])
+            .unwrap_err();
+        assert!(err.to_string().contains("bad coords"), "{err:#}");
+        // nothing reached the queue (get_many validates before enqueueing)
+        assert!(rx.try_recv().is_err());
+    }
 }

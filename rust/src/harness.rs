@@ -167,6 +167,21 @@ pub fn run_baselines(
     out
 }
 
+/// Uniformly random coordinates in `shape` (Pcg64-seeded) — the query
+/// stream the serving benches and tests fire at artifacts.
+pub fn random_coords(shape: &[usize], n: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = crate::util::Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| shape.iter().map(|&m| rng.below(m)).collect())
+        .collect()
+}
+
+/// Sort a coordinate batch lexicographically — the layout on which the
+/// `decode_many` prefix-reuse chains amortise best.
+pub fn sort_coords(coords: &mut [Vec<usize>]) {
+    coords.sort_unstable();
+}
+
 /// Pretty row printer shared by the figure benches.
 pub fn print_row(dataset: &str, method: &str, bytes: usize, fitness: f64, seconds: f64) {
     println!(

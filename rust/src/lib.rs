@@ -19,10 +19,17 @@
 //! Every compression method lives behind the [`codec`] registry: TensorCodec
 //! itself plus TTD/CPD/TKD/TRD/TTHRESH/SZ3/NeuKron all implement
 //! [`codec::Codec`] (compress to a budget) and produce a [`codec::Artifact`]
-//! (point/bulk decode, paper-accounting size, method-tagged `.tcz` v2
-//! serialisation). `codec::by_name("ttd")` is the one lookup the CLI, the
-//! benchmark harness and the decode server all share; adding a codec is a
-//! one-file change.
+//! (point/batched/bulk decode, paper-accounting size, method-tagged `.tcz`
+//! v2 serialisation). `codec::by_name("ttd")` is the one lookup the CLI,
+//! the benchmark harness and the decode server all share; adding a codec
+//! is a one-file change.
+//!
+//! The [`store`] module turns the registry into a serving system: an
+//! [`store::ArtifactStore`] LRU-caches many `.tcz` artifacts by name,
+//! per-artifact batch shards coalesce point queries into
+//! [`codec::Artifact::decode_many`] bulk decodes (prefix-reuse core
+//! chains), and a protocol v2 TCP server (`serve --dir`) hosts them all
+//! concurrently.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the model
 //! once, then the `tensorcodec` binary is self-contained.
@@ -40,5 +47,6 @@ pub mod metrics;
 pub mod nttd;
 pub mod reorder;
 pub mod runtime;
+pub mod store;
 pub mod tensor;
 pub mod util;

@@ -7,7 +7,8 @@
 //!   eval        fitness of a `.tcz` against its source tensor
 //!   stats       dataset statistics (Table II row)
 //!   gen         generate a synthetic dataset recipe to `.npy`
-//!   serve       TCP decode service over any compressed artifact
+//!   serve       TCP decode service: one artifact (--model) or a whole
+//!               directory of artifacts behind an LRU cache (--dir)
 //!   info        print `.tcz` metadata
 //!   methods     list the registered codecs
 //!
@@ -36,6 +37,8 @@ const VALUE_FLAGS: &[&str] = &[
     "input",
     "out",
     "model",
+    "dir",
+    "cache-bytes",
     "index",
     "addr",
     "max-conns",
@@ -348,27 +351,48 @@ fn cmd_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn batch_policy(args: &Args) -> Result<BatchPolicy> {
+    Ok(BatchPolicy {
+        max_batch: args.get("max-batch").unwrap_or("8192").parse()?,
+        max_wait: std::time::Duration::from_micros(
+            args.get("max-wait-us").unwrap_or("2000").parse()?,
+        ),
+        queue_depth: args.get("queue-depth").unwrap_or("65536").parse()?,
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    let artifact = codec::load_artifact(&PathBuf::from(args.req("model")?))?;
-    check_method(args, &artifact.meta())?;
     let addr = args.get("addr").unwrap_or("127.0.0.1:7070").to_string();
     let max_conns: usize = args.get("max-conns").unwrap_or("64").parse()?;
     let runtime_ready = tensorcodec::runtime::manifest::default_dir()
         .join("manifest.txt")
         .exists();
+    if let Some(dir) = args.get("dir") {
+        // Multi-artifact store server (protocol v2): host every .tcz in
+        // the directory behind per-artifact batch shards + an LRU cache.
+        if args.get("model").is_some() {
+            bail!("pick one of --model (single artifact) or --dir (artifact store)");
+        }
+        let cfg = tensorcodec::store::server::StoreServeConfig {
+            policy: batch_policy(args)?,
+            cache_bytes: args
+                .get("cache-bytes")
+                .unwrap_or("1073741824")
+                .parse()
+                .context("cache-bytes")?,
+            allow_xla: !args.has("method-agnostic") && runtime_ready,
+            max_conns,
+        };
+        return tensorcodec::store::server::serve_store_tcp(&PathBuf::from(dir), &addr, cfg);
+    }
+    let artifact = codec::load_artifact(&PathBuf::from(args.req("model")?))?;
+    check_method(args, &artifact.meta())?;
     if !args.has("method-agnostic") && runtime_ready {
         // Neural artifacts get the XLA-batched server when the AOT
         // artifacts are available; everything else falls through to the
         // method-agnostic path.
         if let Some(model) = artifact.as_model().cloned() {
-            let policy = BatchPolicy {
-                max_batch: args.get("max-batch").unwrap_or("8192").parse()?,
-                max_wait: std::time::Duration::from_micros(
-                    args.get("max-wait-us").unwrap_or("2000").parse()?,
-                ),
-                queue_depth: args.get("queue-depth").unwrap_or("65536").parse()?,
-            };
-            return server::serve_tcp(model, &addr, policy, max_conns);
+            return server::serve_tcp(model, &addr, batch_policy(args)?, max_conns);
         }
     }
     server::serve_artifact_tcp(artifact, &addr, max_conns)
@@ -428,8 +452,13 @@ COMMANDS
   eval        --model <m.tcz> --dataset <name> [--scale ..] [--data-seed ..]
   stats       --dataset <name> [--scale ..]
   gen         --dataset <name> --out <x.npy> [--scale ..] [--data-seed ..]
-  serve       --model <m.tcz> [--addr 127.0.0.1:7070] [--method-agnostic]
+  serve       --model <m.tcz> | --dir <artifacts-dir>
+              [--addr 127.0.0.1:7070] [--method-agnostic]
+              [--cache-bytes 1073741824]   # --dir: LRU byte budget
               [--max-batch 8192] [--max-wait-us 2000] [--max-conns 64]
+              --model: line protocol v1 (one `i,j,k` per line)
+              --dir:   protocol v2 (open/get/batch-get/stat/methods frames
+                       over every .tcz in the directory; see README)
   info        --model <m.tcz>
   methods     list registered codecs
 

@@ -148,6 +148,159 @@ pub fn forward_one(p: &ModelParams, digits: &[i32], scratch: &mut InferScratch) 
     }
 }
 
+/// Incremental NTTD evaluator with per-depth state snapshots.
+///
+/// The LSTM state and the TT-chain row vector after `k` digits depend only
+/// on the first `k` digits, so a lexicographically sorted batch of digit
+/// strings only recomputes the suffix that changed — the core-chain-reuse
+/// bulk path behind [`crate::codec::Artifact::decode_many`] for neural
+/// artifacts. Every arithmetic op mirrors [`forward_one`] exactly, so the
+/// decoded values are bit-identical to the point path.
+pub struct PrefixDecoder<'a> {
+    p: &'a ModelParams,
+    /// `hs[k*h..]` / `cs[k*h..]`: LSTM state after consuming `k` digits
+    /// (row 0 is the zero initial state).
+    hs: Vec<f32>,
+    cs: Vec<f32>,
+    /// `vs[k*r..]`: chain row vector after `k` digits (Tc only; rows
+    /// `1..=dp-1` are populated).
+    vs: Vec<f32>,
+    z: Vec<f32>,
+    core: Vec<f32>,
+    /// Digits consumed by the previous call (`-1` sentinel: never matches).
+    prev: Vec<i32>,
+}
+
+impl<'a> PrefixDecoder<'a> {
+    pub fn new(p: &'a ModelParams) -> Self {
+        let (dp, h, r) = (p.dp, p.h, p.r.max(1));
+        PrefixDecoder {
+            p,
+            hs: vec![0.0; (dp + 1) * h],
+            cs: vec![0.0; (dp + 1) * h],
+            vs: vec![0.0; (dp + 1) * r],
+            z: vec![0.0; 4 * h],
+            core: vec![0.0; r * r],
+            prev: vec![-1; dp],
+        }
+    }
+
+    /// One LSTM cell step consuming digit `t` (token `tok`), reading state
+    /// row `t` and writing row `t+1` — op-for-op the loop body of
+    /// [`lstm_trunk`].
+    fn lstm_step(&mut self, t: usize, tok: usize) {
+        let p = self.p;
+        let h = p.h;
+        debug_assert!(tok < p.vocab);
+        let emb = p.get("emb");
+        let w_ih = p.get("w_ih");
+        let w_hh = p.get("w_hh");
+        let b = p.get("b_lstm");
+        let x = &emb[(t * p.vocab + tok) * h..(t * p.vocab + tok) * h + h];
+        let h_prev = &self.hs[t * h..(t + 1) * h];
+        for g in 0..4 * h {
+            let wi = &w_ih[g * h..g * h + h];
+            let wh = &w_hh[g * h..g * h + h];
+            let mut acc = b[g];
+            for j in 0..h {
+                acc += x[j] * wi[j] + h_prev[j] * wh[j];
+            }
+            self.z[g] = acc;
+        }
+        for j in 0..h {
+            let i_g = sigmoid(self.z[j]);
+            let f_g = sigmoid(self.z[h + j]);
+            let g_g = self.z[2 * h + j].tanh();
+            let o_g = sigmoid(self.z[3 * h + j]);
+            let c_new = f_g * self.cs[t * h + j] + i_g * g_g;
+            self.cs[(t + 1) * h + j] = c_new;
+            self.hs[(t + 1) * h + j] = o_g * c_new.tanh();
+        }
+    }
+
+    /// Decode one folded entry, reusing the snapshots shared with the
+    /// previous call's digit string. Bit-identical to [`forward_one`].
+    pub fn decode(&mut self, digits: &[i32]) -> f32 {
+        let p = self.p;
+        let (dp, h, r) = (p.dp, p.h, p.r);
+        debug_assert_eq!(digits.len(), dp);
+        let mut l = 0;
+        while l < dp && self.prev[l] == digits[l] {
+            l += 1;
+        }
+        for t in l..dp {
+            self.lstm_step(t, digits[t] as usize);
+            self.prev[t] = digits[t];
+            if p.variant == Variant::Tc {
+                if t == 0 {
+                    // T1 = w1 @ h_0 + b1 (h_0 = state after the first digit)
+                    let w1 = p.get("w1");
+                    let b1 = p.get("b1");
+                    let h0 = &self.hs[h..2 * h];
+                    for i in 0..r {
+                        let w = &w1[i * h..(i + 1) * h];
+                        let mut acc = b1[i];
+                        for j in 0..h {
+                            acc += w[j] * h0[j];
+                        }
+                        self.vs[r + i] = acc;
+                    }
+                } else if t + 2 <= dp {
+                    // middle core from h_t, v_{t+1} = v_t @ core
+                    let wm = p.get("wm");
+                    let bm = p.get("bm");
+                    let ht = &self.hs[(t + 1) * h..(t + 2) * h];
+                    for i in 0..r * r {
+                        let w = &wm[i * h..(i + 1) * h];
+                        let mut acc = bm[i];
+                        for j in 0..h {
+                            acc += w[j] * ht[j];
+                        }
+                        self.core[i] = acc;
+                    }
+                    let (prev_rows, next_rows) = self.vs.split_at_mut((t + 1) * r);
+                    let v = &prev_rows[t * r..(t + 1) * r];
+                    for s in 0..r {
+                        let mut acc = 0.0;
+                        for q in 0..r {
+                            acc += v[q] * self.core[q * r + s];
+                        }
+                        next_rows[s] = acc;
+                    }
+                }
+            }
+        }
+        let hl = &self.hs[dp * h..(dp + 1) * h];
+        match p.variant {
+            Variant::Nk => {
+                let w_out = p.get("w_out");
+                let b_out = p.get("b_out");
+                let mut acc = b_out[0];
+                for j in 0..h {
+                    acc += w_out[j] * hl[j];
+                }
+                acc
+            }
+            Variant::Tc => {
+                let wd = p.get("wd");
+                let bd = p.get("bd");
+                let vrow = (dp - 1).max(1);
+                let v = &self.vs[vrow * r..(vrow + 1) * r];
+                let mut out = 0.0;
+                for i in 0..r {
+                    let w = &wd[i * h..(i + 1) * h];
+                    let mut acc = bd[i];
+                    for j in 0..h {
+                        acc += w[j] * hl[j];
+                    }
+                    out += v[i] * acc;
+                }
+                out
+            }
+        }
+    }
+}
+
 /// Batched convenience wrapper: `idx` is row-major `[n, dp]`.
 pub fn forward_batch(p: &ModelParams, idx: &[i32], out: &mut Vec<f32>) {
     let dp = p.dp;
@@ -202,6 +355,45 @@ mod tests {
         let digits: Vec<i32> = vec![0; 9];
         let v = forward_one(&p, &digits, &mut s);
         assert!(v.is_finite());
+    }
+
+    #[test]
+    fn prefix_decoder_bit_exact_with_forward_one() {
+        for (p, dp) in [
+            (ModelParams::init_tc(4, 7, 32, 5, 5), 7usize),
+            (ModelParams::init_nk(5, 6, 32, 8), 6usize),
+        ] {
+            let mut rng = Pcg64::seeded(11);
+            let mut batch: Vec<Vec<i32>> = (0..300)
+                .map(|_| (0..dp).map(|_| rng.below(32) as i32).collect())
+                .collect();
+            // raw order and sorted order (the intended fast path) must both
+            // reproduce forward_one exactly
+            for sort in [false, true] {
+                if sort {
+                    batch.sort();
+                }
+                let mut dec = PrefixDecoder::new(&p);
+                let mut scratch = InferScratch::new(dp, p.h, p.r.max(1));
+                for digits in &batch {
+                    let got = dec.decode(digits);
+                    let want = forward_one(&p, digits, &mut scratch);
+                    assert_eq!(got.to_bits(), want.to_bits(), "digits {digits:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_decoder_handles_repeats_and_full_reuse() {
+        let p = ModelParams::init_tc(6, 8, 32, 6, 6);
+        let mut dec = PrefixDecoder::new(&p);
+        let mut s = InferScratch::new(8, 6, 6);
+        let a: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let want = forward_one(&p, &a, &mut s);
+        // identical consecutive queries reuse the entire prefix
+        assert_eq!(dec.decode(&a).to_bits(), want.to_bits());
+        assert_eq!(dec.decode(&a).to_bits(), want.to_bits());
     }
 
     #[test]

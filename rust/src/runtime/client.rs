@@ -9,7 +9,10 @@ use std::rc::Rc;
 /// A PJRT CPU client plus the artifact inventory and a compile cache.
 ///
 /// Not `Send`: XLA objects hold raw pointers. The coordinator confines the
-/// runtime to a dedicated executor thread and communicates over channels.
+/// runtime to a dedicated executor thread and communicates over channels;
+/// the multi-artifact store server (`store::shard`) spawns one such
+/// executor thread — and therefore one `Runtime` with its own compile
+/// cache — per neural shard.
 pub struct Runtime {
     client: xla::PjRtClient,
     manifest: Manifest,

@@ -1,0 +1,143 @@
+//! Protocol v2 client for the multi-artifact decode server.
+//!
+//! Speaks the line protocol documented in [`super::server`]: one frame per
+//! line, `OK `/`ERR `-prefixed single-line replies. Used by the serving
+//! tests and benchmark drivers; any language with a TCP socket can
+//! implement the same five frames.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// Metadata reply of `open`/`stat`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemoteMeta {
+    pub method: String,
+    pub shape: Vec<usize>,
+    pub bytes: usize,
+    /// True when requests go through the bulk `decode_many` queue (false:
+    /// the XLA-batched neural path).
+    pub bulk: bool,
+}
+
+/// One connection to an artifact-store server.
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl ServeClient {
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let writer = stream.try_clone().context("clone stream")?;
+        Ok(ServeClient {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    /// Send one frame, return the reply body after `OK `; `ERR` replies
+    /// become `Err`.
+    fn roundtrip(&mut self, frame: &str) -> Result<String> {
+        self.writer.write_all(frame.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut reply = String::new();
+        if self.reader.read_line(&mut reply)? == 0 {
+            bail!("server closed the connection");
+        }
+        let reply = reply.trim_end();
+        if let Some(body) = reply.strip_prefix("OK") {
+            Ok(body.trim_start().to_string())
+        } else if let Some(msg) = reply.strip_prefix("ERR") {
+            bail!("server error: {}", msg.trim_start())
+        } else {
+            bail!("malformed reply `{reply}`")
+        }
+    }
+
+    /// Registered codec names on the server.
+    pub fn methods(&mut self) -> Result<Vec<String>> {
+        Ok(split_list(&self.roundtrip("methods")?))
+    }
+
+    /// Artifact names in the server's store directory.
+    pub fn list(&mut self) -> Result<Vec<String>> {
+        Ok(split_list(&self.roundtrip("list")?))
+    }
+
+    /// Load an artifact (starting its shard server-side).
+    pub fn open(&mut self, name: &str) -> Result<RemoteMeta> {
+        let body = self.roundtrip(&format!("open {name}"))?;
+        parse_meta(&body)
+    }
+
+    /// Metadata without starting a shard.
+    pub fn stat(&mut self, name: &str) -> Result<RemoteMeta> {
+        let body = self.roundtrip(&format!("stat {name}"))?;
+        parse_meta(&body)
+    }
+
+    /// Decode one entry.
+    pub fn get(&mut self, name: &str, coords: &[usize]) -> Result<f32> {
+        let body = self.roundtrip(&format!("get {name} {}", fmt_coords(coords)))?;
+        body.parse().with_context(|| format!("bad value `{body}`"))
+    }
+
+    /// Decode a batch; values come back in request order.
+    pub fn batch_get(&mut self, name: &str, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
+        let block: Vec<String> = coords.iter().map(|c| fmt_coords(c)).collect();
+        let body = self.roundtrip(&format!("batch-get {name} {}", block.join(";")))?;
+        let vals: Result<Vec<f32>> = body
+            .split(',')
+            .map(|v| v.parse().with_context(|| format!("bad value `{v}`")))
+            .collect();
+        let vals = vals?;
+        if vals.len() != coords.len() {
+            bail!("batch-get returned {} values for {} coords", vals.len(), coords.len());
+        }
+        Ok(vals)
+    }
+}
+
+fn fmt_coords(coords: &[usize]) -> String {
+    let parts: Vec<String> = coords.iter().map(|c| c.to_string()).collect();
+    parts.join(",")
+}
+
+fn split_list(body: &str) -> Vec<String> {
+    body.split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.to_string())
+        .collect()
+}
+
+fn parse_meta(body: &str) -> Result<RemoteMeta> {
+    let mut method = None;
+    let mut shape = None;
+    let mut bytes = None;
+    let mut bulk = None;
+    for field in body.split_whitespace() {
+        let (k, v) = field
+            .split_once('=')
+            .with_context(|| format!("malformed meta field `{field}`"))?;
+        match k {
+            "method" => method = Some(v.to_string()),
+            "shape" => {
+                shape = Some(
+                    v.split(',')
+                        .map(|p| p.parse::<usize>().context("bad shape"))
+                        .collect::<Result<Vec<_>>>()?,
+                )
+            }
+            "bytes" => bytes = Some(v.parse::<usize>().context("bad bytes")?),
+            "bulk" => bulk = Some(v == "true"),
+            _ => {} // forward-compatible: ignore unknown fields
+        }
+    }
+    Ok(RemoteMeta {
+        method: method.context("missing method")?,
+        shape: shape.context("missing shape")?,
+        bytes: bytes.context("missing bytes")?,
+        bulk: bulk.unwrap_or(true),
+    })
+}

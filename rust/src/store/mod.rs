@@ -1,0 +1,336 @@
+//! Multi-artifact serving store.
+//!
+//! One process hosts many compressed tensors at once — the deployment
+//! shape both TensorCodec and NeuKron target (many small compressed
+//! models, queried concurrently) — instead of one pre-loaded artifact per
+//! server:
+//!
+//! * [`ArtifactStore`] — lazily loads `.tcz` v1/v2 containers by name from
+//!   a directory and keeps them behind an LRU cache with a configurable
+//!   byte budget.
+//! * [`shard::Shard`] — a per-artifact batch queue (reusing
+//!   [`crate::coordinator::batcher::BatchPolicy`]): point queries from
+//!   many connections coalesce into one `decode_many` bulk decode per
+//!   flush; neural artifacts ride the XLA-batched
+//!   [`crate::coordinator::server::DecodeServer`] instead when the AOT
+//!   artifacts are available.
+//! * [`server::ArtifactServer`] — routes `open` / `get` / `batch-get` /
+//!   `stat` requests to shards, and a TCP front-end speaking the line
+//!   protocol v2 (artifact id + coordinate block per frame).
+//! * [`client::ServeClient`] — the matching protocol v2 client.
+
+pub mod client;
+pub mod server;
+pub mod shard;
+
+use crate::codec::{load_artifact, Artifact, ArtifactMeta};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One resident artifact: container metadata plus the decoder behind a
+/// mutex (decode takes `&mut self`; shards serialise access per artifact,
+/// so the mutex is uncontended on the hot path).
+pub struct StoreEntry {
+    pub name: String,
+    pub meta: ArtifactMeta,
+    /// What the cache byte budget charges: the container file size or the
+    /// artifact's own [`Artifact::resident_bytes`] (whichever is larger —
+    /// TTHRESH/SZ cache a full dense decode on first `get`, so their
+    /// serving footprint is the dense tensor, not the coded stream).
+    pub bytes: usize,
+    pub artifact: Mutex<Box<dyn Artifact>>,
+    last_used: AtomicU64,
+}
+
+/// The result of [`ArtifactStore::open`]: the entry plus any names the
+/// byte budget evicted to make room (callers that keep per-artifact state,
+/// like the serving shards, drop theirs for these names).
+pub struct Opened {
+    pub entry: Arc<StoreEntry>,
+    pub evicted: Vec<String>,
+}
+
+struct Inner {
+    entries: HashMap<String, Arc<StoreEntry>>,
+    resident_bytes: usize,
+}
+
+/// Lazily-loading, LRU-bounded artifact cache over a directory of `.tcz`
+/// files. `open("traffic")` loads `<dir>/traffic.tcz` on first use; once
+/// the resident container bytes exceed the budget, the least-recently-used
+/// entries are dropped (in-flight users keep their `Arc` until they
+/// finish, so eviction never interrupts a decode).
+pub struct ArtifactStore {
+    dir: PathBuf,
+    cache_bytes: usize,
+    tick: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+/// Artifact names are bare file stems, restricted to characters that are
+/// unambiguous in the space-delimited line protocol and cannot walk out of
+/// the store directory: `[A-Za-z0-9._-]`, not starting with `.`.
+fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty()
+        || name.starts_with('.')
+        || !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+    {
+        bail!("invalid artifact name `{name}` (want [A-Za-z0-9._-], no leading dot)");
+    }
+    Ok(())
+}
+
+impl ArtifactStore {
+    /// Open a store over `dir` with an LRU byte budget. The budget is a
+    /// soft floor of one entry: the most recent artifact always stays
+    /// resident even when it alone exceeds the budget.
+    pub fn new(dir: &Path, cache_bytes: usize) -> Result<ArtifactStore> {
+        if !dir.is_dir() {
+            bail!("artifact directory {} does not exist", dir.display());
+        }
+        Ok(ArtifactStore {
+            dir: dir.to_path_buf(),
+            cache_bytes,
+            tick: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                resident_bytes: 0,
+            }),
+        })
+    }
+
+    /// Names of every `.tcz` artifact in the directory (sorted). Stems
+    /// that fail [`validate_name`] are skipped — the protocol could list
+    /// but never address them.
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("read {}", self.dir.display()))?
+        {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("tcz") {
+                if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                    if validate_name(stem).is_ok() {
+                        names.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    fn touch(&self, entry: &StoreEntry) {
+        let now = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        entry.last_used.store(now, Ordering::Relaxed);
+    }
+
+    /// Refresh an entry's recency without going through `open` (shards
+    /// call this on their cached `Arc` so a hot artifact is not the LRU
+    /// victim just because nothing re-opened it).
+    pub fn touch_entry(&self, entry: &StoreEntry) {
+        self.touch(entry);
+    }
+
+    /// The entry if it is currently resident (no load, no recency bump).
+    pub fn peek(&self, name: &str) -> Option<Arc<StoreEntry>> {
+        self.inner.lock().expect("store lock").entries.get(name).cloned()
+    }
+
+    /// Resident container bytes (test/introspection hook).
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().expect("store lock").resident_bytes
+    }
+
+    /// Number of resident entries (test/introspection hook).
+    pub fn resident_count(&self) -> usize {
+        self.inner.lock().expect("store lock").entries.len()
+    }
+
+    /// Metadata for `name` without touching the cache: a resident entry
+    /// answers from memory (no recency bump), a cold one is loaded,
+    /// inspected and dropped. A metadata probe must never evict an
+    /// artifact that is serving traffic — the trade-off is that a cold
+    /// `stat` pays a full container parse each time.
+    pub fn stat(&self, name: &str) -> Result<ArtifactMeta> {
+        validate_name(name)?;
+        if let Some(entry) = self.peek(name) {
+            return Ok(entry.meta.clone());
+        }
+        let path = self.dir.join(format!("{name}.tcz"));
+        Ok(load_artifact(&path)?.meta())
+    }
+
+    /// Get `name`, loading `<dir>/<name>.tcz` on a cache miss and evicting
+    /// least-recently-used entries past the byte budget.
+    pub fn open(&self, name: &str) -> Result<Opened> {
+        validate_name(name)?;
+        if let Some(entry) = self.peek(name) {
+            self.touch(&entry);
+            return Ok(Opened {
+                entry,
+                evicted: Vec::new(),
+            });
+        }
+        // Load outside the lock: a slow container read must not block
+        // requests for already-resident artifacts.
+        let path = self.dir.join(format!("{name}.tcz"));
+        let artifact = load_artifact(&path)?;
+        let file_bytes = std::fs::metadata(&path)
+            .with_context(|| format!("stat {}", path.display()))?
+            .len() as usize;
+        let bytes = file_bytes.max(artifact.resident_bytes());
+        let meta = artifact.meta();
+        let entry = Arc::new(StoreEntry {
+            name: name.to_string(),
+            meta,
+            bytes,
+            artifact: Mutex::new(artifact),
+            last_used: AtomicU64::new(0),
+        });
+        self.touch(&entry);
+        let mut inner = self.inner.lock().expect("store lock");
+        if let Some(existing) = inner.entries.get(name) {
+            // another thread loaded it while we did; keep theirs
+            let entry = existing.clone();
+            drop(inner);
+            self.touch(&entry);
+            return Ok(Opened {
+                entry,
+                evicted: Vec::new(),
+            });
+        }
+        inner.resident_bytes += entry.bytes;
+        inner.entries.insert(name.to_string(), entry.clone());
+        let mut evicted = Vec::new();
+        while inner.resident_bytes > self.cache_bytes && inner.entries.len() > 1 {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(k, _)| k.as_str() != name)
+                .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            if let Some(e) = inner.entries.remove(&victim) {
+                inner.resident_bytes -= e.bytes;
+            }
+            evicted.push(victim);
+        }
+        Ok(Opened { entry, evicted })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{self, Budget, CodecConfig};
+    use crate::tensor::DenseTensor;
+
+    fn store_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tcz_store_unit_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn save(dir: &Path, name: &str, method: &str, shape: &[usize], seed: u64) {
+        let t = DenseTensor::random_uniform(shape, seed);
+        let codec = codec::by_name(method).unwrap();
+        let a = codec
+            .compress(&t, &Budget::Params(200), &CodecConfig::default())
+            .unwrap();
+        codec::save_artifact(&dir.join(format!("{name}.tcz")), a.as_ref()).unwrap();
+    }
+
+    #[test]
+    fn open_loads_lazily_and_caches() {
+        let dir = store_dir("lazy");
+        save(&dir, "a", "ttd", &[5, 4, 3], 0);
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        assert_eq!(store.resident_count(), 0);
+        let o1 = store.open("a").unwrap();
+        assert_eq!(o1.entry.meta.method, "ttd");
+        assert_eq!(store.resident_count(), 1);
+        let o2 = store.open("a").unwrap();
+        assert!(Arc::ptr_eq(&o1.entry, &o2.entry), "cache hit must reuse");
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        let dir = store_dir("lru");
+        save(&dir, "a", "ttd", &[5, 4, 3], 1);
+        save(&dir, "b", "cpd", &[5, 4, 3], 2);
+        save(&dir, "c", "tkd", &[5, 4, 3], 3);
+        // probe the charged sizes (max of file bytes and resident_bytes)
+        // through an unbounded store first
+        let probe = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        let sizes: Vec<usize> = ["a", "b", "c"]
+            .iter()
+            .map(|n| probe.open(n).unwrap().entry.bytes)
+            .collect();
+        // budget fits the two largest but not all three
+        let budget = sizes.iter().sum::<usize>() - sizes.iter().min().unwrap() / 2 - 1;
+        let store = ArtifactStore::new(&dir, budget).unwrap();
+        assert!(store.open("a").unwrap().evicted.is_empty());
+        assert!(store.open("b").unwrap().evicted.is_empty());
+        let o = store.open("c").unwrap();
+        assert_eq!(o.evicted, vec!["a".to_string()], "LRU victim must be `a`");
+        assert!(store.resident_bytes() <= budget);
+        // touching `b` then opening `a` again must evict `c`, not `b`
+        let b = store.peek("b").unwrap();
+        store.touch_entry(&b);
+        let o = store.open("a").unwrap();
+        assert_eq!(o.evicted, vec!["c".to_string()]);
+    }
+
+    #[test]
+    fn one_entry_always_stays_resident() {
+        let dir = store_dir("floor");
+        save(&dir, "a", "ttd", &[5, 4, 3], 4);
+        let store = ArtifactStore::new(&dir, 0).unwrap();
+        let o = store.open("a").unwrap();
+        assert!(o.evicted.is_empty());
+        assert_eq!(store.resident_count(), 1);
+    }
+
+    #[test]
+    fn bad_names_and_missing_files_rejected() {
+        let dir = store_dir("names");
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        for bad in ["", "../a", "a/b", ".hidden", "a\\b", "a b", "a,b", "a;b"] {
+            assert!(store.open(bad).is_err(), "accepted `{bad}`");
+        }
+        assert!(store.open("does_not_exist").is_err());
+        assert!(ArtifactStore::new(&dir.join("nope"), 0).is_err());
+    }
+
+    #[test]
+    fn list_names_sorted_and_protocol_safe() {
+        let dir = store_dir("list");
+        save(&dir, "zeta", "ttd", &[4, 3, 2], 5);
+        save(&dir, "alpha", "cpd", &[4, 3, 2], 6);
+        std::fs::write(dir.join("notes.txt"), b"ignored").unwrap();
+        // an unaddressable stem (space) must not be listed either
+        std::fs::write(dir.join("my model.tcz"), b"ignored").unwrap();
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        let names = store.list().unwrap();
+        assert_eq!(names, vec!["alpha".to_string(), "zeta".to_string()]);
+    }
+
+    #[test]
+    fn stat_does_not_touch_the_cache() {
+        let dir = store_dir("stat");
+        save(&dir, "a", "ttd", &[5, 4, 3], 7);
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        let meta = store.stat("a").unwrap();
+        assert_eq!(meta.method, "ttd");
+        assert_eq!(store.resident_count(), 0, "stat must not load into the LRU");
+        store.open("a").unwrap();
+        assert_eq!(store.stat("a").unwrap().method, "ttd");
+        assert_eq!(store.resident_count(), 1);
+    }
+}

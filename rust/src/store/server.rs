@@ -1,0 +1,296 @@
+//! Multi-artifact decode server + the protocol v2 TCP front-end.
+//!
+//! [`ArtifactServer`] routes requests by artifact name: each artifact gets
+//! a lazily-started [`Shard`] (per-artifact batch queue, or the XLA path
+//! for neural artifacts), and the [`ArtifactStore`]'s LRU byte budget
+//! decides what stays resident — when the store evicts an artifact, its
+//! shard is dropped too (in-flight requests still complete; the shard
+//! worker holds the entry alive until it drains).
+//!
+//! ## Wire protocol v2
+//!
+//! Line-based, one frame per line; every reply is a single line starting
+//! with `OK ` or `ERR `:
+//!
+//! ```text
+//! methods                          -> OK <name,name,...>        registered codecs
+//! list                             -> OK <name,name,...>        artifacts in the dir
+//! open <artifact>                  -> OK method=<m> shape=<i,j,k> bytes=<n> bulk=<true|false>
+//! stat <artifact>                  -> same reply as open (starts no shard, never
+//!                                     loads into or evicts from the LRU cache)
+//! get <artifact> <i,j,k>           -> OK <value>
+//! batch-get <artifact> <i,j,k;...> -> OK <v1,v2,...>            values in request order
+//! ```
+//!
+//! A malformed frame (unknown command, bad coordinates, unknown artifact)
+//! errors that one frame; the connection and the serving threads stay up.
+
+use super::shard::Shard;
+use super::ArtifactStore;
+use crate::codec::{self, ArtifactMeta};
+use crate::coordinator::batcher::BatchPolicy;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Knobs for the multi-artifact server.
+#[derive(Debug, Clone)]
+pub struct StoreServeConfig {
+    pub policy: BatchPolicy,
+    /// LRU byte budget for resident artifacts.
+    pub cache_bytes: usize,
+    /// Route neural artifacts through the XLA-batched server (requires the
+    /// AOT artifacts; the CLI gates this on the runtime manifest).
+    pub allow_xla: bool,
+    /// Connections accepted before the TCP front-end drains and exits.
+    pub max_conns: usize,
+}
+
+impl Default for StoreServeConfig {
+    fn default() -> Self {
+        StoreServeConfig {
+            policy: BatchPolicy::default(),
+            cache_bytes: 1 << 30,
+            allow_xla: false,
+            max_conns: 64,
+        }
+    }
+}
+
+/// Routes decode requests to per-artifact shards over an [`ArtifactStore`].
+pub struct ArtifactServer {
+    store: ArtifactStore,
+    policy: BatchPolicy,
+    allow_xla: bool,
+    shards: Mutex<HashMap<String, Arc<Shard>>>,
+}
+
+impl ArtifactServer {
+    pub fn new(store: ArtifactStore, policy: BatchPolicy, allow_xla: bool) -> ArtifactServer {
+        ArtifactServer {
+            store,
+            policy,
+            allow_xla,
+            shards: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The backing store (test/introspection hook).
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    /// The shard for `name`, starting it (and loading the artifact) on
+    /// first use. Shards of store-evicted artifacts are dropped here.
+    ///
+    /// Invariant: a shard is only *cached* while its store entry is
+    /// resident, so the byte budget always accounts for every cached
+    /// shard's artifact. A shard that raced with an eviction is healed on
+    /// the next lookup (stale fast path) or never cached at all (miss
+    /// path); either way it still serves its in-flight requests through
+    /// its own entry `Arc`.
+    fn shard(&self, name: &str) -> Result<Arc<Shard>> {
+        {
+            let mut shards = self.shards.lock().expect("shard map");
+            if let Some(shard) = shards.get(name) {
+                if let Some(entry) = self.store.peek(name) {
+                    self.store.touch_entry(&entry);
+                    return Ok(shard.clone());
+                }
+                // the store evicted this entry out from under the shard —
+                // drop the stale shard and rebuild below
+                shards.remove(name);
+            }
+        }
+        let opened = self.store.open(name)?;
+        let mut shards = self.shards.lock().expect("shard map");
+        for gone in &opened.evicted {
+            shards.remove(gone);
+        }
+        if let Some(shard) = shards.get(name) {
+            if self.store.peek(name).is_some() {
+                return Ok(shard.clone()); // another thread won the race
+            }
+            shards.remove(name);
+        }
+        let shard = Arc::new(Shard::start(opened.entry, &self.policy, self.allow_xla)?);
+        if self.store.peek(name).is_some() {
+            shards.insert(name.to_string(), shard.clone());
+        }
+        Ok(shard)
+    }
+
+    /// Load `name` (starting its shard) and return its metadata plus
+    /// whether requests go through the bulk `decode_many` queue (`false`
+    /// means the XLA-batched neural path).
+    pub fn open(&self, name: &str) -> Result<(ArtifactMeta, bool)> {
+        let shard = self.shard(name)?;
+        Ok((shard.entry().meta.clone(), !shard.is_xla()))
+    }
+
+    /// Metadata for `name` without starting a shard or touching the LRU
+    /// cache (see [`ArtifactStore::stat`]). The `bulk` flag is the static
+    /// prediction (neural methods go to XLA when enabled).
+    pub fn stat(&self, name: &str) -> Result<(ArtifactMeta, bool)> {
+        let meta = self.store.stat(name)?;
+        let bulk = !(self.allow_xla && matches!(meta.method, "tensorcodec" | "neukron"));
+        Ok((meta, bulk))
+    }
+
+    /// Artifact names available in the store directory.
+    pub fn list(&self) -> Result<Vec<String>> {
+        self.store.list()
+    }
+
+    /// Decode one entry of `name`.
+    pub fn get(&self, name: &str, coords: &[usize]) -> Result<f32> {
+        self.shard(name)?.get(coords)
+    }
+
+    /// Decode a batch of entries of `name`, in request order.
+    pub fn batch_get(&self, name: &str, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
+        self.shard(name)?.get_many(coords)
+    }
+
+    /// Stop all shards, draining their queues (blocks until every worker
+    /// joins; callers still holding shard `Arc`s delay only their shard).
+    pub fn shutdown(self) {
+        self.shards.lock().expect("shard map").clear();
+    }
+}
+
+fn parse_coords(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<usize>()
+                .with_context(|| format!("bad coords `{s}` (want comma-separated integers)"))
+        })
+        .collect()
+}
+
+fn parse_coord_block(s: &str) -> Result<Vec<Vec<usize>>> {
+    s.split(';').map(parse_coords).collect()
+}
+
+fn meta_reply(meta: &ArtifactMeta, bulk: bool) -> String {
+    let shape: Vec<String> = meta.shape.iter().map(|n| n.to_string()).collect();
+    format!(
+        "OK method={} shape={} bytes={} bulk={}",
+        meta.method,
+        shape.join(","),
+        meta.size_bytes,
+        bulk
+    )
+}
+
+/// Dispatch one protocol v2 frame.
+fn dispatch_frame(server: &ArtifactServer, line: &str) -> Result<String> {
+    let line = line.trim();
+    let (cmd, rest) = match line.split_once(' ') {
+        Some((c, r)) => (c, r.trim()),
+        None => (line, ""),
+    };
+    match cmd {
+        "methods" => {
+            let names: Vec<&str> = codec::registry().iter().map(|c| c.name()).collect();
+            Ok(format!("OK {}", names.join(",")))
+        }
+        "list" => Ok(format!("OK {}", server.list()?.join(","))),
+        "open" | "stat" => {
+            if rest.is_empty() {
+                bail!("usage: {cmd} <artifact>");
+            }
+            let (meta, bulk) = if cmd == "open" {
+                server.open(rest)?
+            } else {
+                server.stat(rest)?
+            };
+            Ok(meta_reply(&meta, bulk))
+        }
+        "get" => {
+            let (name, coords) = rest
+                .split_once(' ')
+                .context("usage: get <artifact> <i,j,k>")?;
+            let v = server.get(name, &parse_coords(coords.trim())?)?;
+            Ok(format!("OK {v}"))
+        }
+        "batch-get" => {
+            let (name, block) = rest
+                .split_once(' ')
+                .context("usage: batch-get <artifact> <i,j,k;i,j,k;...>")?;
+            let vals = server.batch_get(name, &parse_coord_block(block.trim())?)?;
+            let vals: Vec<String> = vals.iter().map(|v| v.to_string()).collect();
+            Ok(format!("OK {}", vals.join(",")))
+        }
+        other => bail!("unknown command `{other}`"),
+    }
+}
+
+/// Handle one protocol v2 frame; the reply is always a single line (a
+/// failed frame becomes `ERR <msg>`, never a dropped connection).
+fn handle_frame(server: &ArtifactServer, line: &str) -> String {
+    match dispatch_frame(server, line) {
+        Ok(r) => r,
+        Err(e) => format!("ERR {}", format!("{e:#}").replace(['\n', '\r'], " ")),
+    }
+}
+
+/// Serve protocol v2 on an already-bound listener (used by tests to bind
+/// port 0 first). Accepts `max_conns` connections, then drains and exits.
+pub fn serve_store_listener(
+    listener: TcpListener,
+    dir: &Path,
+    cfg: StoreServeConfig,
+) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let store = ArtifactStore::new(dir, cfg.cache_bytes)?;
+    let server = Arc::new(ArtifactServer::new(store, cfg.policy, cfg.allow_xla));
+    let mut workers = Vec::new();
+    for conn in listener.incoming().take(cfg.max_conns) {
+        let stream = conn?;
+        let server = server.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut out = match stream.try_clone() {
+                Ok(s) => s,
+                Err(_) => return,
+            };
+            let reader = BufReader::new(stream);
+            for line in reader.lines() {
+                let line = match line {
+                    Ok(l) => l,
+                    Err(_) => break,
+                };
+                let reply = handle_frame(&server, &line);
+                if out.write_all(reply.as_bytes()).is_err()
+                    || out.write_all(b"\n").is_err()
+                {
+                    break;
+                }
+            }
+        }));
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    if let Ok(server) = Arc::try_unwrap(server) {
+        server.shutdown();
+    }
+    Ok(())
+}
+
+/// TCP front-end over a directory of artifacts: `serve --dir`.
+pub fn serve_store_tcp(dir: &Path, addr: &str, cfg: StoreServeConfig) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr()?;
+    let names = ArtifactStore::new(dir, cfg.cache_bytes)?.list()?;
+    eprintln!(
+        "[tcz] serving artifact store on {local} ({} artifacts in {}, cache {} B)",
+        names.len(),
+        dir.display(),
+        cfg.cache_bytes
+    );
+    serve_store_listener(listener, dir, cfg)
+}

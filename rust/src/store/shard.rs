@@ -1,0 +1,174 @@
+//! Per-artifact decode shards.
+//!
+//! Every served artifact gets its own bounded request queue and worker —
+//! the same dynamic-batching policy the single-model server uses
+//! ([`BatchPolicy`] / [`next_batch`]), sharded by artifact id. Point
+//! queries from any number of connections coalesce into one
+//! [`crate::codec::Artifact::decode_many`] call per flush, so the
+//! structured codecs' prefix-reuse chains amortise across clients. Neural
+//! artifacts ride the XLA-batched [`DecodeServer`] instead when the AOT
+//! artifacts are available.
+
+use super::StoreEntry;
+use crate::coordinator::batcher::{
+    next_batch, request_channel, request_many, request_one, BatchPolicy, DecodeRequest,
+};
+use crate::coordinator::server::DecodeServer;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Reject malformed coordinates before they reach a decode queue: a bad
+/// client request must be an `Err` on that request, never a worker panic.
+fn check_coords(coords: &[usize], shape: &[usize]) -> Result<()> {
+    if coords.len() != shape.len() {
+        bail!(
+            "bad coords: got {} dimensions, artifact has {}",
+            coords.len(),
+            shape.len()
+        );
+    }
+    for (k, (&c, &n)) in coords.iter().zip(shape).enumerate() {
+        if c >= n {
+            bail!("coordinate {c} out of range for mode {k} (size {n})");
+        }
+    }
+    Ok(())
+}
+
+/// Batch-queue worker over an artifact's own `decode_many`.
+pub struct BulkShard {
+    tx: Option<SyncSender<DecodeRequest>>,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<u64>>,
+}
+
+impl BulkShard {
+    /// Spawn the shard worker. The worker owns a clone of the entry `Arc`,
+    /// so store eviction never interrupts a decode in flight.
+    pub fn start(entry: Arc<StoreEntry>, policy: BatchPolicy) -> Result<BulkShard> {
+        let (tx, rx) = request_channel(&policy);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_worker = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("tcz-shard-{}", entry.name))
+            .spawn(move || -> u64 {
+                let mut batches = 0u64;
+                let mut values: Vec<f32> = Vec::new();
+                while let Some(batch) = next_batch(&rx, &policy, &stop_worker) {
+                    let coords: Vec<Vec<usize>> =
+                        batch.iter().map(|r| r.coords.clone()).collect();
+                    values.clear();
+                    entry
+                        .artifact
+                        .lock()
+                        .expect("artifact lock")
+                        .decode_many(&coords, &mut values);
+                    batches += 1;
+                    for (req, &v) in batch.iter().zip(&values) {
+                        let _ = req.reply.send(v); // client may have gone
+                    }
+                }
+                batches
+            })?;
+        Ok(BulkShard {
+            tx: Some(tx),
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    fn sender(&self) -> &SyncSender<DecodeRequest> {
+        self.tx.as_ref().expect("shard running")
+    }
+}
+
+impl Drop for BulkShard {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+enum ShardKind {
+    Bulk(BulkShard),
+    Xla(DecodeServer),
+}
+
+/// A running per-artifact decode shard: the bulk batch queue, or the
+/// XLA-batched [`DecodeServer`] for neural artifacts.
+pub struct Shard {
+    entry: Arc<StoreEntry>,
+    kind: ShardKind,
+}
+
+impl Shard {
+    /// Start the right shard kind for `entry`. `allow_xla` gates the
+    /// neural fast path (the caller checks that the AOT runtime manifest
+    /// exists); everything else — and neural artifacts without a runtime —
+    /// uses the bulk queue over the artifact's own `decode_many`.
+    pub fn start(entry: Arc<StoreEntry>, policy: &BatchPolicy, allow_xla: bool) -> Result<Shard> {
+        if allow_xla {
+            let model = entry
+                .artifact
+                .lock()
+                .expect("artifact lock")
+                .as_model()
+                .cloned();
+            if let Some(model) = model {
+                let server = DecodeServer::start(model, policy.clone())?;
+                return Ok(Shard {
+                    entry,
+                    kind: ShardKind::Xla(server),
+                });
+            }
+        }
+        let shard = BulkShard::start(entry.clone(), policy.clone())?;
+        Ok(Shard {
+            entry,
+            kind: ShardKind::Bulk(shard),
+        })
+    }
+
+    /// The store entry this shard serves.
+    pub fn entry(&self) -> &Arc<StoreEntry> {
+        &self.entry
+    }
+
+    /// The artifact shape this shard serves.
+    pub fn shape(&self) -> &[usize] {
+        &self.entry.meta.shape
+    }
+
+    /// True when this shard routes through the XLA-batched server.
+    pub fn is_xla(&self) -> bool {
+        matches!(self.kind, ShardKind::Xla(_))
+    }
+
+    /// Decode one entry (blocks until the shard's batcher flushes).
+    pub fn get(&self, coords: &[usize]) -> Result<f32> {
+        check_coords(coords, self.shape())?;
+        match &self.kind {
+            ShardKind::Xla(server) => server.handle().get(coords),
+            ShardKind::Bulk(shard) => request_one(shard.sender(), coords),
+        }
+    }
+
+    /// Decode a batch, returned in request order. All requests are
+    /// enqueued before the first reply is awaited, so the whole block
+    /// lands in as few batch flushes as possible.
+    pub fn get_many(&self, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
+        for c in coords {
+            check_coords(c, self.shape())?;
+        }
+        match &self.kind {
+            ShardKind::Xla(server) => server.handle().get_many(coords),
+            ShardKind::Bulk(shard) => request_many(shard.sender(), coords),
+        }
+    }
+}

@@ -143,6 +143,38 @@ fn golden_v1_file_still_loads() {
     }
 }
 
+/// The checked-in v2 golden file (see `data/make_golden_v2.py`) pins the
+/// method-tagged framing forever: it wraps the exact v1 golden payload,
+/// so both goldens must load and decode to identical entries.
+#[test]
+fn golden_v2_file_decodes_same_entries_as_v1() {
+    let data = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data");
+    let mut v1 = codec::load_artifact(&data.join("golden_v1.tcz")).unwrap();
+    let mut v2 = codec::load_artifact(&data.join("golden_v2.tcz")).unwrap();
+    let (m1, m2) = (v1.meta(), v2.meta());
+    assert_eq!(m2.method, "tensorcodec");
+    assert_eq!(m1.method, m2.method);
+    assert_eq!(m1.shape, m2.shape);
+    assert_eq!(m2.shape, vec![6, 4]);
+    assert_eq!(v1.size_bytes(), v2.size_bytes());
+    let (d1, d2) = (v1.decode_all(), v2.decode_all());
+    assert_eq!(d1.data(), d2.data(), "v1 and v2 goldens must decode identically");
+    for i in 0..6 {
+        for j in 0..4 {
+            assert_eq!(v1.get(&[i, j]).to_bits(), v2.get(&[i, j]).to_bits());
+        }
+    }
+    // and the batched path agrees with both
+    let coords: Vec<Vec<usize>> = (0..6)
+        .flat_map(|i| (0..4).map(move |j| vec![i, j]))
+        .collect();
+    let mut bulk = Vec::new();
+    v2.decode_many(&coords, &mut bulk);
+    for (c, &v) in coords.iter().zip(&bulk) {
+        assert_eq!(v.to_bits(), v1.get(c).to_bits(), "{c:?}");
+    }
+}
+
 /// A v1 file written by today's `save_tcz` also loads through the unified
 /// path (same guarantee, exercised against the current writer).
 #[test]

@@ -58,7 +58,9 @@ def pack_permutation(perm: list, n: int) -> bytes:
     return bytes(out)
 
 
-def main() -> None:
+def v1_bytes() -> bytes:
+    """The full v1 container byte stream (also the v2 payload for the
+    tensorcodec method tag — see make_golden_v2.py)."""
     buf = bytearray()
     buf += b"TCZ1"
     buf += struct.pack("<BBBB", 1, 0, 1, D)  # version, variant=tc, dtype=f32, d
@@ -75,9 +77,14 @@ def main() -> None:
         buf += struct.pack("<f", math.sin(i * 0.37) * 0.1)
     for n in SHAPE:
         buf += pack_permutation(list(range(n)), n)
+    return bytes(buf)
+
+
+def main() -> None:
+    buf = v1_bytes()
     out = Path(__file__).parent / "golden_v1.tcz"
-    out.write_bytes(bytes(buf))
-    print(f"wrote {out} ({len(buf)} bytes, {total} params)")
+    out.write_bytes(buf)
+    print(f"wrote {out} ({len(buf)} bytes, {n_params()} params)")
 
 
 if __name__ == "__main__":

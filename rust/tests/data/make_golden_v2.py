@@ -1,0 +1,38 @@
+#!/usr/bin/env python3
+"""Regenerate golden_v2.tcz: the v2 (method-tagged) `.tcz` container.
+
+Wraps the exact model payload of golden_v1.tcz (see make_golden_v1.py) in
+the v2 framing written by `codec::container::artifact_to_bytes`, pinning
+the layout forever:
+
+  magic "TCZ2" | u8 version=2 | u8 method_tag | u8 reserved[2]
+  u64 payload_len | payload
+
+For the tensorcodec method (tag 0) the payload is the full v1 byte stream
+(including its own "TCZ1" magic), so `golden_v1.tcz` and `golden_v2.tcz`
+must decode to identical entries — the container test asserts exactly
+that.
+"""
+
+import struct
+from pathlib import Path
+
+from make_golden_v1 import v1_bytes
+
+METHOD_TAG_TENSORCODEC = 0
+
+
+def main() -> None:
+    payload = v1_bytes()
+    buf = bytearray()
+    buf += b"TCZ2"
+    buf += struct.pack("<BBBB", 2, METHOD_TAG_TENSORCODEC, 0, 0)
+    buf += struct.pack("<Q", len(payload))
+    buf += payload
+    out = Path(__file__).parent / "golden_v2.tcz"
+    out.write_bytes(bytes(buf))
+    print(f"wrote {out} ({len(buf)} bytes, payload {len(payload)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+//! Multi-artifact serving tests: the `ArtifactStore` + shard server must
+//! host several methods concurrently, answer bit-exactly on both the
+//! point and the batched path, survive malformed requests, and drain
+//! cleanly at shutdown. The TCP front-end + `ServeClient` speak protocol
+//! v2 end-to-end. Everything here is pure Rust — no XLA artifacts needed.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use tensorcodec::codec::{self, Budget, CodecConfig};
+use tensorcodec::coordinator::batcher::BatchPolicy;
+use tensorcodec::harness::{random_coords, sort_coords};
+use tensorcodec::store::server::{serve_store_listener, ArtifactServer, StoreServeConfig};
+use tensorcodec::store::ArtifactStore;
+use tensorcodec::tensor::DenseTensor;
+
+/// (name, method, shape, budget): four artifacts of four different
+/// methods, including one (sz) whose `decode_many` is the default
+/// get-loop.
+fn artifact_specs() -> Vec<(&'static str, &'static str, Vec<usize>, Budget)> {
+    vec![
+        ("traffic_ttd", "ttd", vec![8, 6, 5], Budget::Params(500)),
+        ("video_cpd", "cpd", vec![6, 5, 4], Budget::Params(120)),
+        ("climate_tkd", "tkd", vec![7, 5, 4], Budget::Params(250)),
+        ("stock_sz", "sz", vec![6, 4, 3], Budget::RelError(0.2)),
+    ]
+}
+
+/// Build a fresh store directory with the four artifacts above.
+fn build_store_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tcz_store_serving_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    for (i, (name, method, shape, budget)) in artifact_specs().into_iter().enumerate() {
+        let t = DenseTensor::random_uniform(&shape, 100 + i as u64);
+        let c = codec::by_name(method).unwrap();
+        let a = c.compress(&t, &budget, &CodecConfig::default()).unwrap();
+        codec::save_artifact(&dir.join(format!("{name}.tcz")), a.as_ref()).unwrap();
+    }
+    dir
+}
+
+fn small_policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 64,
+        max_wait: std::time::Duration::from_millis(1),
+        queue_depth: 512,
+    }
+}
+
+/// Single-threaded reference: value of every coordinate via a freshly
+/// loaded artifact's `get`.
+fn reference_values(dir: &Path, name: &str, coords: &[Vec<usize>]) -> Vec<f32> {
+    let mut artifact = codec::load_artifact(&dir.join(format!("{name}.tcz"))).unwrap();
+    coords.iter().map(|c| artifact.get(c)).collect()
+}
+
+/// Acceptance: a 10k sorted-coordinate `batch-get` on a TT artifact is
+/// bit-exactly equal to per-entry `get` and goes through the overridden
+/// `decode_many` path (asserted via the call-count hook).
+#[test]
+fn tt_batch_get_10k_sorted_bit_exact_through_bulk_path() {
+    let dir = build_store_dir("bulk10k");
+    let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+    let server = ArtifactServer::new(store, small_policy(), false);
+    let shape = vec![8usize, 6, 5];
+    let mut coords = random_coords(&shape, 10_000, 1);
+    sort_coords(&mut coords);
+    let got = server.batch_get("traffic_ttd", &coords).unwrap();
+    assert_eq!(got.len(), coords.len());
+    let want = reference_values(&dir, "traffic_ttd", &coords);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "entry {i} at {:?}: batch {g} vs get {w}",
+            coords[i]
+        );
+    }
+    // the overridden bulk path served it (default impls report 0)
+    let entry = server.store().peek("traffic_ttd").expect("resident");
+    let calls = entry.artifact.lock().unwrap().decode_many_calls();
+    assert!(calls >= 1, "decode_many was never taken (calls={calls})");
+}
+
+/// The server hosts all four methods concurrently: 8 client threads fire
+/// interleaved point and batch queries; every reply is bit-exact against
+/// the single-threaded reference, and shutdown drains without deadlock.
+#[test]
+fn eight_threads_interleaved_artifacts_bit_exact() {
+    let dir = build_store_dir("hammer");
+    let specs = artifact_specs();
+    // per-artifact query set + single-threaded expected values
+    let mut queries: Vec<(String, Vec<Vec<usize>>, Vec<f32>)> = Vec::new();
+    for (i, (name, _, shape, _)) in specs.iter().enumerate() {
+        let coords = random_coords(shape, 240, 7 + i as u64);
+        let want = reference_values(&dir, name, &coords);
+        queries.push((name.to_string(), coords, want));
+    }
+    let queries = Arc::new(queries);
+    let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+    let server = Arc::new(ArtifactServer::new(store, small_policy(), false));
+    let mut handles = Vec::new();
+    for t in 0..8usize {
+        let server = server.clone();
+        let queries = queries.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..240usize {
+                // interleave artifacts per request
+                let (name, coords, want) = &queries[(t + i) % queries.len()];
+                let j = (i * 7 + t) % coords.len();
+                let got = server.get(name, &coords[j]).unwrap();
+                assert_eq!(
+                    got.to_bits(),
+                    want[j].to_bits(),
+                    "thread {t} {name} {:?}",
+                    coords[j]
+                );
+            }
+            // one batched block per thread, also interleaved across threads
+            let (name, coords, want) = &queries[t % queries.len()];
+            let got = server.batch_get(name, coords).unwrap();
+            for (g, w) in got.iter().zip(want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "thread {t} batch {name}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    // all four artifacts were resident and served
+    assert_eq!(server.store().resident_count(), 4);
+    // shutdown must drain worker queues and join without deadlock
+    Arc::try_unwrap(server)
+        .unwrap_or_else(|_| panic!("clients still hold the server"))
+        .shutdown();
+}
+
+/// Malformed requests (wrong arity, out-of-range coordinate, unknown
+/// artifact) error that request only — the shard keeps serving.
+#[test]
+fn malformed_requests_error_without_killing_shards() {
+    let dir = build_store_dir("malformed");
+    let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+    let server = ArtifactServer::new(store, small_policy(), false);
+    let ok = server.get("traffic_ttd", &[0, 0, 0]).unwrap();
+    // wrong arity
+    let err = server.get("traffic_ttd", &[0, 0]).unwrap_err();
+    assert!(err.to_string().contains("bad coords"), "{err:#}");
+    // out of range
+    let err = server.get("traffic_ttd", &[8, 0, 0]).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err:#}");
+    // batch with one bad row rejects the whole block up front
+    assert!(server
+        .batch_get("traffic_ttd", &[vec![0, 0, 0], vec![0, 99, 0]])
+        .is_err());
+    // unknown artifact / traversal names
+    assert!(server.get("nope", &[0, 0, 0]).is_err());
+    assert!(server.get("../traffic_ttd", &[0, 0, 0]).is_err());
+    // the shard is still alive and bit-stable after all that
+    let again = server.get("traffic_ttd", &[0, 0, 0]).unwrap();
+    assert_eq!(ok.to_bits(), again.to_bits());
+}
+
+/// Store eviction drops the per-artifact shard too: with a budget that
+/// fits one artifact, cycling through all four keeps at most two resident
+/// (the floor entry plus the newest) and every artifact still answers.
+#[test]
+fn lru_eviction_cycles_shards_and_keeps_serving() {
+    let dir = build_store_dir("evict");
+    // probe the charged sizes (file bytes vs resident_bytes, whichever is
+    // larger) through an unbounded store first
+    let probe = ArtifactStore::new(&dir, usize::MAX).unwrap();
+    let sizes: Vec<usize> = artifact_specs()
+        .iter()
+        .map(|(n, ..)| probe.open(n).unwrap().entry.bytes)
+        .collect();
+    drop(probe);
+    let budget = *sizes.iter().max().unwrap() + 8; // one artifact at a time
+    let store = ArtifactStore::new(&dir, budget).unwrap();
+    let server = ArtifactServer::new(store, small_policy(), false);
+    for round in 0..2 {
+        for (name, _, shape, _) in artifact_specs() {
+            let coords = random_coords(&shape, 16, 3 + round);
+            let want = reference_values(&dir, name, &coords);
+            let got = server.batch_get(name, &coords).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{name} round {round}");
+            }
+            assert!(server.store().resident_bytes() <= budget);
+        }
+    }
+    assert!(server.store().resident_count() <= 2);
+}
+
+/// Protocol v2 over TCP: methods / list / open / stat / get / batch-get,
+/// plus per-frame errors, through the real listener and `ServeClient`.
+#[test]
+fn tcp_protocol_v2_end_to_end() {
+    use tensorcodec::store::client::ServeClient;
+    let dir = build_store_dir("tcp");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = StoreServeConfig {
+        policy: small_policy(),
+        cache_bytes: usize::MAX,
+        allow_xla: false,
+        max_conns: 1,
+    };
+    let dir2 = dir.clone();
+    let srv = std::thread::spawn(move || serve_store_listener(listener, &dir2, cfg));
+
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let methods = client.methods().unwrap();
+    assert!(methods.iter().any(|m| m == "ttd"));
+    assert!(methods.iter().any(|m| m == "tensorcodec"));
+    let names = client.list().unwrap();
+    assert_eq!(names.len(), 4);
+    assert!(names.iter().any(|n| n == "traffic_ttd"));
+
+    let meta = client.open("traffic_ttd").unwrap();
+    assert_eq!(meta.method, "ttd");
+    assert_eq!(meta.shape, vec![8, 6, 5]);
+    assert!(meta.bulk, "non-neural artifacts use the bulk path");
+    let stat = client.stat("video_cpd").unwrap();
+    assert_eq!(stat.method, "cpd");
+
+    // point + batch queries, bit-exact against the local reference
+    let mut coords = random_coords(&[8, 6, 5], 64, 9);
+    sort_coords(&mut coords);
+    let want = reference_values(&dir, "traffic_ttd", &coords);
+    let got = client.batch_get("traffic_ttd", &coords).unwrap();
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.to_bits(), w.to_bits());
+    }
+    let one = client.get("traffic_ttd", &coords[0]).unwrap();
+    assert_eq!(one.to_bits(), want[0].to_bits());
+    // a second artifact over the same connection
+    let v = client.get("video_cpd", &[0, 0, 0]).unwrap();
+    assert!(v.is_finite());
+
+    // per-frame errors keep the connection alive
+    assert!(client.get("traffic_ttd", &[0, 0]).is_err());
+    assert!(client.get("no_such_artifact", &[0, 0, 0]).is_err());
+    assert!(client.open("../etc").is_err());
+    let still = client.get("traffic_ttd", &coords[0]).unwrap();
+    assert_eq!(still.to_bits(), want[0].to_bits());
+
+    drop(client); // with max_conns=1 the server drains and exits
+    srv.join().expect("server thread").expect("server result");
+}
