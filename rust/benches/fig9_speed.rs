@@ -1,14 +1,180 @@
-//! Figure 9: total compression time per method.
+//! Figure 9: total compression time per method — plus the kernel-layer
+//! speed section introduced with the parallel cache-blocked kernels.
 //!
 //! Expected shape (paper): the neural methods (TensorCodec, NeuKron) are
 //! orders of magnitude slower than the classical decompositions, with
 //! TensorCodec faster than NeuKron; SZ3/TTHRESH are fastest.
+//!
+//! The kernels section measures the three parallelised hot paths at 1
+//! thread vs `TCZ_THREADS` (default: all cores) and writes the
+//! machine-readable `BENCH_kernels.json` so the perf trajectory is
+//! tracked from this PR on:
+//!   * GEMM GFLOP/s (cache-blocked `Mat::matmul`),
+//!   * bulk batch-decode throughput (`Artifact::decode_many` on a sorted
+//!     batch over a synthetic TT artifact),
+//!   * one training epoch (XLA runtime required; `null` without it).
+//! Each multithreaded run is asserted bit-identical to its single-thread
+//! run before the numbers are reported.
 
+use tensorcodec::baselines::ttd::TtCores;
+use tensorcodec::codec::factorized::TtArtifact;
+use tensorcodec::codec::Artifact;
 use tensorcodec::datasets::by_name;
-use tensorcodec::harness::{bench_epochs, bench_scale, run_baselines, run_tc};
-use tensorcodec::metrics::CsvSink;
+use tensorcodec::harness::{bench_epochs, bench_scale, random_coords, run_baselines, run_tc, sort_coords};
+use tensorcodec::kernels;
+use tensorcodec::linalg::Mat;
+use tensorcodec::metrics::{CsvSink, Timer};
+use tensorcodec::util::Pcg64;
+
+const GEMM_N: usize = 384;
+const DECODE_BATCH: usize = 1 << 14;
+
+fn synthetic_tt(shape: &[usize], rank: usize, seed: u64) -> TtArtifact {
+    let mut rng = Pcg64::seeded(seed);
+    let d = shape.len();
+    let mut ranks = vec![rank; d + 1];
+    ranks[0] = 1;
+    ranks[d] = 1;
+    let cores: Vec<Vec<f64>> = (0..d)
+        .map(|k| {
+            (0..ranks[k] * shape[k] * ranks[k + 1])
+                .map(|_| rng.normal() as f64 * 0.3)
+                .collect()
+        })
+        .collect();
+    TtArtifact::new(
+        TtCores {
+            shape: shape.to_vec(),
+            ranks,
+            cores,
+        },
+        0.0,
+    )
+}
+
+/// GEMM GFLOP/s at a given thread budget (median of 3 runs).
+fn gemm_gflops(threads: usize) -> (f64, Mat) {
+    kernels::set_threads(threads);
+    let mut rng = Pcg64::seeded(9);
+    let a = Mat::gaussian(GEMM_N, GEMM_N, &mut rng);
+    let b = Mat::gaussian(GEMM_N, GEMM_N, &mut rng);
+    let flops = 2.0 * (GEMM_N as f64).powi(3);
+    let mut best = f64::INFINITY;
+    let mut out = a.matmul(&b); // warm-up + result for the bit check
+    for _ in 0..3 {
+        let t = Timer::start();
+        out = a.matmul(&b);
+        best = best.min(t.seconds());
+    }
+    (flops / best / 1e9, out)
+}
+
+/// Bulk decode throughput (entries/s) at a given thread budget.
+fn decode_throughput(threads: usize) -> (f64, Vec<f32>) {
+    kernels::set_threads(threads);
+    let shape = vec![1usize << 10; 3];
+    let mut artifact = synthetic_tt(&shape, 8, 5);
+    let mut coords = random_coords(&shape, DECODE_BATCH, 55);
+    sort_coords(&mut coords);
+    let mut out = Vec::new();
+    artifact.decode_many(&coords, &mut out); // warm-up
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        out.clear();
+        let t = Timer::start();
+        artifact.decode_many(&coords, &mut out);
+        best = best.min(t.seconds());
+    }
+    (DECODE_BATCH as f64 / best, out)
+}
+
+/// One TensorCodec epoch at a given thread budget (needs the XLA
+/// runtime). Returns wall-clock seconds plus the trained parameter bits
+/// (for the cross-thread equality assertion), or None without the AOT
+/// artifacts.
+fn epoch_run(threads: usize) -> Option<(f64, Vec<Vec<u32>>)> {
+    kernels::set_threads(threads);
+    let tensor = by_name("uber", 0.08, 7).ok()?;
+    let t = Timer::start();
+    let run = run_tc(&tensor, 6, 6, 1).ok()?;
+    let secs = t.seconds();
+    let bits = run
+        .model
+        .params
+        .bufs
+        .iter()
+        .map(|b| b.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    Some((secs, bits))
+}
+
+fn json_num(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x.is_finite() => format!("{x:.4}"),
+        _ => "null".to_string(),
+    }
+}
+
+fn kernels_section() {
+    let n_threads = kernels::max_threads().max(2);
+    println!("=== Kernel layer: 1 thread vs {n_threads} threads ===");
+
+    let (g1, out1) = gemm_gflops(1);
+    let (gn, outn) = gemm_gflops(n_threads);
+    assert_eq!(out1.data, outn.data, "GEMM must be bit-identical across threads");
+    println!("GEMM {GEMM_N}x{GEMM_N}x{GEMM_N}: {g1:>6.2} GFLOP/s @1t   {gn:>6.2} GFLOP/s @{n_threads}t   ({:.2}x)", gn / g1);
+
+    let (d1, v1) = decode_throughput(1);
+    let (dn, vn) = decode_throughput(n_threads);
+    assert_eq!(
+        v1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        vn.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "bulk decode must be bit-identical across threads"
+    );
+    println!(
+        "decode_many {DECODE_BATCH} sorted entries: {:>9.0} e/s @1t   {:>9.0} e/s @{n_threads}t   ({:.2}x)",
+        d1,
+        dn,
+        dn / d1
+    );
+
+    let r1 = epoch_run(1);
+    let rn = if r1.is_some() { epoch_run(n_threads) } else { None };
+    let (e1, en) = match (&r1, &rn) {
+        (Some((a, bits1)), Some((b, bitsn))) => {
+            assert_eq!(bits1, bitsn, "trained θ must be bit-identical across threads");
+            println!("train epoch (uber @0.08): {a:>6.2}s @1t   {b:>6.2}s @{n_threads}t   ({:.2}x)", a / b);
+            (Some(*a), Some(*b))
+        }
+        _ => {
+            println!("train epoch: skipped (XLA runtime unavailable)");
+            (None, None)
+        }
+    };
+    kernels::set_threads(0);
+
+    let json = format!(
+        "{{\n  \"threads\": {n_threads},\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {}\n}}\n",
+        json_num(Some(g1)),
+        json_num(Some(gn)),
+        json_num(Some(gn / g1)),
+        json_num(Some(d1)),
+        json_num(Some(dn)),
+        json_num(Some(dn / d1)),
+        json_num(e1),
+        json_num(en),
+        json_num(match (e1, en) {
+            (Some(a), Some(b)) if b > 0.0 => Some(a / b),
+            _ => None,
+        }),
+    );
+    std::fs::write("BENCH_kernels.json", json).expect("write BENCH_kernels.json");
+    println!("json -> BENCH_kernels.json");
+}
 
 fn main() {
+    kernels_section();
+
     let scale = bench_scale();
     let epochs = bench_epochs();
     let datasets = ["uber", "air", "action", "activity"];

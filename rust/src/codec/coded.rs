@@ -155,6 +155,29 @@ impl Codec for TthreshCodec {
         }
     }
 
+    fn peek_meta(&self, payload: &[u8], _payload_len: usize) -> Result<super::ArtifactMeta> {
+        let mut c = Cursor::new(payload);
+        let shape = read_shape(&mut c)?;
+        let d = shape.len();
+        let ranks = c.u64_vec(d)?;
+        if ranks.iter().zip(&shape).any(|(&r, &n)| r == 0 || r > n) {
+            bail!("bad Tucker ranks");
+        }
+        let bits = c.u32()?;
+        if !(2..=16).contains(&bits) {
+            bail!("bad quantiser bits {bits}");
+        }
+        // the header persists the paper-accounting size directly
+        let coded_bytes = c.u64()? as usize;
+        Ok(ArtifactMeta {
+            method: "tthresh",
+            shape,
+            size_bytes: coded_bytes,
+            fitness: None,
+            seconds: 0.0,
+        })
+    }
+
     fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {
         let mut c = Cursor::new(payload);
         let shape = read_shape(&mut c)?;
@@ -328,6 +351,30 @@ impl Codec for SzCodec {
                 closest_to_bytes(&cfg.sz_grid, target, build)
             }
         }
+    }
+
+    fn peek_meta(&self, payload: &[u8], payload_len: usize) -> Result<super::ArtifactMeta> {
+        let mut c = Cursor::new(payload);
+        let shape = read_shape(&mut c)?;
+        let step = c.f32()?;
+        if !step.is_finite() || step <= 0.0 {
+            bail!("bad quantiser step {step}");
+        }
+        // payload = shape_header (1 + 8d) | step (4) | n_out (8) |
+        //           outliers (4·n_out) | clen (8) | coded (clen);
+        // the reported size is clen + 4·n_out + 16 — recoverable from the
+        // declared payload length without touching the streams.
+        let header = 1 + 8 * shape.len();
+        let Some(size_bytes) = payload_len.checked_sub(header + 4) else {
+            bail!("sz payload shorter than its header");
+        };
+        Ok(ArtifactMeta {
+            method: "sz",
+            shape,
+            size_bytes,
+            fitness: None,
+            seconds: 0.0,
+        })
     }
 
     fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {

@@ -78,6 +78,72 @@ pub fn artifact_from_bytes(bytes: &[u8]) -> Result<Box<dyn Artifact>> {
         .with_context(|| format!("decoding {} artifact", codec.name()))
 }
 
+/// Metadata from container bytes by parsing *only* the container and
+/// payload headers — no factor arrays, coded streams or model parameters
+/// are decoded ([`crate::codec::Codec::peek_meta`]). `bytes` may be a
+/// prefix of the file (64 KiB is plenty for every built-in codec);
+/// `total_len` is the full container length on disk.
+pub fn peek_meta(bytes: &[u8], total_len: usize) -> Result<crate::codec::ArtifactMeta> {
+    if bytes.len() < 4 {
+        bail!("not a .tcz file (too short)");
+    }
+    if &bytes[..4] == MAGIC_V1 {
+        // Legacy v1: the file *is* the model payload.
+        return crate::compress::format::peek_model_meta(bytes);
+    }
+    if &bytes[..4] != MAGIC_V2 {
+        bail!("not a .tcz file");
+    }
+    if bytes.len() < 16 {
+        bail!("tcz v2 header truncated");
+    }
+    let version = bytes[4];
+    if version != VERSION_V2 {
+        bail!("unsupported tcz version {version}");
+    }
+    let tag = bytes[5];
+    let payload_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    if total_len < 16 + payload_len {
+        bail!(
+            "tcz payload truncated: {} container bytes for a {payload_len}-byte payload",
+            total_len
+        );
+    }
+    let codec = by_tag(tag).with_context(|| format!("unknown codec tag {tag}"))?;
+    codec
+        .peek_meta(&bytes[16..], payload_len)
+        .with_context(|| format!("peeking {} artifact header", codec.name()))
+}
+
+/// How much of a container file [`peek_meta_file`] reads on the first
+/// attempt — enough for every built-in codec's header at any realistic
+/// tensor order.
+const PEEK_PREFIX: usize = 64 * 1024;
+
+/// [`peek_meta`] straight off a file: reads a small prefix, and only
+/// falls back to the whole file for exotic headers (or future codecs
+/// whose default peek decodes fully). A cold `stat` no longer pays a
+/// full container parse.
+pub fn peek_meta_file(path: &Path) -> Result<crate::codec::ArtifactMeta> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let total_len = f
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len() as usize;
+    let mut prefix = vec![0u8; PEEK_PREFIX.min(total_len)];
+    f.read_exact(&mut prefix)
+        .with_context(|| format!("read {}", path.display()))?;
+    match peek_meta(&prefix, total_len) {
+        Ok(meta) => Ok(meta),
+        Err(_) if total_len > prefix.len() => {
+            let bytes = std::fs::read(path)?;
+            peek_meta(&bytes, total_len)
+        }
+        Err(e) => Err(e),
+    }
+}
+
 /// Save an artifact to a v2 `.tcz` file.
 pub fn save_artifact(path: &Path, artifact: &dyn Artifact) -> Result<()> {
     let bytes = artifact_to_bytes(artifact)?;
@@ -152,7 +218,8 @@ pub(crate) fn put_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-/// Bounds-checked little-endian reader over a payload slice.
+/// Bounds-checked little-endian reader over a payload slice (peeks may
+/// hand it a prefix of the payload; reads past the prefix fail cleanly).
 pub(crate) struct Cursor<'a> {
     buf: &'a [u8],
     off: usize,
@@ -224,5 +291,84 @@ impl<'a> Cursor<'a> {
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
             .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{by_name, Budget, CodecConfig};
+    use crate::compress::toy_model;
+    use crate::tensor::DenseTensor;
+
+    /// `peek_meta` must agree with the full decode on every codec — from a
+    /// small file *prefix*, which structurally proves it reads only the
+    /// header (the factor arrays / coded streams are not even in memory).
+    #[test]
+    fn peek_meta_matches_full_load_from_a_prefix() {
+        let t = DenseTensor::random_uniform(&[7, 6, 5], 31);
+        let cases: Vec<(&str, Budget)> = vec![
+            ("ttd", Budget::Params(600)),
+            ("cpd", Budget::Params(150)),
+            ("tkd", Budget::Params(300)),
+            ("trd", Budget::Params(300)),
+            ("tthresh", Budget::Params(400)),
+            ("sz", Budget::RelError(0.2)),
+        ];
+        for (method, budget) in cases {
+            let codec = by_name(method).unwrap();
+            let a = codec.compress(&t, &budget, &CodecConfig::default()).unwrap();
+            let bytes = artifact_to_bytes(a.as_ref()).unwrap();
+            let prefix = &bytes[..bytes.len().min(160)];
+            let peeked = peek_meta(prefix, bytes.len()).unwrap();
+            let full = artifact_from_bytes(&bytes).unwrap().meta();
+            assert_eq!(peeked.method, full.method, "{method}");
+            assert_eq!(peeked.shape, full.shape, "{method}");
+            assert_eq!(peeked.size_bytes, full.size_bytes, "{method}");
+        }
+    }
+
+    #[test]
+    fn peek_meta_neural_v2_and_legacy_v1() {
+        use crate::codec::neural::NeuralArtifact;
+        let model = toy_model(17);
+        let a = NeuralArtifact::from_model(model.clone(), "tensorcodec");
+        // v2-wrapped neural payload
+        let bytes = artifact_to_bytes(&a).unwrap();
+        let peeked = peek_meta(&bytes[..160.min(bytes.len())], bytes.len()).unwrap();
+        assert_eq!(peeked.method, "tensorcodec");
+        assert_eq!(peeked.shape, vec![12, 9, 5]);
+        assert_eq!(peeked.size_bytes, model.reported_size_bytes());
+        assert_eq!(peeked.fitness, Some(model.fitness));
+        // bare legacy v1 bytes
+        let v1 = crate::compress::format::encode_model(&model).unwrap();
+        let peeked = peek_meta(&v1[..160.min(v1.len())], v1.len()).unwrap();
+        assert_eq!(peeked.method, "tensorcodec");
+        assert_eq!(peeked.size_bytes, model.reported_size_bytes());
+    }
+
+    #[test]
+    fn peek_meta_file_reads_header_only_prefix() {
+        let t = DenseTensor::random_uniform(&[6, 5, 4], 3);
+        let codec = by_name("ttd").unwrap();
+        let a = codec
+            .compress(&t, &Budget::Params(400), &CodecConfig::default())
+            .unwrap();
+        let dir = std::env::temp_dir().join("tcz_peek_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("peek.tcz");
+        save_artifact(&path, a.as_ref()).unwrap();
+        let meta = peek_meta_file(&path).unwrap();
+        assert_eq!(meta.method, "ttd");
+        assert_eq!(meta.shape, vec![6, 5, 4]);
+        assert_eq!(meta.size_bytes, a.size_bytes());
+        // corrupt junk still fails cleanly
+        std::fs::write(dir.join("junk.tcz"), b"XXXXXXXXXXXXXXXXXXXX").unwrap();
+        assert!(peek_meta_file(&dir.join("junk.tcz")).is_err());
+        // truncated *header* fails; a truncated payload body does not
+        // bother the peek (it never reads that far)
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(dir.join("cut.tcz"), &bytes[..10]).unwrap();
+        assert!(peek_meta_file(&dir.join("cut.tcz")).is_err());
     }
 }

@@ -47,8 +47,11 @@ impl Artifact for TtArtifact {
 
     fn decode_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
         self.bulk_calls += 1;
-        let mut chain = TtChain::new(&self.tt);
-        decode_sorted_scatter(coords, out, |idx| chain.entry(idx) as f32);
+        let tt = &self.tt;
+        decode_sorted_scatter(coords, out, || {
+            let mut chain = TtChain::new(tt);
+            move |idx: &[usize]| chain.entry(idx) as f32
+        });
     }
 
     fn decode_many_calls(&self) -> u64 {
@@ -131,6 +134,29 @@ impl Codec for TtdCodec {
         }
     }
 
+    fn peek_meta(&self, payload: &[u8], _payload_len: usize) -> Result<super::ArtifactMeta> {
+        let mut c = Cursor::new(payload);
+        let shape = read_shape(&mut c)?;
+        let d = shape.len();
+        let ranks = c.u64_vec(d + 1)?;
+        if ranks[0] != 1 || ranks[d] != 1 {
+            bail!("bad TT boundary ranks");
+        }
+        let mut params = 0usize;
+        for k in 0..d {
+            params = params
+                .checked_add(checked_len(&[ranks[k], shape[k], ranks[k + 1]])?)
+                .ok_or_else(|| anyhow::anyhow!("TT parameter count overflow"))?;
+        }
+        Ok(ArtifactMeta {
+            method: "ttd",
+            size_bytes: params.saturating_mul(8),
+            shape,
+            fitness: None,
+            seconds: 0.0,
+        })
+    }
+
     fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {
         let mut c = Cursor::new(payload);
         let shape = read_shape(&mut c)?;
@@ -186,8 +212,11 @@ impl Artifact for CpArtifact {
 
     fn decode_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
         self.bulk_calls += 1;
-        let mut chain = CpChain::new(&self.cp);
-        decode_sorted_scatter(coords, out, |idx| chain.entry(idx) as f32);
+        let cp = &self.cp;
+        decode_sorted_scatter(coords, out, || {
+            let mut chain = CpChain::new(cp);
+            move |idx: &[usize]| chain.entry(idx) as f32
+        });
     }
 
     fn decode_many_calls(&self) -> u64 {
@@ -268,6 +297,30 @@ impl Codec for CpdCodec {
         }
     }
 
+    fn peek_meta(&self, payload: &[u8], _payload_len: usize) -> Result<super::ArtifactMeta> {
+        let mut c = Cursor::new(payload);
+        let shape = read_shape(&mut c)?;
+        // plain u64 (not `count`): a peek over a file prefix must not
+        // bound-check the rank against bytes it did not read
+        let rank = c.u64()? as usize;
+        if rank == 0 {
+            bail!("CP rank must be positive");
+        }
+        let mut params = 0usize;
+        for &n in &shape {
+            params = params
+                .checked_add(checked_len(&[n, rank])?)
+                .ok_or_else(|| anyhow::anyhow!("CP parameter count overflow"))?;
+        }
+        Ok(ArtifactMeta {
+            method: "cpd",
+            size_bytes: params.saturating_mul(8),
+            shape,
+            fitness: None,
+            seconds: 0.0,
+        })
+    }
+
     fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {
         let mut c = Cursor::new(payload);
         let shape = read_shape(&mut c)?;
@@ -320,8 +373,11 @@ impl Artifact for TuckerArtifact {
 
     fn decode_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
         self.bulk_calls += 1;
-        let mut chain = TuckerChain::new(&self.model);
-        decode_sorted_scatter(coords, out, |idx| chain.entry(idx) as f32);
+        let model = &self.model;
+        decode_sorted_scatter(coords, out, || {
+            let mut chain = TuckerChain::new(model);
+            move |idx: &[usize]| chain.entry(idx) as f32
+        });
     }
 
     fn decode_many_calls(&self) -> u64 {
@@ -407,6 +463,29 @@ impl Codec for TuckerCodec {
         }
     }
 
+    fn peek_meta(&self, payload: &[u8], _payload_len: usize) -> Result<super::ArtifactMeta> {
+        let mut c = Cursor::new(payload);
+        let shape = read_shape(&mut c)?;
+        let d = shape.len();
+        let ranks = c.u64_vec(d)?;
+        if ranks.iter().zip(&shape).any(|(&r, &n)| r == 0 || r > n) {
+            bail!("bad Tucker ranks");
+        }
+        let mut params = checked_len(&ranks)?;
+        for (&n, &r) in shape.iter().zip(&ranks) {
+            params = params
+                .checked_add(checked_len(&[n, r])?)
+                .ok_or_else(|| anyhow::anyhow!("Tucker parameter count overflow"))?;
+        }
+        Ok(ArtifactMeta {
+            method: "tkd",
+            size_bytes: params.saturating_mul(8),
+            shape,
+            fitness: None,
+            seconds: 0.0,
+        })
+    }
+
     fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {
         let mut c = Cursor::new(payload);
         let shape = read_shape(&mut c)?;
@@ -464,8 +543,11 @@ impl Artifact for TrArtifact {
 
     fn decode_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
         self.bulk_calls += 1;
-        let mut chain = TrChain::new(&self.tr);
-        decode_sorted_scatter(coords, out, |idx| chain.entry(idx) as f32);
+        let tr = &self.tr;
+        decode_sorted_scatter(coords, out, || {
+            let mut chain = TrChain::new(tr);
+            move |idx: &[usize]| chain.entry(idx) as f32
+        });
     }
 
     fn decode_many_calls(&self) -> u64 {
@@ -544,6 +626,28 @@ impl Codec for TringCodec {
                 rel_error_search(t, e, 32, build)
             }
         }
+    }
+
+    fn peek_meta(&self, payload: &[u8], _payload_len: usize) -> Result<super::ArtifactMeta> {
+        let mut c = Cursor::new(payload);
+        let shape = read_shape(&mut c)?;
+        let rank = c.u64()? as usize;
+        if rank == 0 {
+            bail!("ring rank must be positive");
+        }
+        let mut params = 0usize;
+        for &n in &shape {
+            params = params
+                .checked_add(checked_len(&[n, rank, rank])?)
+                .ok_or_else(|| anyhow::anyhow!("TR parameter count overflow"))?;
+        }
+        Ok(ArtifactMeta {
+            method: "trd",
+            size_bytes: params.saturating_mul(8),
+            shape,
+            fitness: None,
+            seconds: 0.0,
+        })
     }
 
     fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {

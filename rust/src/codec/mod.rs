@@ -189,6 +189,27 @@ pub trait Codec: Sync {
     ) -> Result<Box<dyn Artifact>>;
     /// Deserialise a container payload written by this codec's artifacts.
     fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>>;
+
+    /// Parse only the payload *header* (shape, ranks, size fields) into
+    /// metadata — no factor arrays, coded streams or model parameters are
+    /// decoded. `payload` may be a prefix of the full payload;
+    /// `payload_len` is the full declared length (some codecs derive their
+    /// coded size from it). The `stat` fast path: a cold metadata probe is
+    /// O(header), not O(artifact).
+    ///
+    /// The default decodes the whole artifact (and therefore needs the
+    /// full payload); every built-in codec overrides it with a real
+    /// header parse.
+    fn peek_meta(&self, payload: &[u8], payload_len: usize) -> Result<ArtifactMeta> {
+        if payload.len() < payload_len {
+            anyhow::bail!(
+                "{}: metadata peek needs the full payload ({} < {payload_len})",
+                self.name(),
+                payload.len()
+            );
+        }
+        Ok(self.read_artifact(&payload[..payload_len])?.meta())
+    }
 }
 
 /// All registered codecs: TensorCodec first, then the seven baselines in
@@ -209,22 +230,74 @@ pub fn registry() -> &'static [&'static dyn Codec] {
     &REGISTRY
 }
 
-/// Decode `coords` through `eval` in lexicographic order, scattering the
-/// results back into request order — the shared skeleton of every
-/// [`Artifact::decode_many`] override (prefix-reuse chains are fastest on
-/// a sorted batch; correctness does not depend on the input order).
-pub(crate) fn decode_sorted_scatter(
+/// Coordinates per decode chunk before the batch is worth splitting
+/// across the pool — shared by every chain-evaluator bulk path (the
+/// factorised artifacts here, the neural `Decompressor::get_many`).
+/// Fixed (never thread-count-derived): the chunk layout is part of the
+/// bit-determinism contract.
+pub(crate) const DECODE_GRAIN: usize = 1024;
+
+/// Cut points for splitting a sorted batch of `n` rows into parallel
+/// chunks: fixed `grain`-sized cuts, each snapped forward (by at most a
+/// quarter grain) to the next row whose *leading* coordinate differs from
+/// its predecessor — so a shared-prefix run rarely straddles two chunks
+/// and each chain evaluator restarts cold at most once per chunk. Cuts
+/// depend only on the data and the grain, never on the thread count.
+///
+/// `differs(i)` reports whether sorted row `i` starts a new leading
+/// coordinate relative to row `i − 1`.
+pub(crate) fn prefix_cuts(n: usize, grain: usize, differs: impl Fn(usize) -> bool) -> Vec<usize> {
+    let mut cuts = vec![0usize];
+    let mut next = grain.max(1);
+    while next < n {
+        let limit = (next + grain / 4).min(n);
+        let mut cut = next;
+        while cut < limit && !differs(cut) {
+            cut += 1;
+        }
+        if cut >= n {
+            break;
+        }
+        cuts.push(cut);
+        next = cut + grain.max(1);
+    }
+    cuts.push(n);
+    cuts
+}
+
+/// Decode `coords` through per-chunk chain evaluators in lexicographic
+/// order, scattering the results back into request order — the shared
+/// skeleton of every [`Artifact::decode_many`] override. The sorted batch
+/// is split at shared-prefix boundaries ([`prefix_cuts`]) and the chunks
+/// fan out over the [`crate::kernels`] pool, one fresh evaluator from
+/// `make_eval` per chunk. Because every chain evaluator is bit-identical
+/// to an evaluation from scratch, any split point — and therefore any
+/// thread count — produces the same bytes as the serial walk.
+pub(crate) fn decode_sorted_scatter<E>(
     coords: &[Vec<usize>],
     out: &mut Vec<f32>,
-    mut eval: impl FnMut(&[usize]) -> f32,
-) {
-    let mut order: Vec<usize> = (0..coords.len()).collect();
+    make_eval: impl Fn() -> E + Sync,
+) where
+    E: FnMut(&[usize]) -> f32,
+{
+    let n = coords.len();
+    let mut order: Vec<usize> = (0..n).collect();
     order.sort_unstable_by(|&a, &b| coords[a].cmp(&coords[b]));
     let base = out.len();
-    out.resize(base + coords.len(), 0.0);
-    for &i in &order {
-        out[base + i] = eval(&coords[i]);
-    }
+    out.resize(base + n, 0.0);
+    let cuts = prefix_cuts(n, DECODE_GRAIN, |i| {
+        coords[order[i]][0] != coords[order[i - 1]][0]
+    });
+    let optr = crate::kernels::SendPtr::new(out[base..].as_mut_ptr());
+    let order = &order;
+    crate::kernels::parallel_jobs(cuts.len() - 1, |c| {
+        let mut eval = make_eval();
+        for &i in &order[cuts[c]..cuts[c + 1]] {
+            // SAFETY: `order` is a permutation of 0..n — each output slot
+            // is written by exactly one chunk.
+            unsafe { *optr.add(i) = eval(&coords[i]) };
+        }
+    });
 }
 
 /// Look a codec up by canonical name or alias (case-insensitive).

@@ -154,6 +154,14 @@ impl Codec for TensorCodecCodec {
         Ok(Box::new(NeuralArtifact::from_model(model, "tensorcodec")))
     }
 
+    fn peek_meta(&self, payload: &[u8], _payload_len: usize) -> Result<ArtifactMeta> {
+        let meta = crate::compress::format::peek_model_meta(payload)?;
+        if meta.method != "tensorcodec" {
+            bail!("payload is not a TensorCodec model");
+        }
+        Ok(meta)
+    }
+
     fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {
         let model = crate::compress::format::decode_model(payload)?;
         if model.params.variant != Variant::Tc {
@@ -205,6 +213,14 @@ impl Codec for NeuKronCodec {
             .unwrap_or(NK_H[0]);
         let model = neukron::fit(t, &tcfg)?;
         Ok(Box::new(NeuralArtifact::from_model(model, "neukron")))
+    }
+
+    fn peek_meta(&self, payload: &[u8], _payload_len: usize) -> Result<ArtifactMeta> {
+        let meta = crate::compress::format::peek_model_meta(payload)?;
+        if meta.method != "neukron" {
+            bail!("payload is not a NeuKron model");
+        }
+        Ok(meta)
     }
 
     fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>> {

@@ -195,6 +195,63 @@ pub fn decode_model(bytes: &[u8]) -> Result<CompressedModel> {
     })
 }
 
+/// Parse only the fixed v1 header (everything before the fold factors)
+/// into [`crate::codec::ArtifactMeta`] — no parameters, factors or
+/// permutations are decoded, so a prefix of ~`25 + 8d` bytes suffices.
+/// The parameter count is derived from the variant's shape table, exactly
+/// as [`decode_model`] would materialise it.
+pub fn peek_model_meta(bytes: &[u8]) -> Result<crate::codec::ArtifactMeta> {
+    let mut off = 0usize;
+    let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+        if *off + n > bytes.len() {
+            bail!("tcz header truncated at offset {}", *off);
+        }
+        let s = &bytes[*off..*off + n];
+        *off += n;
+        Ok(s)
+    };
+    if take(&mut off, 4)? != MAGIC {
+        bail!("not a .tcz file");
+    }
+    let version = take(&mut off, 1)?[0];
+    if version != VERSION {
+        bail!("unsupported tcz version {version}");
+    }
+    let variant = match take(&mut off, 1)?[0] {
+        0 => Variant::Tc,
+        1 => Variant::Nk,
+        v => bail!("bad variant {v}"),
+    };
+    let dtype = ParamDtype::from_tag(take(&mut off, 1)?[0])?;
+    let d = take(&mut off, 1)?[0] as usize;
+    let dp = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+    let vocab = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+    let h = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+    let r = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+    let _mean = take(&mut off, 4)?;
+    let _std = take(&mut off, 4)?;
+    let fitness = f64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+    let mut shape = Vec::with_capacity(d);
+    for _ in 0..d {
+        shape.push(u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize);
+    }
+    let num_params: usize = variant
+        .param_shapes(dp, vocab, h, r)
+        .iter()
+        .map(|s| s.iter().product::<usize>())
+        .sum();
+    Ok(crate::codec::ArtifactMeta {
+        method: match variant {
+            Variant::Tc => "tensorcodec",
+            Variant::Nk => "neukron",
+        },
+        size_bytes: super::reported_size_bytes_for(num_params, dtype, &shape),
+        shape,
+        fitness: Some(fitness),
+        seconds: 0.0,
+    })
+}
+
 /// Deserialise a v1 `.tcz` file.
 pub fn load_tcz(path: &Path) -> Result<CompressedModel> {
     let mut bytes = Vec::new();

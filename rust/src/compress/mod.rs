@@ -9,6 +9,10 @@
 
 pub mod format;
 
+/// Rows per chunk when folding coordinates to digit strings (elementwise
+/// disjoint writes — the grain affects wall-clock only, never bits).
+const FOLD_GRAIN: usize = 512;
+
 use crate::config::ParamDtype;
 use crate::nttd::infer::{forward_one, InferScratch};
 use crate::nttd::ModelParams;
@@ -34,21 +38,30 @@ pub struct CompressedModel {
     pub epochs_run: usize,
 }
 
+/// The paper's size accounting for a neural model, computable from the
+/// header alone: `num_params` at `dtype` precision + Σ_k N_k⌈log2 N_k⌉
+/// bits for the orderings (modes with `N_k ≤ 1` have exactly one ordering
+/// and are charged 0 bits). Shared by [`CompressedModel`] and the
+/// header-only metadata peek ([`format::peek_model_meta`]).
+pub fn reported_size_bytes_for(num_params: usize, dtype: ParamDtype, orig_shape: &[usize]) -> usize {
+    let param_bytes = num_params * dtype.bytes();
+    let perm_bits: usize = orig_shape
+        .iter()
+        .filter(|&&n| n > 1)
+        .map(|&n| n * ceil_log2(n) as usize)
+        .sum();
+    param_bytes + perm_bits.div_ceil(8)
+}
+
 impl CompressedModel {
-    /// Compressed size in bytes under the paper's accounting:
-    /// parameters at `param_dtype` precision + Σ_k N_k⌈log2 N_k⌉ bits.
-    /// Modes with `N_k ≤ 1` have exactly one ordering and are charged 0
-    /// bits (the paper's `N_k log2 N_k` is 0 there).
+    /// Compressed size in bytes under the paper's accounting (see
+    /// [`reported_size_bytes_for`]).
     pub fn reported_size_bytes(&self) -> usize {
-        let param_bytes = self.params.num_params() * self.param_dtype.bytes();
-        let perm_bits: usize = self
-            .spec
-            .orig_shape
-            .iter()
-            .filter(|&&n| n > 1)
-            .map(|&n| n * ceil_log2(n) as usize)
-            .sum();
-        param_bytes + perm_bits.div_ceil(8)
+        reported_size_bytes_for(
+            self.params.num_params(),
+            self.param_dtype,
+            &self.spec.orig_shape,
+        )
     }
 
     /// Parameters-only size (for parity with decomposition baselines that
@@ -103,24 +116,36 @@ impl Decompressor {
     /// Decode a batch of entries at original coordinates, appending one
     /// value per coordinate vector to `out` in request order.
     ///
-    /// The batch is folded to digit strings, decoded in lexicographic
-    /// digit order through [`crate::nttd::infer::PrefixDecoder`] (LSTM and
-    /// TT-chain state of the longest shared prefix is reused), and
-    /// scattered back — bit-identical to calling [`Decompressor::get`]
-    /// per entry.
+    /// The batch is folded to digit strings (rows fan out over the kernel
+    /// pool), decoded in lexicographic digit order through
+    /// [`crate::nttd::infer::PrefixDecoder`] (LSTM and TT-chain state of
+    /// the longest shared prefix is reused) with the sorted batch split at
+    /// shared-prefix boundaries across the pool — one decoder per chunk —
+    /// and scattered back. Bit-identical to calling [`Decompressor::get`]
+    /// per entry at every thread count (a chain restart reproduces the
+    /// from-scratch arithmetic exactly).
     pub fn get_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
         let dp = self.model.spec.dp;
         let d = self.model.spec.d();
         let n = coords.len();
         let mut digits = vec![0i32; n * dp];
-        for (row, c) in coords.iter().enumerate() {
-            debug_assert_eq!(c.len(), d);
-            for (k, &i) in c.iter().enumerate() {
-                self.reordered[k] = self.inverses[k][i];
-            }
-            self.model
-                .spec
-                .fold_index_i32(&self.reordered, &mut digits[row * dp..(row + 1) * dp]);
+        {
+            let (spec, inverses) = (&self.model.spec, &self.inverses);
+            let dig_ptr = crate::kernels::SendPtr::new(digits.as_mut_ptr());
+            crate::kernels::parallel_chunks(n, FOLD_GRAIN, |_, rows| {
+                let mut reordered = vec![0usize; d];
+                for row in rows {
+                    let c = &coords[row];
+                    debug_assert_eq!(c.len(), d);
+                    for (k, r) in reordered.iter_mut().enumerate() {
+                        *r = inverses[k][c[k]];
+                    }
+                    // SAFETY: row `row` owns digits[row*dp..(row+1)*dp].
+                    unsafe {
+                        spec.fold_index_i32(&reordered, dig_ptr.slice(row * dp, dp));
+                    }
+                }
+            });
         }
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_unstable_by(|&a, &b| {
@@ -128,11 +153,21 @@ impl Decompressor {
         });
         let base = out.len();
         out.resize(base + n, 0.0);
-        let mut dec = crate::nttd::infer::PrefixDecoder::new(&self.model.params);
-        for &row in &order {
-            let y = dec.decode(&digits[row * dp..(row + 1) * dp]);
-            out[base + row] = self.model.mean + self.model.std * y;
-        }
+        let cuts = crate::codec::prefix_cuts(n, crate::codec::DECODE_GRAIN, |i| {
+            digits[order[i] * dp] != digits[order[i - 1] * dp]
+        });
+        let (params, mean, std) = (&self.model.params, self.model.mean, self.model.std);
+        let (digits, order) = (&digits, &order);
+        let optr = crate::kernels::SendPtr::new(out[base..].as_mut_ptr());
+        crate::kernels::parallel_jobs(cuts.len() - 1, |c| {
+            let mut dec = crate::nttd::infer::PrefixDecoder::new(params);
+            for &row in &order[cuts[c]..cuts[c + 1]] {
+                let y = dec.decode(&digits[row * dp..(row + 1) * dp]);
+                // SAFETY: `order` is a permutation — slot `row` is written
+                // by exactly one chunk.
+                unsafe { *optr.add(row) = mean + std * y };
+            }
+        });
     }
 
     /// Decode every entry into a dense tensor (small-tensor convenience).

@@ -1,28 +1,57 @@
 //! Dynamic request batcher for the decompression service.
 //!
-//! Decode requests (entry coordinates) arrive on a channel from many client
-//! threads; the batcher coalesces them into blocks of up to `max_batch`
-//! entries, flushing either when full or after `max_wait` — the same
-//! batching policy a serving system (vLLM-style router) applies, adapted to
-//! entry decoding. Backpressure is a bounded queue: producers block when
-//! the service is saturated.
+//! Decode requests arrive on a channel from many client threads; the
+//! batcher coalesces them into blocks of up to `max_batch` *entries*,
+//! flushing either when full or after `max_wait` — the same batching
+//! policy a serving system (vLLM-style router) applies, adapted to entry
+//! decoding. Backpressure is a bounded queue: producers block when the
+//! service is saturated.
+//!
+//! Two frame kinds share the queue:
+//!
+//! * [`DecodeRequest::One`] — one coordinate vector, one scalar reply
+//!   (the point-query path).
+//! * [`DecodeRequest::Block`] — a whole pre-validated coordinate block
+//!   with a *single* `Vec<f32>` reply channel. A protocol v2 `batch-get`
+//!   maps to exactly one of these, so a 10k-entry block costs one
+//!   allocation and one channel instead of 10k of each (the PR 2
+//!   per-coordinate reply-channel debt).
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
 
-/// One decode request: entry coordinates + a reply channel.
-pub struct DecodeRequest {
-    pub coords: Vec<usize>,
-    pub reply: SyncSender<f32>,
+/// One decode frame: a point query or a coordinate block.
+pub enum DecodeRequest {
+    /// One entry's coordinates + a scalar reply channel.
+    One {
+        coords: Vec<usize>,
+        reply: SyncSender<f32>,
+    },
+    /// A coordinate block + one reply channel for the whole block
+    /// (values in block order).
+    Block {
+        coords: Vec<Vec<usize>>,
+        reply: SyncSender<Vec<f32>>,
+    },
 }
 
-/// Client half of the request/reply handshake: enqueue one request, await
-/// its reply. Shared by every front-end over a decode queue
+impl DecodeRequest {
+    /// Number of entries this frame asks for.
+    pub fn entries(&self) -> usize {
+        match self {
+            DecodeRequest::One { .. } => 1,
+            DecodeRequest::Block { coords, .. } => coords.len(),
+        }
+    }
+}
+
+/// Client half of the request/reply handshake: enqueue one point request,
+/// await its reply. Shared by every front-end over a decode queue
 /// (`DecodeHandle`, the store shards).
 pub fn request_one(tx: &SyncSender<DecodeRequest>, coords: &[usize]) -> Result<f32> {
     let (rtx, rrx) = sync_channel(1);
-    tx.send(DecodeRequest {
+    tx.send(DecodeRequest::One {
         coords: coords.to_vec(),
         reply: rtx,
     })
@@ -31,30 +60,68 @@ pub fn request_one(tx: &SyncSender<DecodeRequest>, coords: &[usize]) -> Result<f
     rrx.recv().context("decode service dropped reply")
 }
 
-/// Enqueue a whole block before awaiting the first reply (so the batcher
-/// coalesces it into as few flushes as possible); replies come back in
-/// request order. Callers validate coordinates first.
-pub fn request_many(tx: &SyncSender<DecodeRequest>, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
-    let mut replies = Vec::with_capacity(coords.len());
-    for c in coords {
-        let (rtx, rrx) = sync_channel(1);
-        tx.send(DecodeRequest {
-            coords: c.clone(),
-            reply: rtx,
-        })
-        .ok()
-        .context("decode service stopped")?;
-        replies.push(rrx);
+/// Enqueue a whole block as one [`DecodeRequest::Block`] frame and await
+/// its single reply — one channel per *request*, not per coordinate.
+/// Values come back in request order. Callers validate coordinates first.
+pub fn request_block(tx: &SyncSender<DecodeRequest>, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
+    if coords.is_empty() {
+        return Ok(Vec::new());
     }
-    replies
-        .into_iter()
-        .map(|r| r.recv().context("decode service dropped reply"))
-        .collect()
+    let (rtx, rrx) = sync_channel(1);
+    tx.send(DecodeRequest::Block {
+        coords: coords.to_vec(),
+        reply: rtx,
+    })
+    .ok()
+    .context("decode service stopped")?;
+    let vals = rrx.recv().context("decode service dropped reply")?;
+    if vals.len() != coords.len() {
+        bail!(
+            "decode service returned {} values for a {}-entry block",
+            vals.len(),
+            coords.len()
+        );
+    }
+    Ok(vals)
+}
+
+/// Flatten a batch of frames into one coordinate list (the worker decodes
+/// it with a single `decode_many`) …
+pub fn flatten_batch(batch: &[DecodeRequest]) -> Vec<Vec<usize>> {
+    let total: usize = batch.iter().map(|r| r.entries()).sum();
+    let mut coords = Vec::with_capacity(total);
+    for req in batch {
+        match req {
+            DecodeRequest::One { coords: c, .. } => coords.push(c.clone()),
+            DecodeRequest::Block { coords: cs, .. } => coords.extend(cs.iter().cloned()),
+        }
+    }
+    coords
+}
+
+/// … and fan the decoded values back out: one scalar per point frame, one
+/// `Vec` per block frame, in frame order. Dead clients are ignored.
+pub fn reply_batch(batch: Vec<DecodeRequest>, values: &[f32]) {
+    let mut off = 0usize;
+    for req in batch {
+        match req {
+            DecodeRequest::One { reply, .. } => {
+                let _ = reply.send(values[off]); // client may have gone
+                off += 1;
+            }
+            DecodeRequest::Block { coords, reply } => {
+                let n = coords.len();
+                let _ = reply.send(values[off..off + n].to_vec());
+                off += n;
+            }
+        }
+    }
 }
 
 /// Batching policy knobs.
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
+    /// Flush threshold in *entries* (a block frame counts its length).
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_depth: usize,
@@ -75,11 +142,12 @@ pub fn request_channel(policy: &BatchPolicy) -> (SyncSender<DecodeRequest>, Rece
     sync_channel(policy.queue_depth)
 }
 
-/// Collect the next batch from the queue: waits for the first request
-/// (polling `stop`), then drains greedily until `max_batch` or `max_wait`
-/// elapses. Returns `None` when the channel is closed and drained, or when
-/// `stop` is set while idle (live handles would otherwise keep the channel
-/// open forever).
+/// Collect the next batch from the queue: waits for the first frame
+/// (polling `stop`), then drains greedily until `max_batch` entries
+/// accumulate or `max_wait` elapses. A single oversized block frame is
+/// taken whole (it cannot be split). Returns `None` when the channel is
+/// closed and drained, or when `stop` is set while idle (live handles
+/// would otherwise keep the channel open forever).
 pub fn next_batch(
     rx: &Receiver<DecodeRequest>,
     policy: &BatchPolicy,
@@ -97,16 +165,20 @@ pub fn next_batch(
             Err(RecvTimeoutError::Disconnected) => return None,
         }
     };
+    let mut entries = first.entries();
     let mut batch = Vec::with_capacity(policy.max_batch.min(1024));
     batch.push(first);
     let deadline = Instant::now() + policy.max_wait;
-    while batch.len() < policy.max_batch {
+    while entries < policy.max_batch {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(req) => batch.push(req),
+            Ok(req) => {
+                entries += req.entries();
+                batch.push(req);
+            }
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
@@ -124,6 +196,17 @@ mod tests {
         AtomicBool::new(false)
     }
 
+    fn point(i: usize) -> (DecodeRequest, Receiver<f32>) {
+        let (rtx, rrx) = sync_channel(1);
+        (
+            DecodeRequest::One {
+                coords: vec![i],
+                reply: rtx,
+            },
+            rrx,
+        )
+    }
+
     #[test]
     fn batches_coalesce() {
         let stop = stop_flag();
@@ -135,12 +218,8 @@ mod tests {
         let (tx, rx) = request_channel(&policy);
         let producer = thread::spawn(move || {
             for i in 0..20usize {
-                let (rtx, _rrx) = sync_channel(1);
-                tx.send(DecodeRequest {
-                    coords: vec![i],
-                    reply: rtx,
-                })
-                .unwrap();
+                let (req, _rrx) = point(i);
+                tx.send(req).unwrap();
             }
         });
         producer.join().unwrap();
@@ -155,6 +234,89 @@ mod tests {
     }
 
     #[test]
+    fn block_frames_count_entries_toward_the_flush_threshold() {
+        let stop = stop_flag();
+        let policy = BatchPolicy {
+            max_batch: 10,
+            max_wait: Duration::from_millis(50),
+            queue_depth: 64,
+        };
+        let (tx, rx) = request_channel(&policy);
+        let (rtx, _rrx) = sync_channel(1);
+        tx.send(DecodeRequest::Block {
+            coords: (0..9).map(|i| vec![i]).collect(),
+            reply: rtx,
+        })
+        .unwrap();
+        let (req, _r1) = point(100);
+        tx.send(req).unwrap();
+        let (req, _r2) = point(101);
+        tx.send(req).unwrap();
+        // 9-entry block + 1 point reach the 10-entry threshold; the second
+        // point stays queued for the next flush
+        let b = next_batch(&rx, &policy, &stop).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.iter().map(|r| r.entries()).sum::<usize>(), 10);
+        let b = next_batch(&rx, &policy, &stop).unwrap();
+        assert_eq!(b.len(), 1);
+        drop(tx);
+    }
+
+    #[test]
+    fn flatten_and_reply_roundtrip() {
+        let (rtx1, rrx1) = sync_channel(1);
+        let (rtxb, rrxb) = sync_channel(1);
+        let (rtx2, rrx2) = sync_channel(1);
+        let batch = vec![
+            DecodeRequest::One {
+                coords: vec![7],
+                reply: rtx1,
+            },
+            DecodeRequest::Block {
+                coords: vec![vec![1], vec![2], vec![3]],
+                reply: rtxb,
+            },
+            DecodeRequest::One {
+                coords: vec![9],
+                reply: rtx2,
+            },
+        ];
+        let flat = flatten_batch(&batch);
+        assert_eq!(flat, vec![vec![7], vec![1], vec![2], vec![3], vec![9]]);
+        reply_batch(batch, &[0.5, 1.0, 2.0, 3.0, 9.5]);
+        assert_eq!(rrx1.recv().unwrap(), 0.5);
+        assert_eq!(rrxb.recv().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(rrx2.recv().unwrap(), 9.5);
+    }
+
+    #[test]
+    fn request_block_one_channel_per_block() {
+        let policy = BatchPolicy::default();
+        let (tx, rx) = request_channel(&policy);
+        let worker = thread::spawn(move || {
+            let stop = stop_flag();
+            let batch = next_batch(&rx, &policy, &stop).unwrap();
+            // the whole block arrived as ONE frame
+            assert_eq!(batch.len(), 1);
+            assert_eq!(batch[0].entries(), 5);
+            let flat = flatten_batch(&batch);
+            let values: Vec<f32> = flat.iter().map(|c| c[0] as f32).collect();
+            reply_batch(batch, &values);
+        });
+        let coords: Vec<Vec<usize>> = (0..5).map(|i| vec![i * 10]).collect();
+        let got = request_block(&tx, &coords).unwrap();
+        assert_eq!(got, vec![0.0, 10.0, 20.0, 30.0, 40.0]);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn empty_block_short_circuits() {
+        let policy = BatchPolicy::default();
+        let (tx, _rx) = request_channel(&policy);
+        assert_eq!(request_block(&tx, &[]).unwrap(), Vec::<f32>::new());
+    }
+
+    #[test]
     fn flushes_on_timeout() {
         let stop = stop_flag();
         let policy = BatchPolicy {
@@ -163,12 +325,8 @@ mod tests {
             queue_depth: 16,
         };
         let (tx, rx) = request_channel(&policy);
-        let (rtx, _rrx) = sync_channel(1);
-        tx.send(DecodeRequest {
-            coords: vec![0],
-            reply: rtx,
-        })
-        .unwrap();
+        let (req, _rrx) = point(0);
+        tx.send(req).unwrap();
         let t0 = Instant::now();
         let b = next_batch(&rx, &policy, &stop).unwrap();
         assert_eq!(b.len(), 1);

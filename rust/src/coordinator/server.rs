@@ -14,7 +14,8 @@
 //! turns point queries into full artifact batches.
 
 use super::batcher::{
-    next_batch, request_channel, request_many, request_one, BatchPolicy, DecodeRequest,
+    next_batch, reply_batch, request_block, request_channel, request_one, BatchPolicy,
+    DecodeRequest,
 };
 use crate::codec::Artifact;
 use crate::compress::CompressedModel;
@@ -53,14 +54,15 @@ impl DecodeHandle {
         request_one(&self.tx, coords)
     }
 
-    /// Decode a batch of entries, returned in request order. All requests
-    /// are enqueued before the first reply is awaited, so the batcher
-    /// coalesces the whole block into as few XLA executions as possible.
+    /// Decode a batch of entries, returned in request order. The whole
+    /// block travels as one [`DecodeRequest::Block`] frame with a single
+    /// reply channel, so the batcher coalesces it into as few XLA
+    /// executions as possible at one allocation per block.
     pub fn get_many(&self, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
         for c in coords {
             self.check_arity(c)?;
         }
-        request_many(&self.tx, coords)
+        request_block(&self.tx, coords)
     }
 }
 
@@ -112,26 +114,37 @@ impl DecodeServer {
                 let mut coords_flat: Vec<usize> = Vec::new();
                 let mut values: Vec<f32> = Vec::new();
                 while let Some(batch) = next_batch(&rx, &policy, &stop_worker) {
+                    // flatten in place (no per-coordinate Vec clones — the
+                    // allocation class the block frame exists to avoid)
                     coords_flat.clear();
+                    let mut entries = 0usize;
                     for req in &batch {
-                        coords_flat.extend_from_slice(&req.coords);
+                        entries += req.entries();
+                        match req {
+                            DecodeRequest::One { coords, .. } => {
+                                coords_flat.extend_from_slice(coords)
+                            }
+                            DecodeRequest::Block { coords, .. } => {
+                                for c in coords {
+                                    coords_flat.extend_from_slice(c);
+                                }
+                            }
+                        }
                     }
                     values.clear();
                     let t0 = crate::metrics::Timer::start();
                     {
                         let fwd = match &mut small {
-                            Some(s) if batch.len() <= s.batch() => s,
+                            Some(s) if entries <= s.batch() => s,
                             _ => &mut bulk,
                         };
                         let mut recon = Reconstructor::over_exec(fwd, &model);
                         recon.decode(&coords_flat, &mut values)?;
                     }
                     stats.execute_seconds += t0.seconds();
-                    stats.requests += batch.len() as u64;
+                    stats.requests += entries as u64;
                     stats.batches += 1;
-                    for (req, &v) in batch.iter().zip(&values) {
-                        let _ = req.reply.send(v); // client may have gone
-                    }
+                    reply_batch(batch, &values);
                 }
                 Ok(stats)
             })?;

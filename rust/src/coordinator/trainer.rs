@@ -7,19 +7,31 @@
 //! re-initialised after every accepted reorder round, exactly as the paper
 //! prescribes (the loss surface changes under π).
 //!
-//! All heavy compute flows through the AOT artifacts; this module only
-//! builds index/target batches and makes decisions.
+//! All heavy compute flows through the AOT artifacts; this module builds
+//! index/target batches and makes decisions. The host-side hot loops —
+//! minibatch assembly in `run_epoch`, candidate scoring in
+//! `eval_and_apply_swaps`, index building in [`Reconstructor`] — fan out
+//! over the [`crate::kernels`] pool with fixed chunking and precomputed
+//! stride tables, so a multi-core trainer produces bit-identical models
+//! at every `TCZ_THREADS` setting (the fused XLA step itself is one call
+//! per batch; its inputs are what we parallelise).
 
 pub use crate::config::TrainConfig;
 
 use crate::compress::CompressedModel;
+use crate::kernels;
 use crate::metrics::Timer;
 use crate::nttd::{ModelParams, Variant};
 use crate::reorder::{lsh, tsp, Orders};
 use crate::runtime::{ForwardExec, Runtime, TrainExec};
-use crate::tensor::{DenseTensor, FoldSpec};
+use crate::tensor::{DenseTensor, FoldSpec, StrideTable};
 use crate::util::Pcg64;
 use anyhow::{Context, Result};
+
+/// Rows per parallel chunk when assembling train/decode index batches.
+/// Fixed (never thread-count-derived): chunk boundaries are part of the
+/// determinism contract.
+const ROW_GRAIN: usize = 256;
 
 /// Compression trainer for one tensor.
 pub struct Trainer<'a> {
@@ -35,12 +47,13 @@ pub struct Trainer<'a> {
     std: f32,
     rng: Pcg64,
     init_seconds: f64,
+    /// Precomputed row-major strides of the (reordered) tensor shape —
+    /// the per-row unravel no longer rebuilds the divisor chain per mode.
+    strides: StrideTable,
     /// scratch buffers (avoid per-batch allocation)
     idx_buf: Vec<i32>,
     tgt_buf: Vec<f32>,
     w_buf: Vec<f32>,
-    coord_buf: Vec<usize>,
-    orig_buf: Vec<usize>,
 }
 
 impl<'a> Trainer<'a> {
@@ -115,11 +128,10 @@ impl<'a> Trainer<'a> {
             std,
             rng,
             init_seconds,
+            strides: StrideTable::new(tensor.shape()),
             idx_buf: vec![0i32; b * dp],
             tgt_buf: vec![0f32; b],
             w_buf: vec![0f32; b],
-            coord_buf: vec![0usize; tensor.order()],
-            orig_buf: vec![0usize; tensor.order()],
         })
     }
 
@@ -131,23 +143,35 @@ impl<'a> Trainer<'a> {
         &self.orders
     }
 
-    /// Fill one training row: entry `lin` of the reordered tensor X_π.
-    #[inline]
-    fn fill_row(&mut self, row: usize, lin: usize) {
+    /// Fill training rows `0..take` from entries `lins` of the reordered
+    /// tensor X_π, fanned out over the kernel pool. Each row writes its
+    /// own disjoint slices of the batch buffers and the per-row work is
+    /// the unchanged serial sequence (stride-table unravel → π⁻¹ → fold →
+    /// normalise), so the assembled batch is bit-identical at every
+    /// thread count.
+    fn fill_rows(&mut self, lins: &[u32]) {
         let dp = self.spec.dp;
-        // unravel lin into reordered coordinates
-        let mut rem = lin;
-        for k in (0..self.tensor.order()).rev() {
-            let n = self.tensor.shape()[k];
-            self.coord_buf[k] = rem % n;
-            rem /= n;
-        }
-        self.orders.to_original(&self.coord_buf, &mut self.orig_buf);
-        self.spec
-            .fold_index_i32(&self.coord_buf, &mut self.idx_buf[row * dp..(row + 1) * dp]);
-        let x = self.tensor.at(&self.orig_buf);
-        self.tgt_buf[row] = (x - self.mean) / self.std;
-        self.w_buf[row] = 1.0;
+        let d = self.tensor.order();
+        let (spec, orders, tensor, strides) =
+            (&self.spec, &self.orders, self.tensor, &self.strides);
+        let (mean, std) = (self.mean, self.std);
+        let idx_ptr = kernels::SendPtr::new(self.idx_buf.as_mut_ptr());
+        let tgt_ptr = kernels::SendPtr::new(self.tgt_buf.as_mut_ptr());
+        let w_ptr = kernels::SendPtr::new(self.w_buf.as_mut_ptr());
+        kernels::parallel_chunks(lins.len(), ROW_GRAIN, |_, rows| {
+            let mut coord = vec![0usize; d];
+            let mut orig = vec![0usize; d];
+            for row in rows {
+                strides.unravel_into(lins[row] as usize, &mut coord);
+                orders.to_original(&coord, &mut orig);
+                // SAFETY: row `row` owns idx[row*dp..], tgt[row], w[row].
+                unsafe {
+                    spec.fold_index_i32(&coord, idx_ptr.slice(row * dp, dp));
+                    *tgt_ptr.add(row) = (tensor.at(&orig) - mean) / std;
+                    *w_ptr.add(row) = 1.0;
+                }
+            }
+        });
     }
 
     /// One epoch of minibatch Adam over a shuffled entry order.
@@ -168,9 +192,7 @@ impl<'a> Trainer<'a> {
         let mut done = 0usize;
         while done < n && batch_i < max_batches {
             let take = (n - done).min(b);
-            for row in 0..take {
-                self.fill_row(row, entry_order[done + row] as usize);
-            }
+            self.fill_rows(&entry_order[done..done + take]);
             // pad ragged tail with zero-weight duplicates of row 0
             if take < b {
                 let dp = self.spec.dp;
@@ -237,61 +259,91 @@ impl<'a> Trainer<'a> {
                 }
             }
         }
-        // Build predictions for both slice positions of every pair.
+        // Build predictions for both slice positions of every pair — one
+        // pair per pool chunk, each writing its own 2·s disjoint idx rows.
         let n_rows = pairs.len() * 2 * s;
         let mut idx = vec![0i32; n_rows * dp];
-        let mut coord = vec![0usize; d];
-        for (pi, &(a, b)) in pairs.iter().enumerate() {
-            for (which, pos) in [a, b].into_iter().enumerate() {
-                for si in 0..s {
-                    let mut ri = 0usize;
-                    for m in 0..d {
-                        coord[m] = if m == k {
-                            pos
-                        } else {
-                            let v = rest[si * (d - 1) + ri];
-                            ri += 1;
-                            v
-                        };
+        {
+            let spec = &self.spec;
+            let rest = &rest;
+            let idx_ptr = kernels::SendPtr::new(idx.as_mut_ptr());
+            kernels::parallel_chunks(pairs.len(), 1, |_, prange| {
+                let mut coord = vec![0usize; d];
+                for pi in prange {
+                    let (a, b) = pairs[pi];
+                    for (which, pos) in [a, b].into_iter().enumerate() {
+                        for si in 0..s {
+                            let mut ri = 0usize;
+                            for (m, c) in coord.iter_mut().enumerate() {
+                                *c = if m == k {
+                                    pos
+                                } else {
+                                    let v = rest[si * (d - 1) + ri];
+                                    ri += 1;
+                                    v
+                                };
+                            }
+                            let row = (pi * 2 + which) * s + si;
+                            // SAFETY: pair `pi` owns rows pi*2s .. (pi+1)*2s.
+                            unsafe {
+                                spec.fold_index_i32(&coord, idx_ptr.slice(row * dp, dp));
+                            }
+                        }
                     }
-                    let row = (pi * 2 + which) * s + si;
-                    self.spec
-                        .fold_index_i32(&coord, &mut idx[row * dp..(row + 1) * dp]);
                 }
-            }
+            });
         }
         let mut preds = Vec::with_capacity(n_rows);
         self.fwd.run(&idx, &mut preds)?;
-        // Targets under the current and swapped orders.
-        let mut accepted = 0usize;
-        let mut orig = vec![0usize; d];
-        for (pi, &(a, b)) in pairs.iter().enumerate() {
-            let mut delta = 0.0f64;
-            for si in 0..s {
-                let p_a = preds[(pi * 2) * s + si] as f64;
-                let p_b = preds[(pi * 2 + 1) * s + si] as f64;
-                // target values at (a, rest) and (b, rest) under current π
-                let mut ri = 0usize;
-                for m in 0..d {
-                    coord[m] = if m == k {
-                        a
-                    } else {
-                        let v = rest[si * (d - 1) + ri];
-                        ri += 1;
-                        v
-                    };
+        // Score every pair in parallel: the LSH pairs are disjoint
+        // positions of mode k, so no pair's targets depend on another
+        // pair's accepted swap — each Δ keeps its serial per-sample
+        // accumulation order and lands in its own slot.
+        let mut deltas = vec![0.0f64; pairs.len()];
+        {
+            let (orders, tensor) = (&self.orders, self.tensor);
+            let (mean, std) = (self.mean, self.std);
+            let (rest, preds) = (&rest, &preds);
+            let dptr = kernels::SendPtr::new(deltas.as_mut_ptr());
+            kernels::parallel_chunks(pairs.len(), 1, |_, prange| {
+                let mut coord = vec![0usize; d];
+                let mut orig = vec![0usize; d];
+                for pi in prange {
+                    let (a, b) = pairs[pi];
+                    let mut delta = 0.0f64;
+                    for si in 0..s {
+                        let p_a = preds[(pi * 2) * s + si] as f64;
+                        let p_b = preds[(pi * 2 + 1) * s + si] as f64;
+                        // target values at (a, rest) and (b, rest) under current π
+                        let mut ri = 0usize;
+                        for (m, c) in coord.iter_mut().enumerate() {
+                            *c = if m == k {
+                                a
+                            } else {
+                                let v = rest[si * (d - 1) + ri];
+                                ri += 1;
+                                v
+                            };
+                        }
+                        orders.to_original(&coord, &mut orig);
+                        let x_a = ((tensor.at(&orig) - mean) / std) as f64;
+                        coord[k] = b;
+                        orders.to_original(&coord, &mut orig);
+                        let x_b = ((tensor.at(&orig) - mean) / std) as f64;
+                        // Δ = [swapped] − [current]
+                        delta += (p_a - x_b).powi(2) + (p_b - x_a).powi(2)
+                            - (p_a - x_a).powi(2)
+                            - (p_b - x_b).powi(2);
+                    }
+                    // SAFETY: pair `pi` owns deltas[pi].
+                    unsafe { *dptr.add(pi) = delta };
                 }
-                self.orders.to_original(&coord, &mut orig);
-                let x_a = ((self.tensor.at(&orig) - self.mean) / self.std) as f64;
-                coord[k] = b;
-                self.orders.to_original(&coord, &mut orig);
-                let x_b = ((self.tensor.at(&orig) - self.mean) / self.std) as f64;
-                // Δ = [swapped] − [current]
-                delta += (p_a - x_b).powi(2) + (p_b - x_a).powi(2)
-                    - (p_a - x_a).powi(2)
-                    - (p_b - x_b).powi(2);
-            }
-            if delta < 0.0 {
+            });
+        }
+        // Apply beneficial swaps in pair order (serial: π is mutated).
+        let mut accepted = 0usize;
+        for (pi, &(a, b)) in pairs.iter().enumerate() {
+            if deltas[pi] < 0.0 {
                 self.orders.swap(k, a, b);
                 accepted += 1;
             }
@@ -378,35 +430,48 @@ pub struct Reconstructor<'e, 'm> {
     fwd: &'e mut ForwardExec,
     model: &'m CompressedModel,
     inverses: Vec<Vec<usize>>,
+    /// Precomputed strides of the original shape (reconstruct_all path).
+    strides: StrideTable,
 }
 
 impl<'e, 'm> Reconstructor<'e, 'm> {
     /// Wrap an already-bound forward executor (params must match `model`).
     pub fn over_exec(fwd: &'e mut ForwardExec, model: &'m CompressedModel) -> Self {
         let inverses = model.orders.inverses();
+        let strides = StrideTable::new(&model.spec.orig_shape);
         Reconstructor {
             fwd,
             model,
             inverses,
+            strides,
         }
     }
 
     /// Decode a batch of entries at original coordinates (row-major
-    /// `[n, d]`), appending denormalised values to `out`.
+    /// `[n, d]`), appending denormalised values to `out`. Index assembly
+    /// (π⁻¹ + fold) fans out over the kernel pool; row slices are
+    /// disjoint, so the batch is bit-identical at every thread count.
     pub fn decode(&mut self, orig_idx: &[usize], out: &mut Vec<f32>) -> Result<()> {
         let d = self.model.spec.d();
         let dp = self.model.spec.dp;
         assert_eq!(orig_idx.len() % d, 0);
         let n = orig_idx.len() / d;
         let mut idx = vec![0i32; n * dp];
-        let mut reordered = vec![0usize; d];
-        for row in 0..n {
-            for k in 0..d {
-                reordered[k] = self.inverses[k][orig_idx[row * d + k]];
-            }
-            self.model
-                .spec
-                .fold_index_i32(&reordered, &mut idx[row * dp..(row + 1) * dp]);
+        {
+            let (spec, inverses) = (&self.model.spec, &self.inverses);
+            let idx_ptr = kernels::SendPtr::new(idx.as_mut_ptr());
+            kernels::parallel_chunks(n, ROW_GRAIN, |_, rows| {
+                let mut reordered = vec![0usize; d];
+                for row in rows {
+                    for (k, r) in reordered.iter_mut().enumerate() {
+                        *r = inverses[k][orig_idx[row * d + k]];
+                    }
+                    // SAFETY: row `row` owns idx[row*dp..(row+1)*dp].
+                    unsafe {
+                        spec.fold_index_i32(&reordered, idx_ptr.slice(row * dp, dp));
+                    }
+                }
+            });
         }
         let start = out.len();
         self.fwd.run(&idx, out)?;
@@ -425,23 +490,27 @@ impl<'e, 'm> Reconstructor<'e, 'm> {
         let chunk = self.fwd.batch() * 4;
         let mut out = Vec::with_capacity(n);
         let mut idx = vec![0i32; chunk * dp];
-        let mut coord = vec![0usize; d];
-        let mut reordered = vec![0usize; d];
         let mut done = 0usize;
         while done < n {
             let take = (n - done).min(chunk);
-            for row in 0..take {
-                let mut rem = done + row;
-                for k in (0..d).rev() {
-                    coord[k] = rem % shape[k];
-                    rem /= shape[k];
-                }
-                for k in 0..d {
-                    reordered[k] = self.inverses[k][coord[k]];
-                }
-                self.model
-                    .spec
-                    .fold_index_i32(&reordered, &mut idx[row * dp..(row + 1) * dp]);
+            {
+                let (spec, inverses, strides) =
+                    (&self.model.spec, &self.inverses, &self.strides);
+                let idx_ptr = kernels::SendPtr::new(idx.as_mut_ptr());
+                kernels::parallel_chunks(take, ROW_GRAIN, |_, rows| {
+                    let mut coord = vec![0usize; d];
+                    let mut reordered = vec![0usize; d];
+                    for row in rows {
+                        strides.unravel_into(done + row, &mut coord);
+                        for (k, r) in reordered.iter_mut().enumerate() {
+                            *r = inverses[k][coord[k]];
+                        }
+                        // SAFETY: row `row` owns idx[row*dp..(row+1)*dp].
+                        unsafe {
+                            spec.fold_index_i32(&reordered, idx_ptr.slice(row * dp, dp));
+                        }
+                    }
+                });
             }
             self.fwd.run(&idx[..take * dp], &mut out)?;
             done += take;

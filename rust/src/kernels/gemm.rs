@@ -1,0 +1,169 @@
+//! Cache-blocked f64 GEMM microkernels behind [`crate::linalg::Mat`].
+//!
+//! Both kernels keep the *per-element accumulation order* of the naive
+//! serial loops (increasing inner index, same zero-skip), so they are
+//! bit-identical to the pre-kernel `Mat::matmul` / `t_matmul` — blocking
+//! and threading only reorder *which* output rows are computed when,
+//! never the floating-point op sequence inside one output element:
+//!
+//! * `matmul` — row-panel parallel `ikj` with the k loop tiled so a
+//!   `KC × n` panel of B stays hot in cache across each row panel.
+//! * `t_matmul` — `AᵀB` without materialising the transpose: each chunk
+//!   packs its `A` column panel into a contiguous *transposed panel*
+//!   (one strided sweep) and then streams B rows, instead of striding
+//!   down A once per accumulation.
+
+use super::{parallel_chunks, SendPtr};
+use crate::linalg::Mat;
+
+/// Rows of output per parallel chunk.
+const MR: usize = 16;
+/// Height of the B panel kept hot across a row sweep.
+const KC: usize = 256;
+
+/// `a * b`, cache-blocked and parallel. Bit-identical to the serial `ikj`
+/// loop with the `a == 0` skip at every thread count.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
+    let (kk, n) = (a.cols, b.cols);
+    let mut out = Mat::zeros(a.rows, n);
+    let outp = SendPtr::new(out.data.as_mut_ptr());
+    parallel_chunks(a.rows, MR, |_, rows| {
+        // SAFETY: each chunk owns output rows `rows` exclusively.
+        let orows = unsafe { outp.slice(rows.start * n, rows.len() * n) };
+        let mut k0 = 0;
+        while k0 < kk {
+            let k1 = (k0 + KC).min(kk);
+            for (ri, i) in rows.clone().enumerate() {
+                let arow = &a.data[i * kk..(i + 1) * kk];
+                let orow = &mut orows[ri * n..(ri + 1) * n];
+                for (k, &av) in arow.iter().enumerate().take(k1).skip(k0) {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[k * n..(k + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            k0 = k1;
+        }
+    });
+    out
+}
+
+/// `aᵀ * b` without materialising the transpose: transposed-panel packing
+/// plus the same blocked row sweep. Bit-identical to the serial r-major
+/// loop with the `a == 0` skip at every thread count.
+pub fn t_matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "t_matmul dim mismatch");
+    let (m, n, rr) = (a.cols, b.cols, a.rows);
+    let mut out = Mat::zeros(m, n);
+    let outp = SendPtr::new(out.data.as_mut_ptr());
+    parallel_chunks(m, MR, |_, cols| {
+        // SAFETY: chunk `cols` owns output rows `cols` (= A columns).
+        let orows = unsafe { outp.slice(cols.start * n, cols.len() * n) };
+        let mut panel = vec![0.0f64; cols.len() * KC.min(rr.max(1))];
+        let mut r0 = 0;
+        while r0 < rr {
+            let r1 = (r0 + KC).min(rr);
+            let kw = r1 - r0;
+            // pack the transposed A panel: panel[ci * kw + (r - r0)] = a[r, i]
+            for (ci, i) in cols.clone().enumerate() {
+                for r in r0..r1 {
+                    panel[ci * kw + (r - r0)] = a.data[r * m + i];
+                }
+            }
+            for ci in 0..cols.len() {
+                let orow = &mut orows[ci * n..(ci + 1) * n];
+                let ap = &panel[ci * kw..(ci + 1) * kw];
+                for (ro, &av) in ap.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[(r0 + ro) * n..(r0 + ro + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            r0 = r1;
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// The naive serial loops the kernels must reproduce bit for bit.
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for k in 0..a.cols {
+                let av = a.data[i * a.cols + k];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..b.cols {
+                    out.data[i * out.cols + j] += av * b.data[k * b.cols + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn naive_t_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.cols, b.cols);
+        for r in 0..a.rows {
+            for i in 0..a.cols {
+                let av = a.data[r * a.cols + i];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..b.cols {
+                    out.data[i * out.cols + j] += av * b.data[r * b.cols + j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matmul_bit_identical_to_naive() {
+        let mut rng = Pcg64::seeded(0);
+        // sizes straddling the KC and MR block edges, plus a zero-heavy one
+        for (m, k, n) in [(1, 1, 1), (17, 300, 33), (64, 256, 64), (50, 513, 7)] {
+            let a = Mat::gaussian(m, k, &mut rng);
+            let b = Mat::gaussian(k, n, &mut rng);
+            let fast = matmul(&a, &b);
+            let slow = naive_matmul(&a, &b);
+            for (x, y) in fast.data.iter().zip(&slow.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n})");
+            }
+        }
+        let mut a = Mat::gaussian(40, 290, &mut rng);
+        for v in a.data.iter_mut().step_by(3) {
+            *v = 0.0; // exercise the zero-skip path across block edges
+        }
+        let b = Mat::gaussian(290, 21, &mut rng);
+        assert_eq!(matmul(&a, &b).data, naive_matmul(&a, &b).data);
+    }
+
+    #[test]
+    fn blocked_t_matmul_bit_identical_to_naive() {
+        let mut rng = Pcg64::seeded(1);
+        for (r, m, n) in [(1, 1, 1), (300, 17, 33), (256, 64, 64), (513, 50, 7)] {
+            let a = Mat::gaussian(r, m, &mut rng);
+            let b = Mat::gaussian(r, n, &mut rng);
+            let fast = t_matmul(&a, &b);
+            let slow = naive_t_matmul(&a, &b);
+            for (x, y) in fast.data.iter().zip(&slow.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "({r},{m},{n})");
+            }
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Parallel cache-blocked kernels — the multi-core layer under every hot
+//! path (std-only, no dependencies).
+//!
+//! * [`pool`] — the scoped worker pool: a process-wide set of `tcz-kern-*`
+//!   threads executing chunk jobs borrowed from the submitter's stack,
+//!   with a `TCZ_THREADS` env knob / [`set_threads`] runtime override.
+//! * [`gemm`] — cache-blocked, transposed-panel f64 GEMM microkernels
+//!   behind [`crate::linalg::Mat::matmul`] / `t_matmul`, parallelised over
+//!   row panels.
+//! * The chunk helpers below — [`parallel_chunks`], [`parallel_jobs`],
+//!   [`parallel_sum`], [`parallel_map_reduce`] — which the trainer
+//!   (minibatch assembly, swap scoring), the `decode_many` chain
+//!   evaluators and the serving shards are built on.
+//!
+//! ## Bit-determinism
+//!
+//! Every helper here is bit-identical at every thread count: chunk
+//! boundaries are fixed by the input and a constant grain (never by the
+//! thread count), each chunk is computed by exactly one thread with
+//! unchanged serial arithmetic, and reductions fold per-chunk partials in
+//! chunk-index order on the calling thread. `TCZ_THREADS=1` and
+//! `TCZ_THREADS=64` produce the same bytes everywhere — asserted end to
+//! end by `rust/tests/determinism.rs`.
+
+pub mod gemm;
+pub mod pool;
+
+pub use pool::{max_threads, pool, set_threads, Pool, SendPtr, MAX_POOL};
+
+use std::ops::Range;
+
+/// Run `f(chunk_idx)` for every `chunk_idx in 0..chunks` on the pool,
+/// capped at [`max_threads`] participants. The building block for kernels
+/// whose chunk boundaries are data-dependent (e.g. shared-prefix cuts in
+/// the decode chains).
+pub fn parallel_jobs(chunks: usize, f: impl Fn(usize) + Sync) {
+    pool().run(chunks, max_threads(), &f);
+}
+
+/// Split `0..n` into fixed `grain`-sized chunks (the last may be ragged)
+/// and run `f(chunk_idx, range)` for each on the pool. Boundaries depend
+/// only on `n` and `grain`, so outputs are bit-identical at every thread
+/// count whenever chunks write disjoint data.
+pub fn parallel_chunks(n: usize, grain: usize, f: impl Fn(usize, Range<usize>) + Sync) {
+    if n == 0 {
+        return;
+    }
+    let grain = grain.max(1);
+    let chunks = n.div_ceil(grain);
+    pool().run(chunks, max_threads(), &|c| {
+        let start = c * grain;
+        let end = (start + grain).min(n);
+        f(c, start..end);
+    });
+}
+
+/// Order-stable parallel reduction: `map` produces one partial per fixed
+/// `grain`-sized block (computed in parallel), and `fold` combines the
+/// partials in block-index order on the calling thread — so the result is
+/// bit-identical at every thread count, including 1.
+pub fn parallel_map_reduce<T: Copy + Send + Sync>(
+    n: usize,
+    grain: usize,
+    init: T,
+    map: impl Fn(Range<usize>) -> T + Sync,
+    fold: impl FnMut(T, T) -> T,
+) -> T {
+    if n == 0 {
+        return init;
+    }
+    let grain = grain.max(1);
+    let chunks = n.div_ceil(grain);
+    let mut partials = vec![init; chunks];
+    let ptr = SendPtr::new(partials.as_mut_ptr());
+    pool().run(chunks, max_threads(), &|c| {
+        let start = c * grain;
+        let end = (start + grain).min(n);
+        // SAFETY: chunk `c` writes only `partials[c]`.
+        unsafe { *ptr.add(c) = map(start..end) };
+    });
+    partials.into_iter().reduce(fold).unwrap_or(init)
+}
+
+/// Blocked parallel sum of `map` over `0..n` (see [`parallel_map_reduce`]
+/// for the determinism contract). With `grain >= n` this degenerates to
+/// the plain serial sum.
+pub fn parallel_sum(n: usize, grain: usize, map: impl Fn(Range<usize>) -> f64 + Sync) -> f64 {
+    parallel_map_reduce(n, grain, 0.0, map, |a, b| a + b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn parallel_chunks_covers_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..10_001).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(hits.len(), 97, |_, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_sum_matches_blocked_serial_exactly() {
+        // the parallel fold must equal the serial fold over the same fixed
+        // blocks, bit for bit
+        let xs: Vec<f64> = (0..5000).map(|i| ((i * 2654435761_usize) as f64).sin()).collect();
+        let grain = 128;
+        let par = parallel_sum(xs.len(), grain, |r| xs[r].iter().sum::<f64>());
+        let mut serial = 0.0f64;
+        let mut start = 0;
+        while start < xs.len() {
+            let end = (start + grain).min(xs.len());
+            serial += xs[start..end].iter().sum::<f64>();
+            start = end;
+        }
+        assert_eq!(par.to_bits(), serial.to_bits());
+    }
+
+    #[test]
+    fn map_reduce_folds_in_chunk_order() {
+        // partial of chunk c is c+1; a non-commutative fold detects any
+        // out-of-order combination
+        let folded =
+            parallel_map_reduce(1000, 100, 0u64, |r| (r.start / 100) as u64 + 1, |a, b| {
+                a * 11 + b
+            });
+        let mut want = 1u64;
+        for d in 2..=10u64 {
+            want = want * 11 + d;
+        }
+        assert_eq!(folded, want);
+    }
+
+    #[test]
+    fn empty_input_is_identity() {
+        parallel_chunks(0, 8, |_, _| panic!("must not run"));
+        assert_eq!(parallel_sum(0, 8, |_| panic!("must not run")), 0.0);
+    }
+}

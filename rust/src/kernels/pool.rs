@@ -1,0 +1,419 @@
+//! The scoped worker pool behind every parallel kernel.
+//!
+//! One process-wide pool of `tcz-kern-*` threads executes type-erased
+//! *chunk jobs*: the submitting thread publishes a `Fn(usize)` closure and
+//! a chunk count, workers claim chunk indices from a shared cursor, and
+//! the submitter blocks until every chunk has run. The closure is borrowed
+//! from the submitter's stack (a scoped pool, not a task queue), so jobs
+//! can capture references to tensors, factor sets and scratch buffers
+//! without `Arc`-wrapping anything.
+//!
+//! ## Determinism contract
+//!
+//! Chunks are claimed dynamically, but every chunk index runs exactly once
+//! on exactly one thread. A kernel is therefore bit-identical at every
+//! thread count (including 1) as long as
+//!
+//! * chunk boundaries depend only on the input (never on the thread
+//!   count), and
+//! * chunks either write disjoint data, or their per-chunk results are
+//!   reduced in chunk-index order on the submitting thread.
+//!
+//! Every helper in [`crate::kernels`] is built on those two rules; the
+//! `TCZ_THREADS` knob can change between calls without changing a single
+//! output bit.
+//!
+//! ## Nesting and contention
+//!
+//! A parallel section started from inside a pool job, or while another
+//! thread holds the pool, runs inline on the caller — correctness never
+//! depends on the pool being free, and nested parallelism cannot
+//! deadlock. The pool is sized once (first use) for the hardware (or
+//! `TCZ_THREADS` when larger); per-call participation is capped by
+//! [`max_threads`], so the knob stays adjustable at runtime.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Hard ceiling on pool size — beyond this, coordination overhead beats
+/// any win on the kernel shapes this crate runs.
+pub const MAX_POOL: usize = 64;
+
+/// Runtime override for [`max_threads`] (0 = unset, fall back to the
+/// `TCZ_THREADS` env var, then to the hardware).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the thread budget for subsequent parallel kernels (the CLI
+/// `--threads` flag). `0` clears the override (env / hardware decide
+/// again). Outputs are bit-identical at every setting; only wall-clock
+/// changes.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n.min(MAX_POOL), Ordering::Relaxed);
+}
+
+fn hardware_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+fn env_threads() -> Option<usize> {
+    let s = std::env::var("TCZ_THREADS").ok()?;
+    let n = s.trim().parse::<usize>().ok()?;
+    (n > 0).then_some(n)
+}
+
+/// The thread budget parallel kernels may use right now: the
+/// [`set_threads`] override, else the `TCZ_THREADS` env var, else
+/// `available_parallelism()`.
+pub fn max_threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    env_threads().unwrap_or_else(hardware_threads).min(MAX_POOL)
+}
+
+/// A raw mutable pointer asserting `Send + Sync`, so parallel chunks can
+/// write disjoint regions of one buffer. The caller must guarantee the
+/// regions really are disjoint — the helpers in [`crate::kernels`] each
+/// document which index owns which region.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    /// Pointer to element `off`.
+    ///
+    /// # Safety
+    /// `off` must be in bounds of the allocation, and no other thread may
+    /// touch that element while the caller uses it.
+    pub unsafe fn add(self, off: usize) -> *mut T {
+        self.0.add(off)
+    }
+
+    /// Mutable slice of `len` elements starting at `off`.
+    ///
+    /// # Safety
+    /// The range must be in bounds and disjoint from every range any
+    /// other thread accesses; the backing buffer must outlive the use
+    /// (the parallel helpers block until all chunks finish, which is what
+    /// makes the borrow sound).
+    pub unsafe fn slice(self, off: usize, len: usize) -> &'static mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(off), len)
+    }
+}
+
+thread_local! {
+    /// True while this thread is executing pool chunks (worker threads
+    /// permanently; the submitter during its own participation). Parallel
+    /// sections entered under it run inline.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Counts finished chunks of one job; the submitter waits on it.
+struct Latch {
+    done: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new() -> Latch {
+        Latch {
+            done: Mutex::new(0),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn add(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let mut done = self.done.lock().expect("kernel latch");
+        *done += n;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self, target: usize) {
+        let mut done = self.done.lock().expect("kernel latch");
+        while *done < target {
+            done = self.cv.wait(done).expect("kernel latch");
+        }
+    }
+}
+
+/// Type-erased borrow of the submitter's chunk closure. The submitter
+/// blocks on the job's latch until every chunk has run, so the pointer is
+/// never dereferenced after the closure's scope ends.
+#[derive(Clone, Copy)]
+struct ClosurePtr(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for ClosurePtr {}
+unsafe impl Sync for ClosurePtr {}
+
+#[derive(Clone)]
+struct Job {
+    f: ClosurePtr,
+    chunks: usize,
+    /// Next unclaimed chunk index.
+    cursor: Arc<AtomicUsize>,
+    /// How many pool workers may join (the submitter is extra).
+    cap: usize,
+    joiners: Arc<AtomicUsize>,
+    latch: Arc<Latch>,
+    /// Set when any chunk panicked; the submitter re-panics after the
+    /// latch resolves instead of deadlocking on a never-finished chunk.
+    panicked: Arc<std::sync::atomic::AtomicBool>,
+}
+
+struct State {
+    job: Option<Job>,
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+}
+
+/// The worker pool. One per process (see [`pool`]); tests may build their
+/// own.
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Serialises submitters; `try_lock` losers run inline instead.
+    submit: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn run_chunks(job: &Job) {
+    let mut done = 0usize;
+    loop {
+        let c = job.cursor.fetch_add(1, Ordering::Relaxed);
+        if c >= job.chunks {
+            break;
+        }
+        // SAFETY: the submitter blocks on the latch until every chunk has
+        // run, so the closure behind the pointer is still alive. A panic
+        // still counts the chunk (and flags the job) so the latch always
+        // resolves — the submitter re-raises it.
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (*job.f.0)(c)
+        }));
+        if ok.is_err() {
+            job.panicked.store(true, Ordering::Release);
+        }
+        done += 1;
+    }
+    job.latch.add(done);
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IN_POOL.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().expect("kernel pool state");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(job) = st.job.clone() {
+                        seen = st.epoch;
+                        break job;
+                    }
+                    seen = st.epoch;
+                }
+                st = shared.work_cv.wait(st).expect("kernel pool state");
+            }
+        };
+        if job.joiners.fetch_add(1, Ordering::Relaxed) < job.cap {
+            run_chunks(&job);
+        }
+    }
+}
+
+impl Pool {
+    /// Spawn a pool with `n_workers` threads (the submitting thread always
+    /// participates too, so `n_workers = threads − 1`).
+    pub fn new(n_workers: usize) -> Pool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                epoch: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (0..n_workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("tcz-kern-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn kernel worker")
+            })
+            .collect();
+        Pool {
+            shared,
+            submit: Mutex::new(()),
+            handles,
+        }
+    }
+
+    /// Run `f(0) … f(chunks−1)`, each exactly once, across at most
+    /// `max_threads` threads (submitter included), blocking until every
+    /// chunk has run. Runs inline when the pool is busy, the section is
+    /// nested, or there is nothing to parallelise.
+    pub fn run(&self, chunks: usize, max_threads: usize, f: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        let inline = chunks == 1
+            || max_threads <= 1
+            || self.handles.is_empty()
+            || IN_POOL.with(|x| x.get());
+        if inline {
+            for c in 0..chunks {
+                f(c);
+            }
+            return;
+        }
+        let Ok(_guard) = self.submit.try_lock() else {
+            for c in 0..chunks {
+                f(c);
+            }
+            return;
+        };
+        let job = Job {
+            f: ClosurePtr(f as *const (dyn Fn(usize) + Sync)),
+            chunks,
+            cursor: Arc::new(AtomicUsize::new(0)),
+            cap: max_threads.min(chunks).saturating_sub(1).min(self.handles.len()),
+            joiners: Arc::new(AtomicUsize::new(0)),
+            latch: Arc::new(Latch::new()),
+            panicked: Arc::new(std::sync::atomic::AtomicBool::new(false)),
+        };
+        {
+            let mut st = self.shared.state.lock().expect("kernel pool state");
+            st.job = Some(job.clone());
+            st.epoch += 1;
+            self.shared.work_cv.notify_all();
+        }
+        IN_POOL.with(|x| x.set(true));
+        run_chunks(&job);
+        IN_POOL.with(|x| x.set(false));
+        job.latch.wait(job.chunks);
+        // Clear the published job so no stale pointer outlives this call
+        // (late-waking workers see `None` and go back to sleep; every
+        // chunk has already run).
+        {
+            let mut st = self.shared.state.lock().expect("kernel pool state");
+            st.job = None;
+        }
+        if job.panicked.load(Ordering::Acquire) {
+            panic!("a kernel pool chunk panicked (see worker thread output)");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("kernel pool state");
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide pool, spawned on first use. Sized for the hardware
+/// (or `TCZ_THREADS`, when larger at first use); per-call participation
+/// is capped by [`max_threads`], so the knob can shrink or grow the
+/// *effective* width at any time.
+pub fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let want = hardware_threads()
+            .max(env_threads().unwrap_or(0))
+            .max(THREAD_OVERRIDE.load(Ordering::Relaxed))
+            .min(MAX_POOL);
+        Pool::new(want.saturating_sub(1))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        let pool = Pool::new(3);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.run(hits.len(), 4, &|c| {
+            hits[c].fetch_add(1, Ordering::Relaxed);
+        });
+        for (c, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {c}");
+        }
+    }
+
+    #[test]
+    fn reusable_across_jobs_and_caps() {
+        let pool = Pool::new(2);
+        for cap in [1usize, 2, 8] {
+            let sum = AtomicU64::new(0);
+            pool.run(100, cap, &|c| {
+                sum.fetch_add(c as u64, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2, "cap {cap}");
+        }
+    }
+
+    #[test]
+    fn zero_and_one_chunk_inline() {
+        let pool = Pool::new(2);
+        pool.run(0, 8, &|_| panic!("no chunks to run"));
+        let ran = AtomicU64::new(0);
+        pool.run(1, 8, &|c| {
+            assert_eq!(c, 0);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_sections_run_inline_without_deadlock() {
+        let pool = Pool::new(2);
+        let total = AtomicU64::new(0);
+        pool.run(4, 4, &|_| {
+            // nested: must run inline on this thread, not deadlock
+            pool.run(8, 4, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn thread_override_roundtrip() {
+        let before = max_threads();
+        set_threads(3);
+        assert_eq!(max_threads(), 3);
+        set_threads(0);
+        let _ = before; // env/hardware default restored
+        assert!(max_threads() >= 1);
+    }
+}

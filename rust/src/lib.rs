@@ -24,6 +24,12 @@
 //! the benchmark harness and the decode server all share; adding a codec
 //! is a one-file change.
 //!
+//! The [`kernels`] module is the multi-core substrate under all of it: a
+//! scoped worker pool (`TCZ_THREADS` / `--threads`), cache-blocked GEMM
+//! behind [`linalg::Mat`], and deterministic chunk/reduce helpers that the
+//! trainer, the `decode_many` chain evaluators and the serving shards run
+//! on — bit-identical output at every thread count.
+//!
 //! The [`store`] module turns the registry into a serving system: an
 //! [`store::ArtifactStore`] LRU-caches many `.tcz` artifacts by name,
 //! per-artifact batch shards coalesce point queries into
@@ -39,6 +45,7 @@ pub mod codec;
 pub mod coding;
 pub mod harness;
 pub mod compress;
+pub mod kernels;
 pub mod config;
 pub mod coordinator;
 pub mod datasets;

@@ -65,45 +65,18 @@ impl Mat {
         out
     }
 
-    /// `self * other` (ikj loop order, cache-friendly for row-major).
+    /// `self * other` via the cache-blocked, multithreaded kernel
+    /// ([`crate::kernels::gemm`]). Bit-identical to the serial `ikj` loop
+    /// at every `TCZ_THREADS` setting.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
-        let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            let orow = i * out.cols;
-            for k in 0..self.cols {
-                let a = self.data[i * self.cols + k];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = k * other.cols;
-                for j in 0..other.cols {
-                    out.data[orow + j] += a * other.data[brow + j];
-                }
-            }
-        }
-        out
+        crate::kernels::gemm::matmul(self, other)
     }
 
-    /// `selfᵀ * other` without materialising the transpose.
+    /// `selfᵀ * other` without materialising the transpose — the
+    /// transposed-panel kernel in [`crate::kernels::gemm`], bit-identical
+    /// to the serial loop at every thread count.
     pub fn t_matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.rows, other.rows);
-        let mut out = Mat::zeros(self.cols, other.cols);
-        for r in 0..self.rows {
-            let arow = r * self.cols;
-            let brow = r * other.cols;
-            for i in 0..self.cols {
-                let a = self.data[arow + i];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = i * out.cols;
-                for j in 0..other.cols {
-                    out.data[orow + j] += a * other.data[brow + j];
-                }
-            }
-        }
-        out
+        crate::kernels::gemm::t_matmul(self, other)
     }
 
     pub fn frobenius(&self) -> f64 {

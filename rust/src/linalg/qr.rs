@@ -1,6 +1,41 @@
 //! Householder QR decomposition and least-squares solves.
+//!
+//! The reflector applications fan out over columns on the kernel pool
+//! (columns are independent; each keeps its serial dot/update order), so
+//! the factorisation is bit-identical at every `TCZ_THREADS` setting —
+//! and to the original single-threaded code.
 
 use super::Mat;
+use crate::kernels;
+
+/// Columns per parallel chunk when applying a Householder reflector.
+/// Fixed (never derived from the thread count) so results are
+/// bit-identical at any parallelism.
+const COL_GRAIN: usize = 8;
+
+/// Apply `H = I − 2 v vᵀ / (vᵀv)` to the trailing columns `js` of `m`
+/// (rows `k..rows`), one independent dot+update per column, in parallel.
+fn apply_reflector(m: &mut Mat, v: &[f64], vnorm2: f64, k: usize, js: std::ops::Range<usize>) {
+    let (rows, cols) = (m.rows, m.cols);
+    let mp = kernels::SendPtr::new(m.data.as_mut_ptr());
+    kernels::parallel_chunks(js.len(), COL_GRAIN, |_, range| {
+        for jj in range {
+            let j = js.start + jj;
+            // SAFETY: column `j` is read and written by this chunk only.
+            unsafe {
+                let mut dot = 0.0;
+                for i in k..rows {
+                    dot += v[i - k] * *mp.add(i * cols + j);
+                }
+                let coef = 2.0 * dot / vnorm2;
+                for i in k..rows {
+                    let p = mp.add(i * cols + j);
+                    *p -= coef * v[i - k];
+                }
+            }
+        }
+    });
+}
 
 /// Thin QR: `a = q * r` with `q` (m x n, orthonormal columns) and `r`
 /// (n x n, upper triangular). Requires `m >= n`.
@@ -31,17 +66,7 @@ pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
         let vnorm2: f64 = v.iter().map(|x| x * x).sum();
         if vnorm2 > 0.0 {
             // apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..]
-            for j in k..n {
-                let mut dot = 0.0;
-                for i in k..m {
-                    dot += v[i - k] * r.at(i, j);
-                }
-                let coef = 2.0 * dot / vnorm2;
-                for i in k..m {
-                    let val = r.at(i, j) - coef * v[i - k];
-                    r.set(i, j, val);
-                }
-            }
+            apply_reflector(&mut r, &v, vnorm2, k, k..n);
         }
         vs.push(v);
     }
@@ -56,17 +81,7 @@ pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
         if vnorm2 == 0.0 {
             continue;
         }
-        for j in 0..n {
-            let mut dot = 0.0;
-            for i in k..m {
-                dot += v[i - k] * q.at(i, j);
-            }
-            let coef = 2.0 * dot / vnorm2;
-            for i in k..m {
-                let val = q.at(i, j) - coef * v[i - k];
-                q.set(i, j, val);
-            }
-        }
+        apply_reflector(&mut q, v, vnorm2, k, 0..n);
     }
     // Zero the sub-diagonal of thin R.
     let mut r_thin = Mat::zeros(n, n);

@@ -3,7 +3,14 @@
 //! small core factorisation. Powers TT-SVD, HOOI and TTHRESH.
 
 use super::{qr_thin, Mat};
+use crate::kernels;
 use crate::util::Pcg64;
+
+/// Rows per fixed reduction block / rotation chunk in the Jacobi sweeps.
+/// Small matrices (the common Jacobi case) fall below one block and run
+/// the exact serial loop; tall ones fan out with an order-stable blocked
+/// reduction — bit-identical at every thread count either way.
+const ROW_GRAIN: usize = 1024;
 
 /// A rank-r factorisation `a ≈ u * diag(s) * vᵀ`.
 #[derive(Debug, Clone)]
@@ -25,17 +32,26 @@ pub fn jacobi_svd(a: &Mat) -> Svd {
         let mut off = 0.0f64;
         for p in 0..n {
             for q in p + 1..n {
-                // 2x2 Gram block
-                let mut app = 0.0;
-                let mut aqq = 0.0;
-                let mut apq = 0.0;
-                for i in 0..m {
-                    let x = u.at(i, p);
-                    let y = u.at(i, q);
-                    app += x * x;
-                    aqq += y * y;
-                    apq += x * y;
-                }
+                // 2x2 Gram block: three inner products in one blocked,
+                // order-stable parallel sweep
+                let udata = &u.data;
+                let (app, aqq, apq) = kernels::parallel_map_reduce(
+                    m,
+                    ROW_GRAIN,
+                    (0.0f64, 0.0f64, 0.0f64),
+                    |rows| {
+                        let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                        for i in rows {
+                            let x = udata[i * n + p];
+                            let y = udata[i * n + q];
+                            app += x * x;
+                            aqq += y * y;
+                            apq += x * y;
+                        }
+                        (app, aqq, apq)
+                    },
+                    |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2),
+                );
                 off += apq * apq;
                 if apq.abs() <= tol * (app * aqq).sqrt().max(1e-300) {
                     continue;
@@ -44,12 +60,21 @@ pub fn jacobi_svd(a: &Mat) -> Svd {
                 let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
                 let c = 1.0 / (1.0 + t * t).sqrt();
                 let s = c * t;
-                for i in 0..m {
-                    let x = u.at(i, p);
-                    let y = u.at(i, q);
-                    u.set(i, p, c * x - s * y);
-                    u.set(i, q, s * x + c * y);
-                }
+                // rotate columns p,q of U — rows are independent, so the
+                // update fans out over the pool (elementwise, bit-stable)
+                let up = kernels::SendPtr::new(u.data.as_mut_ptr());
+                kernels::parallel_chunks(m, ROW_GRAIN, |_, rows| {
+                    for i in rows {
+                        // SAFETY: row `i` is touched by this chunk only.
+                        unsafe {
+                            let xp = up.add(i * n + p);
+                            let yp = up.add(i * n + q);
+                            let (x, y) = (*xp, *yp);
+                            *xp = c * x - s * y;
+                            *yp = s * x + c * y;
+                        }
+                    }
+                });
                 for i in 0..n {
                     let x = v.at(i, p);
                     let y = v.at(i, q);

@@ -45,6 +45,7 @@ const VALUE_FLAGS: &[&str] = &[
     "max-batch",
     "max-wait-us",
     "queue-depth",
+    "threads",
     "config",
     "set",
     "scale",
@@ -453,7 +454,7 @@ COMMANDS
   stats       --dataset <name> [--scale ..]
   gen         --dataset <name> --out <x.npy> [--scale ..] [--data-seed ..]
   serve       --model <m.tcz> | --dir <artifacts-dir>
-              [--addr 127.0.0.1:7070] [--method-agnostic]
+              [--addr 127.0.0.1:7070] [--method-agnostic] [--threads N]
               [--cache-bytes 1073741824]   # --dir: LRU byte budget
               [--max-batch 8192] [--max-wait-us 2000] [--max-conns 64]
               --model: line protocol v1 (one `i,j,k` per line)
@@ -464,6 +465,10 @@ COMMANDS
 
 Flags accept `--key value` and `--key=value`; use the `=` form for values
 that start with `--`.
+
+`--threads N` (any command; also the TCZ_THREADS env var) caps the kernel
+worker pool for training, bulk decode and serving. Outputs are
+bit-identical at every thread count.
 
 METHODS:  {}
 DATASETS: {}",
@@ -488,6 +493,18 @@ fn main() {
     if args.has("help") {
         usage();
         return;
+    }
+    // Thread budget for the parallel kernels (training, bulk decode,
+    // serving). Overrides TCZ_THREADS; outputs are bit-identical at every
+    // setting.
+    if let Some(t) = args.get("threads") {
+        match t.parse::<usize>() {
+            Ok(n) if n > 0 => tensorcodec::kernels::set_threads(n),
+            _ => {
+                eprintln!("error: --threads wants a positive integer, got `{t}`");
+                std::process::exit(2);
+            }
+        }
     }
     let result = match args.cmd.as_str() {
         "compress" => cmd_compress(&args),

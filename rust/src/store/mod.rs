@@ -153,17 +153,19 @@ impl ArtifactStore {
     }
 
     /// Metadata for `name` without touching the cache: a resident entry
-    /// answers from memory (no recency bump), a cold one is loaded,
-    /// inspected and dropped. A metadata probe must never evict an
-    /// artifact that is serving traffic — the trade-off is that a cold
-    /// `stat` pays a full container parse each time.
+    /// answers from memory (no recency bump), a cold one is answered by a
+    /// header-only container peek
+    /// ([`crate::codec::container::peek_meta_file`]) — no factor arrays or
+    /// coded streams are decoded, and nothing is loaded into (or evicted
+    /// from) the LRU. A metadata probe must never evict an artifact that
+    /// is serving traffic.
     pub fn stat(&self, name: &str) -> Result<ArtifactMeta> {
         validate_name(name)?;
         if let Some(entry) = self.peek(name) {
             return Ok(entry.meta.clone());
         }
         let path = self.dir.join(format!("{name}.tcz"));
-        Ok(load_artifact(&path)?.meta())
+        crate::codec::container::peek_meta_file(&path)
     }
 
     /// Get `name`, loading `<dir>/<name>.tcz` on a cache miss and evicting

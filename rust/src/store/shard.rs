@@ -4,14 +4,18 @@
 //! the same dynamic-batching policy the single-model server uses
 //! ([`BatchPolicy`] / [`next_batch`]), sharded by artifact id. Point
 //! queries from any number of connections coalesce into one
-//! [`crate::codec::Artifact::decode_many`] call per flush, so the
-//! structured codecs' prefix-reuse chains amortise across clients. Neural
-//! artifacts ride the XLA-batched [`DecodeServer`] instead when the AOT
-//! artifacts are available.
+//! [`crate::codec::Artifact::decode_many`] call per flush (a `batch-get`
+//! block travels as a single [`DecodeRequest::Block`] frame with one
+//! reply channel), and the `decode_many` chain evaluators themselves fan
+//! the flushed batch out across the [`crate::kernels`] worker pool — the
+//! shard worker thread is the batch *assembler*, not the decode
+//! bottleneck. Neural artifacts ride the XLA-batched [`DecodeServer`]
+//! instead when the AOT artifacts are available.
 
 use super::StoreEntry;
 use crate::coordinator::batcher::{
-    next_batch, request_channel, request_many, request_one, BatchPolicy, DecodeRequest,
+    flatten_batch, next_batch, reply_batch, request_block, request_channel, request_one,
+    BatchPolicy, DecodeRequest,
 };
 use crate::coordinator::server::DecodeServer;
 use anyhow::{bail, Result};
@@ -58,18 +62,19 @@ impl BulkShard {
                 let mut batches = 0u64;
                 let mut values: Vec<f32> = Vec::new();
                 while let Some(batch) = next_batch(&rx, &policy, &stop_worker) {
-                    let coords: Vec<Vec<usize>> =
-                        batch.iter().map(|r| r.coords.clone()).collect();
+                    let coords = flatten_batch(&batch);
                     values.clear();
+                    // decode_many runs the batch on the kernel pool (the
+                    // chain evaluators split it at shared-prefix
+                    // boundaries) — this worker just assembles and fans
+                    // replies back out
                     entry
                         .artifact
                         .lock()
                         .expect("artifact lock")
                         .decode_many(&coords, &mut values);
                     batches += 1;
-                    for (req, &v) in batch.iter().zip(&values) {
-                        let _ = req.reply.send(v); // client may have gone
-                    }
+                    reply_batch(batch, &values);
                 }
                 batches
             })?;
@@ -159,16 +164,16 @@ impl Shard {
         }
     }
 
-    /// Decode a batch, returned in request order. All requests are
-    /// enqueued before the first reply is awaited, so the whole block
-    /// lands in as few batch flushes as possible.
+    /// Decode a batch, returned in request order. The whole block is one
+    /// [`DecodeRequest::Block`] frame — a single queue slot and a single
+    /// reply channel, regardless of block size.
     pub fn get_many(&self, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
         for c in coords {
             check_coords(c, self.shape())?;
         }
         match &self.kind {
             ShardKind::Xla(server) => server.handle().get_many(coords),
-            ShardKind::Bulk(shard) => request_many(shard.sender(), coords),
+            ShardKind::Bulk(shard) => request_block(shard.sender(), coords),
         }
     }
 }

@@ -9,3 +9,81 @@ pub mod unfold;
 pub use dense::DenseTensor;
 pub use fold::FoldSpec;
 pub use unfold::{fold_back, unfold};
+
+/// Precomputed row-major strides for unravelling linear indices — hoists
+/// the per-row `rem % n; rem /= n` chain (recomputed per row per mode on
+/// the old hot paths) into one table built once per tensor.
+#[derive(Debug, Clone)]
+pub struct StrideTable {
+    shape: Vec<usize>,
+    strides: Vec<usize>,
+}
+
+impl StrideTable {
+    pub fn new(shape: &[usize]) -> StrideTable {
+        let d = shape.len();
+        let mut strides = vec![1usize; d];
+        for k in (0..d.saturating_sub(1)).rev() {
+            strides[k] = strides[k + 1] * shape[k + 1];
+        }
+        StrideTable {
+            shape: shape.to_vec(),
+            strides,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total number of entries.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Unravel `lin` into `out` (row-major, `out.len() == order`).
+    #[inline]
+    pub fn unravel_into(&self, lin: usize, out: &mut [usize]) {
+        debug_assert_eq!(out.len(), self.shape.len());
+        for k in 0..self.shape.len() {
+            out[k] = (lin / self.strides[k]) % self.shape[k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod stride_tests {
+    use super::*;
+
+    #[test]
+    fn stride_table_matches_div_mod_chain() {
+        let shape = [5usize, 1, 4, 3];
+        let st = StrideTable::new(&shape);
+        assert_eq!(st.len(), 60);
+        let mut got = [0usize; 4];
+        for lin in 0..st.len() {
+            st.unravel_into(lin, &mut got);
+            // reference: the old per-row rem/div chain
+            let mut rem = lin;
+            let mut want = [0usize; 4];
+            for k in (0..4).rev() {
+                want[k] = rem % shape[k];
+                rem /= shape[k];
+            }
+            assert_eq!(got, want, "lin {lin}");
+        }
+    }
+
+    #[test]
+    fn scalar_and_vector_shapes() {
+        let st = StrideTable::new(&[7]);
+        let mut out = [0usize; 1];
+        st.unravel_into(6, &mut out);
+        assert_eq!(out, [6]);
+    }
+}
+

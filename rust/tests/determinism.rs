@@ -1,0 +1,221 @@
+//! Thread-count determinism: the kernel layer's contract is that
+//! `TCZ_THREADS=1` and `TCZ_THREADS=8` produce bit-identical bytes on
+//! every path — GEMM, the factorisation pipeline (QR/SVD → TT-SVD),
+//! whole-artifact compression, `decode_many` bulk decode (factorised and
+//! neural chains), and serving replies through the store server. CI runs
+//! this suite again under `TCZ_THREADS=2`.
+//!
+//! The `fit()` determinism test needs the XLA AOT artifacts and
+//! self-skips without them, like every runtime-dependent test.
+
+use std::sync::{Mutex, OnceLock};
+use tensorcodec::codec::{self, Budget, CodecConfig};
+use tensorcodec::compress::{CompressedModel, Decompressor};
+use tensorcodec::config::ParamDtype;
+use tensorcodec::harness::{random_coords, sort_coords};
+use tensorcodec::kernels;
+use tensorcodec::linalg::{truncated_svd, Mat};
+use tensorcodec::nttd::ModelParams;
+use tensorcodec::reorder::Orders;
+use tensorcodec::tensor::{DenseTensor, FoldSpec};
+use tensorcodec::util::Pcg64;
+
+/// `set_threads` is process-global; serialise the tests that toggle it.
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` once per thread-count setting and return the outputs.
+fn at_threads<T>(counts: &[usize], mut f: impl FnMut() -> T) -> Vec<T> {
+    let out = counts
+        .iter()
+        .map(|&n| {
+            kernels::set_threads(n);
+            f()
+        })
+        .collect();
+    kernels::set_threads(0); // restore env/hardware default
+    out
+}
+
+#[test]
+fn gemm_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let mut rng = Pcg64::seeded(1);
+    let a = Mat::gaussian(130, 300, &mut rng);
+    let b = Mat::gaussian(300, 70, &mut rng);
+    let runs = at_threads(&[1, 2, 8], || (a.matmul(&b), a.t_matmul(&b)));
+    for (mm, tm) in &runs[1..] {
+        assert_eq!(mm.data, runs[0].0.data, "matmul differs across threads");
+        assert_eq!(tm.data, runs[0].1.data, "t_matmul differs across threads");
+    }
+}
+
+#[test]
+fn svd_pipeline_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let mut rng = Pcg64::seeded(2);
+    let a = Mat::gaussian(120, 80, &mut rng);
+    let runs = at_threads(&[1, 8], || truncated_svd(&a, 10, 7));
+    let (s0, s1) = (&runs[0], &runs[1]);
+    assert_eq!(s0.u.data, s1.u.data);
+    assert_eq!(s0.v.data, s1.v.data);
+    for (x, y) in s0.s.iter().zip(&s1.s) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+/// Same seed ⇒ the whole pure-Rust compression path (TT-SVD / ALS / HOOI
+/// over the parallel linalg kernels) serialises to identical container
+/// bytes at 1 vs 8 threads.
+#[test]
+fn compressed_artifacts_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let t = DenseTensor::random_uniform(&[14, 12, 10], 42);
+    for (method, budget) in [
+        ("ttd", Budget::Params(1200)),
+        ("cpd", Budget::Params(300)),
+        ("tkd", Budget::Params(500)),
+        ("trd", Budget::Params(600)),
+    ] {
+        let c = codec::by_name(method).unwrap();
+        let runs = at_threads(&[1, 8], || {
+            let a = c.compress(&t, &budget, &CodecConfig::default()).unwrap();
+            codec::container::artifact_to_bytes(a.as_ref()).unwrap()
+        });
+        assert_eq!(runs[0], runs[1], "{method}: container bytes differ across threads");
+    }
+}
+
+fn toy_neural_model(seed: u64) -> CompressedModel {
+    let spec = FoldSpec::auto(&[12, 9, 5], 0).unwrap();
+    let params = ModelParams::init_tc(seed, spec.dp, 32, 5, 5);
+    let mut rng = Pcg64::seeded(seed);
+    let orders = Orders::random(&spec.orig_shape, &mut rng);
+    CompressedModel {
+        spec,
+        orders,
+        params,
+        mean: 0.25,
+        std: 1.5,
+        fitness: 0.8,
+        param_dtype: ParamDtype::F32,
+        train_seconds: 0.0,
+        init_seconds: 0.0,
+        epochs_run: 0,
+    }
+}
+
+/// `decode_many` (prefix-reuse chains split across the pool) matches
+/// per-entry `get` bit for bit at every thread count — factorised and
+/// neural artifacts alike.
+#[test]
+fn decode_many_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let t = DenseTensor::random_uniform(&[9, 8, 7], 5);
+    let coords = random_coords(&[9, 8, 7], 6000, 3);
+    for (method, budget) in [("ttd", Budget::Params(900)), ("tkd", Budget::Params(400))] {
+        let c = codec::by_name(method).unwrap();
+        let mut a = c.compress(&t, &budget, &CodecConfig::default()).unwrap();
+        let runs = at_threads(&[1, 8], || {
+            let mut out = Vec::new();
+            a.decode_many(&coords, &mut out);
+            out
+        });
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&runs[0]), bits(&runs[1]), "{method}");
+        for (c, &v) in coords.iter().zip(&runs[0]) {
+            assert_eq!(v.to_bits(), a.get(c).to_bits(), "{method} {c:?}");
+        }
+    }
+    // neural chain (PrefixDecoder) through the pure-Rust decompressor
+    let mut dec = Decompressor::new(toy_neural_model(11));
+    let coords = random_coords(&[12, 9, 5], 6000, 4);
+    let runs = at_threads(&[1, 8], || {
+        let mut out = Vec::new();
+        dec.get_many(&coords, &mut out);
+        out
+    });
+    for (i, (x, y)) in runs[0].iter().zip(&runs[1]).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "neural entry {i}");
+    }
+    for (c, &v) in coords.iter().zip(&runs[0]) {
+        assert_eq!(v.to_bits(), dec.get(c).to_bits(), "neural {c:?}");
+    }
+}
+
+/// Server replies (shard batch queue → block frames → pool-backed
+/// `decode_many`) are bit-identical at 1 vs 8 threads.
+#[test]
+fn server_replies_bit_identical_across_thread_counts() {
+    use std::path::PathBuf;
+    use tensorcodec::coordinator::batcher::BatchPolicy;
+    use tensorcodec::store::server::ArtifactServer;
+    use tensorcodec::store::ArtifactStore;
+
+    let _g = lock();
+    let dir: PathBuf = std::env::temp_dir().join("tcz_determinism_store");
+    std::fs::create_dir_all(&dir).unwrap();
+    let t = DenseTensor::random_uniform(&[8, 7, 6], 21);
+    let c = codec::by_name("ttd").unwrap();
+    let a = c
+        .compress(&t, &Budget::Params(700), &CodecConfig::default())
+        .unwrap();
+    codec::save_artifact(&dir.join("det_ttd.tcz"), a.as_ref()).unwrap();
+
+    let mut coords = random_coords(&[8, 7, 6], 3000, 9);
+    sort_coords(&mut coords);
+    let runs = at_threads(&[1, 8], || {
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        let server = ArtifactServer::new(store, BatchPolicy::default(), false);
+        let block = server.batch_get("det_ttd", &coords).unwrap();
+        let one = server.get("det_ttd", &coords[17]).unwrap();
+        (block, one)
+    });
+    let (b0, o0) = &runs[0];
+    let (b1, o1) = &runs[1];
+    assert_eq!(o0.to_bits(), o1.to_bits());
+    for (i, (x, y)) in b0.iter().zip(b1).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "reply {i}");
+    }
+}
+
+/// Full training determinism: same seed + same data ⇒ bit-identical
+/// `fit()` models at 1 vs 8 threads. Needs the XLA AOT artifacts.
+#[test]
+fn fit_bit_identical_across_thread_counts() {
+    use tensorcodec::config::TrainConfig;
+    use tensorcodec::coordinator::Trainer;
+
+    if !tensorcodec::runtime::manifest::default_dir()
+        .join("manifest.txt")
+        .exists()
+    {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let _g = lock();
+    let t = DenseTensor::random_uniform(&[20, 16, 12], 77);
+    let cfg = TrainConfig {
+        rank: 5,
+        hidden: 5,
+        epochs: 3,
+        reorder_every: 2,
+        swap_samples: 32,
+        ..Default::default()
+    };
+    let runs = at_threads(&[1, 8], || {
+        let mut trainer = Trainer::new(&t, cfg.clone()).unwrap();
+        trainer.fit().unwrap()
+    });
+    let (m0, m1) = (&runs[0], &runs[1]);
+    assert_eq!(m0.orders.perms, m1.orders.perms, "π differs across threads");
+    for (b0, b1) in m0.params.bufs.iter().zip(&m1.params.bufs) {
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(b0), bits(b1), "θ differs across threads");
+    }
+    assert_eq!(m0.fitness.to_bits(), m1.fitness.to_bits());
+}

@@ -191,6 +191,108 @@ fn lru_eviction_cycles_shards_and_keeps_serving() {
     assert!(server.store().resident_count() <= 2);
 }
 
+/// A cold `stat` answers from the container header only: it never loads
+/// the artifact into the LRU, never evicts a resident entry (even at a
+/// budget of one), and reports exactly the metadata a full load would.
+#[test]
+fn stat_is_header_only_and_never_touches_the_lru() {
+    let dir = build_store_dir("statpeek");
+    // tight budget: one artifact at a time
+    let probe = ArtifactStore::new(&dir, usize::MAX).unwrap();
+    let max = artifact_specs()
+        .iter()
+        .map(|(n, ..)| probe.open(n).unwrap().entry.bytes)
+        .max()
+        .unwrap();
+    drop(probe);
+    let store = ArtifactStore::new(&dir, max + 8).unwrap();
+    store.open("traffic_ttd").unwrap();
+    assert_eq!(store.resident_count(), 1);
+    // cold stats on every other artifact: correct metadata, no loads, no
+    // evictions
+    for (name, method, shape, _) in artifact_specs() {
+        if name == "traffic_ttd" {
+            continue;
+        }
+        let meta = store.stat(name).unwrap();
+        assert_eq!(meta.method, method);
+        assert_eq!(meta.shape, shape);
+        let full = codec::load_artifact(&dir.join(format!("{name}.tcz"))).unwrap();
+        assert_eq!(meta.size_bytes, full.size_bytes(), "{name}");
+        assert_eq!(store.resident_count(), 1, "stat of {name} touched the LRU");
+        assert!(store.peek("traffic_ttd").is_some(), "stat of {name} evicted");
+    }
+    // stat of a missing / invalid name still errors cleanly
+    assert!(store.stat("no_such").is_err());
+    assert!(store.stat("../traffic_ttd").is_err());
+}
+
+/// Wire compatibility: a plain protocol v2 client speaking single-`get`
+/// frames over a raw socket (the PR 2 wire format, no `ServeClient`)
+/// still gets byte-for-byte correct replies after the block-frame
+/// batcher change — and `batch-get` still answers on one line in request
+/// order.
+#[test]
+fn v2_single_get_wire_compat() {
+    use std::io::{BufRead, BufReader, Write};
+    let dir = build_store_dir("wirecompat");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = StoreServeConfig {
+        policy: small_policy(),
+        cache_bytes: usize::MAX,
+        allow_xla: false,
+        max_conns: 1,
+    };
+    let dir2 = dir.clone();
+    let srv = std::thread::spawn(move || serve_store_listener(listener, &dir2, cfg));
+
+    let coords = random_coords(&[8, 6, 5], 24, 77);
+    let want = reference_values(&dir, "traffic_ttd", &coords);
+
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut out = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut ask = |line: &str| -> String {
+        out.write_all(line.as_bytes()).unwrap();
+        out.write_all(b"\n").unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        reply.trim_end().to_string()
+    };
+    // old-style metadata + point-get frames, hand-rolled
+    assert!(ask("stat traffic_ttd").starts_with("OK method=ttd"));
+    assert!(ask("open traffic_ttd").starts_with("OK method=ttd"));
+    for (c, w) in coords.iter().zip(&want) {
+        let frame = format!("get traffic_ttd {},{},{}", c[0], c[1], c[2]);
+        let reply = ask(&frame);
+        let v: f32 = reply.strip_prefix("OK ").expect(&reply).parse().unwrap();
+        assert_eq!(v.to_bits(), w.to_bits(), "{frame}");
+    }
+    // batch-get: one frame in, one OK line out, values in request order
+    let block: Vec<String> = coords
+        .iter()
+        .map(|c| format!("{},{},{}", c[0], c[1], c[2]))
+        .collect();
+    let reply = ask(&format!("batch-get traffic_ttd {}", block.join(";")));
+    let vals: Vec<f32> = reply
+        .strip_prefix("OK ")
+        .expect(&reply)
+        .split(',')
+        .map(|v| v.parse().unwrap())
+        .collect();
+    assert_eq!(vals.len(), want.len());
+    for (v, w) in vals.iter().zip(&want) {
+        assert_eq!(v.to_bits(), w.to_bits());
+    }
+    // an ERR frame keeps the connection usable (single-get client flow)
+    assert!(ask("get traffic_ttd 0,0").starts_with("ERR"));
+    assert!(ask("get traffic_ttd 0,0,0").starts_with("OK"));
+    drop(out);
+    drop(reader);
+    srv.join().expect("server thread").expect("server result");
+}
+
 /// Protocol v2 over TCP: methods / list / open / stat / get / batch-get,
 /// plus per-frame errors, through the real listener and `ServeClient`.
 #[test]
