@@ -1,0 +1,58 @@
+#!/usr/bin/env python3
+"""Gate the nightly kernel bench against a checked-in baseline.
+
+Usage:
+    check_bench.py BASELINE.json CURRENT.json [--max-regress 0.25]
+
+Both files are fig9's ``BENCH_kernels.json`` shape. Every numeric
+higher-is-better key present (non-null) in BOTH files is compared; the run
+fails when ``current < baseline * (1 - max_regress)``. Keys missing from
+either side are skipped, so the baseline can gate a subset (today: the
+bulk-decode throughput floors) while the artifact upload tracks the rest.
+"""
+
+import argparse
+import json
+import sys
+
+# higher-is-better gauges the gate understands
+THROUGHPUT_KEYS = (
+    "decode_entries_per_s_1t",
+    "decode_entries_per_s_nt",
+    "gemm_gflops_1t",
+    "gemm_gflops_nt",
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--max-regress", type=float, default=0.25)
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    failures = []
+    for key in THROUGHPUT_KEYS:
+        b, c = baseline.get(key), current.get(key)
+        if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
+            continue
+        floor = b * (1.0 - args.max_regress)
+        status = "OK " if c >= floor else "FAIL"
+        print(f"{status} {key}: current {c:.0f} vs baseline {b:.0f} (floor {floor:.0f})")
+        if c < floor:
+            failures.append(key)
+
+    if failures:
+        print(f"regression in: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    print("bench within regression budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

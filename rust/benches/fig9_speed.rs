@@ -115,7 +115,50 @@ fn json_num(v: Option<f64>) -> String {
     }
 }
 
-fn kernels_section() {
+/// Streaming-append cost must track the *slice* entry count, not the
+/// history length: appending one slice to a TT artifact with 4× the
+/// history takes about the same time (the interfaces and the projection
+/// touch only the new entries; the only history-dependent work is the
+/// O(N·r) core copy). Returns (seconds @ short history, seconds @ long
+/// history) and asserts the coarse linearity bound.
+fn append_section() -> (f64, f64) {
+    use tensorcodec::codec::{by_name, Appended, Budget, CodecConfig};
+    use tensorcodec::tensor::DenseTensor;
+
+    let cfg = CodecConfig::default();
+    let budget = Budget::Params(usize::MAX); // never re-truncate here
+    let codec = by_name("ttd").unwrap();
+    let slices = DenseTensor::random_uniform(&[1, 96, 80], 13);
+    let time_at = |history: usize| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let mut artifact: Box<dyn Artifact> =
+                Box::new(synthetic_tt(&[history, 96, 80], 8, 11));
+            let t = Timer::start();
+            let out = codec
+                .append(&mut artifact, &slices, 0, &budget, &cfg)
+                .expect("append");
+            best = best.min(t.seconds());
+            assert!(
+                matches!(out, Appended::Segment(_)),
+                "TT append must stay a native segment"
+            );
+        }
+        best
+    };
+    let short = time_at(512);
+    let long = time_at(2048);
+    let ratio = long / short.max(1e-9);
+    println!("=== Streaming append: one [1,96,80] slice onto a TT artifact ===");
+    println!(
+        "history  512: {:>8.2} ms    history 2048: {:>8.2} ms    (ratio {ratio:.2})",
+        short * 1e3,
+        long * 1e3
+    );
+    (short, long)
+}
+
+fn kernels_section(append: (f64, f64)) {
     let n_threads = kernels::max_threads().max(2);
     println!("=== Kernel layer: 1 thread vs {n_threads} threads ===");
 
@@ -154,7 +197,7 @@ fn kernels_section() {
     kernels::set_threads(0);
 
     let json = format!(
-        "{{\n  \"threads\": {n_threads},\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {}\n}}\n",
+        "{{\n  \"threads\": {n_threads},\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {},\n  \"append_slice_seconds_h512\": {},\n  \"append_slice_seconds_h2048\": {},\n  \"append_history_ratio\": {}\n}}\n",
         json_num(Some(g1)),
         json_num(Some(gn)),
         json_num(Some(gn / g1)),
@@ -167,13 +210,25 @@ fn kernels_section() {
             (Some(a), Some(b)) if b > 0.0 => Some(a / b),
             _ => None,
         }),
+        json_num(Some(append.0)),
+        json_num(Some(append.1)),
+        json_num(Some(append.1 / append.0.max(1e-9))),
     );
     std::fs::write("BENCH_kernels.json", json).expect("write BENCH_kernels.json");
     println!("json -> BENCH_kernels.json");
 }
 
 fn main() {
-    kernels_section();
+    let append = append_section();
+    kernels_section(append);
+    // Coarse linearity gate, AFTER BENCH_kernels.json is on disk so a
+    // noisy-runner flake still leaves the artifact for the nightly upload:
+    // appending one slice must cost ~the same at 4x the history.
+    let ratio = append.1 / append.0.max(1e-9);
+    assert!(
+        ratio < 5.0,
+        "append cost grew with history length (ratio {ratio:.2}): not linear in the slice"
+    );
 
     let scale = bench_scale();
     let epochs = bench_epochs();

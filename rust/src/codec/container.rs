@@ -1,4 +1,4 @@
-//! The method-tagged `.tcz` v2 container.
+//! The method-tagged `.tcz` v2 container and the segmented v3 container.
 //!
 //! v2 layout (little-endian):
 //! ```text
@@ -6,22 +6,84 @@
 //! u64 payload_len | payload (codec-specific, written by Artifact::write)
 //! ```
 //!
+//! v3 (*segmented*) layout — a base payload plus append segments, the
+//! on-disk shape of the streaming-append pipeline ([`crate::codec::Codec::append`]):
+//! ```text
+//! magic "TCZ3" | u8 version = 3 | u8 method_tag | u8 reserved[2]
+//! u8 order | u64 ext_shape[order]     (the EXTENDED shape, patched on append)
+//! u32 n_segments | u64 size_bytes     (patched on append)
+//! u64 base_payload_len | base payload (codec-specific, never rewritten)
+//! segment*: u8 axis | u64 rows | u64 payload_len | payload
+//! ```
+//! The mutable header fields sit at fixed offsets, so [`append_segment_file`]
+//! extends a container without touching the base payload, and
+//! [`peek_meta`] reports the extended shape and size in O(header) — no
+//! segment is ever scanned for a metadata probe. Loading replays each
+//! segment through [`crate::codec::Codec::apply_segment`], which is
+//! bit-identical to the in-memory append that produced it.
+//!
 //! v1 files (magic "TCZ1", written by `compress::format::save_tcz`) carry a
 //! bare TensorCodec/NeuKron model; [`load_artifact`] still accepts them and
 //! wraps the model in a neural artifact, so every `.tcz` ever written keeps
-//! loading.
+//! loading — v1 and v2 goldens are pinned under `rust/tests/data/`, v3 by
+//! `golden_v3.tcz`.
 
 use super::neural::NeuralArtifact;
 use super::{by_name, by_tag, Artifact};
 use crate::compress::format::decode_model;
 use crate::nttd::Variant;
 use anyhow::{bail, Context, Result};
-use std::io::Write;
 use std::path::Path;
 
 const MAGIC_V2: &[u8; 4] = b"TCZ2";
 const MAGIC_V1: &[u8; 4] = b"TCZ1";
+const MAGIC_V3: &[u8; 4] = b"TCZ3";
 const VERSION_V2: u8 = 2;
+const VERSION_V3: u8 = 3;
+
+/// One v3 append segment: a codec-specific payload that extends the base
+/// artifact by `rows` indices along `axis` (the `Segment` arm of
+/// [`crate::codec::Appended`]).
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub axis: usize,
+    pub rows: usize,
+    pub payload: Vec<u8>,
+}
+
+fn push_segment(out: &mut Vec<u8>, seg: &Segment) {
+    put_u8(out, seg.axis as u8);
+    put_u64(out, seg.rows as u64);
+    put_u64(out, seg.payload.len() as u64);
+    out.extend_from_slice(&seg.payload);
+}
+
+/// Serialise a full v3 segmented container: `base_payload` under
+/// `ext_shape`/`size_bytes` header fields (the *extended* artifact's shape
+/// and paper-accounting size) plus `segments` in append order.
+pub fn segmented_to_bytes(
+    tag: u8,
+    base_payload: &[u8],
+    ext_shape: &[usize],
+    size_bytes: usize,
+    segments: &[Segment],
+) -> Result<Vec<u8>> {
+    let seg_bytes: usize = segments.iter().map(|s| 17 + s.payload.len()).sum();
+    let mut out = Vec::with_capacity(base_payload.len() + seg_bytes + 64);
+    out.extend_from_slice(MAGIC_V3);
+    out.push(VERSION_V3);
+    out.push(tag);
+    out.extend_from_slice(&[0u8, 0u8]); // reserved
+    shape_header(&mut out, ext_shape)?;
+    put_u32(&mut out, segments.len() as u32);
+    put_u64(&mut out, size_bytes as u64);
+    put_u64(&mut out, base_payload.len() as u64);
+    out.extend_from_slice(base_payload);
+    for seg in segments {
+        push_segment(&mut out, seg);
+    }
+    Ok(out)
+}
 
 /// Serialise an artifact into a full v2 container byte stream.
 pub fn artifact_to_bytes(artifact: &dyn Artifact) -> Result<Vec<u8>> {
@@ -54,6 +116,9 @@ pub fn artifact_from_bytes(bytes: &[u8]) -> Result<Box<dyn Artifact>> {
         };
         return Ok(Box::new(NeuralArtifact::from_model(model, method)));
     }
+    if &bytes[..4] == MAGIC_V3 {
+        return v3_from_bytes(bytes);
+    }
     if &bytes[..4] != MAGIC_V2 {
         bail!("not a .tcz file");
     }
@@ -78,6 +143,55 @@ pub fn artifact_from_bytes(bytes: &[u8]) -> Result<Box<dyn Artifact>> {
         .with_context(|| format!("decoding {} artifact", codec.name()))
 }
 
+/// Deserialise a v3 segmented container: decode the base payload, then
+/// replay every append segment through the codec's `apply_segment` (which
+/// is bit-identical to the in-memory append that produced it).
+fn v3_from_bytes(bytes: &[u8]) -> Result<Box<dyn Artifact>> {
+    if bytes.len() < 10 {
+        bail!("tcz v3 header truncated");
+    }
+    let version = bytes[4];
+    if version != VERSION_V3 {
+        bail!("unsupported tcz version {version}");
+    }
+    let tag = bytes[5];
+    let mut c = Cursor::new(&bytes[8..]);
+    let ext_shape = read_shape(&mut c)?;
+    let n_segments = c.u32()? as usize;
+    let _size_bytes = c.u64()?;
+    let base_len = c.u64()? as usize;
+    let hdr = 8 + 1 + 8 * ext_shape.len() + 4 + 8 + 8;
+    if bytes.len() < hdr + base_len {
+        bail!("tcz v3 base payload truncated");
+    }
+    let codec = by_tag(tag).with_context(|| format!("unknown codec tag {tag}"))?;
+    let mut artifact = codec
+        .read_artifact(&bytes[hdr..hdr + base_len])
+        .with_context(|| format!("decoding {} base artifact", codec.name()))?;
+    let mut off = hdr + base_len;
+    for si in 0..n_segments {
+        if bytes.len() < off + 17 {
+            bail!("tcz v3 segment {si} header truncated");
+        }
+        let axis = bytes[off] as usize;
+        let rows = u64::from_le_bytes(bytes[off + 1..off + 9].try_into().unwrap()) as usize;
+        let plen = u64::from_le_bytes(bytes[off + 9..off + 17].try_into().unwrap()) as usize;
+        off += 17;
+        if bytes.len() < off + plen {
+            bail!("tcz v3 segment {si} payload truncated");
+        }
+        codec
+            .apply_segment(artifact.as_mut(), &bytes[off..off + plen], axis, rows)
+            .with_context(|| format!("applying {} segment {si}", codec.name()))?;
+        off += plen;
+    }
+    let got = artifact.meta().shape;
+    if got != ext_shape {
+        bail!("tcz v3 header shape {ext_shape:?} disagrees with decoded shape {got:?}");
+    }
+    Ok(artifact)
+}
+
 /// Metadata from container bytes by parsing *only* the container and
 /// payload headers — no factor arrays, coded streams or model parameters
 /// are decoded ([`crate::codec::Codec::peek_meta`]). `bytes` may be a
@@ -90,6 +204,42 @@ pub fn peek_meta(bytes: &[u8], total_len: usize) -> Result<crate::codec::Artifac
     if &bytes[..4] == MAGIC_V1 {
         // Legacy v1: the file *is* the model payload.
         return crate::compress::format::peek_model_meta(bytes);
+    }
+    if &bytes[..4] == MAGIC_V3 {
+        // Segmented v3: the extended shape and size live in the container
+        // header — an O(1) peek regardless of how many segments follow.
+        if bytes.len() < 10 {
+            bail!("tcz v3 header truncated");
+        }
+        let version = bytes[4];
+        if version != VERSION_V3 {
+            bail!("unsupported tcz version {version}");
+        }
+        let tag = bytes[5];
+        let mut c = Cursor::new(&bytes[8..]);
+        let ext_shape = read_shape(&mut c)?;
+        let _n_segments = c.u32()?;
+        let size_bytes = c.u64()? as usize;
+        let base_len = c.u64()? as usize;
+        let hdr = 8 + 1 + 8 * ext_shape.len() + 4 + 8 + 8;
+        if total_len < hdr + base_len {
+            bail!("tcz v3 base payload truncated");
+        }
+        if bytes.len() <= hdr {
+            bail!("tcz v3 peek prefix too short");
+        }
+        let codec = by_tag(tag).with_context(|| format!("unknown codec tag {tag}"))?;
+        let base = codec
+            .peek_meta(&bytes[hdr..], base_len)
+            .with_context(|| format!("peeking {} base header", codec.name()))?;
+        return Ok(crate::codec::ArtifactMeta {
+            method: base.method,
+            shape: ext_shape,
+            size_bytes,
+            // append segments shift the error; the base fitness is stale
+            fitness: None,
+            seconds: 0.0,
+        });
     }
     if &bytes[..4] != MAGIC_V2 {
         bail!("not a .tcz file");
@@ -144,19 +294,109 @@ pub fn peek_meta_file(path: &Path) -> Result<crate::codec::ArtifactMeta> {
     }
 }
 
-/// Save an artifact to a v2 `.tcz` file.
+/// Save an artifact to a v2 `.tcz` file. The write is atomic (temp +
+/// rename): a concurrent reader — e.g. a serving store hot-reloading on
+/// mtime change — always sees a complete container, whether this is a
+/// fresh save or an append-path rewrite.
 pub fn save_artifact(path: &Path, artifact: &dyn Artifact) -> Result<()> {
     let bytes = artifact_to_bytes(artifact)?;
-    let mut f = std::fs::File::create(path)
-        .with_context(|| format!("create {}", path.display()))?;
-    f.write_all(&bytes)?;
+    replace_file(path, &bytes)
+}
+
+/// Atomically replace `path` with `bytes` (write-to-temp + rename). The
+/// temp name carries the writer's PID so two concurrent writers cannot
+/// tear each other's temp file — last rename wins with a complete
+/// container either way (and [`append_segment_file`]'s shape guard turns
+/// a lost-update splice into a clean error on the next append).
+fn replace_file(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension(format!("tcz.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, bytes).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("replace {}", path.display()))?;
     Ok(())
 }
 
-/// Load an artifact from a `.tcz` file (v2 or legacy v1).
+/// Load an artifact from a `.tcz` file (v3, v2 or legacy v1).
 pub fn load_artifact(path: &Path) -> Result<Box<dyn Artifact>> {
     let bytes = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
     artifact_from_bytes(&bytes)
+}
+
+/// Persist one append segment into an existing `.tcz` file. A v2
+/// container is upgraded to v3 around its unchanged payload; a v3
+/// container gets the segment spliced on and its mutable header fields
+/// (`ext_shape`, `n_segments`, `size_bytes`) patched. `ext_shape` and
+/// `size_bytes` describe the artifact *after* the append.
+///
+/// The replacement is atomic (write-to-temp + rename), so a concurrent
+/// reader — e.g. a serving store hot-reloading on mtime change — always
+/// sees a complete container, never a torn append.
+pub fn append_segment_file(
+    path: &Path,
+    segment: &Segment,
+    ext_shape: &[usize],
+    size_bytes: usize,
+) -> Result<()> {
+    let bytes = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+    if bytes.len() < 16 {
+        bail!("not a .tcz container (too short)");
+    }
+    // Consistency guard (poor man's compare-and-swap): the shape currently
+    // on disk plus this segment must equal `ext_shape`. Two appenders
+    // racing on the same file would otherwise splice a second segment
+    // under a header patched for one — a container no load could accept.
+    let check_base = |on_disk: &[usize]| -> Result<()> {
+        let consistent = on_disk.len() == ext_shape.len()
+            && on_disk.iter().enumerate().all(|(k, &n)| {
+                let grown = if k == segment.axis { n + segment.rows } else { n };
+                grown == ext_shape[k]
+            });
+        if !consistent {
+            bail!(
+                "container changed under the append: on-disk shape {on_disk:?} + {} rows \
+                 along axis {} does not give {ext_shape:?} (concurrent appender?)",
+                segment.rows,
+                segment.axis
+            );
+        }
+        Ok(())
+    };
+    let out = if &bytes[..4] == MAGIC_V2 {
+        let tag = bytes[5];
+        let plen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        if bytes.len() < 16 + plen {
+            bail!("tcz v2 payload truncated");
+        }
+        let base = by_tag(tag)
+            .with_context(|| format!("unknown codec tag {tag}"))?
+            .peek_meta(&bytes[16..], plen)?;
+        check_base(&base.shape)?;
+        segmented_to_bytes(
+            tag,
+            &bytes[16..16 + plen],
+            ext_shape,
+            size_bytes,
+            std::slice::from_ref(segment),
+        )?
+    } else if &bytes[..4] == MAGIC_V3 {
+        let (old_shape, n_segments) = {
+            let mut c = Cursor::new(&bytes[8..]);
+            let shape = read_shape(&mut c)?;
+            (shape, c.u32()?)
+        };
+        check_base(&old_shape)?;
+        let mut out = bytes;
+        for (k, &n) in ext_shape.iter().enumerate() {
+            out[9 + 8 * k..9 + 8 * (k + 1)].copy_from_slice(&(n as u64).to_le_bytes());
+        }
+        let off = 9 + 8 * ext_shape.len();
+        out[off..off + 4].copy_from_slice(&(n_segments + 1).to_le_bytes());
+        out[off + 4..off + 12].copy_from_slice(&(size_bytes as u64).to_le_bytes());
+        push_segment(&mut out, segment);
+        out
+    } else {
+        bail!("appending segments needs a v2/v3 container (v1 models are rewritten wholesale)");
+    };
+    replace_file(path, &out)
 }
 
 // ---------------------------------------------------------------------
@@ -345,6 +585,59 @@ mod tests {
         let peeked = peek_meta(&v1[..160.min(v1.len())], v1.len()).unwrap();
         assert_eq!(peeked.method, "tensorcodec");
         assert_eq!(peeked.size_bytes, model.reported_size_bytes());
+    }
+
+    /// v2 → v3 upgrade through `append_segment_file`: the appended
+    /// container must decode bit-identically to the in-memory appended
+    /// artifact, and the v3 peek must report the extended shape from a
+    /// small prefix.
+    #[test]
+    fn v3_segmented_roundtrip_and_o1_peek() {
+        use crate::codec::Appended;
+        let t = DenseTensor::random_uniform(&[6, 5, 4], 17);
+        let codec = by_name("ttd").unwrap();
+        let cfg = CodecConfig::default();
+        let budget = Budget::Params(10_000); // roomy: appends stay segments
+        let mut a = codec.compress(&t, &budget, &cfg).unwrap();
+        let dir = std::env::temp_dir().join("tcz_v3_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v3.tcz");
+        save_artifact(&path, a.as_ref()).unwrap();
+        // two appends along mode 0: v2 -> v3 -> v3 with two segments
+        for round in 0..2u64 {
+            let slices = DenseTensor::random_uniform(&[1, 5, 4], 90 + round);
+            let appended = codec.append(&mut a, &slices, 0, &budget, &cfg).unwrap();
+            let Appended::Segment(payload) = appended else {
+                panic!("expected a segment append");
+            };
+            let seg = Segment {
+                axis: 0,
+                rows: 1,
+                payload,
+            };
+            append_segment_file(&path, &seg, &a.meta().shape, a.size_bytes()).unwrap();
+        }
+        assert_eq!(a.meta().shape, vec![8, 5, 4]);
+        let mut loaded = load_artifact(&path).unwrap();
+        assert_eq!(loaded.meta().shape, vec![8, 5, 4]);
+        assert_eq!(loaded.size_bytes(), a.size_bytes());
+        assert_eq!(
+            loaded.decode_all().data(),
+            a.decode_all().data(),
+            "v3 replay must be bit-identical to the in-memory append"
+        );
+        // O(1) peek: extended shape + size from a small file prefix
+        let bytes = std::fs::read(&path).unwrap();
+        let peeked = peek_meta(&bytes[..200.min(bytes.len())], bytes.len()).unwrap();
+        assert_eq!(peeked.method, "ttd");
+        assert_eq!(peeked.shape, vec![8, 5, 4]);
+        assert_eq!(peeked.size_bytes, a.size_bytes());
+        assert_eq!(peek_meta_file(&path).unwrap().shape, vec![8, 5, 4]);
+        // corrupt segment framing fails cleanly
+        let mut bad = bytes.clone();
+        let cut = bad.len() - 3;
+        bad.truncate(cut);
+        assert!(artifact_from_bytes(&bad).is_err());
     }
 
     #[test]

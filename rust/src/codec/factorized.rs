@@ -6,8 +6,8 @@ use super::container::{
     checked_len, put_f32, put_f64, put_u64, read_shape, shape_header, Cursor,
 };
 use super::{
-    decode_sorted_scatter, largest_within, rel_error_search, Artifact, ArtifactMeta, Budget,
-    Codec, CodecConfig,
+    append_by_recompress, check_append_shapes, decode_sorted_scatter, largest_within,
+    rel_error_search, Appended, Artifact, ArtifactMeta, Budget, Codec, CodecConfig,
 };
 use crate::baselines::cp::{cp_als, CpChain, CpFactors};
 use crate::baselines::tring::{tr_als, TrChain, TrCores};
@@ -56,6 +56,10 @@ impl Artifact for TtArtifact {
 
     fn decode_many_calls(&self) -> u64 {
         self.bulk_calls
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
     }
 
     fn decode_all(&mut self) -> DenseTensor {
@@ -181,6 +185,117 @@ impl Codec for TtdCodec {
             },
             0.0,
         )))
+    }
+
+    fn append_native(&self) -> bool {
+        true
+    }
+
+    /// Incremental TT append: orthogonalise-and-project the new lateral
+    /// slices onto the frozen interface chains
+    /// ([`TtCores::project_slices`]), then — only when a size budget is
+    /// given and overshot — a bounded re-truncation of the bond next to
+    /// the extended core. Projection-only appends leave the base cores
+    /// untouched and come back as a v3 segment; a re-truncation rewrites.
+    fn append(
+        &self,
+        artifact: &mut Box<dyn Artifact>,
+        slices: &DenseTensor,
+        axis: usize,
+        budget: &Budget,
+        cfg: &CodecConfig,
+    ) -> Result<Appended> {
+        check_append_shapes(&artifact.meta().shape, slices, axis)?;
+        let seed = cfg.seed;
+        /// Continuation after the borrow of the concrete artifact ends.
+        enum Next {
+            Done(Appended),
+            /// Slices not absorbed yet: decode + concat + recompress.
+            FallbackRaw,
+            /// Slices already absorbed but the budget is unreachable by
+            /// truncation alone: recompress the *extended* decode.
+            FallbackExtended,
+        }
+        let next = match artifact
+            .as_any_mut()
+            .and_then(|a| a.downcast_mut::<TtArtifact>())
+        {
+            Some(art) => {
+                let dn = slices.shape()[axis];
+                let flat = art.tt.project_slices(axis, slices)?;
+                let (r0, r1) = (art.tt.ranks[axis], art.tt.ranks[axis + 1]);
+                art.tt.push_lateral_slices(axis, dn, &flat)?;
+                let over_budget = budget
+                    .target_params()
+                    .is_some_and(|p| art.tt.num_params() > p);
+                if over_budget {
+                    let p = budget.target_params().unwrap();
+                    let d = art.tt.shape.len();
+                    let bond = if axis + 1 < d { axis + 1 } else { axis }.max(1);
+                    let rb = art.tt.ranks[bond];
+                    // params are linear in ranks[bond]: pick the largest
+                    // bond rank that fits the budget
+                    let per = art.tt.ranks[bond - 1] * art.tt.shape[bond - 1]
+                        + art.tt.shape[bond] * art.tt.ranks[bond + 1];
+                    let fixed = art.tt.num_params() - per * rb;
+                    let target = if p > fixed { (p - fixed) / per } else { 1 };
+                    let target = target.clamp(1, rb);
+                    if target < rb {
+                        art.tt.truncate_bond(bond, target, seed)?;
+                        Next::Done(Appended::Rewritten)
+                    } else {
+                        Next::FallbackExtended
+                    }
+                } else {
+                    let mut seg = Vec::with_capacity(16 + flat.len() * 8);
+                    put_u64(&mut seg, r0 as u64);
+                    put_u64(&mut seg, r1 as u64);
+                    for &v in &flat {
+                        put_f64(&mut seg, v);
+                    }
+                    Next::Done(Appended::Segment(seg))
+                }
+            }
+            None => Next::FallbackRaw,
+        };
+        match next {
+            Next::Done(o) => Ok(o),
+            Next::FallbackRaw => append_by_recompress(self, artifact, slices, axis, budget, cfg),
+            Next::FallbackExtended => {
+                let extended = artifact.decode_all();
+                *artifact = self.compress(&extended, budget, cfg)?;
+                Ok(Appended::Recompressed)
+            }
+        }
+    }
+
+    fn apply_segment(
+        &self,
+        artifact: &mut dyn Artifact,
+        payload: &[u8],
+        axis: usize,
+        rows: usize,
+    ) -> Result<()> {
+        let art = artifact
+            .as_any_mut()
+            .and_then(|a| a.downcast_mut::<TtArtifact>())
+            .ok_or_else(|| anyhow::anyhow!("TT segment applied to a non-TT artifact"))?;
+        let mut c = Cursor::new(payload);
+        let r0 = c.u64()? as usize;
+        let r1 = c.u64()? as usize;
+        if axis + 1 >= art.tt.ranks.len()
+            || r0 != art.tt.ranks[axis]
+            || r1 != art.tt.ranks[axis + 1]
+        {
+            bail!("TT segment ranks {r0}x{r1} mismatch core at axis {axis}");
+        }
+        let n = checked_len(&[rows, r0, r1])?;
+        // 16 header bytes (the two rank u64s) are already consumed
+        if n.saturating_mul(8) > payload.len().saturating_sub(16) {
+            bail!("TT segment truncated: {n} values declared");
+        }
+        let flat = c.f64_vec(n)?;
+        art.tt.push_lateral_slices(axis, rows, &flat)
     }
 }
 
@@ -554,6 +669,10 @@ impl Artifact for TrArtifact {
         self.bulk_calls
     }
 
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+
     fn decode_all(&mut self) -> DenseTensor {
         self.tr.reconstruct()
     }
@@ -665,6 +784,79 @@ impl Codec for TringCodec {
             TrCores { shape, rank, cores },
             0.0,
         )))
+    }
+
+    fn append_native(&self) -> bool {
+        true
+    }
+
+    /// Incremental TR append: one ring-ALS update restricted to the new
+    /// index range ([`TrCores::project_slices`]) with every other core
+    /// frozen — the base cores never change, so the extension always
+    /// travels as a v3 segment. A params budget smaller than the grown
+    /// core set falls back to a from-scratch recompress (ring ranks have
+    /// no cheap bounded truncation).
+    fn append(
+        &self,
+        artifact: &mut Box<dyn Artifact>,
+        slices: &DenseTensor,
+        axis: usize,
+        budget: &Budget,
+        cfg: &CodecConfig,
+    ) -> Result<Appended> {
+        check_append_shapes(&artifact.meta().shape, slices, axis)?;
+        let outcome = match artifact
+            .as_any_mut()
+            .and_then(|a| a.downcast_mut::<TrArtifact>())
+        {
+            Some(art) => {
+                let dn = slices.shape()[axis];
+                let rr = art.tr.rank * art.tr.rank;
+                let grown = art.tr.num_params() + dn * rr;
+                if budget.target_params().is_some_and(|p| grown > p) {
+                    None // over budget before we even start: recompress
+                } else {
+                    let flat = art.tr.project_slices(axis, slices)?;
+                    let mut seg = Vec::with_capacity(8 + flat.len() * 8);
+                    put_u64(&mut seg, art.tr.rank as u64);
+                    for &v in &flat {
+                        put_f64(&mut seg, v);
+                    }
+                    art.tr.push_slices(axis, &flat)?;
+                    Some(Appended::Segment(seg))
+                }
+            }
+            None => None,
+        };
+        match outcome {
+            Some(o) => Ok(o),
+            None => append_by_recompress(self, artifact, slices, axis, budget, cfg),
+        }
+    }
+
+    fn apply_segment(
+        &self,
+        artifact: &mut dyn Artifact,
+        payload: &[u8],
+        axis: usize,
+        rows: usize,
+    ) -> Result<()> {
+        let art = artifact
+            .as_any_mut()
+            .and_then(|a| a.downcast_mut::<TrArtifact>())
+            .ok_or_else(|| anyhow::anyhow!("TR segment applied to a non-TR artifact"))?;
+        let mut c = Cursor::new(payload);
+        let rank = c.u64()? as usize;
+        if rank != art.tr.rank {
+            bail!("TR segment rank {rank} mismatches artifact rank {}", art.tr.rank);
+        }
+        let n = checked_len(&[rows, rank, rank])?;
+        // 8 header bytes (the rank u64) are already consumed
+        if n.saturating_mul(8) > payload.len().saturating_sub(8) {
+            bail!("TR segment truncated: {n} values declared");
+        }
+        let flat = c.f64_vec(n)?;
+        art.tr.push_slices(axis, &flat)
     }
 }
 

@@ -34,7 +34,7 @@ use anyhow::Result;
 use std::io::Write;
 
 pub use coded::{SzCodec, TthreshCodec};
-pub use container::{load_artifact, save_artifact};
+pub use container::{append_segment_file, load_artifact, save_artifact, Segment};
 pub use factorized::{CpdCodec, TringCodec, TtdCodec, TuckerCodec};
 pub use neural::{NeuKronCodec, TensorCodecCodec};
 
@@ -166,6 +166,86 @@ pub trait Artifact: Send {
     fn as_model(&self) -> Option<&CompressedModel> {
         None
     }
+    /// Concrete-type access for codecs whose [`Codec::append`] mutates the
+    /// artifact's factor state in place. `None` (the default) routes
+    /// append through the decode + recompress fallback.
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
+    }
+}
+
+/// Outcome of [`Codec::append`] — what the caller must do to the on-disk
+/// container.
+pub enum Appended {
+    /// Incremental: the base payload is untouched and this codec-specific
+    /// segment encodes the whole extension. Persist it with
+    /// [`container::append_segment_file`] — O(artifact file), never a
+    /// recompress.
+    Segment(Vec<u8>),
+    /// Incremental, but the base state changed too (e.g. a bounded
+    /// re-truncation pass after the extension): rewrite the container
+    /// wholesale with [`container::save_artifact`].
+    Rewritten,
+    /// Fallback: the artifact was decoded, concatenated with the new
+    /// slices and recompressed from scratch; rewrite the container.
+    Recompressed,
+}
+
+impl Appended {
+    /// Stable label for logs and the CLI.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Appended::Segment(_) => "segment",
+            Appended::Rewritten => "rewritten",
+            Appended::Recompressed => "recompressed",
+        }
+    }
+}
+
+/// Shared validation for every append path: `slices` must have the
+/// artifact's order and match its shape on every mode but `axis`.
+pub(crate) fn check_append_shapes(
+    shape: &[usize],
+    slices: &DenseTensor,
+    axis: usize,
+) -> Result<()> {
+    if axis >= shape.len() || slices.order() != shape.len() {
+        anyhow::bail!(
+            "append axis {axis} invalid for shapes {:?} / {:?}",
+            shape,
+            slices.shape()
+        );
+    }
+    for k in 0..shape.len() {
+        if k != axis && slices.shape()[k] != shape[k] {
+            anyhow::bail!(
+                "append slices shape {:?} mismatches artifact shape {:?} at mode {k}",
+                slices.shape(),
+                shape
+            );
+        }
+    }
+    if slices.shape()[axis] == 0 {
+        anyhow::bail!("append needs at least one new slice");
+    }
+    Ok(())
+}
+
+/// The universal append fallback: decode the artifact, concatenate the
+/// new slices along `axis`, recompress from scratch at `budget`, and
+/// replace the artifact. Works for every codec that can compress.
+pub(crate) fn append_by_recompress<C: Codec + ?Sized>(
+    codec: &C,
+    artifact: &mut Box<dyn Artifact>,
+    slices: &DenseTensor,
+    axis: usize,
+    budget: &Budget,
+    cfg: &CodecConfig,
+) -> Result<Appended> {
+    let old = artifact.decode_all();
+    let merged = old.concat(slices, axis)?;
+    *artifact = codec.compress(&merged, budget, cfg)?;
+    Ok(Appended::Recompressed)
 }
 
 /// A named compression method.
@@ -189,6 +269,50 @@ pub trait Codec: Sync {
     ) -> Result<Box<dyn Artifact>>;
     /// Deserialise a container payload written by this codec's artifacts.
     fn read_artifact(&self, payload: &[u8]) -> Result<Box<dyn Artifact>>;
+
+    /// Whether [`Codec::append`] extends an artifact incrementally (cost
+    /// linear in the new entries) or falls back to decode + recompress.
+    fn append_native(&self) -> bool {
+        false
+    }
+
+    /// Extend a compressed artifact along `axis` with `slices` (a tensor
+    /// matching the artifact's shape on every other mode) — the streaming
+    /// ingest path for tensors that grow along one (typically temporal)
+    /// mode. `budget` bounds the extended artifact where the codec can
+    /// honour it (re-truncation for TT, the compression target for the
+    /// recompress fallback).
+    ///
+    /// The default decodes, concatenates and recompresses from scratch;
+    /// codecs with a native incremental path (TT/TR core extension, the
+    /// neural warm-start) override it. See [`Appended`] for what the
+    /// caller must persist.
+    fn append(
+        &self,
+        artifact: &mut Box<dyn Artifact>,
+        slices: &DenseTensor,
+        axis: usize,
+        budget: &Budget,
+        cfg: &CodecConfig,
+    ) -> Result<Appended> {
+        check_append_shapes(&artifact.meta().shape, slices, axis)?;
+        append_by_recompress(self, artifact, slices, axis, budget, cfg)
+    }
+
+    /// Apply a `.tcz` v3 append-segment payload (the `Segment` arm of
+    /// [`Codec::append`]) to a loaded artifact: extend it by `rows`
+    /// indices along `axis`. Must reproduce the in-memory append bit for
+    /// bit. Only codecs that emit segments implement it.
+    fn apply_segment(
+        &self,
+        artifact: &mut dyn Artifact,
+        payload: &[u8],
+        axis: usize,
+        rows: usize,
+    ) -> Result<()> {
+        let _ = (artifact, payload, axis, rows);
+        anyhow::bail!("{}: segmented containers are not supported", self.name())
+    }
 
     /// Parse only the payload *header* (shape, ranks, size fields) into
     /// metadata — no factor arrays, coded streams or model parameters are

@@ -2,7 +2,10 @@
 //! NeuKron-style baseline, both producing a [`CompressedModel`] decoded by
 //! the shared pure-Rust/XLA machinery.
 
-use super::{Artifact, ArtifactMeta, Budget, Codec, CodecConfig};
+use super::{
+    append_by_recompress, check_append_shapes, Appended, Artifact, ArtifactMeta, Budget, Codec,
+    CodecConfig,
+};
 use crate::baselines::neukron;
 use crate::compress::format::encode_model;
 use crate::compress::{CompressedModel, Decompressor};
@@ -15,6 +18,9 @@ use std::io::Write;
 /// The (h, R) pairs with AOT train artifacts — mirrors
 /// `python/compile/configs.TC_HR`.
 const TC_HR: &[(usize, usize)] = &[(5, 5), (6, 6), (8, 8), (10, 10)];
+/// Fine-tune epoch cap for the streaming-append warm start: the model is
+/// already trained on the old range, a few replay epochs suffice.
+const APPEND_EPOCHS: usize = 8;
 /// NeuKron hidden sizes with AOT artifacts — mirrors `configs.NK_H`.
 const NK_H: &[usize] = &[8, 12];
 
@@ -168,6 +174,56 @@ impl Codec for TensorCodecCodec {
             bail!("payload is not a TensorCodec model");
         }
         Ok(Box::new(NeuralArtifact::from_model(model, "tensorcodec")))
+    }
+
+    fn append_native(&self) -> bool {
+        true
+    }
+
+    /// Neural streaming append: warm-start fine-tuning restricted to the
+    /// new index range. NTTD's backbone is constant-size (no per-index
+    /// embedding), so the "extended mode embedding" is the orderings π:
+    /// the new indices join `π_axis` as an identity tail addressing
+    /// previously-phantom fold positions (the padded capacity the fold
+    /// spec already reserves). θ then fine-tunes for a few epochs over a
+    /// mixed replay stream — the model's own reconstruction of the old
+    /// range plus the new slices — with π frozen and the model's original
+    /// mean/std kept (decode constants must not drift). Falls back to a
+    /// from-scratch recompress when the padded fold capacity along `axis`
+    /// is exhausted. Needs the XLA AOT runtime, like all neural training.
+    fn append(
+        &self,
+        artifact: &mut Box<dyn Artifact>,
+        slices: &DenseTensor,
+        axis: usize,
+        budget: &Budget,
+        cfg: &CodecConfig,
+    ) -> Result<Appended> {
+        check_append_shapes(&artifact.meta().shape, slices, axis)?;
+        // clone out of the borrow so the fallback can reuse `artifact`
+        let Some(mut model) = artifact.as_model().cloned() else {
+            return append_by_recompress(self, artifact, slices, axis, budget, cfg);
+        };
+        let old_n = model.spec.orig_shape[axis];
+        let new_n = old_n + slices.shape()[axis];
+        if new_n > model.spec.padded[axis] {
+            // fold capacity exhausted: the digit alphabet itself must grow
+            return append_by_recompress(self, artifact, slices, axis, budget, cfg);
+        }
+        model.orders.perms[axis].extend(old_n..new_n);
+        model.spec.orig_shape[axis] = new_n;
+        // mixed replay stream: the old range as the model currently
+        // decodes it, plus the genuinely new slices
+        let replay = artifact.decode_all().concat(slices, axis)?;
+        let mut tcfg = cfg.train.clone();
+        tcfg.reorder_every = 0; // π is frozen during an append
+        tcfg.epochs = tcfg.epochs.clamp(1, APPEND_EPOCHS);
+        tcfg.param_dtype = model.param_dtype;
+        tcfg.no_tsp_init = true;
+        let mut trainer = Trainer::warm_start(&replay, tcfg, &model)?;
+        let tuned = trainer.fit()?;
+        *artifact = Box::new(NeuralArtifact::from_model(tuned, "tensorcodec"));
+        Ok(Appended::Rewritten)
     }
 }
 

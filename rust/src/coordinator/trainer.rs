@@ -135,6 +135,59 @@ impl<'a> Trainer<'a> {
         })
     }
 
+    /// Build a trainer that resumes from an existing model — the
+    /// streaming-append fine-tune path. The fold spec, orderings,
+    /// normalisation and parameters all come from `model` (no TSP init,
+    /// no re-derived mean/std: decode must keep using the model's own
+    /// constants), so a short `fit()` warm-starts θ on `tensor`, which is
+    /// the mixed replay stream (old reconstruction + the new slices).
+    ///
+    /// `model.spec.orig_shape` must match `tensor` — for an append that
+    /// means the caller already extended the shape and orderings (the
+    /// padded fold capacity admits the new indices as former phantoms).
+    pub fn warm_start(
+        tensor: &'a DenseTensor,
+        cfg: TrainConfig,
+        model: &CompressedModel,
+    ) -> Result<Self> {
+        if model.spec.orig_shape != tensor.shape() {
+            anyhow::bail!(
+                "warm start shape mismatch: model {:?} vs tensor {:?}",
+                model.spec.orig_shape,
+                tensor.shape()
+            );
+        }
+        let variant = model.params.variant;
+        let mut rt = Runtime::cpu()?;
+        let (h, r) = (model.params.h, model.params.r);
+        let spec = model.spec.clone();
+        let train_info = rt.find(variant.as_str(), "train", spec.dp, h, r)?;
+        let fwd_info = rt.find(variant.as_str(), "fwd", spec.dp, h, r)?;
+        let texec = TrainExec::new(&mut rt, &train_info, model.params.clone())?;
+        let fwd = ForwardExec::new(&mut rt, &fwd_info, &model.params)?;
+        let rng = Pcg64::seeded(cfg.seed ^ 0x7e45);
+        let dp = spec.dp;
+        let b = texec.batch();
+        Ok(Trainer {
+            tensor,
+            cfg,
+            variant,
+            spec,
+            orders: model.orders.clone(),
+            rt,
+            texec,
+            fwd,
+            mean: model.mean,
+            std: model.std,
+            rng,
+            init_seconds: 0.0,
+            strides: StrideTable::new(tensor.shape()),
+            idx_buf: vec![0i32; b * dp],
+            tgt_buf: vec![0f32; b],
+            w_buf: vec![0f32; b],
+        })
+    }
+
     pub fn spec(&self) -> &FoldSpec {
         &self.spec
     }

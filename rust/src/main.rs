@@ -37,6 +37,7 @@ const VALUE_FLAGS: &[&str] = &[
     "input",
     "out",
     "model",
+    "axis",
     "dir",
     "cache-bytes",
     "index",
@@ -283,6 +284,68 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `tcz append`: extend a compressed artifact along one (typically
+/// temporal) mode with new slices — without recompressing the history
+/// where the codec supports it (TT/TR core extension, neural warm-start).
+fn cmd_append(args: &Args) -> Result<()> {
+    use tensorcodec::codec::Appended;
+    let path = PathBuf::from(args.req("model")?);
+    let mut artifact = codec::load_artifact(&path)?;
+    let meta = artifact.meta();
+    check_method(args, &meta)?;
+    let cdc = codec::by_name(meta.method)
+        .with_context(|| format!("method `{}` not registered", meta.method))?;
+    let slices = load_tensor(args)?;
+    let axis: usize = args.get("axis").unwrap_or("0").parse().context("axis")?;
+    if axis >= meta.shape.len() {
+        bail!(
+            "--axis {axis} out of range for artifact order {}",
+            meta.shape.len()
+        );
+    }
+    let ccfg = build_codec_config(args)?;
+    // Default budget: scale the artifact's current size with the growth
+    // ratio, so native appends stay native and the recompress fallback
+    // matches the original operating point.
+    let budget = match parse_budget(args)? {
+        Some(b) => b,
+        None => {
+            let old_total: usize = meta.shape.iter().product();
+            let new_total = old_total / meta.shape[axis].max(1)
+                * (meta.shape[axis] + slices.shape().get(axis).copied().unwrap_or(0));
+            let target = (meta.size_bytes as f64 * new_total as f64 / old_total.max(1) as f64)
+                .ceil() as usize;
+            Budget::Bytes(target.max(meta.size_bytes))
+        }
+    };
+    let timer = Timer::start();
+    let outcome = cdc.append(&mut artifact, &slices, axis, &budget, &ccfg)?;
+    let seconds = timer.seconds();
+    match &outcome {
+        Appended::Segment(payload) => {
+            let seg = codec::Segment {
+                axis,
+                rows: slices.shape()[axis],
+                payload: payload.clone(),
+            };
+            codec::append_segment_file(&path, &seg, &artifact.meta().shape, artifact.size_bytes())?;
+        }
+        Appended::Rewritten | Appended::Recompressed => {
+            codec::save_artifact(&path, artifact.as_ref())?;
+        }
+    }
+    let new_meta = artifact.meta();
+    println!(
+        "method={} append={} shape={:?} size={}B seconds={:.2}",
+        new_meta.method,
+        outcome.kind(),
+        new_meta.shape,
+        new_meta.size_bytes,
+        seconds
+    );
+    Ok(())
+}
+
 fn cmd_decompress(args: &Args) -> Result<()> {
     let mut artifact = codec::load_artifact(&PathBuf::from(args.req("model")?))?;
     check_method(args, &artifact.meta())?;
@@ -448,6 +511,14 @@ COMMANDS
               [--method <codec>] [--budget-params N|--budget-bytes N|--rel-error X]
               [--scale 0.25] [--data-seed 7] [--config run.conf]
               [--set k=v ...] [--seed 0] [--iters N] [--quant-bits 10] [--verbose]
+  append      --model <m.tcz> --input <new.npy>|--dataset <name> [--axis 0]
+              [--budget-params N|--budget-bytes N] [--set k=v ...]
+              extends the artifact along --axis with the new slices (their
+              shape must match on every other mode). TT/TR extend their
+              cores incrementally (cost linear in the new entries; the
+              .tcz becomes a v3 segmented container), TensorCodec
+              warm-start fine-tunes, other codecs decode + recompress.
+              Default budget: the current size scaled by the growth ratio.
   decompress  --model <m.tcz> --out <recon.npy> [--method <codec>]
   get         --model <m.tcz> --index i,j,k [--index ...] [--method <codec>]
   eval        --model <m.tcz> --dataset <name> [--scale ..] [--data-seed ..]
@@ -508,6 +579,7 @@ fn main() {
     }
     let result = match args.cmd.as_str() {
         "compress" => cmd_compress(&args),
+        "append" => cmd_append(&args),
         "decompress" => cmd_decompress(&args),
         "get" => cmd_get(&args),
         "eval" => cmd_eval(&args),

@@ -9,7 +9,7 @@ use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-/// Metadata reply of `open`/`stat`.
+/// Metadata reply of `open`/`stat`/`reload`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RemoteMeta {
     pub method: String,
@@ -18,6 +18,9 @@ pub struct RemoteMeta {
     /// True when requests go through the bulk `decode_many` queue (false:
     /// the XLA-batched neural path).
     pub bulk: bool,
+    /// Server-side hot-reload generation (0 on first load; `stat` replies
+    /// omit it and report 0).
+    pub generation: u64,
 }
 
 /// One connection to an artifact-store server.
@@ -77,6 +80,14 @@ impl ServeClient {
         parse_meta(&body)
     }
 
+    /// Notify the server that the artifact's file changed on disk (e.g.
+    /// after `tcz append`): revalidates, hot-reloads when stale, and
+    /// returns the fresh metadata with its reload generation.
+    pub fn reload(&mut self, name: &str) -> Result<RemoteMeta> {
+        let body = self.roundtrip(&format!("reload {name}"))?;
+        parse_meta(&body)
+    }
+
     /// Decode one entry.
     pub fn get(&mut self, name: &str, coords: &[usize]) -> Result<f32> {
         let body = self.roundtrip(&format!("get {name} {}", fmt_coords(coords)))?;
@@ -116,6 +127,7 @@ fn parse_meta(body: &str) -> Result<RemoteMeta> {
     let mut shape = None;
     let mut bytes = None;
     let mut bulk = None;
+    let mut generation = 0u64;
     for field in body.split_whitespace() {
         let (k, v) = field
             .split_once('=')
@@ -131,6 +143,7 @@ fn parse_meta(body: &str) -> Result<RemoteMeta> {
             }
             "bytes" => bytes = Some(v.parse::<usize>().context("bad bytes")?),
             "bulk" => bulk = Some(v == "true"),
+            "generation" => generation = v.parse().context("bad generation")?,
             _ => {} // forward-compatible: ignore unknown fields
         }
     }
@@ -139,5 +152,6 @@ fn parse_meta(body: &str) -> Result<RemoteMeta> {
         shape: shape.context("missing shape")?,
         bytes: bytes.context("missing bytes")?,
         bulk: bulk.unwrap_or(true),
+        generation,
     })
 }

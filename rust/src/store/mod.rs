@@ -5,9 +5,12 @@
 //! models, queried concurrently) — instead of one pre-loaded artifact per
 //! server:
 //!
-//! * [`ArtifactStore`] — lazily loads `.tcz` v1/v2 containers by name from
-//!   a directory and keeps them behind an LRU cache with a configurable
-//!   byte budget.
+//! * [`ArtifactStore`] — lazily loads `.tcz` v1/v2/v3 containers by name
+//!   from a directory and keeps them behind an LRU cache with a
+//!   configurable byte budget. `open` revalidates resident entries
+//!   against the file's mtime/length and hot-reloads changed containers
+//!   (bumping [`StoreEntry::generation`] and recharging the byte budget)
+//!   — the serving side of the streaming-append pipeline.
 //! * [`shard::Shard`] — a per-artifact batch queue (reusing
 //!   [`crate::coordinator::batcher::BatchPolicy`]): point queries from
 //!   many connections coalesce into one `decode_many` bulk decode per
@@ -30,6 +33,23 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+/// File identity at load time: mtime + length. A mismatch on a later
+/// `open` means the container changed on disk (e.g. `tcz append` replaced
+/// it) and triggers a hot reload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct FileStamp {
+    mtime: Option<std::time::SystemTime>,
+    len: u64,
+}
+
+fn file_stamp(path: &Path) -> Result<FileStamp> {
+    let md = std::fs::metadata(path).with_context(|| format!("stat {}", path.display()))?;
+    Ok(FileStamp {
+        mtime: md.modified().ok(),
+        len: md.len(),
+    })
+}
+
 /// One resident artifact: container metadata plus the decoder behind a
 /// mutex (decode takes `&mut self`; shards serialise access per artifact,
 /// so the mutex is uncontended on the hot path).
@@ -40,17 +60,28 @@ pub struct StoreEntry {
     /// artifact's own [`Artifact::resident_bytes`] (whichever is larger —
     /// TTHRESH/SZ cache a full dense decode on first `get`, so their
     /// serving footprint is the dense tensor, not the coded stream).
+    /// Recomputed on every hot reload, so a grown artifact is recharged
+    /// against the byte budget instead of riding its stale load-time
+    /// charge.
     pub bytes: usize,
+    /// Per-name reload counter: 0 for the first load, bumped every time a
+    /// changed file is hot-reloaded. In-flight users of an older
+    /// generation keep their `Arc` (bit-stable until they finish); new
+    /// opens see the new generation.
+    pub generation: u64,
+    stamp: FileStamp,
     pub artifact: Mutex<Box<dyn Artifact>>,
     last_used: AtomicU64,
 }
 
 /// The result of [`ArtifactStore::open`]: the entry plus any names the
 /// byte budget evicted to make room (callers that keep per-artifact state,
-/// like the serving shards, drop theirs for these names).
+/// like the serving shards, drop theirs for these names), and whether this
+/// open hot-reloaded a changed file.
 pub struct Opened {
     pub entry: Arc<StoreEntry>,
     pub evicted: Vec<String>,
+    pub reloaded: bool,
 }
 
 struct Inner {
@@ -152,61 +183,101 @@ impl ArtifactStore {
         self.inner.lock().expect("store lock").entries.len()
     }
 
-    /// Metadata for `name` without touching the cache: a resident entry
-    /// answers from memory (no recency bump), a cold one is answered by a
-    /// header-only container peek
+    /// Metadata for `name` without touching the cache: a resident,
+    /// still-current entry answers from memory (no recency bump); a cold
+    /// one — or a resident entry whose file changed on disk — is answered
+    /// by a header-only container peek
     /// ([`crate::codec::container::peek_meta_file`]) — no factor arrays or
     /// coded streams are decoded, and nothing is loaded into (or evicted
     /// from) the LRU. A metadata probe must never evict an artifact that
-    /// is serving traffic.
+    /// is serving traffic, and after an append it must already report the
+    /// extended shape even though nothing reloaded yet.
     pub fn stat(&self, name: &str) -> Result<ArtifactMeta> {
         validate_name(name)?;
-        if let Some(entry) = self.peek(name) {
-            return Ok(entry.meta.clone());
-        }
         let path = self.dir.join(format!("{name}.tcz"));
+        if let Some(entry) = self.peek(name) {
+            match file_stamp(&path) {
+                // file changed on disk: report the on-disk header
+                Ok(now) if now != entry.stamp => {}
+                // unchanged — or unstattable (deleted out from under a
+                // still-serving entry): answer from memory, as before
+                _ => return Ok(entry.meta.clone()),
+            }
+        }
         crate::codec::container::peek_meta_file(&path)
     }
 
     /// Get `name`, loading `<dir>/<name>.tcz` on a cache miss and evicting
     /// least-recently-used entries past the byte budget.
+    ///
+    /// A resident entry is revalidated against the file's mtime/length:
+    /// when the container changed on disk (e.g. `tcz append` atomically
+    /// replaced it) the entry is **hot-reloaded** — the returned entry
+    /// carries a bumped [`StoreEntry::generation`] and the byte budget is
+    /// recharged with the new size (a grown artifact cannot ride its stale
+    /// load-time charge). Holders of the old entry's `Arc` keep decoding
+    /// the old generation bit-stably until they drop it; only new opens
+    /// see the extended shape.
     pub fn open(&self, name: &str) -> Result<Opened> {
         validate_name(name)?;
+        let path = self.dir.join(format!("{name}.tcz"));
+        let mut stale_generation = None;
         if let Some(entry) = self.peek(name) {
-            self.touch(&entry);
-            return Ok(Opened {
-                entry,
-                evicted: Vec::new(),
-            });
+            match file_stamp(&path) {
+                // changed on disk: fall through to a fresh load
+                Ok(now) if now != entry.stamp => stale_generation = Some(entry.generation),
+                // unchanged — or unstattable (deleted out from under a
+                // still-serving entry): keep serving the resident artifact
+                _ => {
+                    self.touch(&entry);
+                    return Ok(Opened {
+                        entry,
+                        evicted: Vec::new(),
+                        reloaded: false,
+                    });
+                }
+            }
         }
         // Load outside the lock: a slow container read must not block
-        // requests for already-resident artifacts.
-        let path = self.dir.join(format!("{name}.tcz"));
+        // requests for already-resident artifacts. The stamp is taken
+        // BEFORE the read: if a writer replaces the file mid-read we store
+        // old-ish content under the pre-replace stamp, which cannot match
+        // the new file — the next open heals it with one extra reload
+        // (a post-read stamp could pin stale content forever).
+        let stamp = file_stamp(&path)?;
         let artifact = load_artifact(&path)?;
-        let file_bytes = std::fs::metadata(&path)
-            .with_context(|| format!("stat {}", path.display()))?
-            .len() as usize;
-        let bytes = file_bytes.max(artifact.resident_bytes());
+        let bytes = (stamp.len as usize).max(artifact.resident_bytes());
         let meta = artifact.meta();
+        let mut inner = self.inner.lock().expect("store lock");
+        let mut reloaded = stale_generation.is_some();
+        let mut generation = stale_generation.map_or(0, |g| g + 1);
+        if let Some(existing) = inner.entries.get(name) {
+            if existing.stamp == stamp {
+                // another thread (re)loaded the same file while we did
+                let entry = existing.clone();
+                drop(inner);
+                self.touch(&entry);
+                return Ok(Opened {
+                    entry,
+                    evicted: Vec::new(),
+                    reloaded: false,
+                });
+            }
+            // replace the stale entry, recharging the byte budget
+            generation = generation.max(existing.generation + 1);
+            reloaded = true;
+            let gone = inner.entries.remove(name).expect("resident entry");
+            inner.resident_bytes -= gone.bytes;
+        }
         let entry = Arc::new(StoreEntry {
             name: name.to_string(),
             meta,
             bytes,
+            generation,
+            stamp,
             artifact: Mutex::new(artifact),
             last_used: AtomicU64::new(0),
         });
-        self.touch(&entry);
-        let mut inner = self.inner.lock().expect("store lock");
-        if let Some(existing) = inner.entries.get(name) {
-            // another thread loaded it while we did; keep theirs
-            let entry = existing.clone();
-            drop(inner);
-            self.touch(&entry);
-            return Ok(Opened {
-                entry,
-                evicted: Vec::new(),
-            });
-        }
         inner.resident_bytes += entry.bytes;
         inner.entries.insert(name.to_string(), entry.clone());
         let mut evicted = Vec::new();
@@ -223,7 +294,13 @@ impl ArtifactStore {
             }
             evicted.push(victim);
         }
-        Ok(Opened { entry, evicted })
+        drop(inner);
+        self.touch(&entry);
+        Ok(Opened {
+            entry,
+            evicted,
+            reloaded,
+        })
     }
 }
 
@@ -321,6 +398,47 @@ mod tests {
         let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
         let names = store.list().unwrap();
         assert_eq!(names, vec!["alpha".to_string(), "zeta".to_string()]);
+    }
+
+    #[test]
+    fn hot_reload_bumps_generation_and_recharges_budget() {
+        let dir = store_dir("reload");
+        save(&dir, "g", "ttd", &[5, 4, 3], 8);
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        let o1 = store.open("g").unwrap();
+        assert!(!o1.reloaded);
+        assert_eq!(o1.entry.generation, 0);
+        let bytes_before = store.resident_bytes();
+        let old_entry = o1.entry.clone();
+        let old_decode = old_entry.artifact.lock().unwrap().decode_all();
+        // replace the file with a *larger* artifact, atomically (temp +
+        // rename, like `tcz append` does)
+        let t = DenseTensor::random_uniform(&[9, 8, 7], 9);
+        let codec = codec::by_name("ttd").unwrap();
+        let a = codec
+            .compress(&t, &Budget::Params(900), &CodecConfig::default())
+            .unwrap();
+        let tmp = dir.join("g.tmp");
+        codec::save_artifact(&tmp, a.as_ref()).unwrap();
+        std::fs::rename(&tmp, dir.join("g.tcz")).unwrap();
+        // stat reports the new shape from the file header, without a reload
+        assert_eq!(store.stat("g").unwrap().shape, vec![9, 8, 7]);
+        assert_eq!(store.peek("g").unwrap().generation, 0, "stat must not reload");
+        let o2 = store.open("g").unwrap();
+        assert!(o2.reloaded, "changed file must hot-reload on open");
+        assert_eq!(o2.entry.generation, 1);
+        assert_eq!(o2.entry.meta.shape, vec![9, 8, 7]);
+        // recharge: the budget carries the new size, not the stale charge
+        assert_eq!(store.resident_bytes(), o2.entry.bytes);
+        assert!(store.resident_bytes() > bytes_before);
+        assert_eq!(store.resident_count(), 1);
+        // in-flight holders of the old generation stay bit-stable
+        let again = old_entry.artifact.lock().unwrap().decode_all();
+        assert_eq!(old_decode.data(), again.data());
+        // unchanged file: no further reload, generation sticks
+        let o3 = store.open("g").unwrap();
+        assert!(!o3.reloaded);
+        assert_eq!(o3.entry.generation, 1);
     }
 
     #[test]

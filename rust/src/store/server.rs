@@ -16,14 +16,28 @@
 //! methods                          -> OK <name,name,...>        registered codecs
 //! list                             -> OK <name,name,...>        artifacts in the dir
 //! open <artifact>                  -> OK method=<m> shape=<i,j,k> bytes=<n> bulk=<true|false>
+//!                                     generation=<g>
 //! stat <artifact>                  -> same reply as open (starts no shard, never
 //!                                     loads into or evicts from the LRU cache)
+//! reload <artifact>                -> same reply as open; additionally forces a
+//!                                     revalidation against the file on disk
 //! get <artifact> <i,j,k>           -> OK <value>
 //! batch-get <artifact> <i,j,k;...> -> OK <v1,v2,...>            values in request order
 //! ```
 //!
 //! A malformed frame (unknown command, bad coordinates, unknown artifact)
 //! errors that one frame; the connection and the serving threads stay up.
+//!
+//! ## Hot reload
+//!
+//! `open` and `reload` revalidate the artifact against the file's
+//! mtime/length (the store's hot-reload path): when a `tcz append` or a
+//! recompress atomically replaced the container, the old shard is retired
+//! and a fresh one starts on the new generation. In-flight `get`s queued
+//! on the old shard still decode through their own entry `Arc` — bit-
+//! stable to the end — while new opens see the extended shape. Plain
+//! `get`/`batch-get` on a cached shard never stat the filesystem: the
+//! reload notification path is an explicit `open`/`reload` frame.
 
 use super::shard::Shard;
 use super::ArtifactStore;
@@ -96,38 +110,80 @@ impl ArtifactServer {
             let mut shards = self.shards.lock().expect("shard map");
             if let Some(shard) = shards.get(name) {
                 if let Some(entry) = self.store.peek(name) {
-                    self.store.touch_entry(&entry);
-                    return Ok(shard.clone());
+                    if Arc::ptr_eq(shard.entry(), &entry) {
+                        self.store.touch_entry(&entry);
+                        return Ok(shard.clone());
+                    }
+                    // a hot reload replaced the entry under this shard —
+                    // retire the old generation and rebuild below
                 }
-                // the store evicted this entry out from under the shard —
-                // drop the stale shard and rebuild below
+                // (or the store evicted this entry out from under the
+                // shard) — drop the stale shard and rebuild below
                 shards.remove(name);
             }
         }
         let opened = self.store.open(name)?;
+        self.install_shard(name, opened).map(|(shard, _)| shard)
+    }
+
+    /// Cache a shard for a freshly opened entry, healing any raced state:
+    /// shards of evicted names are dropped, a raced same-entry shard is
+    /// reused, a stale-generation shard is retired.
+    fn install_shard(&self, name: &str, opened: super::Opened) -> Result<(Arc<Shard>, bool)> {
+        let reloaded = opened.reloaded;
         let mut shards = self.shards.lock().expect("shard map");
         for gone in &opened.evicted {
             shards.remove(gone);
         }
         if let Some(shard) = shards.get(name) {
-            if self.store.peek(name).is_some() {
-                return Ok(shard.clone()); // another thread won the race
+            if Arc::ptr_eq(shard.entry(), &opened.entry) {
+                return Ok((shard.clone(), reloaded)); // another thread won the race
             }
-            shards.remove(name);
+            shards.remove(name); // evicted or old generation
         }
         let shard = Arc::new(Shard::start(opened.entry, &self.policy, self.allow_xla)?);
-        if self.store.peek(name).is_some() {
+        if self
+            .store
+            .peek(name)
+            .is_some_and(|e| Arc::ptr_eq(shard.entry(), &e))
+        {
             shards.insert(name.to_string(), shard.clone());
         }
-        Ok(shard)
+        Ok((shard, reloaded))
+    }
+
+    /// Open `name` through the store's revalidating path: a changed file
+    /// is hot-reloaded and the old-generation shard retired. Returns the
+    /// (possibly fresh) shard plus whether a reload happened.
+    fn shard_validated(&self, name: &str) -> Result<(Arc<Shard>, bool)> {
+        let opened = self.store.open(name)?;
+        self.install_shard(name, opened)
     }
 
     /// Load `name` (starting its shard) and return its metadata plus
     /// whether requests go through the bulk `decode_many` queue (`false`
-    /// means the XLA-batched neural path).
+    /// means the XLA-batched neural path). Revalidates against the file on
+    /// disk: after an append, an `open` sees the extended shape.
     pub fn open(&self, name: &str) -> Result<(ArtifactMeta, bool)> {
-        let shard = self.shard(name)?;
+        let (shard, _) = self.shard_validated(name)?;
         Ok((shard.entry().meta.clone(), !shard.is_xla()))
+    }
+
+    /// The reload notification path: revalidate `name` against the file on
+    /// disk (same as `open`) and report metadata, queue kind and the
+    /// entry's reload generation.
+    pub fn reload(&self, name: &str) -> Result<(ArtifactMeta, bool, u64)> {
+        let (shard, _) = self.shard_validated(name)?;
+        Ok((
+            shard.entry().meta.clone(),
+            !shard.is_xla(),
+            shard.entry().generation,
+        ))
+    }
+
+    /// The current reload generation of `name` (loads it if cold).
+    pub fn generation(&self, name: &str) -> Result<u64> {
+        Ok(self.shard(name)?.entry().generation)
     }
 
     /// Metadata for `name` without starting a shard or touching the LRU
@@ -199,15 +255,21 @@ fn dispatch_frame(server: &ArtifactServer, line: &str) -> Result<String> {
             Ok(format!("OK {}", names.join(",")))
         }
         "list" => Ok(format!("OK {}", server.list()?.join(","))),
-        "open" | "stat" => {
+        "open" | "reload" => {
+            // both verbs revalidate against the file on disk; `reload` is
+            // the explicit notification form for writers that just
+            // appended
             if rest.is_empty() {
                 bail!("usage: {cmd} <artifact>");
             }
-            let (meta, bulk) = if cmd == "open" {
-                server.open(rest)?
-            } else {
-                server.stat(rest)?
-            };
+            let (meta, bulk, generation) = server.reload(rest)?;
+            Ok(format!("{} generation={generation}", meta_reply(&meta, bulk)))
+        }
+        "stat" => {
+            if rest.is_empty() {
+                bail!("usage: stat <artifact>");
+            }
+            let (meta, bulk) = server.stat(rest)?;
             Ok(meta_reply(&meta, bulk))
         }
         "get" => {

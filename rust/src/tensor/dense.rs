@@ -1,6 +1,7 @@
 //! Row-major dense tensor of f32 values.
 
 use crate::util::Pcg64;
+use anyhow::{bail, Result};
 
 /// A d-order dense tensor, row-major (last mode fastest).
 #[derive(Debug, Clone, PartialEq)]
@@ -221,6 +222,41 @@ impl DenseTensor {
         (mean as f32, var.sqrt() as f32)
     }
 
+    /// Concatenate `other` onto the end of `self` along mode `axis`
+    /// (the streaming-append merge: every other mode length must match).
+    pub fn concat(&self, other: &DenseTensor, axis: usize) -> Result<DenseTensor> {
+        if axis >= self.order() || other.order() != self.order() {
+            bail!(
+                "concat axis {axis} invalid for orders {} / {}",
+                self.order(),
+                other.order()
+            );
+        }
+        for k in 0..self.order() {
+            if k != axis && self.shape[k] != other.shape[k] {
+                bail!(
+                    "concat shape mismatch at mode {k}: {:?} vs {:?}",
+                    self.shape,
+                    other.shape()
+                );
+            }
+        }
+        let inner = self.strides[axis];
+        let na = self.shape[axis];
+        let nb = other.shape[axis];
+        let outer = self.len() / (inner * na);
+        let mut data = Vec::with_capacity(self.len() + other.len());
+        for o in 0..outer {
+            let a = o * na * inner;
+            data.extend_from_slice(&self.data[a..a + na * inner]);
+            let b = o * nb * inner;
+            data.extend_from_slice(&other.data[b..b + nb * inner]);
+        }
+        let mut shape = self.shape.clone();
+        shape[axis] = na + nb;
+        Ok(DenseTensor::from_data(&shape, data))
+    }
+
     /// Tensor with i.i.d. uniform [0,1) entries (scalability experiments).
     pub fn random_uniform(shape: &[usize], seed: u64) -> Self {
         let mut rng = Pcg64::seeded(seed);
@@ -311,6 +347,35 @@ mod tests {
             inv[old_i] = new_i;
         }
         assert_eq!(p.permute_mode(1, &inv), t);
+    }
+
+    #[test]
+    fn concat_along_every_axis() {
+        let t = t3();
+        for axis in 0..3 {
+            let mut extra_shape = t.shape().to_vec();
+            extra_shape[axis] = 2;
+            let n: usize = extra_shape.iter().product();
+            let extra =
+                DenseTensor::from_data(&extra_shape, (0..n).map(|i| 100.0 + i as f32).collect());
+            let c = t.concat(&extra, axis).unwrap();
+            assert_eq!(c.shape()[axis], t.shape()[axis] + 2);
+            // old entries unchanged, new entries read from `extra`
+            for lin in 0..t.len() {
+                let idx = t.unravel(lin);
+                assert_eq!(c.at(&idx), t.at(&idx), "axis {axis} old {idx:?}");
+            }
+            for lin in 0..extra.len() {
+                let mut idx = extra.unravel(lin);
+                let v = extra.at(&idx);
+                idx[axis] += t.shape()[axis];
+                assert_eq!(c.at(&idx), v, "axis {axis} new {idx:?}");
+            }
+        }
+        // shape mismatch off-axis is rejected
+        let bad = DenseTensor::zeros(&[2, 4, 2]);
+        assert!(t.concat(&bad, 0).is_err());
+        assert!(t.concat(&bad, 1).is_ok());
     }
 
     #[test]

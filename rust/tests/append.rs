@@ -1,0 +1,386 @@
+//! Streaming-append pipeline tests: `Codec::append` equivalence against a
+//! from-scratch recompress at the same budget, the v3 segmented container
+//! round trip, the recompress fallback for codecs without a native path,
+//! and the `tcz append` CLI end-to-end. The neural warm-start path is
+//! XLA-gated and self-skips without the AOT artifacts.
+
+use std::path::PathBuf;
+use std::process::Command;
+use tensorcodec::codec::{self, Appended, Budget, CodecConfig};
+use tensorcodec::metrics::fitness;
+use tensorcodec::tensor::DenseTensor;
+
+/// Exact low-rank ground truth (rank-2 CP, so TT/TR/Tucker rank ≤ 2):
+/// every codec at a modest budget can represent it well, which makes the
+/// append-vs-recompress comparison meaningful.
+fn low_rank_tensor(shape: &[usize], seed: u64) -> DenseTensor {
+    let mut rng = tensorcodec::util::Pcg64::seeded(seed);
+    let d = shape.len();
+    let factors: Vec<Vec<Vec<f32>>> = (0..2)
+        .map(|_| {
+            (0..d)
+                .map(|k| (0..shape[k]).map(|_| rng.normal() * 0.7).collect())
+                .collect()
+        })
+        .collect();
+    let mut out = DenseTensor::zeros(shape);
+    let n = out.len();
+    for lin in 0..n {
+        let idx = out.unravel(lin);
+        let mut v = 0.0f32;
+        for f in &factors {
+            let mut p = 1.0f32;
+            for (k, &i) in idx.iter().enumerate() {
+                p *= f[k][i];
+            }
+            v += p;
+        }
+        out.data_mut()[lin] = v;
+    }
+    out
+}
+
+/// Extract `count` indices starting at `start` along `axis`.
+fn slice_range(full: &DenseTensor, axis: usize, start: usize, count: usize) -> DenseTensor {
+    let mut shape = full.shape().to_vec();
+    shape[axis] = count;
+    let mut out = DenseTensor::zeros(&shape);
+    for lin in 0..full.len() {
+        let mut idx = full.unravel(lin);
+        if idx[axis] >= start && idx[axis] < start + count {
+            let v = full.data()[lin];
+            idx[axis] -= start;
+            out.set(&idx, v);
+        }
+    }
+    out
+}
+
+/// Split `full` into (base, tail) along `axis`, tail holding the last
+/// `dn` indices.
+fn split(full: &DenseTensor, axis: usize, dn: usize) -> (DenseTensor, DenseTensor) {
+    let keep = full.shape()[axis] - dn;
+    (
+        slice_range(full, axis, 0, keep),
+        slice_range(full, axis, keep, dn),
+    )
+}
+
+/// Native appends (TT/TR) must land within rel-error tolerance of a
+/// from-scratch recompress of the full tensor at the same budget — the
+/// satellite acceptance criterion for append quality.
+#[test]
+fn append_within_tolerance_of_recompress_at_same_budget() {
+    let full = low_rank_tensor(&[12, 7, 6], 5);
+    let (base, tail) = split(&full, 0, 3);
+    for (method, budget) in [
+        ("ttd", Budget::Params(600)),
+        ("trd", Budget::Params(400)),
+    ] {
+        let cdc = codec::by_name(method).unwrap();
+        // extra ALS sweeps so the TR base fit converges on the low-rank
+        // ground truth; TT-SVD ignores `iters`
+        let cfg = CodecConfig {
+            iters: Some(12),
+            ..Default::default()
+        };
+        assert!(cdc.append_native(), "{method} should append natively");
+        let mut appended = cdc.compress(&base, &budget, &cfg).unwrap();
+        let outcome = cdc.append(&mut appended, &tail, 0, &budget, &cfg).unwrap();
+        assert!(
+            matches!(outcome, Appended::Segment(_)),
+            "{method}: expected a segment, got {}",
+            outcome.kind()
+        );
+        assert_eq!(appended.meta().shape, full.shape().to_vec());
+        let fit_append = fitness(full.data(), appended.decode_all().data());
+        let mut scratch = cdc.compress(&full, &budget, &cfg).unwrap();
+        let fit_scratch = fitness(full.data(), scratch.decode_all().data());
+        assert!(
+            fit_append > 0.9,
+            "{method}: appended fit {fit_append} too low"
+        );
+        assert!(
+            fit_append >= fit_scratch - 0.08,
+            "{method}: appended fit {fit_append} vs from-scratch {fit_scratch}"
+        );
+    }
+}
+
+/// Appending k slices one at a time accumulates segments; the persisted
+/// v3 container must replay to exactly the in-memory artifact, and `info`
+/// peeks (O(1)) must report the extended shape.
+#[test]
+fn repeated_appends_roundtrip_through_v3_container() {
+    let dir = std::env::temp_dir().join("tcz_append_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let full = low_rank_tensor(&[10, 6, 5], 9);
+    let (base, _tail) = split(&full, 0, 4);
+    for (method, budget) in [("ttd", Budget::Params(2000)), ("trd", Budget::Params(600))] {
+        let cdc = codec::by_name(method).unwrap();
+        let cfg = CodecConfig::default();
+        let mut artifact = cdc.compress(&base, &budget, &cfg).unwrap();
+        let path = dir.join(format!("grow_{method}.tcz"));
+        codec::save_artifact(&path, artifact.as_ref()).unwrap();
+        // four appends of one slice each
+        for j in 0..4 {
+            let one = slice_range(&full, 0, 6 + j, 1);
+            let outcome = cdc.append(&mut artifact, &one, 0, &budget, &cfg).unwrap();
+            let Appended::Segment(payload) = outcome else {
+                panic!("{method}: append {j} was not a segment");
+            };
+            let seg = codec::Segment {
+                axis: 0,
+                rows: 1,
+                payload,
+            };
+            codec::append_segment_file(&path, &seg, &artifact.meta().shape, artifact.size_bytes())
+                .unwrap();
+        }
+        assert_eq!(artifact.meta().shape, vec![10, 6, 5]);
+        let mut loaded = codec::load_artifact(&path).unwrap();
+        assert_eq!(loaded.meta().shape, vec![10, 6, 5]);
+        assert_eq!(
+            loaded.decode_all().data(),
+            artifact.decode_all().data(),
+            "{method}: v3 replay differs from the in-memory append"
+        );
+        // O(1) peek straight off the file
+        let peeked = codec::container::peek_meta_file(&path).unwrap();
+        assert_eq!(peeked.method, method);
+        assert_eq!(peeked.shape, vec![10, 6, 5]);
+        assert_eq!(peeked.size_bytes, loaded.size_bytes());
+    }
+}
+
+/// Codecs without a native path fall back to decode + concat + recompress
+/// and report it; the result has the extended shape and a sane fit.
+#[test]
+fn fallback_codecs_recompress_on_append() {
+    let full = low_rank_tensor(&[9, 6, 5], 3);
+    let (base, tail) = split(&full, 0, 2);
+    for (method, budget) in [
+        ("cpd", Budget::Params(200)),
+        ("tkd", Budget::Params(300)),
+        ("sz", Budget::RelError(0.2)),
+    ] {
+        let cdc = codec::by_name(method).unwrap();
+        let cfg = CodecConfig::default();
+        assert!(!cdc.append_native(), "{method} has no native append");
+        let mut artifact = cdc.compress(&base, &budget, &cfg).unwrap();
+        let outcome = cdc.append(&mut artifact, &tail, 0, &budget, &cfg).unwrap();
+        assert!(
+            matches!(outcome, Appended::Recompressed),
+            "{method}: expected recompress, got {}",
+            outcome.kind()
+        );
+        let meta = artifact.meta();
+        assert_eq!(meta.shape, full.shape().to_vec(), "{method}");
+        let fit = fitness(full.data(), artifact.decode_all().data());
+        assert!(fit > 0.7, "{method}: fallback fit {fit}");
+    }
+}
+
+/// A TT append under a params budget *smaller* than the grown core set
+/// triggers the bounded re-truncation pass (a rewrite, not a segment) and
+/// honours the budget.
+#[test]
+fn tt_budget_overflow_triggers_bounded_retruncation() {
+    let full = low_rank_tensor(&[10, 6, 5], 7);
+    let (base, tail) = split(&full, 0, 2);
+    let cdc = codec::by_name("ttd").unwrap();
+    let cfg = CodecConfig::default();
+    let mut artifact = cdc.compress(&base, &Budget::Params(2000), &cfg).unwrap();
+    // grown params would exceed this cap; the append must re-truncate
+    let cap = artifact.size_bytes() / 8;
+    let outcome = cdc
+        .append(&mut artifact, &tail, 0, &Budget::Params(cap), &cfg)
+        .unwrap();
+    assert!(
+        matches!(outcome, Appended::Rewritten | Appended::Recompressed),
+        "expected a rewrite, got {}",
+        outcome.kind()
+    );
+    assert_eq!(artifact.meta().shape, vec![10, 6, 5]);
+    assert!(
+        artifact.size_bytes() / 8 <= cap,
+        "budget not honoured: {} > {cap} params",
+        artifact.size_bytes() / 8
+    );
+    // the ground truth is rank 2, so the truncated artifact stays accurate
+    let fit = fitness(full.data(), artifact.decode_all().data());
+    assert!(fit > 0.9, "fit after re-truncation: {fit}");
+}
+
+/// Appending along a non-leading axis works end to end (segments carry
+/// their axis).
+#[test]
+fn append_along_middle_axis_roundtrips() {
+    let dir = std::env::temp_dir().join("tcz_append_axis1");
+    std::fs::create_dir_all(&dir).unwrap();
+    let full = low_rank_tensor(&[8, 9, 5], 21);
+    let (base, tail) = split(&full, 1, 2);
+    let cdc = codec::by_name("ttd").unwrap();
+    let cfg = CodecConfig::default();
+    let budget = Budget::Params(2000);
+    let mut artifact = cdc.compress(&base, &budget, &cfg).unwrap();
+    let path = dir.join("axis1.tcz");
+    codec::save_artifact(&path, artifact.as_ref()).unwrap();
+    let Appended::Segment(payload) = cdc.append(&mut artifact, &tail, 1, &budget, &cfg).unwrap()
+    else {
+        panic!("expected segment");
+    };
+    let seg = codec::Segment {
+        axis: 1,
+        rows: 2,
+        payload,
+    };
+    codec::append_segment_file(&path, &seg, &artifact.meta().shape, artifact.size_bytes()).unwrap();
+    let mut loaded = codec::load_artifact(&path).unwrap();
+    assert_eq!(loaded.meta().shape, vec![8, 9, 5]);
+    assert_eq!(loaded.decode_all().data(), artifact.decode_all().data());
+    let fit = fitness(full.data(), loaded.decode_all().data());
+    assert!(fit > 0.95, "axis-1 append fit {fit}");
+}
+
+/// Shape validation: slices of the wrong order / off-axis length / zero
+/// length are rejected before anything mutates.
+#[test]
+fn append_rejects_bad_slice_shapes() {
+    let base = low_rank_tensor(&[6, 5, 4], 2);
+    let cdc = codec::by_name("ttd").unwrap();
+    let cfg = CodecConfig::default();
+    let budget = Budget::Params(500);
+    let mut artifact = cdc.compress(&base, &budget, &cfg).unwrap();
+    let before = artifact.decode_all();
+    for bad in [
+        DenseTensor::zeros(&[1, 5]),       // wrong order
+        DenseTensor::zeros(&[1, 9, 4]),    // off-axis mismatch
+        DenseTensor::zeros(&[1, 5, 4, 1]), // wrong order (higher)
+    ] {
+        assert!(cdc.append(&mut artifact, &bad, 0, &budget, &cfg).is_err());
+    }
+    assert!(cdc
+        .append(&mut artifact, &DenseTensor::zeros(&[1, 5, 4]), 7, &budget, &cfg)
+        .is_err());
+    assert_eq!(artifact.meta().shape, vec![6, 5, 4]);
+    assert_eq!(artifact.decode_all().data(), before.data());
+}
+
+/// Neural warm-start append (XLA-gated): the fold spec's padded capacity
+/// absorbs the new indices, π gains an identity tail, and the fine-tuned
+/// model serves the extended range.
+#[test]
+fn neural_append_warm_start() {
+    if !tensorcodec::runtime::manifest::default_dir()
+        .join("manifest.txt")
+        .exists()
+    {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let full = low_rank_tensor(&[14, 12, 10], 11);
+    let (base, tail) = split(&full, 0, 2);
+    let cdc = codec::by_name("tensorcodec").unwrap();
+    let mut cfg = CodecConfig::default();
+    cfg.train.epochs = 4;
+    cfg.train.rank = 5;
+    cfg.train.hidden = 5;
+    let budget = Budget::Params(100_000);
+    let mut artifact = cdc.compress(&base, &budget, &cfg).unwrap();
+    let outcome = cdc.append(&mut artifact, &tail, 0, &budget, &cfg).unwrap();
+    assert!(
+        matches!(outcome, Appended::Rewritten | Appended::Recompressed),
+        "neural append rewrites the model"
+    );
+    let meta = artifact.meta();
+    assert_eq!(meta.shape, vec![14, 12, 10]);
+    for idx in [[0usize, 0, 0], [13, 11, 9], [12, 5, 5]] {
+        assert!(artifact.get(&idx).is_finite());
+    }
+}
+
+// ---------------------------------------------------------------------
+// CLI end-to-end (pure Rust, baseline codec)
+// ---------------------------------------------------------------------
+
+fn bin() -> PathBuf {
+    let mut p = PathBuf::from(env!("CARGO_BIN_EXE_tensorcodec"));
+    if !p.exists() {
+        p = PathBuf::from("target/release/tensorcodec");
+    }
+    p
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn tensorcodec");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+/// gen → compress --method ttd → append → info: the file becomes a v3
+/// segmented container reporting the extended shape.
+#[test]
+fn cli_append_extends_artifact_in_place() {
+    let dir = std::env::temp_dir().join("tcz_cli_append_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let base_npy = dir.join("base.npy");
+    let new_npy = dir.join("new.npy");
+    let tcz = dir.join("grow.tcz");
+
+    let full = low_rank_tensor(&[10, 7, 6], 31);
+    let (base, tail) = split(&full, 0, 2);
+    tensorcodec::util::npy::write_f32(&base_npy, base.shape(), base.data()).unwrap();
+    tensorcodec::util::npy::write_f32(&new_npy, tail.shape(), tail.data()).unwrap();
+
+    let (ok, out) = run(&[
+        "compress",
+        "--method",
+        "ttd",
+        "--budget-params",
+        "800",
+        "--input",
+        base_npy.to_str().unwrap(),
+        "--out",
+        tcz.to_str().unwrap(),
+    ]);
+    assert!(ok, "compress failed: {out}");
+
+    let (ok, out) = run(&[
+        "append",
+        "--model",
+        tcz.to_str().unwrap(),
+        "--input",
+        new_npy.to_str().unwrap(),
+        "--axis",
+        "0",
+    ]);
+    assert!(ok, "append failed: {out}");
+    assert!(out.contains("append=segment"), "not a native segment: {out}");
+    assert!(out.contains("shape=[10, 7, 6]"), "shape not extended: {out}");
+
+    // info loads the v3 container and reports the extended shape
+    let (ok, out) = run(&["info", "--model", tcz.to_str().unwrap()]);
+    assert!(ok, "info failed: {out}");
+    assert!(out.contains("[10, 7, 6]"), "info shape: {out}");
+
+    // get serves both the old and the appended range
+    let (ok, out) = run(&[
+        "get",
+        "--model",
+        tcz.to_str().unwrap(),
+        "--index",
+        "0,0,0",
+        "--index",
+        "9,6,5",
+    ]);
+    assert!(ok && out.matches("->").count() == 2, "get failed: {out}");
+}

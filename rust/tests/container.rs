@@ -175,6 +175,60 @@ fn golden_v2_file_decodes_same_entries_as_v1() {
     }
 }
 
+/// The checked-in v3 golden file (see `data/make_golden_v3.py`) pins the
+/// segmented streaming-append framing forever: a TT base payload plus one
+/// append segment. The loaded artifact must decode bit-identically to the
+/// same cores rebuilt in-process, and the header peek must report the
+/// extended shape without reading any segment.
+#[test]
+fn golden_v3_file_replays_segment_bit_identically() {
+    use tensorcodec::baselines::ttd::TtCores;
+    use tensorcodec::codec::factorized::TtArtifact;
+
+    let golden = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/golden_v3.tcz");
+    let mut loaded = codec::load_artifact(&golden).unwrap();
+    let meta = loaded.meta();
+    assert_eq!(meta.method, "ttd");
+    assert_eq!(meta.shape, vec![6, 3, 2], "extended shape after the segment");
+
+    // rebuild the same cores in-process (exact binary fractions — see the
+    // generator) and replay the same append
+    let core_lens = [8usize, 12, 4];
+    let mut i = 0u32;
+    let cores: Vec<Vec<f64>> = core_lens
+        .iter()
+        .map(|&len| {
+            (0..len)
+                .map(|_| {
+                    let v = f64::from(i) * 0.125 - 0.5;
+                    i += 1;
+                    v
+                })
+                .collect()
+        })
+        .collect();
+    let mut tt = TtCores {
+        shape: vec![4, 3, 2],
+        ranks: vec![1, 2, 2, 1],
+        cores,
+    };
+    tt.push_lateral_slices(0, 2, &[0.25, -0.5, 0.75, -1.25]).unwrap();
+    let mut expect = TtArtifact::new(tt, 0.0);
+    assert_eq!(loaded.size_bytes(), expect.size_bytes());
+    assert_eq!(
+        loaded.decode_all().data(),
+        expect.decode_all().data(),
+        "golden v3 decode must be bit-identical to the in-process append"
+    );
+
+    // O(1) peek from a prefix that cannot contain the segment
+    let bytes = std::fs::read(&golden).unwrap();
+    let peeked = tensorcodec::codec::container::peek_meta(&bytes[..120], bytes.len()).unwrap();
+    assert_eq!(peeked.method, "ttd");
+    assert_eq!(peeked.shape, vec![6, 3, 2]);
+    assert_eq!(peeked.size_bytes, expect.size_bytes());
+}
+
 /// A v1 file written by today's `save_tcz` also loads through the unified
 /// path (same guarantee, exercised against the current writer).
 #[test]

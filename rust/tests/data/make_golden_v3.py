@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Regenerate golden_v3.tcz: the v3 (segmented) `.tcz` container.
+
+Pins the streaming-append layout written by
+`codec::container::segmented_to_bytes` / `append_segment_file` forever:
+
+  magic "TCZ3" | u8 version=3 | u8 method_tag | u8 reserved[2]
+  u8 order | u64 ext_shape[order]     (the EXTENDED shape)
+  u32 n_segments | u64 size_bytes
+  u64 base_payload_len | base payload
+  segment*: u8 axis | u64 rows | u64 payload_len | payload
+
+The base payload is a tiny TT (method tag 2) factor set of shape [4,3,2]
+at ranks [1,2,2,1]; one segment appends 2 lateral slices along axis 0,
+extending the shape to [6,3,2]. Every stored double is an exact binary
+fraction, so the Rust container test can rebuild the same cores in-process
+and assert a bit-identical decode.
+"""
+
+import struct
+from pathlib import Path
+
+METHOD_TAG_TTD = 2
+BASE_SHAPE = [4, 3, 2]
+EXT_SHAPE = [6, 3, 2]
+RANKS = [1, 2, 2, 1]
+CORE_LENS = [8, 12, 4]  # [1·4·2, 2·3·2, 2·2·1]
+SEG_AXIS = 0
+SEG_ROWS = 2
+SEG_VALUES = [0.25, -0.5, 0.75, -1.25]  # rows · r0 · r1 = 2·1·2
+
+
+def core_value(i: int) -> float:
+    """Deterministic exact-binary-fraction core entries (see the Rust
+    golden test, which rebuilds the same sequence)."""
+    return i * 0.125 - 0.5
+
+
+def tt_payload() -> bytes:
+    buf = bytearray()
+    buf += struct.pack("<B", len(BASE_SHAPE))
+    for n in BASE_SHAPE:
+        buf += struct.pack("<Q", n)
+    for r in RANKS:
+        buf += struct.pack("<Q", r)
+    i = 0
+    for core_len in CORE_LENS:
+        buf += struct.pack("<Q", core_len)
+        for _ in range(core_len):
+            buf += struct.pack("<d", core_value(i))
+            i += 1
+    return bytes(buf)
+
+
+def segment_payload() -> bytes:
+    buf = bytearray()
+    buf += struct.pack("<QQ", RANKS[SEG_AXIS], RANKS[SEG_AXIS + 1])
+    for v in SEG_VALUES:
+        buf += struct.pack("<d", v)
+    return bytes(buf)
+
+
+def main() -> None:
+    base = tt_payload()
+    seg = segment_payload()
+    # extended params: 24 base + 2·1·2 appended = 28 doubles
+    size_bytes = (sum(CORE_LENS) + SEG_ROWS * RANKS[SEG_AXIS] * RANKS[SEG_AXIS + 1]) * 8
+    buf = bytearray()
+    buf += b"TCZ3"
+    buf += struct.pack("<BBBB", 3, METHOD_TAG_TTD, 0, 0)
+    buf += struct.pack("<B", len(EXT_SHAPE))
+    for n in EXT_SHAPE:
+        buf += struct.pack("<Q", n)
+    buf += struct.pack("<I", 1)  # n_segments
+    buf += struct.pack("<Q", size_bytes)
+    buf += struct.pack("<Q", len(base))
+    buf += base
+    buf += struct.pack("<B", SEG_AXIS)
+    buf += struct.pack("<QQ", SEG_ROWS, len(seg))
+    buf += seg
+    out = Path(__file__).parent / "golden_v3.tcz"
+    out.write_bytes(bytes(buf))
+    print(f"wrote {out} ({len(buf)} bytes, base payload {len(base)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

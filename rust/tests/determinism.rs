@@ -147,6 +147,52 @@ fn decode_many_bit_identical_across_thread_counts() {
     }
 }
 
+/// Streaming append is part of the determinism contract: projecting and
+/// absorbing new slices (TT and TR) produces bit-identical segment
+/// payloads and extended container bytes at 1 vs 8 threads, and the
+/// appended artifact's bulk decode stays bit-identical to per-entry `get`
+/// at every thread count.
+#[test]
+fn append_bit_identical_across_thread_counts() {
+    use tensorcodec::codec::Appended;
+    let _g = lock();
+    let t = DenseTensor::random_uniform(&[10, 8, 6], 33);
+    let slices = DenseTensor::random_uniform(&[2, 8, 6], 34);
+    let cfg = CodecConfig::default();
+    let budget = Budget::Params(100_000);
+    for (method, budget) in [("ttd", Budget::Params(100_000)), ("trd", Budget::Params(600))] {
+        let c = codec::by_name(method).unwrap();
+        let runs = at_threads(&[1, 8], || {
+            let mut a = c.compress(&t, &budget, &cfg).unwrap();
+            let Appended::Segment(seg) = c.append(&mut a, &slices, 0, &budget, &cfg).unwrap()
+            else {
+                panic!("{method}: expected segment append");
+            };
+            let bytes = codec::container::artifact_to_bytes(a.as_ref()).unwrap();
+            (seg, bytes)
+        });
+        assert_eq!(runs[0].0, runs[1].0, "{method}: segment differs across threads");
+        assert_eq!(runs[0].1, runs[1].1, "{method}: artifact differs across threads");
+    }
+    // bulk decode of an appended artifact: bit-identical across threads
+    // and to `get`
+    let c = codec::by_name("ttd").unwrap();
+    let mut a = c.compress(&t, &budget, &cfg).unwrap();
+    c.append(&mut a, &slices, 0, &budget, &cfg).unwrap();
+    let coords = random_coords(&[12, 8, 6], 5000, 6);
+    let runs = at_threads(&[1, 8], || {
+        let mut out = Vec::new();
+        a.decode_many(&coords, &mut out);
+        out
+    });
+    for (i, (x, y)) in runs[0].iter().zip(&runs[1]).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "appended decode entry {i}");
+    }
+    for (cd, &v) in coords.iter().zip(&runs[0]) {
+        assert_eq!(v.to_bits(), a.get(cd).to_bits(), "appended {cd:?}");
+    }
+}
+
 /// Server replies (shard batch queue → block frames → pool-backed
 /// `decode_many`) are bit-identical at 1 vs 8 threads.
 #[test]

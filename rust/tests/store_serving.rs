@@ -227,6 +227,91 @@ fn stat_is_header_only_and_never_touches_the_lru() {
     assert!(store.stat("../traffic_ttd").is_err());
 }
 
+/// Hot-reload race: four reader threads hammer `get` on a TT artifact
+/// while a writer appends slices to its `.tcz` (atomic replace) and
+/// notifies the server via `reload`. Old-range values must stay
+/// bit-stable across every generation (TT segments never touch the base
+/// cores), each reload must bump the generation and extend the shape, and
+/// the extended range must be addressable afterwards.
+#[test]
+fn hot_reload_race_readers_stay_bit_stable_while_writer_appends() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use tensorcodec::codec::{Appended, Segment};
+
+    let dir = std::env::temp_dir().join("tcz_store_serving_reloadrace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let t = DenseTensor::random_uniform(&[6, 5, 4], 200);
+    let c = codec::by_name("ttd").unwrap();
+    let cfg = CodecConfig::default();
+    let budget = Budget::Params(100_000);
+    let a = c.compress(&t, &budget, &cfg).unwrap();
+    let path = dir.join("grow.tcz");
+    codec::save_artifact(&path, a.as_ref()).unwrap();
+
+    let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+    let server = Arc::new(ArtifactServer::new(store, small_policy(), false));
+    let probe: Vec<Vec<usize>> = (0..16usize)
+        .map(|i| vec![i % 6, (i * 3) % 5, (i * 7) % 4])
+        .collect();
+    let baseline: Vec<f32> = probe.iter().map(|p| server.get("grow", p).unwrap()).collect();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for rt in 0..4usize {
+        let server = server.clone();
+        let stop = stop.clone();
+        let probe = probe.clone();
+        let baseline = baseline.clone();
+        readers.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                for (p, want) in probe.iter().zip(&baseline) {
+                    let got = server.get("grow", p).unwrap();
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "reader {rt}: old range drifted at {p:?}"
+                    );
+                }
+                let block = server.batch_get("grow", &probe).unwrap();
+                for (got, want) in block.iter().zip(&baseline) {
+                    assert_eq!(got.to_bits(), want.to_bits(), "reader {rt} batch");
+                }
+            }
+        }));
+    }
+
+    // writer: five single-slice appends, each notifying the server
+    for round in 0..5u64 {
+        let mut art = codec::load_artifact(&path).unwrap();
+        let slices = DenseTensor::random_uniform(&[1, 5, 4], 300 + round);
+        match c.append(&mut art, &slices, 0, &budget, &cfg).unwrap() {
+            Appended::Segment(payload) => {
+                let seg = Segment {
+                    axis: 0,
+                    rows: 1,
+                    payload,
+                };
+                codec::append_segment_file(&path, &seg, &art.meta().shape, art.size_bytes())
+                    .unwrap();
+            }
+            other => panic!("round {round}: expected segment, got {}", other.kind()),
+        }
+        let (meta, _bulk, generation) = server.reload("grow").unwrap();
+        assert_eq!(meta.shape, vec![6 + round as usize + 1, 5, 4]);
+        assert_eq!(generation, round + 1, "round {round}");
+    }
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        r.join().expect("reader panicked");
+    }
+    // extended range addressable, old range still bit-stable
+    assert!(server.get("grow", &[10, 0, 0]).unwrap().is_finite());
+    let again = server.get("grow", &probe[0]).unwrap();
+    assert_eq!(again.to_bits(), baseline[0].to_bits());
+    // an out-of-range coordinate for the extended shape still errors
+    assert!(server.get("grow", &[11, 0, 0]).is_err());
+}
+
 /// Wire compatibility: a plain protocol v2 client speaking single-`get`
 /// frames over a raw socket (the PR 2 wire format, no `ServeClient`)
 /// still gets byte-for-byte correct replies after the block-frame
