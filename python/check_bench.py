@@ -4,11 +4,13 @@
 Usage:
     check_bench.py BASELINE.json CURRENT.json [--max-regress 0.25]
 
-Both files are fig9's ``BENCH_kernels.json`` shape. Every numeric
-higher-is-better key present (non-null) in BOTH files is compared; the run
-fails when ``current < baseline * (1 - max_regress)``. Keys missing from
-either side are skipped, so the baseline can gate a subset (today: the
-bulk-decode throughput floors) while the artifact upload tracks the rest.
+Both files are fig9's ``BENCH_kernels.json`` shape. Every gauge present
+(non-null) in BOTH files is compared: higher-is-better throughput keys
+fail when ``current < baseline * (1 - max_regress)``, lower-is-better
+latency keys fail when ``current > baseline * (1 + max_regress)``. Keys
+missing from either side are skipped, so the baseline can gate a subset
+(today: the bulk/lockstep decode throughput floors and the point-decode
+latency ceiling) while the artifact upload tracks the rest.
 """
 
 import argparse
@@ -19,9 +21,14 @@ import sys
 THROUGHPUT_KEYS = (
     "decode_entries_per_s_1t",
     "decode_entries_per_s_nt",
+    "lockstep_decode_entries_per_s_1t",
+    "lockstep_decode_entries_per_s_nt",
     "gemm_gflops_1t",
     "gemm_gflops_nt",
 )
+
+# lower-is-better gauges (latencies)
+LATENCY_KEYS = ("point_decode_ns_1t",)
 
 
 def main() -> int:
@@ -45,6 +52,16 @@ def main() -> int:
         status = "OK " if c >= floor else "FAIL"
         print(f"{status} {key}: current {c:.0f} vs baseline {b:.0f} (floor {floor:.0f})")
         if c < floor:
+            failures.append(key)
+
+    for key in LATENCY_KEYS:
+        b, c = baseline.get(key), current.get(key)
+        if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
+            continue
+        ceiling = b * (1.0 + args.max_regress)
+        status = "OK " if c <= ceiling else "FAIL"
+        print(f"{status} {key}: current {c:.0f} vs baseline {b:.0f} (ceiling {ceiling:.0f})")
+        if c > ceiling:
             failures.append(key)
 
     if failures:

@@ -5,29 +5,40 @@
 //! orders of magnitude slower than the classical decompositions, with
 //! TensorCodec faster than NeuKron; SZ3/TTHRESH are fastest.
 //!
-//! The kernels section measures the three parallelised hot paths at 1
-//! thread vs `TCZ_THREADS` (default: all cores) and writes the
-//! machine-readable `BENCH_kernels.json` so the perf trajectory is
-//! tracked from this PR on:
+//! The kernels section measures the parallelised hot paths at 1 thread
+//! vs `TCZ_THREADS` (default: all cores) and writes the machine-readable
+//! `BENCH_kernels.json` so the perf trajectory is tracked from this PR
+//! on:
 //!   * GEMM GFLOP/s (cache-blocked `Mat::matmul`),
 //!   * bulk batch-decode throughput (`Artifact::decode_many` on a sorted
 //!     batch over a synthetic TT artifact),
+//!   * point-decode latency (ns/entry on the TT serving path),
+//!   * lockstep neural bulk-decode throughput (the SoA LSTM engine
+//!     behind `Decompressor::get_many`),
 //!   * one training epoch (XLA runtime required; `null` without it).
 //! Each multithreaded run is asserted bit-identical to its single-thread
-//! run before the numbers are reported.
+//! run — and each decode path to its `TCZ_SIMD=scalar` run — before the
+//! numbers are reported.
 
 use tensorcodec::baselines::ttd::TtCores;
 use tensorcodec::codec::factorized::TtArtifact;
 use tensorcodec::codec::Artifact;
+use tensorcodec::compress::{CompressedModel, Decompressor};
+use tensorcodec::config::ParamDtype;
 use tensorcodec::datasets::by_name;
 use tensorcodec::harness::{bench_epochs, bench_scale, random_coords, run_baselines, run_tc, sort_coords};
 use tensorcodec::kernels;
 use tensorcodec::linalg::Mat;
 use tensorcodec::metrics::{CsvSink, Timer};
+use tensorcodec::nttd::ModelParams;
+use tensorcodec::reorder::Orders;
+use tensorcodec::tensor::FoldSpec;
 use tensorcodec::util::Pcg64;
 
 const GEMM_N: usize = 384;
 const DECODE_BATCH: usize = 1 << 14;
+/// Point-decode probes for the latency gauge.
+const POINT_PROBES: usize = 4096;
 
 fn synthetic_tt(shape: &[usize], rank: usize, seed: u64) -> TtArtifact {
     let mut rng = Pcg64::seeded(seed);
@@ -83,6 +94,69 @@ fn decode_throughput(threads: usize) -> (f64, Vec<f32>) {
         out.clear();
         let t = Timer::start();
         artifact.decode_many(&coords, &mut out);
+        best = best.min(t.seconds());
+    }
+    (DECODE_BATCH as f64 / best, out)
+}
+
+/// Per-entry point-decode latency (ns) over the synthetic TT artifact —
+/// the log-time serving path the paper's Theorem 3 claims. Measured at 1
+/// thread (latency is a single-request gauge).
+fn point_decode_ns() -> (f64, Vec<f32>) {
+    kernels::set_threads(1);
+    let shape = vec![1usize << 10; 3];
+    let mut artifact = synthetic_tt(&shape, 8, 5);
+    let coords = random_coords(&shape, POINT_PROBES, 77);
+    let mut vals = vec![0.0f32; POINT_PROBES];
+    for (v, c) in vals.iter_mut().zip(&coords) {
+        *v = artifact.get(c); // warm-up + values for the bit check
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = Timer::start();
+        for (v, c) in vals.iter_mut().zip(&coords) {
+            *v = artifact.get(c);
+        }
+        best = best.min(t.seconds());
+    }
+    (best * 1e9 / POINT_PROBES as f64, vals)
+}
+
+/// A synthetic trained TensorCodec model, decodable without the XLA
+/// runtime — the lockstep engine's benchmark subject.
+fn toy_neural(seed: u64) -> CompressedModel {
+    let spec = FoldSpec::auto(&[256, 256, 256], 0).expect("fold spec");
+    let params = ModelParams::init_tc(seed, spec.dp, 32, 8, 8);
+    let mut rng = Pcg64::seeded(seed);
+    let orders = Orders::random(&spec.orig_shape, &mut rng);
+    CompressedModel {
+        spec,
+        orders,
+        params,
+        mean: 0.1,
+        std: 1.3,
+        fitness: 0.9,
+        param_dtype: ParamDtype::F32,
+        train_seconds: 0.0,
+        init_seconds: 0.0,
+        epochs_run: 0,
+    }
+}
+
+/// Lockstep bulk-decode throughput (entries/s) of the neural decoder at
+/// a given thread budget.
+fn lockstep_throughput(threads: usize) -> (f64, Vec<f32>) {
+    kernels::set_threads(threads);
+    let mut dec = Decompressor::new(toy_neural(7));
+    let mut coords = random_coords(&[256, 256, 256], DECODE_BATCH, 78);
+    sort_coords(&mut coords);
+    let mut out = Vec::new();
+    dec.get_many(&coords, &mut out); // warm-up
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        out.clear();
+        let t = Timer::start();
+        dec.get_many(&coords, &mut out);
         best = best.min(t.seconds());
     }
     (DECODE_BATCH as f64 / best, out)
@@ -160,7 +234,9 @@ fn append_section() -> (f64, f64) {
 
 fn kernels_section(append: (f64, f64)) {
     let n_threads = kernels::max_threads().max(2);
-    println!("=== Kernel layer: 1 thread vs {n_threads} threads ===");
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    let isa = kernels::active_isa();
+    println!("=== Kernel layer: 1 thread vs {n_threads} threads (simd: {}) ===", isa.as_str());
 
     let (g1, out1) = gemm_gflops(1);
     let (gn, outn) = gemm_gflops(n_threads);
@@ -170,8 +246,8 @@ fn kernels_section(append: (f64, f64)) {
     let (d1, v1) = decode_throughput(1);
     let (dn, vn) = decode_throughput(n_threads);
     assert_eq!(
-        v1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-        vn.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        bits(&v1),
+        bits(&vn),
         "bulk decode must be bit-identical across threads"
     );
     println!(
@@ -179,6 +255,50 @@ fn kernels_section(append: (f64, f64)) {
         d1,
         dn,
         dn / d1
+    );
+
+    // SIMD dispatch: the forced-scalar path must reproduce every
+    // dispatched bit before any number is reported
+    kernels::set_simd(Some(kernels::SimdIsa::Scalar));
+    let (_, v_scalar) = decode_throughput(1);
+    kernels::set_simd(None);
+    assert_eq!(
+        bits(&v_scalar),
+        bits(&v1),
+        "TCZ_SIMD=scalar must be bit-identical to dispatched decode"
+    );
+
+    let (pt_ns, pt_vals) = point_decode_ns();
+    kernels::set_simd(Some(kernels::SimdIsa::Scalar));
+    let (_, pt_scalar) = point_decode_ns();
+    kernels::set_simd(None);
+    assert_eq!(
+        bits(&pt_scalar),
+        bits(&pt_vals),
+        "point decode must be bit-identical across SIMD arms"
+    );
+    println!("point get (TT, r=8): {pt_ns:>8.0} ns/entry @1t");
+
+    let (l1, lo1) = lockstep_throughput(1);
+    let (ln, lon) = lockstep_throughput(n_threads);
+    assert_eq!(
+        bits(&lo1),
+        bits(&lon),
+        "lockstep decode must be bit-identical across threads"
+    );
+    kernels::set_simd(Some(kernels::SimdIsa::Scalar));
+    let (_, lo_scalar) = lockstep_throughput(1);
+    kernels::set_simd(None);
+    assert_eq!(
+        bits(&lo_scalar),
+        bits(&lo1),
+        "lockstep decode must be bit-identical across SIMD arms"
+    );
+    println!(
+        "lockstep neural decode {DECODE_BATCH} sorted entries: {:>9.0} e/s @1t   {:>9.0} e/s @{n_threads}t   ({:.2}x)",
+        l1,
+        ln,
+        ln / l1
     );
 
     let r1 = epoch_run(1);
@@ -197,13 +317,18 @@ fn kernels_section(append: (f64, f64)) {
     kernels::set_threads(0);
 
     let json = format!(
-        "{{\n  \"threads\": {n_threads},\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {},\n  \"append_slice_seconds_h512\": {},\n  \"append_slice_seconds_h2048\": {},\n  \"append_history_ratio\": {}\n}}\n",
+        "{{\n  \"threads\": {n_threads},\n  \"simd\": \"{}\",\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"point_decode_ns_1t\": {},\n  \"lockstep_decode_entries_per_s_1t\": {},\n  \"lockstep_decode_entries_per_s_nt\": {},\n  \"lockstep_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {},\n  \"append_slice_seconds_h512\": {},\n  \"append_slice_seconds_h2048\": {},\n  \"append_history_ratio\": {}\n}}\n",
+        isa.as_str(),
         json_num(Some(g1)),
         json_num(Some(gn)),
         json_num(Some(gn / g1)),
         json_num(Some(d1)),
         json_num(Some(dn)),
         json_num(Some(dn / d1)),
+        json_num(Some(pt_ns)),
+        json_num(Some(l1)),
+        json_num(Some(ln)),
+        json_num(Some(ln / l1)),
         json_num(e1),
         json_num(en),
         json_num(match (e1, en) {

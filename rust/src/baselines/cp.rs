@@ -103,9 +103,19 @@ impl<'a> CpChain<'a> {
             l += 1;
         }
         for k in l..d {
-            for c in 0..r {
-                let prev = if k == 0 { 1.0f64 } else { self.part[(k - 1) * r + c] };
-                self.part[k * r + c] = prev * cp.factors[k].at(idx[k], c);
+            let row = cp.factors[k].row(idx[k]);
+            if k == 0 {
+                // level 0 starts from the neutral prefix, exactly like the
+                // scalar loop's `prev = 1.0` arm
+                let prev = 1.0f64;
+                for (o, &fv) in self.part[..r].iter_mut().zip(row) {
+                    *o = prev * fv;
+                }
+            } else {
+                // part_k = part_{k-1} ⊙ A_k[i_k, ·], one mul per element
+                // (same op order as the scalar loop, vectorised lanes)
+                let (head, tail) = self.part.split_at_mut(k * r);
+                crate::kernels::simd::mul_f64(&mut tail[..r], &head[(k - 1) * r..], row);
             }
             self.prev[k] = idx[k];
         }

@@ -40,9 +40,11 @@ impl TrCores {
                     if v == 0.0 {
                         continue;
                     }
-                    for b in 0..r {
-                        tmp[a * r + b] += v * g[c * r + b];
-                    }
+                    crate::kernels::simd::axpy_f64(
+                        &mut tmp[a * r..(a + 1) * r],
+                        v,
+                        &g[c * r..(c + 1) * r],
+                    );
                 }
             }
             std::mem::swap(&mut m, &mut tmp);
@@ -91,9 +93,11 @@ impl TrCores {
                             if v == 0.0 {
                                 continue;
                             }
-                            for b in 0..r {
-                                tmp[a * r + b] += v * g[c * r + b];
-                            }
+                            crate::kernels::simd::axpy_f64(
+                                &mut tmp[a * r..(a + 1) * r],
+                                v,
+                                &g[c * r..(c + 1) * r],
+                            );
                         }
                     }
                     mm.copy_from_slice(&tmp);
@@ -243,9 +247,11 @@ impl<'a> TrChain<'a> {
                         if v == 0.0 {
                             continue;
                         }
-                        for b in 0..r {
-                            out[a * r + b] += v * g[c * r + b];
-                        }
+                        crate::kernels::simd::axpy_f64(
+                            &mut out[a * r..(a + 1) * r],
+                            v,
+                            &g[c * r..(c + 1) * r],
+                        );
                     }
                 }
             }

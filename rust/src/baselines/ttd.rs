@@ -227,9 +227,7 @@ impl TtCores {
                     continue;
                 }
                 let base = (a * nk + idx[k]) * rk;
-                for (b, nvb) in nv.iter_mut().enumerate() {
-                    *nvb += va * core[base + b];
-                }
+                crate::kernels::simd::axpy_f64(&mut nv, va, &core[base..base + rk]);
             }
             v = nv;
         }
@@ -289,9 +287,7 @@ impl<'a> TtChain<'a> {
                         continue;
                     }
                     let base = (a * nk + idx[k]) * rk;
-                    for (b, nvb) in nv.iter_mut().enumerate() {
-                        *nvb += va * core[base + b];
-                    }
+                    crate::kernels::simd::axpy_f64(nv, va, &core[base..base + rk]);
                 }
             }
             self.prev[k] = idx[k];

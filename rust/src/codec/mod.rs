@@ -129,12 +129,13 @@ pub trait Artifact: Send {
     /// first).
     ///
     /// The default loops [`Artifact::get`]. Structured artifacts
-    /// (TT/CP/Tucker/TR factor sets, the neural codecs) override it with a
-    /// prefix-reuse chain evaluator: the batch is decoded in
-    /// lexicographic order so shared coordinate prefixes amortise the
-    /// per-mode core products, then scattered back to request order.
-    /// Overrides must stay bit-identical to `get` — the serving layer
-    /// mixes both paths freely.
+    /// override it: the factorised codecs (TT/CP/Tucker/TR) decode the
+    /// batch in lexicographic order through prefix-reuse chain
+    /// evaluators, the neural codecs step 8 sorted coordinates at a time
+    /// through the lockstep SoA engine
+    /// ([`crate::nttd::infer::forward_lockstep`]); both scatter back to
+    /// request order. Overrides must stay bit-identical to `get` — the
+    /// serving layer mixes both paths freely.
     fn decode_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
         out.reserve(coords.len());
         for c in coords {

@@ -34,7 +34,11 @@ fn model_params(variant: Variant, dp: usize, vocab: usize, h: usize, r: usize) -
 }
 
 /// An [`Artifact`] wrapping a trained [`CompressedModel`] (TensorCodec or
-/// NeuKron) behind the pure-Rust log-time decoder.
+/// NeuKron) behind the pure-Rust log-time decoder. `decode_many` and
+/// `decode_all` route through the lockstep engine
+/// ([`crate::nttd::infer::forward_lockstep`]): batched SoA trunk steps,
+/// bit-identical to per-entry `get` on every SIMD dispatch arm and at
+/// every thread count.
 pub struct NeuralArtifact {
     dec: Decompressor,
     method: &'static str,

@@ -1,21 +1,26 @@
 //! Scalar quantisers: uniform mid-rise quantisation (SZ-style error-bounded
-//! coding) and f32 -> f16 narrowing for compact parameter storage.
+//! coding) and f32 -> f16 narrowing for compact parameter storage. The
+//! uniform pair runs through the [`crate::kernels::simd`] dispatch layer —
+//! widening, division, `round()` and the int conversions are all exactly
+//! specified IEEE ops, so the vector and scalar arms emit the same bins.
+
+use crate::kernels::simd;
 
 /// Quantise values to integer bins of width `2*abs_err`, centred so the
 /// reconstruction error is at most `abs_err`. Returns (bins, offset) where
 /// stored symbols are `bin - offset >= 0`.
 pub fn quantize_uniform(values: &[f32], abs_err: f32) -> (Vec<i64>, f64) {
     let step = (2.0 * abs_err) as f64;
-    let bins = values
-        .iter()
-        .map(|&v| (v as f64 / step).round() as i64)
-        .collect();
+    let mut bins = vec![0i64; values.len()];
+    simd::quantize_bins_f64(values, step, &mut bins);
     (bins, step)
 }
 
 /// Inverse of [`quantize_uniform`] (second element is the step width).
 pub fn dequantize_uniform(bins: &[i64], step: f64) -> Vec<f32> {
-    bins.iter().map(|&b| (b as f64 * step) as f32).collect()
+    let mut out = vec![0.0f32; bins.len()];
+    simd::dequantize_f64(bins, step, &mut out);
+    out
 }
 
 /// IEEE 754 binary16 encode (round-to-nearest-even), no f16 type needed.

@@ -14,7 +14,7 @@ pub mod format;
 const FOLD_GRAIN: usize = 512;
 
 use crate::config::ParamDtype;
-use crate::nttd::infer::{forward_one, InferScratch};
+use crate::nttd::infer::{forward_one, InferScratch, LockstepScratch};
 use crate::nttd::ModelParams;
 use crate::reorder::Orders;
 use crate::tensor::{DenseTensor, FoldSpec};
@@ -82,6 +82,18 @@ pub struct Decompressor {
     scratch: InferScratch,
     digit_buf: Vec<i32>,
     reordered: Vec<usize>,
+    /// Reusable bulk-decode state (digit/order buffers + one lockstep
+    /// scratch per parallel chunk): after warm-up, `get_many` and
+    /// `reconstruct_all` perform zero allocations per entry.
+    bulk: BulkScratch,
+}
+
+/// Caller-owned buffers behind the bulk decode paths.
+#[derive(Debug, Default)]
+struct BulkScratch {
+    digits: Vec<i32>,
+    order: Vec<usize>,
+    lanes: Vec<LockstepScratch>,
 }
 
 impl Decompressor {
@@ -96,6 +108,7 @@ impl Decompressor {
             scratch,
             digit_buf,
             reordered,
+            bulk: BulkScratch::default(),
         }
     }
 
@@ -117,18 +130,26 @@ impl Decompressor {
     /// value per coordinate vector to `out` in request order.
     ///
     /// The batch is folded to digit strings (rows fan out over the kernel
-    /// pool), decoded in lexicographic digit order through
-    /// [`crate::nttd::infer::PrefixDecoder`] (LSTM and TT-chain state of
-    /// the longest shared prefix is reused) with the sorted batch split at
-    /// shared-prefix boundaries across the pool — one decoder per chunk —
-    /// and scattered back. Bit-identical to calling [`Decompressor::get`]
-    /// per entry at every thread count (a chain restart reproduces the
-    /// from-scratch arithmetic exactly).
+    /// pool), sorted, split at shared-prefix boundaries (`prefix_cuts`)
+    /// across the pool, and each chunk
+    /// steps its rows through the lockstep engine
+    /// ([`crate::nttd::infer::lockstep_rows`]): [`LANES`] coordinates
+    /// advance through the LSTM trunk simultaneously in SoA form, the
+    /// per-entry matvecs becoming batched GEMMs over the lanes. Every
+    /// lane runs the exact `forward_one` op sequence, so the result is
+    /// bit-identical to calling [`Decompressor::get`] per entry — at
+    /// every thread count and on every SIMD dispatch arm. All buffers
+    /// (digits, sort order, per-chunk lockstep scratch) are owned by the
+    /// decompressor and reused: zero allocations per entry.
+    ///
+    /// [`LANES`]: crate::nttd::infer::LANES
     pub fn get_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
         let dp = self.model.spec.dp;
         let d = self.model.spec.d();
         let n = coords.len();
-        let mut digits = vec![0i32; n * dp];
+        let digits = &mut self.bulk.digits;
+        digits.clear();
+        digits.resize(n * dp, 0);
         {
             let (spec, inverses) = (&self.model.spec, &self.inverses);
             let dig_ptr = crate::kernels::SendPtr::new(digits.as_mut_ptr());
@@ -147,41 +168,122 @@ impl Decompressor {
                 }
             });
         }
-        let mut order: Vec<usize> = (0..n).collect();
-        order.sort_unstable_by(|&a, &b| {
-            digits[a * dp..(a + 1) * dp].cmp(&digits[b * dp..(b + 1) * dp])
-        });
         let base = out.len();
         out.resize(base + n, 0.0);
-        let cuts = crate::codec::prefix_cuts(n, crate::codec::DECODE_GRAIN, |i| {
-            digits[order[i] * dp] != digits[order[i - 1] * dp]
-        });
-        let (params, mean, std) = (&self.model.params, self.model.mean, self.model.std);
-        let (digits, order) = (&digits, &order);
-        let optr = crate::kernels::SendPtr::new(out[base..].as_mut_ptr());
-        crate::kernels::parallel_jobs(cuts.len() - 1, |c| {
-            let mut dec = crate::nttd::infer::PrefixDecoder::new(params);
-            for &row in &order[cuts[c]..cuts[c + 1]] {
-                let y = dec.decode(&digits[row * dp..(row + 1) * dp]);
-                // SAFETY: `order` is a permutation — slot `row` is written
-                // by exactly one chunk.
-                unsafe { *optr.add(row) = mean + std * y };
-            }
-        });
+        decode_digit_block(
+            &self.model.params,
+            self.model.mean,
+            self.model.std,
+            digits,
+            dp,
+            &mut self.bulk.order,
+            &mut self.bulk.lanes,
+            &mut out[base..],
+        );
     }
 
-    /// Decode every entry into a dense tensor (small-tensor convenience).
+    /// Decode every entry into a dense tensor. Runs block-wise through
+    /// the same lockstep bulk path as [`Decompressor::get_many`]
+    /// (bit-identical to per-entry [`Decompressor::get`]), with bounded
+    /// memory: one digit/order block at a time.
     pub fn reconstruct_all(&mut self) -> DenseTensor {
+        /// Entries folded + decoded per block.
+        const BLOCK: usize = 1 << 15;
         let shape = self.model.spec.orig_shape.clone();
         let mut out = DenseTensor::zeros(&shape);
         let n = out.len();
-        for lin in 0..n {
-            let idx = out.unravel(lin);
-            let v = self.get(&idx);
-            out.data_mut()[lin] = v;
+        let dp = self.model.spec.dp;
+        let d = self.model.spec.d();
+        let mut idx = vec![0usize; d];
+        let mut reordered = vec![0usize; d];
+        let mut start = 0;
+        while start < n {
+            let end = (start + BLOCK).min(n);
+            let m = end - start;
+            let digits = &mut self.bulk.digits;
+            digits.clear();
+            digits.resize(m * dp, 0);
+            for row in 0..m {
+                for (k, r) in reordered.iter_mut().enumerate() {
+                    *r = self.inverses[k][idx[k]];
+                }
+                self.model
+                    .spec
+                    .fold_index_i32(&reordered, &mut digits[row * dp..(row + 1) * dp]);
+                // odometer-increment the original-coordinate index
+                for k in (0..d).rev() {
+                    idx[k] += 1;
+                    if idx[k] < shape[k] {
+                        break;
+                    }
+                    idx[k] = 0;
+                }
+            }
+            decode_digit_block(
+                &self.model.params,
+                self.model.mean,
+                self.model.std,
+                digits,
+                dp,
+                &mut self.bulk.order,
+                &mut self.bulk.lanes,
+                &mut out.data_mut()[start..end],
+            );
+            start = end;
         }
         out
     }
+}
+
+/// Shared bulk-decode core: sort `n = out.len()` digit strings, split the
+/// sorted order at shared-prefix boundaries, and decode each chunk on
+/// the kernel pool through the lockstep engine — one reusable
+/// [`LockstepScratch`] per chunk, results scattered into `out` in row
+/// order. Bit-identical to running `forward_one` per row at every thread
+/// count and on every SIMD dispatch arm.
+#[allow(clippy::too_many_arguments)]
+fn decode_digit_block(
+    params: &ModelParams,
+    mean: f32,
+    std: f32,
+    digits: &[i32],
+    dp: usize,
+    order: &mut Vec<usize>,
+    lanes: &mut Vec<LockstepScratch>,
+    out: &mut [f32],
+) {
+    let n = out.len();
+    debug_assert_eq!(digits.len(), n * dp);
+    order.clear();
+    order.extend(0..n);
+    order.sort_unstable_by(|&a, &b| {
+        digits[a * dp..(a + 1) * dp].cmp(&digits[b * dp..(b + 1) * dp])
+    });
+    let cuts = crate::codec::prefix_cuts(n, crate::codec::DECODE_GRAIN, |i| {
+        digits[order[i] * dp] != digits[order[i - 1] * dp]
+    });
+    let chunks = cuts.len() - 1;
+    while lanes.len() < chunks {
+        lanes.push(LockstepScratch::new(params));
+    }
+    let optr = crate::kernels::SendPtr::new(out.as_mut_ptr());
+    let sptr = crate::kernels::SendPtr::new(lanes.as_mut_ptr());
+    let order = &*order;
+    crate::kernels::parallel_jobs(chunks, |c| {
+        // SAFETY: chunk `c` exclusively owns lanes[c].
+        let scratch = unsafe { &mut *sptr.add(c) };
+        crate::nttd::infer::lockstep_rows(
+            params,
+            digits,
+            &order[cuts[c]..cuts[c + 1]],
+            scratch,
+            |row, y| {
+                // SAFETY: `order` is a permutation — slot `row` is
+                // written by exactly one chunk.
+                unsafe { *optr.add(row) = mean + std * y };
+            },
+        );
+    });
 }
 
 /// Save/load round-trip is in [`format`]; re-exported here for callers.

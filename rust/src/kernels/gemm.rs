@@ -4,7 +4,11 @@
 //! serial loops (increasing inner index, same zero-skip), so they are
 //! bit-identical to the pre-kernel `Mat::matmul` / `t_matmul` — blocking
 //! and threading only reorder *which* output rows are computed when,
-//! never the floating-point op sequence inside one output element:
+//! never the floating-point op sequence inside one output element. The
+//! inner row sweep runs through [`super::simd::axpy_f64`], which
+//! vectorises *across* output columns (each element still sees exactly
+//! one mul and one add per k), so the dispatched AVX2/NEON path changes
+//! no bit either:
 //!
 //! * `matmul` — row-panel parallel `ikj` with the k loop tiled so a
 //!   `KC × n` panel of B stays hot in cache across each row panel.
@@ -13,7 +17,7 @@
 //!   (one strided sweep) and then streams B rows, instead of striding
 //!   down A once per accumulation.
 
-use super::{parallel_chunks, SendPtr};
+use super::{parallel_chunks, simd, SendPtr};
 use crate::linalg::Mat;
 
 /// Rows of output per parallel chunk.
@@ -42,9 +46,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
                         continue;
                     }
                     let brow = &b.data[k * n..(k + 1) * n];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
+                    simd::axpy_f64(orow, av, brow);
                 }
             }
             k0 = k1;
@@ -83,9 +85,7 @@ pub fn t_matmul(a: &Mat, b: &Mat) -> Mat {
                         continue;
                     }
                     let brow = &b.data[(r0 + ro) * n..(r0 + ro + 1) * n];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
+                    simd::axpy_f64(orow, av, brow);
                 }
             }
             r0 = r1;

@@ -7,6 +7,10 @@
 //! * [`gemm`] — cache-blocked, transposed-panel f64 GEMM microkernels
 //!   behind [`crate::linalg::Mat::matmul`] / `t_matmul`, parallelised over
 //!   row panels.
+//! * [`simd`] — the fixed-width vector layer under the GEMM microkernels,
+//!   the QR/SVD inner loops, the uniform quantizer and the lockstep NTTD
+//!   decode engine: runtime AVX2/NEON dispatch with a `TCZ_SIMD` /
+//!   [`set_simd`] override, bit-identical on every arm.
 //! * The chunk helpers below — [`parallel_chunks`], [`parallel_jobs`],
 //!   [`parallel_sum`], [`parallel_map_reduce`] — which the trainer
 //!   (minibatch assembly, swap scoring), the `decode_many` chain
@@ -24,8 +28,10 @@
 
 pub mod gemm;
 pub mod pool;
+pub mod simd;
 
 pub use pool::{max_threads, pool, set_threads, Pool, SendPtr, MAX_POOL};
+pub use simd::{active_isa, set_simd, SimdIsa};
 
 use std::ops::Range;
 

@@ -1,0 +1,830 @@
+//! Fixed-width SIMD kernels with runtime ISA dispatch — the per-core
+//! vector layer under the GEMM microkernels, the QR/SVD inner loops, the
+//! uniform quantizer and the lockstep NTTD decode engine
+//! ([`crate::nttd::infer`]).
+//!
+//! ## Virtual vectors
+//!
+//! Every kernel is written once against the fixed-width virtual vectors
+//! [`F64x4`] / [`F32x8`] — plain `[T; N]` wrappers whose ops are ordinary
+//! IEEE adds/muls (never fused, never reassociated). The same
+//! `#[inline(always)]` body is compiled twice:
+//!
+//! * a baseline version (the **scalar path** — whatever the default
+//!   target features vectorise, or plain scalar code), and
+//! * an `#[target_feature(enable = "avx2")]` version on `x86_64`, picked
+//!   at runtime when the CPU supports it.
+//!
+//! On `aarch64`, NEON is a baseline feature, so the default build *is*
+//! the vector path. Because both versions are the same source compiled
+//! without floating-point contraction or reassociation (Rust guarantees
+//! neither), **every dispatch choice produces bit-identical results** —
+//! across ISAs, thread counts, and the `TCZ_SIMD=scalar` override.
+//!
+//! ## Reduction order
+//!
+//! Elementwise kernels ([`axpy_f64`], [`mul_f64`], the quantizer pair,
+//! the `lockstep_*` family) keep the exact per-element op order of the
+//! serial loops they replace, so wiring them in changes no output bit
+//! anywhere. Reductions ([`dot_f64`], [`sum_squares_f64`], the strided
+//! QR/SVD helpers) use the crate's canonical *lane-accumulator* order:
+//!
+//! ```text
+//! acc[l] += x[4k + l] * y[4k + l]   for l in 0..4, over full 4-blocks
+//! s = ((acc[0] + acc[1]) + acc[2]) + acc[3]
+//! s += x[i] * y[i]                  for the ragged tail, in order
+//! ```
+//!
+//! The scalar path replays that same lane structure (it *is* the same
+//! body), so a dot product is one specific, documented float expression
+//! no matter how it is executed.
+//!
+//! ## Dispatch knobs
+//!
+//! 1. [`set_simd`] — runtime override (the CLI `--simd` flag, tests);
+//! 2. the `TCZ_SIMD` env var: `auto` (default), `scalar`, `avx2`,
+//!    `neon`;
+//! 3. runtime detection (`is_x86_feature_detected!("avx2")`).
+//!
+//! Forcing an ISA the CPU lacks falls back to `auto` with a warning
+//! rather than executing an illegal instruction.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Lanes of the f64 virtual vector ([`F64x4`]).
+pub const F64_LANES: usize = 4;
+/// Lanes of the f32 virtual vector ([`F32x8`]) — also the lockstep batch
+/// width of the NTTD decode engine.
+pub const F32_LANES: usize = 8;
+
+// ---------------------------------------------------------------------
+// ISA selection
+// ---------------------------------------------------------------------
+
+/// Which code path the dispatched kernels take. The choice affects
+/// wall-clock only — outputs are bit-identical on every arm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdIsa {
+    /// Baseline codegen (no runtime feature dispatch).
+    Scalar,
+    /// 256-bit AVX2 path (`x86_64`, runtime-detected).
+    Avx2,
+    /// 128-bit NEON — the `aarch64` baseline, so identical machine code
+    /// to `Scalar` there; listed for observability.
+    Neon,
+}
+
+impl SimdIsa {
+    /// Stable lower-case name (bench JSON, logs, `--simd` values).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SimdIsa::Scalar => "scalar",
+            SimdIsa::Avx2 => "avx2",
+            SimdIsa::Neon => "neon",
+        }
+    }
+}
+
+/// Dispatch override + cache, packed into one atomic:
+/// 0 = undecided, 1 = scalar, 2 = avx2, 3 = neon.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+fn encode(isa: SimdIsa) -> u8 {
+    match isa {
+        SimdIsa::Scalar => 1,
+        SimdIsa::Avx2 => 2,
+        SimdIsa::Neon => 3,
+    }
+}
+
+fn decode(v: u8) -> Option<SimdIsa> {
+    match v {
+        1 => Some(SimdIsa::Scalar),
+        2 => Some(SimdIsa::Avx2),
+        3 => Some(SimdIsa::Neon),
+        _ => None,
+    }
+}
+
+/// What the hardware supports when nothing forces a path.
+fn detect() -> SimdIsa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdIsa::Avx2;
+        }
+        SimdIsa::Scalar
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        SimdIsa::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        SimdIsa::Scalar
+    }
+}
+
+/// Resolve a requested ISA name against the hardware; unsupported
+/// requests warn and fall back to detection.
+fn resolve(name: &str) -> SimdIsa {
+    let detected = detect();
+    match name {
+        "scalar" => SimdIsa::Scalar,
+        "" | "auto" => detected,
+        "avx2" if detected == SimdIsa::Avx2 => SimdIsa::Avx2,
+        "neon" if detected == SimdIsa::Neon => SimdIsa::Neon,
+        other => {
+            eprintln!(
+                "[tcz] TCZ_SIMD={other} not available on this CPU \
+                 (detected: {}); using auto",
+                detected.as_str()
+            );
+            detected
+        }
+    }
+}
+
+/// The ISA the dispatched kernels use right now. Decided once from
+/// [`set_simd`] / `TCZ_SIMD` / detection, then cached.
+pub fn active_isa() -> SimdIsa {
+    if let Some(isa) = decode(ACTIVE.load(Ordering::Relaxed)) {
+        return isa;
+    }
+    let isa = match std::env::var("TCZ_SIMD") {
+        Ok(s) => resolve(s.trim().to_ascii_lowercase().as_str()),
+        Err(_) => detect(),
+    };
+    ACTIVE.store(encode(isa), Ordering::Relaxed);
+    isa
+}
+
+/// Force a dispatch path at runtime (the CLI `--simd` flag and the
+/// determinism tests). `None` re-reads `TCZ_SIMD` / detection on next
+/// use. Outputs are bit-identical at every setting; only wall-clock
+/// changes.
+pub fn set_simd(isa: Option<SimdIsa>) {
+    match isa {
+        Some(want @ (SimdIsa::Avx2 | SimdIsa::Neon)) if detect() != want => {
+            eprintln!(
+                "[tcz] --simd {} not available on this CPU (detected: {}); using auto",
+                want.as_str(),
+                detect().as_str()
+            );
+            ACTIVE.store(encode(detect()), Ordering::Relaxed);
+        }
+        Some(isa) => ACTIVE.store(encode(isa), Ordering::Relaxed),
+        None => ACTIVE.store(0, Ordering::Relaxed),
+    }
+}
+
+/// True when the AVX2 arm should run (the only arm that is genuinely
+/// different machine code from the baseline build).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn use_avx2() -> bool {
+    active_isa() == SimdIsa::Avx2
+}
+
+// ---------------------------------------------------------------------
+// Virtual vectors
+// ---------------------------------------------------------------------
+
+/// Four f64 lanes. Ops are plain IEEE arithmetic on a `[f64; 4]`; the
+/// multiversioned wrappers turn them into 256-bit instructions where the
+/// ISA allows, with identical results.
+#[derive(Debug, Clone, Copy)]
+pub struct F64x4(pub [f64; 4]);
+
+impl F64x4 {
+    #[inline(always)]
+    pub fn splat(v: f64) -> F64x4 {
+        F64x4([v; 4])
+    }
+
+    #[inline(always)]
+    pub fn load(xs: &[f64]) -> F64x4 {
+        F64x4([xs[0], xs[1], xs[2], xs[3]])
+    }
+
+    #[inline(always)]
+    pub fn store(self, out: &mut [f64]) {
+        out[..4].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: F64x4) -> F64x4 {
+        F64x4([
+            self.0[0] + o.0[0],
+            self.0[1] + o.0[1],
+            self.0[2] + o.0[2],
+            self.0[3] + o.0[3],
+        ])
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: F64x4) -> F64x4 {
+        F64x4([
+            self.0[0] * o.0[0],
+            self.0[1] * o.0[1],
+            self.0[2] * o.0[2],
+            self.0[3] * o.0[3],
+        ])
+    }
+
+    /// The canonical horizontal fold: `((l0 + l1) + l2) + l3`.
+    #[inline(always)]
+    pub fn fold(self) -> f64 {
+        ((self.0[0] + self.0[1]) + self.0[2]) + self.0[3]
+    }
+}
+
+/// Eight f32 lanes — the lockstep batch width.
+#[derive(Debug, Clone, Copy)]
+pub struct F32x8(pub [f32; 8]);
+
+impl F32x8 {
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; 8])
+    }
+
+    #[inline(always)]
+    pub fn load(xs: &[f32]) -> F32x8 {
+        let mut a = [0.0f32; 8];
+        a.copy_from_slice(&xs[..8]);
+        F32x8(a)
+    }
+
+    #[inline(always)]
+    pub fn store(self, out: &mut [f32]) {
+        out[..8].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: F32x8) -> F32x8 {
+        let mut a = [0.0f32; 8];
+        for l in 0..8 {
+            a[l] = self.0[l] + o.0[l];
+        }
+        F32x8(a)
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: F32x8) -> F32x8 {
+        let mut a = [0.0f32; 8];
+        for l in 0..8 {
+            a[l] = self.0[l] * o.0[l];
+        }
+        F32x8(a)
+    }
+}
+
+/// Generate the baseline + AVX2 compilations of one kernel body and the
+/// runtime dispatcher. The body is `#[inline(always)]`, so the AVX2 arm
+/// re-codegens it with 256-bit vectors; the baseline arm is the scalar
+/// path. Both are the same IEEE op sequence, hence bit-identical.
+macro_rules! dispatched {
+    ($(#[$doc:meta])* pub fn $name:ident($($arg:ident: $ty:ty),* $(,)?) $(-> $ret:ty)? { $($body:tt)* }) => {
+        $(#[$doc])*
+        #[allow(clippy::too_many_arguments)]
+        #[inline]
+        pub fn $name($($arg: $ty),*) $(-> $ret)? {
+            #[inline(always)]
+            #[allow(clippy::too_many_arguments)]
+            fn body($($arg: $ty),*) $(-> $ret)? { $($body)* }
+
+            #[cfg(target_arch = "x86_64")]
+            {
+                #[target_feature(enable = "avx2")]
+                #[allow(clippy::too_many_arguments)]
+                unsafe fn avx2($($arg: $ty),*) $(-> $ret)? { body($($arg),*) }
+                if use_avx2() {
+                    // SAFETY: the Avx2 arm is only selected after runtime
+                    // feature detection.
+                    return unsafe { avx2($($arg),*) };
+                }
+            }
+            body($($arg),*)
+        }
+    };
+    ($(#[$doc:meta])* pub unsafe fn $name:ident($($arg:ident: $ty:ty),* $(,)?) $(-> $ret:ty)? { $($body:tt)* }) => {
+        $(#[$doc])*
+        #[allow(clippy::too_many_arguments)]
+        #[inline]
+        pub unsafe fn $name($($arg: $ty),*) $(-> $ret)? {
+            #[inline(always)]
+            #[allow(clippy::too_many_arguments)]
+            unsafe fn body($($arg: $ty),*) $(-> $ret)? { $($body)* }
+
+            #[cfg(target_arch = "x86_64")]
+            {
+                #[target_feature(enable = "avx2")]
+                unsafe fn avx2($($arg: $ty),*) $(-> $ret)? {
+                    // SAFETY: caller upholds the kernel's contract.
+                    unsafe { body($($arg),*) }
+                }
+                if use_avx2() {
+                    // SAFETY: the Avx2 arm is only selected after runtime
+                    // feature detection; the caller upholds the kernel's
+                    // own contract.
+                    return unsafe { avx2($($arg),*) };
+                }
+            }
+            // SAFETY: caller upholds the kernel's contract.
+            unsafe { body($($arg),*) }
+        }
+    };
+}
+
+// ---------------------------------------------------------------------
+// Elementwise f64 kernels (per-element op order preserved exactly)
+// ---------------------------------------------------------------------
+
+dispatched! {
+    /// `out[i] += a * x[i]` — the GEMM / TT / TR inner loop. One mul and
+    /// one add per element, exactly like the serial loop it replaces.
+    pub fn axpy_f64(out: &mut [f64], a: f64, x: &[f64]) {
+        let n = out.len().min(x.len());
+        let av = F64x4::splat(a);
+        let mut i = 0;
+        while i + F64_LANES <= n {
+            let r = F64x4::load(&out[i..]).add(av.mul(F64x4::load(&x[i..])));
+            r.store(&mut out[i..]);
+            i += F64_LANES;
+        }
+        while i < n {
+            out[i] += a * x[i];
+            i += 1;
+        }
+    }
+}
+
+dispatched! {
+    /// `out[i] = a[i] * b[i]` — the CP chain level update. One mul per
+    /// element, order preserved.
+    pub fn mul_f64(out: &mut [f64], a: &[f64], b: &[f64]) {
+        let n = out.len().min(a.len()).min(b.len());
+        let mut i = 0;
+        while i + F64_LANES <= n {
+            F64x4::load(&a[i..]).mul(F64x4::load(&b[i..])).store(&mut out[i..]);
+            i += F64_LANES;
+        }
+        while i < n {
+            out[i] = a[i] * b[i];
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reductions (canonical lane-accumulator order)
+// ---------------------------------------------------------------------
+
+dispatched! {
+    /// Dot product in the canonical lane-accumulator order (see the
+    /// module docs). This *is* the definition — the scalar path runs the
+    /// same lane structure, so every ISA produces the same bits.
+    pub fn dot_f64(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len().min(y.len());
+        let mut acc = F64x4::splat(0.0);
+        let mut i = 0;
+        while i + F64_LANES <= n {
+            acc = acc.add(F64x4::load(&x[i..]).mul(F64x4::load(&y[i..])));
+            i += F64_LANES;
+        }
+        let mut s = acc.fold();
+        while i < n {
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+}
+
+dispatched! {
+    /// `Σ x[i]²` in the canonical lane-accumulator order.
+    pub fn sum_squares_f64(x: &[f64]) -> f64 {
+        let mut acc = F64x4::splat(0.0);
+        let mut i = 0;
+        while i + F64_LANES <= x.len() {
+            let v = F64x4::load(&x[i..]);
+            acc = acc.add(v.mul(v));
+            i += F64_LANES;
+        }
+        let mut s = acc.fold();
+        while i < x.len() {
+            s += x[i] * x[i];
+            i += 1;
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------
+// Strided kernels for the QR/SVD inner loops. Columns of a row-major
+// matrix are strided, and during a parallel reflector application other
+// threads own the neighbouring columns — so these take raw pointers.
+// ---------------------------------------------------------------------
+
+/// Strided gather of 4 consecutive stride-spaced elements.
+///
+/// # Safety
+/// `p .. p + 3*stride` must be readable.
+#[inline(always)]
+unsafe fn gather4(p: *const f64, stride: usize) -> F64x4 {
+    F64x4([*p, *p.add(stride), *p.add(2 * stride), *p.add(3 * stride)])
+}
+
+dispatched! {
+    /// `Σ v[i] * p[i*stride]` in the canonical lane-accumulator order —
+    /// the QR reflector dot over one matrix column.
+    ///
+    /// # Safety
+    /// `p .. p + (v.len()-1)*stride` must be readable and unaliased by
+    /// concurrent writers.
+    pub unsafe fn dot_stride_f64(v: &[f64], p: *const f64, stride: usize) -> f64 {
+        let n = v.len();
+        let mut acc = F64x4::splat(0.0);
+        let mut i = 0;
+        while i + F64_LANES <= n {
+            acc = acc.add(F64x4::load(&v[i..]).mul(gather4(p.add(i * stride), stride)));
+            i += F64_LANES;
+        }
+        let mut s = acc.fold();
+        while i < n {
+            s += v[i] * *p.add(i * stride);
+            i += 1;
+        }
+        s
+    }
+}
+
+dispatched! {
+    /// `p[i*stride] -= coef * v[i]` — the reflector column update.
+    /// Elementwise; op order identical to the serial loop.
+    ///
+    /// # Safety
+    /// The strided range must be writable and owned by this thread.
+    pub unsafe fn sub_scaled_stride_f64(p: *mut f64, stride: usize, coef: f64, v: &[f64]) {
+        for (i, &vi) in v.iter().enumerate() {
+            let q = p.add(i * stride);
+            *q -= coef * vi;
+        }
+    }
+}
+
+dispatched! {
+    /// `Σ p[i*stride]²` over `n` elements, canonical lane order — column
+    /// norms in QR and the Jacobi SVD.
+    ///
+    /// # Safety
+    /// The strided range must be readable and unaliased by writers.
+    pub unsafe fn sum_squares_stride_f64(p: *const f64, stride: usize, n: usize) -> f64 {
+        let mut acc = F64x4::splat(0.0);
+        let mut i = 0;
+        while i + F64_LANES <= n {
+            let v = gather4(p.add(i * stride), stride);
+            acc = acc.add(v.mul(v));
+            i += F64_LANES;
+        }
+        let mut s = acc.fold();
+        while i < n {
+            let v = *p.add(i * stride);
+            s += v * v;
+            i += 1;
+        }
+        s
+    }
+}
+
+dispatched! {
+    /// One Jacobi Gram block: `(Σx², Σy², Σxy)` over the strided column
+    /// pair `x = p[i*stride]`, `y = q[i*stride]`, each sum in the
+    /// canonical lane order.
+    ///
+    /// # Safety
+    /// Both strided ranges must be readable and unaliased by writers.
+    pub unsafe fn gram2_stride_f64(
+        p: *const f64,
+        q: *const f64,
+        stride: usize,
+        n: usize,
+    ) -> (f64, f64, f64) {
+        let mut axx = F64x4::splat(0.0);
+        let mut ayy = F64x4::splat(0.0);
+        let mut axy = F64x4::splat(0.0);
+        let mut i = 0;
+        while i + F64_LANES <= n {
+            let x = gather4(p.add(i * stride), stride);
+            let y = gather4(q.add(i * stride), stride);
+            axx = axx.add(x.mul(x));
+            ayy = ayy.add(y.mul(y));
+            axy = axy.add(x.mul(y));
+            i += F64_LANES;
+        }
+        let (mut sxx, mut syy, mut sxy) = (axx.fold(), ayy.fold(), axy.fold());
+        while i < n {
+            let x = *p.add(i * stride);
+            let y = *q.add(i * stride);
+            sxx += x * x;
+            syy += y * y;
+            sxy += x * y;
+            i += 1;
+        }
+        (sxx, syy, sxy)
+    }
+}
+
+dispatched! {
+    /// Jacobi column rotation `x' = c·x − s·y`, `y' = s·x + c·y` over a
+    /// strided column pair. Elementwise, op order identical to the
+    /// serial loop.
+    ///
+    /// # Safety
+    /// Both strided ranges must be writable and owned by this thread.
+    pub unsafe fn rotate_stride_f64(
+        p: *mut f64,
+        q: *mut f64,
+        stride: usize,
+        n: usize,
+        c: f64,
+        s: f64,
+    ) {
+        for i in 0..n {
+            let xp = p.add(i * stride);
+            let yp = q.add(i * stride);
+            let (x, y) = (*xp, *yp);
+            *xp = c * x - s * y;
+            *yp = s * x + c * y;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Quantizer kernels (elementwise; `.round()` is IEEE
+// round-half-away-from-zero on every path)
+// ---------------------------------------------------------------------
+
+dispatched! {
+    /// `bins[i] = round(values[i] as f64 / step) as i64` — the uniform
+    /// quantizer forward pass. Widening, division, rounding and the
+    /// int conversion are all exactly specified, so every dispatch arm
+    /// produces the same bins.
+    pub fn quantize_bins_f64(values: &[f32], step: f64, bins: &mut [i64]) {
+        for (b, &v) in bins.iter_mut().zip(values) {
+            *b = (v as f64 / step).round() as i64;
+        }
+    }
+}
+
+dispatched! {
+    /// `out[i] = (bins[i] as f64 * step) as f32` — the dequantizer.
+    pub fn dequantize_f64(bins: &[i64], step: f64, out: &mut [f32]) {
+        for (o, &b) in out.iter_mut().zip(bins) {
+            *o = (b as f64 * step) as f32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lockstep f32 kernels — the SoA batch layer under the NTTD decode
+// engine. `LANES = F32_LANES` coordinates advance together; lane `l`
+// of every buffer belongs to entry `l`, and each lane's accumulation
+// order is exactly the scalar `forward_one` order (acc = bias; then one
+// `acc += term` per j, with the same inner grouping). Cross-lane there
+// is no arithmetic at all, which is what makes the batched engine
+// bit-identical to the point path.
+// ---------------------------------------------------------------------
+
+dispatched! {
+    /// Lockstep LSTM gate pre-activations:
+    /// `z[g·L+l] = bias[g] + Σ_j (w1[g·k+j]·x1[j·L+l] + w2[g·k+j]·x2[j·L+l])`
+    /// for `rows` gates over `k` inputs — the per-entry `w_ih`/`w_hh`
+    /// matvecs turned into one cache-blocked GEMM over the batch. Per
+    /// lane, the j-loop grouping `(t1 + t2)` then `acc + (…)` mirrors
+    /// `forward_one` exactly.
+    pub fn lockstep_gates_f32(
+        z: &mut [f32],
+        bias: &[f32],
+        w1: &[f32],
+        x1: &[f32],
+        w2: &[f32],
+        x2: &[f32],
+        rows: usize,
+        k: usize,
+    ) {
+        const L: usize = F32_LANES;
+        for g in 0..rows {
+            let mut acc = F32x8::splat(bias[g]);
+            let w1g = &w1[g * k..(g + 1) * k];
+            let w2g = &w2[g * k..(g + 1) * k];
+            for j in 0..k {
+                let t1 = F32x8::splat(w1g[j]).mul(F32x8::load(&x1[j * L..]));
+                let t2 = F32x8::splat(w2g[j]).mul(F32x8::load(&x2[j * L..]));
+                acc = acc.add(t1.add(t2));
+            }
+            acc.store(&mut z[g * L..]);
+        }
+    }
+}
+
+dispatched! {
+    /// Lockstep affine head:
+    /// `out[i·L+l] = bias[i] + Σ_j w[i·k+j] · x[j·L+l]` — the TT-core
+    /// head matvecs (`w1`/`wm`/`wd`, and NeuKron's `w_out`) over the
+    /// batch. Per-lane order mirrors the scalar head loops.
+    pub fn lockstep_affine_f32(
+        out: &mut [f32],
+        bias: &[f32],
+        w: &[f32],
+        x: &[f32],
+        rows: usize,
+        k: usize,
+    ) {
+        const L: usize = F32_LANES;
+        for i in 0..rows {
+            let mut acc = F32x8::splat(bias[i]);
+            let wi = &w[i * k..(i + 1) * k];
+            for (j, &wv) in wi.iter().enumerate() {
+                acc = acc.add(F32x8::splat(wv).mul(F32x8::load(&x[j * L..])));
+            }
+            acc.store(&mut out[i * L..]);
+        }
+    }
+}
+
+dispatched! {
+    /// Lockstep TT-chain contraction:
+    /// `vnext[s·L+l] = Σ_q v[q·L+l] · core[(q·r+s)·L+l]` — the row-vector
+    /// × core product of the chain, all lanes at once. Per-lane q-order
+    /// matches the scalar chain loop.
+    pub fn lockstep_chain_f32(vnext: &mut [f32], v: &[f32], core: &[f32], r: usize) {
+        const L: usize = F32_LANES;
+        for s in 0..r {
+            let mut acc = F32x8::splat(0.0);
+            for q in 0..r {
+                acc = acc
+                    .add(F32x8::load(&v[q * L..]).mul(F32x8::load(&core[(q * r + s) * L..])));
+            }
+            acc.store(&mut vnext[s * L..]);
+        }
+    }
+}
+
+dispatched! {
+    /// Lockstep inner product `out[l] = Σ_i a[i·L+l] · b[i·L+l]` — the
+    /// final `<v, Td>` of the chain. Per-lane i-order matches the scalar
+    /// output loop (acc starts at 0.0).
+    pub fn lockstep_mulsum_f32(out: &mut [f32], a: &[f32], b: &[f32], rows: usize) {
+        const L: usize = F32_LANES;
+        let mut acc = F32x8::splat(0.0);
+        for i in 0..rows {
+            acc = acc.add(F32x8::load(&a[i * L..]).mul(F32x8::load(&b[i * L..])));
+        }
+        acc.store(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg64::seeded(seed);
+        (
+            (0..n).map(|_| rng.normal() as f64).collect(),
+            (0..n).map(|_| rng.normal() as f64).collect(),
+        )
+    }
+
+    /// The documented lane-accumulator order, written out longhand.
+    fn reference_dot(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len();
+        let mut lanes = [0.0f64; 4];
+        let full = n / 4 * 4;
+        for i in 0..full {
+            lanes[i % 4] += x[i] * y[i];
+        }
+        let mut s = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+        for i in full..n {
+            s += x[i] * y[i];
+        }
+        s
+    }
+
+    #[test]
+    fn dot_matches_documented_lane_order() {
+        // lengths straddling lane multiples, incl. the all-tail cases
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 31, 64, 101] {
+            let (x, y) = vecs(n, n as u64);
+            assert_eq!(
+                dot_f64(&x, &y).to_bits(),
+                reference_dot(&x, &y).to_bits(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_matches_serial_elementwise() {
+        for n in [0usize, 1, 3, 4, 9, 64, 130] {
+            let (x, mut out) = vecs(n, 100 + n as u64);
+            let mut want = out.clone();
+            axpy_f64(&mut out, 1.7, &x);
+            for (w, &xv) in want.iter_mut().zip(&x) {
+                *w += 1.7 * xv;
+            }
+            for (a, b) in out.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn strided_kernels_match_contiguous() {
+        let (x, y) = vecs(37, 7);
+        // stride-1 strided ops must equal their contiguous versions
+        unsafe {
+            assert_eq!(
+                dot_stride_f64(&x, y.as_ptr(), 1).to_bits(),
+                dot_f64(&x, &y).to_bits()
+            );
+            assert_eq!(
+                sum_squares_stride_f64(x.as_ptr(), 1, x.len()).to_bits(),
+                sum_squares_f64(&x).to_bits()
+            );
+        }
+        // strided access walks the right elements
+        let n = 11;
+        let stride = 3;
+        let mut buf = vec![0.0f64; n * stride];
+        let mut col = Vec::new();
+        let mut rng = Pcg64::seeded(8);
+        for i in 0..n {
+            let v = rng.normal() as f64;
+            buf[i * stride] = v;
+            col.push(v);
+        }
+        let v: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
+        unsafe {
+            assert_eq!(
+                dot_stride_f64(&v, buf.as_ptr(), stride).to_bits(),
+                dot_f64(&v, &col).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_kernels_match_scalar_formula() {
+        let mut rng = Pcg64::seeded(9);
+        let vals: Vec<f32> = (0..1003).map(|_| rng.normal() * 50.0).collect();
+        let step = 0.037f64;
+        let mut bins = vec![0i64; vals.len()];
+        quantize_bins_f64(&vals, step, &mut bins);
+        for (&b, &v) in bins.iter().zip(&vals) {
+            assert_eq!(b, (v as f64 / step).round() as i64);
+        }
+        let mut out = vec![0.0f32; bins.len()];
+        dequantize_f64(&bins, step, &mut out);
+        for (&o, &b) in out.iter().zip(&bins) {
+            assert_eq!(o.to_bits(), ((b as f64 * step) as f32).to_bits());
+        }
+    }
+
+    #[test]
+    fn lockstep_gates_match_per_lane_scalar() {
+        const L: usize = F32_LANES;
+        let (rows, k) = (12, 7);
+        let mut rng = Pcg64::seeded(10);
+        let mut f = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal()).collect() };
+        let bias = f(rows);
+        let w1 = f(rows * k);
+        let w2 = f(rows * k);
+        let x1 = f(k * L);
+        let x2 = f(k * L);
+        let mut z = vec![0.0f32; rows * L];
+        lockstep_gates_f32(&mut z, &bias, &w1, &x1, &w2, &x2, rows, k);
+        for g in 0..rows {
+            for l in 0..L {
+                // the scalar forward_one order for this lane
+                let mut acc = bias[g];
+                for j in 0..k {
+                    acc += w1[g * k + j] * x1[j * L + l] + w2[g * k + j] * x2[j * L + l];
+                }
+                assert_eq!(z[g * L + l].to_bits(), acc.to_bits(), "g={g} l={l}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_override_is_bit_identical() {
+        let (x, y) = vecs(257, 21);
+        let auto = dot_f64(&x, &y);
+        set_simd(Some(SimdIsa::Scalar));
+        let scalar = dot_f64(&x, &y);
+        set_simd(None);
+        assert_eq!(auto.to_bits(), scalar.to_bits());
+    }
+}

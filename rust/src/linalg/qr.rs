@@ -1,12 +1,14 @@
 //! Householder QR decomposition and least-squares solves.
 //!
 //! The reflector applications fan out over columns on the kernel pool
-//! (columns are independent; each keeps its serial dot/update order), so
-//! the factorisation is bit-identical at every `TCZ_THREADS` setting —
-//! and to the original single-threaded code.
+//! (columns are independent), with the per-column dot and update running
+//! through the [`kernels::simd`] layer: dots use the crate's canonical
+//! lane-accumulator reduction order, updates stay elementwise. Every
+//! dispatch arm (scalar, AVX2, NEON) and every `TCZ_THREADS` setting
+//! produces bit-identical factors.
 
 use super::Mat;
-use crate::kernels;
+use crate::kernels::{self, simd};
 
 /// Columns per parallel chunk when applying a Householder reflector.
 /// Fixed (never derived from the thread count) so results are
@@ -21,17 +23,13 @@ fn apply_reflector(m: &mut Mat, v: &[f64], vnorm2: f64, k: usize, js: std::ops::
     kernels::parallel_chunks(js.len(), COL_GRAIN, |_, range| {
         for jj in range {
             let j = js.start + jj;
-            // SAFETY: column `j` is read and written by this chunk only.
+            // SAFETY: column `j` is read and written by this chunk only;
+            // the strided range `k..rows` stays inside `m.data`.
             unsafe {
-                let mut dot = 0.0;
-                for i in k..rows {
-                    dot += v[i - k] * *mp.add(i * cols + j);
-                }
+                let col = mp.add(k * cols + j);
+                let dot = simd::dot_stride_f64(v, col, cols);
                 let coef = 2.0 * dot / vnorm2;
-                for i in k..rows {
-                    let p = mp.add(i * cols + j);
-                    *p -= coef * v[i - k];
-                }
+                simd::sub_scaled_stride_f64(col, cols, coef, v);
             }
         }
     });
@@ -47,10 +45,11 @@ pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
     let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
     for k in 0..n {
         // v = x - sign(x0)*|x| e1 over rows k..m of column k
-        let mut norm = 0.0;
-        for i in k..m {
-            norm += r.at(i, k) * r.at(i, k);
-        }
+        // SAFETY: the strided range covers rows k..m of column k, in
+        // bounds of `r.data`; no concurrent writers.
+        let norm = unsafe {
+            simd::sum_squares_stride_f64(r.data.as_ptr().add(k * n + k), n, m - k)
+        };
         let norm = norm.sqrt();
         let mut v = vec![0.0; m - k];
         if norm == 0.0 {
@@ -63,7 +62,7 @@ pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
         for i in k + 1..m {
             v[i - k] = r.at(i, k);
         }
-        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        let vnorm2 = simd::sum_squares_f64(&v);
         if vnorm2 > 0.0 {
             // apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..]
             apply_reflector(&mut r, &v, vnorm2, k, k..n);
@@ -77,7 +76,7 @@ pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
     }
     for k in (0..n).rev() {
         let v = &vs[k];
-        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        let vnorm2 = simd::sum_squares_f64(v);
         if vnorm2 == 0.0 {
             continue;
         }

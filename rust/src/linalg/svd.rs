@@ -1,9 +1,12 @@
 //! Truncated SVD via randomized subspace iteration (Halko-Martinsson-Tropp)
 //! on top of the Householder QR, with a one-sided Jacobi fallback for the
-//! small core factorisation. Powers TT-SVD, HOOI and TTHRESH.
+//! small core factorisation. Powers TT-SVD, HOOI and TTHRESH. The Jacobi
+//! Gram sums, column rotations and column norms run through the
+//! [`crate::kernels::simd`] layer (lane-accumulator reductions,
+//! elementwise rotations) — bit-identical on every dispatch arm.
 
 use super::{qr_thin, Mat};
-use crate::kernels;
+use crate::kernels::{self, simd};
 use crate::util::Pcg64;
 
 /// Rows per fixed reduction block / rotation chunk in the Jacobi sweeps.
@@ -33,22 +36,25 @@ pub fn jacobi_svd(a: &Mat) -> Svd {
         for p in 0..n {
             for q in p + 1..n {
                 // 2x2 Gram block: three inner products in one blocked,
-                // order-stable parallel sweep
+                // order-stable parallel sweep; each block runs the
+                // lane-accumulator Gram kernel (same bits on every ISA)
                 let udata = &u.data;
                 let (app, aqq, apq) = kernels::parallel_map_reduce(
                     m,
                     ROW_GRAIN,
                     (0.0f64, 0.0f64, 0.0f64),
                     |rows| {
-                        let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
-                        for i in rows {
-                            let x = udata[i * n + p];
-                            let y = udata[i * n + q];
-                            app += x * x;
-                            aqq += y * y;
-                            apq += x * y;
+                        // SAFETY: the strided ranges cover rows `rows` of
+                        // columns p and q, in bounds; no writers run
+                        // during the Gram sweep.
+                        unsafe {
+                            simd::gram2_stride_f64(
+                                udata.as_ptr().add(rows.start * n + p),
+                                udata.as_ptr().add(rows.start * n + q),
+                                n,
+                                rows.len(),
+                            )
                         }
-                        (app, aqq, apq)
                     },
                     |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2),
                 );
@@ -64,15 +70,18 @@ pub fn jacobi_svd(a: &Mat) -> Svd {
                 // update fans out over the pool (elementwise, bit-stable)
                 let up = kernels::SendPtr::new(u.data.as_mut_ptr());
                 kernels::parallel_chunks(m, ROW_GRAIN, |_, rows| {
-                    for i in rows {
-                        // SAFETY: row `i` is touched by this chunk only.
-                        unsafe {
-                            let xp = up.add(i * n + p);
-                            let yp = up.add(i * n + q);
-                            let (x, y) = (*xp, *yp);
-                            *xp = c * x - s * y;
-                            *yp = s * x + c * y;
-                        }
+                    // SAFETY: rows `rows` of columns p and q are touched
+                    // by this chunk only; elementwise rotation, so the
+                    // op order matches the serial loop on every ISA.
+                    unsafe {
+                        simd::rotate_stride_f64(
+                            up.add(rows.start * n + p),
+                            up.add(rows.start * n + q),
+                            n,
+                            rows.len(),
+                            c,
+                            s,
+                        );
                     }
                 });
                 for i in 0..n {
@@ -90,7 +99,10 @@ pub fn jacobi_svd(a: &Mat) -> Svd {
     // column norms of u are the singular values
     let mut order: Vec<usize> = (0..n).collect();
     let mut sigma: Vec<f64> = (0..n)
-        .map(|j| (0..m).map(|i| u.at(i, j) * u.at(i, j)).sum::<f64>().sqrt())
+        .map(|j| {
+            // SAFETY: column j of `u`, in bounds, no concurrent writers.
+            unsafe { simd::sum_squares_stride_f64(u.data.as_ptr().add(j), n, m) }.sqrt()
+        })
         .collect();
     order.sort_by(|&a_, &b_| sigma[b_].partial_cmp(&sigma[a_]).unwrap());
     let mut u_out = Mat::zeros(m, n);

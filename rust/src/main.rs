@@ -47,6 +47,7 @@ const VALUE_FLAGS: &[&str] = &[
     "max-wait-us",
     "queue-depth",
     "threads",
+    "simd",
     "config",
     "set",
     "scale",
@@ -538,8 +539,10 @@ Flags accept `--key value` and `--key=value`; use the `=` form for values
 that start with `--`.
 
 `--threads N` (any command; also the TCZ_THREADS env var) caps the kernel
-worker pool for training, bulk decode and serving. Outputs are
-bit-identical at every thread count.
+worker pool for training, bulk decode and serving. `--simd
+auto|scalar|avx2|neon` (any command; also the TCZ_SIMD env var) picks the
+vector dispatch arm of the kernel layer. Outputs are bit-identical at
+every thread count and on every SIMD arm.
 
 METHODS:  {}
 DATASETS: {}",
@@ -573,6 +576,21 @@ fn main() {
             Ok(n) if n > 0 => tensorcodec::kernels::set_threads(n),
             _ => {
                 eprintln!("error: --threads wants a positive integer, got `{t}`");
+                std::process::exit(2);
+            }
+        }
+    }
+    // SIMD dispatch arm (overrides TCZ_SIMD; outputs are bit-identical
+    // at every setting, only wall-clock changes).
+    if let Some(s) = args.get("simd") {
+        use tensorcodec::kernels::{set_simd, SimdIsa};
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => set_simd(None),
+            "scalar" => set_simd(Some(SimdIsa::Scalar)),
+            "avx2" => set_simd(Some(SimdIsa::Avx2)),
+            "neon" => set_simd(Some(SimdIsa::Neon)),
+            other => {
+                eprintln!("error: --simd wants auto|scalar|avx2|neon, got `{other}`");
                 std::process::exit(2);
             }
         }

@@ -1,12 +1,33 @@
 //! Pure-Rust NTTD forward pass (f32, numerically matching
 //! `python/compile/kernels/ref.py`).
 //!
-//! Two jobs: (a) integration-test oracle — the XLA artifacts must agree
-//! with this to float tolerance; (b) runtime fallback for decoding single
-//! entries without spinning up the PJRT client (used by the CLI `get`
-//! command and by the reconstruction-scaling bench at tiny batch sizes).
+//! Three evaluators, all bit-identical to each other:
+//!
+//! * [`forward_one`] — the scalar oracle (one entry, one LSTM trunk walk).
+//!   The XLA artifacts must agree with this to float tolerance, and every
+//!   other path must agree with it *exactly*.
+//! * [`PrefixDecoder`] — incremental per-entry evaluator with per-depth
+//!   LSTM/chain snapshots: a sorted batch only recomputes the suffix that
+//!   changed. Kept as the reference incremental path.
+//! * the **lockstep engine** ([`forward_lockstep`] / [`LockstepScratch`])
+//!   — [`simd::F32_LANES`] coordinates step through the trunk
+//!   *simultaneously* in structure-of-arrays form, turning the per-entry
+//!   `w_ih`/`w_hh` matvecs and TT-core head evaluations into batched
+//!   GEMMs over the lanes (the [`crate::kernels::simd`] lockstep
+//!   kernels). Lane `l` executes exactly the op sequence of
+//!   `forward_one` for its own digits — there is no cross-lane
+//!   arithmetic — so the batched values are bit-identical to the point
+//!   path on every ISA and at every thread count. Activations
+//!   (sigmoid/tanh) stay scalar libm calls per lane for the same reason.
+//!
+//! All scratch is caller-owned and reusable: bulk decode performs zero
+//! allocations per entry.
 
 use super::params::{ModelParams, Variant};
+use crate::kernels::simd;
+
+/// Lockstep batch width (lanes of the f32 virtual vector).
+pub const LANES: usize = simd::F32_LANES;
 
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
@@ -148,16 +169,12 @@ pub fn forward_one(p: &ModelParams, digits: &[i32], scratch: &mut InferScratch) 
     }
 }
 
-/// Incremental NTTD evaluator with per-depth state snapshots.
-///
-/// The LSTM state and the TT-chain row vector after `k` digits depend only
-/// on the first `k` digits, so a lexicographically sorted batch of digit
-/// strings only recomputes the suffix that changed — the core-chain-reuse
-/// bulk path behind [`crate::codec::Artifact::decode_many`] for neural
-/// artifacts. Every arithmetic op mirrors [`forward_one`] exactly, so the
-/// decoded values are bit-identical to the point path.
-pub struct PrefixDecoder<'a> {
-    p: &'a ModelParams,
+/// Reusable buffers behind a [`PrefixDecoder`] — caller-owned so bulk
+/// paths can hold one per worker and pay the allocation once.
+#[derive(Debug)]
+pub struct PrefixScratch {
+    /// (dp, h, max(r,1)) the buffers are sized for.
+    dims: (usize, usize, usize),
     /// `hs[k*h..]` / `cs[k*h..]`: LSTM state after consuming `k` digits
     /// (row 0 is the zero initial state).
     hs: Vec<f32>,
@@ -171,11 +188,11 @@ pub struct PrefixDecoder<'a> {
     prev: Vec<i32>,
 }
 
-impl<'a> PrefixDecoder<'a> {
-    pub fn new(p: &'a ModelParams) -> Self {
-        let (dp, h, r) = (p.dp, p.h, p.r.max(1));
-        PrefixDecoder {
-            p,
+impl PrefixScratch {
+    pub fn new(dp: usize, h: usize, r: usize) -> Self {
+        let r = r.max(1);
+        PrefixScratch {
+            dims: (dp, h, r),
             hs: vec![0.0; (dp + 1) * h],
             cs: vec![0.0; (dp + 1) * h],
             vs: vec![0.0; (dp + 1) * r],
@@ -183,6 +200,48 @@ impl<'a> PrefixDecoder<'a> {
             core: vec![0.0; r * r],
             prev: vec![-1; dp],
         }
+    }
+
+    /// Rebuild for the given dims (no-op when they already match — the
+    /// stored dims tuple is compared, not buffer lengths, so colliding
+    /// products of different (dp, h, r) never keep undersized buffers)
+    /// and clear the previous-digits memo so the next decode starts cold.
+    fn ensure_reset(&mut self, dp: usize, h: usize, r: usize) {
+        if self.dims != (dp, h, r.max(1)) {
+            *self = PrefixScratch::new(dp, h, r);
+            return;
+        }
+        self.prev.fill(-1);
+    }
+}
+
+/// Incremental NTTD evaluator with per-depth state snapshots.
+///
+/// The LSTM state and the TT-chain row vector after `k` digits depend only
+/// on the first `k` digits, so a lexicographically sorted batch of digit
+/// strings only recomputes the suffix that changed. Every arithmetic op
+/// mirrors [`forward_one`] exactly, so the decoded values are
+/// bit-identical to the point path.
+pub struct PrefixDecoder<'a> {
+    p: &'a ModelParams,
+    s: PrefixScratch,
+}
+
+impl<'a> PrefixDecoder<'a> {
+    pub fn new(p: &'a ModelParams) -> Self {
+        Self::with_scratch(p, PrefixScratch::new(p.dp, p.h, p.r))
+    }
+
+    /// Build on caller-owned scratch (resized to fit `p` if needed) — no
+    /// allocations when the scratch already matches.
+    pub fn with_scratch(p: &'a ModelParams, mut s: PrefixScratch) -> Self {
+        s.ensure_reset(p.dp, p.h, p.r);
+        PrefixDecoder { p, s }
+    }
+
+    /// Recover the scratch for reuse with another decoder.
+    pub fn into_scratch(self) -> PrefixScratch {
+        self.s
     }
 
     /// One LSTM cell step consuming digit `t` (token `tok`), reading state
@@ -197,7 +256,8 @@ impl<'a> PrefixDecoder<'a> {
         let w_hh = p.get("w_hh");
         let b = p.get("b_lstm");
         let x = &emb[(t * p.vocab + tok) * h..(t * p.vocab + tok) * h + h];
-        let h_prev = &self.hs[t * h..(t + 1) * h];
+        let s = &mut self.s;
+        let h_prev = &s.hs[t * h..(t + 1) * h];
         for g in 0..4 * h {
             let wi = &w_ih[g * h..g * h + h];
             let wh = &w_hh[g * h..g * h + h];
@@ -205,16 +265,16 @@ impl<'a> PrefixDecoder<'a> {
             for j in 0..h {
                 acc += x[j] * wi[j] + h_prev[j] * wh[j];
             }
-            self.z[g] = acc;
+            s.z[g] = acc;
         }
         for j in 0..h {
-            let i_g = sigmoid(self.z[j]);
-            let f_g = sigmoid(self.z[h + j]);
-            let g_g = self.z[2 * h + j].tanh();
-            let o_g = sigmoid(self.z[3 * h + j]);
-            let c_new = f_g * self.cs[t * h + j] + i_g * g_g;
-            self.cs[(t + 1) * h + j] = c_new;
-            self.hs[(t + 1) * h + j] = o_g * c_new.tanh();
+            let i_g = sigmoid(s.z[j]);
+            let f_g = sigmoid(s.z[h + j]);
+            let g_g = s.z[2 * h + j].tanh();
+            let o_g = sigmoid(s.z[3 * h + j]);
+            let c_new = f_g * s.cs[t * h + j] + i_g * g_g;
+            s.cs[(t + 1) * h + j] = c_new;
+            s.hs[(t + 1) * h + j] = o_g * c_new.tanh();
         }
     }
 
@@ -225,52 +285,54 @@ impl<'a> PrefixDecoder<'a> {
         let (dp, h, r) = (p.dp, p.h, p.r);
         debug_assert_eq!(digits.len(), dp);
         let mut l = 0;
-        while l < dp && self.prev[l] == digits[l] {
+        while l < dp && self.s.prev[l] == digits[l] {
             l += 1;
         }
         for t in l..dp {
             self.lstm_step(t, digits[t] as usize);
-            self.prev[t] = digits[t];
+            self.s.prev[t] = digits[t];
             if p.variant == Variant::Tc {
+                let s = &mut self.s;
                 if t == 0 {
                     // T1 = w1 @ h_0 + b1 (h_0 = state after the first digit)
                     let w1 = p.get("w1");
                     let b1 = p.get("b1");
-                    let h0 = &self.hs[h..2 * h];
+                    let h0 = &s.hs[h..2 * h];
                     for i in 0..r {
                         let w = &w1[i * h..(i + 1) * h];
                         let mut acc = b1[i];
                         for j in 0..h {
                             acc += w[j] * h0[j];
                         }
-                        self.vs[r + i] = acc;
+                        s.vs[r + i] = acc;
                     }
                 } else if t + 2 <= dp {
                     // middle core from h_t, v_{t+1} = v_t @ core
                     let wm = p.get("wm");
                     let bm = p.get("bm");
-                    let ht = &self.hs[(t + 1) * h..(t + 2) * h];
+                    let ht = &s.hs[(t + 1) * h..(t + 2) * h];
                     for i in 0..r * r {
                         let w = &wm[i * h..(i + 1) * h];
                         let mut acc = bm[i];
                         for j in 0..h {
                             acc += w[j] * ht[j];
                         }
-                        self.core[i] = acc;
+                        s.core[i] = acc;
                     }
-                    let (prev_rows, next_rows) = self.vs.split_at_mut((t + 1) * r);
+                    let (prev_rows, next_rows) = s.vs.split_at_mut((t + 1) * r);
                     let v = &prev_rows[t * r..(t + 1) * r];
-                    for s in 0..r {
+                    for si in 0..r {
                         let mut acc = 0.0;
                         for q in 0..r {
-                            acc += v[q] * self.core[q * r + s];
+                            acc += v[q] * s.core[q * r + si];
                         }
-                        next_rows[s] = acc;
+                        next_rows[si] = acc;
                     }
                 }
             }
         }
-        let hl = &self.hs[dp * h..(dp + 1) * h];
+        let s = &self.s;
+        let hl = &s.hs[dp * h..(dp + 1) * h];
         match p.variant {
             Variant::Nk => {
                 let w_out = p.get("w_out");
@@ -285,7 +347,7 @@ impl<'a> PrefixDecoder<'a> {
                 let wd = p.get("wd");
                 let bd = p.get("bd");
                 let vrow = (dp - 1).max(1);
-                let v = &self.vs[vrow * r..(vrow + 1) * r];
+                let v = &s.vs[vrow * r..(vrow + 1) * r];
                 let mut out = 0.0;
                 for i in 0..r {
                     let w = &wd[i * h..(i + 1) * h];
@@ -301,17 +363,209 @@ impl<'a> PrefixDecoder<'a> {
     }
 }
 
-/// Batched convenience wrapper: `idx` is row-major `[n, dp]`.
+/// Structure-of-arrays scratch for the lockstep engine: lane `l` of every
+/// buffer (`buf[j * LANES + l]`) belongs to entry `l` of the current
+/// group. Caller-owned and reusable — one per decode worker, zero
+/// allocations per entry.
+#[derive(Debug)]
+pub struct LockstepScratch {
+    /// (dp, h, r) the buffers are sized for.
+    dims: (usize, usize, usize),
+    x: Vec<f32>,     // h × LANES gathered embeddings for the current step
+    h: Vec<f32>,     // h × LANES hidden state
+    c: Vec<f32>,     // h × LANES cell state
+    z: Vec<f32>,     // 4h × LANES gate pre-activations
+    v: Vec<f32>,     // r × LANES chain row vector
+    vnext: Vec<f32>, // r × LANES
+    core: Vec<f32>,  // r² × LANES middle core
+    td: Vec<f32>,    // r × LANES last core
+    /// Gather buffer for non-contiguous digit strings (`LANES × dp`).
+    gather: Vec<i32>,
+    /// Scalar scratch for ragged group tails.
+    infer: InferScratch,
+}
+
+impl LockstepScratch {
+    pub fn new(p: &ModelParams) -> Self {
+        let (dp, h, r) = (p.dp, p.h, p.r.max(1));
+        LockstepScratch {
+            dims: (dp, h, r),
+            x: vec![0.0; h * LANES],
+            h: vec![0.0; h * LANES],
+            c: vec![0.0; h * LANES],
+            z: vec![0.0; 4 * h * LANES],
+            v: vec![0.0; r * LANES],
+            vnext: vec![0.0; r * LANES],
+            core: vec![0.0; r * r * LANES],
+            td: vec![0.0; r * LANES],
+            gather: vec![0; LANES * dp],
+            infer: InferScratch::new(dp, h, r),
+        }
+    }
+
+    /// Resize for `p`'s dims — a no-op when they already match.
+    pub fn ensure(&mut self, p: &ModelParams) {
+        let dims = (p.dp, p.h, p.r.max(1));
+        if self.dims != dims {
+            *self = LockstepScratch::new(p);
+        }
+    }
+}
+
+/// Step [`LANES`] digit strings (row-major `[LANES, dp]`) through the
+/// trunk and heads in lockstep, writing one value per lane. Lane `l`
+/// runs exactly the op sequence of [`forward_one`] on its own digits —
+/// the matvecs are batched across lanes by the `lockstep_*` kernels, the
+/// activations stay scalar per lane — so every output is bit-identical
+/// to the point path.
+fn forward_lanes(p: &ModelParams, digits: &[i32], s: &mut LockstepScratch, out: &mut [f32; LANES]) {
+    let (dp, h, r) = (p.dp, p.h, p.r);
+    debug_assert_eq!(digits.len(), LANES * dp);
+    let emb = p.get("emb");
+    let w_ih = p.get("w_ih");
+    let w_hh = p.get("w_hh");
+    let b = p.get("b_lstm");
+    s.h.fill(0.0);
+    s.c.fill(0.0);
+    for t in 0..dp {
+        // gather this step's embeddings: x[j·L + l] = emb[tok_l][j]
+        for l in 0..LANES {
+            let tok = digits[l * dp + t] as usize;
+            debug_assert!(tok < p.vocab);
+            let xrow = &emb[(t * p.vocab + tok) * h..(t * p.vocab + tok) * h + h];
+            for (j, &xv) in xrow.iter().enumerate() {
+                s.x[j * LANES + l] = xv;
+            }
+        }
+        // z = x @ w_ihᵀ + h @ w_hhᵀ + b, all lanes at once
+        simd::lockstep_gates_f32(&mut s.z, b, w_ih, &s.x, w_hh, &s.h, 4 * h, h);
+        // gate activations + state update, scalar per lane (libm calls
+        // are identical on every dispatch arm)
+        for j in 0..h {
+            for l in 0..LANES {
+                let i_g = sigmoid(s.z[j * LANES + l]);
+                let f_g = sigmoid(s.z[(h + j) * LANES + l]);
+                let g_g = s.z[(2 * h + j) * LANES + l].tanh();
+                let o_g = sigmoid(s.z[(3 * h + j) * LANES + l]);
+                let c_new = f_g * s.c[j * LANES + l] + i_g * g_g;
+                s.c[j * LANES + l] = c_new;
+                s.h[j * LANES + l] = o_g * c_new.tanh();
+            }
+        }
+        match p.variant {
+            Variant::Tc => {
+                if t == 0 {
+                    simd::lockstep_affine_f32(&mut s.v, p.get("b1"), p.get("w1"), &s.h, r, h);
+                } else if t + 1 < dp {
+                    simd::lockstep_affine_f32(
+                        &mut s.core,
+                        p.get("bm"),
+                        p.get("wm"),
+                        &s.h,
+                        r * r,
+                        h,
+                    );
+                    simd::lockstep_chain_f32(&mut s.vnext, &s.v, &s.core, r);
+                    std::mem::swap(&mut s.v, &mut s.vnext);
+                }
+                if t + 1 == dp {
+                    simd::lockstep_affine_f32(&mut s.td, p.get("bd"), p.get("wd"), &s.h, r, h);
+                    simd::lockstep_mulsum_f32(&mut out[..], &s.v, &s.td, r);
+                }
+            }
+            Variant::Nk => {
+                if t + 1 == dp {
+                    simd::lockstep_affine_f32(
+                        &mut out[..],
+                        p.get("b_out"),
+                        p.get("w_out"),
+                        &s.h,
+                        1,
+                        h,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Decode `out.len()` digit strings (row-major `[n, dp]`) through the
+/// lockstep engine: full groups of [`LANES`] run vectorised, the ragged
+/// tail runs through [`forward_one`]. Bit-identical to calling
+/// [`forward_one`] per row.
+pub fn forward_lockstep(p: &ModelParams, digits: &[i32], out: &mut [f32], s: &mut LockstepScratch) {
+    let dp = p.dp;
+    let n = out.len();
+    debug_assert_eq!(digits.len(), n * dp);
+    s.ensure(p);
+    let mut lane_out = [0.0f32; LANES];
+    let groups = n / LANES;
+    for g in 0..groups {
+        let rows = &digits[g * LANES * dp..(g + 1) * LANES * dp];
+        forward_lanes(p, rows, s, &mut lane_out);
+        out[g * LANES..(g + 1) * LANES].copy_from_slice(&lane_out);
+    }
+    for i in groups * LANES..n {
+        out[i] = forward_one(p, &digits[i * dp..(i + 1) * dp], &mut s.infer);
+    }
+}
+
+/// Decode the (sorted) `rows` of a shared digit buffer through the
+/// lockstep engine, emitting `(row, value)` pairs — the bulk-decode
+/// building block behind [`crate::compress::Decompressor::get_many`].
+/// Row digit strings are gathered into the scratch's SoA buffer, so the
+/// rows need not be contiguous. Bit-identical to [`forward_one`] per row.
+pub fn lockstep_rows(
+    p: &ModelParams,
+    digits: &[i32],
+    rows: &[usize],
+    s: &mut LockstepScratch,
+    mut emit: impl FnMut(usize, f32),
+) {
+    let dp = p.dp;
+    s.ensure(p);
+    let mut lane_out = [0.0f32; LANES];
+    let mut gather = std::mem::take(&mut s.gather);
+    let groups = rows.len() / LANES;
+    for g in 0..groups {
+        let group = &rows[g * LANES..(g + 1) * LANES];
+        for (l, &row) in group.iter().enumerate() {
+            gather[l * dp..(l + 1) * dp].copy_from_slice(&digits[row * dp..(row + 1) * dp]);
+        }
+        forward_lanes(p, &gather, s, &mut lane_out);
+        for (l, &row) in group.iter().enumerate() {
+            emit(row, lane_out[l]);
+        }
+    }
+    s.gather = gather;
+    for &row in &rows[groups * LANES..] {
+        let y = forward_one(p, &digits[row * dp..(row + 1) * dp], &mut s.infer);
+        emit(row, y);
+    }
+}
+
+/// Batched convenience wrapper: `idx` is row-major `[n, dp]`. Runs the
+/// lockstep engine with one-shot scratch; hot callers should hold a
+/// [`LockstepScratch`] and use [`forward_batch_with`].
 pub fn forward_batch(p: &ModelParams, idx: &[i32], out: &mut Vec<f32>) {
+    let mut scratch = LockstepScratch::new(p);
+    forward_batch_with(p, idx, out, &mut scratch);
+}
+
+/// [`forward_batch`] with caller-owned scratch (zero allocations per
+/// entry). Bit-identical to looping [`forward_one`].
+pub fn forward_batch_with(
+    p: &ModelParams,
+    idx: &[i32],
+    out: &mut Vec<f32>,
+    scratch: &mut LockstepScratch,
+) {
     let dp = p.dp;
     assert_eq!(idx.len() % dp, 0);
     let n = idx.len() / dp;
-    let mut scratch = InferScratch::new(dp, p.h, p.r);
     out.clear();
-    out.reserve(n);
-    for b in 0..n {
-        out.push(forward_one(p, &idx[b * dp..(b + 1) * dp], &mut scratch));
-    }
+    out.resize(n, 0.0);
+    forward_lockstep(p, idx, out, scratch);
 }
 
 #[cfg(test)]
@@ -397,6 +651,43 @@ mod tests {
     }
 
     #[test]
+    fn prefix_scratch_reuse_is_bit_exact() {
+        // decode through a fresh decoder, recycle its scratch into a
+        // decoder for a *different* model, then back — values must match
+        // fresh decoders exactly (the memo is reset on reuse)
+        let p1 = ModelParams::init_tc(7, 7, 32, 5, 5);
+        let p2 = ModelParams::init_tc(8, 7, 32, 5, 5);
+        let mut s1 = InferScratch::new(7, 5, 5);
+        let a: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7];
+        let mut dec = PrefixDecoder::new(&p1);
+        assert_eq!(
+            dec.decode(&a).to_bits(),
+            forward_one(&p1, &a, &mut s1).to_bits()
+        );
+        let scratch = dec.into_scratch();
+        let mut dec2 = PrefixDecoder::with_scratch(&p2, scratch);
+        assert_eq!(
+            dec2.decode(&a).to_bits(),
+            forward_one(&p2, &a, &mut s1).to_bits()
+        );
+        // regression: (dp=5,h=4) and (dp=3,h=6) give the same hs length
+        // ((5+1)*4 == (3+1)*6) but need different z/core sizes — the
+        // recycled scratch must be rebuilt, not kept by length collision
+        let p3 = ModelParams::init_tc(9, 5, 32, 4, 2);
+        let p4 = ModelParams::init_tc(10, 3, 32, 6, 3);
+        let d3: Vec<i32> = vec![1, 2, 3, 4, 5];
+        let d4: Vec<i32> = vec![6, 7, 8];
+        let mut dec3 = PrefixDecoder::new(&p3);
+        dec3.decode(&d3);
+        let mut dec4 = PrefixDecoder::with_scratch(&p4, dec3.into_scratch());
+        let mut s4 = InferScratch::new(3, 6, 3);
+        assert_eq!(
+            dec4.decode(&d4).to_bits(),
+            forward_one(&p4, &d4, &mut s4).to_bits()
+        );
+    }
+
+    #[test]
     fn batch_matches_single() {
         let p = ModelParams::init_tc(3, 7, 32, 5, 5);
         let mut rng = Pcg64::seeded(3);
@@ -408,6 +699,60 @@ mod tests {
         for b in 0..n {
             let one = forward_one(&p, &idx[b * 7..(b + 1) * 7], &mut s);
             assert_eq!(out[b], one);
+        }
+    }
+
+    #[test]
+    fn lockstep_bit_exact_with_forward_one() {
+        // batch sizes around the lane width: full groups, ragged tails,
+        // sub-lane batches — for both variants
+        for (p, dp) in [
+            (ModelParams::init_tc(9, 8, 32, 6, 6), 8usize),
+            (ModelParams::init_nk(10, 7, 32, 8), 7usize),
+        ] {
+            let mut rng = Pcg64::seeded(12);
+            let mut scratch = LockstepScratch::new(&p);
+            let mut one = InferScratch::new(dp, p.h, p.r.max(1));
+            for n in [1usize, 3, LANES - 1, LANES, LANES + 1, 5 * LANES + 3] {
+                let idx: Vec<i32> = (0..n * dp).map(|_| rng.below(32) as i32).collect();
+                let mut out = Vec::new();
+                forward_batch_with(&p, &idx, &mut out, &mut scratch);
+                for b in 0..n {
+                    let want = forward_one(&p, &idx[b * dp..(b + 1) * dp], &mut one);
+                    assert_eq!(
+                        out[b].to_bits(),
+                        want.to_bits(),
+                        "variant {:?} n={n} b={b}",
+                        p.variant
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_rows_scatters_every_row_once() {
+        let p = ModelParams::init_tc(13, 7, 32, 5, 5);
+        let mut rng = Pcg64::seeded(14);
+        let n = 3 * LANES + 5;
+        let digits: Vec<i32> = (0..n * 7).map(|_| rng.below(32) as i32).collect();
+        // decode rows in a shuffled order
+        let mut rows: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            rows.swap(i, rng.below(i + 1));
+        }
+        let mut s = LockstepScratch::new(&p);
+        let mut got = vec![f32::NAN; n];
+        let mut hits = vec![0usize; n];
+        lockstep_rows(&p, &digits, &rows, &mut s, |row, y| {
+            got[row] = y;
+            hits[row] += 1;
+        });
+        let mut one = InferScratch::new(7, 5, 5);
+        for b in 0..n {
+            assert_eq!(hits[b], 1, "row {b} emitted {} times", hits[b]);
+            let want = forward_one(&p, &digits[b * 7..(b + 1) * 7], &mut one);
+            assert_eq!(got[b].to_bits(), want.to_bits(), "row {b}");
         }
     }
 }

@@ -231,19 +231,24 @@ fn parse_coord_block(s: &str) -> Result<Vec<Vec<usize>>> {
     s.split(';').map(parse_coords).collect()
 }
 
-fn meta_reply(meta: &ArtifactMeta, bulk: bool) -> String {
-    let shape: Vec<String> = meta.shape.iter().map(|n| n.to_string()).collect();
-    format!(
-        "OK method={} shape={} bytes={} bulk={}",
-        meta.method,
-        shape.join(","),
-        meta.size_bytes,
-        bulk
-    )
+/// Append `OK method=… shape=… bytes=… bulk=…` to the reply buffer.
+fn write_meta_reply(out: &mut String, meta: &ArtifactMeta, bulk: bool) {
+    use std::fmt::Write;
+    let _ = write!(out, "OK method={} shape=", meta.method);
+    for (k, n) in meta.shape.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{n}");
+    }
+    let _ = write!(out, " bytes={} bulk={}", meta.size_bytes, bulk);
 }
 
-/// Dispatch one protocol v2 frame.
-fn dispatch_frame(server: &ArtifactServer, line: &str) -> Result<String> {
+/// Dispatch one protocol v2 frame, serialising the success reply into
+/// `out` (the caller's reusable per-connection buffer — no intermediate
+/// strings or joined vectors are allocated per reply).
+fn dispatch_frame(server: &ArtifactServer, line: &str, out: &mut String) -> Result<()> {
+    use std::fmt::Write;
     let line = line.trim();
     let (cmd, rest) = match line.split_once(' ') {
         Some((c, r)) => (c, r.trim()),
@@ -251,10 +256,24 @@ fn dispatch_frame(server: &ArtifactServer, line: &str) -> Result<String> {
     };
     match cmd {
         "methods" => {
-            let names: Vec<&str> = codec::registry().iter().map(|c| c.name()).collect();
-            Ok(format!("OK {}", names.join(",")))
+            out.push_str("OK ");
+            for (i, c) in codec::registry().iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(c.name());
+            }
         }
-        "list" => Ok(format!("OK {}", server.list()?.join(","))),
+        "list" => {
+            let names = server.list()?;
+            out.push_str("OK ");
+            for (i, n) in names.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(n);
+            }
+        }
         "open" | "reload" => {
             // both verbs revalidate against the file on disk; `reload` is
             // the explicit notification form for writers that just
@@ -263,41 +282,55 @@ fn dispatch_frame(server: &ArtifactServer, line: &str) -> Result<String> {
                 bail!("usage: {cmd} <artifact>");
             }
             let (meta, bulk, generation) = server.reload(rest)?;
-            Ok(format!("{} generation={generation}", meta_reply(&meta, bulk)))
+            write_meta_reply(out, &meta, bulk);
+            let _ = write!(out, " generation={generation}");
         }
         "stat" => {
             if rest.is_empty() {
                 bail!("usage: stat <artifact>");
             }
             let (meta, bulk) = server.stat(rest)?;
-            Ok(meta_reply(&meta, bulk))
+            write_meta_reply(out, &meta, bulk);
         }
         "get" => {
             let (name, coords) = rest
                 .split_once(' ')
                 .context("usage: get <artifact> <i,j,k>")?;
             let v = server.get(name, &parse_coords(coords.trim())?)?;
-            Ok(format!("OK {v}"))
+            let _ = write!(out, "OK {v}");
         }
         "batch-get" => {
             let (name, block) = rest
                 .split_once(' ')
                 .context("usage: batch-get <artifact> <i,j,k;i,j,k;...>")?;
             let vals = server.batch_get(name, &parse_coord_block(block.trim())?)?;
-            let vals: Vec<String> = vals.iter().map(|v| v.to_string()).collect();
-            Ok(format!("OK {}", vals.join(",")))
+            out.push_str("OK ");
+            for (i, v) in vals.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "{v}");
+            }
         }
         other => bail!("unknown command `{other}`"),
     }
+    Ok(())
 }
 
-/// Handle one protocol v2 frame; the reply is always a single line (a
-/// failed frame becomes `ERR <msg>`, never a dropped connection).
-fn handle_frame(server: &ArtifactServer, line: &str) -> String {
-    match dispatch_frame(server, line) {
-        Ok(r) => r,
-        Err(e) => format!("ERR {}", format!("{e:#}").replace(['\n', '\r'], " ")),
+/// Handle one protocol v2 frame into the connection's reusable reply
+/// buffer: always a single `OK …` / `ERR …` line ending in `\n` (a
+/// failed frame becomes `ERR <msg>`, never a dropped connection). The
+/// buffer is cleared first, so its capacity amortises across frames.
+fn handle_frame(server: &ArtifactServer, line: &str, reply: &mut String) {
+    reply.clear();
+    if let Err(e) = dispatch_frame(server, line, reply) {
+        // a partial success reply may be in the buffer — discard it
+        reply.clear();
+        reply.push_str("ERR ");
+        let msg = format!("{e:#}").replace(['\n', '\r'], " ");
+        reply.push_str(&msg);
     }
+    reply.push('\n');
 }
 
 /// Serve protocol v2 on an already-bound listener (used by tests to bind
@@ -320,15 +353,15 @@ pub fn serve_store_listener(
                 Err(_) => return,
             };
             let reader = BufReader::new(stream);
+            // one reply buffer per connection, reused across frames
+            let mut reply = String::new();
             for line in reader.lines() {
                 let line = match line {
                     Ok(l) => l,
                     Err(_) => break,
                 };
-                let reply = handle_frame(&server, &line);
-                if out.write_all(reply.as_bytes()).is_err()
-                    || out.write_all(b"\n").is_err()
-                {
+                handle_frame(&server, &line, &mut reply);
+                if out.write_all(reply.as_bytes()).is_err() {
                     break;
                 }
             }

@@ -3,7 +3,10 @@
 //! every path — GEMM, the factorisation pipeline (QR/SVD → TT-SVD),
 //! whole-artifact compression, `decode_many` bulk decode (factorised and
 //! neural chains), and serving replies through the store server. CI runs
-//! this suite again under `TCZ_THREADS=2`.
+//! this suite again under `TCZ_THREADS=2` and under `TCZ_SIMD=scalar`
+//! (the forced-scalar job); the SIMD dispatch layer's own contract —
+//! bit-identical decode across {scalar, dispatched} × {1, 8 threads} for
+//! all 8 codecs — is asserted here too.
 //!
 //! The `fit()` determinism test needs the XLA AOT artifacts and
 //! self-skips without them, like every runtime-dependent test.
@@ -144,6 +147,111 @@ fn decode_many_bit_identical_across_thread_counts() {
     }
     for (c, &v) in coords.iter().zip(&runs[0]) {
         assert_eq!(v.to_bits(), dec.get(c).to_bits(), "neural {c:?}");
+    }
+}
+
+/// The acceptance bar for the SIMD dispatch layer: decode output is
+/// bit-identical across {forced scalar, auto dispatch} × {1, 8 threads}
+/// for every registered codec, on both the bulk (`decode_many`) and the
+/// point (`get`) paths. The six classical codecs compress a real tensor;
+/// the two neural codecs decode synthetic trained models (training needs
+/// the XLA runtime, decode does not).
+#[test]
+fn decode_bit_identical_across_simd_and_threads_all_codecs() {
+    use tensorcodec::codec::neural::NeuralArtifact;
+    use tensorcodec::codec::Artifact;
+
+    let _g = lock();
+    let t = DenseTensor::random_uniform(&[9, 8, 7], 51);
+    let coords = random_coords(&[9, 8, 7], 4000, 52);
+    let mut artifacts: Vec<(String, Box<dyn Artifact>)> = Vec::new();
+    for (method, budget) in [
+        ("ttd", Budget::Params(900)),
+        ("cpd", Budget::Params(300)),
+        ("tkd", Budget::Params(400)),
+        ("trd", Budget::Params(600)),
+        ("tthresh", Budget::Bytes(2000)),
+        ("sz", Budget::RelError(0.4)),
+    ] {
+        let c = codec::by_name(method).unwrap();
+        let a = c.compress(&t, &budget, &CodecConfig::default()).unwrap();
+        artifacts.push((method.to_string(), a));
+    }
+    // neural artifacts (TensorCodec + NeuKron) from synthetic models
+    let nk_model = {
+        let spec = FoldSpec::auto(&[9, 8, 7], 0).unwrap();
+        let params = ModelParams::init_nk(53, spec.dp, 32, 8);
+        let mut rng = Pcg64::seeded(53);
+        let orders = Orders::random(&spec.orig_shape, &mut rng);
+        CompressedModel {
+            spec,
+            orders,
+            params,
+            mean: 0.1,
+            std: 2.0,
+            fitness: 0.7,
+            param_dtype: ParamDtype::F32,
+            train_seconds: 0.0,
+            init_seconds: 0.0,
+            epochs_run: 0,
+        }
+    };
+    let tc_model = {
+        let spec = FoldSpec::auto(&[9, 8, 7], 0).unwrap();
+        let params = ModelParams::init_tc(54, spec.dp, 32, 5, 5);
+        let mut rng = Pcg64::seeded(54);
+        let orders = Orders::random(&spec.orig_shape, &mut rng);
+        CompressedModel {
+            spec,
+            orders,
+            params,
+            mean: 0.25,
+            std: 1.5,
+            fitness: 0.8,
+            param_dtype: ParamDtype::F32,
+            train_seconds: 0.0,
+            init_seconds: 0.0,
+            epochs_run: 0,
+        }
+    };
+    artifacts.push((
+        "tensorcodec".to_string(),
+        Box::new(NeuralArtifact::from_model(tc_model, "tensorcodec")),
+    ));
+    artifacts.push((
+        "neukron".to_string(),
+        Box::new(NeuralArtifact::from_model(nk_model, "neukron")),
+    ));
+    assert_eq!(artifacts.len(), 8, "one artifact per registered codec");
+
+    for (method, a) in &mut artifacts {
+        let mut reference: Option<Vec<u32>> = None;
+        for simd in [Some(kernels::SimdIsa::Scalar), None] {
+            for threads in [1usize, 8] {
+                kernels::set_simd(simd);
+                kernels::set_threads(threads);
+                let mut out = Vec::new();
+                a.decode_many(&coords, &mut out);
+                let bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+                match &reference {
+                    None => reference = Some(bits),
+                    Some(want) => assert_eq!(
+                        &bits, want,
+                        "{method}: decode differs at simd={simd:?} threads={threads}"
+                    ),
+                }
+                // point path agrees with bulk under the same setting
+                for probe in [0usize, coords.len() / 2, coords.len() - 1] {
+                    assert_eq!(
+                        a.get(&coords[probe]).to_bits(),
+                        out[probe].to_bits(),
+                        "{method}: get != decode_many at simd={simd:?} threads={threads}"
+                    );
+                }
+            }
+        }
+        kernels::set_simd(None);
+        kernels::set_threads(0);
     }
 }
 
