@@ -25,6 +25,8 @@ THROUGHPUT_KEYS = (
     "lockstep_decode_entries_per_s_nt",
     "gemm_gflops_1t",
     "gemm_gflops_nt",
+    "rans_encode_mb_s",
+    "rans_decode_mb_s",
 )
 
 # lower-is-better gauges (latencies)

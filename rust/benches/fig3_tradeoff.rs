@@ -6,10 +6,73 @@
 //! trade-off, i.e. at matched sizes its fitness is the highest, most
 //! dramatically on smooth-but-high-rank data (Stock) and least so on
 //! extremely sparse data (Uber), where NeuKron is designed to shine.
+//!
+//! A second series sweeps `Budget::MaxError`: for each bound, the total
+//! container bytes (model + residual side channel) of the error-bounded
+//! neural and TT artifacts — the bound goes in the `budget` column so the
+//! curve plots bound vs bytes directly.
 
+use tensorcodec::codec::bounded::wrap_with_bound;
+use tensorcodec::codec::neural::NeuralArtifact;
+use tensorcodec::codec::{self, Budget, CodecConfig};
 use tensorcodec::datasets::{by_name, ALL_DATASETS};
 use tensorcodec::harness::{bench_epochs, bench_scale, print_row, run_baselines, run_tc};
 use tensorcodec::metrics::CsvSink;
+use tensorcodec::tensor::DenseTensor;
+
+/// Error-bounded series: bound vs total bytes for the neural codec (the
+/// trained model from the matched-size series, wrapped with a residual
+/// side channel) and for TT compressed directly at `Budget::MaxError`.
+fn error_bounded_rows(
+    csv: &mut CsvSink,
+    name: &str,
+    tensor: &DenseTensor,
+    model: &tensorcodec::compress::CompressedModel,
+) {
+    let bounds = [0.5f64, 0.1, 0.02];
+    for &bound in &bounds {
+        let budget = format!("eb{bound}");
+        match wrap_with_bound(
+            Box::new(NeuralArtifact::from_model(model.clone(), "tensorcodec")),
+            tensor,
+            bound,
+        ) {
+            Ok(a) => {
+                let m = a.meta();
+                let fit = m.fitness.unwrap_or(f64::NAN);
+                print_row(name, "TC+eb", m.size_bytes, fit, m.seconds);
+                csv.row(&[
+                    name.into(),
+                    "TC+eb".into(),
+                    budget.clone(),
+                    m.size_bytes.to_string(),
+                    format!("{fit:.4}"),
+                    format!("{:.2}", m.seconds),
+                ])
+                .unwrap();
+            }
+            Err(e) => eprintln!("[fig3] {name} TC+eb bound {bound}: {e:#}"),
+        }
+        let tt = codec::by_name("ttd").unwrap();
+        match tt.compress(tensor, &Budget::MaxError(bound), &CodecConfig::default()) {
+            Ok(a) => {
+                let m = a.meta();
+                let fit = m.fitness.unwrap_or(f64::NAN);
+                print_row(name, "TT+eb", m.size_bytes, fit, m.seconds);
+                csv.row(&[
+                    name.into(),
+                    "TT+eb".into(),
+                    budget,
+                    m.size_bytes.to_string(),
+                    format!("{fit:.4}"),
+                    format!("{:.2}", m.seconds),
+                ])
+                .unwrap();
+            }
+            Err(e) => eprintln!("[fig3] {name} TT+eb bound {bound}: {e:#}"),
+        }
+    }
+}
 
 fn main() {
     let scale = bench_scale();
@@ -21,6 +84,7 @@ fn main() {
     )
     .unwrap();
     println!("=== Fig. 3: size vs fitness (scale {scale}, epochs {epochs}) ===");
+    let mut eb_datasets = 0usize; // error-bounded series on the first two
     for rec in ALL_DATASETS {
         if !tensorcodec::harness::keep_dataset(rec.name) {
             continue;
@@ -44,6 +108,10 @@ fn main() {
                 format!("{:.2}", tc.seconds),
             ])
             .unwrap();
+            if bi == 0 && eb_datasets < 2 {
+                eb_datasets += 1;
+                error_bounded_rows(&mut csv, rec.name, &tensor, &tc.model);
+            }
             let budget_params = tc.bytes / 8;
             for mut b in run_baselines(&tensor, budget_params, epochs) {
                 let fit = b.fitness(&tensor);

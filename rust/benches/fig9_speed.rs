@@ -232,7 +232,69 @@ fn append_section() -> (f64, f64) {
     (short, long)
 }
 
-fn kernels_section(append: (f64, f64)) {
+/// rANS encode/decode throughput in MB/s of raw symbol payload (2 bytes
+/// per u16 symbol) over a skewed million-symbol stream shaped like a
+/// residual correction plane. Before timing, asserts the two acceptance
+/// properties: the decode is bit-exact, and the rANS stream is no larger
+/// than Huffman on the same plane.
+fn rans_section() -> (f64, f64) {
+    use tensorcodec::coding::huffman::huffman_encode;
+    use tensorcodec::coding::{rans_decode, rans_encode};
+
+    const N: usize = 1 << 20;
+    const ALPHABET: usize = 4096; // the residual plane's bin alphabet
+    let mut rng = Pcg64::seeded(97);
+    // geometric skew with a long tail: most corrections are small bins
+    let symbols: Vec<u16> = (0..N)
+        .map(|_| {
+            let mut s = 0u16;
+            while (s as usize) < ALPHABET - 1 && rng.below(5) < 3 {
+                s += 1;
+            }
+            s
+        })
+        .collect();
+
+    let enc = rans_encode(&symbols, ALPHABET);
+    assert_eq!(
+        rans_decode(&enc).expect("rans decode"),
+        symbols,
+        "rANS roundtrip broke on the bench stream"
+    );
+    let huff = huffman_encode(&symbols, ALPHABET);
+    assert!(
+        enc.len() <= huff.len(),
+        "rANS ({} B) coded the residual plane larger than Huffman ({} B)",
+        enc.len(),
+        huff.len()
+    );
+
+    let raw_mb = (N * 2) as f64 / 1e6;
+    let mut enc_best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = Timer::start();
+        let e = rans_encode(&symbols, ALPHABET);
+        enc_best = enc_best.min(t.seconds());
+        assert_eq!(e.len(), enc.len());
+    }
+    let mut dec_best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = Timer::start();
+        let d = rans_decode(&enc).expect("rans decode");
+        dec_best = dec_best.min(t.seconds());
+        assert_eq!(d.len(), symbols.len());
+    }
+    let (enc_mb_s, dec_mb_s) = (raw_mb / enc_best, raw_mb / dec_best);
+    println!(
+        "rANS {N} symbols ({} B coded, {:.2} bits/sym, huffman {} B): encode {enc_mb_s:>7.1} MB/s   decode {dec_mb_s:>7.1} MB/s",
+        enc.len(),
+        enc.len() as f64 * 8.0 / N as f64,
+        huff.len()
+    );
+    (enc_mb_s, dec_mb_s)
+}
+
+fn kernels_section(append: (f64, f64), rans: (f64, f64)) {
     let n_threads = kernels::max_threads().max(2);
     let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
     let isa = kernels::active_isa();
@@ -317,7 +379,7 @@ fn kernels_section(append: (f64, f64)) {
     kernels::set_threads(0);
 
     let json = format!(
-        "{{\n  \"threads\": {n_threads},\n  \"simd\": \"{}\",\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"point_decode_ns_1t\": {},\n  \"lockstep_decode_entries_per_s_1t\": {},\n  \"lockstep_decode_entries_per_s_nt\": {},\n  \"lockstep_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {},\n  \"append_slice_seconds_h512\": {},\n  \"append_slice_seconds_h2048\": {},\n  \"append_history_ratio\": {}\n}}\n",
+        "{{\n  \"threads\": {n_threads},\n  \"simd\": \"{}\",\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"point_decode_ns_1t\": {},\n  \"lockstep_decode_entries_per_s_1t\": {},\n  \"lockstep_decode_entries_per_s_nt\": {},\n  \"lockstep_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {},\n  \"append_slice_seconds_h512\": {},\n  \"append_slice_seconds_h2048\": {},\n  \"append_history_ratio\": {},\n  \"rans_encode_mb_s\": {},\n  \"rans_decode_mb_s\": {}\n}}\n",
         isa.as_str(),
         json_num(Some(g1)),
         json_num(Some(gn)),
@@ -338,6 +400,8 @@ fn kernels_section(append: (f64, f64)) {
         json_num(Some(append.0)),
         json_num(Some(append.1)),
         json_num(Some(append.1 / append.0.max(1e-9))),
+        json_num(Some(rans.0)),
+        json_num(Some(rans.1)),
     );
     std::fs::write("BENCH_kernels.json", json).expect("write BENCH_kernels.json");
     println!("json -> BENCH_kernels.json");
@@ -345,7 +409,8 @@ fn kernels_section(append: (f64, f64)) {
 
 fn main() {
     let append = append_section();
-    kernels_section(append);
+    let rans = rans_section();
+    kernels_section(append, rans);
     // Coarse linearity gate, AFTER BENCH_kernels.json is on disk so a
     // noisy-runner flake still leaves the artifact for the nightly upload:
     // appending one slice must cost ~the same at 4x the history.

@@ -1,0 +1,309 @@
+//! Error-bounded compression: a lossy inner artifact plus the residual
+//! side channel ([`crate::residual`]) that repairs every entry to a
+//! pointwise `|x − x̂| ≤ bound` guarantee.
+//!
+//! [`compress_error_bounded`] is the one implementation behind
+//! `Budget::MaxError` for all codecs: compress at a heuristic base
+//! budget, decode the prediction, build + entropy-code the correction
+//! plane, and wrap both in a [`BoundedArtifact`]. The wrapper applies
+//! corrections by plain f32 addition *after* the inner decode, on every
+//! path (`get`, `decode_many`, `decode_all`) — the inner artifact's
+//! bit-determinism across SIMD arms and thread counts therefore carries
+//! over unchanged, and the serving shards need no special casing.
+//!
+//! On disk a bounded artifact is a `.tcz` v4 container: a 32-byte header
+//! (bound + model/side lengths, O(1) peekable), the inner artifact's
+//! full v2/v3 container, then the residual section. See
+//! [`super::container`].
+
+use super::{Artifact, ArtifactMeta, Budget, Codec, CodecConfig};
+use crate::metrics::Timer;
+use crate::residual::{self, Corrections};
+use crate::tensor::DenseTensor;
+use anyhow::{bail, Result};
+use std::io::Write;
+
+/// A lossy inner artifact wrapped with its residual correction plane.
+pub struct BoundedArtifact {
+    inner: Box<dyn Artifact>,
+    corr: Corrections,
+    /// The serialised residual section, kept verbatim for `write`.
+    section: Vec<u8>,
+    shape: Vec<usize>,
+    /// Row-major strides for coordinate → linear index.
+    strides: Vec<usize>,
+    bound: f64,
+    fitness: Option<f64>,
+    seconds: f64,
+    bulk_calls: u64,
+}
+
+fn row_major_strides(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        strides[d] = strides[d + 1] * shape[d + 1];
+    }
+    strides
+}
+
+impl BoundedArtifact {
+    pub(crate) fn new(
+        inner: Box<dyn Artifact>,
+        corr: Corrections,
+        section: Vec<u8>,
+        bound: f64,
+        fitness: Option<f64>,
+        seconds: f64,
+    ) -> Self {
+        let shape = inner.meta().shape;
+        let strides = row_major_strides(&shape);
+        BoundedArtifact {
+            inner,
+            corr,
+            section,
+            shape,
+            strides,
+            bound,
+            fitness,
+            seconds,
+            bulk_calls: 0,
+        }
+    }
+
+    /// Reassemble after a container load (fitness and timing are not
+    /// persisted).
+    pub(crate) fn from_loaded(
+        inner: Box<dyn Artifact>,
+        corr: Corrections,
+        section: Vec<u8>,
+        bound: f64,
+    ) -> Self {
+        BoundedArtifact::new(inner, corr, section, bound, None, 0.0)
+    }
+
+    /// The wrapped lossy artifact.
+    pub fn inner_ref(&self) -> &dyn Artifact {
+        self.inner.as_ref()
+    }
+
+    /// The serialised residual section (the v4 side channel).
+    pub fn section(&self) -> &[u8] {
+        &self.section
+    }
+
+    /// The pointwise guarantee this artifact carries.
+    pub fn bound(&self) -> f64 {
+        self.bound
+    }
+
+    /// Entries repaired by the side channel (test/inspection hook).
+    pub fn n_corrected(&self) -> usize {
+        self.corr.n_corrected()
+    }
+
+    #[inline]
+    fn lin(&self, idx: &[usize]) -> u64 {
+        debug_assert_eq!(idx.len(), self.strides.len());
+        idx.iter()
+            .zip(&self.strides)
+            .map(|(&i, &s)| i as u64 * s as u64)
+            .sum()
+    }
+}
+
+impl Artifact for BoundedArtifact {
+    fn get(&mut self, idx: &[usize]) -> f32 {
+        let lin = self.lin(idx);
+        self.inner.get(idx) + self.corr.at(lin)
+    }
+
+    fn decode_many(&mut self, coords: &[Vec<usize>], out: &mut Vec<f32>) {
+        let base = out.len();
+        self.inner.decode_many(coords, out);
+        // the correction pass is a per-entry f32 add in request order —
+        // bit-identical regardless of how the inner decode was chunked
+        for (c, slot) in coords.iter().zip(&mut out[base..]) {
+            *slot += self.corr.at(self.lin(c));
+        }
+        self.bulk_calls += 1;
+    }
+
+    fn decode_many_calls(&self) -> u64 {
+        self.bulk_calls
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.inner.resident_bytes() + self.corr.resident_bytes() + self.section.len()
+    }
+
+    fn decode_all(&mut self) -> DenseTensor {
+        // through the bulk path, not the inner `decode_all`: the dense
+        // GEMM reconstructions of the factorised codecs can differ from
+        // `get` in the last ulp, and the guarantee is verified at build
+        // time in the query arithmetic (see `decode_full_bulk`)
+        let pred = decode_full_bulk(self.inner.as_mut(), &self.shape);
+        let data: Vec<f32> = pred
+            .data()
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v + self.corr.at(i as u64))
+            .collect();
+        DenseTensor::from_data(pred.shape(), data)
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.inner.size_bytes() + self.section.len()
+    }
+
+    fn meta(&self) -> ArtifactMeta {
+        let inner = self.inner.meta();
+        ArtifactMeta {
+            method: inner.method,
+            shape: self.shape.clone(),
+            size_bytes: inner.size_bytes + self.section.len(),
+            fitness: self.fitness,
+            seconds: self.seconds,
+            side_bytes: self.section.len(),
+            max_error: Some(self.bound),
+        }
+    }
+
+    fn write(&self, _w: &mut dyn Write) -> Result<()> {
+        // a bounded artifact is a whole v4 container, not a payload inside
+        // a v2 one — the container layer routes it via `as_bounded`
+        bail!("bounded artifacts serialise through container::artifact_to_bytes")
+    }
+
+    fn as_model(&self) -> Option<&crate::compress::CompressedModel> {
+        // never expose the inner model: the XLA fast path would bypass
+        // the correction plane and break the pointwise guarantee
+        None
+    }
+
+    fn as_bounded(&self) -> Option<&BoundedArtifact> {
+        Some(self)
+    }
+}
+
+/// Decode every entry (row-major) through `decode_many` — the path that
+/// answers `get`, `batch-get` and the serving shards, bit-identical to
+/// per-entry `get` by the kernel-layer contract. The inner `decode_all`
+/// is deliberately NOT used here: the factorised codecs reconstruct it
+/// with dense GEMMs whose summation order differs from the per-entry
+/// contraction by up to an ulp, and the residual plane must be built and
+/// verified in exactly the arithmetic that serves queries — otherwise an
+/// entry repaired to sit just inside the bound could exceed it when
+/// decoded through the other path.
+fn decode_full_bulk(a: &mut dyn Artifact, shape: &[usize]) -> DenseTensor {
+    /// Entries decoded per `decode_many` block (bounds coord memory).
+    const BLOCK: usize = 1 << 15;
+    let n: usize = shape.iter().product();
+    let d = shape.len();
+    let mut out = Vec::with_capacity(n);
+    let mut coords: Vec<Vec<usize>> = Vec::with_capacity(BLOCK.min(n));
+    let mut idx = vec![0usize; d];
+    let mut done = 0usize;
+    while done < n {
+        let take = (n - done).min(BLOCK);
+        coords.clear();
+        for _ in 0..take {
+            coords.push(idx.clone());
+            for k in (0..d).rev() {
+                idx[k] += 1;
+                if idx[k] < shape[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+        a.decode_many(&coords, &mut out);
+        done += take;
+    }
+    DenseTensor::from_data(shape, out)
+}
+
+/// Default base budget for the inner lossy model when the caller only
+/// specifies an error bound: enough parameters to capture broad structure
+/// (n/32 doubles, i.e. ~4× compression before the side channel) without
+/// dwarfing the corrections.
+fn base_budget(n: usize) -> Budget {
+    Budget::Params((n / 32).max(64))
+}
+
+/// The `Budget::MaxError` implementation shared by every codec: fit the
+/// lossy model at a heuristic base budget, then build the residual side
+/// channel that repairs each entry to within `bound`.
+pub(crate) fn compress_error_bounded<C: Codec + ?Sized>(
+    codec: &C,
+    t: &DenseTensor,
+    bound: f64,
+    cfg: &CodecConfig,
+) -> Result<Box<dyn Artifact>> {
+    if !bound.is_finite() || bound <= 0.0 {
+        bail!(
+            "{}: max-error bound must be positive and finite, got {bound}",
+            codec.name()
+        );
+    }
+    let timer = Timer::start();
+    let mut inner = codec.compress(t, &base_budget(t.len()), cfg)?;
+    let pred = decode_full_bulk(inner.as_mut(), t.shape());
+    wrap_with_bound_timed(inner, &pred, t, bound, timer)
+}
+
+/// Wrap an already-built lossy artifact with a residual side channel that
+/// guarantees `|x − x̂| ≤ bound` against `truth`. Public so callers that
+/// build inner artifacts out-of-band (pre-trained neural models, benches,
+/// tests) can produce bounded artifacts without re-running `compress`.
+pub fn wrap_with_bound(
+    mut inner: Box<dyn Artifact>,
+    truth: &DenseTensor,
+    bound: f64,
+) -> Result<Box<dyn Artifact>> {
+    let timer = Timer::start();
+    let shape = inner.meta().shape;
+    if shape != truth.shape() {
+        bail!(
+            "bounded wrap: artifact has shape {:?}, truth is {:?}",
+            shape,
+            truth.shape()
+        );
+    }
+    let pred = decode_full_bulk(inner.as_mut(), &shape);
+    wrap_with_bound_timed(inner, &pred, truth, bound, timer)
+}
+
+fn wrap_with_bound_timed(
+    inner: Box<dyn Artifact>,
+    pred: &DenseTensor,
+    truth: &DenseTensor,
+    bound: f64,
+    timer: Timer,
+) -> Result<Box<dyn Artifact>> {
+    if pred.shape() != truth.shape() {
+        bail!(
+            "bounded wrap: model decodes shape {:?}, truth is {:?}",
+            pred.shape(),
+            truth.shape()
+        );
+    }
+    let section = residual::build_and_encode(pred.data(), truth.data(), bound)?;
+    // parse what will actually be persisted — the corrections in memory
+    // and the corrections after a container roundtrip are the same bytes
+    let corr = residual::parse_plane(&section, truth.len() as u64)?;
+    let corrected: Vec<f32> = pred
+        .data()
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| v + corr.at(i as u64))
+        .collect();
+    let fitness = crate::metrics::fitness(truth.data(), &corrected);
+    Ok(Box::new(BoundedArtifact::new(
+        inner,
+        corr,
+        section,
+        bound,
+        Some(fitness),
+        timer.seconds(),
+    )))
+}

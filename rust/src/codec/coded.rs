@@ -84,6 +84,8 @@ impl Artifact for TthreshArtifact {
             size_bytes: self.coded.coded_bytes,
             fitness: None,
             seconds: self.seconds,
+            side_bytes: 0,
+            max_error: None,
         }
     }
 
@@ -148,10 +150,13 @@ impl Codec for TthreshCodec {
             // Tucker rank can be ~5x the budget rank at 10-bit quantisation
             // (the paper matches on coded bytes, not raw parameters).
             Some(p) => build(tucker::rank_for_budget(t.shape(), p.saturating_mul(5))),
-            None => {
-                let Budget::RelError(e) = *budget else { unreachable!() };
-                rel_error_search(t, e, 32, build)
-            }
+            None => match *budget {
+                Budget::RelError(e) => rel_error_search(t, e, 32, build),
+                Budget::MaxError(bound) => {
+                    super::bounded::compress_error_bounded(self, t, bound, cfg)
+                }
+                _ => unreachable!(),
+            },
         }
     }
 
@@ -175,6 +180,8 @@ impl Codec for TthreshCodec {
             size_bytes: coded_bytes,
             fitness: None,
             seconds: 0.0,
+            side_bytes: 0,
+            max_error: None,
         })
     }
 
@@ -288,6 +295,8 @@ impl Artifact for SzArtifact {
             size_bytes: self.stream.coded_bytes,
             fitness: None,
             seconds: self.seconds,
+            side_bytes: 0,
+            max_error: None,
         }
     }
 
@@ -343,6 +352,12 @@ impl Codec for SzCodec {
         match *budget {
             // Error-bound-driven: take the bound directly.
             Budget::RelError(e) => build(e),
+            // Pointwise bound: SZ's own quantiser is relative-error-driven,
+            // so the absolute guarantee goes through the shared residual
+            // side channel like every other codec.
+            Budget::MaxError(bound) => {
+                super::bounded::compress_error_bounded(self, t, bound, cfg)
+            }
             // Size-driven: grid-search the bound whose coded size lands
             // nearest the byte target (the paper: "configured to yield
             // similar compressed sizes").
@@ -374,6 +389,8 @@ impl Codec for SzCodec {
             size_bytes,
             fitness: None,
             seconds: 0.0,
+            side_bytes: 0,
+            max_error: None,
         })
     }
 

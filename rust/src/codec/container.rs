@@ -22,6 +22,19 @@
 //! segment through [`crate::codec::Codec::apply_segment`], which is
 //! bit-identical to the in-memory append that produced it.
 //!
+//! v4 (*error-bounded*) layout — a plain inner container plus the residual
+//! side channel that upgrades it to a pointwise `|x − x̂| ≤ bound`
+//! guarantee ([`crate::codec::bounded`], [`crate::residual`]):
+//! ```text
+//! magic "TCZ4" | u8 version = 4 | u8 method_tag | u8 reserved[2]
+//! f64 max_error | u64 model_len | u64 side_len
+//! inner container (a full v2/v3 container, model_len bytes)
+//! residual section (side_len bytes, self-checksummed)
+//! ```
+//! The fixed 32-byte header makes the model/side byte split and the
+//! guaranteed max-error an O(1) [`peek_meta`] — `stat` never parses the
+//! side channel.
+//!
 //! v1 files (magic "TCZ1", written by `compress::format::save_tcz`) carry a
 //! bare TensorCodec/NeuKron model; [`load_artifact`] still accepts them and
 //! wraps the model in a neural artifact, so every `.tcz` ever written keeps
@@ -38,8 +51,12 @@ use std::path::Path;
 const MAGIC_V2: &[u8; 4] = b"TCZ2";
 const MAGIC_V1: &[u8; 4] = b"TCZ1";
 const MAGIC_V3: &[u8; 4] = b"TCZ3";
+const MAGIC_V4: &[u8; 4] = b"TCZ4";
 const VERSION_V2: u8 = 2;
 const VERSION_V3: u8 = 3;
+const VERSION_V4: u8 = 4;
+/// Fixed v4 header: magic, version, tag, reserved, bound, model/side lens.
+const V4_HEADER: usize = 4 + 1 + 1 + 2 + 8 + 8 + 8;
 
 /// One v3 append segment: a codec-specific payload that extends the base
 /// artifact by `rows` indices along `axis` (the `Segment` arm of
@@ -85,8 +102,13 @@ pub fn segmented_to_bytes(
     Ok(out)
 }
 
-/// Serialise an artifact into a full v2 container byte stream.
+/// Serialise an artifact into a full container byte stream: v2 for plain
+/// artifacts, v4 (inner container + residual side channel) for
+/// error-bounded ones.
 pub fn artifact_to_bytes(artifact: &dyn Artifact) -> Result<Vec<u8>> {
+    if let Some(b) = artifact.as_bounded() {
+        return bounded_to_bytes(b);
+    }
     let meta = artifact.meta();
     let codec = by_name(meta.method)
         .with_context(|| format!("artifact method `{}` is not registered", meta.method))?;
@@ -102,7 +124,82 @@ pub fn artifact_to_bytes(artifact: &dyn Artifact) -> Result<Vec<u8>> {
     Ok(out)
 }
 
-/// Deserialise an artifact from container bytes (v2, or legacy v1).
+/// Serialise an error-bounded artifact as a v4 container: fixed header,
+/// the inner artifact's own full container, then the residual section.
+fn bounded_to_bytes(b: &super::bounded::BoundedArtifact) -> Result<Vec<u8>> {
+    let meta = b.inner_ref().meta();
+    let codec = by_name(meta.method)
+        .with_context(|| format!("artifact method `{}` is not registered", meta.method))?;
+    let inner = artifact_to_bytes(b.inner_ref())?;
+    let section = b.section();
+    let mut out = Vec::with_capacity(V4_HEADER + inner.len() + section.len());
+    out.extend_from_slice(MAGIC_V4);
+    out.push(VERSION_V4);
+    out.push(codec.tag());
+    out.extend_from_slice(&[0u8, 0u8]); // reserved
+    put_f64(&mut out, b.bound());
+    put_u64(&mut out, inner.len() as u64);
+    put_u64(&mut out, section.len() as u64);
+    out.extend_from_slice(&inner);
+    out.extend_from_slice(section);
+    Ok(out)
+}
+
+/// Deserialise a v4 error-bounded container: load the inner container,
+/// parse the residual side channel, and rewrap.
+fn v4_from_bytes(bytes: &[u8]) -> Result<Box<dyn Artifact>> {
+    if bytes.len() < V4_HEADER {
+        bail!("tcz v4 header truncated");
+    }
+    let version = bytes[4];
+    if version != VERSION_V4 {
+        bail!("unsupported tcz version {version}");
+    }
+    let tag = bytes[5];
+    let mut c = Cursor::new(&bytes[8..V4_HEADER]);
+    let bound = c.f64()?;
+    if !bound.is_finite() || bound <= 0.0 {
+        bail!("tcz v4 max-error bound {bound} is not a positive finite value");
+    }
+    let model_len = c.u64()? as usize;
+    let side_len = c.u64()? as usize;
+    let total = model_len
+        .checked_add(side_len)
+        .and_then(|n| n.checked_add(V4_HEADER))
+        .ok_or_else(|| anyhow::anyhow!("tcz v4 size fields overflow"))?;
+    if bytes.len() < total {
+        bail!("tcz v4 payload truncated: {} < {total}", bytes.len());
+    }
+    let codec = by_tag(tag).with_context(|| format!("unknown codec tag {tag}"))?;
+    let inner = artifact_from_bytes(&bytes[V4_HEADER..V4_HEADER + model_len])
+        .with_context(|| format!("decoding {} inner container", codec.name()))?;
+    let inner_meta = inner.meta();
+    if inner_meta.method != codec.name() {
+        bail!(
+            "tcz v4 tag says {}, inner container decodes {}",
+            codec.name(),
+            inner_meta.method
+        );
+    }
+    let n: u64 = inner_meta.shape.iter().map(|&d| d as u64).product();
+    let section = &bytes[V4_HEADER + model_len..total];
+    let corr = crate::residual::parse_plane(section, n)
+        .context("decoding tcz v4 residual side channel")?;
+    if corr.bound().to_bits() != bound.to_bits() {
+        bail!(
+            "tcz v4 header bound {bound} disagrees with side-channel bound {}",
+            corr.bound()
+        );
+    }
+    Ok(Box::new(super::bounded::BoundedArtifact::from_loaded(
+        inner,
+        corr,
+        section.to_vec(),
+        bound,
+    )))
+}
+
+/// Deserialise an artifact from container bytes (v2/v3/v4, or legacy v1).
 pub fn artifact_from_bytes(bytes: &[u8]) -> Result<Box<dyn Artifact>> {
     if bytes.len() < 4 {
         bail!("not a .tcz file (too short)");
@@ -118,6 +215,9 @@ pub fn artifact_from_bytes(bytes: &[u8]) -> Result<Box<dyn Artifact>> {
     }
     if &bytes[..4] == MAGIC_V3 {
         return v3_from_bytes(bytes);
+    }
+    if &bytes[..4] == MAGIC_V4 {
+        return v4_from_bytes(bytes);
     }
     if &bytes[..4] != MAGIC_V2 {
         bail!("not a .tcz file");
@@ -239,6 +339,45 @@ pub fn peek_meta(bytes: &[u8], total_len: usize) -> Result<crate::codec::Artifac
             // append segments shift the error; the base fitness is stale
             fitness: None,
             seconds: 0.0,
+            side_bytes: 0,
+            max_error: None,
+        });
+    }
+    if &bytes[..4] == MAGIC_V4 {
+        // Error-bounded v4: the bound and the model/side byte split live
+        // at fixed offsets, then the inner container's own O(1) peek runs
+        // on the embedded prefix — the side channel is never parsed.
+        if bytes.len() < V4_HEADER {
+            bail!("tcz v4 header truncated");
+        }
+        let version = bytes[4];
+        if version != VERSION_V4 {
+            bail!("unsupported tcz version {version}");
+        }
+        let mut c = Cursor::new(&bytes[8..V4_HEADER]);
+        let bound = c.f64()?;
+        if !bound.is_finite() || bound <= 0.0 {
+            bail!("tcz v4 max-error bound {bound} is not a positive finite value");
+        }
+        let model_len = c.u64()? as usize;
+        let side_len = c.u64()? as usize;
+        let total = model_len
+            .checked_add(side_len)
+            .and_then(|n| n.checked_add(V4_HEADER))
+            .ok_or_else(|| anyhow::anyhow!("tcz v4 size fields overflow"))?;
+        if total_len < total {
+            bail!("tcz v4 payload truncated: {total_len} < {total}");
+        }
+        let inner = peek_meta(&bytes[V4_HEADER..], model_len)
+            .context("peeking tcz v4 inner container")?;
+        return Ok(crate::codec::ArtifactMeta {
+            method: inner.method,
+            shape: inner.shape,
+            size_bytes: inner.size_bytes.saturating_add(side_len),
+            fitness: None,
+            seconds: 0.0,
+            side_bytes: side_len,
+            max_error: Some(bound),
         });
     }
     if &bytes[..4] != MAGIC_V2 {
@@ -394,7 +533,10 @@ pub fn append_segment_file(
         push_segment(&mut out, segment);
         out
     } else {
-        bail!("appending segments needs a v2/v3 container (v1 models are rewritten wholesale)");
+        bail!(
+            "appending segments needs a v2/v3 container (v1 models and v4 error-bounded \
+             containers are rewritten wholesale)"
+        );
     };
     replace_file(path, &out)
 }

@@ -77,6 +77,8 @@ impl Artifact for TtArtifact {
             size_bytes: self.size_bytes(),
             fitness: None,
             seconds: self.seconds,
+            side_bytes: 0,
+            max_error: None,
         }
     }
 
@@ -131,10 +133,13 @@ impl Codec for TtdCodec {
         };
         match budget.target_params() {
             Some(p) => build(largest_within(p, 512, |r| tt_param_count(t.shape(), r))),
-            None => {
-                let Budget::RelError(e) = *budget else { unreachable!() };
-                rel_error_search(t, e, 256, build)
-            }
+            None => match *budget {
+                Budget::RelError(e) => rel_error_search(t, e, 256, build),
+                Budget::MaxError(bound) => {
+                    super::bounded::compress_error_bounded(self, t, bound, cfg)
+                }
+                _ => unreachable!(),
+            },
         }
     }
 
@@ -158,6 +163,8 @@ impl Codec for TtdCodec {
             shape,
             fitness: None,
             seconds: 0.0,
+            side_bytes: 0,
+            max_error: None,
         })
     }
 
@@ -353,6 +360,8 @@ impl Artifact for CpArtifact {
             size_bytes: self.size_bytes(),
             fitness: None,
             seconds: self.seconds,
+            side_bytes: 0,
+            max_error: None,
         }
     }
 
@@ -405,10 +414,13 @@ impl Codec for CpdCodec {
         };
         match budget.target_params() {
             Some(p) => build(crate::baselines::cp::rank_for_budget(t.shape(), p)),
-            None => {
-                let Budget::RelError(e) = *budget else { unreachable!() };
-                rel_error_search(t, e, 128, build)
-            }
+            None => match *budget {
+                Budget::RelError(e) => rel_error_search(t, e, 128, build),
+                Budget::MaxError(bound) => {
+                    super::bounded::compress_error_bounded(self, t, bound, cfg)
+                }
+                _ => unreachable!(),
+            },
         }
     }
 
@@ -433,6 +445,8 @@ impl Codec for CpdCodec {
             shape,
             fitness: None,
             seconds: 0.0,
+            side_bytes: 0,
+            max_error: None,
         })
     }
 
@@ -514,6 +528,8 @@ impl Artifact for TuckerArtifact {
             size_bytes: self.size_bytes(),
             fitness: None,
             seconds: self.seconds,
+            side_bytes: 0,
+            max_error: None,
         }
     }
 
@@ -571,10 +587,13 @@ impl Codec for TuckerCodec {
         };
         match budget.target_params() {
             Some(p) => build(crate::baselines::tucker::rank_for_budget(t.shape(), p)),
-            None => {
-                let Budget::RelError(e) = *budget else { unreachable!() };
-                rel_error_search(t, e, 64, build)
-            }
+            None => match *budget {
+                Budget::RelError(e) => rel_error_search(t, e, 64, build),
+                Budget::MaxError(bound) => {
+                    super::bounded::compress_error_bounded(self, t, bound, cfg)
+                }
+                _ => unreachable!(),
+            },
         }
     }
 
@@ -598,6 +617,8 @@ impl Codec for TuckerCodec {
             shape,
             fitness: None,
             seconds: 0.0,
+            side_bytes: 0,
+            max_error: None,
         })
     }
 
@@ -688,6 +709,8 @@ impl Artifact for TrArtifact {
             size_bytes: self.size_bytes(),
             fitness: None,
             seconds: self.seconds,
+            side_bytes: 0,
+            max_error: None,
         }
     }
 
@@ -740,10 +763,13 @@ impl Codec for TringCodec {
         };
         match budget.target_params() {
             Some(p) => build(crate::baselines::tring::rank_for_budget(t.shape(), p)),
-            None => {
-                let Budget::RelError(e) = *budget else { unreachable!() };
-                rel_error_search(t, e, 32, build)
-            }
+            None => match *budget {
+                Budget::RelError(e) => rel_error_search(t, e, 32, build),
+                Budget::MaxError(bound) => {
+                    super::bounded::compress_error_bounded(self, t, bound, cfg)
+                }
+                _ => unreachable!(),
+            },
         }
     }
 
@@ -766,6 +792,8 @@ impl Codec for TringCodec {
             shape,
             fitness: None,
             seconds: 0.0,
+            side_bytes: 0,
+            max_error: None,
         })
     }
 

@@ -22,6 +22,7 @@
 //! Adding a codec is a one-file change: implement `Codec` + `Artifact`,
 //! pick an unused tag, and add the instance to `REGISTRY`.
 
+pub mod bounded;
 pub mod coded;
 pub mod container;
 pub mod factorized;
@@ -33,6 +34,7 @@ use crate::tensor::DenseTensor;
 use anyhow::Result;
 use std::io::Write;
 
+pub use bounded::BoundedArtifact;
 pub use coded::{SzCodec, TthreshCodec};
 pub use container::{append_segment_file, load_artifact, save_artifact, Segment};
 pub use factorized::{CpdCodec, TringCodec, TtdCodec, TuckerCodec};
@@ -50,6 +52,12 @@ pub enum Budget {
     /// Target relative error `1 − fitness` (error-bound-driven codecs take
     /// it directly; others search their size knob for it).
     RelError(f64),
+    /// Pointwise absolute-error guarantee: every reconstructed entry stays
+    /// within this bound of the original. Honoured by every codec via the
+    /// residual side channel ([`bounded`]): a lossy model plus a lossless
+    /// rANS-coded correction plane, spending only the bytes the bound
+    /// actually requires.
+    MaxError(f64),
 }
 
 impl Budget {
@@ -59,7 +67,7 @@ impl Budget {
         match *self {
             Budget::Params(p) => Some(p.saturating_mul(8)),
             Budget::Bytes(b) => Some(b),
-            Budget::RelError(_) => None,
+            Budget::RelError(_) | Budget::MaxError(_) => None,
         }
     }
 
@@ -68,7 +76,7 @@ impl Budget {
         match *self {
             Budget::Params(p) => Some(p),
             Budget::Bytes(b) => Some(b / 8),
-            Budget::RelError(_) => None,
+            Budget::RelError(_) | Budget::MaxError(_) => None,
         }
     }
 }
@@ -116,6 +124,12 @@ pub struct ArtifactMeta {
     pub fitness: Option<f64>,
     /// Compression wall-clock, when known (0 after a container load).
     pub seconds: f64,
+    /// Bytes of the error-bounded residual side channel included in
+    /// `size_bytes` (0 for plain lossy artifacts).
+    pub side_bytes: usize,
+    /// Pointwise `|x − x̂| ≤ bound` guarantee carried by the artifact's
+    /// residual side channel (`None` for plain lossy artifacts).
+    pub max_error: Option<f64>,
 }
 
 /// A compressed tensor produced by some [`Codec`]: decodable per entry or
@@ -171,6 +185,11 @@ pub trait Artifact: Send {
     /// artifact's factor state in place. `None` (the default) routes
     /// append through the decode + recompress fallback.
     fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
+    }
+    /// The error-bounded wrapper view, for the container layer's `.tcz`
+    /// v4 framing; `None` for plain artifacts.
+    fn as_bounded(&self) -> Option<&bounded::BoundedArtifact> {
         None
     }
 }
@@ -245,7 +264,13 @@ pub(crate) fn append_by_recompress<C: Codec + ?Sized>(
 ) -> Result<Appended> {
     let old = artifact.decode_all();
     let merged = old.concat(slices, axis)?;
-    *artifact = codec.compress(&merged, budget, cfg)?;
+    // an error-bounded artifact keeps its pointwise guarantee across an
+    // append unless the caller explicitly asks for a different bound
+    let budget = match (artifact.meta().max_error, *budget) {
+        (Some(bound), b) if !matches!(b, Budget::MaxError(_)) => Budget::MaxError(bound),
+        (_, b) => b,
+    };
+    *artifact = codec.compress(&merged, &budget, cfg)?;
     Ok(Appended::Recompressed)
 }
 
@@ -555,6 +580,8 @@ mod tests {
         assert_eq!(Budget::Params(100).target_bytes(), Some(800));
         assert_eq!(Budget::Bytes(64).target_params(), Some(8));
         assert_eq!(Budget::RelError(0.1).target_bytes(), None);
+        assert_eq!(Budget::MaxError(0.01).target_bytes(), None);
+        assert_eq!(Budget::MaxError(0.01).target_params(), None);
     }
 
     #[test]

@@ -91,6 +91,8 @@ impl Artifact for NeuralArtifact {
             size_bytes: self.dec.model.reported_size_bytes(),
             fitness: Some(self.dec.model.fitness),
             seconds: self.seconds,
+            side_bytes: 0,
+            max_error: None,
         }
     }
 
@@ -145,6 +147,9 @@ impl Codec for TensorCodecCodec {
         budget: &Budget,
         cfg: &CodecConfig,
     ) -> Result<Box<dyn Artifact>> {
+        if let Budget::MaxError(bound) = *budget {
+            return super::bounded::compress_error_bounded(self, t, bound, cfg);
+        }
         let Some(target) = budget.target_params() else {
             bail!("tensorcodec: relative-error budgets are not supported (use Params/Bytes)");
         };
@@ -257,6 +262,9 @@ impl Codec for NeuKronCodec {
         budget: &Budget,
         cfg: &CodecConfig,
     ) -> Result<Box<dyn Artifact>> {
+        if let Budget::MaxError(bound) = *budget {
+            return super::bounded::compress_error_bounded(self, t, bound, cfg);
+        }
         let Some(target) = budget.target_params() else {
             bail!("neukron: relative-error budgets are not supported (use Params/Bytes)");
         };

@@ -5,9 +5,11 @@
 pub mod bitio;
 pub mod huffman;
 pub mod quantize;
+pub mod rans;
 pub mod rle;
 
 pub use bitio::{BitReader, BitWriter};
 pub use huffman::{huffman_decode, huffman_encode};
 pub use quantize::{dequantize_uniform, quantize_uniform};
+pub use rans::{rans_decode, rans_decode_capped, rans_encode};
 pub use rle::{rle_decode, rle_encode};

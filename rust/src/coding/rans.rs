@@ -1,0 +1,437 @@
+//! Interleaved multi-stream rANS (range asymmetric numeral system) coding
+//! over u16 symbols — the entropy backend of the residual side channel
+//! ([`crate::residual`]), exposed alongside Huffman for any codec to use.
+//!
+//! Four independent 32-bit rANS states are round-robined over one byte
+//! stream (symbol `i` belongs to state `i % 4`): the encoder walks the
+//! symbols in *reverse*, each state renormalising byte-by-byte into a
+//! shared buffer, flushes the four final states, and reverses the buffer;
+//! the decoder reads forward, so its per-symbol loop carries four
+//! independent dependency chains instead of one. Frequencies are static
+//! (order-0), normalised to a 12-bit scale and serialised in the stream
+//! header as whichever of two encodings is smaller: a dense 13-bit
+//! bit-packed table or a sparse (symbol, freq) list.
+//!
+//! Stream layout (little-endian):
+//! ```text
+//! u32 alphabet | u64 count
+//! count > 0:
+//!   u8 table_mode            0 = dense bit-packed, 1 = sparse
+//!   table bytes              dense: 13 bits x alphabet; sparse: u32 n +
+//!                            (u16 symbol, u16 freq) x n, symbols ascending
+//!   u64 payload_len | payload  (4 big-endian u32 states, then renorm bytes)
+//! u64 checksum               FNV-1a over every preceding byte
+//! ```
+//! The trailing checksum is verified *before* any table or payload parse,
+//! so truncations and bit flips fail deterministically and a corrupt
+//! `count`/`alphabet` can never drive an allocation; every read is
+//! bounds-checked anyway as defence in depth.
+//!
+//! Everything here is exact integer arithmetic — encode and decode are
+//! bit-identical on every SIMD dispatch arm and at every thread count by
+//! construction.
+
+use super::{BitReader, BitWriter};
+use anyhow::{bail, Result};
+
+/// Frequency scale: all tables are normalised to sum to `1 << SCALE_BITS`.
+pub const SCALE_BITS: u32 = 12;
+const SCALE: u32 = 1 << SCALE_BITS;
+/// Lower bound of the normalised state interval `[L, 256·L)`.
+const RANS_L: u32 = 1 << 23;
+/// Interleaved states per stream.
+const N_STREAMS: usize = 4;
+/// Bits per dense-table entry (frequencies go up to `SCALE` inclusive).
+const DENSE_BITS: u32 = 13;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Normalise raw counts to frequencies summing exactly to `SCALE`, every
+/// present symbol getting at least 1. Deterministic: rounding corrections
+/// go to the largest frequencies first, ties broken by symbol index.
+fn normalize_freqs(counts: &[u64]) -> Vec<u32> {
+    let total: u64 = counts.iter().sum();
+    let n_present = counts.iter().filter(|&&c| c > 0).count();
+    assert!(
+        n_present <= SCALE as usize,
+        "rans: {n_present} distinct symbols exceed the {SCALE} frequency scale"
+    );
+    let mut freqs: Vec<u32> = counts
+        .iter()
+        .map(|&c| {
+            if c == 0 {
+                0
+            } else {
+                (((c as u128 * SCALE as u128) / total as u128) as u32).max(1)
+            }
+        })
+        .collect();
+    let sum: i64 = freqs.iter().map(|&f| f as i64).sum();
+    let mut diff = SCALE as i64 - sum;
+    if diff != 0 {
+        let mut order: Vec<usize> = (0..counts.len()).filter(|&s| freqs[s] > 0).collect();
+        order.sort_unstable_by(|&a, &b| freqs[b].cmp(&freqs[a]).then(a.cmp(&b)));
+        if diff > 0 {
+            freqs[order[0]] += diff as u32;
+        } else {
+            // total removable is sum - n_present >= sum - SCALE, so this
+            // always terminates with diff == 0
+            for &s in &order {
+                let take = (-diff).min(freqs[s] as i64 - 1);
+                freqs[s] -= take as u32;
+                diff += take;
+                if diff == 0 {
+                    break;
+                }
+            }
+            debug_assert_eq!(diff, 0);
+        }
+    }
+    freqs
+}
+
+fn dense_table(freqs: &[u32]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    for &f in freqs {
+        w.write_bits(f as u64, DENSE_BITS);
+    }
+    w.finish()
+}
+
+fn sparse_table(freqs: &[u32]) -> Vec<u8> {
+    let present: Vec<usize> = (0..freqs.len()).filter(|&s| freqs[s] > 0).collect();
+    let mut out = Vec::with_capacity(4 + 4 * present.len());
+    out.extend_from_slice(&(present.len() as u32).to_le_bytes());
+    for &s in &present {
+        out.extend_from_slice(&(s as u16).to_le_bytes());
+        out.extend_from_slice(&(freqs[s] as u16).to_le_bytes());
+    }
+    out
+}
+
+/// Encode `symbols` (all `< alphabet`, `alphabet <= 65536`, at most 4096
+/// distinct values) into a self-describing, checksummed byte stream.
+pub fn rans_encode(symbols: &[u16], alphabet: usize) -> Vec<u8> {
+    assert!(
+        (1..=1usize << 16).contains(&alphabet),
+        "rans: alphabet {alphabet} out of range"
+    );
+    debug_assert!(symbols.iter().all(|&s| (s as usize) < alphabet));
+    let mut out = Vec::new();
+    out.extend_from_slice(&(alphabet as u32).to_le_bytes());
+    out.extend_from_slice(&(symbols.len() as u64).to_le_bytes());
+    if !symbols.is_empty() {
+        let mut counts = vec![0u64; alphabet];
+        for &s in symbols {
+            counts[s as usize] += 1;
+        }
+        let freqs = normalize_freqs(&counts);
+        let dense = dense_table(&freqs);
+        let sparse = sparse_table(&freqs);
+        if dense.len() <= sparse.len() {
+            out.push(0u8);
+            out.extend_from_slice(&dense);
+        } else {
+            out.push(1u8);
+            out.extend_from_slice(&sparse);
+        }
+        let mut cum = vec![0u32; alphabet + 1];
+        for s in 0..alphabet {
+            cum[s + 1] = cum[s] + freqs[s];
+        }
+        // reverse-order interleaved encode into a shared buffer
+        let mut states = [RANS_L; N_STREAMS];
+        let mut buf: Vec<u8> = Vec::with_capacity(symbols.len() / 2 + 16);
+        for i in (0..symbols.len()).rev() {
+            let s = symbols[i] as usize;
+            let f = freqs[s];
+            let x_max = ((RANS_L >> SCALE_BITS) << 8) * f;
+            let mut x = states[i % N_STREAMS];
+            while x >= x_max {
+                buf.push((x & 0xff) as u8);
+                x >>= 8;
+            }
+            states[i % N_STREAMS] = ((x / f) << SCALE_BITS) + (x % f) + cum[s];
+        }
+        // flush so that, after the reverse, state 0 leads in big-endian
+        for j in (0..N_STREAMS).rev() {
+            let x = states[j];
+            buf.extend_from_slice(&[
+                (x & 0xff) as u8,
+                ((x >> 8) & 0xff) as u8,
+                ((x >> 16) & 0xff) as u8,
+                (x >> 24) as u8,
+            ]);
+        }
+        buf.reverse();
+        out.extend_from_slice(&(buf.len() as u64).to_le_bytes());
+        out.extend_from_slice(&buf);
+    }
+    let ck = fnv1a(&out);
+    out.extend_from_slice(&ck.to_le_bytes());
+    out
+}
+
+/// Minimal bounds-checked reader (the coding layer sits below the codec
+/// container and carries no dependency on its cursor).
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.buf.len() - self.off {
+            bail!("rans stream truncated at offset {}", self.off);
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.off
+    }
+}
+
+fn read_freq_table(c: &mut Reader, alphabet: usize) -> Result<Vec<u32>> {
+    let mode = c.u8()?;
+    let freqs = match mode {
+        0 => {
+            let nbytes = (alphabet * DENSE_BITS as usize).div_ceil(8);
+            let raw = c.take(nbytes)?;
+            let mut r = BitReader::new(raw);
+            let mut freqs = Vec::with_capacity(alphabet);
+            for _ in 0..alphabet {
+                let Some(f) = r.read_bits(DENSE_BITS) else {
+                    bail!("rans dense frequency table truncated");
+                };
+                freqs.push(f as u32);
+            }
+            freqs
+        }
+        1 => {
+            let n = c.u32()? as usize;
+            if n == 0 || n > alphabet || n > SCALE as usize {
+                bail!("rans sparse frequency table has {n} entries for alphabet {alphabet}");
+            }
+            let raw = c.take(4 * n)?;
+            let mut freqs = vec![0u32; alphabet];
+            let mut prev: i64 = -1;
+            for e in raw.chunks_exact(4) {
+                let sym = u16::from_le_bytes(e[0..2].try_into().unwrap()) as usize;
+                let f = u16::from_le_bytes(e[2..4].try_into().unwrap()) as u32;
+                if sym as i64 <= prev || sym >= alphabet {
+                    bail!("rans sparse frequency table symbols out of order");
+                }
+                if f == 0 {
+                    bail!("rans sparse frequency table lists a zero frequency");
+                }
+                prev = sym as i64;
+                freqs[sym] = f;
+            }
+            freqs
+        }
+        m => bail!("rans unknown frequency-table mode {m}"),
+    };
+    let total: u64 = freqs.iter().map(|&f| f as u64).sum();
+    if total != SCALE as u64 {
+        bail!("rans frequency table sums to {total}, want {SCALE}");
+    }
+    if freqs.iter().any(|&f| f > SCALE) {
+        bail!("rans frequency exceeds the scale");
+    }
+    Ok(freqs)
+}
+
+/// Decode a stream produced by [`rans_encode`]. Corrupt or truncated
+/// input returns `Err` (checksum verified before any parse), never
+/// panics or over-allocates.
+pub fn rans_decode(buf: &[u8]) -> Result<Vec<u16>> {
+    rans_decode_capped(buf, usize::MAX)
+}
+
+/// [`rans_decode`] with an upper bound on the declared symbol count —
+/// callers that know how many symbols to expect (e.g. the residual plane
+/// parser) use this so even a checksum-valid stream cannot demand an
+/// oversized allocation.
+pub fn rans_decode_capped(buf: &[u8], max_count: usize) -> Result<Vec<u16>> {
+    if buf.len() < 20 {
+        bail!("rans stream too short ({} bytes)", buf.len());
+    }
+    let body = &buf[..buf.len() - 8];
+    let want = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+    if fnv1a(body) != want {
+        bail!("rans stream checksum mismatch (truncated or corrupted)");
+    }
+    let mut c = Reader { buf: body, off: 0 };
+    let alphabet = c.u32()? as usize;
+    if alphabet == 0 || alphabet > 1 << 16 {
+        bail!("rans alphabet {alphabet} out of range");
+    }
+    let count = c.u64()? as usize;
+    if count == 0 {
+        if c.remaining() != 0 {
+            bail!("rans empty stream carries trailing bytes");
+        }
+        return Ok(Vec::new());
+    }
+    if count > max_count {
+        bail!("rans stream declares {count} symbols, caller expects at most {max_count}");
+    }
+    let freqs = read_freq_table(&mut c, alphabet)?;
+    let mut cum = vec![0u32; alphabet + 1];
+    for s in 0..alphabet {
+        cum[s + 1] = cum[s] + freqs[s];
+    }
+    let mut slot_sym = vec![0u16; SCALE as usize];
+    for s in 0..alphabet {
+        for slot in cum[s]..cum[s + 1] {
+            slot_sym[slot as usize] = s as u16;
+        }
+    }
+    let plen = c.u64()? as usize;
+    let payload = c.take(plen)?;
+    if c.remaining() != 0 {
+        bail!("rans stream carries trailing bytes");
+    }
+    if plen < 4 * N_STREAMS {
+        bail!("rans payload too short for the interleaved states");
+    }
+    let mut states = [0u32; N_STREAMS];
+    let mut pos = 0usize;
+    for st in states.iter_mut() {
+        *st = u32::from_be_bytes(payload[pos..pos + 4].try_into().unwrap());
+        pos += 4;
+        if *st < RANS_L {
+            bail!("rans initial state below the renormalisation bound");
+        }
+    }
+    let mut out = Vec::with_capacity(count.min(1 << 20));
+    for i in 0..count {
+        let j = i % N_STREAMS;
+        let x0 = states[j];
+        let slot = x0 & (SCALE - 1);
+        let s = slot_sym[slot as usize];
+        out.push(s);
+        let f = freqs[s as usize];
+        let mut x = f * (x0 >> SCALE_BITS) + slot - cum[s as usize];
+        while x < RANS_L {
+            let Some(&b) = payload.get(pos) else {
+                bail!("rans payload underrun at symbol {i}");
+            };
+            pos += 1;
+            x = (x << 8) | b as u32;
+        }
+        states[j] = x;
+    }
+    if pos != payload.len() {
+        bail!("rans payload carries {} unconsumed bytes", payload.len() - pos);
+    }
+    if states.iter().any(|&x| x != RANS_L) {
+        bail!("rans final states do not return to the initial bound");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_empty_and_tiny() {
+        assert_eq!(rans_decode(&rans_encode(&[], 4)).unwrap(), Vec::<u16>::new());
+        assert_eq!(rans_decode(&rans_encode(&[3], 8)).unwrap(), vec![3]);
+        let ones = vec![5u16; 1000];
+        assert_eq!(rans_decode(&rans_encode(&ones, 16)).unwrap(), ones);
+        let zeros = vec![0u16; 17];
+        assert_eq!(rans_decode(&rans_encode(&zeros, 1)).unwrap(), zeros);
+    }
+
+    #[test]
+    fn roundtrip_skewed_and_compresses() {
+        let mut rng = Pcg64::seeded(0);
+        let symbols: Vec<u16> = (0..20_000)
+            .map(|_| {
+                let mut s = 0u16;
+                while s < 63 && rng.below(2) == 0 {
+                    s += 1;
+                }
+                s
+            })
+            .collect();
+        let enc = rans_encode(&symbols, 64);
+        assert_eq!(rans_decode(&enc).unwrap(), symbols);
+        // geometric(1/2) over 64 symbols has ~2 bits of entropy; rANS with
+        // a 12-bit table should land well under 2.5 bits/symbol
+        let bps = (enc.len() as f64 - 140.0) * 8.0 / symbols.len() as f64;
+        assert!(bps < 2.5, "bits/symbol {bps}");
+    }
+
+    #[test]
+    fn roundtrip_uniform_large_alphabet() {
+        let mut rng = Pcg64::seeded(5);
+        let symbols: Vec<u16> = (0..10_000).map(|_| rng.below(4096) as u16).collect();
+        let enc = rans_encode(&symbols, 4096);
+        assert_eq!(rans_decode(&enc).unwrap(), symbols);
+    }
+
+    #[test]
+    fn normalized_freqs_sum_to_scale() {
+        let mut rng = Pcg64::seeded(2);
+        for trial in 0..20u64 {
+            let n = 1 + (trial as usize % 7) * 500;
+            let counts: Vec<u64> = (0..n).map(|_| rng.below(10_000) as u64).collect();
+            if counts.iter().all(|&c| c == 0) {
+                continue;
+            }
+            let freqs = normalize_freqs(&counts);
+            assert_eq!(freqs.iter().map(|&f| f as u64).sum::<u64>(), SCALE as u64);
+            for (c, f) in counts.iter().zip(&freqs) {
+                assert_eq!(*c == 0, *f == 0);
+            }
+        }
+    }
+
+    #[test]
+    fn checksum_rejects_flips() {
+        let symbols: Vec<u16> = (0..500u16).map(|i| i % 30).collect();
+        let enc = rans_encode(&symbols, 32);
+        for pos in (0..enc.len()).step_by(7) {
+            let mut bad = enc.clone();
+            bad[pos] ^= 0x10;
+            assert!(rans_decode(&bad).is_err(), "flip at {pos} accepted");
+        }
+        for cut in 0..enc.len() {
+            assert!(rans_decode(&enc[..cut]).is_err(), "truncation to {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn capped_decode_rejects_oversized_counts() {
+        let symbols = vec![7u16; 4096];
+        let enc = rans_encode(&symbols, 16);
+        assert_eq!(rans_decode_capped(&enc, 4096).unwrap(), symbols);
+        assert!(rans_decode_capped(&enc, 4095).is_err());
+    }
+}

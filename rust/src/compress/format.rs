@@ -249,6 +249,8 @@ pub fn peek_model_meta(bytes: &[u8]) -> Result<crate::codec::ArtifactMeta> {
         shape,
         fitness: Some(fitness),
         seconds: 0.0,
+        side_bytes: 0,
+        max_error: None,
     })
 }
 

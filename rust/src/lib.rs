@@ -53,6 +53,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod nttd;
 pub mod reorder;
+pub mod residual;
 pub mod runtime;
 pub mod store;
 pub mod tensor;

@@ -56,6 +56,7 @@ const VALUE_FLAGS: &[&str] = &[
     "budget-params",
     "budget-bytes",
     "rel-error",
+    "budget-max-error",
     "seed",
     "iters",
     "quant-bits",
@@ -188,12 +189,15 @@ fn build_codec_config(args: &Args) -> Result<CodecConfig> {
 }
 
 fn parse_budget(args: &Args) -> Result<Option<Budget>> {
-    let picked: Vec<&str> = ["budget-params", "budget-bytes", "rel-error"]
+    let picked: Vec<&str> = ["budget-params", "budget-bytes", "rel-error", "budget-max-error"]
         .into_iter()
         .filter(|&k| args.get(k).is_some())
         .collect();
     if picked.len() > 1 {
-        bail!("pick at most one of --budget-params / --budget-bytes / --rel-error");
+        bail!(
+            "pick at most one of --budget-params / --budget-bytes / --rel-error / \
+             --budget-max-error"
+        );
     }
     if let Some(v) = args.get("budget-params") {
         return Ok(Some(Budget::Params(v.parse().context("budget-params")?)));
@@ -203,6 +207,9 @@ fn parse_budget(args: &Args) -> Result<Option<Budget>> {
     }
     if let Some(v) = args.get("rel-error") {
         return Ok(Some(Budget::RelError(v.parse().context("rel-error")?)));
+    }
+    if let Some(v) = args.get("budget-max-error") {
+        return Ok(Some(Budget::MaxError(v.parse().context("budget-max-error")?)));
     }
     Ok(None)
 }
@@ -282,6 +289,13 @@ fn cmd_compress(args: &Args) -> Result<()> {
         orig_bytes as f64 / comp_bytes as f64,
         seconds
     );
+    if let Some(bound) = meta.max_error {
+        println!(
+            "max-error={bound} model={}B side={}B",
+            meta.size_bytes - meta.side_bytes,
+            meta.side_bytes
+        );
+    }
     Ok(())
 }
 
@@ -473,6 +487,11 @@ fn cmd_info(args: &Args) -> Result<()> {
     if let Some(fit) = meta.fitness {
         println!("fitness:   {fit:.4}");
     }
+    if let Some(bound) = meta.max_error {
+        println!("max-error: {bound} (guaranteed pointwise)");
+        println!("model:     {} bytes", meta.size_bytes - meta.side_bytes);
+        println!("side:      {} bytes (residual side channel)", meta.side_bytes);
+    }
     if let Some(model) = artifact.as_model() {
         println!("variant:   {}", model.params.variant.as_str());
         println!(
@@ -483,6 +502,22 @@ fn cmd_info(args: &Args) -> Result<()> {
         println!("params:    {}", model.params.num_params());
         println!("dtype:     {}", model.param_dtype.as_str());
         println!("mean/std:  {} / {}", model.mean, model.std);
+    }
+    Ok(())
+}
+
+/// `tcz stat`: metadata from the container header alone — an O(1) peek
+/// that never decodes the model payload or the residual side channel.
+fn cmd_stat(args: &Args) -> Result<()> {
+    let meta = codec::container::peek_meta_file(&PathBuf::from(args.req("model")?))?;
+    check_method(args, &meta)?;
+    println!("method:    {}", meta.method);
+    println!("shape:     {:?}", meta.shape);
+    println!("size:      {} bytes", meta.size_bytes);
+    if let Some(bound) = meta.max_error {
+        println!("max-error: {bound} (guaranteed pointwise)");
+        println!("model:     {} bytes", meta.size_bytes - meta.side_bytes);
+        println!("side:      {} bytes (residual side channel)", meta.side_bytes);
     }
     Ok(())
 }
@@ -509,9 +544,13 @@ USAGE: tensorcodec <command> [flags]
 
 COMMANDS
   compress    --dataset <name>|--input <x.npy> --out <m.tcz>
-              [--method <codec>] [--budget-params N|--budget-bytes N|--rel-error X]
+              [--method <codec>] [--budget-params N|--budget-bytes N|--rel-error X
+               |--budget-max-error E]
               [--scale 0.25] [--data-seed 7] [--config run.conf]
               [--set k=v ...] [--seed 0] [--iters N] [--quant-bits 10] [--verbose]
+              --budget-max-error E guarantees |x - x_hat| <= E on every
+              entry (any method): the lossy model is wrapped with a
+              rANS-coded residual side channel in a .tcz v4 container.
   append      --model <m.tcz> --input <new.npy>|--dataset <name> [--axis 0]
               [--budget-params N|--budget-bytes N] [--set k=v ...]
               extends the artifact along --axis with the new slices (their
@@ -533,6 +572,9 @@ COMMANDS
               --dir:   protocol v2 (open/get/batch-get/stat/methods frames
                        over every .tcz in the directory; see README)
   info        --model <m.tcz>
+  stat        --model <m.tcz>   O(1) header peek: method, shape, total /
+              model / side-channel bytes and the guaranteed max-error of
+              error-bounded (v4) containers, without loading the artifact
   methods     list registered codecs
 
 Flags accept `--key value` and `--key=value`; use the `=` form for values
@@ -605,6 +647,7 @@ fn main() {
         "gen" => cmd_gen(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
+        "stat" => cmd_stat(&args),
         "methods" => cmd_methods(),
         "help" | "--help" | "-h" => {
             usage();
@@ -675,5 +718,17 @@ mod tests {
         let a = parse(&["--set", "epochs=5", "--set", "epochs=9"]).unwrap();
         assert_eq!(a.get_all("set"), vec!["epochs=5", "epochs=9"]);
         assert_eq!(a.get("set"), Some("epochs=9"));
+    }
+
+    #[test]
+    fn budget_max_error_parses_and_is_exclusive() {
+        use tensorcodec::codec::Budget;
+        let a = parse(&["--budget-max-error", "0.05"]).unwrap();
+        assert_eq!(
+            super::parse_budget(&a).unwrap(),
+            Some(Budget::MaxError(0.05))
+        );
+        let a = parse(&["--budget-params", "10", "--budget-max-error=0.05"]).unwrap();
+        assert!(super::parse_budget(&a).is_err());
     }
 }

@@ -1,0 +1,514 @@
+//! Residual side channel: the lossless-correction half of error-bounded
+//! compression (`Budget::MaxError`).
+//!
+//! After a lossy model is fit, its prediction is decoded and per-entry
+//! residuals `truth − pred` are quantised to integer bins of width
+//! `2·bound·margin`. Each bin is then *verified in the exact decode
+//! arithmetic* (`pred + (k·step) as f32`, plain f32 add) and nudged by up
+//! to ±2 bins if f32 rounding pushed it past the bound — so the pointwise
+//! guarantee `|x − x̂| ≤ bound` is checked entry-by-entry at build time,
+//! not inferred from real-number algebra. Two plane layouts are encoded
+//! and the smaller wins:
+//!
+//! - **sparse**: only entries with a non-zero bin, as gap-coded sorted
+//!   linear indices plus zigzag bins (few entries exceed the bound);
+//! - **dense**: every entry's zigzag bin (most entries need correction).
+//!
+//! Both symbol streams are entropy-coded with the interleaved rANS coder
+//! ([`crate::coding::rans`]); values that overflow the 4096-symbol
+//! alphabet escape to raw u64 arrays. The serialised section rides in the
+//! `.tcz` v4 container after the inner model container, and parses into
+//! [`Corrections`] — precomputed f32 correction values applied by pure
+//! f32 addition after model decode, which keeps every decode path
+//! bit-identical across SIMD arms and thread counts.
+//!
+//! Section layout (little-endian):
+//! ```text
+//! u8 kind (0 sparse | 1 dense) | f64 bound | f64 step | u64 n_entries
+//! sparse: u64 n_plane
+//!         u64 len | gap rANS stream      (index deltas, ESCAPE for big)
+//!         u64 len | bin rANS stream      (zigzag bins, ESCAPE for big)
+//!         u64 n   | raw u64 gaps         (escaped, in stream order)
+//!         u64 n   | raw u64 zigzag bins  (escaped, in stream order)
+//! dense:  u64 len | bin rANS stream      (n_entries zigzag bins)
+//!         u64 n   | raw u64 zigzag bins  (escaped, in stream order)
+//! u64 checksum — FNV-1a over every preceding byte of the section
+//! ```
+//! The trailing checksum covers the section header and escape arrays
+//! (the rANS streams carry their own), so any truncation or bit flip of
+//! the side channel fails deterministically with `Err`.
+
+use crate::coding::quantize::quantize_uniform;
+use crate::coding::rans::{rans_decode_capped, rans_encode};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Symbol alphabet of the plane streams; the top symbol escapes to a raw
+/// u64 side array.
+const ALPHABET: usize = 4096;
+const ESCAPE: u16 = (ALPHABET - 1) as u16;
+
+/// The quantiser targets this fraction of the bound, leaving slack for
+/// the f32 rounding of `pred + correction`; the verify/repair pass then
+/// closes any remaining gap in the exact decode arithmetic.
+const QUANT_MARGIN: f64 = 0.995;
+
+const KIND_SPARSE: u8 = 0;
+const KIND_DENSE: u8 = 1;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn zigzag(k: i64) -> u64 {
+    ((k << 1) ^ (k >> 63)) as u64
+}
+
+fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+/// The correction a decoder adds for bin `k`: computed once, in one
+/// arithmetic order, so build-time verification and every serving path
+/// agree bitwise.
+fn correction_value(k: i64, step: f64) -> f32 {
+    (k as f64 * step) as f32
+}
+
+/// Pick a bin for one entry such that `pred + correction_value(k, step)`
+/// lands within `bound` of `truth`, trying the quantiser's bin first and
+/// its four neighbours after. `None` means the bound sits below f32
+/// resolution at this magnitude and no correction can satisfy it.
+fn choose_bin(pred: f32, truth: f32, k0: i64, step: f64, bound: f64) -> Option<i64> {
+    for dk in [0i64, -1, 1, -2, 2] {
+        let k = match k0.checked_add(dk) {
+            Some(k) => k,
+            None => continue,
+        };
+        let rec = pred + correction_value(k, step);
+        if (truth as f64 - rec as f64).abs() <= bound {
+            return Some(k);
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// serialisation helpers (self-contained; the residual layer sits below
+// the codec container)
+// ---------------------------------------------------------------------
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.buf.len() - self.off {
+            bail!("residual section truncated at offset {}", self.off);
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A u64 count that must be coverable by the remaining bytes at
+    /// `elem_bytes` each — rejects absurd counts before any allocation.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        match n.checked_mul(elem_bytes) {
+            Some(b) if b <= self.remaining() => Ok(n),
+            _ => bail!("residual section count {n} exceeds the remaining bytes"),
+        }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.off
+    }
+}
+
+fn put_stream(out: &mut Vec<u8>, stream: &[u8]) {
+    put_u64(out, stream.len() as u64);
+    out.extend_from_slice(stream);
+}
+
+fn put_raw_u64s(out: &mut Vec<u8>, vals: &[u64]) {
+    put_u64(out, vals.len() as u64);
+    for &v in vals {
+        put_u64(out, v);
+    }
+}
+
+fn read_stream<'a>(c: &mut Reader<'a>) -> Result<&'a [u8]> {
+    let n = c.count(1)?;
+    c.take(n)
+}
+
+fn read_raw_u64s(c: &mut Reader) -> Result<Vec<u64>> {
+    let n = c.count(8)?;
+    let raw = c.take(8 * n)?;
+    Ok(raw.chunks_exact(8).map(|e| u64::from_le_bytes(e.try_into().unwrap())).collect())
+}
+
+/// Split `vals` into an in-alphabet symbol stream (ESCAPE marking
+/// overflows) plus the escaped raw values in stream order.
+fn escape_split(vals: impl Iterator<Item = u64>) -> (Vec<u16>, Vec<u64>) {
+    let mut syms = Vec::new();
+    let mut overflow = Vec::new();
+    for v in vals {
+        if v < ESCAPE as u64 {
+            syms.push(v as u16);
+        } else {
+            syms.push(ESCAPE);
+            overflow.push(v);
+        }
+    }
+    (syms, overflow)
+}
+
+/// Inverse of [`escape_split`].
+fn escape_join(syms: &[u16], overflow: &[u64]) -> Result<Vec<u64>> {
+    let mut out = Vec::with_capacity(syms.len());
+    let mut next = 0usize;
+    for &s in syms {
+        if s == ESCAPE {
+            let Some(&v) = overflow.get(next) else {
+                bail!("residual section escape array underrun");
+            };
+            next += 1;
+            out.push(v);
+        } else {
+            out.push(s as u64);
+        }
+    }
+    if next != overflow.len() {
+        bail!("residual section escape array has {} unused entries", overflow.len() - next);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// plane build + encode
+// ---------------------------------------------------------------------
+
+fn encode_sparse(idx: &[u64], bins: &[i64], bound: f64, step: f64, n_entries: u64) -> Vec<u8> {
+    let mut gaps = Vec::with_capacity(idx.len());
+    let mut prev = 0u64;
+    for (i, &x) in idx.iter().enumerate() {
+        // first gap is the absolute index, later gaps are delta - 1
+        gaps.push(if i == 0 { x } else { x - prev - 1 });
+        prev = x;
+    }
+    let (gap_syms, gap_over) = escape_split(gaps.into_iter());
+    let (bin_syms, bin_over) = escape_split(bins.iter().map(|&k| zigzag(k)));
+    let mut out = Vec::new();
+    out.push(KIND_SPARSE);
+    put_f64(&mut out, bound);
+    put_f64(&mut out, step);
+    put_u64(&mut out, n_entries);
+    put_u64(&mut out, idx.len() as u64);
+    put_stream(&mut out, &rans_encode(&gap_syms, ALPHABET));
+    put_stream(&mut out, &rans_encode(&bin_syms, ALPHABET));
+    put_raw_u64s(&mut out, &gap_over);
+    put_raw_u64s(&mut out, &bin_over);
+    out
+}
+
+fn encode_dense(bins: &[i64], bound: f64, step: f64) -> Vec<u8> {
+    let (bin_syms, bin_over) = escape_split(bins.iter().map(|&k| zigzag(k)));
+    let mut out = Vec::new();
+    out.push(KIND_DENSE);
+    put_f64(&mut out, bound);
+    put_f64(&mut out, step);
+    put_u64(&mut out, bins.len() as u64);
+    put_stream(&mut out, &rans_encode(&bin_syms, ALPHABET));
+    put_raw_u64s(&mut out, &bin_over);
+    out
+}
+
+/// Build the residual plane for `pred` vs `truth` under a pointwise
+/// `bound` and serialise it, picking the smaller of the sparse and dense
+/// encodings. Every entry is verified in the exact decode arithmetic;
+/// fails if the bound sits below f32 resolution for some entry.
+pub fn build_and_encode(pred: &[f32], truth: &[f32], bound: f64) -> Result<Vec<u8>> {
+    if pred.len() != truth.len() {
+        bail!(
+            "residual plane: prediction has {} entries, truth has {}",
+            pred.len(),
+            truth.len()
+        );
+    }
+    if !bound.is_finite() || bound <= 0.0 {
+        bail!("max-error bound must be positive and finite, got {bound}");
+    }
+    let abs_err = (bound * QUANT_MARGIN) as f32;
+    if !abs_err.is_finite() || abs_err <= 0.0 {
+        bail!("max-error bound {bound} underflows f32");
+    }
+    let residuals: Vec<f32> = truth.iter().zip(pred).map(|(&t, &p)| t - p).collect();
+    let (mut bins, step) = quantize_uniform(&residuals, abs_err);
+    for i in 0..bins.len() {
+        bins[i] = choose_bin(pred[i], truth[i], bins[i], step, bound).ok_or_else(|| {
+            anyhow!(
+                "max-error bound {bound} is below f32 resolution near value {} (entry {i})",
+                truth[i]
+            )
+        })?;
+    }
+    let idx: Vec<u64> = (0..bins.len() as u64).filter(|&i| bins[i as usize] != 0).collect();
+    let nz: Vec<i64> = idx.iter().map(|&i| bins[i as usize]).collect();
+    let sparse = encode_sparse(&idx, &nz, bound, step, bins.len() as u64);
+    let dense = encode_dense(&bins, bound, step);
+    let mut out = if sparse.len() <= dense.len() { sparse } else { dense };
+    let ck = fnv1a(&out);
+    put_u64(&mut out, ck);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// parse + apply
+// ---------------------------------------------------------------------
+
+enum CorrKind {
+    /// Sorted linear indices with their correction values.
+    Sparse { idx: Vec<u64>, vals: Vec<f32> },
+    /// One correction per entry (zero where none is needed).
+    Dense { vals: Vec<f32> },
+}
+
+/// A parsed residual plane: per-entry f32 corrections, applied by plain
+/// f32 addition after model decode.
+pub struct Corrections {
+    bound: f64,
+    n_entries: u64,
+    kind: CorrKind,
+}
+
+impl Corrections {
+    /// The pointwise guarantee this plane was built for.
+    pub fn bound(&self) -> f64 {
+        self.bound
+    }
+
+    /// Total tensor entries the plane covers.
+    pub fn n_entries(&self) -> u64 {
+        self.n_entries
+    }
+
+    /// Entries carrying a non-trivial correction.
+    pub fn n_corrected(&self) -> usize {
+        match &self.kind {
+            CorrKind::Sparse { idx, .. } => idx.len(),
+            CorrKind::Dense { vals } => vals.iter().filter(|&&v| v != 0.0).count(),
+        }
+    }
+
+    /// The correction to add at linear index `lin` (0.0 when none).
+    #[inline]
+    pub fn at(&self, lin: u64) -> f32 {
+        match &self.kind {
+            CorrKind::Sparse { idx, vals } => match idx.binary_search(&lin) {
+                Ok(p) => vals[p],
+                Err(_) => 0.0,
+            },
+            CorrKind::Dense { vals } => vals[lin as usize],
+        }
+    }
+
+    /// In-memory footprint of the parsed plane.
+    pub fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + match &self.kind {
+                CorrKind::Sparse { idx, vals } => idx.len() * 8 + vals.len() * 4,
+                CorrKind::Dense { vals } => vals.len() * 4,
+            }
+    }
+}
+
+/// Parse a serialised residual section into [`Corrections`].
+/// `expected_entries` is the tensor's entry count from the (already
+/// validated) model container — it caps every allocation in here, so a
+/// corrupt section can return `Err` but never OOM.
+pub fn parse_plane(buf: &[u8], expected_entries: u64) -> Result<Corrections> {
+    if buf.len() < 8 {
+        bail!("residual section too short ({} bytes)", buf.len());
+    }
+    let body = &buf[..buf.len() - 8];
+    let want = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+    if fnv1a(body) != want {
+        bail!("residual section checksum mismatch (truncated or corrupted)");
+    }
+    let mut c = Reader { buf: body, off: 0 };
+    let kind = c.u8()?;
+    let bound = c.f64()?;
+    if !bound.is_finite() || bound <= 0.0 {
+        bail!("residual section bound {bound} is not a positive finite value");
+    }
+    let step = c.f64()?;
+    if !step.is_finite() || step <= 0.0 {
+        bail!("residual section step {step} is not a positive finite value");
+    }
+    let n_entries = c.u64()?;
+    if n_entries != expected_entries {
+        bail!(
+            "residual section covers {n_entries} entries, model decodes {expected_entries}"
+        );
+    }
+    let kind = match kind {
+        KIND_SPARSE => {
+            let n_plane = c.u64()?;
+            if n_plane > n_entries {
+                bail!("residual section lists {n_plane} corrections for {n_entries} entries");
+            }
+            let n_plane = n_plane as usize;
+            let gap_stream = read_stream(&mut c)?;
+            let bin_stream = read_stream(&mut c)?;
+            let gap_over = read_raw_u64s(&mut c)?;
+            let bin_over = read_raw_u64s(&mut c)?;
+            let gap_syms = rans_decode_capped(gap_stream, n_plane)
+                .context("decoding residual index stream")?;
+            let bin_syms = rans_decode_capped(bin_stream, n_plane)
+                .context("decoding residual bin stream")?;
+            if gap_syms.len() != n_plane || bin_syms.len() != n_plane {
+                bail!(
+                    "residual section streams decode to {}/{} symbols, want {n_plane}",
+                    gap_syms.len(),
+                    bin_syms.len()
+                );
+            }
+            let gaps = escape_join(&gap_syms, &gap_over)?;
+            let zz = escape_join(&bin_syms, &bin_over)?;
+            let mut idx = Vec::with_capacity(n_plane);
+            let mut vals = Vec::with_capacity(n_plane);
+            let mut lin = 0u64;
+            for (i, (&g, &z)) in gaps.iter().zip(&zz).enumerate() {
+                lin = if i == 0 {
+                    g
+                } else {
+                    g.checked_add(1)
+                        .and_then(|gp| lin.checked_add(gp))
+                        .ok_or_else(|| anyhow!("residual index overflow"))?
+                };
+                if lin >= n_entries {
+                    bail!("residual section index {lin} out of range for {n_entries} entries");
+                }
+                let k = unzigzag(z);
+                if k == 0 {
+                    bail!("residual section sparse plane lists a zero correction");
+                }
+                idx.push(lin);
+                vals.push(correction_value(k, step));
+            }
+            CorrKind::Sparse { idx, vals }
+        }
+        KIND_DENSE => {
+            let bin_stream = read_stream(&mut c)?;
+            let bin_over = read_raw_u64s(&mut c)?;
+            let n = n_entries as usize;
+            let bin_syms = rans_decode_capped(bin_stream, n)
+                .context("decoding residual bin stream")?;
+            if bin_syms.len() != n {
+                bail!("residual section stream decodes to {} symbols, want {n}", bin_syms.len());
+            }
+            let zz = escape_join(&bin_syms, &bin_over)?;
+            let vals: Vec<f32> = zz.iter().map(|&z| correction_value(unzigzag(z), step)).collect();
+            CorrKind::Dense { vals }
+        }
+        k => bail!("residual section has unknown plane kind {k}"),
+    };
+    if c.remaining() != 0 {
+        bail!("residual section carries {} trailing bytes", c.remaining());
+    }
+    Ok(Corrections { bound, n_entries, kind })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn check_plane(pred: &[f32], truth: &[f32], bound: f64) -> Corrections {
+        let section = build_and_encode(pred, truth, bound).unwrap();
+        let corr = parse_plane(&section, pred.len() as u64).unwrap();
+        for i in 0..pred.len() {
+            let rec = pred[i] + corr.at(i as u64);
+            assert!(
+                (truth[i] as f64 - rec as f64).abs() <= bound,
+                "entry {i}: |{} - {rec}| > {bound}",
+                truth[i]
+            );
+        }
+        corr
+    }
+
+    #[test]
+    fn plane_meets_bound_sparse_and_dense() {
+        let mut rng = Pcg64::seeded(11);
+        let n = 4000usize;
+        let truth: Vec<f32> = (0..n).map(|_| (rng.uniform() - 0.5) * 8.0).collect();
+        // mostly-accurate prediction with a few large spikes -> sparse
+        let mut pred = truth.clone();
+        for i in (0..n).step_by(97) {
+            pred[i] += (rng.uniform() - 0.5) * 50.0;
+        }
+        let corr = check_plane(&pred, &truth, 0.05);
+        assert!(corr.n_corrected() < n / 10, "spiky plane should be sparse-ish");
+        // uniformly-bad prediction -> dense
+        let pred: Vec<f32> = truth.iter().map(|&t| t + (rng.uniform() - 0.5) * 2.0).collect();
+        let corr = check_plane(&pred, &truth, 0.01);
+        assert!(corr.n_corrected() > n / 2);
+        // exact prediction -> empty plane, still valid
+        let corr = check_plane(&truth.clone(), &truth, 0.5);
+        assert_eq!(corr.n_corrected(), 0);
+    }
+
+    #[test]
+    fn plane_rejects_corruption() {
+        let mut rng = Pcg64::seeded(3);
+        let truth: Vec<f32> = (0..600).map(|_| (rng.uniform() - 0.5) * 4.0).collect();
+        let pred: Vec<f32> = truth.iter().map(|&t| t + (rng.uniform() - 0.5) * 0.6).collect();
+        let section = build_and_encode(&pred, &truth, 0.02).unwrap();
+        parse_plane(&section, truth.len() as u64).unwrap();
+        for cut in 0..section.len() {
+            assert!(parse_plane(&section[..cut], truth.len() as u64).is_err());
+        }
+        for pos in 0..section.len() {
+            let mut bad = section.to_vec();
+            bad[pos] ^= 0x40;
+            assert!(parse_plane(&bad, truth.len() as u64).is_err(), "flip at {pos} accepted");
+        }
+        assert!(parse_plane(&section, truth.len() as u64 + 1).is_err());
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for k in [-5i64, -1, 0, 1, 7, i64::MIN / 2, i64::MAX / 2] {
+            assert_eq!(unzigzag(zigzag(k)), k);
+        }
+    }
+}

@@ -21,6 +21,11 @@ pub struct RemoteMeta {
     /// Server-side hot-reload generation (0 on first load; `stat` replies
     /// omit it and report 0).
     pub generation: u64,
+    /// Guaranteed pointwise error bound, for error-bounded artifacts.
+    pub max_error: Option<f64>,
+    /// Residual side-channel bytes (0 for plain artifacts; the model
+    /// accounts for `bytes - side_bytes`).
+    pub side_bytes: usize,
 }
 
 /// One connection to an artifact-store server.
@@ -128,6 +133,8 @@ fn parse_meta(body: &str) -> Result<RemoteMeta> {
     let mut bytes = None;
     let mut bulk = None;
     let mut generation = 0u64;
+    let mut max_error = None;
+    let mut side_bytes = 0usize;
     for field in body.split_whitespace() {
         let (k, v) = field
             .split_once('=')
@@ -144,6 +151,8 @@ fn parse_meta(body: &str) -> Result<RemoteMeta> {
             "bytes" => bytes = Some(v.parse::<usize>().context("bad bytes")?),
             "bulk" => bulk = Some(v == "true"),
             "generation" => generation = v.parse().context("bad generation")?,
+            "max_error" => max_error = Some(v.parse::<f64>().context("bad max_error")?),
+            "side_bytes" => side_bytes = v.parse().context("bad side_bytes")?,
             _ => {} // forward-compatible: ignore unknown fields
         }
     }
@@ -153,5 +162,7 @@ fn parse_meta(body: &str) -> Result<RemoteMeta> {
         bytes: bytes.context("missing bytes")?,
         bulk: bulk.unwrap_or(true),
         generation,
+        max_error,
+        side_bytes,
     })
 }

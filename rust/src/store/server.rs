@@ -191,7 +191,11 @@ impl ArtifactServer {
     /// prediction (neural methods go to XLA when enabled).
     pub fn stat(&self, name: &str) -> Result<(ArtifactMeta, bool)> {
         let meta = self.store.stat(name)?;
-        let bulk = !(self.allow_xla && matches!(meta.method, "tensorcodec" | "neukron"));
+        // error-bounded artifacts never take the XLA path: corrections
+        // must be applied after model decode, so they serve via shards
+        let bulk = !(self.allow_xla
+            && meta.max_error.is_none()
+            && matches!(meta.method, "tensorcodec" | "neukron"));
         Ok((meta, bulk))
     }
 
@@ -232,6 +236,9 @@ fn parse_coord_block(s: &str) -> Result<Vec<Vec<usize>>> {
 }
 
 /// Append `OK method=… shape=… bytes=… bulk=…` to the reply buffer.
+/// Error-bounded artifacts additionally report `max_error=… model_bytes=…
+/// side_bytes=…` so clients can see the model vs side-channel split
+/// without the artifact ever being loaded.
 fn write_meta_reply(out: &mut String, meta: &ArtifactMeta, bulk: bool) {
     use std::fmt::Write;
     let _ = write!(out, "OK method={} shape=", meta.method);
@@ -242,6 +249,14 @@ fn write_meta_reply(out: &mut String, meta: &ArtifactMeta, bulk: bool) {
         let _ = write!(out, "{n}");
     }
     let _ = write!(out, " bytes={} bulk={}", meta.size_bytes, bulk);
+    if let Some(bound) = meta.max_error {
+        let _ = write!(
+            out,
+            " max_error={bound} model_bytes={} side_bytes={}",
+            meta.size_bytes.saturating_sub(meta.side_bytes),
+            meta.side_bytes
+        );
+    }
 }
 
 /// Dispatch one protocol v2 frame, serialising the success reply into

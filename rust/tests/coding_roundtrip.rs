@@ -9,6 +9,7 @@ use tensorcodec::coding::huffman::{huffman_decode, huffman_encode};
 use tensorcodec::coding::quantize::{
     dequantize_uniform, f16_bits_to_f32, f32_to_f16_bits, quantize_uniform,
 };
+use tensorcodec::coding::rans::{rans_decode, rans_decode_capped, rans_encode};
 use tensorcodec::coding::rle::{rle_decode, rle_encode};
 
 /// xorshift64* — tiny seeded generator independent of the crate's own
@@ -139,6 +140,169 @@ fn huffman_roundtrip_random_streams() {
         let dec = huffman_decode(&enc).unwrap();
         assert_eq!(dec, symbols, "seed {seed} alphabet {alphabet} n {n}");
     }
+}
+
+// ---------------------------------------------------------------------
+// rans
+// ---------------------------------------------------------------------
+
+/// Zipf-distributed symbols: P(k) ∝ 1/(k+1). Heavier-tailed than the
+/// geometric `skewed_symbols`, exercising the sparse frequency table.
+fn zipf_symbols(rng: &mut XorShift64, n: usize, alphabet: u16) -> Vec<u16> {
+    let weights: Vec<f32> = (0..alphabet).map(|k| 1.0 / (k as f32 + 1.0)).collect();
+    let total: f32 = weights.iter().sum();
+    (0..n)
+        .map(|_| {
+            let mut u = rng.f32_unit() * total;
+            for (k, w) in weights.iter().enumerate() {
+                if u < *w {
+                    return k as u16;
+                }
+                u -= w;
+            }
+            alphabet - 1
+        })
+        .collect()
+}
+
+/// Same FNV-1a as the stream trailer, reimplemented locally so the
+/// handcrafted-header tests cannot share a bug with the code under test.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Append a valid checksum to a handcrafted stream body, so decode
+/// failures exercise the header bounds checks rather than the trailer.
+fn with_checksum(body: &[u8]) -> Vec<u8> {
+    let mut buf = body.to_vec();
+    buf.extend_from_slice(&fnv1a(body).to_le_bytes());
+    buf
+}
+
+#[test]
+fn rans_roundtrip_edge_sizes() {
+    // empty stream
+    assert_eq!(rans_decode(&rans_encode(&[], 4)).unwrap(), Vec::<u16>::new());
+    // exactly one symbol
+    assert_eq!(rans_decode(&rans_encode(&[3], 8)).unwrap(), vec![3]);
+    // alphabet of size 1
+    let zeros = vec![0u16; 17];
+    assert_eq!(rans_decode(&rans_encode(&zeros, 1)).unwrap(), zeros);
+    // one distinct symbol repeated (degenerate one-entry table)
+    let ones = vec![5u16; 1000];
+    assert_eq!(rans_decode(&rans_encode(&ones, 16)).unwrap(), ones);
+    // runs of exactly 255 — the RLE split length, adversarial for any
+    // coder that batches state renormalisation
+    let mut runs = Vec::new();
+    for v in [7u16, 0, 255, 7] {
+        runs.extend(std::iter::repeat(v).take(255));
+    }
+    assert_eq!(rans_decode(&rans_encode(&runs, 256)).unwrap(), runs);
+}
+
+#[test]
+fn rans_roundtrip_random_streams() {
+    for seed in 1..=18u64 {
+        let mut rng = XorShift64::new(seed * 101);
+        let alphabet = [2u16, 3, 16, 64, 300, 4096][(seed % 6) as usize];
+        let n = [1usize, 2, 100, 10_000][(seed % 4) as usize];
+        let symbols = match seed % 3 {
+            0 => skewed_symbols(&mut rng, n, alphabet),
+            1 => zipf_symbols(&mut rng, n, alphabet),
+            _ => (0..n).map(|_| rng.below(alphabet as u64) as u16).collect(),
+        };
+        let enc = rans_encode(&symbols, alphabet as usize);
+        let dec = rans_decode(&enc).unwrap();
+        assert_eq!(dec, symbols, "seed {seed} alphabet {alphabet} n {n}");
+    }
+}
+
+#[test]
+fn rans_skewed_beats_raw_encoding() {
+    let mut rng = XorShift64::new(7);
+    let symbols = zipf_symbols(&mut rng, 50_000, 4096);
+    let enc = rans_encode(&symbols, 4096);
+    // Zipf over 4096 symbols has entropy far below the 12 raw bits; the
+    // coded stream (header included) must land well under the raw size.
+    assert!(
+        enc.len() < symbols.len() * 12 / 8,
+        "{} bytes for {} symbols",
+        enc.len(),
+        symbols.len()
+    );
+}
+
+#[test]
+fn rans_rejects_truncations_and_bit_flips() {
+    let mut rng = XorShift64::new(13);
+    let symbols = skewed_symbols(&mut rng, 400, 64);
+    let enc = rans_encode(&symbols, 64);
+    for cut in 0..enc.len() {
+        assert!(rans_decode(&enc[..cut]).is_err(), "truncation at {cut}");
+    }
+    for pos in 0..enc.len() {
+        for bit in 0..8 {
+            let mut bad = enc.clone();
+            bad[pos] ^= 1 << bit;
+            assert!(rans_decode(&bad).is_err(), "flip at byte {pos} bit {bit}");
+        }
+    }
+}
+
+#[test]
+fn rans_rejects_handcrafted_bad_headers() {
+    // Valid checksums throughout: these exercise the *bounds checks* on
+    // the parsed header fields, not the corruption trailer.
+    let mut bad_alphabet = Vec::new();
+    bad_alphabet.extend_from_slice(&0u32.to_le_bytes());
+    bad_alphabet.extend_from_slice(&0u64.to_le_bytes());
+    assert!(rans_decode(&with_checksum(&bad_alphabet)).is_err(), "alphabet 0");
+
+    let mut huge_alphabet = Vec::new();
+    huge_alphabet.extend_from_slice(&70_000u32.to_le_bytes());
+    huge_alphabet.extend_from_slice(&0u64.to_le_bytes());
+    assert!(rans_decode(&with_checksum(&huge_alphabet)).is_err(), "alphabet 70000");
+
+    let mut bad_mode = Vec::new();
+    bad_mode.extend_from_slice(&4u32.to_le_bytes());
+    bad_mode.extend_from_slice(&5u64.to_le_bytes());
+    bad_mode.push(2); // table modes are 0 (dense) and 1 (sparse) only
+    assert!(rans_decode(&with_checksum(&bad_mode)).is_err(), "table mode 2");
+
+    // sparse table whose frequencies do not sum to the 4096 scale
+    let mut bad_sum = Vec::new();
+    bad_sum.extend_from_slice(&4u32.to_le_bytes());
+    bad_sum.extend_from_slice(&1u64.to_le_bytes());
+    bad_sum.push(1);
+    bad_sum.extend_from_slice(&1u32.to_le_bytes()); // one entry
+    bad_sum.extend_from_slice(&0u16.to_le_bytes()); // symbol 0
+    bad_sum.extend_from_slice(&100u16.to_le_bytes()); // freq 100 != 4096
+    assert!(rans_decode(&with_checksum(&bad_sum)).is_err(), "freq sum");
+
+    // empty stream with trailing bytes before the checksum
+    let mut trailing = Vec::new();
+    trailing.extend_from_slice(&4u32.to_le_bytes());
+    trailing.extend_from_slice(&0u64.to_le_bytes());
+    trailing.push(0xAB);
+    assert!(rans_decode(&with_checksum(&trailing)).is_err(), "trailing bytes");
+}
+
+#[test]
+fn rans_capped_decode_rejects_oversized_counts() {
+    let symbols = vec![1u16, 2, 3, 1, 2, 3, 1, 2];
+    let enc = rans_encode(&symbols, 4);
+    assert_eq!(rans_decode_capped(&enc, 8).unwrap(), symbols);
+    assert!(rans_decode_capped(&enc, 7).is_err());
+    // a forged huge count must be rejected before any allocation
+    let mut forged = Vec::new();
+    forged.extend_from_slice(&4u32.to_le_bytes());
+    forged.extend_from_slice(&u64::MAX.to_le_bytes());
+    assert!(rans_decode_capped(&with_checksum(&forged), 1 << 20).is_err());
 }
 
 // ---------------------------------------------------------------------

@@ -255,6 +255,62 @@ fn decode_bit_identical_across_simd_and_threads_all_codecs() {
     }
 }
 
+/// Error-bounded artifacts are part of the determinism contract: the
+/// whole `Budget::MaxError` pipeline (inner lossy fit → bulk-path decode
+/// → residual quantise → rANS encode → v4 container) produces
+/// bit-identical container bytes AND bit-identical decoded entries
+/// across {forced scalar, auto dispatch} × {1, 8 threads}. The rANS and
+/// residual layers are pure integer/f64-scalar code, so determinism
+/// reduces to the inner codec's — asserted end to end here anyway.
+#[test]
+fn error_bounded_bit_identical_across_simd_and_threads() {
+    let _g = lock();
+    let t = {
+        let mut t = DenseTensor::random_uniform(&[9, 8, 7], 61);
+        // spikes force a non-trivial correction plane
+        let n = t.len();
+        let mut rng = Pcg64::seeded(62);
+        for _ in 0..12 {
+            let at = rng.below(n);
+            t.data_mut()[at] = (rng.uniform() - 0.5) * 300.0;
+        }
+        t
+    };
+    let coords = random_coords(&[9, 8, 7], 3000, 63);
+    for (method, bound) in [("ttd", 0.05f64), ("sz", 0.2)] {
+        let c = codec::by_name(method).unwrap();
+        let mut reference: Option<(Vec<u8>, Vec<u32>)> = None;
+        for simd in [Some(kernels::SimdIsa::Scalar), None] {
+            for threads in [1usize, 8] {
+                kernels::set_simd(simd);
+                kernels::set_threads(threads);
+                let mut a = c
+                    .compress(&t, &Budget::MaxError(bound), &CodecConfig::default())
+                    .unwrap();
+                let bytes = codec::container::artifact_to_bytes(a.as_ref()).unwrap();
+                let mut out = Vec::new();
+                a.decode_many(&coords, &mut out);
+                let bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+                match &reference {
+                    None => reference = Some((bytes, bits)),
+                    Some((wb, wd)) => {
+                        assert_eq!(
+                            &bytes, wb,
+                            "{method}: container bytes differ at simd={simd:?} threads={threads}"
+                        );
+                        assert_eq!(
+                            &bits, wd,
+                            "{method}: decode differs at simd={simd:?} threads={threads}"
+                        );
+                    }
+                }
+            }
+        }
+        kernels::set_simd(None);
+        kernels::set_threads(0);
+    }
+}
+
 /// Streaming append is part of the determinism contract: projecting and
 /// absorbing new slices (TT and TR) produces bit-identical segment
 /// payloads and extended container bytes at 1 vs 8 threads, and the

@@ -1,0 +1,303 @@
+//! End-to-end acceptance for the error-bounded subsystem: compressing
+//! under `Budget::MaxError(b)` must guarantee `|x − x̂| ≤ b` on *every*
+//! entry — through a direct decode, through the `.tcz` v4 container
+//! roundtrip, and through a served `batch-get` — for every codec,
+//! including on tensors with adversarial spikes the lossy models cannot
+//! capture. Corrupted or truncated side channels must fail with `Err`,
+//! never a panic, and `stat` must report the model/side split from the
+//! header alone.
+
+use tensorcodec::codec::{self, Budget, CodecConfig};
+use tensorcodec::config::ParamDtype;
+use tensorcodec::coordinator::batcher::BatchPolicy;
+use tensorcodec::harness::{random_coords, sort_coords};
+use tensorcodec::nttd::ModelParams;
+use tensorcodec::reorder::Orders;
+use tensorcodec::store::server::ArtifactServer;
+use tensorcodec::store::ArtifactStore;
+use tensorcodec::tensor::{DenseTensor, FoldSpec};
+use tensorcodec::util::Pcg64;
+
+/// Smooth random tensor plus adversarial spikes: isolated entries far
+/// outside the smooth range, which no low-rank / low-budget lossy model
+/// can represent — they force the residual side channel to do real work.
+fn spiky_tensor(shape: &[usize], seed: u64) -> DenseTensor {
+    let mut t = DenseTensor::random_uniform(shape, seed);
+    let n = t.len();
+    let mut rng = Pcg64::seeded(seed ^ 0x51ce5);
+    let data = t.data_mut();
+    for _ in 0..(n / 40).max(3) {
+        let at = rng.below(n);
+        data[at] = (rng.uniform() - 0.5) * 500.0;
+    }
+    t
+}
+
+fn max_abs_err(truth: &[f32], rec: &[f32]) -> f64 {
+    truth
+        .iter()
+        .zip(rec)
+        .map(|(&x, &y)| (x as f64 - y as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+const CLASSICAL: [&str; 6] = ["ttd", "cpd", "tkd", "trd", "tthresh", "sz"];
+
+/// The core guarantee, direct decode: every classical codec at two
+/// bounds, checked entry by entry against the original tensor.
+#[test]
+fn pointwise_guarantee_direct_decode_all_codecs() {
+    let t = spiky_tensor(&[8, 7, 6], 11);
+    for method in CLASSICAL {
+        for bound in [0.5f64, 0.05] {
+            let c = codec::by_name(method).unwrap();
+            let mut a = c
+                .compress(&t, &Budget::MaxError(bound), &CodecConfig::default())
+                .unwrap();
+            let meta = a.meta();
+            assert_eq!(meta.max_error, Some(bound), "{method}");
+            assert!(meta.side_bytes > 0, "{method}: side channel missing");
+            assert!(
+                meta.size_bytes > meta.side_bytes,
+                "{method}: model bytes not accounted"
+            );
+            let rec = a.decode_all();
+            let worst = max_abs_err(t.data(), rec.data());
+            assert!(
+                worst <= bound,
+                "{method} bound {bound}: max error {worst} exceeds it"
+            );
+            // the point path gives the same values as the dense decode
+            for idx in [[0usize, 0, 0], [7, 6, 5], [3, 2, 1], [5, 0, 4]] {
+                let lin = (idx[0] * 7 + idx[1]) * 6 + idx[2];
+                assert_eq!(
+                    a.get(&idx).to_bits(),
+                    rec.data()[lin].to_bits(),
+                    "{method}: get vs decode_all at {idx:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Container roundtrip: save → load preserves the guarantee, the decoded
+/// entries bit-exactly, and the O(1) header peek reports the bound and
+/// the model/side byte split without parsing the side channel.
+#[test]
+fn v4_container_roundtrip_and_header_peek() {
+    let dir = std::env::temp_dir().join("tcz_error_bounded_rt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let t = spiky_tensor(&[7, 6, 5], 23);
+    let bound = 0.1f64;
+    for method in ["ttd", "sz"] {
+        let c = codec::by_name(method).unwrap();
+        let mut a = c
+            .compress(&t, &Budget::MaxError(bound), &CodecConfig::default())
+            .unwrap();
+        let before = a.decode_all();
+        let path = dir.join(format!("rt_{method}.tcz"));
+        codec::save_artifact(&path, a.as_ref()).unwrap();
+
+        let mut loaded = codec::load_artifact(&path).unwrap();
+        let meta = loaded.meta();
+        assert_eq!(meta.method, method);
+        assert_eq!(meta.max_error, Some(bound));
+        let after = loaded.decode_all();
+        for (i, (x, y)) in before.data().iter().zip(after.data()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{method}: entry {i} changed");
+        }
+        assert!(max_abs_err(t.data(), after.data()) <= bound, "{method}");
+
+        // O(1) peek: same metadata from the header alone
+        let peeked = codec::container::peek_meta_file(&path).unwrap();
+        assert_eq!(peeked.method, method);
+        assert_eq!(peeked.shape, vec![7, 6, 5]);
+        assert_eq!(peeked.max_error, Some(bound), "{method}: peeked bound");
+        assert_eq!(peeked.side_bytes, meta.side_bytes, "{method}: peeked side");
+        assert_eq!(peeked.size_bytes, meta.size_bytes, "{method}: peeked size");
+    }
+}
+
+/// A synthetic trained TensorCodec model of shape [12, 9, 5] — the
+/// pure-Rust decode chain works without the XLA runtime.
+fn toy_tc_artifact(seed: u64) -> Box<tensorcodec::codec::neural::NeuralArtifact> {
+    use tensorcodec::codec::neural::NeuralArtifact;
+    use tensorcodec::compress::CompressedModel;
+
+    let spec = FoldSpec::auto(&[12, 9, 5], 0).unwrap();
+    let params = ModelParams::init_tc(seed, spec.dp, 32, 5, 5);
+    let mut rng = Pcg64::seeded(seed);
+    let orders = Orders::random(&spec.orig_shape, &mut rng);
+    let model = CompressedModel {
+        spec,
+        orders,
+        params,
+        mean: 0.25,
+        std: 1.5,
+        fitness: 0.8,
+        param_dtype: ParamDtype::F32,
+        train_seconds: 0.0,
+        init_seconds: 0.0,
+        epochs_run: 0,
+    };
+    Box::new(NeuralArtifact::from_model(model, "tensorcodec"))
+}
+
+/// The neural path without the XLA runtime: wrap a synthetic trained
+/// TensorCodec model via `wrap_with_bound` — the pure-Rust decode chain
+/// plus corrections must meet the bound and survive the v4 roundtrip.
+#[test]
+fn neural_wrap_meets_bound_without_xla() {
+    let inner = toy_tc_artifact(17);
+    let truth = spiky_tensor(&[12, 9, 5], 29);
+    let bound = 0.05f64;
+    let mut a = codec::bounded::wrap_with_bound(inner, &truth, bound).unwrap();
+    let meta = a.meta();
+    assert_eq!(meta.method, "tensorcodec");
+    assert_eq!(meta.max_error, Some(bound));
+    let rec = a.decode_all();
+    assert!(max_abs_err(truth.data(), rec.data()) <= bound);
+
+    // v4 roundtrip of the neural inner container
+    let bytes = codec::container::artifact_to_bytes(a.as_ref()).unwrap();
+    let mut loaded = codec::container::artifact_from_bytes(&bytes).unwrap();
+    assert_eq!(loaded.meta().max_error, Some(bound));
+    let after = loaded.decode_all();
+    for (x, y) in rec.data().iter().zip(after.data()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    // a mismatched truth shape must fail cleanly, not decode out of range
+    let bad = codec::bounded::wrap_with_bound(toy_tc_artifact(18), &t_wrong_shape(), bound);
+    assert!(bad.is_err(), "shape mismatch must be rejected");
+}
+
+fn t_wrong_shape() -> DenseTensor {
+    DenseTensor::random_uniform(&[4, 3, 2], 5)
+}
+
+/// Serving: bounded artifacts answer `get` and `batch-get` within the
+/// bound and bit-identically to a direct decode; `stat` reports the
+/// split from the header and never loads the artifact into the LRU.
+#[test]
+fn served_batch_get_holds_the_bound() {
+    let dir = std::env::temp_dir().join("tcz_error_bounded_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let shape = vec![8usize, 6, 5];
+    let t = spiky_tensor(&shape, 31);
+    let bound = 0.2f64;
+    let c = codec::by_name("ttd").unwrap();
+    let a = c
+        .compress(&t, &Budget::MaxError(bound), &CodecConfig::default())
+        .unwrap();
+    codec::save_artifact(&dir.join("bounded_ttd.tcz"), a.as_ref()).unwrap();
+
+    let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+    let server = ArtifactServer::new(store, BatchPolicy::default(), true);
+
+    // stat: header-only, reports the split, stays out of the LRU, and
+    // predicts the bulk path even with XLA allowed (corrections must be
+    // applied after model decode)
+    let (meta, bulk) = server.stat("bounded_ttd").unwrap();
+    assert_eq!(meta.max_error, Some(bound));
+    assert!(meta.side_bytes > 0);
+    assert!(bulk, "bounded artifacts must not take the XLA path");
+    assert_eq!(server.store().resident_count(), 0, "stat loaded the LRU");
+
+    // batch-get: in-bound and bit-identical to the direct artifact
+    let mut coords = random_coords(&shape, 2_000, 37);
+    sort_coords(&mut coords);
+    let got = server.batch_get("bounded_ttd", &coords).unwrap();
+    let mut direct = codec::load_artifact(&dir.join("bounded_ttd.tcz")).unwrap();
+    let mut want = Vec::new();
+    direct.decode_many(&coords, &mut want);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "entry {i} at {:?}", coords[i]);
+        let truth = t.data()[(coords[i][0] * 6 + coords[i][1]) * 5 + coords[i][2]];
+        let err = (truth as f64 - *g as f64).abs();
+        assert!(err <= bound, "entry {i}: served error {err} > {bound}");
+    }
+    // point path agrees with the batch
+    let one = server.get("bounded_ttd", &coords[7]).unwrap();
+    assert_eq!(one.to_bits(), want[7].to_bits());
+
+    // a bounded *neural* artifact: even with XLA allowed, stat must
+    // predict the bulk path — the XLA fast path would skip corrections
+    let truth = spiky_tensor(&[12, 9, 5], 53);
+    let nb = codec::bounded::wrap_with_bound(toy_tc_artifact(51), &truth, 0.5).unwrap();
+    codec::save_artifact(&dir.join("bounded_tc.tcz"), nb.as_ref()).unwrap();
+    let (nmeta, nbulk) = server.stat("bounded_tc").unwrap();
+    assert_eq!(nmeta.method, "tensorcodec");
+    assert_eq!(nmeta.max_error, Some(0.5));
+    assert!(nbulk, "bounded neural artifacts must not be predicted as XLA");
+    // and the served values still meet the bound through the shards
+    let ncoords = random_coords(&[12, 9, 5], 500, 57);
+    let ngot = server.batch_get("bounded_tc", &ncoords).unwrap();
+    for (i, g) in ngot.iter().enumerate() {
+        let c = &ncoords[i];
+        let x = truth.data()[(c[0] * 9 + c[1]) * 5 + c[2]];
+        let err = (x as f64 - *g as f64).abs();
+        assert!(err <= 0.5, "neural entry {i}: served error {err} > 0.5");
+    }
+}
+
+/// Robustness: every truncation of a v4 file and every single-bit flip
+/// in the v4 header or the residual section returns `Err` — no panics,
+/// no OOM, no silently-wrong guarantee. (Flips inside the inner model
+/// payload are the inner container's concern and are not swept here.)
+#[test]
+fn malformed_v4_containers_error_cleanly() {
+    let t = spiky_tensor(&[6, 5, 4], 41);
+    let c = codec::by_name("ttd").unwrap();
+    let a = c
+        .compress(&t, &Budget::MaxError(0.1), &CodecConfig::default())
+        .unwrap();
+    let bytes = codec::container::artifact_to_bytes(a.as_ref()).unwrap();
+    assert!(codec::container::artifact_from_bytes(&bytes).is_ok());
+
+    // every truncation fails (the header carries both section lengths)
+    for cut in 0..bytes.len() {
+        assert!(
+            codec::container::artifact_from_bytes(&bytes[..cut]).is_err(),
+            "truncation to {cut} bytes decoded"
+        );
+    }
+    // single-bit flips in the v4 header (magic, version, tag, bound,
+    // lengths — skipping the 2 unvalidated reserved bytes) and in the
+    // checksummed residual section
+    let meta = a.meta();
+    let side_start = bytes.len() - meta.side_bytes;
+    let header: Vec<usize> = (0..6).chain(8..32).collect();
+    let side: Vec<usize> = (side_start..bytes.len()).collect();
+    for pos in header.into_iter().chain(side) {
+        for bit in 0..8 {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 1 << bit;
+            assert!(
+                codec::container::artifact_from_bytes(&bad).is_err(),
+                "flip at byte {pos} bit {bit} decoded"
+            );
+        }
+    }
+    // a forged gigantic side length must be rejected before allocating
+    let mut forged = bytes.clone();
+    forged[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(codec::container::artifact_from_bytes(&forged).is_err());
+}
+
+/// An unsatisfiable bound (below f32 resolution of the data) and
+/// non-positive bounds are rejected up front with an error.
+#[test]
+fn degenerate_bounds_are_rejected() {
+    let t = spiky_tensor(&[5, 4, 3], 43);
+    let c = codec::by_name("ttd").unwrap();
+    for bad in [0.0f64, -1.0, f64::NAN, f64::INFINITY] {
+        assert!(
+            c.compress(&t, &Budget::MaxError(bad), &CodecConfig::default())
+                .is_err(),
+            "bound {bad} accepted"
+        );
+    }
+    // far below what f32 arithmetic can repair on values of magnitude ~250
+    let r = c.compress(&t, &Budget::MaxError(1e-12), &CodecConfig::default());
+    assert!(r.is_err(), "sub-resolution bound must fail, not lie");
+}
