@@ -9,8 +9,9 @@ Both files are fig9's ``BENCH_kernels.json`` shape. Every gauge present
 fail when ``current < baseline * (1 - max_regress)``, lower-is-better
 latency keys fail when ``current > baseline * (1 + max_regress)``. Keys
 missing from either side are skipped, so the baseline can gate a subset
-(today: the bulk/lockstep decode throughput floors and the point-decode
-latency ceiling) while the artifact upload tracks the rest.
+(today: the bulk/lockstep decode throughput floors, the point-decode
+latency ceiling, and the Zipfian tile-cache serving floors — warm QPS,
+warm/cold ratio, hit rate) while the artifact upload tracks the rest.
 """
 
 import argparse
@@ -27,6 +28,9 @@ THROUGHPUT_KEYS = (
     "gemm_gflops_nt",
     "rans_encode_mb_s",
     "rans_decode_mb_s",
+    "hot_qps_warm",
+    "tile_hot_qps_ratio",
+    "tile_hit_rate",
 )
 
 # lower-is-better gauges (latencies)
@@ -52,7 +56,7 @@ def main() -> int:
             continue
         floor = b * (1.0 - args.max_regress)
         status = "OK " if c >= floor else "FAIL"
-        print(f"{status} {key}: current {c:.0f} vs baseline {b:.0f} (floor {floor:.0f})")
+        print(f"{status} {key}: current {c:.6g} vs baseline {b:.6g} (floor {floor:.6g})")
         if c < floor:
             failures.append(key)
 
@@ -62,7 +66,7 @@ def main() -> int:
             continue
         ceiling = b * (1.0 + args.max_regress)
         status = "OK " if c <= ceiling else "FAIL"
-        print(f"{status} {key}: current {c:.0f} vs baseline {b:.0f} (ceiling {ceiling:.0f})")
+        print(f"{status} {key}: current {c:.6g} vs baseline {b:.6g} (ceiling {ceiling:.6g})")
         if c > ceiling:
             failures.append(key)
 

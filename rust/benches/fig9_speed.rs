@@ -294,7 +294,111 @@ fn rans_section() -> (f64, f64) {
     (enc_mb_s, dec_mb_s)
 }
 
-fn kernels_section(append: (f64, f64), rans: (f64, f64)) {
+/// Zipfian hot-key queries: a small pool of distinct coordinates, query
+/// ranks drawn Zipf(s=1.1) by inverse-CDF over a Pcg64 stream — the
+/// serving pattern the decoded-tile cache exists for.
+const ZIPF_POOL: usize = 256;
+const ZIPF_BATCH: usize = 512;
+const ZIPF_BATCHES: usize = 48;
+
+fn zipf_batches(shape: &[usize]) -> Vec<Vec<Vec<usize>>> {
+    let mut rng = Pcg64::seeded(83);
+    let pool: Vec<Vec<usize>> = (0..ZIPF_POOL)
+        .map(|_| shape.iter().map(|&n| rng.below(n)).collect())
+        .collect();
+    let mut cdf = Vec::with_capacity(ZIPF_POOL);
+    let mut acc = 0.0f64;
+    for rank in 1..=ZIPF_POOL {
+        acc += 1.0 / (rank as f64).powf(1.1);
+        cdf.push(acc);
+    }
+    (0..ZIPF_BATCHES)
+        .map(|_| {
+            (0..ZIPF_BATCH)
+                .map(|_| {
+                    let u = rng.uniform_f64() * acc;
+                    let idx = cdf.partition_point(|&c| c < u).min(ZIPF_POOL - 1);
+                    pool[idx].clone()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// One warm-up sweep then best-of-3 timed sweeps over all batches;
+/// returns (lookups/s, the replies of the last sweep).
+fn zipf_qps(
+    server: &tensorcodec::store::server::ArtifactServer,
+    batches: &[Vec<Vec<usize>>],
+) -> (f64, Vec<f32>) {
+    for b in batches {
+        server.batch_get("hot", b).expect("warm-up batch");
+    }
+    let mut best = f64::INFINITY;
+    let mut replies = Vec::new();
+    for _ in 0..3 {
+        replies.clear();
+        let t = Timer::start();
+        for b in batches {
+            replies.extend(server.batch_get("hot", b).expect("timed batch"));
+        }
+        best = best.min(t.seconds());
+    }
+    ((ZIPF_BATCHES * ZIPF_BATCH) as f64 / best, replies)
+}
+
+/// Zipfian hot-key serving, cold (tile cache off) vs warm (tile cache
+/// on): the same neural artifact, the same query stream, through the
+/// real `ArtifactServer` shard path. Warm replies are asserted
+/// bit-identical to cold before any number is reported. Returns
+/// `(hot_qps_cold, hot_qps_warm, tile_hit_rate)`; the regression gate
+/// on the warm/cold ratio lives in `python/check_bench.py`.
+fn zipfian_tile_section() -> (f64, f64, f64) {
+    use tensorcodec::codec::neural::NeuralArtifact;
+    use tensorcodec::coordinator::batcher::BatchPolicy;
+    use tensorcodec::store::server::ArtifactServer;
+    use tensorcodec::store::ArtifactStore;
+
+    let dir = std::env::temp_dir().join("tcz_fig9_zipf_store");
+    std::fs::create_dir_all(&dir).expect("store dir");
+    let artifact = NeuralArtifact::from_model(toy_neural(21), "tensorcodec");
+    tensorcodec::codec::save_artifact(&dir.join("hot.tcz"), &artifact).expect("save hot.tcz");
+    let batches = zipf_batches(&[256, 256, 256]);
+    // flush as soon as a full block arrives: the gauge must measure
+    // decode, not the batcher's max_wait timer
+    let policy = BatchPolicy {
+        max_batch: ZIPF_BATCH,
+        max_wait: std::time::Duration::from_millis(1),
+        queue_depth: 4096,
+    };
+
+    let cold_store = ArtifactStore::new(&dir, usize::MAX).expect("store");
+    let cold = ArtifactServer::with_tile_bytes(cold_store, policy.clone(), false, 0);
+    let (hot_qps_cold, cold_vals) = zipf_qps(&cold, &batches);
+
+    let warm_store = ArtifactStore::new(&dir, usize::MAX).expect("store");
+    let warm = ArtifactServer::with_tile_bytes(warm_store, policy, false, 256 << 20);
+    let (hot_qps_warm, warm_vals) = zipf_qps(&warm, &batches);
+
+    assert_eq!(cold_vals.len(), warm_vals.len());
+    for (i, (c, w)) in cold_vals.iter().zip(&warm_vals).enumerate() {
+        assert_eq!(
+            c.to_bits(),
+            w.to_bits(),
+            "lookup {i}: tile-cached reply differs from direct decode"
+        );
+    }
+    let (hits, misses, bytes) = warm.tile_stats().expect("tile cache enabled");
+    let tile_hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+    println!("=== Zipfian hot-key serving ({ZIPF_BATCHES}x{ZIPF_BATCH} lookups, pool {ZIPF_POOL}) ===");
+    println!(
+        "cold {hot_qps_cold:>10.0} q/s   warm {hot_qps_warm:>10.0} q/s   ({:.2}x, hit rate {tile_hit_rate:.3}, {bytes} tile B resident)",
+        hot_qps_warm / hot_qps_cold.max(1e-9)
+    );
+    (hot_qps_cold, hot_qps_warm, tile_hit_rate)
+}
+
+fn kernels_section(append: (f64, f64), rans: (f64, f64), zipf: (f64, f64, f64)) {
     let n_threads = kernels::max_threads().max(2);
     let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
     let isa = kernels::active_isa();
@@ -379,7 +483,7 @@ fn kernels_section(append: (f64, f64), rans: (f64, f64)) {
     kernels::set_threads(0);
 
     let json = format!(
-        "{{\n  \"threads\": {n_threads},\n  \"simd\": \"{}\",\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"point_decode_ns_1t\": {},\n  \"lockstep_decode_entries_per_s_1t\": {},\n  \"lockstep_decode_entries_per_s_nt\": {},\n  \"lockstep_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {},\n  \"append_slice_seconds_h512\": {},\n  \"append_slice_seconds_h2048\": {},\n  \"append_history_ratio\": {},\n  \"rans_encode_mb_s\": {},\n  \"rans_decode_mb_s\": {}\n}}\n",
+        "{{\n  \"threads\": {n_threads},\n  \"simd\": \"{}\",\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"point_decode_ns_1t\": {},\n  \"lockstep_decode_entries_per_s_1t\": {},\n  \"lockstep_decode_entries_per_s_nt\": {},\n  \"lockstep_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {},\n  \"append_slice_seconds_h512\": {},\n  \"append_slice_seconds_h2048\": {},\n  \"append_history_ratio\": {},\n  \"rans_encode_mb_s\": {},\n  \"rans_decode_mb_s\": {},\n  \"hot_qps_cold\": {},\n  \"hot_qps_warm\": {},\n  \"tile_hot_qps_ratio\": {},\n  \"tile_hit_rate\": {}\n}}\n",
         isa.as_str(),
         json_num(Some(g1)),
         json_num(Some(gn)),
@@ -402,6 +506,10 @@ fn kernels_section(append: (f64, f64), rans: (f64, f64)) {
         json_num(Some(append.1 / append.0.max(1e-9))),
         json_num(Some(rans.0)),
         json_num(Some(rans.1)),
+        json_num(Some(zipf.0)),
+        json_num(Some(zipf.1)),
+        json_num(Some(zipf.1 / zipf.0.max(1e-9))),
+        json_num(Some(zipf.2)),
     );
     std::fs::write("BENCH_kernels.json", json).expect("write BENCH_kernels.json");
     println!("json -> BENCH_kernels.json");
@@ -410,14 +518,21 @@ fn kernels_section(append: (f64, f64), rans: (f64, f64)) {
 fn main() {
     let append = append_section();
     let rans = rans_section();
-    kernels_section(append, rans);
-    // Coarse linearity gate, AFTER BENCH_kernels.json is on disk so a
-    // noisy-runner flake still leaves the artifact for the nightly upload:
-    // appending one slice must cost ~the same at 4x the history.
+    let zipf = zipfian_tile_section();
+    kernels_section(append, rans, zipf);
+    // Coarse gates, AFTER BENCH_kernels.json is on disk so a noisy-runner
+    // flake still leaves the artifact for the nightly upload: appending
+    // one slice must cost ~the same at 4x the history, and the warm tile
+    // cache must actually have served the Zipfian hot set.
     let ratio = append.1 / append.0.max(1e-9);
     assert!(
         ratio < 5.0,
         "append cost grew with history length (ratio {ratio:.2}): not linear in the slice"
+    );
+    assert!(
+        zipf.2 > 0.5,
+        "warm Zipfian pass barely hit the tile cache (hit rate {:.3})",
+        zipf.2
     );
 
     let scale = bench_scale();

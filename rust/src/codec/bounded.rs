@@ -132,7 +132,33 @@ impl Artifact for BoundedArtifact {
         self.bulk_calls
     }
 
+    fn decode_block(&mut self, lo: &[usize], dims: &[usize], out: &mut Vec<f32>) {
+        let base = out.len();
+        self.inner.decode_block(lo, dims, out);
+        // corrections are applied here, before the block ever reaches a
+        // caller — a tile cached by the serving layer already satisfies
+        // the pointwise bound. Same per-entry f32 add as `decode_many`,
+        // so cached and uncached reads stay bit-identical.
+        let d = lo.len();
+        let mut idx = lo.to_vec();
+        for slot in &mut out[base..] {
+            *slot += self.corr.at(self.lin(&idx));
+            for k in (0..d).rev() {
+                idx[k] += 1;
+                if idx[k] < lo[k] + dims[k] {
+                    break;
+                }
+                idx[k] = lo[k];
+            }
+        }
+        self.bulk_calls += 1;
+    }
+
     fn resident_bytes(&self) -> usize {
+        // everything the wrapper holds while serving: the inner artifact,
+        // the parsed correction plane, and the verbatim residual section
+        // kept for `write` — an LRU budget that charged only the container
+        // length would undercount a served bounded artifact
         self.inner.resident_bytes() + self.corr.resident_bytes() + self.section.len()
     }
 

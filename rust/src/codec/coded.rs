@@ -18,6 +18,39 @@ use crate::tensor::DenseTensor;
 use anyhow::{bail, Result};
 use std::io::Write;
 
+/// Copy the row-major block `[lo, lo + dims)` out of a dense decode
+/// cache. Runs along the trailing mode are contiguous in the cache, so
+/// the block is `∏ dims[..d-1]` slice copies instead of per-entry `at`
+/// calls — the cheap `decode_block` for codecs whose point decode already
+/// materialises the whole tensor.
+fn dense_block(t: &DenseTensor, lo: &[usize], dims: &[usize], out: &mut Vec<f32>) {
+    let d = lo.len();
+    debug_assert_eq!(dims.len(), d);
+    if d == 0 {
+        return;
+    }
+    let shape = t.shape();
+    let mut strides = vec![1usize; d];
+    for k in (0..d - 1).rev() {
+        strides[k] = strides[k + 1] * shape[k + 1];
+    }
+    let run = dims[d - 1];
+    let data = t.data();
+    let runs: usize = dims[..d - 1].iter().product();
+    let mut idx = lo.to_vec();
+    for _ in 0..runs {
+        let start: usize = idx.iter().zip(&strides).map(|(&i, &s)| i * s).sum();
+        out.extend_from_slice(&data[start..start + run]);
+        for k in (0..d - 1).rev() {
+            idx[k] += 1;
+            if idx[k] < lo[k] + dims[k] {
+                break;
+            }
+            idx[k] = lo[k];
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // TTHRESH
 // ---------------------------------------------------------------------
@@ -49,6 +82,10 @@ impl TthreshArtifact {
 impl Artifact for TthreshArtifact {
     fn get(&mut self, idx: &[usize]) -> f32 {
         self.decoded().at(idx)
+    }
+
+    fn decode_block(&mut self, lo: &[usize], dims: &[usize], out: &mut Vec<f32>) {
+        dense_block(self.decoded(), lo, dims, out);
     }
 
     fn resident_bytes(&self) -> usize {
@@ -263,6 +300,10 @@ impl SzArtifact {
 impl Artifact for SzArtifact {
     fn get(&mut self, idx: &[usize]) -> f32 {
         self.decoded().at(idx)
+    }
+
+    fn decode_block(&mut self, lo: &[usize], dims: &[usize], out: &mut Vec<f32>) {
+        dense_block(self.decoded(), lo, dims, out);
     }
 
     fn resident_bytes(&self) -> usize {

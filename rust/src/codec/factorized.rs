@@ -6,8 +6,9 @@ use super::container::{
     checked_len, put_f32, put_f64, put_u64, read_shape, shape_header, Cursor,
 };
 use super::{
-    append_by_recompress, check_append_shapes, decode_sorted_scatter, largest_within,
-    rel_error_search, Appended, Artifact, ArtifactMeta, Budget, Codec, CodecConfig,
+    append_by_recompress, check_append_shapes, check_bounded_append, decode_sorted_scatter,
+    largest_within, rel_error_search, Appended, Artifact, ArtifactMeta, Budget, Codec,
+    CodecConfig,
 };
 use crate::baselines::cp::{cp_als, CpChain, CpFactors};
 use crate::baselines::tring::{tr_als, TrChain, TrCores};
@@ -213,6 +214,7 @@ impl Codec for TtdCodec {
         cfg: &CodecConfig,
     ) -> Result<Appended> {
         check_append_shapes(&artifact.meta().shape, slices, axis)?;
+        check_bounded_append(artifact.as_ref(), budget)?;
         let seed = cfg.seed;
         /// Continuation after the borrow of the concrete artifact ends.
         enum Next {
@@ -833,6 +835,7 @@ impl Codec for TringCodec {
         cfg: &CodecConfig,
     ) -> Result<Appended> {
         check_append_shapes(&artifact.meta().shape, slices, axis)?;
+        check_bounded_append(artifact.as_ref(), budget)?;
         let outcome = match artifact
             .as_any_mut()
             .and_then(|a| a.downcast_mut::<TrArtifact>())

@@ -161,6 +161,36 @@ pub trait Artifact: Send {
     fn decode_many_calls(&self) -> u64 {
         0
     }
+    /// Decode the axis-aligned block `[lo, lo + dims)` in row-major order,
+    /// appending one value per cell to `out` — the tile-decode primitive
+    /// behind the serving tile cache ([`crate::store::tilecache`]).
+    ///
+    /// The default enumerates the block and routes through
+    /// [`Artifact::decode_many`]; artifacts with a cheaper tile-contiguous
+    /// evaluator override it (the neural decoder folds the block without
+    /// materialising coordinate vectors, the coded artifacts copy rows
+    /// straight out of their dense decode cache). Overrides must stay
+    /// bit-identical to `get`/`decode_many` on the same cells: the cache
+    /// serves cached and freshly-decoded values interchangeably, and the
+    /// determinism suite sweeps both paths.
+    fn decode_block(&mut self, lo: &[usize], dims: &[usize], out: &mut Vec<f32>) {
+        let n: usize = dims.iter().product();
+        let d = lo.len();
+        debug_assert_eq!(dims.len(), d);
+        let mut coords = Vec::with_capacity(n);
+        let mut idx = lo.to_vec();
+        for _ in 0..n {
+            coords.push(idx.clone());
+            for k in (0..d).rev() {
+                idx[k] += 1;
+                if idx[k] < lo[k] + dims[k] {
+                    break;
+                }
+                idx[k] = lo[k];
+            }
+        }
+        self.decode_many(&coords, out);
+    }
     /// Approximate bytes this artifact holds resident while serving
     /// queries — what a cache byte budget should charge. Defaults to the
     /// compressed size; artifacts that materialise a dense decode on
@@ -251,6 +281,29 @@ pub(crate) fn check_append_shapes(
     Ok(())
 }
 
+/// Guard every append path against silently weakening an error-bounded
+/// artifact. Appending to a `.tcz` v4 artifact rebuilds the residual side
+/// channel against the *extended* tensor — whose old range is the bounded
+/// decode, itself already up to `bound` away from the original data — so
+/// the rebuilt guarantee is relative to that extended tensor, not the
+/// original truth. The caller must opt in with an explicit
+/// `Budget::MaxError`; any other budget fails loudly here instead of
+/// re-saving a container whose `max_error` header no longer means what it
+/// did.
+pub(crate) fn check_bounded_append(artifact: &dyn Artifact, budget: &Budget) -> Result<()> {
+    if let Some(b) = artifact.as_bounded() {
+        if !matches!(budget, Budget::MaxError(_)) {
+            anyhow::bail!(
+                "appending to an error-bounded artifact (bound {bound}) rebuilds its residual \
+                 side channel against the extended tensor; re-run with --budget-max-error \
+                 {bound} (or pass Budget::MaxError) to confirm the bound",
+                bound = b.bound()
+            );
+        }
+    }
+    Ok(())
+}
+
 /// The universal append fallback: decode the artifact, concatenate the
 /// new slices along `axis`, recompress from scratch at `budget`, and
 /// replace the artifact. Works for every codec that can compress.
@@ -322,6 +375,7 @@ pub trait Codec: Sync {
         cfg: &CodecConfig,
     ) -> Result<Appended> {
         check_append_shapes(&artifact.meta().shape, slices, axis)?;
+        check_bounded_append(artifact.as_ref(), budget)?;
         append_by_recompress(self, artifact, slices, axis, budget, cfg)
     }
 

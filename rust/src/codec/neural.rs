@@ -3,8 +3,8 @@
 //! the shared pure-Rust/XLA machinery.
 
 use super::{
-    append_by_recompress, check_append_shapes, Appended, Artifact, ArtifactMeta, Budget, Codec,
-    CodecConfig,
+    append_by_recompress, check_append_shapes, check_bounded_append, Appended, Artifact,
+    ArtifactMeta, Budget, Codec, CodecConfig,
 };
 use crate::baselines::neukron;
 use crate::compress::format::encode_model;
@@ -76,12 +76,36 @@ impl Artifact for NeuralArtifact {
         self.bulk_calls
     }
 
+    fn decode_block(&mut self, lo: &[usize], dims: &[usize], out: &mut Vec<f32>) {
+        self.bulk_calls += 1;
+        self.dec.get_block(lo, dims, out);
+    }
+
     fn decode_all(&mut self) -> DenseTensor {
         self.dec.reconstruct_all()
     }
 
     fn size_bytes(&self) -> usize {
         self.dec.model.reported_size_bytes()
+    }
+
+    fn resident_bytes(&self) -> usize {
+        // What the decoder actually holds in RAM: parameters widened to
+        // f32 regardless of the on-disk dtype, plus both permutation
+        // tables (the orderings and their inverses) as machine words.
+        // The paper-accounting `size_bytes` (f16 params, bit-packed
+        // permutations) would undercharge a serving LRU ~4× and let it
+        // keep more artifacts resident than its budget says.
+        let params = self.dec.model.params.num_params() * std::mem::size_of::<f32>();
+        let perms: usize = self
+            .dec
+            .model
+            .spec
+            .orig_shape
+            .iter()
+            .map(|&n| n * std::mem::size_of::<usize>())
+            .sum();
+        self.size_bytes().max(params + 2 * perms)
     }
 
     fn meta(&self) -> ArtifactMeta {
@@ -209,6 +233,7 @@ impl Codec for TensorCodecCodec {
         cfg: &CodecConfig,
     ) -> Result<Appended> {
         check_append_shapes(&artifact.meta().shape, slices, axis)?;
+        check_bounded_append(artifact.as_ref(), budget)?;
         // clone out of the borrow so the fallback can reuse `artifact`
         let Some(mut model) = artifact.as_model().cloned() else {
             return append_by_recompress(self, artifact, slices, axis, budget, cfg);

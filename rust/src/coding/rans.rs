@@ -32,6 +32,7 @@
 //! construction.
 
 use super::{BitReader, BitWriter};
+use crate::util::fnv1a;
 use anyhow::{bail, Result};
 
 /// Frequency scale: all tables are normalised to sum to `1 << SCALE_BITS`.
@@ -43,15 +44,6 @@ const RANS_L: u32 = 1 << 23;
 const N_STREAMS: usize = 4;
 /// Bits per dense-table entry (frequencies go up to `SCALE` inclusive).
 const DENSE_BITS: u32 = 13;
-
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
 
 /// Normalise raw counts to frequencies summing exactly to `SCALE`, every
 /// present symbol getting at least 1. Deterministic: rounding corrections

@@ -14,7 +14,7 @@ pub mod format;
 const FOLD_GRAIN: usize = 512;
 
 use crate::config::ParamDtype;
-use crate::nttd::infer::{forward_one, InferScratch, LockstepScratch};
+use crate::nttd::infer::{forward_one, lockstep_block, InferScratch, LockstepScratch};
 use crate::nttd::ModelParams;
 use crate::reorder::Orders;
 use crate::tensor::{DenseTensor, FoldSpec};
@@ -170,7 +170,7 @@ impl Decompressor {
         }
         let base = out.len();
         out.resize(base + n, 0.0);
-        decode_digit_block(
+        lockstep_block(
             &self.model.params,
             self.model.mean,
             self.model.std,
@@ -219,7 +219,7 @@ impl Decompressor {
                     idx[k] = 0;
                 }
             }
-            decode_digit_block(
+            lockstep_block(
                 &self.model.params,
                 self.model.mean,
                 self.model.std,
@@ -233,57 +233,66 @@ impl Decompressor {
         }
         out
     }
-}
 
-/// Shared bulk-decode core: sort `n = out.len()` digit strings, split the
-/// sorted order at shared-prefix boundaries, and decode each chunk on
-/// the kernel pool through the lockstep engine — one reusable
-/// [`LockstepScratch`] per chunk, results scattered into `out` in row
-/// order. Bit-identical to running `forward_one` per row at every thread
-/// count and on every SIMD dispatch arm.
-#[allow(clippy::too_many_arguments)]
-fn decode_digit_block(
-    params: &ModelParams,
-    mean: f32,
-    std: f32,
-    digits: &[i32],
-    dp: usize,
-    order: &mut Vec<usize>,
-    lanes: &mut Vec<LockstepScratch>,
-    out: &mut [f32],
-) {
-    let n = out.len();
-    debug_assert_eq!(digits.len(), n * dp);
-    order.clear();
-    order.extend(0..n);
-    order.sort_unstable_by(|&a, &b| {
-        digits[a * dp..(a + 1) * dp].cmp(&digits[b * dp..(b + 1) * dp])
-    });
-    let cuts = crate::codec::prefix_cuts(n, crate::codec::DECODE_GRAIN, |i| {
-        digits[order[i] * dp] != digits[order[i - 1] * dp]
-    });
-    let chunks = cuts.len() - 1;
-    while lanes.len() < chunks {
-        lanes.push(LockstepScratch::new(params));
+    /// Decode the axis-aligned block `[lo, lo + dims)` in row-major
+    /// order, appending one value per cell to `out` — the tile-decode
+    /// primitive behind the serving tile cache
+    /// (`crate::store::tilecache`). Folds the block through an odometer
+    /// without materialising per-cell coordinate vectors, then decodes
+    /// through the same lockstep core as [`Decompressor::get_many`],
+    /// reusing the decompressor's bulk scratch. Fold-aligned tiles keep
+    /// long shared digit prefixes, so the sorted chunks feed the prefix
+    /// cuts near-optimally. Bit-identical to per-entry
+    /// [`Decompressor::get`].
+    pub fn get_block(&mut self, lo: &[usize], dims: &[usize], out: &mut Vec<f32>) {
+        /// Entries folded + decoded per internal block (bounds memory for
+        /// oversized tiles).
+        const BLOCK: usize = 1 << 15;
+        let dp = self.model.spec.dp;
+        let d = self.model.spec.d();
+        debug_assert_eq!(lo.len(), d);
+        debug_assert_eq!(dims.len(), d);
+        let n: usize = dims.iter().product();
+        let mut idx = lo.to_vec();
+        let mut reordered = vec![0usize; d];
+        out.reserve(n);
+        let mut done = 0usize;
+        while done < n {
+            let m = (n - done).min(BLOCK);
+            let digits = &mut self.bulk.digits;
+            digits.clear();
+            digits.resize(m * dp, 0);
+            for row in 0..m {
+                for (k, r) in reordered.iter_mut().enumerate() {
+                    *r = self.inverses[k][idx[k]];
+                }
+                self.model
+                    .spec
+                    .fold_index_i32(&reordered, &mut digits[row * dp..(row + 1) * dp]);
+                // odometer-increment within the block bounds
+                for k in (0..d).rev() {
+                    idx[k] += 1;
+                    if idx[k] < lo[k] + dims[k] {
+                        break;
+                    }
+                    idx[k] = lo[k];
+                }
+            }
+            let start = out.len();
+            out.resize(start + m, 0.0);
+            lockstep_block(
+                &self.model.params,
+                self.model.mean,
+                self.model.std,
+                digits,
+                dp,
+                &mut self.bulk.order,
+                &mut self.bulk.lanes,
+                &mut out[start..],
+            );
+            done += m;
+        }
     }
-    let optr = crate::kernels::SendPtr::new(out.as_mut_ptr());
-    let sptr = crate::kernels::SendPtr::new(lanes.as_mut_ptr());
-    let order = &*order;
-    crate::kernels::parallel_jobs(chunks, |c| {
-        // SAFETY: chunk `c` exclusively owns lanes[c].
-        let scratch = unsafe { &mut *sptr.add(c) };
-        crate::nttd::infer::lockstep_rows(
-            params,
-            digits,
-            &order[cuts[c]..cuts[c + 1]],
-            scratch,
-            |row, y| {
-                // SAFETY: `order` is a permutation — slot `row` is
-                // written by exactly one chunk.
-                unsafe { *optr.add(row) = mean + std * y };
-            },
-        );
-    });
 }
 
 /// Save/load round-trip is in [`format`]; re-exported here for callers.
@@ -379,6 +388,27 @@ mod tests {
         assert_eq!(bulk.len(), coords.len());
         for (c, &v) in coords.iter().zip(&bulk) {
             assert_eq!(v.to_bits(), d.get(c).to_bits(), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn get_block_bit_exact_with_get() {
+        let m = toy_model(5);
+        let mut d = Decompressor::new(m);
+        let lo = [3usize, 2, 1];
+        let dims = [5usize, 4, 3];
+        let mut block = Vec::new();
+        d.get_block(&lo, &dims, &mut block);
+        assert_eq!(block.len(), 60);
+        let mut i = 0;
+        for a in 0..dims[0] {
+            for b in 0..dims[1] {
+                for c in 0..dims[2] {
+                    let idx = [lo[0] + a, lo[1] + b, lo[2] + c];
+                    assert_eq!(block[i].to_bits(), d.get(&idx).to_bits(), "{idx:?}");
+                    i += 1;
+                }
+            }
         }
     }
 

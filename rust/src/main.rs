@@ -40,6 +40,7 @@ const VALUE_FLAGS: &[&str] = &[
     "axis",
     "dir",
     "cache-bytes",
+    "tile-cache-bytes",
     "index",
     "addr",
     "max-conns",
@@ -319,12 +320,20 @@ fn cmd_append(args: &Args) -> Result<()> {
         );
     }
     let ccfg = build_codec_config(args)?;
-    // Default budget: scale the artifact's current size with the growth
-    // ratio, so native appends stay native and the recompress fallback
-    // matches the original operating point.
-    let budget = match parse_budget(args)? {
-        Some(b) => b,
-        None => {
+    // Default budget: error-bounded artifacts keep their original
+    // pointwise bound (the append rebuilds the residual side channel
+    // against the extended tensor under it — any other budget class is an
+    // explicit error, see `check_bounded_append`); everything else scales
+    // the artifact's current size with the growth ratio, so native
+    // appends stay native and the recompress fallback matches the
+    // original operating point.
+    let budget = match (parse_budget(args)?, meta.max_error) {
+        (Some(b), _) => b,
+        (None, Some(bound)) => {
+            eprintln!("[tcz] bounded artifact: appending under its original bound {bound}");
+            Budget::MaxError(bound)
+        }
+        (None, None) => {
             let old_total: usize = meta.shape.iter().product();
             let new_total = old_total / meta.shape[axis].max(1)
                 * (meta.shape[axis] + slices.shape().get(axis).copied().unwrap_or(0));
@@ -459,6 +468,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .unwrap_or("1073741824")
                 .parse()
                 .context("cache-bytes")?,
+            // decoded-tile cache: flag first, then the TCZ_TILE_BYTES
+            // environment (0 = disabled)
+            tile_bytes: match args.get("tile-cache-bytes") {
+                Some(v) => v.parse().context("tile-cache-bytes")?,
+                None => tensorcodec::store::tilecache::TileCache::bytes_from_env(),
+            },
             allow_xla: !args.has("method-agnostic") && runtime_ready,
             max_conns,
         };
@@ -552,13 +567,19 @@ COMMANDS
               entry (any method): the lossy model is wrapped with a
               rANS-coded residual side channel in a .tcz v4 container.
   append      --model <m.tcz> --input <new.npy>|--dataset <name> [--axis 0]
-              [--budget-params N|--budget-bytes N] [--set k=v ...]
+              [--budget-params N|--budget-bytes N|--budget-max-error E]
+              [--set k=v ...]
               extends the artifact along --axis with the new slices (their
               shape must match on every other mode). TT/TR extend their
               cores incrementally (cost linear in the new entries; the
               .tcz becomes a v3 segmented container), TensorCodec
               warm-start fine-tunes, other codecs decode + recompress.
               Default budget: the current size scaled by the growth ratio.
+              Error-bounded (v4) artifacts default to their original bound
+              and the residual side channel is rebuilt against the
+              extended tensor; any non-max-error budget on them is
+              rejected (pass --budget-max-error explicitly to change the
+              bound).
   decompress  --model <m.tcz> --out <recon.npy> [--method <codec>]
   get         --model <m.tcz> --index i,j,k [--index ...] [--method <codec>]
   eval        --model <m.tcz> --dataset <name> [--scale ..] [--data-seed ..]
@@ -567,6 +588,10 @@ COMMANDS
   serve       --model <m.tcz> | --dir <artifacts-dir>
               [--addr 127.0.0.1:7070] [--method-agnostic] [--threads N]
               [--cache-bytes 1073741824]   # --dir: LRU byte budget
+              [--tile-cache-bytes N]       # --dir: decoded-tile cache
+              (also the TCZ_TILE_BYTES env var; 0 = off). Caches decoded,
+              fold-aligned tiles across requests; `stat` then reports
+              tile_hits/tile_misses/tile_bytes.
               [--max-batch 8192] [--max-wait-us 2000] [--max-conns 64]
               --model: line protocol v1 (one `i,j,k` per line)
               --dir:   protocol v2 (open/get/batch-get/stat/methods frames

@@ -568,6 +568,56 @@ pub fn forward_batch_with(
     forward_lockstep(p, idx, out, scratch);
 }
 
+/// The sort–split–lockstep bulk engine over a shared digit buffer: sort
+/// the `n = out.len()` digit strings lexicographically, split the sorted
+/// order at shared-leading-digit boundaries
+/// ([`crate::codec::prefix_cuts`]), and decode each chunk on the kernel
+/// pool through [`lockstep_rows`] — one reusable [`LockstepScratch`] per
+/// chunk, results denormalised (`mean + std·y`) and scattered into `out`
+/// in row order. The one decode core behind
+/// `Decompressor::{get_many, reconstruct_all, get_block}`, and therefore
+/// behind both the serving bulk shards and the tile cache's tile-order
+/// block decode. Bit-identical to [`forward_one`] per row at every
+/// thread count and on every SIMD dispatch arm.
+#[allow(clippy::too_many_arguments)]
+pub fn lockstep_block(
+    p: &ModelParams,
+    mean: f32,
+    std: f32,
+    digits: &[i32],
+    dp: usize,
+    order: &mut Vec<usize>,
+    lanes: &mut Vec<LockstepScratch>,
+    out: &mut [f32],
+) {
+    let n = out.len();
+    debug_assert_eq!(digits.len(), n * dp);
+    order.clear();
+    order.extend(0..n);
+    order.sort_unstable_by(|&a, &b| {
+        digits[a * dp..(a + 1) * dp].cmp(&digits[b * dp..(b + 1) * dp])
+    });
+    let cuts = crate::codec::prefix_cuts(n, crate::codec::DECODE_GRAIN, |i| {
+        digits[order[i] * dp] != digits[order[i - 1] * dp]
+    });
+    let chunks = cuts.len() - 1;
+    while lanes.len() < chunks {
+        lanes.push(LockstepScratch::new(p));
+    }
+    let optr = crate::kernels::SendPtr::new(out.as_mut_ptr());
+    let sptr = crate::kernels::SendPtr::new(lanes.as_mut_ptr());
+    let order = &*order;
+    crate::kernels::parallel_jobs(chunks, |c| {
+        // SAFETY: chunk `c` exclusively owns lanes[c].
+        let scratch = unsafe { &mut *sptr.add(c) };
+        lockstep_rows(p, digits, &order[cuts[c]..cuts[c + 1]], scratch, |row, y| {
+            // SAFETY: `order` is a permutation — slot `row` is written by
+            // exactly one chunk.
+            unsafe { *optr.add(row) = mean + std * y };
+        });
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -40,6 +40,7 @@
 
 use crate::coding::quantize::quantize_uniform;
 use crate::coding::rans::{rans_decode_capped, rans_encode};
+use crate::util::fnv1a;
 use anyhow::{anyhow, bail, Context, Result};
 
 /// Symbol alphabet of the plane streams; the top symbol escapes to a raw
@@ -54,15 +55,6 @@ const QUANT_MARGIN: f64 = 0.995;
 
 const KIND_SPARSE: u8 = 0;
 const KIND_DENSE: u8 = 1;
-
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
 
 fn zigzag(k: i64) -> u64 {
     ((k << 1) ^ (k >> 63)) as u64

@@ -26,6 +26,11 @@ pub struct RemoteMeta {
     /// Residual side-channel bytes (0 for plain artifacts; the model
     /// accounts for `bytes - side_bytes`).
     pub side_bytes: usize,
+    /// Server-wide decoded-tile cache counters, reported by `stat` when
+    /// the cache is enabled (all 0 otherwise).
+    pub tile_hits: u64,
+    pub tile_misses: u64,
+    pub tile_bytes: usize,
 }
 
 /// One connection to an artifact-store server.
@@ -135,6 +140,9 @@ fn parse_meta(body: &str) -> Result<RemoteMeta> {
     let mut generation = 0u64;
     let mut max_error = None;
     let mut side_bytes = 0usize;
+    let mut tile_hits = 0u64;
+    let mut tile_misses = 0u64;
+    let mut tile_bytes = 0usize;
     for field in body.split_whitespace() {
         let (k, v) = field
             .split_once('=')
@@ -153,6 +161,9 @@ fn parse_meta(body: &str) -> Result<RemoteMeta> {
             "generation" => generation = v.parse().context("bad generation")?,
             "max_error" => max_error = Some(v.parse::<f64>().context("bad max_error")?),
             "side_bytes" => side_bytes = v.parse().context("bad side_bytes")?,
+            "tile_hits" => tile_hits = v.parse().context("bad tile_hits")?,
+            "tile_misses" => tile_misses = v.parse().context("bad tile_misses")?,
+            "tile_bytes" => tile_bytes = v.parse().context("bad tile_bytes")?,
             _ => {} // forward-compatible: ignore unknown fields
         }
     }
@@ -164,5 +175,8 @@ fn parse_meta(body: &str) -> Result<RemoteMeta> {
         generation,
         max_error,
         side_bytes,
+        tile_hits,
+        tile_misses,
+        tile_bytes,
     })
 }

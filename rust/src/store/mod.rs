@@ -5,12 +5,17 @@
 //! models, queried concurrently) — instead of one pre-loaded artifact per
 //! server:
 //!
-//! * [`ArtifactStore`] — lazily loads `.tcz` v1/v2/v3 containers by name
-//!   from a directory and keeps them behind an LRU cache with a
-//!   configurable byte budget. `open` revalidates resident entries
-//!   against the file's mtime/length and hot-reloads changed containers
-//!   (bumping [`StoreEntry::generation`] and recharging the byte budget)
-//!   — the serving side of the streaming-append pipeline.
+//! * [`ArtifactStore`] — lazily loads `.tcz` containers by name from a
+//!   directory and keeps them behind an LRU cache with a configurable
+//!   byte budget. `open` revalidates resident entries against the file's
+//!   mtime/length/head-hash ([`FileStamp`]) and hot-reloads changed
+//!   containers (bumping [`StoreEntry::generation`] and recharging the
+//!   byte budget) — the serving side of the streaming-append pipeline.
+//! * [`tilecache::TileCache`] + [`planner`] — an optional second-level
+//!   LRU of *decoded*, fold-aligned tiles (`--tile-cache-bytes` /
+//!   `TCZ_TILE_BYTES`); the planner decomposes coordinate batches into
+//!   tile hits plus a batch-decoded miss list. Tiles are tagged with the
+//!   entry generation, so hot reloads invalidate them atomically.
 //! * [`shard::Shard`] — a per-artifact batch queue (reusing
 //!   [`crate::coordinator::batcher::BatchPolicy`]): point queries from
 //!   many connections coalesce into one `decode_many` bulk decode per
@@ -23,8 +28,10 @@
 //! * [`client::ServeClient`] — the matching protocol v2 client.
 
 pub mod client;
+pub mod planner;
 pub mod server;
 pub mod shard;
+pub mod tilecache;
 
 use crate::codec::{load_artifact, Artifact, ArtifactMeta};
 use anyhow::{bail, Context, Result};
@@ -33,20 +40,49 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// File identity at load time: mtime + length. A mismatch on a later
-/// `open` means the container changed on disk (e.g. `tcz append` replaced
-/// it) and triggers a hot reload.
+/// File identity at load time: mtime + length + a hash of the first
+/// 4 KiB. A mismatch on a later `open` means the container changed on
+/// disk (e.g. `tcz append` replaced it) and triggers a hot reload.
+///
+/// The head hash closes the mtime-granularity hole: a same-length rewrite
+/// landing within the filesystem's mtime resolution (whole seconds on
+/// some systems) is invisible to mtime+len alone, and a stale artifact
+/// would keep serving forever. Container headers — version, shape,
+/// segment count, payload lengths — all live in the head, so any
+/// structural change moves the hash.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct FileStamp {
     mtime: Option<std::time::SystemTime>,
     len: u64,
+    head_hash: u64,
 }
 
+/// Bytes of the file head covered by [`FileStamp::head_hash`].
+const STAMP_HEAD_BYTES: usize = 4096;
+
 fn file_stamp(path: &Path) -> Result<FileStamp> {
+    use std::io::Read;
     let md = std::fs::metadata(path).with_context(|| format!("stat {}", path.display()))?;
+    let mut f =
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut head = [0u8; STAMP_HEAD_BYTES];
+    let mut filled = 0usize;
+    loop {
+        let r = f
+            .read(&mut head[filled..])
+            .with_context(|| format!("read head of {}", path.display()))?;
+        if r == 0 {
+            break;
+        }
+        filled += r;
+        if filled == head.len() {
+            break;
+        }
+    }
     Ok(FileStamp {
         mtime: md.modified().ok(),
         len: md.len(),
+        head_hash: crate::util::fnv1a(&head[..filled]),
     })
 }
 
@@ -439,6 +475,80 @@ mod tests {
         let o3 = store.open("g").unwrap();
         assert!(!o3.reloaded);
         assert_eq!(o3.entry.generation, 1);
+    }
+
+    #[test]
+    fn stamp_catches_same_second_same_length_rewrite() {
+        let dir = store_dir("stamp_head");
+        let path = dir.join("s.bin");
+        std::fs::write(&path, vec![1u8; 512]).unwrap();
+        let s1 = file_stamp(&path).unwrap();
+        std::fs::write(&path, vec![2u8; 512]).unwrap();
+        let s2 = file_stamp(&path).unwrap();
+        assert_eq!(s1.len, s2.len);
+        // simulate an mtime within filesystem granularity: even with
+        // identical mtime and length, the head hash must tell them apart
+        let s2_same_second = FileStamp {
+            mtime: s1.mtime,
+            ..s2
+        };
+        assert_ne!(s1, s2_same_second, "head hash must catch the rewrite");
+    }
+
+    #[test]
+    fn same_length_rewrite_hot_reloads() {
+        let dir = store_dir("same_len_reload");
+        // two TT artifacts with the same shape and budget serialise to the
+        // same container length — only the coefficient payload differs
+        save(&dir, "r", "ttd", &[5, 4, 3], 21);
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        let o1 = store.open("r").unwrap();
+        let before = o1.entry.artifact.lock().unwrap().decode_all();
+        let len1 = std::fs::metadata(dir.join("r.tcz")).unwrap().len();
+        let tmp_dir = store_dir("same_len_reload_tmp");
+        save(&tmp_dir, "r", "ttd", &[5, 4, 3], 22);
+        let len2 = std::fs::metadata(tmp_dir.join("r.tcz")).unwrap().len();
+        assert_eq!(len1, len2, "rewrite must not change the container length");
+        std::fs::rename(tmp_dir.join("r.tcz"), dir.join("r.tcz")).unwrap();
+        let o2 = store.open("r").unwrap();
+        assert!(o2.reloaded, "same-length rewrite must hot-reload");
+        assert_eq!(o2.entry.generation, 1);
+        let after = o2.entry.artifact.lock().unwrap().decode_all();
+        assert_ne!(before.data(), after.data());
+    }
+
+    #[test]
+    fn bounded_artifacts_charge_their_side_channel_and_evict() {
+        let dir = store_dir("bounded_lru");
+        for (name, seed) in [("x", 31u64), ("y", 32u64)] {
+            let t = DenseTensor::random_uniform(&[6, 5, 4], seed);
+            let codec = codec::by_name("sz").unwrap();
+            let a = codec
+                .compress(&t, &Budget::MaxError(0.05), &CodecConfig::default())
+                .unwrap();
+            codec::save_artifact(&dir.join(format!("{name}.tcz")), a.as_ref()).unwrap();
+        }
+        let probe = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        let ox = probe.open("x").unwrap();
+        // the LRU charge must cover everything the artifact holds while
+        // serving — inner artifact, parsed correction plane, verbatim
+        // residual section — never just the container file length
+        let resident = ox.entry.artifact.lock().unwrap().resident_bytes();
+        assert!(
+            ox.entry.bytes >= resident,
+            "charged {} < resident {resident}",
+            ox.entry.bytes
+        );
+        let sx = ox.entry.bytes;
+        let sy = probe.open("y").unwrap().entry.bytes;
+        // a budget that fits either artifact alone but not both must
+        // actually evict; an undercharged entry would let both stay
+        let store = ArtifactStore::new(&dir, sx.max(sy)).unwrap();
+        store.open("x").unwrap();
+        let o = store.open("y").unwrap();
+        assert_eq!(o.evicted, vec!["x".to_string()]);
+        assert_eq!(store.resident_count(), 1);
+        assert!(store.resident_bytes() <= sx.max(sy));
     }
 
     #[test]

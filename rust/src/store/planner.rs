@@ -1,0 +1,267 @@
+//! Subtensor query planner: decompose point/block/slice coordinate
+//! batches into tile-cache hits plus a miss list, batch-decode the
+//! misses through [`crate::codec::Artifact::decode_block`], and insert
+//! the decoded tiles back into the cache.
+//!
+//! Tiles are *fold-aligned*: trailing tensor modes are covered
+//! whole-extent first (up to [`TILE_TARGET_ENTRIES`]), leading modes get
+//! extent 1. Each tile is then a contiguous row-major run whose cells
+//! share their leading coordinates — exactly the shape the neural
+//! lockstep engine sorts into long shared-digit-prefix chunks, and the
+//! shape the dense-cache codecs copy out with straight `memcpy`s.
+//!
+//! The planner runs on the shard worker thread, so per-artifact decode
+//! order stays deterministic and the artifact mutex is taken once per
+//! batch, exactly like the direct `decode_many` path it replaces.
+
+use super::tilecache::{TileCache, TileKey, TILE_TARGET_ENTRIES};
+use crate::codec::Artifact;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// A fold-aligned tiling of a tensor shape (see the module docs for the
+/// alignment rule). Edge tiles are clipped to the tensor bounds, so every
+/// cell belongs to exactly one tile.
+#[derive(Debug, Clone)]
+pub struct Tiling {
+    shape: Vec<usize>,
+    /// Tile extent per mode (uncut; edge tiles may be smaller).
+    dims: Vec<usize>,
+    /// Row-major strides over the tile grid.
+    grid_strides: Vec<usize>,
+    n_tiles: usize,
+}
+
+impl Tiling {
+    /// Tile `shape` with roughly `target_entries` cells per tile.
+    pub fn new(shape: &[usize], target_entries: usize) -> Tiling {
+        let d = shape.len();
+        let mut dims = vec![1usize; d];
+        let mut cap = target_entries.max(1);
+        for k in (0..d).rev() {
+            let take = shape[k].min(cap).max(1);
+            dims[k] = take;
+            cap /= take;
+        }
+        let grid: Vec<usize> = shape
+            .iter()
+            .zip(&dims)
+            .map(|(&n, &t)| n.div_ceil(t).max(1))
+            .collect();
+        let mut grid_strides = vec![1usize; d];
+        for k in (0..d.saturating_sub(1)).rev() {
+            grid_strides[k] = grid_strides[k + 1] * grid[k + 1];
+        }
+        let n_tiles = grid.iter().product();
+        Tiling {
+            shape: shape.to_vec(),
+            dims,
+            grid_strides,
+            n_tiles,
+        }
+    }
+
+    /// Default tiling for serving: [`TILE_TARGET_ENTRIES`] cells per tile.
+    pub fn for_shape(shape: &[usize]) -> Tiling {
+        Tiling::new(shape, TILE_TARGET_ENTRIES)
+    }
+
+    /// Tile extents per mode (test/inspection hook).
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Total tiles covering the tensor.
+    pub fn n_tiles(&self) -> usize {
+        self.n_tiles
+    }
+
+    /// The tile containing `coords`.
+    pub fn tile_of(&self, coords: &[usize]) -> u64 {
+        debug_assert_eq!(coords.len(), self.dims.len());
+        coords
+            .iter()
+            .zip(&self.dims)
+            .zip(&self.grid_strides)
+            .map(|((&c, &t), &s)| (c / t) as u64 * s as u64)
+            .sum()
+    }
+
+    /// Origin and (edge-clipped) extents of tile `tile`.
+    pub fn tile_bounds(&self, tile: u64) -> (Vec<usize>, Vec<usize>) {
+        let d = self.shape.len();
+        debug_assert!((tile as usize) < self.n_tiles);
+        let mut lo = vec![0usize; d];
+        let mut ext = vec![0usize; d];
+        let mut rem = tile as usize;
+        for k in 0..d {
+            let g = rem / self.grid_strides[k];
+            rem %= self.grid_strides[k];
+            lo[k] = g * self.dims[k];
+            ext[k] = self.dims[k].min(self.shape[k] - lo[k]);
+        }
+        (lo, ext)
+    }
+
+    /// Offset of `coords` within its tile's row-major value block (the
+    /// strides use the owning tile's *clipped* extents, so edge tiles
+    /// index correctly).
+    pub fn offset_in_tile(&self, coords: &[usize]) -> usize {
+        let d = self.shape.len();
+        let mut off = 0usize;
+        let mut stride = 1usize;
+        for k in (0..d).rev() {
+            let lo = (coords[k] / self.dims[k]) * self.dims[k];
+            let ext = self.dims[k].min(self.shape[k] - lo);
+            off += (coords[k] - lo) * stride;
+            stride *= ext;
+        }
+        off
+    }
+}
+
+/// Answer a coordinate batch through the tile cache: look each distinct
+/// tile up once, batch-decode the misses in ascending tile order under a
+/// single artifact lock, insert them, and scatter the answers out in
+/// request order. Appends `coords.len()` values to `out`, exactly like
+/// `decode_many`.
+///
+/// Bit-identity with the uncached path holds by the `decode_block`
+/// contract; for bounded artifacts the corrections are applied inside
+/// `decode_block`, so cached tiles already satisfy the pointwise bound.
+pub fn decode_via_tiles(
+    cache: &TileCache,
+    tiling: &Tiling,
+    name: &str,
+    generation: u64,
+    artifact: &Mutex<Box<dyn Artifact>>,
+    coords: &[Vec<usize>],
+    out: &mut Vec<f32>,
+) {
+    let mut tiles: HashMap<u64, Option<Arc<Vec<f32>>>> = HashMap::new();
+    let mut owner = Vec::with_capacity(coords.len());
+    for c in coords {
+        let t = tiling.tile_of(c);
+        owner.push(t);
+        tiles.entry(t).or_insert_with(|| {
+            cache.get(&TileKey {
+                name: name.to_string(),
+                generation,
+                tile: t,
+            })
+        });
+    }
+    let mut missing: Vec<u64> = tiles
+        .iter()
+        .filter(|(_, v)| v.is_none())
+        .map(|(&t, _)| t)
+        .collect();
+    missing.sort_unstable();
+    if !missing.is_empty() {
+        let mut art = artifact.lock().expect("artifact lock");
+        for &t in &missing {
+            let (lo, ext) = tiling.tile_bounds(t);
+            let mut vals = Vec::new();
+            art.decode_block(&lo, &ext, &mut vals);
+            debug_assert_eq!(vals.len(), ext.iter().product::<usize>());
+            let vals = Arc::new(vals);
+            cache.insert(
+                TileKey {
+                    name: name.to_string(),
+                    generation,
+                    tile: t,
+                },
+                Arc::clone(&vals),
+            );
+            tiles.insert(t, Some(vals));
+        }
+    }
+    out.reserve(coords.len());
+    for (c, t) in coords.iter().zip(&owner) {
+        let vals = tiles[t].as_ref().expect("tile decoded");
+        out.push(vals[tiling.offset_in_tile(c)]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{by_name, Budget, CodecConfig};
+    use crate::tensor::DenseTensor;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn tiling_fills_trailing_modes_first() {
+        let t = Tiling::new(&[100, 50, 40], 4096);
+        assert_eq!(t.dims(), &[2, 50, 40]);
+        assert_eq!(t.n_tiles(), 50);
+        let t = Tiling::new(&[7], 4096);
+        assert_eq!(t.dims(), &[7]);
+        assert_eq!(t.n_tiles(), 1);
+    }
+
+    #[test]
+    fn every_cell_maps_into_its_tile_bounds() {
+        let shape = [7usize, 5, 6];
+        let t = Tiling::new(&shape, 16);
+        let mut per_tile_seen = vec![0usize; t.n_tiles()];
+        for a in 0..shape[0] {
+            for b in 0..shape[1] {
+                for c in 0..shape[2] {
+                    let coords = [a, b, c];
+                    let tile = t.tile_of(&coords);
+                    let (lo, ext) = t.tile_bounds(tile);
+                    for k in 0..3 {
+                        assert!(lo[k] <= coords[k] && coords[k] < lo[k] + ext[k]);
+                    }
+                    let off = t.offset_in_tile(&coords);
+                    assert!(off < ext.iter().product::<usize>());
+                    per_tile_seen[tile as usize] += 1;
+                }
+            }
+        }
+        // the tiles partition the tensor exactly
+        let total: usize = per_tile_seen.iter().sum();
+        assert_eq!(total, shape.iter().product::<usize>());
+        for tile in 0..t.n_tiles() {
+            let (_, ext) = t.tile_bounds(tile as u64);
+            assert_eq!(per_tile_seen[tile], ext.iter().product::<usize>());
+        }
+    }
+
+    #[test]
+    fn decode_via_tiles_is_bit_identical_and_caches() {
+        let truth = DenseTensor::random_uniform(&[9, 8, 7], 11);
+        let codec = by_name("ttd").unwrap();
+        let mut reference = codec
+            .compress(&truth, &Budget::Params(300), &CodecConfig::default())
+            .unwrap();
+        let artifact = Mutex::new(
+            codec
+                .compress(&truth, &Budget::Params(300), &CodecConfig::default())
+                .unwrap(),
+        );
+        let tiling = Tiling::new(&[9, 8, 7], 32);
+        let cache = TileCache::new(1 << 20);
+        let mut rng = Pcg64::seeded(7);
+        let coords: Vec<Vec<usize>> = (0..300)
+            .map(|_| vec![rng.below(9), rng.below(8), rng.below(7)])
+            .collect();
+        let mut want = Vec::new();
+        reference.decode_many(&coords, &mut want);
+        for pass in 0..2 {
+            let mut got = Vec::new();
+            decode_via_tiles(&cache, &tiling, "a", 0, &artifact, &coords, &mut got);
+            assert_eq!(got.len(), want.len());
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "pass {pass}, coord {i}");
+            }
+        }
+        // the second pass was answered from cache: no new misses
+        assert!(cache.tile_hits() > 0);
+        let misses_after_two_passes = cache.tile_misses();
+        let mut again = Vec::new();
+        decode_via_tiles(&cache, &tiling, "a", 0, &artifact, &coords, &mut again);
+        assert_eq!(cache.tile_misses(), misses_after_two_passes);
+    }
+}

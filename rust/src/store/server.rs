@@ -18,7 +18,10 @@
 //! open <artifact>                  -> OK method=<m> shape=<i,j,k> bytes=<n> bulk=<true|false>
 //!                                     generation=<g>
 //! stat <artifact>                  -> same reply as open (starts no shard, never
-//!                                     loads into or evicts from the LRU cache)
+//!                                     loads into or evicts from the LRU cache);
+//!                                     with the tile cache enabled, appends
+//!                                     tile_hits=<n> tile_misses=<n> tile_bytes=<n>
+//!                                     (server-wide decoded-tile cache counters)
 //! reload <artifact>                -> same reply as open; additionally forces a
 //!                                     revalidation against the file on disk
 //! get <artifact> <i,j,k>           -> OK <value>
@@ -40,6 +43,7 @@
 //! reload notification path is an explicit `open`/`reload` frame.
 
 use super::shard::Shard;
+use super::tilecache::TileCache;
 use super::ArtifactStore;
 use crate::codec::{self, ArtifactMeta};
 use crate::coordinator::batcher::BatchPolicy;
@@ -55,6 +59,10 @@ pub struct StoreServeConfig {
     pub policy: BatchPolicy,
     /// LRU byte budget for resident artifacts.
     pub cache_bytes: usize,
+    /// Byte budget for the decoded-tile cache
+    /// ([`super::tilecache::TileCache`]); `0` disables it and the bulk
+    /// shards decode every batch directly.
+    pub tile_bytes: usize,
     /// Route neural artifacts through the XLA-batched server (requires the
     /// AOT artifacts; the CLI gates this on the runtime manifest).
     pub allow_xla: bool,
@@ -67,6 +75,7 @@ impl Default for StoreServeConfig {
         StoreServeConfig {
             policy: BatchPolicy::default(),
             cache_bytes: 1 << 30,
+            tile_bytes: TileCache::bytes_from_env(),
             allow_xla: false,
             max_conns: 64,
         }
@@ -78,15 +87,31 @@ pub struct ArtifactServer {
     store: ArtifactStore,
     policy: BatchPolicy,
     allow_xla: bool,
+    /// Server-wide decoded-tile cache shared by all bulk shards (`None` =
+    /// disabled).
+    tiles: Option<Arc<TileCache>>,
     shards: Mutex<HashMap<String, Arc<Shard>>>,
 }
 
 impl ArtifactServer {
+    /// Tile-cache budget from the `TCZ_TILE_BYTES` environment (0 =
+    /// disabled); use [`ArtifactServer::with_tile_bytes`] for an explicit
+    /// budget.
     pub fn new(store: ArtifactStore, policy: BatchPolicy, allow_xla: bool) -> ArtifactServer {
+        ArtifactServer::with_tile_bytes(store, policy, allow_xla, TileCache::bytes_from_env())
+    }
+
+    pub fn with_tile_bytes(
+        store: ArtifactStore,
+        policy: BatchPolicy,
+        allow_xla: bool,
+        tile_bytes: usize,
+    ) -> ArtifactServer {
         ArtifactServer {
             store,
             policy,
             allow_xla,
+            tiles: (tile_bytes > 0).then(|| Arc::new(TileCache::new(tile_bytes))),
             shards: Mutex::new(HashMap::new()),
         }
     }
@@ -94,6 +119,14 @@ impl ArtifactServer {
     /// The backing store (test/introspection hook).
     pub fn store(&self) -> &ArtifactStore {
         &self.store
+    }
+
+    /// `(tile_hits, tile_misses, tile_bytes)` of the decoded-tile cache;
+    /// `None` when the cache is disabled.
+    pub fn tile_stats(&self) -> Option<(u64, u64, usize)> {
+        self.tiles
+            .as_ref()
+            .map(|t| (t.tile_hits(), t.tile_misses(), t.tile_bytes()))
     }
 
     /// The shard for `name`, starting it (and loading the artifact) on
@@ -141,7 +174,19 @@ impl ArtifactServer {
             }
             shards.remove(name); // evicted or old generation
         }
-        let shard = Arc::new(Shard::start(opened.entry, &self.policy, self.allow_xla)?);
+        if reloaded {
+            if let Some(tiles) = &self.tiles {
+                // stale-generation tiles are already unaddressable (the
+                // key carries the generation); free their bytes now
+                tiles.purge_stale(name, opened.entry.generation);
+            }
+        }
+        let shard = Arc::new(Shard::start(
+            opened.entry,
+            &self.policy,
+            self.allow_xla,
+            self.tiles.clone(),
+        )?);
         if self
             .store
             .peek(name)
@@ -306,6 +351,14 @@ fn dispatch_frame(server: &ArtifactServer, line: &str, out: &mut String) -> Resu
             }
             let (meta, bulk) = server.stat(rest)?;
             write_meta_reply(out, &meta, bulk);
+            // server-wide tile-cache counters (omitted when disabled;
+            // clients parse unknown fields forward-compatibly)
+            if let Some((hits, misses, bytes)) = server.tile_stats() {
+                let _ = write!(
+                    out,
+                    " tile_hits={hits} tile_misses={misses} tile_bytes={bytes}"
+                );
+            }
         }
         "get" => {
             let (name, coords) = rest
@@ -357,7 +410,12 @@ pub fn serve_store_listener(
 ) -> Result<()> {
     use std::io::{BufRead, BufReader, Write};
     let store = ArtifactStore::new(dir, cfg.cache_bytes)?;
-    let server = Arc::new(ArtifactServer::new(store, cfg.policy, cfg.allow_xla));
+    let server = Arc::new(ArtifactServer::with_tile_bytes(
+        store,
+        cfg.policy,
+        cfg.allow_xla,
+        cfg.tile_bytes,
+    ));
     let mut workers = Vec::new();
     for conn in listener.incoming().take(cfg.max_conns) {
         let stream = conn?;

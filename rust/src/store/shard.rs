@@ -12,6 +12,8 @@
 //! bottleneck. Neural artifacts ride the XLA-batched [`DecodeServer`]
 //! instead when the AOT artifacts are available.
 
+use super::planner::{decode_via_tiles, Tiling};
+use super::tilecache::TileCache;
 use super::StoreEntry;
 use crate::coordinator::batcher::{
     flatten_batch, next_batch, reply_batch, request_block, request_channel, request_one,
@@ -51,11 +53,22 @@ pub struct BulkShard {
 
 impl BulkShard {
     /// Spawn the shard worker. The worker owns a clone of the entry `Arc`,
-    /// so store eviction never interrupts a decode in flight.
-    pub fn start(entry: Arc<StoreEntry>, policy: BatchPolicy) -> Result<BulkShard> {
+    /// so store eviction never interrupts a decode in flight. With a tile
+    /// cache, each flushed batch is answered through the query planner
+    /// ([`decode_via_tiles`]): cached fold-aligned tiles first, one
+    /// `decode_block` per missing tile — still on this worker thread, so
+    /// decode order per artifact stays deterministic.
+    pub fn start(
+        entry: Arc<StoreEntry>,
+        policy: BatchPolicy,
+        tiles: Option<Arc<TileCache>>,
+    ) -> Result<BulkShard> {
         let (tx, rx) = request_channel(&policy);
         let stop = Arc::new(AtomicBool::new(false));
         let stop_worker = stop.clone();
+        let tiling = tiles
+            .as_ref()
+            .map(|_| Tiling::for_shape(&entry.meta.shape));
         let handle = std::thread::Builder::new()
             .name(format!("tcz-shard-{}", entry.name))
             .spawn(move || -> u64 {
@@ -64,15 +77,26 @@ impl BulkShard {
                 while let Some(batch) = next_batch(&rx, &policy, &stop_worker) {
                     let coords = flatten_batch(&batch);
                     values.clear();
-                    // decode_many runs the batch on the kernel pool (the
-                    // chain evaluators split it at shared-prefix
-                    // boundaries) — this worker just assembles and fans
-                    // replies back out
-                    entry
-                        .artifact
-                        .lock()
-                        .expect("artifact lock")
-                        .decode_many(&coords, &mut values);
+                    match (&tiles, &tiling) {
+                        (Some(cache), Some(tiling)) => decode_via_tiles(
+                            cache,
+                            tiling,
+                            &entry.name,
+                            entry.generation,
+                            &entry.artifact,
+                            &coords,
+                            &mut values,
+                        ),
+                        // decode_many runs the batch on the kernel pool
+                        // (the chain evaluators split it at shared-prefix
+                        // boundaries) — this worker just assembles and
+                        // fans replies back out
+                        _ => entry
+                            .artifact
+                            .lock()
+                            .expect("artifact lock")
+                            .decode_many(&coords, &mut values),
+                    }
                     batches += 1;
                     reply_batch(batch, &values);
                 }
@@ -116,8 +140,16 @@ impl Shard {
     /// Start the right shard kind for `entry`. `allow_xla` gates the
     /// neural fast path (the caller checks that the AOT runtime manifest
     /// exists); everything else — and neural artifacts without a runtime —
-    /// uses the bulk queue over the artifact's own `decode_many`.
-    pub fn start(entry: Arc<StoreEntry>, policy: &BatchPolicy, allow_xla: bool) -> Result<Shard> {
+    /// uses the bulk queue over the artifact's own `decode_many`. `tiles`
+    /// is the server-wide decoded-tile cache (`None` = direct decode);
+    /// XLA shards bypass it — their batches never touch the artifact's
+    /// decode path.
+    pub fn start(
+        entry: Arc<StoreEntry>,
+        policy: &BatchPolicy,
+        allow_xla: bool,
+        tiles: Option<Arc<TileCache>>,
+    ) -> Result<Shard> {
         if allow_xla {
             let model = entry
                 .artifact
@@ -133,7 +165,7 @@ impl Shard {
                 });
             }
         }
-        let shard = BulkShard::start(entry.clone(), policy.clone())?;
+        let shard = BulkShard::start(entry.clone(), policy.clone(), tiles)?;
         Ok(Shard {
             entry,
             kind: ShardKind::Bulk(shard),

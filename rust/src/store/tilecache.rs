@@ -1,0 +1,280 @@
+//! Decoded-tile cache: a byte-budgeted LRU of fold-aligned tiles layered
+//! on top of the artifact-level LRU in [`super::ArtifactStore`].
+//!
+//! The artifact store bounds how many *models* stay resident; this cache
+//! bounds how many *decoded values* do. A hot key set served through the
+//! bulk shards re-runs the chain evaluators on every request — for a
+//! Zipfian workload most of that work decodes the same few tiles over and
+//! over. The planner ([`super::planner`]) answers those requests from
+//! cached tiles and batch-decodes only the misses.
+//!
+//! Correctness rules:
+//!
+//! - **Generation tagging.** Every key carries the artifact's hot-reload
+//!   generation ([`super::StoreEntry::generation`]). A reload bumps the
+//!   generation, so lookups for the new artifact can never hit a tile
+//!   decoded from the old one — invalidation is atomic by construction,
+//!   with no flush window. [`TileCache::purge_stale`] additionally frees
+//!   the stale bytes eagerly; correctness never depends on it.
+//! - **Bit-identity.** Tiles are decoded through
+//!   [`crate::codec::Artifact::decode_block`], whose contract is
+//!   bit-identity with `get`/`decode_many`; for error-bounded artifacts
+//!   the residual corrections are applied *inside* `decode_block`, so a
+//!   cached tile already satisfies the pointwise bound.
+//!
+//! The budget comes from `--tile-cache-bytes` (or the `TCZ_TILE_BYTES`
+//! environment variable); `0` disables the cache entirely and the shards
+//! keep their direct `decode_many` path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Target decoded entries per tile (see [`super::planner::Tiling`]): big
+/// enough that the lockstep engine amortises its sort + prefix cuts,
+/// small enough that point lookups don't decode far past what they need.
+pub const TILE_TARGET_ENTRIES: usize = 4096;
+
+/// Cache key. The generation tag makes hot-reload invalidation atomic:
+/// tiles of a replaced artifact simply stop being addressable.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TileKey {
+    pub name: String,
+    pub generation: u64,
+    pub tile: u64,
+}
+
+struct CachedTile {
+    values: Arc<Vec<f32>>,
+    last_used: u64,
+}
+
+/// Per-tile charge beyond the values themselves: key strings, hash-map
+/// slot, and bookkeeping. An estimate — the budget is a guardrail, not an
+/// allocator ledger.
+const TILE_OVERHEAD: usize = 96;
+
+fn cost_of(values: &[f32], name: &str) -> usize {
+    values.len() * std::mem::size_of::<f32>() + name.len() + TILE_OVERHEAD
+}
+
+struct CacheInner {
+    map: HashMap<TileKey, CachedTile>,
+    /// Sum of [`cost_of`] over resident tiles.
+    bytes: usize,
+}
+
+/// Byte-budgeted LRU of decoded tiles, shared by every shard of an
+/// [`super::server::ArtifactServer`]. Values are `Arc`ed so a hit hands
+/// out a reference without copying the tile and eviction never
+/// invalidates an in-flight read.
+pub struct TileCache {
+    budget: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inner: Mutex<CacheInner>,
+}
+
+impl TileCache {
+    pub fn new(budget_bytes: usize) -> TileCache {
+        TileCache {
+            budget: budget_bytes,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                bytes: 0,
+            }),
+        }
+    }
+
+    /// The `TCZ_TILE_BYTES` environment default for callers without an
+    /// explicit knob (`0` = disabled).
+    pub fn bytes_from_env() -> usize {
+        std::env::var("TCZ_TILE_BYTES")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(0)
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Look up one tile; counts a hit or a miss (per tile lookup, not per
+    /// coordinate — the planner looks each distinct tile up once per
+    /// batch).
+    pub fn get(&self, key: &TileKey) -> Option<Arc<Vec<f32>>> {
+        let now = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut inner = self.inner.lock().expect("tile cache lock");
+        match inner.map.get_mut(key) {
+            Some(t) => {
+                t.last_used = now;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&t.values))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly decoded tile, evicting least-recently-used tiles
+    /// until the budget holds. A tile larger than the whole budget is not
+    /// cached (it would evict everything for one entry's benefit).
+    pub fn insert(&self, key: TileKey, values: Arc<Vec<f32>>) {
+        let cost = cost_of(&values, &key.name);
+        if cost > self.budget {
+            return;
+        }
+        let name_len = key.name.len();
+        let now = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut inner = self.inner.lock().expect("tile cache lock");
+        if let Some(old) = inner.map.insert(
+            key,
+            CachedTile {
+                values,
+                last_used: now,
+            },
+        ) {
+            // racing shards can decode the same missing tile; a replace
+            // credits the old charge back before the new one lands
+            inner.bytes -=
+                old.values.len() * std::mem::size_of::<f32>() + name_len + TILE_OVERHEAD;
+        }
+        inner.bytes += cost;
+        while inner.bytes > self.budget {
+            let Some(victim) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, t)| t.last_used)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            if let Some(t) = inner.map.remove(&victim) {
+                inner.bytes -= cost_of(&t.values, &victim.name);
+            }
+        }
+    }
+
+    /// Free every tile of `name` whose generation is older than
+    /// `generation` — called after a hot reload installs a new shard.
+    /// Purely a memory optimisation: stale generations are already
+    /// unaddressable, this just returns their bytes to the budget now
+    /// instead of at eviction time.
+    pub fn purge_stale(&self, name: &str, generation: u64) {
+        let mut inner = self.inner.lock().expect("tile cache lock");
+        let stale: Vec<TileKey> = inner
+            .map
+            .keys()
+            .filter(|k| k.name == name && k.generation < generation)
+            .cloned()
+            .collect();
+        for k in stale {
+            if let Some(t) = inner.map.remove(&k) {
+                inner.bytes -= cost_of(&t.values, &k.name);
+            }
+        }
+    }
+
+    /// Lifetime hit count (tile lookups that found a cached tile).
+    pub fn tile_hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime miss count (tile lookups that forced a block decode).
+    pub fn tile_misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Bytes currently charged against the budget.
+    pub fn tile_bytes(&self) -> usize {
+        self.inner.lock().expect("tile cache lock").bytes
+    }
+
+    /// Resident tile count (test/inspection hook).
+    pub fn tile_count(&self) -> usize {
+        self.inner.lock().expect("tile cache lock").map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(name: &str, generation: u64, tile: u64) -> TileKey {
+        TileKey {
+            name: name.to_string(),
+            generation,
+            tile,
+        }
+    }
+
+    fn tile(n: usize, fill: f32) -> Arc<Vec<f32>> {
+        Arc::new(vec![fill; n])
+    }
+
+    #[test]
+    fn hit_miss_and_counters() {
+        let c = TileCache::new(1 << 20);
+        assert!(c.get(&key("a", 0, 0)).is_none());
+        c.insert(key("a", 0, 0), tile(16, 1.0));
+        let got = c.get(&key("a", 0, 0)).expect("hit");
+        assert_eq!(got.as_slice(), &[1.0f32; 16]);
+        assert_eq!((c.tile_hits(), c.tile_misses()), (1, 1));
+        assert!(c.tile_bytes() >= 16 * 4);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_first() {
+        // room for two ~4 KiB tiles, not three
+        let per = cost_of(&[0.0f32; 1024], "a");
+        let c = TileCache::new(2 * per + per / 2);
+        c.insert(key("a", 0, 0), tile(1024, 0.0));
+        c.insert(key("a", 0, 1), tile(1024, 1.0));
+        // touch tile 0 so tile 1 is the LRU victim
+        assert!(c.get(&key("a", 0, 0)).is_some());
+        c.insert(key("a", 0, 2), tile(1024, 2.0));
+        assert!(c.get(&key("a", 0, 1)).is_none(), "LRU tile evicted");
+        assert!(c.get(&key("a", 0, 0)).is_some());
+        assert!(c.get(&key("a", 0, 2)).is_some());
+        assert!(c.tile_bytes() <= c.budget_bytes());
+    }
+
+    #[test]
+    fn oversized_tile_is_not_cached() {
+        let c = TileCache::new(64);
+        c.insert(key("a", 0, 0), tile(1024, 0.0));
+        assert_eq!(c.tile_count(), 0);
+        assert_eq!(c.tile_bytes(), 0);
+    }
+
+    #[test]
+    fn generations_partition_the_key_space_and_purge_frees_bytes() {
+        let c = TileCache::new(1 << 20);
+        c.insert(key("a", 0, 0), tile(64, 1.0));
+        c.insert(key("a", 0, 1), tile(64, 2.0));
+        c.insert(key("b", 0, 0), tile(64, 3.0));
+        // the new generation can never see the old tiles
+        assert!(c.get(&key("a", 1, 0)).is_none());
+        c.insert(key("a", 1, 0), tile(64, 9.0));
+        c.purge_stale("a", 1);
+        assert_eq!(c.tile_count(), 2, "old-gen 'a' tiles freed, 'b' kept");
+        assert!(c.get(&key("b", 0, 0)).is_some());
+        assert_eq!(c.get(&key("a", 1, 0)).expect("new gen")[0], 9.0);
+    }
+
+    #[test]
+    fn double_insert_does_not_double_charge() {
+        let c = TileCache::new(1 << 20);
+        c.insert(key("a", 0, 0), tile(256, 1.0));
+        let once = c.tile_bytes();
+        c.insert(key("a", 0, 0), tile(256, 1.0));
+        assert_eq!(c.tile_bytes(), once);
+        assert_eq!(c.tile_count(), 1);
+    }
+}

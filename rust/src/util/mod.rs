@@ -21,6 +21,17 @@ pub fn ceil_log2(n: usize) -> u32 {
     usize::BITS - (n - 1).leading_zeros()
 }
 
+/// 64-bit FNV-1a over `bytes` — the crate's shared cheap content hash
+/// (residual/rANS section checksums, the store's file-stamp head hash).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -32,6 +43,14 @@ mod tests {
             assert_eq!(b % bt, 0);
             assert!(bt <= 128 && bt >= 1);
         }
+    }
+
+    #[test]
+    fn fnv1a_reference_values() {
+        // published FNV-1a test vectors (offset basis / "a" / "foobar")
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
     }
 
     #[test]

@@ -150,20 +150,14 @@ fn decode_many_bit_identical_across_thread_counts() {
     }
 }
 
-/// The acceptance bar for the SIMD dispatch layer: decode output is
-/// bit-identical across {forced scalar, auto dispatch} × {1, 8 threads}
-/// for every registered codec, on both the bulk (`decode_many`) and the
-/// point (`get`) paths. The six classical codecs compress a real tensor;
-/// the two neural codecs decode synthetic trained models (training needs
-/// the XLA runtime, decode does not).
-#[test]
-fn decode_bit_identical_across_simd_and_threads_all_codecs() {
+/// One decodable artifact per registered codec over `t` (shape
+/// `[9, 8, 7]`): the six classical codecs compress it, the two neural
+/// codecs decode synthetic trained models (training needs the XLA
+/// runtime, decode does not).
+fn all_codec_artifacts(t: &DenseTensor) -> Vec<(String, Box<dyn tensorcodec::codec::Artifact>)> {
     use tensorcodec::codec::neural::NeuralArtifact;
     use tensorcodec::codec::Artifact;
 
-    let _g = lock();
-    let t = DenseTensor::random_uniform(&[9, 8, 7], 51);
-    let coords = random_coords(&[9, 8, 7], 4000, 52);
     let mut artifacts: Vec<(String, Box<dyn Artifact>)> = Vec::new();
     for (method, budget) in [
         ("ttd", Budget::Params(900)),
@@ -174,32 +168,18 @@ fn decode_bit_identical_across_simd_and_threads_all_codecs() {
         ("sz", Budget::RelError(0.4)),
     ] {
         let c = codec::by_name(method).unwrap();
-        let a = c.compress(&t, &budget, &CodecConfig::default()).unwrap();
+        let a = c.compress(t, &budget, &CodecConfig::default()).unwrap();
         artifacts.push((method.to_string(), a));
     }
     // neural artifacts (TensorCodec + NeuKron) from synthetic models
-    let nk_model = {
+    let synthetic = |seed: u64, neukron: bool| {
         let spec = FoldSpec::auto(&[9, 8, 7], 0).unwrap();
-        let params = ModelParams::init_nk(53, spec.dp, 32, 8);
-        let mut rng = Pcg64::seeded(53);
-        let orders = Orders::random(&spec.orig_shape, &mut rng);
-        CompressedModel {
-            spec,
-            orders,
-            params,
-            mean: 0.1,
-            std: 2.0,
-            fitness: 0.7,
-            param_dtype: ParamDtype::F32,
-            train_seconds: 0.0,
-            init_seconds: 0.0,
-            epochs_run: 0,
-        }
-    };
-    let tc_model = {
-        let spec = FoldSpec::auto(&[9, 8, 7], 0).unwrap();
-        let params = ModelParams::init_tc(54, spec.dp, 32, 5, 5);
-        let mut rng = Pcg64::seeded(54);
+        let params = if neukron {
+            ModelParams::init_nk(seed, spec.dp, 32, 8)
+        } else {
+            ModelParams::init_tc(seed, spec.dp, 32, 5, 5)
+        };
+        let mut rng = Pcg64::seeded(seed);
         let orders = Orders::random(&spec.orig_shape, &mut rng);
         CompressedModel {
             spec,
@@ -216,13 +196,26 @@ fn decode_bit_identical_across_simd_and_threads_all_codecs() {
     };
     artifacts.push((
         "tensorcodec".to_string(),
-        Box::new(NeuralArtifact::from_model(tc_model, "tensorcodec")),
+        Box::new(NeuralArtifact::from_model(synthetic(54, false), "tensorcodec")),
     ));
     artifacts.push((
         "neukron".to_string(),
-        Box::new(NeuralArtifact::from_model(nk_model, "neukron")),
+        Box::new(NeuralArtifact::from_model(synthetic(53, true), "neukron")),
     ));
     assert_eq!(artifacts.len(), 8, "one artifact per registered codec");
+    artifacts
+}
+
+/// The acceptance bar for the SIMD dispatch layer: decode output is
+/// bit-identical across {forced scalar, auto dispatch} × {1, 8 threads}
+/// for every registered codec, on both the bulk (`decode_many`) and the
+/// point (`get`) paths.
+#[test]
+fn decode_bit_identical_across_simd_and_threads_all_codecs() {
+    let _g = lock();
+    let t = DenseTensor::random_uniform(&[9, 8, 7], 51);
+    let coords = random_coords(&[9, 8, 7], 4000, 52);
+    let mut artifacts = all_codec_artifacts(&t);
 
     for (method, a) in &mut artifacts {
         let mut reference: Option<Vec<u32>> = None;
@@ -247,6 +240,69 @@ fn decode_bit_identical_across_simd_and_threads_all_codecs() {
                         out[probe].to_bits(),
                         "{method}: get != decode_many at simd={simd:?} threads={threads}"
                     );
+                }
+            }
+        }
+        kernels::set_simd(None);
+        kernels::set_threads(0);
+    }
+}
+
+/// The decoded-tile cache is part of the bit-determinism contract: for
+/// every registered codec, answers planned through the tile cache — both
+/// the cold pass that decodes tiles via `decode_block` and the warm pass
+/// served from cached tiles — are bit-identical to the direct
+/// `decode_many` path, across {forced scalar, auto dispatch} × {1, 8
+/// threads}. CI's forced-scalar job runs this sweep too.
+#[test]
+fn tile_cached_decode_bit_identical_across_simd_and_threads_all_codecs() {
+    use tensorcodec::store::planner::{decode_via_tiles, Tiling};
+    use tensorcodec::store::tilecache::TileCache;
+
+    let _g = lock();
+    let t = DenseTensor::random_uniform(&[9, 8, 7], 51);
+    let coords = random_coords(&[9, 8, 7], 2000, 55);
+    // small tile target so the batch genuinely spans several tiles
+    let tiling = Tiling::new(&[9, 8, 7], 64);
+    assert!(tiling.n_tiles() > 1, "sweep must exercise multi-tile plans");
+
+    for (method, a) in all_codec_artifacts(&t) {
+        let artifact = Mutex::new(a);
+        let mut reference: Option<Vec<u32>> = None;
+        for simd in [Some(kernels::SimdIsa::Scalar), None] {
+            for threads in [1usize, 8] {
+                kernels::set_simd(simd);
+                kernels::set_threads(threads);
+                let mut direct = Vec::new();
+                artifact
+                    .lock()
+                    .unwrap()
+                    .decode_many(&coords, &mut direct);
+                let cache = TileCache::new(1 << 22);
+                let mut cold = Vec::new();
+                decode_via_tiles(&cache, &tiling, &method, 0, &artifact, &coords, &mut cold);
+                assert!(cache.tile_misses() > 0, "{method}: cold pass must miss");
+                let mut warm = Vec::new();
+                decode_via_tiles(&cache, &tiling, &method, 0, &artifact, &coords, &mut warm);
+                assert!(cache.tile_hits() > 0, "{method}: warm pass must hit");
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+                assert_eq!(
+                    bits(&cold),
+                    bits(&direct),
+                    "{method}: cold cached decode differs at simd={simd:?} threads={threads}"
+                );
+                assert_eq!(
+                    bits(&warm),
+                    bits(&direct),
+                    "{method}: warm cached decode differs at simd={simd:?} threads={threads}"
+                );
+                match &reference {
+                    None => reference = Some(bits(&direct)),
+                    Some(want) => assert_eq!(
+                        &bits(&direct),
+                        want,
+                        "{method}: decode differs at simd={simd:?} threads={threads}"
+                    ),
                 }
             }
         }

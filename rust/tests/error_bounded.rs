@@ -176,8 +176,10 @@ fn t_wrong_shape() -> DenseTensor {
 }
 
 /// Serving: bounded artifacts answer `get` and `batch-get` within the
-/// bound and bit-identically to a direct decode; `stat` reports the
-/// split from the header and never loads the artifact into the LRU.
+/// bound and bit-identically to a direct decode — *through the decoded-
+/// tile cache* (corrections are applied before a tile is cached, so
+/// cached tiles satisfy the bound too); `stat` reports the split from
+/// the header and never loads the artifact into the LRU.
 #[test]
 fn served_batch_get_holds_the_bound() {
     let dir = std::env::temp_dir().join("tcz_error_bounded_serve");
@@ -192,7 +194,7 @@ fn served_batch_get_holds_the_bound() {
     codec::save_artifact(&dir.join("bounded_ttd.tcz"), a.as_ref()).unwrap();
 
     let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
-    let server = ArtifactServer::new(store, BatchPolicy::default(), true);
+    let server = ArtifactServer::with_tile_bytes(store, BatchPolicy::default(), true, 1 << 20);
 
     // stat: header-only, reports the split, stays out of the LRU, and
     // predicts the bulk path even with XLA allowed (corrections must be
@@ -219,6 +221,9 @@ fn served_batch_get_holds_the_bound() {
     // point path agrees with the batch
     let one = server.get("bounded_ttd", &coords[7]).unwrap();
     assert_eq!(one.to_bits(), want[7].to_bits());
+    // the traffic above really went through the tile cache
+    let (hits, misses, _) = server.tile_stats().expect("tile cache enabled");
+    assert!(hits + misses > 0, "bounded serving bypassed the tile cache");
 
     // a bounded *neural* artifact: even with XLA allowed, stat must
     // predict the bulk path — the XLA fast path would skip corrections
@@ -237,6 +242,64 @@ fn served_batch_get_holds_the_bound() {
         let x = truth.data()[(c[0] * 9 + c[1]) * 5 + c[2]];
         let err = (x as f64 - *g as f64).abs();
         assert!(err <= 0.5, "neural entry {i}: served error {err} > 0.5");
+    }
+}
+
+/// Regression (append must not weaken the bound): appending to an
+/// error-bounded artifact either rebuilds the residual against the
+/// extended tensor under an explicit `Budget::MaxError` — and then holds
+/// the bound pointwise — or refuses loudly, pointing at
+/// `--budget-max-error`, leaving the artifact bit-identical. It must
+/// never re-save a container whose `max_error` header stopped being true.
+#[test]
+fn append_keeps_or_refuses_the_bound_never_drops_it() {
+    let shape = [6usize, 5, 4];
+    let t = spiky_tensor(&shape, 67);
+    let bound = 0.1f64;
+    let c = codec::by_name("ttd").unwrap();
+    let cfg = CodecConfig::default();
+    let mut a = c.compress(&t, &Budget::MaxError(bound), &cfg).unwrap();
+    let before = a.decode_all();
+    let slices = DenseTensor::random_uniform(&[2, 5, 4], 68);
+
+    // a non-MaxError budget is refused with an actionable error, and the
+    // refused append leaves the artifact untouched
+    let err = c
+        .append(&mut a, &slices, 0, &Budget::Params(10_000), &cfg)
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("--budget-max-error"),
+        "error must point at the opt-in flag: {err:#}"
+    );
+    assert_eq!(a.meta().shape, shape.to_vec(), "refused append mutated the shape");
+    assert_eq!(a.meta().max_error, Some(bound));
+    let still = a.decode_all();
+    for (i, (x, y)) in before.data().iter().zip(still.data()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "refused append changed entry {i}");
+    }
+
+    // the explicit opt-in rebuilds the residual against the extended
+    // tensor (old bounded decode ++ new slices) and holds the bound on
+    // every entry of it
+    let outcome = c
+        .append(&mut a, &slices, 0, &Budget::MaxError(bound), &cfg)
+        .unwrap();
+    assert_eq!(outcome.kind(), "recompressed");
+    let meta = a.meta();
+    assert_eq!(meta.shape, vec![8, 5, 4]);
+    assert_eq!(meta.max_error, Some(bound), "append dropped the bound");
+    assert!(meta.side_bytes > 0, "append dropped the side channel");
+    let extended = before.concat(&slices, 0).unwrap();
+    let rec = a.decode_all();
+    let worst = max_abs_err(extended.data(), rec.data());
+    assert!(worst <= bound, "post-append max error {worst} > {bound}");
+
+    // the rebuilt guarantee survives the v4 container roundtrip
+    let bytes = codec::container::artifact_to_bytes(a.as_ref()).unwrap();
+    let mut loaded = codec::container::artifact_from_bytes(&bytes).unwrap();
+    assert_eq!(loaded.meta().max_error, Some(bound));
+    for (x, y) in rec.data().iter().zip(loaded.decode_all().data()) {
+        assert_eq!(x.to_bits(), y.to_bits());
     }
 }
 

@@ -312,6 +312,126 @@ fn hot_reload_race_readers_stay_bit_stable_while_writer_appends() {
     assert!(server.get("grow", &[11, 0, 0]).is_err());
 }
 
+/// Hot reload under load must not serve a single stale tile: a warmed
+/// tile cache full of generation-0 tiles, a same-length same-shape
+/// rewrite of the container (the nastiest swap — file length can't give
+/// it away), concurrent readers hammering the batch path through the
+/// reload. Generation-tagged tile keys make the invalidation atomic:
+/// every batch is answered entirely from one artifact generation, and
+/// after `reload` returns, answers match a fresh decode of the new
+/// artifact bit for bit.
+#[test]
+fn hot_reload_purges_tile_cache_no_stale_tile_survives() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let dir = std::env::temp_dir().join("tcz_store_serving_tilereload");
+    std::fs::create_dir_all(&dir).unwrap();
+    let shape = vec![8usize, 6, 5];
+    let c = codec::by_name("ttd").unwrap();
+    let cfg = CodecConfig::default();
+    let a1 = c
+        .compress(&DenseTensor::random_uniform(&shape, 400), &Budget::Params(500), &cfg)
+        .unwrap();
+    let a2 = c
+        .compress(&DenseTensor::random_uniform(&shape, 401), &Budget::Params(500), &cfg)
+        .unwrap();
+    let path = dir.join("swap.tcz");
+    let next = dir.join("swap.tcz.next");
+    codec::save_artifact(&path, a1.as_ref()).unwrap();
+    codec::save_artifact(&next, a2.as_ref()).unwrap();
+    // the swap is a same-length rewrite: only content (and the head hash
+    // in the file stamp) distinguishes the generations
+    assert_eq!(
+        std::fs::metadata(&path).unwrap().len(),
+        std::fs::metadata(&next).unwrap().len(),
+        "test premise: same-budget ttd containers have equal length"
+    );
+
+    let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+    let server = Arc::new(ArtifactServer::with_tile_bytes(
+        store,
+        small_policy(),
+        false,
+        1 << 20,
+    ));
+    let coords = random_coords(&shape, 200, 402);
+    let want_old = reference_values(&dir, "swap", &coords);
+
+    // warm the tile cache on generation 0 and prove it's actually warm
+    for _ in 0..2 {
+        let got = server.batch_get("swap", &coords).unwrap();
+        for (g, w) in got.iter().zip(&want_old) {
+            assert_eq!(g.to_bits(), w.to_bits(), "warm-up drifted");
+        }
+    }
+    let (hits_before, _, bytes_before) = server.tile_stats().expect("cache enabled");
+    assert!(hits_before > 0, "warm-up never hit the tile cache");
+    assert!(bytes_before > 0);
+
+    // decode the replacement directly for the expected post-reload bits
+    let mut fresh = codec::load_artifact(&next).unwrap();
+    let want_new: Vec<f32> = coords.iter().map(|c| fresh.get(c)).collect();
+    assert!(
+        want_old
+            .iter()
+            .zip(&want_new)
+            .any(|(o, n)| o.to_bits() != n.to_bits()),
+        "test premise: the two generations must decode differently"
+    );
+
+    // readers stay on the batch path through the swap; every block must
+    // be entirely one generation — a mix means a stale tile leaked
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for rt in 0..4usize {
+        let server = server.clone();
+        let stop = stop.clone();
+        let coords = coords.clone();
+        let want_old = want_old.clone();
+        let want_new = want_new.clone();
+        readers.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let got = server.batch_get("swap", &coords).unwrap();
+                let all_old = got
+                    .iter()
+                    .zip(&want_old)
+                    .all(|(g, w)| g.to_bits() == w.to_bits());
+                let all_new = got
+                    .iter()
+                    .zip(&want_new)
+                    .all(|(g, w)| g.to_bits() == w.to_bits());
+                assert!(
+                    all_old || all_new,
+                    "reader {rt}: batch mixed generations (stale tile served)"
+                );
+            }
+        }));
+    }
+
+    std::fs::rename(&next, &path).unwrap();
+    let (_, _, generation) = server.reload("swap").unwrap();
+    assert_eq!(generation, 1, "same-length rewrite must bump the generation");
+
+    // after reload returns, this thread must only ever see the new bits
+    for round in 0..3 {
+        let got = server.batch_get("swap", &coords).unwrap();
+        for (i, (g, w)) in got.iter().zip(&want_new).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "round {round} coord {i}: stale tile survived the reload"
+            );
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        r.join().expect("reader panicked");
+    }
+    // generation-1 tiles were decoded fresh (misses grew past the warm-up)
+    let (_, misses_after, _) = server.tile_stats().unwrap();
+    assert!(misses_after > 0);
+}
+
 /// Wire compatibility: a plain protocol v2 client speaking single-`get`
 /// frames over a raw socket (the PR 2 wire format, no `ServeClient`)
 /// still gets byte-for-byte correct replies after the block-frame
@@ -328,6 +448,7 @@ fn v2_single_get_wire_compat() {
         cache_bytes: usize::MAX,
         allow_xla: false,
         max_conns: 1,
+        tile_bytes: 0,
     };
     let dir2 = dir.clone();
     let srv = std::thread::spawn(move || serve_store_listener(listener, &dir2, cfg));
@@ -391,6 +512,7 @@ fn tcp_protocol_v2_end_to_end() {
         cache_bytes: usize::MAX,
         allow_xla: false,
         max_conns: 1,
+        tile_bytes: 1 << 20,
     };
     let dir2 = dir.clone();
     let srv = std::thread::spawn(move || serve_store_listener(listener, &dir2, cfg));
@@ -423,6 +545,14 @@ fn tcp_protocol_v2_end_to_end() {
     // a second artifact over the same connection
     let v = client.get("video_cpd", &[0, 0, 0]).unwrap();
     assert!(v.is_finite());
+    // the server was started with a tile cache: stat reports its counters,
+    // and the traffic above went through it
+    let stat = client.stat("traffic_ttd").unwrap();
+    assert!(
+        stat.tile_hits + stat.tile_misses > 0,
+        "tile cache saw no lookups: {stat:?}"
+    );
+    assert!(stat.tile_bytes > 0, "decoded tiles should be resident");
 
     // per-frame errors keep the connection alive
     assert!(client.get("traffic_ttd", &[0, 0]).is_err());
