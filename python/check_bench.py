@@ -10,8 +10,9 @@ fail when ``current < baseline * (1 - max_regress)``, lower-is-better
 latency keys fail when ``current > baseline * (1 + max_regress)``. Keys
 missing from either side are skipped, so the baseline can gate a subset
 (today: the bulk/lockstep decode throughput floors, the point-decode
-latency ceiling, and the Zipfian tile-cache serving floors — warm QPS,
-warm/cold ratio, hit rate) while the artifact upload tracks the rest.
+latency ceiling, the Zipfian tile-cache serving floors — warm QPS,
+warm/cold ratio, hit rate — and the degraded-mode serving floor under
+1% injected stalls) while the artifact upload tracks the rest.
 """
 
 import argparse
@@ -31,6 +32,7 @@ THROUGHPUT_KEYS = (
     "hot_qps_warm",
     "tile_hot_qps_ratio",
     "tile_hit_rate",
+    "degraded_qps",
 )
 
 # lower-is-better gauges (latencies)

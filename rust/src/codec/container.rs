@@ -542,6 +542,184 @@ pub fn append_segment_file(
 }
 
 // ---------------------------------------------------------------------
+// Crash-recovery scan + repair (used by the store's startup scan).
+// ---------------------------------------------------------------------
+
+/// Structural health of a `.tcz` file as judged by a frame-length walk —
+/// headers and declared payload lengths only, no payload decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FileScan {
+    /// Every declared frame is fully present on disk.
+    Intact,
+    /// v3 container whose trailing segment(s) are torn: the base payload
+    /// plus the first `keep_segments` segments are structurally complete,
+    /// so [`repair_torn_tail`] can restore the file to that prefix.
+    TornTail { keep_segments: u32 },
+    /// Header or base damage that no prefix repair can recover.
+    Corrupt(String),
+}
+
+/// Walk a container's frame lengths and classify it (see [`FileScan`]).
+/// Reads the header prefix plus one 8-byte length per v3 segment — cheap
+/// enough to run over a whole store directory at startup. Returns `Err`
+/// only for I/O failures; structural damage comes back as a variant.
+pub fn scan_file(path: &Path) -> Result<FileScan> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let len = f
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
+    let mut head = vec![0u8; 4096.min(len) as usize];
+    f.read_exact(&mut head)
+        .with_context(|| format!("read {}", path.display()))?;
+    if head.len() < 4 {
+        return Ok(FileScan::Corrupt("file shorter than a magic number".into()));
+    }
+    if &head[..4] == MAGIC_V1 {
+        // v1 carries no frame lengths; the loader validates it fully.
+        return Ok(FileScan::Intact);
+    }
+    if &head[..4] == MAGIC_V2 {
+        if head.len() < 16 {
+            return Ok(FileScan::Corrupt("tcz v2 header truncated".into()));
+        }
+        let plen = u64::from_le_bytes(head[8..16].try_into().unwrap_or_default());
+        return Ok(match plen.checked_add(16) {
+            Some(total) if len >= total => FileScan::Intact,
+            _ => FileScan::Corrupt(format!("tcz v2 payload truncated ({len} of 16+{plen} bytes)")),
+        });
+    }
+    if &head[..4] == MAGIC_V4 {
+        if head.len() < V4_HEADER {
+            return Ok(FileScan::Corrupt("tcz v4 header truncated".into()));
+        }
+        let model_len = u64::from_le_bytes(head[16..24].try_into().unwrap_or_default());
+        let side_len = u64::from_le_bytes(head[24..32].try_into().unwrap_or_default());
+        let total = model_len
+            .checked_add(side_len)
+            .and_then(|n| n.checked_add(V4_HEADER as u64));
+        return Ok(match total {
+            Some(total) if len >= total => FileScan::Intact,
+            _ => FileScan::Corrupt(format!(
+                "tcz v4 payload truncated ({len} of {V4_HEADER}+{model_len}+{side_len} bytes)"
+            )),
+        });
+    }
+    if &head[..4] != MAGIC_V3 {
+        return Ok(FileScan::Corrupt("not a .tcz file (bad magic)".into()));
+    }
+    // v3: parse the mutable header, then length-walk the segment frames.
+    let parsed = (|| -> Result<(usize, u32, u64)> {
+        let mut c = Cursor::new(&head[8..]);
+        let ext_shape = read_shape(&mut c)?;
+        let n_segments = c.u32()?;
+        let _size_bytes = c.u64()?;
+        let base_len = c.u64()?;
+        let hdr = 8 + 1 + 8 * ext_shape.len() + 4 + 8 + 8;
+        Ok((hdr, n_segments, base_len))
+    })();
+    let (hdr, n_segments, base_len) = match parsed {
+        Ok(t) => t,
+        Err(e) => return Ok(FileScan::Corrupt(format!("tcz v3 header unreadable: {e:#}"))),
+    };
+    let base_end = match (hdr as u64).checked_add(base_len) {
+        Some(end) if len >= end => end,
+        _ => {
+            return Ok(FileScan::Corrupt(format!(
+                "tcz v3 base payload truncated ({len} of {hdr}+{base_len} bytes)"
+            )))
+        }
+    };
+    let mut off = base_end;
+    let mut complete = 0u32;
+    for _ in 0..n_segments {
+        match off.checked_add(17) {
+            Some(end) if end <= len => {}
+            _ => return Ok(FileScan::TornTail { keep_segments: complete }),
+        }
+        f.seek(SeekFrom::Start(off + 9))
+            .with_context(|| format!("seek {}", path.display()))?;
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)
+            .with_context(|| format!("read {}", path.display()))?;
+        let plen = u64::from_le_bytes(lenb);
+        match off.checked_add(17).and_then(|o| o.checked_add(plen)) {
+            Some(end) if end <= len => {
+                off = end;
+                complete += 1;
+            }
+            _ => return Ok(FileScan::TornTail { keep_segments: complete }),
+        }
+    }
+    Ok(FileScan::Intact)
+}
+
+/// Rewrite a [`FileScan::TornTail`] v3 container down to its intact
+/// prefix: the base payload plus the first `keep_segments` segments —
+/// i.e. restore the last-good generation a crashed mid-append write left
+/// behind. The header's extended shape is re-derived from the base
+/// artifact's peeked shape plus the surviving segments' growth (the
+/// on-disk shape already counts the torn segment), and `size_bytes` by
+/// replaying the repaired container once. The replacement is atomic
+/// (temp + rename), same as every other container write.
+pub fn repair_torn_tail(path: &Path, keep_segments: u32) -> Result<()> {
+    let bytes = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+    if bytes.len() < 10 || &bytes[..4] != MAGIC_V3 {
+        bail!("torn-tail repair only applies to v3 containers");
+    }
+    let tag = bytes[5];
+    let mut c = Cursor::new(&bytes[8..]);
+    let stale_shape = read_shape(&mut c)?; // counts the torn segments' growth
+    let n_segments = c.u32()?;
+    let _size_bytes = c.u64()?;
+    let base_len = c.u64()? as usize;
+    if keep_segments >= n_segments {
+        bail!("repair keeping {keep_segments} of {n_segments} segments — nothing is torn");
+    }
+    let hdr = 8 + 1 + 8 * stale_shape.len() + 4 + 8 + 8;
+    if bytes.len() < hdr + base_len {
+        bail!("tcz v3 base payload truncated — unrecoverable");
+    }
+    let codec = by_tag(tag).with_context(|| format!("unknown codec tag {tag}"))?;
+    let base_payload = &bytes[hdr..hdr + base_len];
+    let base_meta = codec
+        .peek_meta(base_payload, base_len)
+        .with_context(|| format!("peeking {} base header", codec.name()))?;
+    let mut shape = base_meta.shape;
+    let mut segments = Vec::with_capacity(keep_segments as usize);
+    let mut off = hdr + base_len;
+    for si in 0..keep_segments {
+        if bytes.len() < off + 17 {
+            bail!("segment {si} header truncated inside the supposedly intact prefix");
+        }
+        let axis = bytes[off] as usize;
+        let rows = u64::from_le_bytes(bytes[off + 1..off + 9].try_into().unwrap_or_default()) as usize;
+        let plen = u64::from_le_bytes(bytes[off + 9..off + 17].try_into().unwrap_or_default()) as usize;
+        off += 17;
+        if bytes.len() < off + plen {
+            bail!("segment {si} payload truncated inside the supposedly intact prefix");
+        }
+        if axis >= shape.len() {
+            bail!("segment {si} axis {axis} out of range for order {}", shape.len());
+        }
+        shape[axis] += rows;
+        segments.push(Segment {
+            axis,
+            rows,
+            payload: bytes[off..off + plen].to_vec(),
+        });
+        off += plen;
+    }
+    // `size_bytes` is only known after replaying the repaired container,
+    // so build with a placeholder, load once, then write for real.
+    let draft = segmented_to_bytes(tag, base_payload, &shape, 0, &segments)?;
+    let artifact = artifact_from_bytes(&draft).context("replaying the repaired prefix")?;
+    let fixed = segmented_to_bytes(tag, base_payload, &shape, artifact.size_bytes(), &segments)?;
+    replace_file(path, &fixed)
+}
+
+// ---------------------------------------------------------------------
 // Little-endian payload primitives shared by the artifact serialisers.
 // ---------------------------------------------------------------------
 

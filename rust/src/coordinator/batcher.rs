@@ -85,6 +85,84 @@ pub fn request_block(tx: &SyncSender<DecodeRequest>, coords: &[Vec<usize>]) -> R
     Ok(vals)
 }
 
+/// [`request_one`] with admission + deadline semantics: the enqueue is
+/// non-blocking (`try_send`) so a saturated queue sheds immediately with
+/// an error starting `overloaded` instead of blocking the caller, and the
+/// reply wait is bounded by `deadline` (error starting `deadline`). The
+/// error-message prefixes are load-bearing: the server's counters and the
+/// client's retry classification key off them.
+pub fn request_one_deadline(
+    tx: &SyncSender<DecodeRequest>,
+    coords: &[usize],
+    deadline: Option<Duration>,
+) -> Result<f32> {
+    let Some(deadline) = deadline else {
+        return request_one(tx, coords);
+    };
+    let (rtx, rrx) = sync_channel(1);
+    try_enqueue(
+        tx,
+        DecodeRequest::One {
+            coords: coords.to_vec(),
+            reply: rtx,
+        },
+    )?;
+    match rrx.recv_timeout(deadline) {
+        Ok(v) => Ok(v),
+        Err(RecvTimeoutError::Timeout) => {
+            bail!("deadline exceeded after {deadline:?} waiting for decode")
+        }
+        Err(RecvTimeoutError::Disconnected) => bail!("decode service dropped reply"),
+    }
+}
+
+/// [`request_block`] with admission + deadline semantics (see
+/// [`request_one_deadline`] for the error-prefix contract).
+pub fn request_block_deadline(
+    tx: &SyncSender<DecodeRequest>,
+    coords: &[Vec<usize>],
+    deadline: Option<Duration>,
+) -> Result<Vec<f32>> {
+    let Some(deadline) = deadline else {
+        return request_block(tx, coords);
+    };
+    if coords.is_empty() {
+        return Ok(Vec::new());
+    }
+    let (rtx, rrx) = sync_channel(1);
+    try_enqueue(
+        tx,
+        DecodeRequest::Block {
+            coords: coords.to_vec(),
+            reply: rtx,
+        },
+    )?;
+    let vals = match rrx.recv_timeout(deadline) {
+        Ok(v) => v,
+        Err(RecvTimeoutError::Timeout) => {
+            bail!("deadline exceeded after {deadline:?} waiting for decode")
+        }
+        Err(RecvTimeoutError::Disconnected) => bail!("decode service dropped reply"),
+    };
+    if vals.len() != coords.len() {
+        bail!(
+            "decode service returned {} values for a {}-entry block",
+            vals.len(),
+            coords.len()
+        );
+    }
+    Ok(vals)
+}
+
+fn try_enqueue(tx: &SyncSender<DecodeRequest>, req: DecodeRequest) -> Result<()> {
+    use std::sync::mpsc::TrySendError;
+    match tx.try_send(req) {
+        Ok(()) => Ok(()),
+        Err(TrySendError::Full(_)) => bail!("overloaded: decode queue full"),
+        Err(TrySendError::Disconnected(_)) => bail!("decode service stopped"),
+    }
+}
+
 /// Flatten a batch of frames into one coordinate list (the worker decodes
 /// it with a single `decode_many`) …
 pub fn flatten_batch(batch: &[DecodeRequest]) -> Vec<Vec<usize>> {
@@ -101,7 +179,16 @@ pub fn flatten_batch(batch: &[DecodeRequest]) -> Vec<Vec<usize>> {
 
 /// … and fan the decoded values back out: one scalar per point frame, one
 /// `Vec` per block frame, in frame order. Dead clients are ignored.
+///
+/// If the decode produced fewer values than the batch asked for (a
+/// misbehaving decode path), the replies are dropped instead of indexed
+/// out of bounds: every waiter gets a clean "dropped reply" error rather
+/// than a panicked worker — and never a wrong byte.
 pub fn reply_batch(batch: Vec<DecodeRequest>, values: &[f32]) {
+    let need: usize = batch.iter().map(|r| r.entries()).sum();
+    if values.len() < need {
+        return;
+    }
     let mut off = 0usize;
     for req in batch {
         match req {
@@ -341,6 +428,62 @@ mod tests {
         let (tx, rx) = request_channel(&policy);
         drop(tx);
         assert!(next_batch(&rx, &policy, &stop).is_none());
+    }
+
+    #[test]
+    fn deadline_variants_shed_and_time_out_with_typed_prefixes() {
+        // full queue: try_send sheds immediately with the `overloaded` prefix
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 1,
+        };
+        let (tx, _rx) = request_channel(&policy);
+        let (filler, _keep) = point(0);
+        tx.send(filler).unwrap();
+        let err = request_one_deadline(&tx, &[1], Some(Duration::from_millis(5))).unwrap_err();
+        assert!(err.to_string().starts_with("overloaded"), "{err}");
+        let err = request_block_deadline(&tx, &[vec![1]], Some(Duration::from_millis(5)))
+            .unwrap_err();
+        assert!(err.to_string().starts_with("overloaded"), "{err}");
+        // nobody serving the queue: the reply wait hits the deadline
+        let policy = BatchPolicy {
+            queue_depth: 64,
+            ..BatchPolicy::default()
+        };
+        let (tx, _rx) = request_channel(&policy);
+        let err = request_one_deadline(&tx, &[1], Some(Duration::from_millis(10))).unwrap_err();
+        assert!(err.to_string().starts_with("deadline"), "{err}");
+        // deadline None degrades to the plain blocking path
+        let (tx, rx) = request_channel(&policy);
+        let worker = thread::spawn(move || {
+            let stop = stop_flag();
+            let batch = next_batch(&rx, &policy, &stop).unwrap();
+            let n = batch.iter().map(|r| r.entries()).sum::<usize>();
+            reply_batch(batch, &vec![2.5f32; n]);
+        });
+        assert_eq!(request_one_deadline(&tx, &[1], None).unwrap(), 2.5);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn short_reply_batch_drops_channels_instead_of_panicking() {
+        let (rtx1, rrx1) = sync_channel::<f32>(1);
+        let (rtxb, rrxb) = sync_channel::<Vec<f32>>(1);
+        let batch = vec![
+            DecodeRequest::One {
+                coords: vec![1],
+                reply: rtx1,
+            },
+            DecodeRequest::Block {
+                coords: vec![vec![2], vec![3]],
+                reply: rtxb,
+            },
+        ];
+        // 3 entries requested, only 1 value produced: no reply, no panic
+        reply_batch(batch, &[0.5]);
+        assert!(rrx1.recv().is_err(), "waiter must see a dropped channel");
+        assert!(rrxb.recv().is_err());
     }
 
     #[test]

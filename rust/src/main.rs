@@ -44,6 +44,8 @@ const VALUE_FLAGS: &[&str] = &[
     "index",
     "addr",
     "max-conns",
+    "request-timeout",
+    "max-inflight",
     "max-batch",
     "max-wait-us",
     "queue-depth",
@@ -461,6 +463,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if args.get("model").is_some() {
             bail!("pick one of --model (single artifact) or --dir (artifact store)");
         }
+        // production robustness defaults (the library defaults are all
+        // off, for embedded/test use): 30 s request deadline, 4096
+        // in-flight requests, 30 s socket timeouts, 300 s idle reap.
+        // `--request-timeout 0` disables the deadline.
+        let request_timeout_ms: u64 = args.get("request-timeout").unwrap_or("30000").parse()?;
+        let limits = tensorcodec::store::server::ServeLimits {
+            request_timeout: (request_timeout_ms > 0)
+                .then(|| std::time::Duration::from_millis(request_timeout_ms)),
+            max_inflight: args.get("max-inflight").unwrap_or("4096").parse()?,
+            io_timeout: Some(std::time::Duration::from_secs(30)),
+            idle_timeout: Some(std::time::Duration::from_secs(300)),
+        };
         let cfg = tensorcodec::store::server::StoreServeConfig {
             policy: batch_policy(args)?,
             cache_bytes: args
@@ -476,6 +490,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             },
             allow_xla: !args.has("method-agnostic") && runtime_ready,
             max_conns,
+            limits,
+            faults: tensorcodec::store::faults::FaultPlane::from_env()?,
         };
         return tensorcodec::store::server::serve_store_tcp(&PathBuf::from(dir), &addr, cfg);
     }
@@ -593,6 +609,10 @@ COMMANDS
               fold-aligned tiles across requests; `stat` then reports
               tile_hits/tile_misses/tile_bytes.
               [--max-batch 8192] [--max-wait-us 2000] [--max-conns 64]
+              [--request-timeout 30000]    # --dir: per-request deadline,
+              ms (0 = none); shed replies are `ERR deadline ...`
+              [--max-inflight 4096]        # --dir: admission gate; excess
+              requests get `ERR overloaded ...` (0 = unbounded)
               --model: line protocol v1 (one `i,j,k` per line)
               --dir:   protocol v2 (open/get/batch-get/stat/methods frames
                        over every .tcz in the directory; see README)

@@ -4,10 +4,98 @@
 //! line, `OK `/`ERR `-prefixed single-line replies. Used by the serving
 //! tests and benchmark drivers; any language with a TCP socket can
 //! implement the same five frames.
+//!
+//! ## Resilience
+//!
+//! Connections always carry socket read/write timeouts (a hung or
+//! half-dead server surfaces as a timeout error, never a forever-blocked
+//! read), and every request classifies its failure into a typed
+//! [`ClientError`]: transport errors ([`ClientError::Io`]) and explicit
+//! server sheds ([`ClientError::Overloaded`], [`ClientError::Deadline`])
+//! are *retryable*; semantic server errors and protocol violations are
+//! *fatal*. When [`ClientConfig::retries`] is non-zero, retryable failures
+//! of idempotent verbs (every protocol v2 verb is idempotent: pure reads
+//! plus revalidating `open`/`reload`) are retried with jittered
+//! exponential backoff, reconnecting first when the transport failed.
 
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// How a request failed, for retry decisions. Wrapped in `anyhow::Error`
+/// by the public API; recover it with `err.downcast_ref::<ClientError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClientError {
+    /// Transport failure (connect, send, receive, timeout, disconnect).
+    Io(String),
+    /// The server shed the request (`ERR overloaded …`): admission gate
+    /// full or shard queue saturated. Safe to retry after backoff.
+    Overloaded(String),
+    /// The request hit its server-side deadline (`ERR deadline …`).
+    Deadline(String),
+    /// Any other server-reported error (unknown artifact, bad coords,
+    /// quarantined with no resident generation, draining…). Not retried.
+    Server(String),
+    /// The reply violated the wire protocol. Not retried.
+    Protocol(String),
+}
+
+impl ClientError {
+    /// True for failures worth retrying on an idempotent verb.
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            ClientError::Io(_) | ClientError::Overloaded(_) | ClientError::Deadline(_)
+        )
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(m) => write!(f, "transport error: {m}"),
+            ClientError::Overloaded(m) => write!(f, "server overloaded: {m}"),
+            ClientError::Deadline(m) => write!(f, "server deadline: {m}"),
+            ClientError::Server(m) => write!(f, "server error: {m}"),
+            ClientError::Protocol(m) => write!(f, "protocol error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// Connection + retry knobs. The defaults give every connection socket
+/// timeouts (the old client blocked forever on a stalled server) and two
+/// retries of retryable failures.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// Socket read/write timeout; `None` = blocking sockets (discouraged).
+    pub io_timeout: Option<Duration>,
+    /// Retry attempts after the first try, for retryable failures of
+    /// idempotent verbs. `0` disables retries entirely.
+    pub retries: u32,
+    /// First backoff delay; doubles per attempt up to `backoff_cap`.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Seed for the backoff jitter (deterministic per client).
+    pub retry_seed: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Some(Duration::from_secs(30)),
+            retries: 2,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            retry_seed: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+}
 
 /// Metadata reply of `open`/`stat`/`reload`.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,62 +119,187 @@ pub struct RemoteMeta {
     pub tile_hits: u64,
     pub tile_misses: u64,
     pub tile_bytes: usize,
+    /// Artifact health from `stat`: `"ok"`, or `"quarantined"` when the
+    /// last load failed and the server is pinning the last-good
+    /// generation.
+    pub health: String,
+    /// Server-wide robustness counters from `stat` (0 on older servers).
+    pub shed: u64,
+    pub timeouts: u64,
+    pub quarantined: u64,
 }
 
-/// One connection to an artifact-store server.
-pub struct ServeClient {
+struct Conn {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
 }
 
+/// One logical connection to an artifact-store server. Reconnects
+/// transparently after transport failures when retries are enabled.
+pub struct ServeClient {
+    addr: String,
+    cfg: ClientConfig,
+    conn: Option<Conn>,
+    /// xorshift state for backoff jitter.
+    jitter: u64,
+}
+
 impl ServeClient {
+    /// Connect with the default config (socket timeouts on, 2 retries).
     pub fn connect(addr: &str) -> Result<ServeClient> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-        let writer = stream.try_clone().context("clone stream")?;
-        Ok(ServeClient {
-            reader: BufReader::new(stream),
-            writer,
-        })
+        ServeClient::connect_with(addr, ClientConfig::default())
     }
 
-    /// Send one frame, return the reply body after `OK `; `ERR` replies
-    /// become `Err`.
-    fn roundtrip(&mut self, frame: &str) -> Result<String> {
-        self.writer.write_all(frame.as_bytes())?;
-        self.writer.write_all(b"\n")?;
+    pub fn connect_with(addr: &str, cfg: ClientConfig) -> Result<ServeClient> {
+        let jitter = cfg.retry_seed | 1; // xorshift must not start at 0
+        let mut client = ServeClient {
+            addr: addr.to_string(),
+            cfg,
+            conn: None,
+            jitter,
+        };
+        client.dial()?;
+        Ok(client)
+    }
+
+    /// (Re)establish the TCP connection with connect + socket timeouts.
+    fn dial(&mut self) -> Result<(), ClientError> {
+        self.conn = None;
+        let mut addrs = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| ClientError::Io(format!("resolve {}: {e}", self.addr)))?;
+        let sockaddr = addrs
+            .next()
+            .ok_or_else(|| ClientError::Io(format!("resolve {}: no addresses", self.addr)))?;
+        let stream = TcpStream::connect_timeout(&sockaddr, self.cfg.connect_timeout)
+            .map_err(|e| ClientError::Io(format!("connect {}: {e}", self.addr)))?;
+        // always install socket timeouts (even with retries disabled): a
+        // stalled server must become an error, not a forever-blocked read
+        stream
+            .set_read_timeout(self.cfg.io_timeout)
+            .and_then(|_| stream.set_write_timeout(self.cfg.io_timeout))
+            .map_err(|e| ClientError::Io(format!("set timeouts: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream
+            .try_clone()
+            .map_err(|e| ClientError::Io(format!("clone stream: {e}")))?;
+        self.conn = Some(Conn {
+            reader: BufReader::new(stream),
+            writer,
+        });
+        Ok(())
+    }
+
+    /// One frame over the live connection, classified.
+    fn roundtrip_once(&mut self, frame: &str) -> Result<String, ClientError> {
+        if self.conn.is_none() {
+            self.dial()?;
+        }
+        let conn = match self.conn.as_mut() {
+            Some(c) => c,
+            None => return Err(ClientError::Io("not connected".into())),
+        };
+        let send = conn
+            .writer
+            .write_all(frame.as_bytes())
+            .and_then(|_| conn.writer.write_all(b"\n"));
+        if let Err(e) = send {
+            self.conn = None;
+            return Err(ClientError::Io(format!("send: {e}")));
+        }
         let mut reply = String::new();
-        if self.reader.read_line(&mut reply)? == 0 {
-            bail!("server closed the connection");
+        match conn.reader.read_line(&mut reply) {
+            Ok(0) => {
+                self.conn = None;
+                return Err(ClientError::Io("server closed the connection".into()));
+            }
+            Ok(_) => {}
+            Err(e) => {
+                self.conn = None;
+                return Err(ClientError::Io(format!("receive: {e}")));
+            }
         }
         let reply = reply.trim_end();
         if let Some(body) = reply.strip_prefix("OK") {
             Ok(body.trim_start().to_string())
         } else if let Some(msg) = reply.strip_prefix("ERR") {
-            bail!("server error: {}", msg.trim_start())
+            let msg = msg.trim_start();
+            if msg.starts_with("overloaded") {
+                Err(ClientError::Overloaded(msg.to_string()))
+            } else if msg.starts_with("deadline") {
+                Err(ClientError::Deadline(msg.to_string()))
+            } else {
+                Err(ClientError::Server(msg.to_string()))
+            }
         } else {
-            bail!("malformed reply `{reply}`")
+            Err(ClientError::Protocol(format!("malformed reply `{reply}`")))
         }
+    }
+
+    /// Next jittered backoff delay for `attempt` (0-based): exponential
+    /// with cap, jittered uniformly into `[50%, 100%]` so synchronized
+    /// clients don't re-stampede the server.
+    fn backoff_delay(&mut self, attempt: u32) -> Duration {
+        let base = self.cfg.backoff_base.as_millis() as u64;
+        let cap = self.cfg.backoff_cap.as_millis() as u64;
+        let exp = base.saturating_mul(1u64 << attempt.min(20)).min(cap.max(1));
+        // xorshift64
+        let mut x = self.jitter;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.jitter = x;
+        let ms = exp / 2 + x % (exp / 2 + 1);
+        Duration::from_millis(ms)
+    }
+
+    /// Send one frame, return the reply body after `OK `. `idempotent`
+    /// gates the retry loop: retryable failures ([`ClientError`]) of
+    /// idempotent frames are retried with backoff, reconnecting after
+    /// transport errors.
+    fn request(&mut self, frame: &str, idempotent: bool) -> Result<String> {
+        let attempts = if idempotent { self.cfg.retries } else { 0 };
+        let mut tried = 0u32;
+        loop {
+            match self.roundtrip_once(frame) {
+                Ok(body) => return Ok(body),
+                Err(e) if e.is_retryable() && tried < attempts => {
+                    let delay = self.backoff_delay(tried);
+                    tried += 1;
+                    std::thread::sleep(delay);
+                    // transport errors already dropped the connection;
+                    // roundtrip_once re-dials lazily
+                }
+                Err(e) => return Err(anyhow::Error::new(e).context(format!("frame `{frame}`"))),
+            }
+        }
+    }
+
+    /// Override the retry budget on a live client (0 disables retries).
+    pub fn set_retries(&mut self, retries: u32) {
+        self.cfg.retries = retries;
     }
 
     /// Registered codec names on the server.
     pub fn methods(&mut self) -> Result<Vec<String>> {
-        Ok(split_list(&self.roundtrip("methods")?))
+        Ok(split_list(&self.request("methods", true)?))
     }
 
     /// Artifact names in the server's store directory.
     pub fn list(&mut self) -> Result<Vec<String>> {
-        Ok(split_list(&self.roundtrip("list")?))
+        Ok(split_list(&self.request("list", true)?))
     }
 
     /// Load an artifact (starting its shard server-side).
     pub fn open(&mut self, name: &str) -> Result<RemoteMeta> {
-        let body = self.roundtrip(&format!("open {name}"))?;
+        let body = self.request(&format!("open {name}"), true)?;
         parse_meta(&body)
     }
 
     /// Metadata without starting a shard.
     pub fn stat(&mut self, name: &str) -> Result<RemoteMeta> {
-        let body = self.roundtrip(&format!("stat {name}"))?;
+        let body = self.request(&format!("stat {name}"), true)?;
         parse_meta(&body)
     }
 
@@ -94,27 +307,31 @@ impl ServeClient {
     /// after `tcz append`): revalidates, hot-reloads when stale, and
     /// returns the fresh metadata with its reload generation.
     pub fn reload(&mut self, name: &str) -> Result<RemoteMeta> {
-        let body = self.roundtrip(&format!("reload {name}"))?;
+        let body = self.request(&format!("reload {name}"), true)?;
         parse_meta(&body)
     }
 
     /// Decode one entry.
     pub fn get(&mut self, name: &str, coords: &[usize]) -> Result<f32> {
-        let body = self.roundtrip(&format!("get {name} {}", fmt_coords(coords)))?;
+        let body = self.request(&format!("get {name} {}", fmt_coords(coords)), true)?;
         body.parse().with_context(|| format!("bad value `{body}`"))
     }
 
     /// Decode a batch; values come back in request order.
     pub fn batch_get(&mut self, name: &str, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
         let block: Vec<String> = coords.iter().map(|c| fmt_coords(c)).collect();
-        let body = self.roundtrip(&format!("batch-get {name} {}", block.join(";")))?;
+        let body = self.request(&format!("batch-get {name} {}", block.join(";")), true)?;
         let vals: Result<Vec<f32>> = body
             .split(',')
             .map(|v| v.parse().with_context(|| format!("bad value `{v}`")))
             .collect();
         let vals = vals?;
         if vals.len() != coords.len() {
-            bail!("batch-get returned {} values for {} coords", vals.len(), coords.len());
+            bail!(
+                "batch-get returned {} values for {} coords",
+                vals.len(),
+                coords.len()
+            );
         }
         Ok(vals)
     }
@@ -143,6 +360,10 @@ fn parse_meta(body: &str) -> Result<RemoteMeta> {
     let mut tile_hits = 0u64;
     let mut tile_misses = 0u64;
     let mut tile_bytes = 0usize;
+    let mut health = String::from("ok");
+    let mut shed = 0u64;
+    let mut timeouts = 0u64;
+    let mut quarantined = 0u64;
     for field in body.split_whitespace() {
         let (k, v) = field
             .split_once('=')
@@ -164,6 +385,10 @@ fn parse_meta(body: &str) -> Result<RemoteMeta> {
             "tile_hits" => tile_hits = v.parse().context("bad tile_hits")?,
             "tile_misses" => tile_misses = v.parse().context("bad tile_misses")?,
             "tile_bytes" => tile_bytes = v.parse().context("bad tile_bytes")?,
+            "health" => health = v.to_string(),
+            "shed" => shed = v.parse().context("bad shed")?,
+            "timeouts" => timeouts = v.parse().context("bad timeouts")?,
+            "quarantined" => quarantined = v.parse().context("bad quarantined")?,
             _ => {} // forward-compatible: ignore unknown fields
         }
     }
@@ -178,5 +403,9 @@ fn parse_meta(body: &str) -> Result<RemoteMeta> {
         tile_hits,
         tile_misses,
         tile_bytes,
+        health,
+        shed,
+        timeouts,
+        quarantined,
     })
 }

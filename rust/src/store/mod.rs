@@ -25,20 +25,49 @@
 //! * [`server::ArtifactServer`] — routes `open` / `get` / `batch-get` /
 //!   `stat` requests to shards, and a TCP front-end speaking the line
 //!   protocol v2 (artifact id + coordinate block per frame).
-//! * [`client::ServeClient`] — the matching protocol v2 client.
+//! * [`client::ServeClient`] — the matching protocol v2 client, with
+//!   socket timeouts and retry-with-backoff restricted to idempotent
+//!   verbs.
+//! * [`faults::FaultPlane`] — an opt-in deterministic fault-injection
+//!   layer over store file reads and serving sockets, used by the
+//!   robustness test suite and the degraded-mode bench section.
+//!
+//! Failure handling: a container that fails to parse on load or hot
+//! reload is **quarantined** — the store keeps serving the last-good
+//! resident generation when one exists and surfaces the state through
+//! [`ArtifactStore::health`]. On startup a crash-recovery scan walks the
+//! directory, removes stale atomic-write temp files, repairs v3
+//! containers with a torn trailing segment back to their last-good
+//! prefix, and pre-quarantines files no repair can recover.
+
+// The serving loop must never come down with a panic a malformed file or
+// poisoned lock could reach: no unwrap/expect anywhere in the store
+// module tree outside tests (test modules opt back in explicitly).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod client;
+pub mod faults;
 pub mod planner;
 pub mod server;
 pub mod shard;
 pub mod tilecache;
 
-use crate::codec::{load_artifact, Artifact, ArtifactMeta};
-use anyhow::{bail, Context, Result};
+use crate::codec::{container, Artifact, ArtifactMeta};
+use anyhow::{anyhow, bail, Context, Result};
+use faults::FaultPlane;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+/// Store state is updated in small all-or-nothing critical sections, so a
+/// poisoned guard's data is still structurally consistent — recovering it
+/// keeps one panicked shard thread from wedging every future request
+/// with a `PoisonError` (or, under `unwrap`, taking the server down).
+pub(crate) fn lock_unpoisoned<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// File identity at load time: mtime + length + a hash of the first
 /// 4 KiB. A mismatch on a later `open` means the container changed on
@@ -120,9 +149,20 @@ pub struct Opened {
     pub reloaded: bool,
 }
 
+/// Per-artifact serving health, surfaced through protocol v2 `stat`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Ok,
+    /// The on-disk container failed to load (parse/checksum/I/O error) —
+    /// the store serves the last-good resident generation if one exists.
+    Quarantined,
+}
+
 struct Inner {
     entries: HashMap<String, Arc<StoreEntry>>,
     resident_bytes: usize,
+    /// name -> why its last load failed; cleared by the next good load.
+    quarantine: HashMap<String, String>,
 }
 
 /// Lazily-loading, LRU-bounded artifact cache over a directory of `.tcz`
@@ -135,6 +175,15 @@ pub struct ArtifactStore {
     cache_bytes: usize,
     tick: AtomicU64,
     inner: Mutex<Inner>,
+    /// Optional fault-injection plane wrapping artifact file reads
+    /// (`None` in production: the hot path pays one discriminant check).
+    faults: Option<Arc<FaultPlane>>,
+    /// Total load failures that quarantined an artifact (monotonic; the
+    /// `quarantine` map itself shrinks when a good load heals a name).
+    quarantine_events: AtomicU64,
+    /// Torn v3 containers repaired to their last-good prefix by the
+    /// startup recovery scan.
+    recovered: u64,
 }
 
 /// Artifact names are bare file stems, restricted to characters that are
@@ -152,14 +201,115 @@ fn validate_name(name: &str) -> Result<()> {
     Ok(())
 }
 
+/// Minimum age before a leftover `*.tcz.tmp.<pid>` atomic-write temp is
+/// reclaimed by the recovery scan — young temps may belong to a writer
+/// that is mid-`replace_file` right now.
+const TMP_REAP_AGE: std::time::Duration = std::time::Duration::from_secs(60);
+
+/// Crash-recovery walk over a store directory, run once when the store
+/// opens: reap stale atomic-write temps, structurally scan every
+/// addressable `.tcz` (frame-length walk, no payload decode), repair v3
+/// containers with a torn trailing segment back to their last-good
+/// prefix, and return the pre-quarantine map for everything unrecoverable
+/// plus the number of repaired files. Never fails the store open: a
+/// directory the scan cannot read simply yields no findings (every later
+/// `open` still validates per-file).
+fn recovery_scan(dir: &Path) -> (HashMap<String, String>, u64) {
+    recovery_scan_with_reap_age(dir, TMP_REAP_AGE)
+}
+
+fn recovery_scan_with_reap_age(
+    dir: &Path,
+    reap_age: std::time::Duration,
+) -> (HashMap<String, String>, u64) {
+    let mut quarantine = HashMap::new();
+    let mut recovered = 0u64;
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return (quarantine, recovered);
+    };
+    for entry in rd.flatten() {
+        let path = entry.path();
+        let Some(fname) = path.file_name().and_then(|s| s.to_str()) else {
+            continue;
+        };
+        // leftover temp from a crashed atomic write: reap once it is old
+        // enough that no live writer can still be about to rename it
+        if fname.contains(".tcz.tmp.") {
+            let old = std::fs::metadata(&path)
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|t| t.elapsed().ok())
+                .is_some_and(|age| age >= reap_age);
+            if old {
+                let _ = std::fs::remove_file(&path);
+            }
+            continue;
+        }
+        if path.extension().and_then(|e| e.to_str()) != Some("tcz") {
+            continue;
+        }
+        let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else {
+            continue;
+        };
+        if validate_name(stem).is_err() {
+            continue; // unaddressable: the protocol can never serve it
+        }
+        match container::scan_file(&path) {
+            Ok(container::FileScan::Intact) => {}
+            Ok(container::FileScan::TornTail { keep_segments }) => {
+                match container::repair_torn_tail(&path, keep_segments) {
+                    Ok(()) => {
+                        eprintln!(
+                            "tcz store: repaired torn append in {} (kept {keep_segments} segments)",
+                            path.display()
+                        );
+                        recovered += 1;
+                    }
+                    Err(e) => {
+                        eprintln!("tcz store: quarantining {}: {e:#}", path.display());
+                        quarantine.insert(stem.to_string(), format!("torn-tail repair failed: {e:#}"));
+                    }
+                }
+            }
+            Ok(container::FileScan::Corrupt(msg)) => {
+                eprintln!("tcz store: quarantining {}: {msg}", path.display());
+                quarantine.insert(stem.to_string(), msg);
+            }
+            Err(e) => {
+                eprintln!("tcz store: quarantining {}: {e:#}", path.display());
+                quarantine.insert(stem.to_string(), format!("scan failed: {e:#}"));
+            }
+        }
+    }
+    (quarantine, recovered)
+}
+
 impl ArtifactStore {
     /// Open a store over `dir` with an LRU byte budget. The budget is a
     /// soft floor of one entry: the most recent artifact always stays
     /// resident even when it alone exceeds the budget.
+    ///
+    /// Opening runs the crash-recovery scan: stale atomic-write temp
+    /// files are removed, v3 containers with a torn trailing segment
+    /// (a crash mid-`tcz append`) are repaired back to their last-good
+    /// prefix, and files no repair can recover start out quarantined.
     pub fn new(dir: &Path, cache_bytes: usize) -> Result<ArtifactStore> {
+        Self::with_faults(dir, cache_bytes, None)
+    }
+
+    /// [`ArtifactStore::new`] with an optional fault-injection plane
+    /// wrapping artifact file reads (tests/benches; the CLI arms it from
+    /// `TCZ_FAULT`). The recovery scan itself reads the disk directly —
+    /// injected faults model runtime I/O, not the startup walk.
+    pub fn with_faults(
+        dir: &Path,
+        cache_bytes: usize,
+        faults: Option<Arc<FaultPlane>>,
+    ) -> Result<ArtifactStore> {
         if !dir.is_dir() {
             bail!("artifact directory {} does not exist", dir.display());
         }
+        let (quarantine, recovered) = recovery_scan(dir);
         Ok(ArtifactStore {
             dir: dir.to_path_buf(),
             cache_bytes,
@@ -167,8 +317,43 @@ impl ArtifactStore {
             inner: Mutex::new(Inner {
                 entries: HashMap::new(),
                 resident_bytes: 0,
+                quarantine,
             }),
+            faults,
+            quarantine_events: AtomicU64::new(0),
+            recovered,
         })
+    }
+
+    /// Serving health of `name`: quarantined iff its last load (or the
+    /// startup scan) failed and no good load has healed it since.
+    pub fn health(&self, name: &str) -> Health {
+        if lock_unpoisoned(&self.inner).quarantine.contains_key(name) {
+            Health::Quarantined
+        } else {
+            Health::Ok
+        }
+    }
+
+    /// Names currently quarantined (load failed, not yet healed).
+    pub fn quarantined_count(&self) -> usize {
+        lock_unpoisoned(&self.inner).quarantine.len()
+    }
+
+    /// Why `name` is quarantined, if it is.
+    pub fn quarantine_reason(&self, name: &str) -> Option<String> {
+        lock_unpoisoned(&self.inner).quarantine.get(name).cloned()
+    }
+
+    /// Total load failures that quarantined an artifact since open
+    /// (monotonic counter, includes names later healed).
+    pub fn quarantine_events(&self) -> u64 {
+        self.quarantine_events.load(Ordering::Relaxed)
+    }
+
+    /// Torn containers the startup recovery scan repaired.
+    pub fn recovered_count(&self) -> u64 {
+        self.recovered
     }
 
     /// Names of every `.tcz` artifact in the directory (sorted). Stems
@@ -206,17 +391,17 @@ impl ArtifactStore {
 
     /// The entry if it is currently resident (no load, no recency bump).
     pub fn peek(&self, name: &str) -> Option<Arc<StoreEntry>> {
-        self.inner.lock().expect("store lock").entries.get(name).cloned()
+        lock_unpoisoned(&self.inner).entries.get(name).cloned()
     }
 
     /// Resident container bytes (test/introspection hook).
     pub fn resident_bytes(&self) -> usize {
-        self.inner.lock().expect("store lock").resident_bytes
+        lock_unpoisoned(&self.inner).resident_bytes
     }
 
     /// Number of resident entries (test/introspection hook).
     pub fn resident_count(&self) -> usize {
-        self.inner.lock().expect("store lock").entries.len()
+        lock_unpoisoned(&self.inner).entries.len()
     }
 
     /// Metadata for `name` without touching the cache: a resident,
@@ -233,14 +418,26 @@ impl ArtifactStore {
         let path = self.dir.join(format!("{name}.tcz"));
         if let Some(entry) = self.peek(name) {
             match file_stamp(&path) {
-                // file changed on disk: report the on-disk header
-                Ok(now) if now != entry.stamp => {}
+                // file changed on disk: report the on-disk header — but a
+                // corrupted replacement must not hide the meta of the
+                // last-good generation still being served
+                Ok(now) if now != entry.stamp => {
+                    return match container::peek_meta_file(&path) {
+                        Ok(meta) => Ok(meta),
+                        Err(_) => Ok(entry.meta.clone()),
+                    };
+                }
                 // unchanged — or unstattable (deleted out from under a
                 // still-serving entry): answer from memory, as before
                 _ => return Ok(entry.meta.clone()),
             }
         }
-        crate::codec::container::peek_meta_file(&path)
+        container::peek_meta_file(&path).map_err(|e| {
+            match self.quarantine_reason(name) {
+                Some(reason) => anyhow!("artifact quarantined: {reason}"),
+                None => e,
+            }
+        })
     }
 
     /// Get `name`, loading `<dir>/<name>.tcz` on a cache miss and evicting
@@ -281,10 +478,22 @@ impl ArtifactStore {
         // the new file — the next open heals it with one extra reload
         // (a post-read stamp could pin stale content forever).
         let stamp = file_stamp(&path)?;
-        let artifact = load_artifact(&path)?;
+        let loaded = match &self.faults {
+            Some(plane) => plane.read_store_file(&path),
+            None => std::fs::read(&path).with_context(|| format!("open {}", path.display())),
+        }
+        .and_then(|bytes| container::artifact_from_bytes(&bytes));
+        let artifact = match loaded {
+            Ok(a) => {
+                // a good load heals any standing quarantine for this name
+                lock_unpoisoned(&self.inner).quarantine.remove(name);
+                a
+            }
+            Err(e) => return self.quarantine_load_failure(name, e),
+        };
         let bytes = (stamp.len as usize).max(artifact.resident_bytes());
         let meta = artifact.meta();
-        let mut inner = self.inner.lock().expect("store lock");
+        let mut inner = lock_unpoisoned(&self.inner);
         let mut reloaded = stale_generation.is_some();
         let mut generation = stale_generation.map_or(0, |g| g + 1);
         if let Some(existing) = inner.entries.get(name) {
@@ -302,8 +511,9 @@ impl ArtifactStore {
             // replace the stale entry, recharging the byte budget
             generation = generation.max(existing.generation + 1);
             reloaded = true;
-            let gone = inner.entries.remove(name).expect("resident entry");
-            inner.resident_bytes -= gone.bytes;
+            if let Some(gone) = inner.entries.remove(name) {
+                inner.resident_bytes = inner.resident_bytes.saturating_sub(gone.bytes);
+            }
         }
         let entry = Arc::new(StoreEntry {
             name: name.to_string(),
@@ -338,9 +548,35 @@ impl ArtifactStore {
             reloaded,
         })
     }
+
+    /// A load (cold or hot-reload) failed: record the quarantine and keep
+    /// serving the last-good resident generation when one exists. Only
+    /// when there is no resident generation does the caller see an error.
+    fn quarantine_load_failure(&self, name: &str, err: anyhow::Error) -> Result<Opened> {
+        self.quarantine_events.fetch_add(1, Ordering::Relaxed);
+        let last_good = {
+            let mut inner = lock_unpoisoned(&self.inner);
+            inner.quarantine.insert(name.to_string(), format!("{err:#}"));
+            inner.entries.get(name).cloned()
+        };
+        match last_good {
+            Some(entry) => {
+                self.touch(&entry);
+                Ok(Opened {
+                    entry,
+                    evicted: Vec::new(),
+                    reloaded: false,
+                })
+            }
+            None => Err(err.context(format!(
+                "artifact `{name}` quarantined (no last-good generation resident)"
+            ))),
+        }
+    }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::codec::{self, Budget, CodecConfig};
@@ -549,6 +785,96 @@ mod tests {
         assert_eq!(o.evicted, vec!["x".to_string()]);
         assert_eq!(store.resident_count(), 1);
         assert!(store.resident_bytes() <= sx.max(sy));
+    }
+
+    #[test]
+    fn corrupt_reload_quarantines_and_serves_last_good() {
+        let dir = store_dir("quarantine");
+        save(&dir, "q", "ttd", &[5, 4, 3], 40);
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        let o1 = store.open("q").unwrap();
+        let baseline = o1.entry.artifact.lock().unwrap().decode_all();
+        assert_eq!(store.health("q"), Health::Ok);
+        // clobber the file in place with garbage (no atomic temp+rename:
+        // this models external corruption, not a normal writer)
+        std::fs::write(dir.join("q.tcz"), b"TCZ2 this is not a container").unwrap();
+        let o2 = store.open("q").unwrap();
+        assert_eq!(store.health("q"), Health::Quarantined);
+        assert!(store.quarantine_reason("q").is_some());
+        assert_eq!(store.quarantine_events(), 1);
+        assert!(Arc::ptr_eq(&o1.entry, &o2.entry), "must serve last-good");
+        let again = o2.entry.artifact.lock().unwrap().decode_all();
+        assert_eq!(baseline.data(), again.data(), "last-good must stay bit-stable");
+        // stat on a quarantined-but-resident name reports last-good meta
+        assert_eq!(store.stat("q").unwrap().shape, vec![5, 4, 3]);
+        // a good rewrite heals the quarantine
+        save(&dir, "q", "ttd", &[6, 4, 3], 41);
+        let o3 = store.open("q").unwrap();
+        assert_eq!(store.health("q"), Health::Ok);
+        assert!(o3.reloaded);
+        assert_eq!(o3.entry.meta.shape, vec![6, 4, 3]);
+    }
+
+    #[test]
+    fn cold_corrupt_open_errors_with_quarantine() {
+        let dir = store_dir("quarantine_cold");
+        std::fs::write(dir.join("junk.tcz"), b"TCZ2 garbage").unwrap();
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        // the startup scan already pre-quarantined it
+        assert_eq!(store.health("junk"), Health::Quarantined);
+        let err = store.open("junk").unwrap_err();
+        assert!(format!("{err:#}").contains("quarantined"), "{err:#}");
+        let err = store.stat("junk").unwrap_err();
+        assert!(format!("{err:#}").contains("quarantined"), "{err:#}");
+    }
+
+    #[test]
+    fn recovery_scan_reaps_stale_temps_and_flags_corruption() {
+        let dir = store_dir("recovery_scan");
+        save(&dir, "good", "ttd", &[5, 4, 3], 42);
+        std::fs::write(dir.join("bad.tcz"), b"XXXX not a container").unwrap();
+        let tmp = dir.join("good.tcz.tmp.12345");
+        std::fs::write(&tmp, b"partial").unwrap();
+        // with a zero reap age the stale temp goes; the scan flags the
+        // corrupt container and passes the good one
+        let (quarantine, recovered) =
+            recovery_scan_with_reap_age(&dir, std::time::Duration::ZERO);
+        assert!(!tmp.exists(), "stale temp must be reaped");
+        assert!(quarantine.contains_key("bad"));
+        assert!(!quarantine.contains_key("good"));
+        assert_eq!(recovered, 0);
+        // under the production reap age a fresh temp survives the scan
+        // (it could belong to a writer mid-replace right now)
+        let fresh = dir.join("good.tcz.tmp.999");
+        std::fs::write(&fresh, b"inflight").unwrap();
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        assert!(fresh.exists(), "fresh temp must not be reaped");
+        assert_eq!(store.health("good"), Health::Ok);
+        assert_eq!(store.health("bad"), Health::Quarantined);
+        assert_eq!(store.quarantined_count(), 1);
+        store.open("good").unwrap();
+        std::fs::remove_file(&fresh).unwrap();
+        std::fs::remove_file(dir.join("bad.tcz")).unwrap();
+    }
+
+    #[test]
+    fn injected_file_faults_quarantine_then_heal() {
+        use super::faults::{FaultPlane, FaultSpec};
+        let dir = store_dir("file_faults");
+        save(&dir, "f", "ttd", &[5, 4, 3], 43);
+        let plane = Arc::new(FaultPlane::new(
+            FaultSpec::parse("seed=5,file_err=1.0").unwrap(),
+        ));
+        let store = ArtifactStore::with_faults(&dir, usize::MAX, Some(plane.clone())).unwrap();
+        let err = store.open("f").unwrap_err();
+        assert!(format!("{err:#}").contains("injected"), "{err:#}");
+        assert_eq!(store.health("f"), Health::Quarantined);
+        // heal: a store whose plane injects nothing loads fine
+        let calm = Arc::new(FaultPlane::new(FaultSpec::parse("seed=5").unwrap()));
+        let store = ArtifactStore::with_faults(&dir, usize::MAX, Some(calm)).unwrap();
+        let o = store.open("f").unwrap();
+        assert_eq!(o.entry.meta.shape, vec![5, 4, 3]);
+        assert_eq!(store.health("f"), Health::Ok);
     }
 
     #[test]

@@ -158,7 +158,7 @@ pub fn decode_via_tiles(
         .collect();
     missing.sort_unstable();
     if !missing.is_empty() {
-        let mut art = artifact.lock().expect("artifact lock");
+        let mut art = super::lock_unpoisoned(artifact);
         for &t in &missing {
             let (lo, ext) = tiling.tile_bounds(t);
             let mut vals = Vec::new();
@@ -178,12 +178,23 @@ pub fn decode_via_tiles(
     }
     out.reserve(coords.len());
     for (c, t) in coords.iter().zip(&owner) {
-        let vals = tiles[t].as_ref().expect("tile decoded");
-        out.push(vals[tiling.offset_in_tile(c)]);
+        match tiles.get(t).and_then(|v| v.as_ref()) {
+            Some(vals) => out.push(vals[tiling.offset_in_tile(c)]),
+            // Unreachable by construction (every owner tile was either a
+            // cache hit or batch-decoded above) — but if it ever happens,
+            // decode the single cell rather than panic the shard worker.
+            None => {
+                let mut one = Vec::with_capacity(1);
+                let ext = vec![1usize; c.len()];
+                super::lock_unpoisoned(artifact).decode_block(c, &ext, &mut one);
+                out.push(one.first().copied().unwrap_or(f32::NAN));
+            }
+        }
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::codec::{by_name, Budget, CodecConfig};

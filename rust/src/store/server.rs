@@ -42,16 +42,53 @@
 //! `get`/`batch-get` on a cached shard never stat the filesystem: the
 //! reload notification path is an explicit `open`/`reload` frame.
 
+use super::faults::FaultPlane;
+use super::lock_unpoisoned;
 use super::shard::Shard;
 use super::tilecache::TileCache;
-use super::ArtifactStore;
+use super::{ArtifactStore, Health};
 use crate::codec::{self, ArtifactMeta};
 use crate::coordinator::batcher::BatchPolicy;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::net::TcpListener;
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Robustness limits for the serving path. The library defaults are all
+/// *unlimited/off* so embedded uses (tests, benches) keep their exact
+/// blocking semantics; the CLI installs real production defaults
+/// (`--request-timeout`, `--max-inflight`).
+#[derive(Debug, Clone)]
+pub struct ServeLimits {
+    /// Per-request decode deadline; also turns the shard enqueue into a
+    /// non-blocking admission (`overloaded` shed instead of blocking on a
+    /// full queue). `None` = block indefinitely (legacy behavior).
+    pub request_timeout: Option<Duration>,
+    /// Server-wide cap on concurrently executing `get`/`batch-get`
+    /// requests; excess requests are shed with an `ERR overloaded` reply.
+    /// `0` = unbounded.
+    pub max_inflight: usize,
+    /// Socket read/write timeout per connection (the TCP front-end).
+    /// `None` = blocking sockets.
+    pub io_timeout: Option<Duration>,
+    /// Reap a connection after this much time without a complete frame.
+    /// `None` = never reap.
+    pub idle_timeout: Option<Duration>,
+}
+
+impl Default for ServeLimits {
+    fn default() -> Self {
+        ServeLimits {
+            request_timeout: None,
+            max_inflight: 0,
+            io_timeout: None,
+            idle_timeout: None,
+        }
+    }
+}
 
 /// Knobs for the multi-artifact server.
 #[derive(Debug, Clone)]
@@ -68,6 +105,11 @@ pub struct StoreServeConfig {
     pub allow_xla: bool,
     /// Connections accepted before the TCP front-end drains and exits.
     pub max_conns: usize,
+    /// Deadlines, admission gate and socket/idle timeouts.
+    pub limits: ServeLimits,
+    /// Optional deterministic fault-injection plane (tests/CI chaos jobs;
+    /// the CLI arms it from `TCZ_FAULT`). `None` in production.
+    pub faults: Option<Arc<FaultPlane>>,
 }
 
 impl Default for StoreServeConfig {
@@ -78,6 +120,8 @@ impl Default for StoreServeConfig {
             tile_bytes: TileCache::bytes_from_env(),
             allow_xla: false,
             max_conns: 64,
+            limits: ServeLimits::default(),
+            faults: None,
         }
     }
 }
@@ -91,6 +135,28 @@ pub struct ArtifactServer {
     /// disabled).
     tiles: Option<Arc<TileCache>>,
     shards: Mutex<HashMap<String, Arc<Shard>>>,
+    limits: ServeLimits,
+    /// Concurrently executing `get`/`batch-get` requests (admission gate).
+    inflight: AtomicUsize,
+    /// Requests shed with an `overloaded` reply (admission gate or full
+    /// shard queue).
+    shed: AtomicU64,
+    /// Requests that hit their per-request deadline waiting for a decode.
+    deadline_timeouts: AtomicU64,
+    /// Set by [`ArtifactServer::drain`]: new decode requests are refused,
+    /// in-flight ones finish.
+    draining: AtomicBool,
+    faults: Option<Arc<FaultPlane>>,
+}
+
+/// RAII in-flight permit: decrements the gate on drop, so sheds, errors
+/// and panics all release their slot.
+struct InflightPermit<'a>(&'a AtomicUsize);
+
+impl Drop for InflightPermit<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
 }
 
 impl ArtifactServer {
@@ -107,18 +173,107 @@ impl ArtifactServer {
         allow_xla: bool,
         tile_bytes: usize,
     ) -> ArtifactServer {
+        ArtifactServer::with_options(
+            store,
+            policy,
+            allow_xla,
+            tile_bytes,
+            ServeLimits::default(),
+            None,
+        )
+    }
+
+    /// Full-option constructor: deadlines/admission limits plus an
+    /// optional fault plane for request-path stall injection.
+    pub fn with_options(
+        store: ArtifactStore,
+        policy: BatchPolicy,
+        allow_xla: bool,
+        tile_bytes: usize,
+        limits: ServeLimits,
+        faults: Option<Arc<FaultPlane>>,
+    ) -> ArtifactServer {
         ArtifactServer {
             store,
             policy,
             allow_xla,
             tiles: (tile_bytes > 0).then(|| Arc::new(TileCache::new(tile_bytes))),
             shards: Mutex::new(HashMap::new()),
+            limits,
+            inflight: AtomicUsize::new(0),
+            shed: AtomicU64::new(0),
+            deadline_timeouts: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+            faults,
         }
     }
 
     /// The backing store (test/introspection hook).
     pub fn store(&self) -> &ArtifactStore {
         &self.store
+    }
+
+    /// Requests shed so far with an `overloaded` reply.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Acquire)
+    }
+
+    /// Requests that hit their per-request deadline so far.
+    pub fn deadline_timeout_count(&self) -> u64 {
+        self.deadline_timeouts.load(Ordering::Acquire)
+    }
+
+    /// True once [`ArtifactServer::drain`] has been called.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Graceful drain: refuse new decode requests (explicit `ERR draining`
+    /// replies), let in-flight requests finish, then stop every shard
+    /// worker. `BulkShard`'s drop drains its queue before joining, so no
+    /// already-queued request loses its reply.
+    pub fn drain(&self) {
+        self.draining.store(true, Ordering::Release);
+        lock_unpoisoned(&self.shards).clear();
+    }
+
+    /// Take an in-flight slot, shedding when the gate is full or the
+    /// server is draining. The returned permit releases the slot on drop.
+    fn admit(&self) -> Result<Option<InflightPermit<'_>>> {
+        if self.is_draining() {
+            bail!("draining: server is shutting down");
+        }
+        if self.limits.max_inflight == 0 {
+            return Ok(None); // unbounded: no permit needed
+        }
+        let prev = self.inflight.fetch_add(1, Ordering::AcqRel);
+        let permit = InflightPermit(&self.inflight);
+        if prev >= self.limits.max_inflight {
+            drop(permit);
+            // the `overloaded` prefix is the classification contract:
+            // track() bumps the shed counter, clients treat it retryable
+            bail!(
+                "overloaded: {} requests in flight (limit {})",
+                prev + 1,
+                self.limits.max_inflight
+            );
+        }
+        Ok(Some(permit))
+    }
+
+    /// Classify a decode-path error into the shed/deadline counters (the
+    /// batcher's deadline variants use stable `overloaded`/`deadline`
+    /// message prefixes).
+    fn track<T>(&self, r: Result<T>) -> Result<T> {
+        if let Err(e) = &r {
+            let msg = format!("{e:#}");
+            if msg.starts_with("overloaded") {
+                self.shed.fetch_add(1, Ordering::AcqRel);
+            } else if msg.starts_with("deadline") {
+                self.deadline_timeouts.fetch_add(1, Ordering::AcqRel);
+            }
+        }
+        r
     }
 
     /// `(tile_hits, tile_misses, tile_bytes)` of the decoded-tile cache;
@@ -139,8 +294,11 @@ impl ArtifactServer {
     /// path); either way it still serves its in-flight requests through
     /// its own entry `Arc`.
     fn shard(&self, name: &str) -> Result<Arc<Shard>> {
+        if self.is_draining() {
+            bail!("draining: server is shutting down");
+        }
         {
-            let mut shards = self.shards.lock().expect("shard map");
+            let mut shards = lock_unpoisoned(&self.shards);
             if let Some(shard) = shards.get(name) {
                 if let Some(entry) = self.store.peek(name) {
                     if Arc::ptr_eq(shard.entry(), &entry) {
@@ -164,7 +322,7 @@ impl ArtifactServer {
     /// reused, a stale-generation shard is retired.
     fn install_shard(&self, name: &str, opened: super::Opened) -> Result<(Arc<Shard>, bool)> {
         let reloaded = opened.reloaded;
-        let mut shards = self.shards.lock().expect("shard map");
+        let mut shards = lock_unpoisoned(&self.shards);
         for gone in &opened.evicted {
             shards.remove(gone);
         }
@@ -187,10 +345,13 @@ impl ArtifactServer {
             self.allow_xla,
             self.tiles.clone(),
         )?);
-        if self
-            .store
-            .peek(name)
-            .is_some_and(|e| Arc::ptr_eq(shard.entry(), &e))
+        // never cache a shard on a draining server — drain() already swept
+        // the map, and a late insert would leave a live worker behind
+        if !self.is_draining()
+            && self
+                .store
+                .peek(name)
+                .is_some_and(|e| Arc::ptr_eq(shard.entry(), &e))
         {
             shards.insert(name.to_string(), shard.clone());
         }
@@ -201,6 +362,9 @@ impl ArtifactServer {
     /// is hot-reloaded and the old-generation shard retired. Returns the
     /// (possibly fresh) shard plus whether a reload happened.
     fn shard_validated(&self, name: &str) -> Result<(Arc<Shard>, bool)> {
+        if self.is_draining() {
+            bail!("draining: server is shutting down");
+        }
         let opened = self.store.open(name)?;
         self.install_shard(name, opened)
     }
@@ -249,20 +413,44 @@ impl ArtifactServer {
         self.store.list()
     }
 
-    /// Decode one entry of `name`.
+    /// Decode one entry of `name`. Subject to the admission gate and
+    /// per-request deadline ([`ServeLimits`]); shed/timed-out requests get
+    /// `overloaded`/`deadline`-prefixed errors and bump the counters.
     pub fn get(&self, name: &str, coords: &[usize]) -> Result<f32> {
-        self.shard(name)?.get(coords)
+        let r = self.get_inner(name, coords);
+        self.track(r)
     }
 
-    /// Decode a batch of entries of `name`, in request order.
+    fn get_inner(&self, name: &str, coords: &[usize]) -> Result<f32> {
+        let _permit = self.admit()?;
+        if let Some(f) = &self.faults {
+            f.stall_request();
+        }
+        self.shard(name)?
+            .get_deadline(coords, self.limits.request_timeout)
+    }
+
+    /// Decode a batch of entries of `name`, in request order. Same
+    /// admission/deadline semantics as [`ArtifactServer::get`]; the whole
+    /// block counts as one in-flight request.
     pub fn batch_get(&self, name: &str, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
-        self.shard(name)?.get_many(coords)
+        let r = self.batch_get_inner(name, coords);
+        self.track(r)
+    }
+
+    fn batch_get_inner(&self, name: &str, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
+        let _permit = self.admit()?;
+        if let Some(f) = &self.faults {
+            f.stall_request();
+        }
+        self.shard(name)?
+            .get_many_deadline(coords, self.limits.request_timeout)
     }
 
     /// Stop all shards, draining their queues (blocks until every worker
     /// joins; callers still holding shard `Arc`s delay only their shard).
     pub fn shutdown(self) {
-        self.shards.lock().expect("shard map").clear();
+        self.drain();
     }
 }
 
@@ -359,6 +547,19 @@ fn dispatch_frame(server: &ArtifactServer, line: &str, out: &mut String) -> Resu
                     " tile_hits={hits} tile_misses={misses} tile_bytes={bytes}"
                 );
             }
+            // health + robustness counters: per-artifact quarantine state,
+            // server-wide shed/deadline/quarantine totals
+            let health = match server.store().health(rest) {
+                Health::Ok => "ok",
+                Health::Quarantined => "quarantined",
+            };
+            let _ = write!(
+                out,
+                " health={health} shed={} timeouts={} quarantined={}",
+                server.shed_count(),
+                server.deadline_timeout_count(),
+                server.store().quarantined_count()
+            );
         }
         "get" => {
             let (name, coords) = rest
@@ -401,42 +602,119 @@ fn handle_frame(server: &ArtifactServer, line: &str, reply: &mut String) {
     reply.push('\n');
 }
 
+/// A read/write error kind that means "no data yet", not "peer gone":
+/// timeout-mode sockets surface `WouldBlock` (unix) or `TimedOut`
+/// (windows) when the timeout elapses.
+fn is_poll_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Largest accepted request frame. A line that grows past this without a
+/// terminator is a protocol violation (or garbage on the port); the
+/// connection gets one `ERR` and is closed instead of buffering
+/// unboundedly.
+const MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// Serve one connection: hand-rolled line framing over a chunked reader,
+/// so socket timeouts are observable mid-frame (a `BufReader::read_line`
+/// would conflate "timed out" with "stream ended"). Timeout polls check
+/// the drain flag and the idle reaper; everything else is the same
+/// frame-in/reply-out loop as before.
+fn serve_conn<R: std::io::Read, W: std::io::Write>(
+    server: &ArtifactServer,
+    mut reader: R,
+    mut writer: W,
+    limits: &ServeLimits,
+) {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut reply = String::new();
+    let mut last_frame = std::time::Instant::now();
+    'conn: loop {
+        // drain any complete frames already buffered
+        while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            let frame: Vec<u8> = buf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&frame[..pos]).into_owned();
+            last_frame = std::time::Instant::now();
+            handle_frame(server, &line, &mut reply);
+            if writer.write_all(reply.as_bytes()).is_err() {
+                break 'conn;
+            }
+        }
+        if buf.len() > MAX_FRAME_BYTES {
+            let _ = writer.write_all(b"ERR frame too large\n");
+            break;
+        }
+        if server.is_draining() {
+            // graceful drain: every buffered frame above got its reply;
+            // stop reading new ones
+            break;
+        }
+        match reader.read(&mut chunk) {
+            Ok(0) => break, // EOF (or an injected disconnect)
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if is_poll_timeout(&e) => {
+                if server.is_draining() {
+                    break;
+                }
+                if let Some(idle) = limits.idle_timeout {
+                    if last_frame.elapsed() >= idle {
+                        break; // reap the idle connection
+                    }
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
 /// Serve protocol v2 on an already-bound listener (used by tests to bind
 /// port 0 first). Accepts `max_conns` connections, then drains and exits.
+///
+/// Per-connection hardening comes from `cfg.limits`: socket read/write
+/// timeouts (`io_timeout`), idle-connection reaping (`idle_timeout`), the
+/// in-flight admission gate and per-request deadlines (enforced inside
+/// [`ArtifactServer`]). When `cfg.faults` is set, both store file reads
+/// and every connection's socket streams are wrapped in the deterministic
+/// fault plane.
 pub fn serve_store_listener(
     listener: TcpListener,
     dir: &Path,
     cfg: StoreServeConfig,
 ) -> Result<()> {
-    use std::io::{BufRead, BufReader, Write};
-    let store = ArtifactStore::new(dir, cfg.cache_bytes)?;
-    let server = Arc::new(ArtifactServer::with_tile_bytes(
+    let store = ArtifactStore::with_faults(dir, cfg.cache_bytes, cfg.faults.clone())?;
+    let server = Arc::new(ArtifactServer::with_options(
         store,
         cfg.policy,
         cfg.allow_xla,
         cfg.tile_bytes,
+        cfg.limits.clone(),
+        cfg.faults.clone(),
     ));
     let mut workers = Vec::new();
     for conn in listener.incoming().take(cfg.max_conns) {
         let stream = conn?;
         let server = server.clone();
+        let limits = cfg.limits.clone();
+        let faults = cfg.faults.clone();
         workers.push(std::thread::spawn(move || {
-            let mut out = match stream.try_clone() {
+            let _ = stream.set_nodelay(true);
+            // io_timeout turns reads into bounded polls, which is what
+            // lets the loop notice draining and reap idle connections
+            if let Some(t) = limits.io_timeout {
+                let _ = stream.set_read_timeout(Some(t));
+                let _ = stream.set_write_timeout(Some(t));
+            }
+            let out = match stream.try_clone() {
                 Ok(s) => s,
                 Err(_) => return,
             };
-            let reader = BufReader::new(stream);
-            // one reply buffer per connection, reused across frames
-            let mut reply = String::new();
-            for line in reader.lines() {
-                let line = match line {
-                    Ok(l) => l,
-                    Err(_) => break,
-                };
-                handle_frame(&server, &line, &mut reply);
-                if out.write_all(reply.as_bytes()).is_err() {
-                    break;
-                }
+            match faults {
+                Some(f) => serve_conn(&server, f.wrap(stream), f.wrap(out), &limits),
+                None => serve_conn(&server, stream, out, &limits),
             }
         }));
     }

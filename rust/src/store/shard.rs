@@ -16,11 +16,12 @@ use super::planner::{decode_via_tiles, Tiling};
 use super::tilecache::TileCache;
 use super::StoreEntry;
 use crate::coordinator::batcher::{
-    flatten_batch, next_batch, reply_batch, request_block, request_channel, request_one,
-    BatchPolicy, DecodeRequest,
+    flatten_batch, next_batch, reply_batch, request_block_deadline, request_channel,
+    request_one_deadline, BatchPolicy, DecodeRequest,
 };
 use crate::coordinator::server::DecodeServer;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
+use std::time::Duration;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
@@ -75,30 +76,39 @@ impl BulkShard {
                 let mut batches = 0u64;
                 let mut values: Vec<f32> = Vec::new();
                 while let Some(batch) = next_batch(&rx, &policy, &stop_worker) {
-                    let coords = flatten_batch(&batch);
-                    values.clear();
-                    match (&tiles, &tiling) {
-                        (Some(cache), Some(tiling)) => decode_via_tiles(
-                            cache,
-                            tiling,
-                            &entry.name,
-                            entry.generation,
-                            &entry.artifact,
-                            &coords,
-                            &mut values,
-                        ),
-                        // decode_many runs the batch on the kernel pool
-                        // (the chain evaluators split it at shared-prefix
-                        // boundaries) — this worker just assembles and
-                        // fans replies back out
-                        _ => entry
-                            .artifact
-                            .lock()
-                            .expect("artifact lock")
-                            .decode_many(&coords, &mut values),
+                    // Contain a panicking decode to the batch that caused
+                    // it: the waiters' reply channels drop (a clean
+                    // "dropped reply" error, never a wrong byte) and the
+                    // worker keeps serving later batches instead of
+                    // poisoning the whole shard.
+                    let decoded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        let coords = flatten_batch(&batch);
+                        values.clear();
+                        match (&tiles, &tiling) {
+                            (Some(cache), Some(tiling)) => decode_via_tiles(
+                                cache,
+                                tiling,
+                                &entry.name,
+                                entry.generation,
+                                &entry.artifact,
+                                &coords,
+                                &mut values,
+                            ),
+                            // decode_many runs the batch on the kernel pool
+                            // (the chain evaluators split it at shared-prefix
+                            // boundaries) — this worker just assembles and
+                            // fans replies back out
+                            _ => super::lock_unpoisoned(&entry.artifact)
+                                .decode_many(&coords, &mut values),
+                        }
+                    }));
+                    match decoded {
+                        Ok(()) => {
+                            batches += 1;
+                            reply_batch(batch, &values);
+                        }
+                        Err(_) => drop(batch),
                     }
-                    batches += 1;
-                    reply_batch(batch, &values);
                 }
                 batches
             })?;
@@ -109,8 +119,8 @@ impl BulkShard {
         })
     }
 
-    fn sender(&self) -> &SyncSender<DecodeRequest> {
-        self.tx.as_ref().expect("shard running")
+    fn sender(&self) -> Result<&SyncSender<DecodeRequest>> {
+        self.tx.as_ref().context("shard stopped")
     }
 }
 
@@ -151,12 +161,7 @@ impl Shard {
         tiles: Option<Arc<TileCache>>,
     ) -> Result<Shard> {
         if allow_xla {
-            let model = entry
-                .artifact
-                .lock()
-                .expect("artifact lock")
-                .as_model()
-                .cloned();
+            let model = super::lock_unpoisoned(&entry.artifact).as_model().cloned();
             if let Some(model) = model {
                 let server = DecodeServer::start(model, policy.clone())?;
                 return Ok(Shard {
@@ -189,10 +194,19 @@ impl Shard {
 
     /// Decode one entry (blocks until the shard's batcher flushes).
     pub fn get(&self, coords: &[usize]) -> Result<f32> {
+        self.get_deadline(coords, None)
+    }
+
+    /// [`Shard::get`] with an optional per-request deadline: a saturated
+    /// queue sheds with an `overloaded`-prefixed error instead of
+    /// blocking, and the reply wait is bounded (`deadline`-prefixed
+    /// error). XLA shards stay on their own blocking path — the
+    /// [`DecodeServer`] owns its queue discipline (deadline ignored).
+    pub fn get_deadline(&self, coords: &[usize], deadline: Option<Duration>) -> Result<f32> {
         check_coords(coords, self.shape())?;
         match &self.kind {
             ShardKind::Xla(server) => server.handle().get(coords),
-            ShardKind::Bulk(shard) => request_one(shard.sender(), coords),
+            ShardKind::Bulk(shard) => request_one_deadline(shard.sender()?, coords, deadline),
         }
     }
 
@@ -200,12 +214,22 @@ impl Shard {
     /// [`DecodeRequest::Block`] frame — a single queue slot and a single
     /// reply channel, regardless of block size.
     pub fn get_many(&self, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
+        self.get_many_deadline(coords, None)
+    }
+
+    /// [`Shard::get_many`] with admission + deadline semantics (see
+    /// [`Shard::get_deadline`]).
+    pub fn get_many_deadline(
+        &self,
+        coords: &[Vec<usize>],
+        deadline: Option<Duration>,
+    ) -> Result<Vec<f32>> {
         for c in coords {
             check_coords(c, self.shape())?;
         }
         match &self.kind {
             ShardKind::Xla(server) => server.handle().get_many(coords),
-            ShardKind::Bulk(shard) => request_block(shard.sender(), coords),
+            ShardKind::Bulk(shard) => request_block_deadline(shard.sender()?, coords, deadline),
         }
     }
 }

@@ -108,7 +108,7 @@ impl TileCache {
     /// batch).
     pub fn get(&self, key: &TileKey) -> Option<Arc<Vec<f32>>> {
         let now = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
-        let mut inner = self.inner.lock().expect("tile cache lock");
+        let mut inner = super::lock_unpoisoned(&self.inner);
         match inner.map.get_mut(key) {
             Some(t) => {
                 t.last_used = now;
@@ -132,7 +132,7 @@ impl TileCache {
         }
         let name_len = key.name.len();
         let now = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
-        let mut inner = self.inner.lock().expect("tile cache lock");
+        let mut inner = super::lock_unpoisoned(&self.inner);
         if let Some(old) = inner.map.insert(
             key,
             CachedTile {
@@ -167,7 +167,7 @@ impl TileCache {
     /// unaddressable, this just returns their bytes to the budget now
     /// instead of at eviction time.
     pub fn purge_stale(&self, name: &str, generation: u64) {
-        let mut inner = self.inner.lock().expect("tile cache lock");
+        let mut inner = super::lock_unpoisoned(&self.inner);
         let stale: Vec<TileKey> = inner
             .map
             .keys()
@@ -193,16 +193,17 @@ impl TileCache {
 
     /// Bytes currently charged against the budget.
     pub fn tile_bytes(&self) -> usize {
-        self.inner.lock().expect("tile cache lock").bytes
+        super::lock_unpoisoned(&self.inner).bytes
     }
 
     /// Resident tile count (test/inspection hook).
     pub fn tile_count(&self) -> usize {
-        self.inner.lock().expect("tile cache lock").map.len()
+        super::lock_unpoisoned(&self.inner).map.len()
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

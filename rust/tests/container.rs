@@ -283,3 +283,195 @@ fn save_load_roundtrip_three_codecs() {
     assert_eq!(b.meta().method, "tensorcodec");
     assert_eq!(before.data(), b.decode_all().data());
 }
+
+// ---------------------------------------------------------------------------
+// Torn-write / truncation hardening: every prefix of a valid container
+// must load as a clean Err (never a panic, never a silent success), the
+// crash-recovery scanner must classify cuts correctly, and a torn
+// mid-append write must be repaired back to the last-good generation.
+// ---------------------------------------------------------------------------
+
+use tensorcodec::codec::container::{artifact_from_bytes, repair_torn_tail, scan_file, FileScan};
+use tensorcodec::codec::{Appended, Segment};
+
+/// Build v2 / v3 / v4 container byte images for the sweep. The v3 image
+/// is a real two-segment append product; the byte offset where its
+/// segment region starts is returned alongside.
+fn sweep_images() -> Vec<(&'static str, Vec<u8>)> {
+    let c = codec::by_name("ttd").unwrap();
+    let cfg = CodecConfig::default();
+    let budget = Budget::Params(200);
+    let truth = DenseTensor::random_uniform(&[6, 5, 4], 77);
+    let plain = c.compress(&truth, &budget, &cfg).unwrap();
+    let v2 = codec::container::artifact_to_bytes(plain.as_ref()).unwrap();
+
+    // v3: save, then two single-slice appends through the real file path
+    let p = tmp("sweep_v3.tcz");
+    codec::save_artifact(&p, plain.as_ref()).unwrap();
+    let mut art = codec::load_artifact(&p).unwrap();
+    for round in 0..2u64 {
+        let slices = DenseTensor::random_uniform(&[1, 5, 4], 80 + round);
+        match c.append(&mut art, &slices, 0, &budget, &cfg).unwrap() {
+            Appended::Segment(payload) => {
+                let seg = Segment {
+                    axis: 0,
+                    rows: 1,
+                    payload,
+                };
+                codec::append_segment_file(&p, &seg, &art.meta().shape, art.size_bytes())
+                    .unwrap();
+            }
+            other => panic!("expected a segment append, got {}", other.kind()),
+        }
+    }
+    let v3 = std::fs::read(&p).unwrap();
+
+    // v4: error-bounded wrapper around a fresh inner artifact
+    let inner = c.compress(&truth, &budget, &cfg).unwrap();
+    let bounded = codec::bounded::wrap_with_bound(inner, &truth, 0.25).unwrap();
+    let v4 = codec::container::artifact_to_bytes(bounded.as_ref()).unwrap();
+
+    vec![("v2", v2), ("v3", v3), ("v4", v4)]
+}
+
+/// Every proper prefix of a valid v2/v3/v4 container must fail to load —
+/// cleanly. The container formats encode every payload length, so no
+/// truncation can masquerade as a complete file.
+#[test]
+fn truncation_sweep_every_prefix_errors_never_panics() {
+    for (kind, bytes) in sweep_images() {
+        assert!(
+            artifact_from_bytes(&bytes).is_ok(),
+            "{kind}: premise — the untruncated image must load"
+        );
+        for cut in 0..bytes.len() {
+            let r = std::panic::catch_unwind(|| artifact_from_bytes(&bytes[..cut]).is_err());
+            match r {
+                Ok(true) => {}
+                Ok(false) => panic!("{kind}: prefix of {cut}/{} bytes loaded OK", bytes.len()),
+                Err(_) => panic!("{kind}: prefix of {cut}/{} bytes PANICKED", bytes.len()),
+            }
+        }
+    }
+}
+
+/// The recovery scanner classifies cuts by region: inside the v3 segment
+/// area → `TornTail` (repairable, keeping the complete prefix), inside
+/// any header or the base payload → `Corrupt`, untouched → `Intact`.
+/// Truncated v2/v4 containers are `Corrupt` (nothing to roll back to).
+#[test]
+fn scan_file_classifies_cuts_by_region() {
+    for (kind, bytes) in sweep_images() {
+        let whole = tmp(&format!("scan_{kind}_whole.tcz"));
+        std::fs::write(&whole, &bytes).unwrap();
+        assert!(
+            matches!(scan_file(&whole).unwrap(), FileScan::Intact),
+            "{kind}: untruncated image must scan Intact"
+        );
+        // a cut near the end of the file
+        let cut_tail = tmp(&format!("scan_{kind}_tail.tcz"));
+        std::fs::write(&cut_tail, &bytes[..bytes.len() - 3]).unwrap();
+        // and a cut early in the header region
+        let cut_head = tmp(&format!("scan_{kind}_head.tcz"));
+        std::fs::write(&cut_head, &bytes[..10]).unwrap();
+        match (kind, scan_file(&cut_tail).unwrap()) {
+            ("v3", FileScan::TornTail { keep_segments }) => {
+                assert_eq!(keep_segments, 1, "cut mid-segment-2 keeps segment 1");
+            }
+            ("v3", other) => panic!("v3 tail cut misclassified: {other:?}"),
+            (_, FileScan::Corrupt(_)) => {}
+            (k, other) => panic!("{k} tail cut misclassified: {other:?}"),
+        }
+        match scan_file(&cut_head).unwrap() {
+            FileScan::Corrupt(_) => {}
+            other => panic!("{kind} header cut misclassified: {other:?}"),
+        }
+    }
+}
+
+/// Crash-safe append, end to end: a crash mid-`append_segment_file`
+/// leaves a torn second segment; reopening the store directory repairs
+/// the file back to the one-segment generation — same shape, same bits —
+/// and the artifact keeps serving.
+#[test]
+fn torn_mid_append_write_recovers_last_good_generation_on_restart() {
+    use tensorcodec::store::ArtifactStore;
+    let dir = std::env::temp_dir().join("tcz_container_torn_append");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let c = codec::by_name("ttd").unwrap();
+    let cfg = CodecConfig::default();
+    let budget = Budget::Params(200);
+    let truth = DenseTensor::random_uniform(&[6, 5, 4], 90);
+    let base = c.compress(&truth, &budget, &cfg).unwrap();
+    let p = dir.join("grow.tcz");
+    codec::save_artifact(&p, base.as_ref()).unwrap();
+    let mut art = codec::load_artifact(&p).unwrap();
+    for round in 0..2u64 {
+        let slices = DenseTensor::random_uniform(&[1, 5, 4], 95 + round);
+        match c.append(&mut art, &slices, 0, &budget, &cfg).unwrap() {
+            Appended::Segment(payload) => {
+                let seg = Segment {
+                    axis: 0,
+                    rows: 1,
+                    payload,
+                };
+                codec::append_segment_file(&p, &seg, &art.meta().shape, art.size_bytes())
+                    .unwrap();
+            }
+            other => panic!("expected a segment append, got {}", other.kind()),
+        }
+        if round == 0 {
+            // snapshot the one-segment generation: the expected
+            // post-recovery state
+            std::fs::copy(&p, dir.join("snapshot.bin")).unwrap();
+        }
+    }
+    // simulate the crash: the second segment's tail never hit the disk
+    let full = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &full[..full.len() - 5]).unwrap();
+    assert!(
+        codec::load_artifact(&p).is_err(),
+        "premise: the torn file must not load as-is"
+    );
+
+    // restart: opening the store runs the recovery scan, which repairs
+    // the torn tail in place
+    let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+    assert_eq!(store.recovered_count(), 1, "recovery scan repaired nothing");
+    assert_eq!(store.quarantined_count(), 0);
+    let opened = store.open("grow").unwrap();
+    assert_eq!(
+        opened.entry.meta.shape,
+        vec![7, 5, 4],
+        "repair must land on the one-segment shape"
+    );
+    // bit-identical to the snapshotted one-segment generation
+    let mut want = artifact_from_bytes(&std::fs::read(dir.join("snapshot.bin")).unwrap()).unwrap();
+    let coords: Vec<Vec<usize>> = (0..24usize)
+        .map(|i| vec![i % 7, (i * 3) % 5, (i * 5) % 4])
+        .collect();
+    let mut got_vals = Vec::new();
+    opened
+        .entry
+        .artifact
+        .lock()
+        .unwrap()
+        .decode_many(&coords, &mut got_vals);
+    for (c, g) in coords.iter().zip(&got_vals) {
+        let w = want.get(c);
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "repaired decode drifted at {c:?}"
+        );
+    }
+
+    // the direct repair API agrees with the scan (idempotence check: an
+    // intact file needs no repair and repair of keep=all is rejected)
+    match scan_file(&p).unwrap() {
+        FileScan::Intact => {}
+        other => panic!("repaired file should scan Intact, got {other:?}"),
+    }
+    assert!(repair_torn_tail(&p, 9).is_err(), "over-keep must be rejected");
+}
