@@ -11,8 +11,11 @@ latency keys fail when ``current > baseline * (1 + max_regress)``. Keys
 missing from either side are skipped, so the baseline can gate a subset
 (today: the bulk/lockstep decode throughput floors, the point-decode
 latency ceiling, the Zipfian tile-cache serving floors — warm QPS,
-warm/cold ratio, hit rate — and the degraded-mode serving floor under
-1% injected stalls) while the artifact upload tracks the rest.
+warm/cold ratio, hit rate — the degraded-mode serving floor under
+1% injected stalls, and the event-loop front-end floors — sustained
+pipelined QPS, p99 burst latency, and the v3-over-v2 throughput ratio
+whose floor of ``2.7 * 0.75 ~= 2x`` enforces the event-loop acceptance
+criterion) while the artifact upload tracks the rest.
 """
 
 import argparse
@@ -33,10 +36,12 @@ THROUGHPUT_KEYS = (
     "tile_hot_qps_ratio",
     "tile_hit_rate",
     "degraded_qps",
+    "eventloop_qps",
+    "v3_vs_v2_qps_ratio",
 )
 
 # lower-is-better gauges (latencies)
-LATENCY_KEYS = ("point_decode_ns_1t",)
+LATENCY_KEYS = ("point_decode_ns_1t", "eventloop_p99_ms")
 
 
 def main() -> int:

@@ -531,11 +531,250 @@ fn degraded_section() -> (f64, f64, f64) {
     (degraded_qps, p99_ms, shed_rate)
 }
 
+/// Event-loop front-end under pipelined fan-out: the same TT store served
+/// two ways — protocol v2 text through the thread-per-connection listener
+/// vs protocol v3 binary through the epoll/kqueue event loop — driven by
+/// `EL_CONNS` concurrent connections each carrying `EL_PIPELINE`-deep
+/// request bursts. Every reply is asserted bit-identical to a local
+/// decode before any number is reported. Returns
+/// `(eventloop_qps, eventloop_p99_ms, v3_vs_v2_qps_ratio)`, or `None` on
+/// platforms without a poller backend; the floors are gated in
+/// `python/check_bench.py`.
+const EL_CONNS: usize = 1024;
+const EL_DRIVERS: usize = 8;
+const EL_PIPELINE: usize = 32;
+const EL_ROUNDS: usize = 4;
+
+fn eventloop_section() -> Option<(f64, f64, f64)> {
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::{Arc, Barrier};
+    use std::time::Instant;
+    use tensorcodec::coordinator::batcher::BatchPolicy;
+    use tensorcodec::store::protocol::{self, Reply, Request, V3Reply, V3_MAGIC, V3_VERSION};
+    use tensorcodec::store::server::{serve_store_listener, StoreServeConfig};
+    use tensorcodec::store::eventloop;
+
+    if !eventloop::supported() {
+        println!("=== Event-loop serving: skipped (no epoll/kqueue backend) ===");
+        return None;
+    }
+    // each connection costs an fd on both sides of the loopback plus the
+    // listener/wake plumbing; scale the fleet down if the limit won't budge
+    let achieved = eventloop::raise_nofile_limit((4 * EL_CONNS + 512) as u64);
+    let mut conns = if achieved == 0 {
+        EL_CONNS
+    } else {
+        EL_CONNS.min((achieved.saturating_sub(512) / 3) as usize)
+    };
+    conns = (conns / EL_DRIVERS).max(1) * EL_DRIVERS;
+    if conns < EL_CONNS {
+        println!("[fig9] RLIMIT_NOFILE {achieved}: event-loop fleet scaled to {conns} conns");
+    }
+
+    let dir = std::env::temp_dir().join("tcz_fig9_eventloop_store");
+    std::fs::create_dir_all(&dir).expect("store dir");
+    let shape = vec![256usize, 256, 256];
+    let mut reference = synthetic_tt(&shape, 8, 31);
+    tensorcodec::codec::save_artifact(&dir.join("tt.tcz"), &reference).expect("save tt.tcz");
+    let coords = random_coords(&shape, EL_PIPELINE, 91);
+    let want_bits: Arc<Vec<u32>> =
+        Arc::new(coords.iter().map(|c| reference.get(c).to_bits()).collect());
+
+    // one pre-encoded burst per wire, reused by every connection/round
+    let mut v3_burst = Vec::new();
+    let mut v2_burst = String::new();
+    for (i, c) in coords.iter().enumerate() {
+        let req = Request::Get {
+            name: "tt".to_string(),
+            coords: c.clone(),
+        };
+        protocol::encode_v3_request(i as u64 + 1, &req, &mut v3_burst);
+        protocol::write_v2_request(&req, &mut v2_burst);
+        v2_burst.push('\n');
+    }
+    let v3_burst: Arc<Vec<u8>> = Arc::new(v3_burst);
+    let v2_burst: Arc<Vec<u8>> = Arc::new(v2_burst.into_bytes());
+
+    enum BenchConn {
+        V2 {
+            w: TcpStream,
+            r: BufReader<TcpStream>,
+        },
+        V3 {
+            s: TcpStream,
+            inbuf: Vec<u8>,
+        },
+    }
+
+    // drive one wire: connect the fleet, rendezvous, then write the burst
+    // to every connection before reading any reply (all conns in flight
+    // at once), per round; latency = write-to-fully-read per conn burst
+    let run_side = |v3: bool| -> (f64, f64, f64) {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("local addr");
+        let cfg = StoreServeConfig {
+            policy: BatchPolicy {
+                max_batch: 512,
+                max_wait: std::time::Duration::from_millis(1),
+                queue_depth: 1 << 16,
+            },
+            cache_bytes: usize::MAX,
+            tile_bytes: 0,
+            allow_xla: false,
+            max_conns: conns,
+            ..Default::default()
+        };
+        let dir2 = dir.clone();
+        let srv = std::thread::spawn(move || {
+            if v3 {
+                eventloop::serve_store_eventloop(listener, &dir2, cfg)
+            } else {
+                serve_store_listener(listener, &dir2, cfg)
+            }
+        });
+        let barrier = Arc::new(Barrier::new(EL_DRIVERS + 1));
+        let per_driver = conns / EL_DRIVERS;
+        let mut drivers = Vec::new();
+        for _ in 0..EL_DRIVERS {
+            let barrier = barrier.clone();
+            let burst = if v3 { v3_burst.clone() } else { v2_burst.clone() };
+            let want = want_bits.clone();
+            drivers.push(std::thread::spawn(move || -> (u64, Vec<f64>) {
+                let mut fleet = Vec::with_capacity(per_driver);
+                for _ in 0..per_driver {
+                    let mut s = TcpStream::connect(addr).expect("connect");
+                    let _ = s.set_nodelay(true);
+                    s.set_read_timeout(Some(std::time::Duration::from_secs(60)))
+                        .expect("read timeout");
+                    if v3 {
+                        let mut preamble = [0u8; 5];
+                        preamble[..4].copy_from_slice(&V3_MAGIC);
+                        preamble[4] = V3_VERSION;
+                        s.write_all(&preamble).expect("preamble");
+                        let mut hello = [0u8; 14]; // len(4)+id(8)+tag(1)+version(1)
+                        s.read_exact(&mut hello).expect("hello");
+                        fleet.push(BenchConn::V3 {
+                            s,
+                            inbuf: Vec::new(),
+                        });
+                    } else {
+                        let w = s.try_clone().expect("clone");
+                        fleet.push(BenchConn::V2 {
+                            w,
+                            r: BufReader::new(s),
+                        });
+                    }
+                }
+                barrier.wait();
+                let (mut gets, mut lat_ms) = (0u64, Vec::new());
+                for _round in 0..EL_ROUNDS {
+                    let mut t0 = Vec::with_capacity(fleet.len());
+                    for conn in &mut fleet {
+                        match conn {
+                            BenchConn::V2 { w, .. } => w.write_all(&burst).expect("burst"),
+                            BenchConn::V3 { s, .. } => s.write_all(&burst).expect("burst"),
+                        }
+                        t0.push(Instant::now());
+                    }
+                    for (i, conn) in fleet.iter_mut().enumerate() {
+                        match conn {
+                            BenchConn::V2 { r, .. } => {
+                                for wb in want.iter() {
+                                    let mut line = String::new();
+                                    assert!(
+                                        r.read_line(&mut line).expect("reply") > 0,
+                                        "server closed mid-burst"
+                                    );
+                                    let v: f32 = line
+                                        .trim_end()
+                                        .strip_prefix("OK ")
+                                        .unwrap_or_else(|| panic!("bad reply {line:?}"))
+                                        .parse()
+                                        .expect("value");
+                                    assert_eq!(v.to_bits(), *wb, "wrong byte over v2");
+                                }
+                            }
+                            BenchConn::V3 { s, inbuf } => {
+                                let mut got = 0usize;
+                                let mut chunk = [0u8; 1 << 16];
+                                while got < want.len() {
+                                    match protocol::try_decode_v3_reply(inbuf).expect("v3 frame")
+                                    {
+                                        Some((consumed, id, reply)) => {
+                                            inbuf.drain(..consumed);
+                                            match reply {
+                                                V3Reply::Reply(Reply::Value(v)) => {
+                                                    assert_eq!(
+                                                        id as usize,
+                                                        got + 1,
+                                                        "reply out of order"
+                                                    );
+                                                    assert_eq!(
+                                                        v.to_bits(),
+                                                        want[got],
+                                                        "wrong byte over v3"
+                                                    );
+                                                    got += 1;
+                                                }
+                                                other => panic!("unexpected reply {other:?}"),
+                                            }
+                                        }
+                                        None => {
+                                            let n = s.read(&mut chunk).expect("read");
+                                            assert!(n > 0, "server closed mid-burst");
+                                            inbuf.extend_from_slice(&chunk[..n]);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                        lat_ms.push(t0[i].elapsed().as_secs_f64() * 1e3);
+                        gets += EL_PIPELINE as u64;
+                    }
+                }
+                (gets, lat_ms)
+            }));
+        }
+        barrier.wait();
+        let t = Timer::start();
+        let (mut total_gets, mut lats) = (0u64, Vec::new());
+        for d in drivers {
+            let (gets, lat) = d.join().expect("driver panicked");
+            total_gets += gets;
+            lats.extend(lat);
+        }
+        let wall = t.seconds();
+        srv.join().expect("server thread").expect("server result");
+        lats.sort_by(f64::total_cmp);
+        let pick = |q: f64| -> f64 {
+            let idx = (((lats.len() as f64) * q) as usize).min(lats.len().saturating_sub(1));
+            lats.get(idx).copied().unwrap_or(0.0)
+        };
+        (total_gets as f64 / wall.max(1e-9), pick(0.50), pick(0.99))
+    };
+
+    let (v2_qps, v2_p50, v2_p99) = run_side(false);
+    let (v3_qps, v3_p50, v3_p99) = run_side(true);
+    let ratio = v3_qps / v2_qps.max(1e-9);
+    println!(
+        "=== Event-loop serving: {conns} pipelined conns x {EL_PIPELINE}-deep x {EL_ROUNDS} rounds ==="
+    );
+    println!(
+        "v2/threads   {v2_qps:>10.0} q/s   p50 {v2_p50:>7.2} ms   p99 {v2_p99:>7.2} ms"
+    );
+    println!(
+        "v3/eventloop {v3_qps:>10.0} q/s   p50 {v3_p50:>7.2} ms   p99 {v3_p99:>7.2} ms   ({ratio:.2}x)"
+    );
+    Some((v3_qps, v3_p99, ratio))
+}
+
 fn kernels_section(
     append: (f64, f64),
     rans: (f64, f64),
     zipf: (f64, f64, f64),
     degraded: (f64, f64, f64),
+    el: Option<(f64, f64, f64)>,
 ) {
     let n_threads = kernels::max_threads().max(2);
     let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
@@ -621,7 +860,7 @@ fn kernels_section(
     kernels::set_threads(0);
 
     let json = format!(
-        "{{\n  \"threads\": {n_threads},\n  \"simd\": \"{}\",\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"point_decode_ns_1t\": {},\n  \"lockstep_decode_entries_per_s_1t\": {},\n  \"lockstep_decode_entries_per_s_nt\": {},\n  \"lockstep_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {},\n  \"append_slice_seconds_h512\": {},\n  \"append_slice_seconds_h2048\": {},\n  \"append_history_ratio\": {},\n  \"rans_encode_mb_s\": {},\n  \"rans_decode_mb_s\": {},\n  \"hot_qps_cold\": {},\n  \"hot_qps_warm\": {},\n  \"tile_hot_qps_ratio\": {},\n  \"tile_hit_rate\": {},\n  \"degraded_qps\": {},\n  \"degraded_p99_ms\": {},\n  \"shed_rate\": {}\n}}\n",
+        "{{\n  \"threads\": {n_threads},\n  \"simd\": \"{}\",\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"point_decode_ns_1t\": {},\n  \"lockstep_decode_entries_per_s_1t\": {},\n  \"lockstep_decode_entries_per_s_nt\": {},\n  \"lockstep_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {},\n  \"append_slice_seconds_h512\": {},\n  \"append_slice_seconds_h2048\": {},\n  \"append_history_ratio\": {},\n  \"rans_encode_mb_s\": {},\n  \"rans_decode_mb_s\": {},\n  \"hot_qps_cold\": {},\n  \"hot_qps_warm\": {},\n  \"tile_hot_qps_ratio\": {},\n  \"tile_hit_rate\": {},\n  \"degraded_qps\": {},\n  \"degraded_p99_ms\": {},\n  \"shed_rate\": {},\n  \"eventloop_qps\": {},\n  \"eventloop_p99_ms\": {},\n  \"v3_vs_v2_qps_ratio\": {}\n}}\n",
         isa.as_str(),
         json_num(Some(g1)),
         json_num(Some(gn)),
@@ -651,6 +890,9 @@ fn kernels_section(
         json_num(Some(degraded.0)),
         json_num(Some(degraded.1)),
         json_num(Some(degraded.2)),
+        json_num(el.map(|e| e.0)),
+        json_num(el.map(|e| e.1)),
+        json_num(el.map(|e| e.2)),
     );
     std::fs::write("BENCH_kernels.json", json).expect("write BENCH_kernels.json");
     println!("json -> BENCH_kernels.json");
@@ -661,7 +903,8 @@ fn main() {
     let rans = rans_section();
     let zipf = zipfian_tile_section();
     let degraded = degraded_section();
-    kernels_section(append, rans, zipf, degraded);
+    let el = eventloop_section();
+    kernels_section(append, rans, zipf, degraded, el);
     // Coarse gates, AFTER BENCH_kernels.json is on disk so a noisy-runner
     // flake still leaves the artifact for the nightly upload: appending
     // one slice must cost ~the same at 4x the history, and the warm tile

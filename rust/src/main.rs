@@ -474,6 +474,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_inflight: args.get("max-inflight").unwrap_or("4096").parse()?,
             io_timeout: Some(std::time::Duration::from_secs(30)),
             idle_timeout: Some(std::time::Duration::from_secs(300)),
+            max_open_conns: args.get("max-open-conns").unwrap_or("65536").parse()?,
+        };
+        let eventloop = tensorcodec::store::eventloop::EventLoopConfig {
+            outbuf_bytes: args
+                .get("outbuf-bytes")
+                .unwrap_or("4194304")
+                .parse()
+                .context("outbuf-bytes")?,
+            workers: args
+                .get("eventloop-workers")
+                .unwrap_or("0")
+                .parse()
+                .context("eventloop-workers")?,
+            ..Default::default()
         };
         let cfg = tensorcodec::store::server::StoreServeConfig {
             policy: batch_policy(args)?,
@@ -492,8 +506,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_conns,
             limits,
             faults: tensorcodec::store::faults::FaultPlane::from_env()?,
+            eventloop,
         };
-        return tensorcodec::store::server::serve_store_tcp(&PathBuf::from(dir), &addr, cfg);
+        // `--frontend`: `eventloop` (default where epoll/kqueue exist) or
+        // `threads` (the legacy thread-per-connection front-end). Both
+        // speak protocol v2 and v3 on the same port.
+        let eventloop_supported = tensorcodec::store::eventloop::supported();
+        let frontend = args
+            .get("frontend")
+            .unwrap_or(if eventloop_supported { "eventloop" } else { "threads" });
+        return match frontend {
+            "eventloop" => tensorcodec::store::eventloop::serve_store_eventloop_tcp(
+                &PathBuf::from(dir),
+                &addr,
+                cfg,
+            ),
+            "threads" => {
+                tensorcodec::store::server::serve_store_tcp(&PathBuf::from(dir), &addr, cfg)
+            }
+            other => bail!("unknown --frontend `{other}` (want eventloop|threads)"),
+        };
     }
     let artifact = codec::load_artifact(&PathBuf::from(args.req("model")?))?;
     check_method(args, &artifact.meta())?;
@@ -613,9 +645,20 @@ COMMANDS
               ms (0 = none); shed replies are `ERR deadline ...`
               [--max-inflight 4096]        # --dir: admission gate; excess
               requests get `ERR overloaded ...` (0 = unbounded)
+              [--frontend eventloop|threads] # --dir: event-loop front-end
+              (default where epoll/kqueue exist) or the legacy
+              thread-per-connection front-end; both speak v2 and v3
+              [--max-open-conns 65536]     # --dir eventloop: cap on
+              simultaneously open connections (0 = unbounded)
+              [--outbuf-bytes 4194304]     # --dir eventloop: per-conn
+              outbound buffer cap (reads pause at the low watermark)
+              [--eventloop-workers 0]      # --dir eventloop: decode
+              executor threads (0 = one per core)
               --model: line protocol v1 (one `i,j,k` per line)
-              --dir:   protocol v2 (open/get/batch-get/stat/methods frames
-                       over every .tcz in the directory; see README)
+              --dir:   protocol v2 text + binary protocol v3 on one port
+                       (open/get/batch-get/stat/methods over every .tcz in
+                       the directory; v3 negotiated by a magic preamble,
+                       see README)
   info        --model <m.tcz>
   stat        --model <m.tcz>   O(1) header peek: method, shape, total /
               model / side-channel bytes and the guaranteed max-error of

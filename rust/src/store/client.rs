@@ -1,9 +1,12 @@
-//! Protocol v2 client for the multi-artifact decode server.
+//! Typed client for the multi-artifact decode server.
 //!
-//! Speaks the line protocol documented in [`super::server`]: one frame per
-//! line, `OK `/`ERR `-prefixed single-line replies. Used by the serving
-//! tests and benchmark drivers; any language with a TCP socket can
-//! implement the same five frames.
+//! Every verb sends a typed [`Request`] and returns a typed value
+//! (`RemoteMeta`, `f32`, `Vec<f32>`, names) independent of the wire
+//! version. The transport — protocol v2 text lines or the protocol v3
+//! binary frames documented in [`super::protocol`] — is selected at
+//! construction ([`ClientConfig::wire`]); the verb surface and every
+//! returned value are identical on both, because the two wires are
+//! encodings of the same [`Request`]/[`Reply`] enums.
 //!
 //! ## Resilience
 //!
@@ -14,12 +17,24 @@
 //! server sheds ([`ClientError::Overloaded`], [`ClientError::Deadline`])
 //! are *retryable*; semantic server errors and protocol violations are
 //! *fatal*. When [`ClientConfig::retries`] is non-zero, retryable failures
-//! of idempotent verbs (every protocol v2 verb is idempotent: pure reads
+//! of idempotent verbs (every serving verb is idempotent: pure reads
 //! plus revalidating `open`/`reload`) are retried with jittered
 //! exponential backoff, reconnecting first when the transport failed.
+//!
+//! ## Pipelining
+//!
+//! [`ServeClient::pipeline`] writes a burst of requests before reading
+//! any reply and returns the per-request [`Reply`]s in order — the
+//! high-throughput mode the event-loop front-end is built for. Works on
+//! both wires (the server answers strictly in request order); no
+//! retries, since a mid-burst transport failure has no safe resume
+//! point.
 
-use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use super::protocol::{
+    self, ErrClass, MetaReply, Reply, Request, V3Reply, V3_MAGIC, V3_VERSION,
+};
+use anyhow::{bail, Result};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
@@ -29,10 +44,10 @@ use std::time::Duration;
 pub enum ClientError {
     /// Transport failure (connect, send, receive, timeout, disconnect).
     Io(String),
-    /// The server shed the request (`ERR overloaded …`): admission gate
+    /// The server shed the request (`overloaded …`): admission gate
     /// full or shard queue saturated. Safe to retry after backoff.
     Overloaded(String),
-    /// The request hit its server-side deadline (`ERR deadline …`).
+    /// The request hit its server-side deadline (`deadline …`).
     Deadline(String),
     /// Any other server-reported error (unknown artifact, bad coords,
     /// quarantined with no resident generation, draining…). Not retried.
@@ -49,6 +64,17 @@ impl ClientError {
             ClientError::Io(_) | ClientError::Overloaded(_) | ClientError::Deadline(_)
         )
     }
+
+    /// A typed server error reply, classified by the explicit v3 error
+    /// class (which the v2 path derives from the stable message prefix —
+    /// same classification either way).
+    fn from_reply(class: ErrClass, msg: String) -> ClientError {
+        match class {
+            ErrClass::Overloaded => ClientError::Overloaded(msg),
+            ErrClass::Deadline => ClientError::Deadline(msg),
+            ErrClass::Server => ClientError::Server(msg),
+        }
+    }
 }
 
 impl std::fmt::Display for ClientError {
@@ -64,6 +90,16 @@ impl std::fmt::Display for ClientError {
 }
 
 impl std::error::Error for ClientError {}
+
+/// Which wire encoding the client speaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireVersion {
+    /// Line-based text protocol (the legacy default; human-debuggable).
+    V2,
+    /// Length-prefixed binary frames with explicit error classes and
+    /// request ids (negotiated by a magic preamble on connect).
+    V3,
+}
 
 /// Connection + retry knobs. The defaults give every connection socket
 /// timeouts (the old client blocked forever on a stalled server) and two
@@ -82,6 +118,9 @@ pub struct ClientConfig {
     pub backoff_cap: Duration,
     /// Seed for the backoff jitter (deterministic per client).
     pub retry_seed: u64,
+    /// Wire encoding to speak ([`WireVersion::V2`] by default for
+    /// compatibility with older servers).
+    pub wire: WireVersion,
 }
 
 impl Default for ClientConfig {
@@ -93,6 +132,7 @@ impl Default for ClientConfig {
             backoff_base: Duration::from_millis(50),
             backoff_cap: Duration::from_secs(2),
             retry_seed: 0x9E37_79B9_7F4A_7C15,
+            wire: WireVersion::V2,
         }
     }
 }
@@ -129,9 +169,50 @@ pub struct RemoteMeta {
     pub quarantined: u64,
 }
 
-struct Conn {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
+impl RemoteMeta {
+    fn from_meta(m: MetaReply) -> RemoteMeta {
+        let (tile_hits, tile_misses, tile_bytes) = m.tiles.unwrap_or((0, 0, 0));
+        let (health, shed, timeouts, quarantined) = match &m.health {
+            Some(h) => (
+                if h.ok { "ok" } else { "quarantined" }.to_string(),
+                h.shed,
+                h.timeouts,
+                h.quarantined,
+            ),
+            None => ("ok".to_string(), 0, 0, 0),
+        };
+        RemoteMeta {
+            method: m.method,
+            shape: m.shape,
+            bytes: m.bytes,
+            bulk: m.bulk,
+            generation: m.generation.unwrap_or(0),
+            max_error: m.max_error,
+            side_bytes: m.side_bytes,
+            tile_hits,
+            tile_misses,
+            tile_bytes,
+            health,
+            shed,
+            timeouts,
+            quarantined,
+        }
+    }
+}
+
+/// A live transport: both variants move whole typed requests/replies.
+enum Conn {
+    V2 {
+        reader: BufReader<TcpStream>,
+        writer: TcpStream,
+    },
+    V3 {
+        stream: TcpStream,
+        /// Bytes received but not yet decoded into a frame.
+        inbuf: Vec<u8>,
+        /// Id stamped on the next request frame.
+        next_id: u64,
+    },
 }
 
 /// One logical connection to an artifact-store server. Reconnects
@@ -145,9 +226,21 @@ pub struct ServeClient {
 }
 
 impl ServeClient {
-    /// Connect with the default config (socket timeouts on, 2 retries).
+    /// Connect with the default config (protocol v2, socket timeouts on,
+    /// 2 retries).
     pub fn connect(addr: &str) -> Result<ServeClient> {
         ServeClient::connect_with(addr, ClientConfig::default())
+    }
+
+    /// Connect speaking the binary protocol v3 (defaults otherwise).
+    pub fn connect_v3(addr: &str) -> Result<ServeClient> {
+        ServeClient::connect_with(
+            addr,
+            ClientConfig {
+                wire: WireVersion::V3,
+                ..ClientConfig::default()
+            },
+        )
     }
 
     pub fn connect_with(addr: &str, cfg: ClientConfig) -> Result<ServeClient> {
@@ -162,7 +255,14 @@ impl ServeClient {
         Ok(client)
     }
 
-    /// (Re)establish the TCP connection with connect + socket timeouts.
+    /// The wire version this client speaks.
+    pub fn wire(&self) -> WireVersion {
+        self.cfg.wire
+    }
+
+    /// (Re)establish the TCP connection with connect + socket timeouts;
+    /// v3 additionally sends the magic preamble and waits for the
+    /// server's HELLO frame.
     fn dial(&mut self) -> Result<(), ClientError> {
         self.conn = None;
         let mut addrs = self
@@ -181,18 +281,47 @@ impl ServeClient {
             .and_then(|_| stream.set_write_timeout(self.cfg.io_timeout))
             .map_err(|e| ClientError::Io(format!("set timeouts: {e}")))?;
         let _ = stream.set_nodelay(true);
-        let writer = stream
-            .try_clone()
-            .map_err(|e| ClientError::Io(format!("clone stream: {e}")))?;
-        self.conn = Some(Conn {
-            reader: BufReader::new(stream),
-            writer,
-        });
+        match self.cfg.wire {
+            WireVersion::V2 => {
+                let writer = stream
+                    .try_clone()
+                    .map_err(|e| ClientError::Io(format!("clone stream: {e}")))?;
+                self.conn = Some(Conn::V2 {
+                    reader: BufReader::new(stream),
+                    writer,
+                });
+            }
+            WireVersion::V3 => {
+                let mut stream = stream;
+                let mut preamble = [0u8; 5];
+                preamble[..4].copy_from_slice(&V3_MAGIC);
+                preamble[4] = V3_VERSION;
+                stream
+                    .write_all(&preamble)
+                    .map_err(|e| ClientError::Io(format!("send v3 preamble: {e}")))?;
+                let mut conn = Conn::V3 {
+                    stream,
+                    inbuf: Vec::new(),
+                    next_id: 1,
+                };
+                match read_v3_frame(&mut conn)? {
+                    (_, V3Reply::Hello { .. }) => {}
+                    (_, V3Reply::Reply(_)) => {
+                        return Err(ClientError::Protocol(
+                            "server sent a reply before HELLO".into(),
+                        ))
+                    }
+                }
+                self.conn = Some(conn);
+            }
+        }
         Ok(())
     }
 
-    /// One frame over the live connection, classified.
-    fn roundtrip_once(&mut self, frame: &str) -> Result<String, ClientError> {
+    /// One typed request over the live connection, classified. A
+    /// [`Reply::Err`] from the server is an `Err` here so the retry loop
+    /// can act on its class.
+    fn roundtrip_once(&mut self, req: &Request) -> Result<Reply, ClientError> {
         if self.conn.is_none() {
             self.dial()?;
         }
@@ -200,40 +329,14 @@ impl ServeClient {
             Some(c) => c,
             None => return Err(ClientError::Io("not connected".into())),
         };
-        let send = conn
-            .writer
-            .write_all(frame.as_bytes())
-            .and_then(|_| conn.writer.write_all(b"\n"));
-        if let Err(e) = send {
+        let result = roundtrip_on(conn, req);
+        if matches!(result, Err(ClientError::Io(_) | ClientError::Protocol(_))) {
+            // transport dead or framing lost: next attempt re-dials
             self.conn = None;
-            return Err(ClientError::Io(format!("send: {e}")));
         }
-        let mut reply = String::new();
-        match conn.reader.read_line(&mut reply) {
-            Ok(0) => {
-                self.conn = None;
-                return Err(ClientError::Io("server closed the connection".into()));
-            }
-            Ok(_) => {}
-            Err(e) => {
-                self.conn = None;
-                return Err(ClientError::Io(format!("receive: {e}")));
-            }
-        }
-        let reply = reply.trim_end();
-        if let Some(body) = reply.strip_prefix("OK") {
-            Ok(body.trim_start().to_string())
-        } else if let Some(msg) = reply.strip_prefix("ERR") {
-            let msg = msg.trim_start();
-            if msg.starts_with("overloaded") {
-                Err(ClientError::Overloaded(msg.to_string()))
-            } else if msg.starts_with("deadline") {
-                Err(ClientError::Deadline(msg.to_string()))
-            } else {
-                Err(ClientError::Server(msg.to_string()))
-            }
-        } else {
-            Err(ClientError::Protocol(format!("malformed reply `{reply}`")))
+        match result? {
+            Reply::Err(class, msg) => Err(ClientError::from_reply(class, msg)),
+            ok => Ok(ok),
         }
     }
 
@@ -254,16 +357,16 @@ impl ServeClient {
         Duration::from_millis(ms)
     }
 
-    /// Send one frame, return the reply body after `OK `. `idempotent`
-    /// gates the retry loop: retryable failures ([`ClientError`]) of
-    /// idempotent frames are retried with backoff, reconnecting after
-    /// transport errors.
-    fn request(&mut self, frame: &str, idempotent: bool) -> Result<String> {
+    /// Send one request, return its (successful) typed reply.
+    /// `idempotent` gates the retry loop: retryable failures
+    /// ([`ClientError`]) of idempotent requests are retried with backoff,
+    /// reconnecting after transport errors.
+    fn request(&mut self, req: &Request, idempotent: bool) -> Result<Reply> {
         let attempts = if idempotent { self.cfg.retries } else { 0 };
         let mut tried = 0u32;
         loop {
-            match self.roundtrip_once(frame) {
-                Ok(body) => return Ok(body),
+            match self.roundtrip_once(req) {
+                Ok(reply) => return Ok(reply),
                 Err(e) if e.is_retryable() && tried < attempts => {
                     let delay = self.backoff_delay(tried);
                     tried += 1;
@@ -271,7 +374,11 @@ impl ServeClient {
                     // transport errors already dropped the connection;
                     // roundtrip_once re-dials lazily
                 }
-                Err(e) => return Err(anyhow::Error::new(e).context(format!("frame `{frame}`"))),
+                Err(e) => {
+                    let mut frame = String::new();
+                    protocol::write_v2_request(req, &mut frame);
+                    return Err(anyhow::Error::new(e).context(format!("frame `{frame}`")));
+                }
             }
         }
     }
@@ -281,131 +388,257 @@ impl ServeClient {
         self.cfg.retries = retries;
     }
 
+    /// Pipeline a burst: write every request before reading any reply,
+    /// then collect the typed replies in request order (server-side
+    /// failures come back as [`Reply::Err`] entries, not an `Err` of the
+    /// whole burst). No retries — a transport failure mid-burst drops
+    /// the connection and fails the call.
+    pub fn pipeline(&mut self, reqs: &[Request]) -> Result<Vec<Reply>> {
+        if self.conn.is_none() {
+            self.dial()?;
+        }
+        let conn = match self.conn.as_mut() {
+            Some(c) => c,
+            None => bail!(ClientError::Io("not connected".into())),
+        };
+        let result = pipeline_on(conn, reqs);
+        if result.is_err() {
+            self.conn = None;
+        }
+        result.map_err(|e| anyhow::Error::new(e).context("pipeline"))
+    }
+
     /// Registered codec names on the server.
     pub fn methods(&mut self) -> Result<Vec<String>> {
-        Ok(split_list(&self.request("methods", true)?))
+        expect_names(self.request(&Request::Methods, true)?)
     }
 
     /// Artifact names in the server's store directory.
     pub fn list(&mut self) -> Result<Vec<String>> {
-        Ok(split_list(&self.request("list", true)?))
+        expect_names(self.request(&Request::List, true)?)
     }
 
     /// Load an artifact (starting its shard server-side).
     pub fn open(&mut self, name: &str) -> Result<RemoteMeta> {
-        let body = self.request(&format!("open {name}"), true)?;
-        parse_meta(&body)
+        let req = Request::Open {
+            name: name.to_string(),
+        };
+        expect_meta(self.request(&req, true)?)
     }
 
     /// Metadata without starting a shard.
     pub fn stat(&mut self, name: &str) -> Result<RemoteMeta> {
-        let body = self.request(&format!("stat {name}"), true)?;
-        parse_meta(&body)
+        let req = Request::Stat {
+            name: name.to_string(),
+        };
+        expect_meta(self.request(&req, true)?)
     }
 
     /// Notify the server that the artifact's file changed on disk (e.g.
     /// after `tcz append`): revalidates, hot-reloads when stale, and
     /// returns the fresh metadata with its reload generation.
     pub fn reload(&mut self, name: &str) -> Result<RemoteMeta> {
-        let body = self.request(&format!("reload {name}"), true)?;
-        parse_meta(&body)
+        let req = Request::Reload {
+            name: name.to_string(),
+        };
+        expect_meta(self.request(&req, true)?)
     }
 
     /// Decode one entry.
     pub fn get(&mut self, name: &str, coords: &[usize]) -> Result<f32> {
-        let body = self.request(&format!("get {name} {}", fmt_coords(coords)), true)?;
-        body.parse().with_context(|| format!("bad value `{body}`"))
+        let req = Request::Get {
+            name: name.to_string(),
+            coords: coords.to_vec(),
+        };
+        match self.request(&req, true)? {
+            Reply::Value(v) => Ok(v),
+            other => bail!("get returned a non-value reply {other:?}"),
+        }
     }
 
     /// Decode a batch; values come back in request order.
     pub fn batch_get(&mut self, name: &str, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
-        let block: Vec<String> = coords.iter().map(|c| fmt_coords(c)).collect();
-        let body = self.request(&format!("batch-get {name} {}", block.join(";")), true)?;
-        let vals: Result<Vec<f32>> = body
-            .split(',')
-            .map(|v| v.parse().with_context(|| format!("bad value `{v}`")))
-            .collect();
-        let vals = vals?;
-        if vals.len() != coords.len() {
-            bail!(
-                "batch-get returned {} values for {} coords",
-                vals.len(),
-                coords.len()
-            );
-        }
-        Ok(vals)
-    }
-}
-
-fn fmt_coords(coords: &[usize]) -> String {
-    let parts: Vec<String> = coords.iter().map(|c| c.to_string()).collect();
-    parts.join(",")
-}
-
-fn split_list(body: &str) -> Vec<String> {
-    body.split(',')
-        .filter(|s| !s.is_empty())
-        .map(|s| s.to_string())
-        .collect()
-}
-
-fn parse_meta(body: &str) -> Result<RemoteMeta> {
-    let mut method = None;
-    let mut shape = None;
-    let mut bytes = None;
-    let mut bulk = None;
-    let mut generation = 0u64;
-    let mut max_error = None;
-    let mut side_bytes = 0usize;
-    let mut tile_hits = 0u64;
-    let mut tile_misses = 0u64;
-    let mut tile_bytes = 0usize;
-    let mut health = String::from("ok");
-    let mut shed = 0u64;
-    let mut timeouts = 0u64;
-    let mut quarantined = 0u64;
-    for field in body.split_whitespace() {
-        let (k, v) = field
-            .split_once('=')
-            .with_context(|| format!("malformed meta field `{field}`"))?;
-        match k {
-            "method" => method = Some(v.to_string()),
-            "shape" => {
-                shape = Some(
-                    v.split(',')
-                        .map(|p| p.parse::<usize>().context("bad shape"))
-                        .collect::<Result<Vec<_>>>()?,
-                )
+        let req = Request::BatchGet {
+            name: name.to_string(),
+            coords: coords.to_vec(),
+        };
+        match self.request(&req, true)? {
+            Reply::Values(vals) => {
+                if vals.len() != coords.len() {
+                    bail!(
+                        "batch-get returned {} values for {} coords",
+                        vals.len(),
+                        coords.len()
+                    );
+                }
+                Ok(vals)
             }
-            "bytes" => bytes = Some(v.parse::<usize>().context("bad bytes")?),
-            "bulk" => bulk = Some(v == "true"),
-            "generation" => generation = v.parse().context("bad generation")?,
-            "max_error" => max_error = Some(v.parse::<f64>().context("bad max_error")?),
-            "side_bytes" => side_bytes = v.parse().context("bad side_bytes")?,
-            "tile_hits" => tile_hits = v.parse().context("bad tile_hits")?,
-            "tile_misses" => tile_misses = v.parse().context("bad tile_misses")?,
-            "tile_bytes" => tile_bytes = v.parse().context("bad tile_bytes")?,
-            "health" => health = v.to_string(),
-            "shed" => shed = v.parse().context("bad shed")?,
-            "timeouts" => timeouts = v.parse().context("bad timeouts")?,
-            "quarantined" => quarantined = v.parse().context("bad quarantined")?,
-            _ => {} // forward-compatible: ignore unknown fields
+            other => bail!("batch-get returned a non-values reply {other:?}"),
         }
     }
-    Ok(RemoteMeta {
-        method: method.context("missing method")?,
-        shape: shape.context("missing shape")?,
-        bytes: bytes.context("missing bytes")?,
-        bulk: bulk.unwrap_or(true),
-        generation,
-        max_error,
-        side_bytes,
-        tile_hits,
-        tile_misses,
-        tile_bytes,
-        health,
-        shed,
-        timeouts,
-        quarantined,
-    })
+}
+
+fn expect_names(reply: Reply) -> Result<Vec<String>> {
+    match reply {
+        Reply::Names(names) => Ok(names),
+        other => bail!("expected a name list, got {other:?}"),
+    }
+}
+
+fn expect_meta(reply: Reply) -> Result<RemoteMeta> {
+    match reply {
+        Reply::Meta(m) => Ok(RemoteMeta::from_meta(m)),
+        other => bail!("expected metadata, got {other:?}"),
+    }
+}
+
+/// Send one request and read its reply on a live transport. Server `ERR`s
+/// come back as `Ok(Reply::Err(..))` — the caller classifies.
+fn roundtrip_on(conn: &mut Conn, req: &Request) -> Result<Reply, ClientError> {
+    match conn {
+        Conn::V2 { reader, writer } => {
+            let mut frame = String::new();
+            protocol::write_v2_request(req, &mut frame);
+            frame.push('\n');
+            writer
+                .write_all(frame.as_bytes())
+                .map_err(|e| ClientError::Io(format!("send: {e}")))?;
+            read_v2_reply(reader, req)
+        }
+        Conn::V3 { .. } => {
+            let id = send_v3(conn, req)?;
+            let (got_id, reply) = match read_v3_frame(conn)? {
+                (id, V3Reply::Reply(r)) => (id, r),
+                (_, V3Reply::Hello { .. }) => {
+                    return Err(ClientError::Protocol("unexpected mid-stream HELLO".into()))
+                }
+            };
+            if got_id != id {
+                return Err(ClientError::Protocol(format!(
+                    "reply id {got_id} does not match request id {id}"
+                )));
+            }
+            Ok(reply)
+        }
+    }
+}
+
+/// Write all requests, then read the replies in order (both wires answer
+/// strictly in request order).
+fn pipeline_on(conn: &mut Conn, reqs: &[Request]) -> Result<Vec<Reply>, ClientError> {
+    match conn {
+        Conn::V2 { reader, writer } => {
+            let mut burst = String::new();
+            for req in reqs {
+                protocol::write_v2_request(req, &mut burst);
+                burst.push('\n');
+            }
+            writer
+                .write_all(burst.as_bytes())
+                .map_err(|e| ClientError::Io(format!("send: {e}")))?;
+            let mut replies = Vec::with_capacity(reqs.len());
+            for req in reqs {
+                replies.push(read_v2_reply(reader, req)?);
+            }
+            Ok(replies)
+        }
+        Conn::V3 { .. } => {
+            let mut ids = Vec::with_capacity(reqs.len());
+            {
+                let Conn::V3 {
+                    stream,
+                    next_id,
+                    ..
+                } = &mut *conn
+                else {
+                    return Err(ClientError::Io("wrong transport".into()));
+                };
+                let mut burst = Vec::new();
+                for req in reqs {
+                    let id = *next_id;
+                    *next_id += 1;
+                    ids.push(id);
+                    protocol::encode_v3_request(id, req, &mut burst);
+                }
+                stream
+                    .write_all(&burst)
+                    .map_err(|e| ClientError::Io(format!("send: {e}")))?;
+            }
+            let mut replies = Vec::with_capacity(reqs.len());
+            for want_id in ids {
+                let (got_id, reply) = match read_v3_frame(conn)? {
+                    (id, V3Reply::Reply(r)) => (id, r),
+                    (_, V3Reply::Hello { .. }) => {
+                        return Err(ClientError::Protocol(
+                            "unexpected mid-stream HELLO".into(),
+                        ))
+                    }
+                };
+                if got_id != want_id {
+                    return Err(ClientError::Protocol(format!(
+                        "reply id {got_id} does not match request id {want_id}"
+                    )));
+                }
+                replies.push(reply);
+            }
+            Ok(replies)
+        }
+    }
+}
+
+/// Read one v2 line and parse it against the request that produced it.
+fn read_v2_reply(
+    reader: &mut BufReader<TcpStream>,
+    req: &Request,
+) -> Result<Reply, ClientError> {
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => return Err(ClientError::Io("server closed the connection".into())),
+        Ok(_) => {}
+        Err(e) => return Err(ClientError::Io(format!("receive: {e}"))),
+    }
+    protocol::parse_v2_reply(req, &line)
+        .map_err(|e| ClientError::Protocol(format!("{e:#}")))
+}
+
+/// Encode and send one v3 request frame, returning its id.
+fn send_v3(conn: &mut Conn, req: &Request) -> Result<u64, ClientError> {
+    let Conn::V3 {
+        stream, next_id, ..
+    } = conn
+    else {
+        return Err(ClientError::Io("wrong transport".into()));
+    };
+    let id = *next_id;
+    *next_id += 1;
+    let mut frame = Vec::new();
+    protocol::encode_v3_request(id, req, &mut frame);
+    stream
+        .write_all(&frame)
+        .map_err(|e| ClientError::Io(format!("send: {e}")))?;
+    Ok(id)
+}
+
+/// Read bytes until one complete v3 frame decodes.
+fn read_v3_frame(conn: &mut Conn) -> Result<(u64, V3Reply), ClientError> {
+    let Conn::V3 { stream, inbuf, .. } = conn else {
+        return Err(ClientError::Io("wrong transport".into()));
+    };
+    let mut chunk = [0u8; 16 << 10];
+    loop {
+        match protocol::try_decode_v3_reply(inbuf) {
+            Ok(Some((consumed, id, reply))) => {
+                inbuf.drain(..consumed);
+                return Ok((id, reply));
+            }
+            Ok(None) => {}
+            Err(e) => return Err(ClientError::Protocol(format!("{e:#}"))),
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err(ClientError::Io("server closed the connection".into())),
+            Ok(n) => inbuf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ClientError::Io(format!("receive: {e}"))),
+        }
+    }
 }

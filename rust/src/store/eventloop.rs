@@ -1,0 +1,1075 @@
+//! Epoll/kqueue event-loop TCP front-end for the artifact server.
+//!
+//! One poller thread owns every socket: non-blocking accept, read, and
+//! write, with a per-connection state machine (wire sniffing, incremental
+//! frame decode, in-order reply delivery). Decode work never runs on the
+//! poller thread — parsed [`Request`]s are handed to a small executor
+//! pool that calls the same [`ArtifactServer::dispatch`] the threaded
+//! front-end uses, so admission gates, per-request deadlines, fault
+//! stalls, drain, and quarantine semantics carry over unchanged. The
+//! pool's completions come back over a channel and a loopback wake
+//! socket, and each connection's replies are re-sequenced so pipelined
+//! requests answer strictly in request order on both wires.
+//!
+//! Backpressure is two-sided and per connection:
+//!
+//! * **write**: replies queue in a bounded outbound buffer
+//!   ([`EventLoopConfig::outbuf_bytes`]); while it is over budget the
+//!   connection's read interest is dropped, so a slow reader stalls only
+//!   itself — frames stop being parsed, the kernel receive window fills,
+//!   and the sender blocks.
+//! * **pipeline depth**: at most [`EventLoopConfig::pipeline_depth`]
+//!   requests per connection may be in flight in the executor; further
+//!   frames stay buffered (and reads pause) until replies drain.
+//!
+//! Connection limits: `StoreServeConfig::max_conns` still bounds the
+//! *total* connections served before the loop drains and exits (the
+//! threaded front-end's contract), while
+//! [`super::server::ServeLimits::max_open_conns`] bounds *simultaneously
+//! open* connections — a connection over that cap is refused with one
+//! `ERR overloaded` line and closed, without counting against
+//! `max_conns`.
+//!
+//! The poller is std-only: raw `epoll` (Linux) / `kqueue` (macOS) FFI,
+//! level-triggered, with a loopback socket pair as the cross-thread wake
+//! channel. On platforms without either, [`run`] reports unsupported and
+//! [`serve_store_eventloop`] falls back to the threaded front-end.
+
+use super::protocol::{self, Reply, Request};
+use super::server::{ArtifactServer, StoreServeConfig};
+use super::{lock_unpoisoned, ArtifactStore};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Event-loop tuning knobs, carried in
+/// [`StoreServeConfig::eventloop`](super::server::StoreServeConfig).
+#[derive(Debug, Clone)]
+pub struct EventLoopConfig {
+    /// Per-connection outbound buffer cap in bytes; a connection whose
+    /// buffered replies exceed this stops being read until the peer
+    /// drains them.
+    pub outbuf_bytes: usize,
+    /// Per-connection cap on requests concurrently in the executor;
+    /// frames past it wait in the input buffer.
+    pub pipeline_depth: usize,
+    /// Executor threads running dispatch; `0` = available parallelism.
+    pub workers: usize,
+}
+
+impl Default for EventLoopConfig {
+    fn default() -> Self {
+        EventLoopConfig {
+            outbuf_bytes: 4 << 20,
+            pipeline_depth: 1024,
+            workers: 0,
+        }
+    }
+}
+
+/// Whether this build has a poller backend (Linux epoll / macOS kqueue).
+pub fn supported() -> bool {
+    cfg!(any(
+        target_os = "linux",
+        target_os = "android",
+        target_os = "macos",
+        target_os = "ios"
+    ))
+}
+
+/// Raise the process `RLIMIT_NOFILE` soft limit toward `want` (clamped to
+/// the hard limit) and return the resulting soft limit. Best-effort: any
+/// failure leaves the limit unchanged and returns the current value (or
+/// `0` when even reading fails). High-concurrency serving needs one fd
+/// per connection, and default soft limits (often 1024) are below a
+/// 1k-connection benchmark's needs.
+#[cfg(unix)]
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    use std::os::raw::c_int;
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    const RLIMIT_NOFILE: c_int = if cfg!(any(target_os = "macos", target_os = "ios")) {
+        8
+    } else {
+        7
+    };
+    extern "C" {
+        fn getrlimit(resource: c_int, rlim: *mut Rlimit) -> c_int;
+        fn setrlimit(resource: c_int, rlim: *const Rlimit) -> c_int;
+    }
+    let mut lim = Rlimit { cur: 0, max: 0 };
+    // SAFETY: plain POSIX calls on a local struct of the kernel's layout
+    // (rlim_t is 64-bit on every supported target).
+    unsafe {
+        if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
+            return 0;
+        }
+        if lim.cur >= want {
+            return lim.cur;
+        }
+        let raised = Rlimit {
+            cur: want.min(lim.max),
+            max: lim.max,
+        };
+        if setrlimit(RLIMIT_NOFILE, &raised) == 0 {
+            raised.cur
+        } else {
+            lim.cur
+        }
+    }
+}
+
+#[cfg(not(unix))]
+pub fn raise_nofile_limit(_want: u64) -> u64 {
+    0
+}
+
+/// Serve a directory of artifacts on an already-bound listener through
+/// the event loop (the event-loop counterpart of
+/// [`super::server::serve_store_listener`]). Platforms without a poller
+/// backend fall back to the threaded front-end so the CLI keeps working
+/// everywhere.
+pub fn serve_store_eventloop(
+    listener: std::net::TcpListener,
+    dir: &std::path::Path,
+    cfg: StoreServeConfig,
+) -> Result<()> {
+    if !supported() {
+        eprintln!("[tcz] no event-loop backend on this platform; using the threaded front-end");
+        return super::server::serve_store_listener(listener, dir, cfg);
+    }
+    let store = ArtifactStore::with_faults(dir, cfg.cache_bytes, cfg.faults.clone())?;
+    let server = Arc::new(ArtifactServer::with_options(
+        store,
+        cfg.policy.clone(),
+        cfg.allow_xla,
+        cfg.tile_bytes,
+        cfg.limits.clone(),
+        cfg.faults.clone(),
+    ));
+    let result = run(server.clone(), listener, &cfg);
+    if let Ok(server) = Arc::try_unwrap(server) {
+        server.shutdown();
+    }
+    result
+}
+
+/// `serve --dir --frontend eventloop`: bind, banner, serve.
+pub fn serve_store_eventloop_tcp(
+    dir: &std::path::Path,
+    addr: &str,
+    cfg: StoreServeConfig,
+) -> Result<()> {
+    let listener =
+        std::net::TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr()?;
+    let names = ArtifactStore::new(dir, cfg.cache_bytes)?.list()?;
+    eprintln!(
+        "[tcz] serving artifact store on {local} (event loop, {} artifacts in {}, cache {} B)",
+        names.len(),
+        dir.display(),
+        cfg.cache_bytes
+    );
+    serve_store_eventloop(listener, dir, cfg)
+}
+
+/// Run the event loop over an existing server and listener until
+/// `cfg.max_conns` connections have been served (or the server drains)
+/// and every connection has closed. Exposed so tests can hold the
+/// `Arc<ArtifactServer>` and drive drain/stat from outside.
+pub fn run(
+    server: Arc<ArtifactServer>,
+    listener: std::net::TcpListener,
+    cfg: &StoreServeConfig,
+) -> Result<()> {
+    imp::run(server, listener, cfg)
+}
+
+#[cfg(any(
+    target_os = "linux",
+    target_os = "android",
+    target_os = "macos",
+    target_os = "ios"
+))]
+mod imp {
+    use super::super::faults::FaultStream;
+    use super::*;
+    use std::collections::{BTreeMap, HashMap};
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::{AsRawFd, RawFd};
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    /// Poll tick in milliseconds: the cadence at which drain and idle
+    /// timeouts are observed when no socket is ready.
+    const TICK_MS: i32 = 50;
+
+    const TOKEN_LISTENER: u64 = 0;
+    const TOKEN_WAKE: u64 = 1;
+    const TOKEN_FIRST_CONN: u64 = 2;
+
+    /// Wire encoding a connection settled on (see the sniffing rules in
+    /// [`protocol`]).
+    #[derive(Clone, Copy, PartialEq, Eq)]
+    enum Wire {
+        Sniff,
+        V2,
+        V3,
+    }
+
+    enum ConnIo {
+        Plain(TcpStream),
+        Faulty(FaultStream<TcpStream>),
+    }
+
+    impl ConnIo {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            match self {
+                ConnIo::Plain(s) => s.read(buf),
+                ConnIo::Faulty(s) => s.read(buf),
+            }
+        }
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            match self {
+                ConnIo::Plain(s) => s.write(buf),
+                ConnIo::Faulty(s) => s.write(buf),
+            }
+        }
+    }
+
+    /// One connection's state machine.
+    struct Conn {
+        io: ConnIo,
+        fd: RawFd,
+        token: u64,
+        wire: Wire,
+        /// Bytes read but not yet framed.
+        inbuf: Vec<u8>,
+        /// Encoded replies awaiting the kernel send buffer.
+        outbuf: Vec<u8>,
+        /// Sequence number assigned to the next parsed frame.
+        next_seq: u64,
+        /// Sequence number the next appended reply must carry — replies
+        /// completing out of order park in `pending` until their turn.
+        next_write_seq: u64,
+        pending: BTreeMap<u64, Vec<u8>>,
+        /// Frames handed to the executor and not yet completed.
+        inflight: usize,
+        last_frame: Instant,
+        /// Peer half-closed (EOF): stop reading, but keep parsing and
+        /// answering frames already buffered — the threaded front-end's
+        /// contract for a client that pipelines then shuts down writes.
+        read_closed: bool,
+        /// No more frames will be parsed; flush what is owed, then close.
+        closing: bool,
+        /// Interest currently registered with the poller.
+        registered: (bool, bool),
+    }
+
+    impl Conn {
+        /// Park an already-encoded reply under the next frame sequence
+        /// (used for inline parse errors, which must still interleave
+        /// in order with executor replies).
+        fn push_inline(&mut self, bytes: Vec<u8>) {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.pending.insert(seq, bytes);
+        }
+
+        /// Move consecutively-sequenced replies into the outbound buffer.
+        fn flush_pending(&mut self) {
+            while let Some(bytes) = self.pending.remove(&self.next_write_seq) {
+                self.outbuf.extend_from_slice(&bytes);
+                self.next_write_seq += 1;
+            }
+        }
+
+        /// Everything owed has been delivered: safe to close.
+        fn drained(&self) -> bool {
+            self.inflight == 0 && self.pending.is_empty() && self.outbuf.is_empty()
+        }
+    }
+
+    /// One dispatch unit for the executor pool. `work` is `Err` for
+    /// frames that failed to parse — their reply is already decided, but
+    /// it still rides the sequence machinery so ordering holds.
+    struct Job {
+        conn: u64,
+        seq: u64,
+        wire: Wire,
+        /// v3 request id to echo (0 on the v2 wire).
+        id: u64,
+        work: std::result::Result<Request, Reply>,
+    }
+
+    fn encode_reply(wire: Wire, id: u64, reply: &Reply) -> Vec<u8> {
+        match wire {
+            Wire::V3 => {
+                let mut out = Vec::new();
+                protocol::encode_v3_reply(id, reply, &mut out);
+                out
+            }
+            _ => {
+                let mut line = String::new();
+                protocol::write_v2_reply(reply, &mut line);
+                line.push('\n');
+                line.into_bytes()
+            }
+        }
+    }
+
+    /// Loopback socket pair: the executor pool writes one byte to wake
+    /// the poller out of its wait when a completion lands.
+    fn wake_pair() -> std::io::Result<(TcpStream, TcpStream)> {
+        let l = TcpListener::bind(("127.0.0.1", 0))?;
+        let tx = TcpStream::connect(l.local_addr()?)?;
+        let (rx, _) = l.accept()?;
+        rx.set_nonblocking(true)?;
+        tx.set_nodelay(true)?;
+        Ok((tx, rx))
+    }
+
+    pub(super) fn run(
+        server: Arc<ArtifactServer>,
+        listener: TcpListener,
+        cfg: &StoreServeConfig,
+    ) -> Result<()> {
+        let el = cfg.eventloop.clone();
+        let outbuf_cap = el.outbuf_bytes.max(1);
+        let depth = el.pipeline_depth.max(1);
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        let poller = sys::Poller::new().context("create poller")?;
+        poller
+            .add(listener.as_raw_fd(), TOKEN_LISTENER, true, false)
+            .context("register listener")?;
+        let (wake_tx, wake_rx) = wake_pair().context("wake channel")?;
+        // non-blocking wake writes: a full wake buffer already guarantees
+        // a pending wakeup, and a blocked worker could never join at
+        // shutdown
+        wake_tx
+            .set_nonblocking(true)
+            .context("wake nonblocking")?;
+        poller
+            .add(wake_rx.as_raw_fd(), TOKEN_WAKE, true, false)
+            .context("register wake")?;
+        let wake_tx = Arc::new(wake_tx);
+
+        // executor pool: shared-receiver work queue, completion channel
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let (done_tx, done_rx) = mpsc::channel::<(u64, u64, Vec<u8>)>();
+        let job_rx = Arc::new(std::sync::Mutex::new(job_rx));
+        let nworkers = if el.workers > 0 {
+            el.workers
+        } else {
+            std::thread::available_parallelism().map_or(4, |n| n.get())
+        };
+        let mut workers = Vec::with_capacity(nworkers);
+        for _ in 0..nworkers {
+            let server = server.clone();
+            let job_rx = job_rx.clone();
+            let done_tx = done_tx.clone();
+            let wake = wake_tx.clone();
+            workers.push(std::thread::spawn(move || loop {
+                let job = match lock_unpoisoned(&job_rx).recv() {
+                    Ok(j) => j,
+                    Err(_) => break, // queue closed: loop is shutting down
+                };
+                let reply = match &job.work {
+                    Ok(req) => server.dispatch(req),
+                    Err(ready) => ready.clone(),
+                };
+                let bytes = encode_reply(job.wire, job.id, &reply);
+                if done_tx.send((job.conn, job.seq, bytes)).is_err() {
+                    break;
+                }
+                let _ = (&*wake).write(&[1u8]);
+            }));
+        }
+        drop(done_tx); // the loop's clone-holders are only the workers
+
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_token = TOKEN_FIRST_CONN;
+        let mut accepted = 0usize;
+        let mut listening = true;
+        let mut events = Vec::with_capacity(1024);
+        let mut chunk = vec![0u8; 64 << 10];
+
+        loop {
+            // exit once every served connection is gone and no more will
+            // be accepted (quota reached or draining)
+            if conns.is_empty() && (accepted >= cfg.max_conns || server.is_draining()) {
+                break;
+            }
+            poller.wait(&mut events, TICK_MS).context("poller wait")?;
+
+            let mut touched: Vec<u64> = Vec::new();
+            for ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => {
+                        accept_ready(
+                            &listener,
+                            &poller,
+                            cfg,
+                            &mut conns,
+                            &mut next_token,
+                            &mut accepted,
+                        );
+                        if accepted >= cfg.max_conns && listening {
+                            // quota reached: stop watching the listener
+                            let _ =
+                                poller.modify(listener.as_raw_fd(), TOKEN_LISTENER, false, false);
+                            listening = false;
+                        }
+                    }
+                    TOKEN_WAKE => {
+                        // drain the wake bytes; completions are collected
+                        // below regardless of how many bytes coalesced
+                        let mut sink = [0u8; 256];
+                        while let Ok(n) = (&wake_rx).read(&mut sink) {
+                            if n == 0 {
+                                break;
+                            }
+                        }
+                    }
+                    token => {
+                        if let Some(conn) = conns.get_mut(&token) {
+                            let mut dead = ev.err;
+                            if !dead && ev.readable && !conn.closing && !conn.read_closed {
+                                dead = read_ready(conn, &mut chunk);
+                            }
+                            if dead {
+                                conns.remove(&token);
+                            } else {
+                                touched.push(token);
+                            }
+                        }
+                    }
+                }
+            }
+
+            // executor completions (may belong to untouched connections)
+            while let Ok((cid, seq, bytes)) = done_rx.try_recv() {
+                if let Some(conn) = conns.get_mut(&cid) {
+                    conn.inflight -= 1;
+                    conn.pending.insert(seq, bytes);
+                    touched.push(cid);
+                }
+            }
+
+            if server.is_draining() {
+                // stop parsing new frames everywhere; owed replies still
+                // flush below, then connections close
+                for (&token, conn) in conns.iter_mut() {
+                    if !conn.closing {
+                        conn.closing = true;
+                        touched.push(token);
+                    }
+                }
+            }
+
+            touched.sort_unstable();
+            touched.dedup();
+            for token in touched {
+                let Some(conn) = conns.get_mut(&token) else {
+                    continue;
+                };
+                if pump(conn, depth, outbuf_cap, &job_tx) {
+                    conns.remove(&token);
+                } else {
+                    update_interest(&poller, conn, depth, outbuf_cap);
+                }
+            }
+
+            // idle reaping on the tick (only connections with nothing
+            // owed; an in-flight decode is not "idle")
+            if let Some(idle) = cfg.limits.idle_timeout {
+                conns.retain(|_, c| !(c.drained() && c.last_frame.elapsed() >= idle));
+            }
+        }
+
+        drop(job_tx); // closes the queue: workers drain and exit
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+
+    /// Accept until `WouldBlock`, enforcing the open-connection cap.
+    fn accept_ready(
+        listener: &TcpListener,
+        poller: &sys::Poller,
+        cfg: &StoreServeConfig,
+        conns: &mut HashMap<u64, Conn>,
+        next_token: &mut u64,
+        accepted: &mut usize,
+    ) {
+        while *accepted < cfg.max_conns {
+            let (stream, _peer) = match listener.accept() {
+                Ok(ok) => ok,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            };
+            let cap = cfg.limits.max_open_conns;
+            if cap > 0 && conns.len() >= cap {
+                // refuse over-cap connections explicitly (one short line
+                // fits any fresh socket's send buffer) without spending
+                // the max_conns quota on them
+                let mut s = stream;
+                let _ = s.write_all(b"ERR overloaded: connection limit reached\n");
+                continue;
+            }
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            let _ = stream.set_nodelay(true);
+            let fd = stream.as_raw_fd();
+            let token = *next_token;
+            *next_token += 1;
+            let io = match &cfg.faults {
+                Some(f) => ConnIo::Faulty(f.wrap(stream)),
+                None => ConnIo::Plain(stream),
+            };
+            if poller.add(fd, token, true, false).is_err() {
+                continue; // dropping `io` closes the socket
+            }
+            conns.insert(
+                token,
+                Conn {
+                    io,
+                    fd,
+                    token,
+                    wire: Wire::Sniff,
+                    inbuf: Vec::new(),
+                    outbuf: Vec::new(),
+                    next_seq: 0,
+                    next_write_seq: 0,
+                    pending: BTreeMap::new(),
+                    inflight: 0,
+                    last_frame: Instant::now(),
+                    read_closed: false,
+                    closing: false,
+                    registered: (true, false),
+                },
+            );
+            *accepted += 1;
+        }
+    }
+
+    /// Run a connection to quiescence: parse buffered frames (capacity
+    /// permitting), flush in-order replies, write. Loops until nothing
+    /// changes, so a burst that frees write capacity immediately unblocks
+    /// parked frames. Returns `true` when the connection is dead.
+    fn pump(conn: &mut Conn, depth: usize, outbuf_cap: usize, job_tx: &mpsc::Sender<Job>) -> bool {
+        loop {
+            let before = (
+                conn.inbuf.len(),
+                conn.next_seq,
+                conn.next_write_seq,
+                conn.outbuf.len(),
+            );
+            if !conn.closing {
+                parse_frames(conn, depth, outbuf_cap, job_tx);
+            }
+            conn.flush_pending();
+            if write_ready(conn) {
+                return true;
+            }
+            let after = (
+                conn.inbuf.len(),
+                conn.next_seq,
+                conn.next_write_seq,
+                conn.outbuf.len(),
+            );
+            if after == before {
+                break;
+            }
+        }
+        // EOF already seen and every parseable frame answered: close
+        // (leftover partial bytes in `inbuf` are a truncated frame the
+        // peer can never finish)
+        (conn.closing || conn.read_closed) && conn.drained()
+    }
+
+    /// Pull whatever the kernel has; returns `true` when the connection
+    /// is dead (hard read error).
+    fn read_ready(conn: &mut Conn, chunk: &mut [u8]) -> bool {
+        loop {
+            match conn.io.read(chunk) {
+                Ok(0) => {
+                    // peer half-closed (or an injected disconnect): stop
+                    // reading; buffered frames still parse and answer
+                    conn.read_closed = true;
+                    return false;
+                }
+                Ok(n) => {
+                    conn.inbuf.extend_from_slice(&chunk[..n]);
+                    if conn.inbuf.len() > super::super::server::MAX_FRAME_BYTES
+                        && conn.wire != Wire::V3
+                    {
+                        // unterminated v2 line / pre-sniff garbage past
+                        // the cap: reply once and stop reading (same
+                        // contract as the threaded front-end)
+                        conn.push_inline(b"ERR frame too large\n".to_vec());
+                        conn.closing = true;
+                        return false;
+                    }
+                    if n < chunk.len() {
+                        return false; // kernel buffer drained
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return false,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+    }
+
+    /// Parse complete frames out of `inbuf` and hand them to the
+    /// executor, respecting the pipeline-depth and write-backpressure
+    /// caps (excess frames simply stay buffered).
+    fn parse_frames(conn: &mut Conn, depth: usize, outbuf_cap: usize, job_tx: &mpsc::Sender<Job>) {
+        loop {
+            if conn.inflight >= depth || conn.outbuf.len() >= outbuf_cap {
+                return; // backpressure: resume when replies drain
+            }
+            if conn.wire == Wire::Sniff {
+                match conn.inbuf.first() {
+                    None => return,
+                    Some(&b) if b == protocol::V3_MAGIC[0] => {
+                        if conn.inbuf.len() < protocol::V3_MAGIC.len() + 1 {
+                            return; // preamble still arriving
+                        }
+                        if conn.inbuf[..protocol::V3_MAGIC.len()] != protocol::V3_MAGIC {
+                            conn.closing = true; // bad magic: hang up
+                            return;
+                        }
+                        conn.inbuf.drain(..protocol::V3_MAGIC.len() + 1);
+                        let mut hello = Vec::new();
+                        protocol::encode_v3_hello(&mut hello);
+                        // no frames are parsed yet, so the HELLO can skip
+                        // the sequence machinery
+                        conn.outbuf.extend_from_slice(&hello);
+                        conn.wire = Wire::V3;
+                    }
+                    Some(_) => conn.wire = Wire::V2,
+                }
+            }
+            match conn.wire {
+                Wire::Sniff => return,
+                Wire::V2 => {
+                    let Some(pos) = conn.inbuf.iter().position(|&b| b == b'\n') else {
+                        return;
+                    };
+                    if pos > super::super::server::MAX_FRAME_BYTES {
+                        conn.push_inline(b"ERR frame too large\n".to_vec());
+                        conn.closing = true;
+                        return;
+                    }
+                    let frame: Vec<u8> = conn.inbuf.drain(..=pos).collect();
+                    let line = String::from_utf8_lossy(&frame[..pos]).into_owned();
+                    conn.last_frame = Instant::now();
+                    let work = protocol::parse_v2_request(&line)
+                        .map_err(|e| protocol::error_reply(&e));
+                    submit(conn, Wire::V2, 0, work, job_tx);
+                }
+                Wire::V3 => match protocol::try_decode_v3_request(&conn.inbuf) {
+                    Ok(None) => return,
+                    Ok(Some((consumed, id, req))) => {
+                        conn.inbuf.drain(..consumed);
+                        conn.last_frame = Instant::now();
+                        submit(conn, Wire::V3, id, Ok(req), job_tx);
+                    }
+                    Err(_) => {
+                        // binary framing is unrecoverable: no reply,
+                        // deliver what is owed, close
+                        conn.closing = true;
+                        return;
+                    }
+                },
+            }
+        }
+    }
+
+    fn submit(
+        conn: &mut Conn,
+        wire: Wire,
+        id: u64,
+        work: std::result::Result<Request, Reply>,
+        job_tx: &mpsc::Sender<Job>,
+    ) {
+        let seq = conn.next_seq;
+        conn.next_seq += 1;
+        let job = Job {
+            conn: conn.token,
+            seq,
+            wire,
+            id,
+            work,
+        };
+        if job_tx.send(job).is_ok() {
+            conn.inflight += 1;
+        } else {
+            // executor gone (shutdown race): the reply can never come,
+            // close the connection instead of wedging its sequence
+            conn.closing = true;
+        }
+    }
+
+    /// Push buffered reply bytes; returns `true` when the connection is
+    /// dead (write error, or closing with everything delivered).
+    fn write_ready(conn: &mut Conn) -> bool {
+        while !conn.outbuf.is_empty() {
+            match conn.io.write(&conn.outbuf) {
+                Ok(0) => return true,
+                Ok(n) => {
+                    conn.outbuf.drain(..n);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+        conn.closing && conn.drained()
+    }
+
+    fn update_interest(poller: &sys::Poller, conn: &mut Conn, depth: usize, outbuf_cap: usize) {
+        let want_read = !conn.closing
+            && !conn.read_closed
+            && conn.inflight < depth
+            // low watermark: resume reads once the backlog halves, so
+            // interest doesn't flap on every byte
+            && conn.outbuf.len() < outbuf_cap / 2 + 1;
+        let want_write = !conn.outbuf.is_empty();
+        if conn.registered != (want_read, want_write) {
+            if poller.modify(conn.fd, conn.token, want_read, want_write).is_ok() {
+                conn.registered = (want_read, want_write);
+            }
+        }
+    }
+
+    /// Minimal level-triggered poller over raw epoll (Linux) or kqueue
+    /// (macOS) FFI — no external crates. Closing a registered fd
+    /// deregisters it implicitly (no fd is ever dup'd), so the interface
+    /// is add/modify/wait only.
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    mod sys {
+        use std::io;
+        use std::os::raw::c_int;
+        use std::os::unix::io::RawFd;
+
+        const EPOLL_CTL_ADD: c_int = 1;
+        const EPOLL_CTL_MOD: c_int = 3;
+        const EPOLLIN: u32 = 0x001;
+        const EPOLLOUT: u32 = 0x004;
+        const EPOLLERR: u32 = 0x008;
+        const EPOLLHUP: u32 = 0x010;
+        const EPOLLRDHUP: u32 = 0x2000;
+        const EPOLL_CLOEXEC: c_int = 0x80000;
+
+        // x86_64 is the one ABI where the kernel packs epoll_event
+        #[repr(C)]
+        #[cfg_attr(target_arch = "x86_64", repr(packed))]
+        #[derive(Clone, Copy)]
+        struct EpollEvent {
+            events: u32,
+            data: u64,
+        }
+
+        extern "C" {
+            fn epoll_create1(flags: c_int) -> c_int;
+            fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+            fn epoll_wait(
+                epfd: c_int,
+                events: *mut EpollEvent,
+                maxevents: c_int,
+                timeout: c_int,
+            ) -> c_int;
+            fn close(fd: c_int) -> c_int;
+        }
+
+        pub struct Event {
+            pub token: u64,
+            pub readable: bool,
+            pub writable: bool,
+            pub err: bool,
+        }
+
+        pub struct Poller {
+            epfd: c_int,
+        }
+
+        impl Poller {
+            pub fn new() -> io::Result<Poller> {
+                // SAFETY: plain syscall; a negative return is an error.
+                let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+                if epfd < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                Ok(Poller { epfd })
+            }
+
+            fn ctl(&self, op: c_int, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+                let mut ev = EpollEvent {
+                    events: (if read { EPOLLIN } else { 0 })
+                        | (if write { EPOLLOUT } else { 0 })
+                        | EPOLLRDHUP,
+                    data: token,
+                };
+                // SAFETY: `ev` outlives the call; the kernel copies it.
+                if unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                Ok(())
+            }
+
+            pub fn add(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+                self.ctl(EPOLL_CTL_ADD, fd, token, read, write)
+            }
+
+            pub fn modify(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+                self.ctl(EPOLL_CTL_MOD, fd, token, read, write)
+            }
+
+            pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+                out.clear();
+                let mut raw = [EpollEvent { events: 0, data: 0 }; 256];
+                // SAFETY: `raw` is a valid out-buffer of the stated length.
+                let n = loop {
+                    let n = unsafe {
+                        epoll_wait(self.epfd, raw.as_mut_ptr(), raw.len() as c_int, timeout_ms)
+                    };
+                    if n >= 0 {
+                        break n as usize;
+                    }
+                    let e = io::Error::last_os_error();
+                    if e.kind() != io::ErrorKind::Interrupted {
+                        return Err(e);
+                    }
+                };
+                for ev in raw.iter().take(n) {
+                    // copy packed fields by value (no references into a
+                    // possibly-unaligned struct)
+                    let bits = ev.events;
+                    let token = ev.data;
+                    out.push(Event {
+                        token,
+                        readable: bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0,
+                        writable: bits & EPOLLOUT != 0,
+                        err: bits & EPOLLERR != 0,
+                    });
+                }
+                Ok(())
+            }
+        }
+
+        impl Drop for Poller {
+            fn drop(&mut self) {
+                // SAFETY: closing the fd we created.
+                unsafe {
+                    close(self.epfd);
+                }
+            }
+        }
+    }
+
+    #[cfg(any(target_os = "macos", target_os = "ios"))]
+    mod sys {
+        use std::io;
+        use std::os::raw::{c_int, c_void};
+        use std::os::unix::io::RawFd;
+        use std::ptr;
+
+        const EVFILT_READ: i16 = -1;
+        const EVFILT_WRITE: i16 = -2;
+        const EV_ADD: u16 = 0x0001;
+        const EV_ENABLE: u16 = 0x0004;
+        const EV_DISABLE: u16 = 0x0008;
+        const EV_EOF: u16 = 0x8000;
+        const EV_ERROR: u16 = 0x4000;
+
+        #[repr(C)]
+        struct Kevent {
+            ident: usize,
+            filter: i16,
+            flags: u16,
+            fflags: u32,
+            data: isize,
+            udata: *mut c_void,
+        }
+
+        #[repr(C)]
+        struct Timespec {
+            tv_sec: i64,
+            tv_nsec: i64,
+        }
+
+        extern "C" {
+            fn kqueue() -> c_int;
+            fn kevent(
+                kq: c_int,
+                changelist: *const Kevent,
+                nchanges: c_int,
+                eventlist: *mut Kevent,
+                nevents: c_int,
+                timeout: *const Timespec,
+            ) -> c_int;
+            fn close(fd: c_int) -> c_int;
+        }
+
+        pub struct Event {
+            pub token: u64,
+            pub readable: bool,
+            pub writable: bool,
+            pub err: bool,
+        }
+
+        pub struct Poller {
+            kq: c_int,
+        }
+
+        impl Poller {
+            pub fn new() -> io::Result<Poller> {
+                // SAFETY: plain syscall; a negative return is an error.
+                let kq = unsafe { kqueue() };
+                if kq < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                Ok(Poller { kq })
+            }
+
+            /// Register or update both filters: EV_ADD is an idempotent
+            /// upsert, and enable/disable toggles interest without the
+            /// ENOENT pitfalls of delete/re-add.
+            fn set(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+                let mk = |filter: i16, on: bool| Kevent {
+                    ident: fd as usize,
+                    filter,
+                    flags: EV_ADD | if on { EV_ENABLE } else { EV_DISABLE },
+                    fflags: 0,
+                    data: 0,
+                    udata: token as *mut c_void,
+                };
+                let changes = [mk(EVFILT_READ, read), mk(EVFILT_WRITE, write)];
+                // SAFETY: `changes` is a valid array of the stated length;
+                // no eventlist is requested.
+                let r = unsafe {
+                    kevent(
+                        self.kq,
+                        changes.as_ptr(),
+                        changes.len() as c_int,
+                        ptr::null_mut(),
+                        0,
+                        ptr::null(),
+                    )
+                };
+                if r < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                Ok(())
+            }
+
+            pub fn add(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+                self.set(fd, token, read, write)
+            }
+
+            pub fn modify(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+                self.set(fd, token, read, write)
+            }
+
+            pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+                out.clear();
+                let mut raw: [Kevent; 256] = unsafe { std::mem::zeroed() };
+                let ts = Timespec {
+                    tv_sec: (timeout_ms / 1000) as i64,
+                    tv_nsec: (timeout_ms % 1000) as i64 * 1_000_000,
+                };
+                // SAFETY: `raw` is a valid out-buffer of the stated length.
+                let n = loop {
+                    let n = unsafe {
+                        kevent(
+                            self.kq,
+                            ptr::null(),
+                            0,
+                            raw.as_mut_ptr(),
+                            raw.len() as c_int,
+                            &ts,
+                        )
+                    };
+                    if n >= 0 {
+                        break n as usize;
+                    }
+                    let e = io::Error::last_os_error();
+                    if e.kind() != io::ErrorKind::Interrupted {
+                        return Err(e);
+                    }
+                };
+                for ev in raw.iter().take(n) {
+                    out.push(Event {
+                        token: ev.udata as u64,
+                        readable: ev.filter == EVFILT_READ || ev.flags & EV_EOF != 0,
+                        writable: ev.filter == EVFILT_WRITE,
+                        err: ev.flags & EV_ERROR != 0,
+                    });
+                }
+                Ok(())
+            }
+        }
+
+        impl Drop for Poller {
+            fn drop(&mut self) {
+                // SAFETY: closing the fd we created.
+                unsafe {
+                    close(self.kq);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(not(any(
+    target_os = "linux",
+    target_os = "android",
+    target_os = "macos",
+    target_os = "ios"
+)))]
+mod imp {
+    use super::*;
+
+    pub(super) fn run(
+        _server: Arc<ArtifactServer>,
+        _listener: std::net::TcpListener,
+        _cfg: &StoreServeConfig,
+    ) -> Result<()> {
+        anyhow::bail!(
+            "event-loop front-end is unsupported on this platform (no epoll/kqueue); \
+             use the threaded front-end"
+        )
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nofile_limit_raise_is_monotone() {
+        let before = raise_nofile_limit(0);
+        let after = raise_nofile_limit(before.saturating_add(16));
+        if cfg!(unix) {
+            assert!(after >= before, "raising must never lower the limit");
+        }
+    }
+
+    #[test]
+    fn eventloop_config_defaults_are_sane() {
+        let cfg = EventLoopConfig::default();
+        assert!(cfg.outbuf_bytes >= 1 << 20);
+        assert!(cfg.pipeline_depth >= 1);
+        assert_eq!(cfg.workers, 0, "0 must mean auto");
+    }
+}

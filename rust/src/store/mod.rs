@@ -22,12 +22,22 @@
 //!   flush; neural artifacts ride the XLA-batched
 //!   [`crate::coordinator::server::DecodeServer`] instead when the AOT
 //!   artifacts are available.
+//! * [`protocol`] — the typed [`protocol::Request`]/[`protocol::Reply`]
+//!   core shared by every front-end and the client, with two wire
+//!   encodings over the same enums: the legacy line protocol v2 and the
+//!   length-prefixed binary protocol v3 (version-negotiated on the first
+//!   bytes, so both wires share one port).
 //! * [`server::ArtifactServer`] — routes `open` / `get` / `batch-get` /
-//!   `stat` requests to shards, and a TCP front-end speaking the line
-//!   protocol v2 (artifact id + coordinate block per frame).
-//! * [`client::ServeClient`] — the matching protocol v2 client, with
-//!   socket timeouts and retry-with-backoff restricted to idempotent
-//!   verbs.
+//!   `stat` requests to shards, plus the thread-per-connection TCP
+//!   front-end.
+//! * [`eventloop`] — the epoll/kqueue event-loop TCP front-end:
+//!   non-blocking accept/read/write, pipelined requests, bounded
+//!   outbound buffers with write backpressure, connection limits; decode
+//!   work still flows through the same shard/batcher/tile-cache path.
+//! * [`client::ServeClient`] — the matching client, with socket
+//!   timeouts, retry-with-backoff restricted to idempotent verbs, and a
+//!   transport (v2 text or v3 binary with pipelining) chosen at
+//!   construction.
 //! * [`faults::FaultPlane`] — an opt-in deterministic fault-injection
 //!   layer over store file reads and serving sockets, used by the
 //!   robustness test suite and the degraded-mode bench section.
@@ -46,8 +56,10 @@
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod client;
+pub mod eventloop;
 pub mod faults;
 pub mod planner;
+pub mod protocol;
 pub mod server;
 pub mod shard;
 pub mod tilecache;

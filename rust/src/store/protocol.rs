@@ -1,0 +1,1232 @@
+//! The typed request/reply protocol core shared by the server front-ends
+//! and [`super::client::ServeClient`] — one verb set, two wire encodings.
+//!
+//! [`Request`] and [`Reply`] are the single source of truth for the
+//! serving API. The *v2 text* functions ([`parse_v2_request`],
+//! [`write_v2_request`], [`write_v2_reply`], [`parse_v2_reply`]) are thin
+//! adapters that reproduce the historical line protocol byte-for-byte,
+//! and the *v3 binary* functions ([`encode_v3_request`],
+//! [`try_decode_v3_request`], [`encode_v3_reply`], [`try_decode_v3_reply`])
+//! are a second encoder over the same enums — no verb logic is duplicated
+//! between wires.
+//!
+//! ## Protocol v3 frame format
+//!
+//! All integers are little-endian. A connection opts into v3 by sending a
+//! 5-byte preamble immediately after connect:
+//!
+//! ```text
+//! 0x93 'T' 'C' '3' <u8 client_version>
+//! ```
+//!
+//! The first byte (`0x93`) can never begin a v2 text frame, so one port
+//! serves both wires: a server front-end sniffs the first byte and stays
+//! in v2 line mode unless it sees the magic. The server answers the
+//! preamble with a HELLO frame carrying its own protocol version; after
+//! that, every frame in both directions is:
+//!
+//! ```text
+//! u32 len | u64 request_id | u8 tag | body...      (len counts id+tag+body)
+//! ```
+//!
+//! Request bodies by tag:
+//!
+//! ```text
+//! 1 methods    (empty)
+//! 2 list       (empty)
+//! 3 open       u16 name_len, name
+//! 4 stat       u16 name_len, name
+//! 5 reload     u16 name_len, name
+//! 6 get        u16 name_len, name, u16 ndims, ndims x u64 coord
+//! 7 batch-get  u16 name_len, name, u32 count, u16 ndims,
+//!              count*ndims x u64 coord (flat, row-major)
+//! ```
+//!
+//! Reply bodies by tag:
+//!
+//! ```text
+//! 1 names   u32 count, count x (u16 len, bytes)
+//! 2 meta    u16 method_len, method, u8 ndims, ndims x u64,
+//!           u64 bytes, u8 bulk,
+//!           u8 has_generation [, u64 generation],
+//!           u8 has_max_error [, f64 max_error, u64 side_bytes],
+//!           u8 has_tiles [, u64 hits, u64 misses, u64 tile_bytes],
+//!           u8 has_health [, u8 health_code, u64 shed, u64 timeouts,
+//!                            u64 quarantined]
+//! 3 value   u32 f32_bits
+//! 4 values  u32 count, count x u32 f32_bits
+//! 5 err     u8 class (0 server / 1 overloaded / 2 deadline),
+//!           u32 msg_len, msg
+//! 6 hello   u8 server_version
+//! ```
+//!
+//! Values travel as raw IEEE-754 bits, so v3 replies are bit-identical to
+//! the v2 text path by construction (v2 prints the shortest roundtripping
+//! decimal). Coordinates are parsed straight out of the frame bytes —
+//! no intermediate strings or per-coordinate allocations.
+//!
+//! Replies are returned **in request order** on every connection; the
+//! echoed `request_id` is a client-side sanity check, not a reordering
+//! channel. Clients may pipeline any number of requests before reading
+//! the first reply (bounded server-side by the front-end's pipeline
+//! depth and write-backpressure limits).
+
+use crate::codec::ArtifactMeta;
+use anyhow::{bail, Context, Result};
+use std::fmt::Write as _;
+
+/// First byte of the v3 connection preamble; never a valid v2 text byte.
+pub const V3_MAGIC: [u8; 4] = [0x93, b'T', b'C', b'3'];
+/// Protocol version spoken by this build.
+pub const V3_VERSION: u8 = 3;
+/// Largest accepted v3 frame body (`len` field), both directions. Big
+/// enough for a ~2M-entry batched reply; anything larger is a protocol
+/// violation and the connection is closed.
+pub const MAX_V3_FRAME: usize = 64 << 20;
+/// Largest artifact name accepted on the wire.
+pub const MAX_NAME_LEN: usize = 4096;
+
+// request verb tags
+const T_METHODS: u8 = 1;
+const T_LIST: u8 = 2;
+const T_OPEN: u8 = 3;
+const T_STAT: u8 = 4;
+const T_RELOAD: u8 = 5;
+const T_GET: u8 = 6;
+const T_BATCH_GET: u8 = 7;
+
+// reply tags
+const R_NAMES: u8 = 1;
+const R_META: u8 = 2;
+const R_VALUE: u8 = 3;
+const R_VALUES: u8 = 4;
+const R_ERR: u8 = 5;
+const R_HELLO: u8 = 6;
+
+/// One serving request, independent of wire encoding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Registered codec names.
+    Methods,
+    /// Artifact names in the store directory.
+    List,
+    /// Load an artifact (revalidating against the file on disk).
+    Open { name: String },
+    /// Metadata without loading (O(1) header peek).
+    Stat { name: String },
+    /// Explicit hot-reload notification; same reply as `Open`.
+    Reload { name: String },
+    /// Decode one entry.
+    Get { name: String, coords: Vec<usize> },
+    /// Decode a batch; values reply in request order.
+    BatchGet {
+        name: String,
+        coords: Vec<Vec<usize>>,
+    },
+}
+
+impl Request {
+    /// The artifact name this request addresses, if any.
+    pub fn name(&self) -> Option<&str> {
+        match self {
+            Request::Methods | Request::List => None,
+            Request::Open { name }
+            | Request::Stat { name }
+            | Request::Reload { name }
+            | Request::Get { name, .. }
+            | Request::BatchGet { name, .. } => Some(name),
+        }
+    }
+}
+
+/// Error class carried explicitly on the v3 wire (v2 clients sniff the
+/// stable `overloaded`/`deadline` message prefixes instead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrClass {
+    /// Semantic server error (unknown artifact, bad coords, draining…).
+    Server,
+    /// Shed by the admission gate or a saturated shard queue; retryable.
+    Overloaded,
+    /// Hit the per-request decode deadline; retryable.
+    Deadline,
+}
+
+impl ErrClass {
+    /// Classify a server error message by its stable prefix — the single
+    /// classification point shared by the server counters, the v3
+    /// encoder and the v2 client.
+    pub fn classify(msg: &str) -> ErrClass {
+        if msg.starts_with("overloaded") {
+            ErrClass::Overloaded
+        } else if msg.starts_with("deadline") {
+            ErrClass::Deadline
+        } else {
+            ErrClass::Server
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            ErrClass::Server => 0,
+            ErrClass::Overloaded => 1,
+            ErrClass::Deadline => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<ErrClass> {
+        Ok(match c {
+            0 => ErrClass::Server,
+            1 => ErrClass::Overloaded,
+            2 => ErrClass::Deadline,
+            other => bail!("bad error class {other}"),
+        })
+    }
+}
+
+/// Health + server-wide robustness counters (`stat` replies only).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HealthReply {
+    /// `true` = ok, `false` = quarantined (serving last-good generation).
+    pub ok: bool,
+    pub shed: u64,
+    pub timeouts: u64,
+    pub quarantined: u64,
+}
+
+/// Typed metadata reply of `open`/`stat`/`reload`. Optional groups mirror
+/// what each verb historically reported on the v2 wire: `generation` only
+/// on `open`/`reload`, `tiles`/`health` only on `stat`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetaReply {
+    pub method: String,
+    pub shape: Vec<usize>,
+    pub bytes: usize,
+    /// True when requests go through the bulk `decode_many` queue.
+    pub bulk: bool,
+    pub generation: Option<u64>,
+    /// Guaranteed pointwise bound of error-bounded artifacts.
+    pub max_error: Option<f64>,
+    /// Residual side-channel bytes (meaningful with `max_error`).
+    pub side_bytes: usize,
+    /// Server-wide decoded-tile cache counters `(hits, misses, bytes)`.
+    pub tiles: Option<(u64, u64, usize)>,
+    pub health: Option<HealthReply>,
+}
+
+impl MetaReply {
+    /// Base metadata from an [`ArtifactMeta`]; callers fill the optional
+    /// verb-specific groups.
+    pub fn from_meta(meta: &ArtifactMeta, bulk: bool) -> MetaReply {
+        MetaReply {
+            method: meta.method.to_string(),
+            shape: meta.shape.clone(),
+            bytes: meta.size_bytes,
+            bulk,
+            generation: None,
+            max_error: meta.max_error,
+            side_bytes: meta.side_bytes,
+            tiles: None,
+            health: None,
+        }
+    }
+}
+
+/// One serving reply, independent of wire encoding.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    /// `methods` / `list`.
+    Names(Vec<String>),
+    /// `open` / `stat` / `reload`.
+    Meta(MetaReply),
+    /// `get`.
+    Value(f32),
+    /// `batch-get`, in request order.
+    Values(Vec<f32>),
+    /// Any failed request; the message is the v2 `ERR` line body.
+    Err(ErrClass, String),
+}
+
+/// Flatten an error chain into the one-line `ERR` message the wire
+/// carries (context chain joined by `: `, newlines stripped) and classify
+/// it. Every front-end funnels failures through here so the two wires
+/// agree byte-for-byte on error text.
+pub fn error_reply(e: &anyhow::Error) -> Reply {
+    let msg = format!("{e:#}").replace(['\n', '\r'], " ");
+    let class = ErrClass::classify(&msg);
+    Reply::Err(class, msg)
+}
+
+// ---------------------------------------------------------------------------
+// v2 text adapters (the historical line protocol, byte-for-byte)
+// ---------------------------------------------------------------------------
+
+fn parse_coords(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<usize>()
+                .with_context(|| format!("bad coords `{s}` (want comma-separated integers)"))
+        })
+        .collect()
+}
+
+fn parse_coord_block(s: &str) -> Result<Vec<Vec<usize>>> {
+    s.split(';').map(parse_coords).collect()
+}
+
+/// Parse one v2 request line into the typed core. Error messages are the
+/// exact strings the stringly-matched dispatcher used to emit.
+pub fn parse_v2_request(line: &str) -> Result<Request> {
+    let line = line.trim();
+    let (cmd, rest) = match line.split_once(' ') {
+        Some((c, r)) => (c, r.trim()),
+        None => (line, ""),
+    };
+    Ok(match cmd {
+        "methods" => Request::Methods,
+        "list" => Request::List,
+        "open" | "reload" => {
+            if rest.is_empty() {
+                bail!("usage: {cmd} <artifact>");
+            }
+            if cmd == "open" {
+                Request::Open {
+                    name: rest.to_string(),
+                }
+            } else {
+                Request::Reload {
+                    name: rest.to_string(),
+                }
+            }
+        }
+        "stat" => {
+            if rest.is_empty() {
+                bail!("usage: stat <artifact>");
+            }
+            Request::Stat {
+                name: rest.to_string(),
+            }
+        }
+        "get" => {
+            let (name, coords) = rest
+                .split_once(' ')
+                .context("usage: get <artifact> <i,j,k>")?;
+            Request::Get {
+                name: name.to_string(),
+                coords: parse_coords(coords.trim())?,
+            }
+        }
+        "batch-get" => {
+            let (name, block) = rest
+                .split_once(' ')
+                .context("usage: batch-get <artifact> <i,j,k;i,j,k;...>")?;
+            Request::BatchGet {
+                name: name.to_string(),
+                coords: parse_coord_block(block.trim())?,
+            }
+        }
+        other => bail!("unknown command `{other}`"),
+    })
+}
+
+/// Serialise a request as a v2 line (no trailing newline) — the client
+/// side of the text wire.
+pub fn write_v2_request(req: &Request, out: &mut String) {
+    match req {
+        Request::Methods => out.push_str("methods"),
+        Request::List => out.push_str("list"),
+        Request::Open { name } => {
+            let _ = write!(out, "open {name}");
+        }
+        Request::Stat { name } => {
+            let _ = write!(out, "stat {name}");
+        }
+        Request::Reload { name } => {
+            let _ = write!(out, "reload {name}");
+        }
+        Request::Get { name, coords } => {
+            let _ = write!(out, "get {name} ");
+            push_coords(out, coords);
+        }
+        Request::BatchGet { name, coords } => {
+            let _ = write!(out, "batch-get {name} ");
+            for (i, c) in coords.iter().enumerate() {
+                if i > 0 {
+                    out.push(';');
+                }
+                push_coords(out, c);
+            }
+        }
+    }
+}
+
+fn push_coords(out: &mut String, coords: &[usize]) {
+    for (i, c) in coords.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{c}");
+    }
+}
+
+/// Append the v2 `OK method=… shape=… bytes=… bulk=…` meta body plus the
+/// optional error-bound / generation / tile / health field groups — the
+/// exact field order the line protocol has always used.
+fn write_v2_meta(out: &mut String, meta: &MetaReply) {
+    let _ = write!(out, "OK method={} shape=", meta.method);
+    for (k, n) in meta.shape.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{n}");
+    }
+    let _ = write!(out, " bytes={} bulk={}", meta.bytes, meta.bulk);
+    if let Some(bound) = meta.max_error {
+        let _ = write!(
+            out,
+            " max_error={bound} model_bytes={} side_bytes={}",
+            meta.bytes.saturating_sub(meta.side_bytes),
+            meta.side_bytes
+        );
+    }
+    if let Some(g) = meta.generation {
+        let _ = write!(out, " generation={g}");
+    }
+    if let Some((hits, misses, bytes)) = meta.tiles {
+        let _ = write!(
+            out,
+            " tile_hits={hits} tile_misses={misses} tile_bytes={bytes}"
+        );
+    }
+    if let Some(h) = &meta.health {
+        let _ = write!(
+            out,
+            " health={} shed={} timeouts={} quarantined={}",
+            if h.ok { "ok" } else { "quarantined" },
+            h.shed,
+            h.timeouts,
+            h.quarantined
+        );
+    }
+}
+
+/// Serialise a reply as one v2 line (no trailing newline; the connection
+/// loop appends it). Success replies start `OK `, errors `ERR `.
+pub fn write_v2_reply(reply: &Reply, out: &mut String) {
+    match reply {
+        Reply::Names(names) => {
+            out.push_str("OK ");
+            for (i, n) in names.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(n);
+            }
+        }
+        Reply::Meta(meta) => write_v2_meta(out, meta),
+        Reply::Value(v) => {
+            let _ = write!(out, "OK {v}");
+        }
+        Reply::Values(vals) => {
+            out.push_str("OK ");
+            for (i, v) in vals.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "{v}");
+            }
+        }
+        Reply::Err(_, msg) => {
+            out.push_str("ERR ");
+            out.push_str(msg);
+        }
+    }
+}
+
+/// Parse a v2 meta reply body (`method=… shape=…` fields) into the typed
+/// form. Unknown fields are ignored (forward compatibility).
+pub fn parse_v2_meta(body: &str) -> Result<MetaReply> {
+    let mut method = None;
+    let mut shape = None;
+    let mut bytes = None;
+    let mut bulk = None;
+    let mut generation = None;
+    let mut max_error = None;
+    let mut side_bytes = 0usize;
+    let mut tiles: Option<(u64, u64, usize)> = None;
+    let mut health_str: Option<String> = None;
+    let mut shed = 0u64;
+    let mut timeouts = 0u64;
+    let mut quarantined = 0u64;
+    for field in body.split_whitespace() {
+        let (k, v) = field
+            .split_once('=')
+            .with_context(|| format!("malformed meta field `{field}`"))?;
+        match k {
+            "method" => method = Some(v.to_string()),
+            "shape" => {
+                shape = Some(
+                    v.split(',')
+                        .map(|p| p.parse::<usize>().context("bad shape"))
+                        .collect::<Result<Vec<_>>>()?,
+                )
+            }
+            "bytes" => bytes = Some(v.parse::<usize>().context("bad bytes")?),
+            "bulk" => bulk = Some(v == "true"),
+            "generation" => generation = Some(v.parse().context("bad generation")?),
+            "max_error" => max_error = Some(v.parse::<f64>().context("bad max_error")?),
+            "side_bytes" => side_bytes = v.parse().context("bad side_bytes")?,
+            "tile_hits" => {
+                let t = tiles.get_or_insert((0, 0, 0));
+                t.0 = v.parse().context("bad tile_hits")?;
+            }
+            "tile_misses" => {
+                let t = tiles.get_or_insert((0, 0, 0));
+                t.1 = v.parse().context("bad tile_misses")?;
+            }
+            "tile_bytes" => {
+                let t = tiles.get_or_insert((0, 0, 0));
+                t.2 = v.parse().context("bad tile_bytes")?;
+            }
+            "health" => health_str = Some(v.to_string()),
+            "shed" => shed = v.parse().context("bad shed")?,
+            "timeouts" => timeouts = v.parse().context("bad timeouts")?,
+            "quarantined" => quarantined = v.parse().context("bad quarantined")?,
+            _ => {} // forward-compatible: ignore unknown fields
+        }
+    }
+    Ok(MetaReply {
+        method: method.context("missing method")?,
+        shape: shape.context("missing shape")?,
+        bytes: bytes.context("missing bytes")?,
+        bulk: bulk.unwrap_or(true),
+        generation,
+        max_error,
+        side_bytes,
+        tiles,
+        health: health_str.map(|h| HealthReply {
+            ok: h == "ok",
+            shed,
+            timeouts,
+            quarantined,
+        }),
+    })
+}
+
+/// Parse one v2 reply line into the typed core. The v2 text wire is not
+/// self-describing, so the request that produced the line picks the
+/// expected shape. `ERR` lines become [`Reply::Err`] classified by the
+/// stable message prefix.
+pub fn parse_v2_reply(req: &Request, line: &str) -> Result<Reply> {
+    let line = line.trim_end();
+    if let Some(msg) = line.strip_prefix("ERR") {
+        let msg = msg.trim_start();
+        return Ok(Reply::Err(ErrClass::classify(msg), msg.to_string()));
+    }
+    let body = line
+        .strip_prefix("OK")
+        .with_context(|| format!("malformed reply `{line}`"))?
+        .trim_start();
+    Ok(match req {
+        Request::Methods | Request::List => Reply::Names(
+            body.split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string())
+                .collect(),
+        ),
+        Request::Open { .. } | Request::Stat { .. } | Request::Reload { .. } => {
+            Reply::Meta(parse_v2_meta(body)?)
+        }
+        Request::Get { .. } => Reply::Value(
+            body.parse()
+                .with_context(|| format!("bad value `{body}`"))?,
+        ),
+        Request::BatchGet { .. } => Reply::Values(
+            body.split(',')
+                .map(|v| v.parse().with_context(|| format!("bad value `{v}`")))
+                .collect::<Result<Vec<f32>>>()?,
+        ),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// v3 binary wire
+// ---------------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u16::MAX as usize);
+    put_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian reader over one frame body. Every parse
+/// failure is a hard error (the frame is complete by the time a body is
+/// parsed, so truncation inside it means a corrupt or hostile peer).
+struct Rd<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b, p: 0 }
+    }
+    fn need(&self, n: usize) -> Result<()> {
+        if self.b.len() - self.p < n {
+            bail!("truncated v3 frame body");
+        }
+        Ok(())
+    }
+    fn u8(&mut self) -> Result<u8> {
+        self.need(1)?;
+        let v = self.b[self.p];
+        self.p += 1;
+        Ok(v)
+    }
+    fn u16(&mut self) -> Result<u16> {
+        self.need(2)?;
+        let mut a = [0u8; 2];
+        a.copy_from_slice(&self.b[self.p..self.p + 2]);
+        self.p += 2;
+        Ok(u16::from_le_bytes(a))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        self.need(4)?;
+        let mut a = [0u8; 4];
+        a.copy_from_slice(&self.b[self.p..self.p + 4]);
+        self.p += 4;
+        Ok(u32::from_le_bytes(a))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        self.need(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(&self.b[self.p..self.p + 8]);
+        self.p += 8;
+        Ok(u64::from_le_bytes(a))
+    }
+    fn str(&mut self, max: usize) -> Result<String> {
+        let n = self.u16()? as usize;
+        if n > max {
+            bail!("v3 string length {n} over limit {max}");
+        }
+        self.need(n)?;
+        let s = std::str::from_utf8(&self.b[self.p..self.p + n])
+            .context("v3 string is not UTF-8")?
+            .to_string();
+        self.p += n;
+        Ok(s)
+    }
+    fn coord(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).context("coordinate overflows usize")
+    }
+    fn done(&self) -> Result<()> {
+        if self.p != self.b.len() {
+            bail!("v3 frame has {} trailing bytes", self.b.len() - self.p);
+        }
+        Ok(())
+    }
+}
+
+/// Reserve the 4-byte length prefix, write `id|tag`, return the position
+/// patched by [`finish_frame`].
+fn start_frame(out: &mut Vec<u8>, id: u64, tag: u8) -> usize {
+    let at = out.len();
+    put_u32(out, 0);
+    put_u64(out, id);
+    out.push(tag);
+    at
+}
+
+fn finish_frame(out: &mut Vec<u8>, at: usize) {
+    let len = (out.len() - at - 4) as u32;
+    out[at..at + 4].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Append one encoded v3 request frame to `out`.
+pub fn encode_v3_request(id: u64, req: &Request, out: &mut Vec<u8>) {
+    let (tag, name) = match req {
+        Request::Methods => (T_METHODS, None),
+        Request::List => (T_LIST, None),
+        Request::Open { name } => (T_OPEN, Some(name)),
+        Request::Stat { name } => (T_STAT, Some(name)),
+        Request::Reload { name } => (T_RELOAD, Some(name)),
+        Request::Get { name, .. } => (T_GET, Some(name)),
+        Request::BatchGet { name, .. } => (T_BATCH_GET, Some(name)),
+    };
+    let at = start_frame(out, id, tag);
+    if let Some(name) = name {
+        put_str(out, name);
+    }
+    match req {
+        Request::Get { coords, .. } => {
+            put_u16(out, coords.len() as u16);
+            for &c in coords {
+                put_u64(out, c as u64);
+            }
+        }
+        Request::BatchGet { coords, .. } => {
+            put_u32(out, coords.len() as u32);
+            let ndims = coords.first().map_or(0, |c| c.len());
+            put_u16(out, ndims as u16);
+            for c in coords {
+                debug_assert_eq!(c.len(), ndims);
+                for &x in c {
+                    put_u64(out, x as u64);
+                }
+            }
+        }
+        _ => {}
+    }
+    finish_frame(out, at);
+}
+
+/// Append the server HELLO frame (sent once, right after the preamble).
+pub fn encode_v3_hello(out: &mut Vec<u8>) {
+    let at = start_frame(out, 0, R_HELLO);
+    out.push(V3_VERSION);
+    finish_frame(out, at);
+}
+
+/// Try to peel one complete frame off the front of `buf`. Returns
+/// `Ok(None)` when more bytes are needed, `Ok(Some((consumed, id, tag,
+/// body_range)))` for a complete frame, and `Err` when the stream is
+/// unrecoverable (oversized or malformed length).
+fn try_frame(buf: &[u8]) -> Result<Option<(usize, u64, u8, std::ops::Range<usize>)>> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let mut a = [0u8; 4];
+    a.copy_from_slice(&buf[..4]);
+    let len = u32::from_le_bytes(a) as usize;
+    if len > MAX_V3_FRAME {
+        bail!("v3 frame of {len} bytes exceeds the {MAX_V3_FRAME}-byte limit");
+    }
+    if len < 9 {
+        bail!("v3 frame of {len} bytes is shorter than its id+tag header");
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[4..12]);
+    let id = u64::from_le_bytes(b);
+    let tag = buf[12];
+    Ok(Some((4 + len, id, tag, 13..4 + len)))
+}
+
+/// Incrementally decode one v3 request frame from the front of `buf`.
+/// `Ok(None)` = need more bytes; `Ok(Some((consumed, id, request)))` =
+/// one complete frame parsed (caller drains `consumed` bytes); `Err` =
+/// the stream is unrecoverable and the connection must close.
+pub fn try_decode_v3_request(buf: &[u8]) -> Result<Option<(usize, u64, Request)>> {
+    let (consumed, id, tag, body) = match try_frame(buf)? {
+        Some(f) => f,
+        None => return Ok(None),
+    };
+    let mut rd = Rd::new(&buf[body]);
+    let req = match tag {
+        T_METHODS => Request::Methods,
+        T_LIST => Request::List,
+        T_OPEN => Request::Open {
+            name: rd.str(MAX_NAME_LEN)?,
+        },
+        T_STAT => Request::Stat {
+            name: rd.str(MAX_NAME_LEN)?,
+        },
+        T_RELOAD => Request::Reload {
+            name: rd.str(MAX_NAME_LEN)?,
+        },
+        T_GET => {
+            let name = rd.str(MAX_NAME_LEN)?;
+            let ndims = rd.u16()? as usize;
+            rd.need(ndims.checked_mul(8).context("get ndims overflow")?)?;
+            let mut coords = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                coords.push(rd.coord()?);
+            }
+            Request::Get { name, coords }
+        }
+        T_BATCH_GET => {
+            let name = rd.str(MAX_NAME_LEN)?;
+            let count = rd.u32()? as usize;
+            let ndims = rd.u16()? as usize;
+            // validate the announced sizes against the actual body length
+            // BEFORE allocating anything proportional to them
+            let need = count
+                .checked_mul(ndims)
+                .and_then(|n| n.checked_mul(8))
+                .context("batch-get size overflow")?;
+            rd.need(need)?;
+            let mut coords = Vec::with_capacity(count);
+            for _ in 0..count {
+                let mut c = Vec::with_capacity(ndims);
+                for _ in 0..ndims {
+                    c.push(rd.coord()?);
+                }
+                coords.push(c);
+            }
+            Request::BatchGet { name, coords }
+        }
+        other => bail!("unknown v3 request tag {other}"),
+    };
+    rd.done()?;
+    Ok(Some((consumed, id, req)))
+}
+
+/// Append one encoded v3 reply frame to `out`.
+pub fn encode_v3_reply(id: u64, reply: &Reply, out: &mut Vec<u8>) {
+    match reply {
+        Reply::Names(names) => {
+            let at = start_frame(out, id, R_NAMES);
+            put_u32(out, names.len() as u32);
+            for n in names {
+                put_str(out, n);
+            }
+            finish_frame(out, at);
+        }
+        Reply::Meta(m) => {
+            let at = start_frame(out, id, R_META);
+            put_str(out, &m.method);
+            out.push(m.shape.len() as u8);
+            for &n in &m.shape {
+                put_u64(out, n as u64);
+            }
+            put_u64(out, m.bytes as u64);
+            out.push(m.bulk as u8);
+            match m.generation {
+                Some(g) => {
+                    out.push(1);
+                    put_u64(out, g);
+                }
+                None => out.push(0),
+            }
+            match m.max_error {
+                Some(e) => {
+                    out.push(1);
+                    put_u64(out, e.to_bits());
+                    put_u64(out, m.side_bytes as u64);
+                }
+                None => out.push(0),
+            }
+            match m.tiles {
+                Some((h, mi, b)) => {
+                    out.push(1);
+                    put_u64(out, h);
+                    put_u64(out, mi);
+                    put_u64(out, b as u64);
+                }
+                None => out.push(0),
+            }
+            match &m.health {
+                Some(h) => {
+                    out.push(1);
+                    out.push(h.ok as u8);
+                    put_u64(out, h.shed);
+                    put_u64(out, h.timeouts);
+                    put_u64(out, h.quarantined);
+                }
+                None => out.push(0),
+            }
+            finish_frame(out, at);
+        }
+        Reply::Value(v) => {
+            let at = start_frame(out, id, R_VALUE);
+            put_u32(out, v.to_bits());
+            finish_frame(out, at);
+        }
+        Reply::Values(vals) => {
+            let at = start_frame(out, id, R_VALUES);
+            put_u32(out, vals.len() as u32);
+            for v in vals {
+                put_u32(out, v.to_bits());
+            }
+            finish_frame(out, at);
+        }
+        Reply::Err(class, msg) => {
+            let at = start_frame(out, id, R_ERR);
+            out.push(class.code());
+            let bytes = msg.as_bytes();
+            let n = bytes.len().min(MAX_V3_FRAME / 2);
+            put_u32(out, n as u32);
+            out.extend_from_slice(&bytes[..n]);
+            finish_frame(out, at);
+        }
+    }
+}
+
+/// Incrementally decode one v3 reply frame (client side). Same contract
+/// as [`try_decode_v3_request`]. A HELLO frame decodes as
+/// `Ok(Some((consumed, 0, None, version)))` — callers see it only during
+/// connection setup.
+pub fn try_decode_v3_reply(buf: &[u8]) -> Result<Option<(usize, u64, V3Reply)>> {
+    let (consumed, id, tag, body) = match try_frame(buf)? {
+        Some(f) => f,
+        None => return Ok(None),
+    };
+    let mut rd = Rd::new(&buf[body]);
+    let reply = match tag {
+        R_HELLO => {
+            let version = rd.u8()?;
+            rd.done()?;
+            return Ok(Some((consumed, id, V3Reply::Hello { version })));
+        }
+        R_NAMES => {
+            let count = rd.u32()? as usize;
+            // each name costs at least its 2-byte length prefix
+            rd.need(count.checked_mul(2).context("names count overflow")?)?;
+            let mut names = Vec::with_capacity(count);
+            for _ in 0..count {
+                names.push(rd.str(MAX_NAME_LEN)?);
+            }
+            Reply::Names(names)
+        }
+        R_META => {
+            let method = rd.str(MAX_NAME_LEN)?;
+            let ndims = rd.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                shape.push(rd.coord()?);
+            }
+            let bytes = rd.coord()?;
+            let bulk = rd.u8()? != 0;
+            let generation = if rd.u8()? != 0 {
+                Some(rd.u64()?)
+            } else {
+                None
+            };
+            let (max_error, side_bytes) = if rd.u8()? != 0 {
+                (Some(f64::from_bits(rd.u64()?)), rd.coord()?)
+            } else {
+                (None, 0)
+            };
+            let tiles = if rd.u8()? != 0 {
+                Some((rd.u64()?, rd.u64()?, rd.coord()?))
+            } else {
+                None
+            };
+            let health = if rd.u8()? != 0 {
+                Some(HealthReply {
+                    ok: rd.u8()? != 0,
+                    shed: rd.u64()?,
+                    timeouts: rd.u64()?,
+                    quarantined: rd.u64()?,
+                })
+            } else {
+                None
+            };
+            Reply::Meta(MetaReply {
+                method,
+                shape,
+                bytes,
+                bulk,
+                generation,
+                max_error,
+                side_bytes,
+                tiles,
+                health,
+            })
+        }
+        R_VALUE => Reply::Value(f32::from_bits(rd.u32()?)),
+        R_VALUES => {
+            let count = rd.u32()? as usize;
+            rd.need(count.checked_mul(4).context("values count overflow")?)?;
+            let mut vals = Vec::with_capacity(count);
+            for _ in 0..count {
+                vals.push(f32::from_bits(rd.u32()?));
+            }
+            Reply::Values(vals)
+        }
+        R_ERR => {
+            let class = ErrClass::from_code(rd.u8()?)?;
+            let n = rd.u32()? as usize;
+            rd.need(n)?;
+            let msg = String::from_utf8_lossy(&rd.b[rd.p..rd.p + n]).into_owned();
+            rd.p += n;
+            Reply::Err(class, msg)
+        }
+        other => bail!("unknown v3 reply tag {other}"),
+    };
+    rd.done()?;
+    Ok(Some((consumed, id, V3Reply::Reply(reply))))
+}
+
+/// A decoded v3 server frame: the one-shot connection HELLO, or a normal
+/// reply.
+#[derive(Debug, Clone, PartialEq)]
+pub enum V3Reply {
+    Hello { version: u8 },
+    Reply(Reply),
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: Request) {
+        let mut buf = Vec::new();
+        encode_v3_request(7, &req, &mut buf);
+        let (consumed, id, got) = try_decode_v3_request(&buf).unwrap().unwrap();
+        assert_eq!(consumed, buf.len());
+        assert_eq!(id, 7);
+        assert_eq!(got, req);
+    }
+
+    fn roundtrip_reply(reply: Reply) {
+        let mut buf = Vec::new();
+        encode_v3_reply(9, &reply, &mut buf);
+        let (consumed, id, got) = try_decode_v3_reply(&buf).unwrap().unwrap();
+        assert_eq!(consumed, buf.len());
+        assert_eq!(id, 9);
+        assert_eq!(got, V3Reply::Reply(reply));
+    }
+
+    #[test]
+    fn v3_request_roundtrips_every_verb() {
+        roundtrip_req(Request::Methods);
+        roundtrip_req(Request::List);
+        roundtrip_req(Request::Open { name: "a.b-c_1".into() });
+        roundtrip_req(Request::Stat { name: "x".into() });
+        roundtrip_req(Request::Reload { name: "x".into() });
+        roundtrip_req(Request::Get {
+            name: "tt".into(),
+            coords: vec![0, 5, 1023, usize::from(u16::MAX)],
+        });
+        roundtrip_req(Request::BatchGet {
+            name: "tt".into(),
+            coords: vec![vec![1, 2, 3], vec![4, 5, 6], vec![0, 0, 0]],
+        });
+        roundtrip_req(Request::BatchGet {
+            name: "empty".into(),
+            coords: vec![],
+        });
+    }
+
+    #[test]
+    fn v3_reply_roundtrips_every_shape() {
+        roundtrip_reply(Reply::Names(vec!["ttd".into(), "cpd".into()]));
+        roundtrip_reply(Reply::Names(vec![]));
+        roundtrip_reply(Reply::Value(-0.0));
+        roundtrip_reply(Reply::Value(f32::NAN)); // NaN bits must survive
+        roundtrip_reply(Reply::Values(vec![1.5, -2.25, f32::MIN_POSITIVE]));
+        roundtrip_reply(Reply::Err(ErrClass::Overloaded, "overloaded: 9".into()));
+        roundtrip_reply(Reply::Err(ErrClass::Deadline, "deadline: 1ms".into()));
+        roundtrip_reply(Reply::Err(ErrClass::Server, "unknown artifact".into()));
+        roundtrip_reply(Reply::Meta(MetaReply {
+            method: "ttd".into(),
+            shape: vec![8, 6, 5],
+            bytes: 1234,
+            bulk: true,
+            generation: Some(3),
+            max_error: Some(0.01),
+            side_bytes: 99,
+            tiles: Some((10, 2, 4096)),
+            health: Some(HealthReply {
+                ok: false,
+                shed: 1,
+                timeouts: 2,
+                quarantined: 3,
+            }),
+        }));
+        roundtrip_reply(Reply::Meta(MetaReply {
+            method: "sz".into(),
+            shape: vec![2],
+            bytes: 10,
+            bulk: false,
+            generation: None,
+            max_error: None,
+            side_bytes: 0,
+            tiles: None,
+            health: None,
+        }));
+    }
+
+    #[test]
+    fn nan_value_bits_survive_v3() {
+        let weird = f32::from_bits(0x7fc0_1234);
+        let mut buf = Vec::new();
+        encode_v3_reply(1, &Reply::Value(weird), &mut buf);
+        match try_decode_v3_reply(&buf).unwrap().unwrap().2 {
+            V3Reply::Reply(Reply::Value(v)) => assert_eq!(v.to_bits(), weird.to_bits()),
+            other => panic!("wrong reply {other:?}"),
+        }
+    }
+
+    #[test]
+    fn partial_frames_ask_for_more_bytes_never_panic() {
+        let mut buf = Vec::new();
+        encode_v3_request(
+            3,
+            &Request::BatchGet {
+                name: "tt".into(),
+                coords: vec![vec![9, 8, 7]; 5],
+            },
+            &mut buf,
+        );
+        for cut in 0..buf.len() {
+            // every strict prefix is "need more", never an error
+            assert!(
+                try_decode_v3_request(&buf[..cut]).unwrap().is_none(),
+                "prefix of {cut} bytes should be incomplete"
+            );
+        }
+        assert!(try_decode_v3_request(&buf).unwrap().is_some());
+    }
+
+    #[test]
+    fn pipelined_frames_decode_in_order_from_one_buffer() {
+        let mut buf = Vec::new();
+        let reqs = vec![
+            Request::Methods,
+            Request::Get {
+                name: "a".into(),
+                coords: vec![1, 2],
+            },
+            Request::List,
+        ];
+        for (i, r) in reqs.iter().enumerate() {
+            encode_v3_request(i as u64, r, &mut buf);
+        }
+        let mut at = 0usize;
+        for (i, want) in reqs.iter().enumerate() {
+            let (consumed, id, got) = try_decode_v3_request(&buf[at..]).unwrap().unwrap();
+            assert_eq!(id, i as u64);
+            assert_eq!(&got, want);
+            at += consumed;
+        }
+        assert_eq!(at, buf.len());
+    }
+
+    #[test]
+    fn hostile_frames_error_cleanly() {
+        // oversized announced length
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_V3_FRAME as u32 + 1).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        assert!(try_decode_v3_request(&buf).is_err());
+        // length shorter than the id+tag header
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        assert!(try_decode_v3_request(&buf).is_err());
+        // unknown tag
+        let mut buf = Vec::new();
+        let at = start_frame(&mut buf, 1, 0xEE);
+        finish_frame(&mut buf, at);
+        assert!(try_decode_v3_request(&buf).is_err());
+        // batch-get whose announced count overruns the actual body
+        let mut buf = Vec::new();
+        let at = start_frame(&mut buf, 1, T_BATCH_GET);
+        put_str(&mut buf, "x");
+        put_u32(&mut buf, 1_000_000); // count
+        put_u16(&mut buf, 3); // ndims, but no coord bytes follow
+        finish_frame(&mut buf, at);
+        assert!(try_decode_v3_request(&buf).is_err());
+        // trailing garbage after a valid body
+        let mut buf = Vec::new();
+        let at = start_frame(&mut buf, 1, T_LIST);
+        buf.push(0xAB);
+        finish_frame(&mut buf, at);
+        assert!(try_decode_v3_request(&buf).is_err());
+        // truncation sweep over a corrupted-length value frame: flipping
+        // random body bytes must never panic (errors are fine)
+        let mut buf = Vec::new();
+        encode_v3_reply(2, &Reply::Values(vec![1.0; 16]), &mut buf);
+        for i in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[i] ^= 0x41;
+            let _ = try_decode_v3_reply(&bad); // must not panic
+        }
+    }
+
+    #[test]
+    fn v2_request_parse_format_roundtrip() {
+        let cases = vec![
+            ("methods", Request::Methods),
+            ("list", Request::List),
+            ("open abc", Request::Open { name: "abc".into() }),
+            ("stat abc", Request::Stat { name: "abc".into() }),
+            ("reload abc", Request::Reload { name: "abc".into() }),
+            (
+                "get tt 1,2,3",
+                Request::Get {
+                    name: "tt".into(),
+                    coords: vec![1, 2, 3],
+                },
+            ),
+            (
+                "batch-get tt 1,2;3,4",
+                Request::BatchGet {
+                    name: "tt".into(),
+                    coords: vec![vec![1, 2], vec![3, 4]],
+                },
+            ),
+        ];
+        for (line, want) in cases {
+            assert_eq!(parse_v2_request(line).unwrap(), want, "{line}");
+            let mut out = String::new();
+            write_v2_request(&want, &mut out);
+            assert_eq!(out, line, "format of {want:?}");
+        }
+        assert!(parse_v2_request("open").is_err());
+        assert!(parse_v2_request("stat ").is_err());
+        assert!(parse_v2_request("get tt").is_err());
+        assert!(parse_v2_request("get tt x,y").is_err());
+        assert!(parse_v2_request("frobnicate").is_err());
+    }
+
+    #[test]
+    fn v2_reply_format_matches_legacy_lines() {
+        let mut out = String::new();
+        write_v2_reply(&Reply::Value(1.5), &mut out);
+        assert_eq!(out, "OK 1.5");
+        out.clear();
+        write_v2_reply(&Reply::Values(vec![1.0, -2.5]), &mut out);
+        assert_eq!(out, "OK 1,-2.5");
+        out.clear();
+        write_v2_reply(&Reply::Names(vec!["a".into(), "b".into()]), &mut out);
+        assert_eq!(out, "OK a,b");
+        out.clear();
+        write_v2_reply(&Reply::Err(ErrClass::Server, "no such artifact".into()), &mut out);
+        assert_eq!(out, "ERR no such artifact");
+        out.clear();
+        let meta = MetaReply {
+            method: "ttd".into(),
+            shape: vec![8, 6, 5],
+            bytes: 100,
+            bulk: true,
+            generation: Some(2),
+            max_error: None,
+            side_bytes: 0,
+            tiles: None,
+            health: None,
+        };
+        write_v2_reply(&Reply::Meta(meta.clone()), &mut out);
+        assert_eq!(out, "OK method=ttd shape=8,6,5 bytes=100 bulk=true generation=2");
+        // and the parse direction recovers the typed form
+        let back = parse_v2_reply(
+            &Request::Open { name: "x".into() },
+            &out,
+        )
+        .unwrap();
+        assert_eq!(back, Reply::Meta(meta));
+    }
+
+    #[test]
+    fn err_class_classifies_by_stable_prefix() {
+        assert_eq!(ErrClass::classify("overloaded: 9 in flight"), ErrClass::Overloaded);
+        assert_eq!(ErrClass::classify("deadline: batch timed out"), ErrClass::Deadline);
+        assert_eq!(ErrClass::classify("draining: shutting down"), ErrClass::Server);
+        assert_eq!(ErrClass::classify("no such artifact"), ErrClass::Server);
+    }
+}

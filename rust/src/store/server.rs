@@ -1,4 +1,5 @@
-//! Multi-artifact decode server + the protocol v2 TCP front-end.
+//! Multi-artifact decode server + the thread-per-connection TCP
+//! front-end.
 //!
 //! [`ArtifactServer`] routes requests by artifact name: each artifact gets
 //! a lazily-started [`Shard`] (per-artifact batch queue, or the XLA path
@@ -6,6 +7,15 @@
 //! decides what stays resident — when the store evicts an artifact, its
 //! shard is dropped too (in-flight requests still complete; the shard
 //! worker holds the entry alive until it drains).
+//!
+//! All verb logic lives in [`ArtifactServer::dispatch`], which maps a
+//! typed [`protocol::Request`] to a typed [`protocol::Reply`]. Wire
+//! formats are adapters over that core: the v2 text lines below and the
+//! binary protocol v3 frames (see [`super::protocol`]) both serve from
+//! the same dispatch, on the same port — a connection opting into v3
+//! announces itself with the [`protocol::V3_MAGIC`] preamble, anything
+//! else stays in v2 line mode. The event-loop front-end
+//! ([`super::eventloop`]) reuses the same dispatch and codecs.
 //!
 //! ## Wire protocol v2
 //!
@@ -42,8 +52,10 @@
 //! `get`/`batch-get` on a cached shard never stat the filesystem: the
 //! reload notification path is an explicit `open`/`reload` frame.
 
+use super::eventloop::EventLoopConfig;
 use super::faults::FaultPlane;
 use super::lock_unpoisoned;
+use super::protocol::{self, HealthReply, MetaReply, Reply, Request};
 use super::shard::Shard;
 use super::tilecache::TileCache;
 use super::{ArtifactStore, Health};
@@ -77,6 +89,12 @@ pub struct ServeLimits {
     /// Reap a connection after this much time without a complete frame.
     /// `None` = never reap.
     pub idle_timeout: Option<Duration>,
+    /// Cap on *simultaneously open* connections (the event-loop
+    /// front-end; the thread-per-connection front-end bounds concurrency
+    /// with `max_conns` total accepts instead). A connection over the cap
+    /// is refused with one `ERR overloaded` line and closed. `0` =
+    /// unbounded.
+    pub max_open_conns: usize,
 }
 
 impl Default for ServeLimits {
@@ -86,6 +104,7 @@ impl Default for ServeLimits {
             max_inflight: 0,
             io_timeout: None,
             idle_timeout: None,
+            max_open_conns: 0,
         }
     }
 }
@@ -110,6 +129,9 @@ pub struct StoreServeConfig {
     /// Optional deterministic fault-injection plane (tests/CI chaos jobs;
     /// the CLI arms it from `TCZ_FAULT`). `None` in production.
     pub faults: Option<Arc<FaultPlane>>,
+    /// Event-loop front-end knobs (outbound buffer cap, pipeline depth,
+    /// executor threads); ignored by the thread-per-connection front-end.
+    pub eventloop: EventLoopConfig,
 }
 
 impl Default for StoreServeConfig {
@@ -122,6 +144,7 @@ impl Default for StoreServeConfig {
             max_conns: 64,
             limits: ServeLimits::default(),
             faults: None,
+            eventloop: EventLoopConfig::default(),
         }
     }
 }
@@ -452,153 +475,71 @@ impl ArtifactServer {
     pub fn shutdown(self) {
         self.drain();
     }
-}
 
-fn parse_coords(s: &str) -> Result<Vec<usize>> {
-    s.split(',')
-        .map(|p| {
-            p.trim()
-                .parse::<usize>()
-                .with_context(|| format!("bad coords `{s}` (want comma-separated integers)"))
-        })
-        .collect()
-}
-
-fn parse_coord_block(s: &str) -> Result<Vec<Vec<usize>>> {
-    s.split(';').map(parse_coords).collect()
-}
-
-/// Append `OK method=… shape=… bytes=… bulk=…` to the reply buffer.
-/// Error-bounded artifacts additionally report `max_error=… model_bytes=…
-/// side_bytes=…` so clients can see the model vs side-channel split
-/// without the artifact ever being loaded.
-fn write_meta_reply(out: &mut String, meta: &ArtifactMeta, bulk: bool) {
-    use std::fmt::Write;
-    let _ = write!(out, "OK method={} shape=", meta.method);
-    for (k, n) in meta.shape.iter().enumerate() {
-        if k > 0 {
-            out.push(',');
+    /// Execute one typed request — the single verb-logic entry point both
+    /// wire formats serve from. Never fails: every error becomes a
+    /// [`Reply::Err`] with the flattened one-line message the v2 wire has
+    /// always carried, classified for the v3 wire.
+    pub fn dispatch(&self, req: &Request) -> Reply {
+        match self.dispatch_inner(req) {
+            Ok(reply) => reply,
+            Err(e) => protocol::error_reply(&e),
         }
-        let _ = write!(out, "{n}");
     }
-    let _ = write!(out, " bytes={} bulk={}", meta.size_bytes, bulk);
-    if let Some(bound) = meta.max_error {
-        let _ = write!(
-            out,
-            " max_error={bound} model_bytes={} side_bytes={}",
-            meta.size_bytes.saturating_sub(meta.side_bytes),
-            meta.side_bytes
-        );
-    }
-}
 
-/// Dispatch one protocol v2 frame, serialising the success reply into
-/// `out` (the caller's reusable per-connection buffer — no intermediate
-/// strings or joined vectors are allocated per reply).
-fn dispatch_frame(server: &ArtifactServer, line: &str, out: &mut String) -> Result<()> {
-    use std::fmt::Write;
-    let line = line.trim();
-    let (cmd, rest) = match line.split_once(' ') {
-        Some((c, r)) => (c, r.trim()),
-        None => (line, ""),
-    };
-    match cmd {
-        "methods" => {
-            out.push_str("OK ");
-            for (i, c) in codec::registry().iter().enumerate() {
-                if i > 0 {
-                    out.push(',');
-                }
-                out.push_str(c.name());
-            }
-        }
-        "list" => {
-            let names = server.list()?;
-            out.push_str("OK ");
-            for (i, n) in names.iter().enumerate() {
-                if i > 0 {
-                    out.push(',');
-                }
-                out.push_str(n);
-            }
-        }
-        "open" | "reload" => {
+    fn dispatch_inner(&self, req: &Request) -> Result<Reply> {
+        Ok(match req {
+            Request::Methods => Reply::Names(
+                codec::registry()
+                    .iter()
+                    .map(|c| c.name().to_string())
+                    .collect(),
+            ),
+            Request::List => Reply::Names(self.list()?),
             // both verbs revalidate against the file on disk; `reload` is
             // the explicit notification form for writers that just
             // appended
-            if rest.is_empty() {
-                bail!("usage: {cmd} <artifact>");
+            Request::Open { name } | Request::Reload { name } => {
+                let (meta, bulk, generation) = self.reload(name)?;
+                let mut m = MetaReply::from_meta(&meta, bulk);
+                m.generation = Some(generation);
+                Reply::Meta(m)
             }
-            let (meta, bulk, generation) = server.reload(rest)?;
-            write_meta_reply(out, &meta, bulk);
-            let _ = write!(out, " generation={generation}");
-        }
-        "stat" => {
-            if rest.is_empty() {
-                bail!("usage: stat <artifact>");
+            Request::Stat { name } => {
+                let (meta, bulk) = self.stat(name)?;
+                let mut m = MetaReply::from_meta(&meta, bulk);
+                // server-wide tile-cache counters (omitted when disabled;
+                // clients parse unknown fields forward-compatibly)
+                m.tiles = self.tile_stats();
+                // health + robustness counters: per-artifact quarantine
+                // state, server-wide shed/deadline/quarantine totals
+                m.health = Some(HealthReply {
+                    ok: matches!(self.store().health(name), Health::Ok),
+                    shed: self.shed_count(),
+                    timeouts: self.deadline_timeout_count(),
+                    quarantined: self.store().quarantined_count() as u64,
+                });
+                Reply::Meta(m)
             }
-            let (meta, bulk) = server.stat(rest)?;
-            write_meta_reply(out, &meta, bulk);
-            // server-wide tile-cache counters (omitted when disabled;
-            // clients parse unknown fields forward-compatibly)
-            if let Some((hits, misses, bytes)) = server.tile_stats() {
-                let _ = write!(
-                    out,
-                    " tile_hits={hits} tile_misses={misses} tile_bytes={bytes}"
-                );
-            }
-            // health + robustness counters: per-artifact quarantine state,
-            // server-wide shed/deadline/quarantine totals
-            let health = match server.store().health(rest) {
-                Health::Ok => "ok",
-                Health::Quarantined => "quarantined",
-            };
-            let _ = write!(
-                out,
-                " health={health} shed={} timeouts={} quarantined={}",
-                server.shed_count(),
-                server.deadline_timeout_count(),
-                server.store().quarantined_count()
-            );
-        }
-        "get" => {
-            let (name, coords) = rest
-                .split_once(' ')
-                .context("usage: get <artifact> <i,j,k>")?;
-            let v = server.get(name, &parse_coords(coords.trim())?)?;
-            let _ = write!(out, "OK {v}");
-        }
-        "batch-get" => {
-            let (name, block) = rest
-                .split_once(' ')
-                .context("usage: batch-get <artifact> <i,j,k;i,j,k;...>")?;
-            let vals = server.batch_get(name, &parse_coord_block(block.trim())?)?;
-            out.push_str("OK ");
-            for (i, v) in vals.iter().enumerate() {
-                if i > 0 {
-                    out.push(',');
-                }
-                let _ = write!(out, "{v}");
-            }
-        }
-        other => bail!("unknown command `{other}`"),
+            Request::Get { name, coords } => Reply::Value(self.get(name, coords)?),
+            Request::BatchGet { name, coords } => Reply::Values(self.batch_get(name, coords)?),
+        })
     }
-    Ok(())
 }
 
 /// Handle one protocol v2 frame into the connection's reusable reply
 /// buffer: always a single `OK …` / `ERR …` line ending in `\n` (a
-/// failed frame becomes `ERR <msg>`, never a dropped connection). The
-/// buffer is cleared first, so its capacity amortises across frames.
-fn handle_frame(server: &ArtifactServer, line: &str, reply: &mut String) {
+/// failed frame becomes `ERR <msg>`, never a dropped connection). Pure
+/// adapter: parse the line into a typed [`Request`], dispatch, format
+/// the typed [`Reply`] back as v2 text. The buffer is cleared first, so
+/// its capacity amortises across frames.
+pub(crate) fn handle_frame(server: &ArtifactServer, line: &str, reply: &mut String) {
     reply.clear();
-    if let Err(e) = dispatch_frame(server, line, reply) {
-        // a partial success reply may be in the buffer — discard it
-        reply.clear();
-        reply.push_str("ERR ");
-        let msg = format!("{e:#}").replace(['\n', '\r'], " ");
-        reply.push_str(&msg);
-    }
+    let typed = match protocol::parse_v2_request(line) {
+        Ok(req) => server.dispatch(&req),
+        Err(e) => protocol::error_reply(&e),
+    };
+    protocol::write_v2_reply(&typed, reply);
     reply.push('\n');
 }
 
@@ -616,13 +557,24 @@ fn is_poll_timeout(e: &std::io::Error) -> bool {
 /// terminator is a protocol violation (or garbage on the port); the
 /// connection gets one `ERR` and is closed instead of buffering
 /// unboundedly.
-const MAX_FRAME_BYTES: usize = 16 << 20;
+pub(crate) const MAX_FRAME_BYTES: usize = 16 << 20;
 
-/// Serve one connection: hand-rolled line framing over a chunked reader,
-/// so socket timeouts are observable mid-frame (a `BufReader::read_line`
-/// would conflate "timed out" with "stream ended"). Timeout polls check
-/// the drain flag and the idle reaper; everything else is the same
-/// frame-in/reply-out loop as before.
+/// Per-connection wire mode, decided by sniffing the first byte: the v3
+/// preamble magic can never start a v2 text line, so one port serves
+/// both.
+enum Wire {
+    /// No bytes seen yet.
+    Sniff,
+    V2,
+    V3,
+}
+
+/// Serve one connection: hand-rolled framing over a chunked reader, so
+/// socket timeouts are observable mid-frame (a `BufReader::read_line`
+/// would conflate "timed out" with "stream ended"). The first byte picks
+/// the wire — v2 text lines or v3 binary frames — and both decode into
+/// the same typed dispatch. Timeout polls check the drain flag and the
+/// idle reaper.
 fn serve_conn<R: std::io::Read, W: std::io::Write>(
     server: &ArtifactServer,
     mut reader: R,
@@ -632,19 +584,79 @@ fn serve_conn<R: std::io::Read, W: std::io::Write>(
     let mut buf: Vec<u8> = Vec::new();
     let mut chunk = [0u8; 4096];
     let mut reply = String::new();
+    let mut frame_out: Vec<u8> = Vec::new();
+    let mut wire = Wire::Sniff;
     let mut last_frame = std::time::Instant::now();
     'conn: loop {
         // drain any complete frames already buffered
-        while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
-            let frame: Vec<u8> = buf.drain(..=pos).collect();
-            let line = String::from_utf8_lossy(&frame[..pos]).into_owned();
-            last_frame = std::time::Instant::now();
-            handle_frame(server, &line, &mut reply);
-            if writer.write_all(reply.as_bytes()).is_err() {
-                break 'conn;
+        'drain: loop {
+            if let Wire::Sniff = wire {
+                match buf.first() {
+                    None => break 'drain,
+                    Some(&b) if b == protocol::V3_MAGIC[0] => {
+                        if buf.len() < protocol::V3_MAGIC.len() + 1 {
+                            break 'drain; // preamble still arriving
+                        }
+                        if buf[..protocol::V3_MAGIC.len()] != protocol::V3_MAGIC {
+                            break 'conn; // bad magic: not ours, hang up
+                        }
+                        // preamble = magic + client version byte; any
+                        // client version is accepted, the HELLO tells it
+                        // what the server speaks
+                        buf.drain(..protocol::V3_MAGIC.len() + 1);
+                        frame_out.clear();
+                        protocol::encode_v3_hello(&mut frame_out);
+                        if writer.write_all(&frame_out).is_err() {
+                            break 'conn;
+                        }
+                        wire = Wire::V3;
+                    }
+                    Some(_) => wire = Wire::V2,
+                }
+            }
+            match wire {
+                Wire::Sniff => break 'drain,
+                Wire::V2 => {
+                    let Some(pos) = buf.iter().position(|&b| b == b'\n') else {
+                        break 'drain;
+                    };
+                    if pos > MAX_FRAME_BYTES {
+                        // the terminator arrived, but only after the line
+                        // blew the cap — same protocol violation as an
+                        // unterminated flood, and framing inside the
+                        // garbage is not trustworthy: reply once, close
+                        let _ = writer.write_all(b"ERR frame too large\n");
+                        break 'conn;
+                    }
+                    let frame: Vec<u8> = buf.drain(..=pos).collect();
+                    let line = String::from_utf8_lossy(&frame[..pos]).into_owned();
+                    last_frame = std::time::Instant::now();
+                    handle_frame(server, &line, &mut reply);
+                    if writer.write_all(reply.as_bytes()).is_err() {
+                        break 'conn;
+                    }
+                }
+                Wire::V3 => match protocol::try_decode_v3_request(&buf) {
+                    Ok(None) => break 'drain,
+                    Ok(Some((consumed, id, req))) => {
+                        buf.drain(..consumed);
+                        last_frame = std::time::Instant::now();
+                        let typed = server.dispatch(&req);
+                        frame_out.clear();
+                        protocol::encode_v3_reply(id, &typed, &mut frame_out);
+                        if writer.write_all(&frame_out).is_err() {
+                            break 'conn;
+                        }
+                    }
+                    // oversized or malformed frame: binary framing is
+                    // unrecoverable, hang up (clients see EOF)
+                    Err(_) => break 'conn,
+                },
             }
         }
-        if buf.len() > MAX_FRAME_BYTES {
+        // an unterminated v2 line (or pre-sniff garbage) past the cap is
+        // a protocol violation; don't buffer it unboundedly
+        if matches!(wire, Wire::Sniff | Wire::V2) && buf.len() > MAX_FRAME_BYTES {
             let _ = writer.write_all(b"ERR frame too large\n");
             break;
         }

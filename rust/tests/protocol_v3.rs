@@ -1,0 +1,727 @@
+//! Protocol v3 conformance suite: the binary wire and the legacy v2 text
+//! wire must agree bit-for-bit on every verb, on both front-ends (the
+//! thread-per-connection listener and the epoll/kqueue event loop — both
+//! negotiate v2/v3 on one port). Plus the event-loop hardening tests:
+//! pipelined in-order replies, fuzzed split reads, typed deadline /
+//! connection-cap errors, chaos sockets over v3, drain, and the
+//! frame-overflow regression (after `ERR frame too large` the v2
+//! connection must close — a post-overflow frame is never answered).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+use tensorcodec::codec::{self, Budget, CodecConfig};
+use tensorcodec::coordinator::batcher::BatchPolicy;
+use tensorcodec::harness::random_coords;
+use tensorcodec::store::client::{ClientError, ServeClient};
+use tensorcodec::store::eventloop;
+use tensorcodec::store::faults::{FaultPlane, FaultSpec};
+use tensorcodec::store::protocol::{
+    self, ErrClass, Reply, Request, V3Reply, MAX_V3_FRAME, V3_MAGIC, V3_VERSION,
+};
+use tensorcodec::store::server::{
+    serve_store_listener, ServeLimits, StoreServeConfig,
+};
+use tensorcodec::store::ArtifactStore;
+use tensorcodec::tensor::DenseTensor;
+
+/// Same four-method artifact mix as the serving suite.
+fn artifact_specs() -> Vec<(&'static str, &'static str, Vec<usize>, Budget)> {
+    vec![
+        ("traffic_ttd", "ttd", vec![8, 6, 5], Budget::Params(500)),
+        ("video_cpd", "cpd", vec![6, 5, 4], Budget::Params(120)),
+        ("climate_tkd", "tkd", vec![7, 5, 4], Budget::Params(250)),
+        ("stock_sz", "sz", vec![6, 4, 3], Budget::RelError(0.2)),
+    ]
+}
+
+fn build_store_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tcz_protocol_v3_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    for (i, (name, method, shape, budget)) in artifact_specs().into_iter().enumerate() {
+        let t = DenseTensor::random_uniform(&shape, 100 + i as u64);
+        let c = codec::by_name(method).unwrap();
+        let a = c.compress(&t, &budget, &CodecConfig::default()).unwrap();
+        codec::save_artifact(&dir.join(format!("{name}.tcz")), a.as_ref()).unwrap();
+    }
+    dir
+}
+
+fn small_policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 512,
+    }
+}
+
+fn reference_values(dir: &Path, name: &str, coords: &[Vec<usize>]) -> Vec<f32> {
+    let mut artifact = codec::load_artifact(&dir.join(format!("{name}.tcz"))).unwrap();
+    coords.iter().map(|c| artifact.get(c)).collect()
+}
+
+fn base_cfg(max_conns: usize) -> StoreServeConfig {
+    StoreServeConfig {
+        policy: small_policy(),
+        cache_bytes: usize::MAX,
+        allow_xla: false,
+        max_conns,
+        tile_bytes: 1 << 20,
+        ..Default::default()
+    }
+}
+
+/// Which front-end serves the listener.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Frontend {
+    Threads,
+    EventLoop,
+}
+
+/// Bind port 0 and serve `dir` with the chosen front-end on a background
+/// thread. Returns the address and the server join handle.
+fn spawn_frontend(
+    frontend: Frontend,
+    dir: &Path,
+    cfg: StoreServeConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let dir = dir.to_path_buf();
+    let srv = std::thread::spawn(move || match frontend {
+        Frontend::Threads => serve_store_listener(listener, &dir, cfg),
+        Frontend::EventLoop => eventloop::serve_store_eventloop(listener, &dir, cfg),
+    });
+    (addr, srv)
+}
+
+fn frontends() -> Vec<Frontend> {
+    let mut f = vec![Frontend::Threads];
+    if eventloop::supported() {
+        f.push(Frontend::EventLoop);
+    }
+    f
+}
+
+/// Golden transcript: every verb through a v2 client and a v3 client on
+/// the same server must return equal typed values (values compared by
+/// bit pattern), against both front-ends, and match the single-threaded
+/// reference decode.
+#[test]
+fn golden_transcript_v2_and_v3_agree_on_both_frontends() {
+    let dir = build_store_dir("golden");
+    let specs = artifact_specs();
+    for frontend in frontends() {
+        let (addr, srv) = spawn_frontend(frontend, &dir, base_cfg(2));
+        let mut v2 = ServeClient::connect(&addr).unwrap();
+        let mut v3 = ServeClient::connect_v3(&addr).unwrap();
+
+        assert_eq!(v2.methods().unwrap(), v3.methods().unwrap());
+        let names2 = v2.list().unwrap();
+        assert_eq!(names2, v3.list().unwrap());
+        assert_eq!(names2.len(), specs.len(), "{frontend:?}");
+
+        for (name, method, shape, _) in &specs {
+            let m2 = v2.open(name).unwrap();
+            let m3 = v3.open(name).unwrap();
+            assert_eq!(m2, m3, "{frontend:?} open {name}");
+            assert_eq!(&m2.method, method);
+            assert_eq!(&m2.shape, shape);
+
+            // stat back-to-back (no decode in between: the server-wide
+            // tile/health counters must agree across wires)
+            let s2 = v2.stat(name).unwrap();
+            let s3 = v3.stat(name).unwrap();
+            assert_eq!(s2, s3, "{frontend:?} stat {name}");
+            assert_eq!(s2.health, "ok");
+
+            let r2 = v2.reload(name).unwrap();
+            let r3 = v3.reload(name).unwrap();
+            assert_eq!(r2, r3, "{frontend:?} reload {name}");
+            assert_eq!(r2.generation, m2.generation, "reload without a file change");
+
+            let coords = random_coords(shape, 24, 0xC0FFEE);
+            let want = reference_values(&dir, name, &coords);
+            for (c, w) in coords.iter().zip(&want) {
+                let g2 = v2.get(name, c).unwrap();
+                let g3 = v3.get(name, c).unwrap();
+                assert_eq!(g2.to_bits(), g3.to_bits(), "{frontend:?} get {name} {c:?}");
+                assert_eq!(g2.to_bits(), w.to_bits(), "{frontend:?} vs reference");
+            }
+            let b2 = v2.batch_get(name, &coords).unwrap();
+            let b3 = v3.batch_get(name, &coords).unwrap();
+            for ((g2, g3), w) in b2.iter().zip(&b3).zip(&want) {
+                assert_eq!(g2.to_bits(), g3.to_bits(), "{frontend:?} batch {name}");
+                assert_eq!(g2.to_bits(), w.to_bits(), "{frontend:?} batch vs reference");
+            }
+        }
+
+        // errors carry the same class and the same message text on both
+        // wires (the v3 class byte is explicit, v2 sniffs the prefix)
+        let e2 = v2.get("no_such_artifact", &[0, 0, 0]).unwrap_err();
+        let e3 = v3.get("no_such_artifact", &[0, 0, 0]).unwrap_err();
+        let t2 = e2.downcast_ref::<ClientError>().expect("typed v2 error");
+        let t3 = e3.downcast_ref::<ClientError>().expect("typed v3 error");
+        assert_eq!(t2, t3, "{frontend:?} error parity");
+        assert!(matches!(t2, ClientError::Server(_)), "{t2:?}");
+
+        drop(v2);
+        drop(v3);
+        srv.join().expect("server thread").expect("server result");
+    }
+}
+
+/// Pipelining: a burst of interleaved requests (including a failing one
+/// mid-burst) comes back strictly in request order on both wires, with
+/// the same typed replies.
+#[test]
+fn pipelined_replies_arrive_in_request_order_on_both_wires() {
+    let dir = build_store_dir("pipeline");
+    let specs = artifact_specs();
+    // interleave artifacts; slot 5 is a deliberate failure mid-burst
+    let mut reqs = Vec::new();
+    let mut want = Vec::new();
+    for round in 0..3usize {
+        for (i, (name, _, shape, _)) in specs.iter().enumerate() {
+            let coords = random_coords(shape, 1, (round * 10 + i) as u64 + 40);
+            want.push(Some(reference_values(&dir, name, &coords)[0]));
+            reqs.push(Request::Get {
+                name: name.to_string(),
+                coords: coords[0].clone(),
+            });
+        }
+    }
+    reqs.insert(
+        5,
+        Request::Get {
+            name: "no_such_artifact".to_string(),
+            coords: vec![0, 0, 0],
+        },
+    );
+    want.insert(5, None);
+
+    for frontend in frontends() {
+        let (addr, srv) = spawn_frontend(frontend, &dir, base_cfg(2));
+        let mut v2 = ServeClient::connect(&addr).unwrap();
+        let mut v3 = ServeClient::connect_v3(&addr).unwrap();
+        let r2 = v2.pipeline(&reqs).unwrap();
+        let r3 = v3.pipeline(&reqs).unwrap();
+        assert_eq!(r2.len(), reqs.len());
+        assert_eq!(r2, r3, "{frontend:?}: wires disagree on a pipelined burst");
+        for (i, (reply, w)) in r2.iter().zip(&want).enumerate() {
+            match (reply, w) {
+                (Reply::Value(got), Some(w)) => assert_eq!(
+                    got.to_bits(),
+                    w.to_bits(),
+                    "{frontend:?} slot {i} out of order or corrupt"
+                ),
+                (Reply::Err(ErrClass::Server, _), None) => {}
+                other => panic!("{frontend:?} slot {i}: unexpected reply {other:?}"),
+            }
+        }
+        drop(v2);
+        drop(v3);
+        srv.join().expect("server thread").expect("server result");
+    }
+}
+
+/// Fuzzed split writes: a pipelined v3 burst delivered in adversarially
+/// tiny, randomly sized TCP chunks must decode to exactly the same
+/// replies — partial frames never corrupt or drop a request. Same for a
+/// v2 line burst split mid-token.
+#[test]
+fn fuzzed_split_writes_never_corrupt_frames() {
+    if !eventloop::supported() {
+        eprintln!("skipping: no event-loop backend on this platform");
+        return;
+    }
+    let dir = build_store_dir("split");
+    let coords = random_coords(&[8, 6, 5], 32, 0xF00D);
+    let want = reference_values(&dir, "traffic_ttd", &coords);
+    let (addr, srv) = spawn_frontend(Frontend::EventLoop, &dir, base_cfg(2));
+
+    // --- v3: preamble + burst, written in xorshift-sized slivers
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut preamble = [0u8; 5];
+    preamble[..4].copy_from_slice(&V3_MAGIC);
+    preamble[4] = V3_VERSION;
+    stream.write_all(&preamble).unwrap();
+
+    let mut burst = Vec::new();
+    for (i, c) in coords.iter().enumerate() {
+        protocol::encode_v3_request(
+            i as u64 + 1,
+            &Request::Get {
+                name: "traffic_ttd".to_string(),
+                coords: c.clone(),
+            },
+            &mut burst,
+        );
+    }
+    let mut rng = 0x1234_5678_9ABC_DEF0u64;
+    let mut off = 0usize;
+    while off < burst.len() {
+        rng ^= rng << 13;
+        rng ^= rng >> 7;
+        rng ^= rng << 17;
+        let n = (rng as usize % 7 + 1).min(burst.len() - off);
+        stream.write_all(&burst[off..off + n]).unwrap();
+        off += n;
+        if rng % 5 == 0 {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    // read HELLO + all replies by accumulating bytes
+    let mut inbuf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut got = Vec::new();
+    let mut saw_hello = false;
+    while got.len() < coords.len() {
+        match protocol::try_decode_v3_reply(&inbuf).unwrap() {
+            Some((consumed, id, reply)) => {
+                inbuf.drain(..consumed);
+                match reply {
+                    V3Reply::Hello { version } => {
+                        assert!(!saw_hello, "duplicate HELLO");
+                        assert_eq!(version, V3_VERSION);
+                        saw_hello = true;
+                    }
+                    V3Reply::Reply(Reply::Value(v)) => {
+                        assert_eq!(id, got.len() as u64 + 1, "reply out of order");
+                        got.push(v);
+                    }
+                    other => panic!("unexpected reply {other:?}"),
+                }
+            }
+            None => {
+                let n = stream.read(&mut chunk).unwrap();
+                assert!(n > 0, "server closed mid-burst");
+                inbuf.extend_from_slice(&chunk[..n]);
+            }
+        }
+    }
+    assert!(saw_hello);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "v3 slot {i} corrupted by splits");
+    }
+    drop(stream);
+
+    // --- v2: the same burst as text lines, split mid-token
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut out = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut text = String::new();
+    for c in &coords {
+        let mut line = String::new();
+        protocol::write_v2_request(
+            &Request::Get {
+                name: "traffic_ttd".to_string(),
+                coords: c.clone(),
+            },
+            &mut line,
+        );
+        text.push_str(&line);
+        text.push('\n');
+    }
+    let bytes = text.as_bytes();
+    let mut off = 0usize;
+    while off < bytes.len() {
+        rng ^= rng << 13;
+        rng ^= rng >> 7;
+        rng ^= rng << 17;
+        let n = (rng as usize % 5 + 1).min(bytes.len() - off);
+        out.write_all(&bytes[off..off + n]).unwrap();
+        off += n;
+    }
+    for (i, w) in want.iter().enumerate() {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "EOF at slot {i}");
+        let v: f32 = line
+            .trim_end()
+            .strip_prefix("OK ")
+            .unwrap_or_else(|| panic!("slot {i}: {line:?}"))
+            .parse()
+            .unwrap();
+        assert_eq!(v.to_bits(), w.to_bits(), "v2 slot {i} corrupted by splits");
+    }
+
+    drop(out);
+    drop(reader);
+    srv.join().expect("server thread").expect("server result");
+}
+
+/// Regression (the PR 9 bugfix): once a v2 line overflows the frame cap,
+/// the connection gets exactly one `ERR frame too large` and then closes —
+/// a valid frame sent after the overflow is NEVER answered (the old code
+/// resynced on the next newline and happily parsed post-overflow bytes).
+#[test]
+fn v2_frame_overflow_closes_connection_without_resync() {
+    let dir = build_store_dir("overflow");
+    for frontend in frontends() {
+        let (addr, srv) = spawn_frontend(frontend, &dir, base_cfg(1));
+        let stream = TcpStream::connect(&addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut out = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+
+        // one 16 MiB + 1 line, then a perfectly valid get. The server
+        // closes the connection the moment the overflow is detected, so
+        // late writes may fail and the buffered `ERR` line may be lost to
+        // a TCP reset — both are fine. What a *buggy* server does is
+        // resync on the newline and answer the get with `OK ...` over a
+        // connection it keeps open, which this read loop always observes.
+        let mut junk = vec![b'a'; (16 << 20) + 1];
+        junk.push(b'\n');
+        let _ = out.write_all(&junk);
+        let _ = out.write_all(b"get traffic_ttd 0,0,0\n");
+        let _ = out.flush();
+
+        let mut lines = Vec::new();
+        loop {
+            let mut line = String::new();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break, // clean close or reset: both mean "closed"
+                Ok(_) => lines.push(line.trim_end().to_string()),
+            }
+        }
+        assert!(
+            lines.iter().all(|l| l == "ERR frame too large"),
+            "{frontend:?}: post-overflow bytes were parsed as frames: {lines:?}"
+        );
+        assert!(
+            lines.len() <= 1,
+            "{frontend:?}: more than one reply after an overflow: {lines:?}"
+        );
+        drop(out);
+        drop(reader);
+        srv.join().expect("server thread").expect("server result");
+    }
+}
+
+/// A v3 frame announcing a body over the 64 MiB cap is unrecoverable:
+/// the connection closes with no reply (clients see EOF), on both
+/// front-ends.
+#[test]
+fn v3_oversized_announced_frame_drops_connection_silently() {
+    let dir = build_store_dir("v3big");
+    for frontend in frontends() {
+        let (addr, srv) = spawn_frontend(frontend, &dir, base_cfg(1));
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut preamble = [0u8; 5];
+        preamble[..4].copy_from_slice(&V3_MAGIC);
+        preamble[4] = V3_VERSION;
+        stream.write_all(&preamble).unwrap();
+        // HELLO is exactly 14 bytes: len(4) + id(8) + tag(1) + version(1)
+        let mut hello = [0u8; 14];
+        stream.read_exact(&mut hello).unwrap();
+        let (_, _, reply) = protocol::try_decode_v3_reply(&hello)
+            .unwrap()
+            .expect("complete HELLO");
+        assert!(matches!(reply, V3Reply::Hello { version: V3_VERSION }));
+
+        // announce an over-cap frame, then a valid get behind it
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&((MAX_V3_FRAME as u32) + 1).to_le_bytes());
+        bad.extend_from_slice(&[0u8; 16]); // some body bytes
+        let _ = stream.write_all(&bad);
+        let mut valid = Vec::new();
+        protocol::encode_v3_request(
+            7,
+            &Request::Get {
+                name: "traffic_ttd".to_string(),
+                coords: vec![0, 0, 0],
+            },
+            &mut valid,
+        );
+        let _ = stream.write_all(&valid);
+
+        // the connection drops (EOF, or a reset if our second write raced
+        // the close); any frames that did arrive must not answer the get
+        let mut rest = Vec::new();
+        let mut chunk = [0u8; 4096];
+        loop {
+            match stream.read(&mut chunk) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => rest.extend_from_slice(&chunk[..n]),
+            }
+        }
+        while let Ok(Some((consumed, id, reply))) = protocol::try_decode_v3_reply(&rest) {
+            assert_ne!(
+                id, 7,
+                "{frontend:?}: a frame behind the framing error was answered: {reply:?}"
+            );
+            rest.drain(..consumed);
+            if rest.is_empty() {
+                break;
+            }
+        }
+        drop(stream);
+        srv.join().expect("server thread").expect("server result");
+    }
+}
+
+/// Deadline expiry surfaces as a typed error over the v3 wire: with a
+/// batcher that only flushes at 2 entries, a lone pipelined get times out
+/// as `ClientError::Deadline`, while a 2-entry batch on the same shard
+/// answers bit-exactly inside the deadline.
+#[test]
+fn deadline_surfaces_as_typed_error_over_v3() {
+    if !eventloop::supported() {
+        eprintln!("skipping: no event-loop backend on this platform");
+        return;
+    }
+    let dir = build_store_dir("v3deadline");
+    let mut cfg = base_cfg(1);
+    cfg.policy = BatchPolicy {
+        max_batch: 2,
+        max_wait: Duration::from_secs(2),
+        queue_depth: 512,
+    };
+    cfg.limits = ServeLimits {
+        request_timeout: Some(Duration::from_millis(100)),
+        ..Default::default()
+    };
+    let (addr, srv) = spawn_frontend(Frontend::EventLoop, &dir, cfg);
+    let mut client = ServeClient::connect_v3(&addr).unwrap();
+    client.set_retries(0);
+    let err = client.get("traffic_ttd", &[0, 0, 0]).unwrap_err();
+    let typed = err.downcast_ref::<ClientError>().expect("typed error");
+    assert!(matches!(typed, ClientError::Deadline(_)), "{typed:?}");
+    assert!(typed.is_retryable());
+    // the shard survived the expiry: a flush-filling batch answers
+    let coords = vec![vec![0, 0, 0], vec![1, 2, 3]];
+    let want = reference_values(&dir, "traffic_ttd", &coords);
+    let got = client.batch_get("traffic_ttd", &coords).unwrap();
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.to_bits(), w.to_bits(), "post-deadline reply drifted");
+    }
+    drop(client);
+    srv.join().expect("server thread").expect("server result");
+}
+
+/// The event loop's simultaneous-connection cap: a connection over
+/// `max_open_conns` is refused with one explicit `overloaded` error (a
+/// typed `ClientError::Overloaded` through the client) and does not
+/// consume accept quota.
+#[test]
+fn connection_cap_refuses_with_typed_overloaded() {
+    if !eventloop::supported() {
+        eprintln!("skipping: no event-loop backend on this platform");
+        return;
+    }
+    let dir = build_store_dir("conncap");
+    let mut cfg = base_cfg(1); // quota: exactly one *served* connection
+    cfg.limits.max_open_conns = 1;
+    let (addr, srv) = spawn_frontend(Frontend::EventLoop, &dir, cfg);
+    let mut first = ServeClient::connect(&addr).unwrap();
+    let v = first.get("traffic_ttd", &[0, 0, 0]).unwrap();
+    assert!(v.is_finite() || v.is_nan());
+
+    // second simultaneous connection: refused explicitly, fast. Read the
+    // refusal on a raw socket (the server pushes it unprompted; writing a
+    // request first would race the close).
+    let second = TcpStream::connect(&addr).unwrap();
+    second
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut reader = BufReader::new(second);
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "no refusal line");
+    let msg = line
+        .trim_end()
+        .strip_prefix("ERR ")
+        .expect("refusal is an ERR line")
+        .to_string();
+    // the refusal classifies as the retryable Overloaded class — what a
+    // v2 `ServeClient` turns into `ClientError::Overloaded`
+    assert!(
+        matches!(
+            protocol::parse_v2_reply(&Request::List, &line).unwrap(),
+            Reply::Err(ErrClass::Overloaded, _)
+        ),
+        "{msg}"
+    );
+    assert_eq!(msg, "overloaded: connection limit reached");
+    // and then the connection closes without serving anything
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "{rest:?}");
+    drop(reader);
+
+    // the refused connection did not consume quota: the first connection
+    // still serves, and the server exits only when it closes
+    let again = first.get("traffic_ttd", &[0, 0, 0]).unwrap();
+    assert_eq!(v.to_bits(), again.to_bits());
+    drop(first);
+    srv.join().expect("server thread").expect("server result");
+}
+
+/// Graceful drain through the event loop: after `drain()`, in-flight
+/// work is answered or refused explicitly and the loop exits even though
+/// its accept quota is not exhausted.
+#[test]
+fn drain_exits_the_event_loop_with_connections_closed() {
+    if !eventloop::supported() {
+        eprintln!("skipping: no event-loop backend on this platform");
+        return;
+    }
+    use tensorcodec::store::server::ArtifactServer;
+    let dir = build_store_dir("v3drain");
+    let cfg = base_cfg(usize::MAX); // quota never exhausts: only drain exits
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+    let server = Arc::new(ArtifactServer::with_options(
+        store,
+        cfg.policy.clone(),
+        cfg.allow_xla,
+        cfg.tile_bytes,
+        cfg.limits.clone(),
+        None,
+    ));
+    let srv = {
+        let server = server.clone();
+        let cfg = cfg.clone();
+        std::thread::spawn(move || eventloop::run(server, listener, &cfg))
+    };
+    let mut client = ServeClient::connect_v3(&addr).unwrap();
+    client.set_retries(0);
+    let coords = random_coords(&[8, 6, 5], 8, 0xD7A1);
+    let want = reference_values(&dir, "traffic_ttd", &coords);
+    for (c, w) in coords.iter().zip(&want) {
+        let got = client.get("traffic_ttd", c).unwrap();
+        assert_eq!(got.to_bits(), w.to_bits());
+    }
+    server.drain(); // blocks until every shard worker joined
+    // post-drain requests fail explicitly (typed server error or a closed
+    // transport once the loop tears the connection down)
+    let err = client.get("traffic_ttd", &coords[0]).unwrap_err();
+    let typed = err.downcast_ref::<ClientError>().expect("typed error");
+    match typed {
+        ClientError::Server(msg) => assert!(msg.contains("draining"), "{msg}"),
+        ClientError::Io(_) => {}
+        other => panic!("unexpected post-drain error {other:?}"),
+    }
+    drop(client);
+    srv.join().expect("server thread").expect("server result");
+}
+
+/// Chaos over v3 sockets: with the same deterministic fault plane as the
+/// v2 chaos sweep (disconnects, read/write errors, short reads, stalls,
+/// file faults), every value a v3 client successfully receives must be
+/// bit-identical to a fresh decode. A fault may kill a connection or
+/// error a request — never corrupt a value.
+#[test]
+fn v3_chaos_faulty_sockets_never_serve_a_wrong_byte() {
+    if !eventloop::supported() {
+        eprintln!("skipping: no event-loop backend on this platform");
+        return;
+    }
+    let seed = std::env::var("TCZ_FAULT")
+        .ok()
+        .and_then(|s| FaultSpec::parse(&s).ok())
+        .map(|s| s.seed)
+        .unwrap_or(1);
+    let dir = build_store_dir(&format!("v3chaos{seed}"));
+    let plane = Arc::new(FaultPlane::new(FaultSpec {
+        seed,
+        file_err: 0.02,
+        truncate: 0.02,
+        read_err: 0.03,
+        write_err: 0.03,
+        short_read: 0.2,
+        disconnect: 0.01,
+        stall: 0.05,
+        req_stall: 0.02,
+        stall_ms: 1,
+    }));
+    const THREADS: usize = 6;
+    let mut cfg = base_cfg(THREADS);
+    cfg.limits = ServeLimits {
+        request_timeout: Some(Duration::from_secs(5)),
+        idle_timeout: Some(Duration::from_secs(10)),
+        ..Default::default()
+    };
+    cfg.faults = Some(plane.clone());
+    let (addr, srv) = spawn_frontend(Frontend::EventLoop, &dir, cfg);
+
+    let specs = artifact_specs();
+    let mut suites: Vec<(String, Vec<Vec<usize>>, Vec<f32>)> = Vec::new();
+    for (i, (name, _, shape, _)) in specs.iter().enumerate() {
+        let coords = random_coords(shape, 48, 300 + i as u64);
+        let want = reference_values(&dir, name, &coords);
+        suites.push((name.to_string(), coords, want));
+    }
+    let suites = Arc::new(suites);
+
+    let mut clients = Vec::new();
+    for t in 0..THREADS {
+        let suites = suites.clone();
+        let addr = addr.clone();
+        clients.push(std::thread::spawn(move || -> (u64, u64) {
+            // one connection per thread, no reconnects: a transport
+            // failure ends the thread (the accept quota is exact)
+            let mut client = match ServeClient::connect_v3(&addr) {
+                Ok(c) => c,
+                Err(_) => return (0, 1),
+            };
+            client.set_retries(0);
+            let (mut ok, mut failed) = (0u64, 0u64);
+            let (name, coords, want) = &suites[t % suites.len()];
+            for (c, w) in coords.iter().zip(want) {
+                match client.get(name, c) {
+                    Ok(got) => {
+                        assert_eq!(
+                            got.to_bits(),
+                            w.to_bits(),
+                            "thread {t}: wrong byte over v3 for {name} {c:?} under faults"
+                        );
+                        ok += 1;
+                    }
+                    Err(e) => {
+                        failed += 1;
+                        let typed = e
+                            .downcast_ref::<ClientError>()
+                            .expect("chaos errors must stay typed");
+                        if matches!(typed, ClientError::Io(_) | ClientError::Protocol(_)) {
+                            break; // connection died — no reconnect by design
+                        }
+                    }
+                }
+            }
+            (ok, failed)
+        }));
+    }
+    let (mut total_ok, mut total_failed) = (0u64, 0u64);
+    for c in clients {
+        let (ok, failed) = c.join().expect("chaos client panicked");
+        total_ok += ok;
+        total_failed += failed;
+    }
+    srv.join().expect("server thread").expect("server result");
+    assert!(total_ok > 0, "v3 chaos sweep: no request ever succeeded");
+    let counters = plane.counters();
+    let injected = counters.net_errors.load(std::sync::atomic::Ordering::Relaxed)
+        + counters.disconnects.load(std::sync::atomic::Ordering::Relaxed)
+        + counters.short_reads.load(std::sync::atomic::Ordering::Relaxed)
+        + counters.stalls.load(std::sync::atomic::Ordering::Relaxed)
+        + counters.file_errors.load(std::sync::atomic::Ordering::Relaxed)
+        + counters.truncations.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(
+        injected > 0,
+        "fault plane never fired (ok={total_ok} failed={total_failed})"
+    );
+}

@@ -626,8 +626,10 @@ fn tcp_chaos_faulty_sockets_never_serve_a_wrong_byte() {
             max_inflight: 0,
             io_timeout: Some(Duration::from_millis(100)),
             idle_timeout: Some(Duration::from_secs(10)),
+            max_open_conns: 0,
         },
         faults: Some(plane.clone()),
+        eventloop: Default::default(),
     };
     let dir2 = dir.clone();
     let srv = std::thread::spawn(move || serve_store_listener(listener, &dir2, cfg));
