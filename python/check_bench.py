@@ -12,10 +12,12 @@ missing from either side are skipped, so the baseline can gate a subset
 (today: the bulk/lockstep decode throughput floors, the point-decode
 latency ceiling, the Zipfian tile-cache serving floors — warm QPS,
 warm/cold ratio, hit rate — the degraded-mode serving floor under
-1% injected stalls, and the event-loop front-end floors — sustained
+1% injected stalls, the event-loop front-end floors — sustained
 pipelined QPS, p99 burst latency, and the v3-over-v2 throughput ratio
 whose floor of ``2.7 * 0.75 ~= 2x`` enforces the event-loop acceptance
-criterion) while the artifact upload tracks the rest.
+criterion — and the replicated-cluster floors: routed QPS across a
+mid-run node kill, the p99 failover batch latency ceiling, and the
+replica-repair time ceiling) while the artifact upload tracks the rest.
 """
 
 import argparse
@@ -38,10 +40,11 @@ THROUGHPUT_KEYS = (
     "degraded_qps",
     "eventloop_qps",
     "v3_vs_v2_qps_ratio",
+    "cluster_qps",
 )
 
 # lower-is-better gauges (latencies)
-LATENCY_KEYS = ("point_decode_ns_1t", "eventloop_p99_ms")
+LATENCY_KEYS = ("point_decode_ns_1t", "eventloop_p99_ms", "failover_p99_ms", "repair_seconds")
 
 
 def main() -> int:

@@ -769,12 +769,180 @@ fn eventloop_section() -> Option<(f64, f64, f64)> {
     Some((v3_qps, v3_p99, ratio))
 }
 
+/// Replicated-cluster serving: three event-loop nodes (R=2) with the
+/// Zipfian hot-key stream routed through the cluster `RouterClient`,
+/// and the hot artifact's primary replica killed at the midpoint of the
+/// timed sweep. Every reply — before and after the kill — is asserted
+/// bit-identical to a single-node reference decode before any number is
+/// reported. The victim then comes back with a corrupt container,
+/// quarantines it on reload, and is repaired from the healthy replica.
+/// Returns `(cluster_qps, failover_p99_ms, repair_seconds)`; floors are
+/// gated in `python/check_bench.py`.
+fn cluster_section() -> Option<(f64, f64, f64)> {
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+    use tensorcodec::coordinator::batcher::BatchPolicy;
+    use tensorcodec::store::client::{ClientConfig, ServeClient, WireVersion};
+    use tensorcodec::store::cluster::{ClusterMap, RouterClient, RouterConfig};
+    use tensorcodec::store::eventloop;
+    use tensorcodec::store::faults::{FaultPlane, FaultSpec};
+    use tensorcodec::store::server::{ArtifactServer, ServeLimits, StoreServeConfig};
+    use tensorcodec::store::ArtifactStore;
+
+    if !eventloop::supported() {
+        println!("=== Cluster serving: skipped (no epoll/kqueue backend) ===");
+        return None;
+    }
+
+    let shape = vec![256usize, 256, 256];
+    let mut reference = synthetic_tt(&shape, 8, 47);
+    let src = std::env::temp_dir().join("tcz_fig9_cluster_src");
+    std::fs::create_dir_all(&src).expect("src dir");
+    tensorcodec::codec::save_artifact(&src.join("hot.tcz"), &reference).expect("save hot.tcz");
+
+    // three nodes, each over its own byte-identical replica directory,
+    // each behind a fault plane whose kill switch black-holes it
+    let ids = ["a", "b", "c"];
+    let mut addrs = Vec::new();
+    let mut dirs = Vec::new();
+    let mut servers = Vec::new();
+    let mut planes = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..ids.len() {
+        let dir = std::env::temp_dir().join(format!("tcz_fig9_cluster_n{i}"));
+        std::fs::create_dir_all(&dir).expect("node dir");
+        std::fs::copy(src.join("hot.tcz"), dir.join("hot.tcz")).expect("copy hot.tcz");
+        let plane = Arc::new(FaultPlane::new(FaultSpec::default()));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+        addrs.push(listener.local_addr().expect("addr").to_string());
+        let store =
+            ArtifactStore::with_faults(&dir, usize::MAX, Some(plane.clone())).expect("store");
+        let policy = BatchPolicy {
+            max_batch: ZIPF_BATCH,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 4096,
+        };
+        let limits = ServeLimits {
+            io_timeout: Some(Duration::from_millis(100)),
+            ..ServeLimits::default()
+        };
+        let server = Arc::new(ArtifactServer::with_options(
+            store,
+            policy,
+            false,
+            0,
+            limits,
+            Some(plane.clone()),
+        ));
+        server.set_epoch(1);
+        let cfg = StoreServeConfig {
+            max_conns: usize::MAX,
+            faults: Some(plane.clone()),
+            ..Default::default()
+        };
+        let handle = {
+            let server = server.clone();
+            std::thread::spawn(move || eventloop::run(server, listener, &cfg))
+        };
+        dirs.push(dir);
+        servers.push(server);
+        planes.push(plane);
+        handles.push(handle);
+    }
+    let spec: String = ids
+        .iter()
+        .zip(&addrs)
+        .map(|(id, a)| format!("{id}={a}"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    let map = ClusterMap::parse(&format!("epoch=1\n{spec}"), 2).expect("cluster map");
+    let router_cfg = RouterConfig {
+        client: ClientConfig {
+            wire: WireVersion::V3,
+            io_timeout: Some(Duration::from_secs(5)),
+            retries: 1,
+            ..ClientConfig::default()
+        },
+        breaker_threshold: 2,
+        breaker_cooldown_ops: 1_000_000,
+        ..RouterConfig::default()
+    };
+    let mut router = RouterClient::new(map.clone(), router_cfg);
+
+    let batches = zipf_batches(&shape);
+    let want: Vec<Vec<u32>> = batches
+        .iter()
+        .map(|b| b.iter().map(|c| reference.get(c).to_bits()).collect())
+        .collect();
+    for b in &batches {
+        router.batch_get("hot", b).expect("warm-up batch");
+    }
+
+    let victim_id = map.primary_for("hot").id.clone();
+    let victim_idx = ids.iter().position(|id| *id == victim_id).expect("victim");
+    let kill_at = batches.len() / 2;
+    let mut post_kill_ms = Vec::new();
+    let t = Timer::start();
+    for (i, (b, w)) in batches.iter().zip(&want).enumerate() {
+        if i == kill_at {
+            planes[victim_idx].kill();
+        }
+        let t0 = Instant::now();
+        let got = router.batch_get("hot", b).expect("routed batch");
+        if i >= kill_at {
+            post_kill_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        for (g, wb) in got.iter().zip(w) {
+            assert_eq!(g.to_bits(), *wb, "wrong byte served through the cluster");
+        }
+    }
+    let wall = t.seconds();
+    let cluster_qps = (ZIPF_BATCHES * ZIPF_BATCH) as f64 / wall.max(1e-9);
+    post_kill_ms.sort_by(f64::total_cmp);
+    let idx = ((post_kill_ms.len() as f64 * 0.99) as usize).min(post_kill_ms.len() - 1);
+    let failover_p99_ms = post_kill_ms.get(idx).copied().unwrap_or(0.0);
+
+    // the victim comes back with a corrupt replica: reload quarantines
+    // it, repair pulls good bytes from the healthy replica
+    planes[victim_idx].revive();
+    std::fs::write(dirs[victim_idx].join("hot.tcz"), b"not a tcz container").expect("corrupt");
+    let direct_cfg = ClientConfig {
+        wire: WireVersion::V3,
+        ..ClientConfig::default()
+    };
+    let mut direct = ServeClient::connect_with(&addrs[victim_idx], direct_cfg).expect("dial");
+    assert!(direct.reload("hot").is_err(), "reload of a corrupt replica must fail");
+    let t = Timer::start();
+    router.repair_on(ids[victim_idx], "hot").expect("repair");
+    let repair_seconds = t.seconds();
+    assert_eq!(
+        direct.stat("hot").expect("stat").health,
+        "ok",
+        "repair must heal the quarantine"
+    );
+
+    drop(direct);
+    drop(router);
+    for s in &servers {
+        s.drain();
+    }
+    for h in handles {
+        h.join().expect("node thread").expect("node result");
+    }
+    println!("=== Cluster serving: 3 nodes, R=2, primary killed mid-run ===");
+    println!(
+        "cluster {cluster_qps:>10.0} q/s   failover p99 {failover_p99_ms:>7.2} ms   repair {repair_seconds:>6.3}s"
+    );
+    Some((cluster_qps, failover_p99_ms, repair_seconds))
+}
+
 fn kernels_section(
     append: (f64, f64),
     rans: (f64, f64),
     zipf: (f64, f64, f64),
     degraded: (f64, f64, f64),
     el: Option<(f64, f64, f64)>,
+    cluster: Option<(f64, f64, f64)>,
 ) {
     let n_threads = kernels::max_threads().max(2);
     let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
@@ -860,7 +1028,7 @@ fn kernels_section(
     kernels::set_threads(0);
 
     let json = format!(
-        "{{\n  \"threads\": {n_threads},\n  \"simd\": \"{}\",\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"point_decode_ns_1t\": {},\n  \"lockstep_decode_entries_per_s_1t\": {},\n  \"lockstep_decode_entries_per_s_nt\": {},\n  \"lockstep_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {},\n  \"append_slice_seconds_h512\": {},\n  \"append_slice_seconds_h2048\": {},\n  \"append_history_ratio\": {},\n  \"rans_encode_mb_s\": {},\n  \"rans_decode_mb_s\": {},\n  \"hot_qps_cold\": {},\n  \"hot_qps_warm\": {},\n  \"tile_hot_qps_ratio\": {},\n  \"tile_hit_rate\": {},\n  \"degraded_qps\": {},\n  \"degraded_p99_ms\": {},\n  \"shed_rate\": {},\n  \"eventloop_qps\": {},\n  \"eventloop_p99_ms\": {},\n  \"v3_vs_v2_qps_ratio\": {}\n}}\n",
+        "{{\n  \"threads\": {n_threads},\n  \"simd\": \"{}\",\n  \"gemm_n\": {GEMM_N},\n  \"gemm_gflops_1t\": {},\n  \"gemm_gflops_nt\": {},\n  \"gemm_speedup\": {},\n  \"decode_batch\": {DECODE_BATCH},\n  \"decode_entries_per_s_1t\": {},\n  \"decode_entries_per_s_nt\": {},\n  \"decode_speedup\": {},\n  \"point_decode_ns_1t\": {},\n  \"lockstep_decode_entries_per_s_1t\": {},\n  \"lockstep_decode_entries_per_s_nt\": {},\n  \"lockstep_speedup\": {},\n  \"epoch_seconds_1t\": {},\n  \"epoch_seconds_nt\": {},\n  \"epoch_speedup\": {},\n  \"append_slice_seconds_h512\": {},\n  \"append_slice_seconds_h2048\": {},\n  \"append_history_ratio\": {},\n  \"rans_encode_mb_s\": {},\n  \"rans_decode_mb_s\": {},\n  \"hot_qps_cold\": {},\n  \"hot_qps_warm\": {},\n  \"tile_hot_qps_ratio\": {},\n  \"tile_hit_rate\": {},\n  \"degraded_qps\": {},\n  \"degraded_p99_ms\": {},\n  \"shed_rate\": {},\n  \"eventloop_qps\": {},\n  \"eventloop_p99_ms\": {},\n  \"v3_vs_v2_qps_ratio\": {},\n  \"cluster_qps\": {},\n  \"failover_p99_ms\": {},\n  \"repair_seconds\": {}\n}}\n",
         isa.as_str(),
         json_num(Some(g1)),
         json_num(Some(gn)),
@@ -893,6 +1061,9 @@ fn kernels_section(
         json_num(el.map(|e| e.0)),
         json_num(el.map(|e| e.1)),
         json_num(el.map(|e| e.2)),
+        json_num(cluster.map(|c| c.0)),
+        json_num(cluster.map(|c| c.1)),
+        json_num(cluster.map(|c| c.2)),
     );
     std::fs::write("BENCH_kernels.json", json).expect("write BENCH_kernels.json");
     println!("json -> BENCH_kernels.json");
@@ -904,7 +1075,8 @@ fn main() {
     let zipf = zipfian_tile_section();
     let degraded = degraded_section();
     let el = eventloop_section();
-    kernels_section(append, rans, zipf, degraded, el);
+    let cluster = cluster_section();
+    kernels_section(append, rans, zipf, degraded, el, cluster);
     // Coarse gates, AFTER BENCH_kernels.json is on disk so a noisy-runner
     // flake still leaves the artifact for the nightly upload: appending
     // one slice must cost ~the same at 4x the history, and the warm tile

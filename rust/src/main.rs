@@ -46,6 +46,13 @@ const VALUE_FLAGS: &[&str] = &[
     "max-conns",
     "request-timeout",
     "max-inflight",
+    "max-open-conns",
+    "frontend",
+    "outbuf-bytes",
+    "eventloop-workers",
+    "cluster-map",
+    "replication",
+    "node-id",
     "max-batch",
     "max-wait-us",
     "queue-depth",
@@ -489,6 +496,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .context("eventloop-workers")?,
             ..Default::default()
         };
+        // cluster mode: static membership from --cluster-map (file) or
+        // TCZ_CLUSTER. The node serves every artifact in --dir either
+        // way (replicas hold full copies); the map's epoch is stamped
+        // into `cluster-stat` replies so routers can spot a node started
+        // with a stale map.
+        let replication: usize = args
+            .get("replication")
+            .unwrap_or("2")
+            .parse()
+            .context("replication")?;
+        let cluster = match args.get("cluster-map") {
+            Some(path) => Some(tensorcodec::store::cluster::ClusterMap::from_file(
+                &PathBuf::from(path),
+                replication,
+            )?),
+            None => tensorcodec::store::cluster::ClusterMap::from_env(replication)?,
+        };
+        let mut cluster_epoch = 0;
+        if let Some(map) = &cluster {
+            let node_id = args.get("node-id");
+            if let Some(id) = node_id {
+                if map.node(id).is_none() {
+                    bail!("--node-id `{id}` is not in the cluster map");
+                }
+            }
+            cluster_epoch = map.epoch;
+            eprintln!(
+                "[tcz] cluster mode: {} nodes, replication {}, epoch {}{}",
+                map.len(),
+                map.replication.min(map.len()),
+                map.epoch,
+                node_id.map(|id| format!(", this node `{id}`")).unwrap_or_default()
+            );
+        } else if args.get("node-id").is_some() {
+            bail!("--node-id requires --cluster-map or TCZ_CLUSTER");
+        }
         let cfg = tensorcodec::store::server::StoreServeConfig {
             policy: batch_policy(args)?,
             cache_bytes: args
@@ -507,6 +550,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             limits,
             faults: tensorcodec::store::faults::FaultPlane::from_env()?,
             eventloop,
+            cluster_epoch,
         };
         // `--frontend`: `eventloop` (default where epoll/kqueue exist) or
         // `threads` (the legacy thread-per-connection front-end). Both
@@ -654,6 +698,13 @@ COMMANDS
               outbound buffer cap (reads pause at the low watermark)
               [--eventloop-workers 0]      # --dir eventloop: decode
               executor threads (0 = one per core)
+              [--cluster-map FILE]         # --dir: static cluster
+              membership (`id=addr[@weight]` per line, optional
+              `epoch=N`); TCZ_CLUSTER holds the same syntax inline
+              [--replication 2]            # --dir: replicas per artifact
+              under rendezvous placement
+              [--node-id ID]               # --dir: this node's id in the
+              cluster map (must be a member)
               --model: line protocol v1 (one `i,j,k` per line)
               --dir:   protocol v2 text + binary protocol v3 on one port
                        (open/get/batch-get/stat/methods over every .tcz in
@@ -799,6 +850,36 @@ mod tests {
         let a = parse(&["--verbose", "--method-agnostic"]).unwrap();
         assert!(a.has("verbose"));
         assert!(a.has("method-agnostic"));
+    }
+
+    #[test]
+    fn serving_and_cluster_flags_are_known() {
+        // regression: these reached cmd_serve but the strict parser
+        // rejected them as unknown flags
+        let a = parse(&[
+            "--frontend",
+            "eventloop",
+            "--max-open-conns",
+            "128",
+            "--outbuf-bytes",
+            "65536",
+            "--eventloop-workers",
+            "2",
+            "--cluster-map",
+            "/tmp/map.txt",
+            "--replication",
+            "3",
+            "--node-id",
+            "a",
+        ])
+        .unwrap();
+        assert_eq!(a.get("frontend"), Some("eventloop"));
+        assert_eq!(a.get("max-open-conns"), Some("128"));
+        assert_eq!(a.get("outbuf-bytes"), Some("65536"));
+        assert_eq!(a.get("eventloop-workers"), Some("2"));
+        assert_eq!(a.get("cluster-map"), Some("/tmp/map.txt"));
+        assert_eq!(a.get("replication"), Some("3"));
+        assert_eq!(a.get("node-id"), Some("a"));
     }
 
     #[test]

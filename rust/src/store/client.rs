@@ -31,7 +31,7 @@
 //! point.
 
 use super::protocol::{
-    self, ErrClass, MetaReply, Reply, Request, V3Reply, V3_MAGIC, V3_VERSION,
+    self, ClusterStatReply, ErrClass, MetaReply, Reply, Request, V3Reply, V3_MAGIC, V3_VERSION,
 };
 use anyhow::{bail, Result};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -388,6 +388,13 @@ impl ServeClient {
         self.cfg.retries = retries;
     }
 
+    /// Send one typed request through the idempotent retry loop and
+    /// return the raw typed reply. Exposed for cluster routers that make
+    /// failover decisions from the [`ClientError`] class themselves.
+    pub fn roundtrip(&mut self, req: &Request, idempotent: bool) -> Result<Reply> {
+        self.request(req, idempotent)
+    }
+
     /// Pipeline a burst: write every request before reading any reply,
     /// then collect the typed replies in request order (server-side
     /// failures come back as [`Reply::Err`] entries, not an `Err` of the
@@ -456,6 +463,49 @@ impl ServeClient {
         }
     }
 
+    /// O(1) liveness probe. The server answers from atomics alone —
+    /// probing never touches the artifact LRU or the tile cache, so
+    /// health checks cannot cause evictions.
+    pub fn ping(&mut self) -> Result<()> {
+        match self.request(&Request::Ping, true)? {
+            Reply::Pong => Ok(()),
+            other => bail!("ping returned a non-pong reply {other:?}"),
+        }
+    }
+
+    /// Cheap node-level counters (epoch, artifact counts, shed/quarantine
+    /// tallies, drain flag) for cluster routers and operators.
+    pub fn cluster_stat(&mut self) -> Result<ClusterStatReply> {
+        match self.request(&Request::ClusterStat, true)? {
+            Reply::ClusterStat(s) => Ok(s),
+            other => bail!("cluster-stat returned an unexpected reply {other:?}"),
+        }
+    }
+
+    /// Raw artifact container bytes, for replica repair (the repairing
+    /// node installs them atomically via its own store).
+    pub fn fetch(&mut self, name: &str) -> Result<Vec<u8>> {
+        let req = Request::Fetch {
+            name: name.to_string(),
+        };
+        match self.request(&req, true)? {
+            Reply::Bytes(b) => Ok(b),
+            other => bail!("fetch returned a non-bytes reply {other:?}"),
+        }
+    }
+
+    /// Ask the server to repair `name` by re-fetching it from one of
+    /// `sources` (peer addresses) and installing it atomically. Repair is
+    /// idempotent — re-installing the same bytes revalidates in place —
+    /// so transport failures are retried like any read.
+    pub fn repair(&mut self, name: &str, sources: &[String]) -> Result<RemoteMeta> {
+        let req = Request::Repair {
+            name: name.to_string(),
+            sources: sources.to_vec(),
+        };
+        expect_meta(self.request(&req, true)?)
+    }
+
     /// Decode a batch; values come back in request order.
     pub fn batch_get(&mut self, name: &str, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
         let req = Request::BatchGet {
@@ -478,14 +528,14 @@ impl ServeClient {
     }
 }
 
-fn expect_names(reply: Reply) -> Result<Vec<String>> {
+pub(crate) fn expect_names(reply: Reply) -> Result<Vec<String>> {
     match reply {
         Reply::Names(names) => Ok(names),
         other => bail!("expected a name list, got {other:?}"),
     }
 }
 
-fn expect_meta(reply: Reply) -> Result<RemoteMeta> {
+pub(crate) fn expect_meta(reply: Reply) -> Result<RemoteMeta> {
     match reply {
         Reply::Meta(m) => Ok(RemoteMeta::from_meta(m)),
         other => bail!("expected metadata, got {other:?}"),

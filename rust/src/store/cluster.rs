@@ -1,0 +1,851 @@
+//! Replicated cluster mode: static membership, rendezvous placement,
+//! and a failover-aware router client.
+//!
+//! A [`ClusterMap`] is a *static* membership list (node id, address,
+//! integer weight) plus an epoch, parsed from a `--cluster-map` file or
+//! the `TCZ_CLUSTER` environment variable. Artifacts are placed onto
+//! nodes by rendezvous (highest-random-weight) hashing with R-way
+//! replication: every node computes the same ranking independently, so
+//! there is no coordinator, and adding or removing one node only moves
+//! the artifacts that hashed to it.
+//!
+//! The score is integer-only — `fnv1a(id ‖ 0x1F ‖ name) * weight` in
+//! u128 — so placement is bit-identical across platforms (no `ln()`
+//! libm variance) and a node with weight 2 owns roughly twice the
+//! artifacts of a weight-1 node.
+//!
+//! [`RouterClient`] layers cluster awareness over [`ServeClient`]: each
+//! verb is routed to the artifact's replicas in placement order, failing
+//! over on retryable errors (the existing [`ClientError`] taxonomy) and
+//! on `draining` refusals. Per-node health is a consecutive-failure
+//! circuit breaker whose cooldown is measured in *router operations*
+//! (not wall clock) with seeded jitter, so breaker behavior is
+//! deterministic under test; an expired breaker admits traffic again
+//! only after a half-open O(1) `ping` probe succeeds. Optionally, slow
+//! reads are hedged to a second replica after a latency threshold — the
+//! first successful reply wins (replies are bit-identical across
+//! replicas by construction) and the loser is drained in the background.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{
+    expect_meta, expect_names, ClientConfig, ClientError, RemoteMeta, ServeClient,
+};
+use super::protocol::{ClusterStatReply, Reply, Request};
+use crate::util::fnv1a;
+
+/// One cluster member: a stable id, a dialable address, and an integer
+/// placement weight (≥ 1; a weight-2 node attracts ~2× the artifacts).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeInfo {
+    pub id: String,
+    pub addr: String,
+    pub weight: u32,
+}
+
+/// Static cluster membership + placement policy.
+///
+/// Map syntax (file or `TCZ_CLUSTER`): entries separated by newlines or
+/// `;`, each `id=addr[@weight]`; `#` starts a comment line; an optional
+/// `epoch=N` entry stamps the map version (servers echo it in
+/// `cluster-stat`, so a router can detect a node started with a stale
+/// map).
+///
+/// ```text
+/// # three nodes, b on beefier hardware
+/// epoch=7
+/// a=10.0.0.1:7070
+/// b=10.0.0.2:7070@2
+/// c=10.0.0.3:7070
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterMap {
+    /// Map version, echoed by nodes in `cluster-stat` (0 when unset).
+    pub epoch: u64,
+    /// Replicas per artifact (clamped to the node count at placement).
+    pub replication: usize,
+    nodes: Vec<NodeInfo>,
+}
+
+impl ClusterMap {
+    /// Parse a map spec (see the type-level syntax). `replication` must
+    /// be ≥ 1; it is clamped to the node count at placement time.
+    pub fn parse(spec: &str, replication: usize) -> Result<ClusterMap> {
+        if replication == 0 {
+            bail!("cluster map: replication must be >= 1");
+        }
+        let mut epoch = 0u64;
+        let mut nodes: Vec<NodeInfo> = Vec::new();
+        for raw in spec.split(['\n', ';']) {
+            let entry = raw.trim();
+            if entry.is_empty() || entry.starts_with('#') {
+                continue;
+            }
+            let (key, val) = entry
+                .split_once('=')
+                .with_context(|| format!("cluster map: expected id=addr, got {entry:?}"))?;
+            let (key, val) = (key.trim(), val.trim());
+            if key == "epoch" {
+                epoch = val
+                    .parse()
+                    .with_context(|| format!("cluster map: bad epoch {val:?}"))?;
+                continue;
+            }
+            if key.is_empty() || key.contains(char::is_whitespace) {
+                bail!("cluster map: bad node id {key:?}");
+            }
+            let (addr, weight) = match val.rsplit_once('@') {
+                Some((addr, w)) => {
+                    let weight: u32 = w
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("cluster map: bad weight {w:?} for `{key}`"))?;
+                    (addr.trim(), weight)
+                }
+                None => (val, 1),
+            };
+            if addr.is_empty() {
+                bail!("cluster map: empty address for node `{key}`");
+            }
+            if weight == 0 {
+                bail!("cluster map: weight must be >= 1 for node `{key}`");
+            }
+            if nodes.iter().any(|n| n.id == key) {
+                bail!("cluster map: duplicate node id `{key}`");
+            }
+            nodes.push(NodeInfo {
+                id: key.to_string(),
+                addr: addr.to_string(),
+                weight,
+            });
+        }
+        if nodes.is_empty() {
+            bail!("cluster map: no nodes");
+        }
+        Ok(ClusterMap {
+            epoch,
+            replication,
+            nodes,
+        })
+    }
+
+    /// Parse a map from a `--cluster-map` file.
+    pub fn from_file(path: &Path, replication: usize) -> Result<ClusterMap> {
+        let spec = std::fs::read_to_string(path)
+            .with_context(|| format!("reading cluster map {}", path.display()))?;
+        ClusterMap::parse(&spec, replication)
+            .with_context(|| format!("cluster map {}", path.display()))
+    }
+
+    /// Parse a map from `TCZ_CLUSTER` if set; `None` = standalone mode.
+    pub fn from_env(replication: usize) -> Result<Option<ClusterMap>> {
+        match std::env::var("TCZ_CLUSTER") {
+            Ok(spec) if !spec.trim().is_empty() => {
+                Ok(Some(ClusterMap::parse(&spec, replication).context("parsing TCZ_CLUSTER")?))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// All members, in map order.
+    pub fn nodes(&self) -> &[NodeInfo] {
+        &self.nodes
+    }
+
+    /// Look up one member by id.
+    pub fn node(&self, id: &str) -> Option<&NodeInfo> {
+        self.nodes.iter().find(|n| n.id == id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Integer rendezvous score of `node` for `name`. The 0x1F separator
+    /// keeps `("ab","c")` and `("a","bc")` from colliding.
+    fn score(node: &NodeInfo, name: &str) -> u128 {
+        let mut buf = Vec::with_capacity(node.id.len() + 1 + name.len());
+        buf.extend_from_slice(node.id.as_bytes());
+        buf.push(0x1f);
+        buf.extend_from_slice(name.as_bytes());
+        (fnv1a(&buf) as u128) * (node.weight as u128)
+    }
+
+    /// The R replicas holding `name`, best score first (the first entry
+    /// is the primary). Deterministic: ties break on node id.
+    pub fn replicas_for(&self, name: &str) -> Vec<&NodeInfo> {
+        let mut scored: Vec<(u128, &NodeInfo)> = self
+            .nodes
+            .iter()
+            .map(|n| (ClusterMap::score(n, name), n))
+            .collect();
+        scored.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.id.cmp(&b.1.id)));
+        scored
+            .into_iter()
+            .take(self.replication.min(self.nodes.len()))
+            .map(|(_, n)| n)
+            .collect()
+    }
+
+    /// The primary replica for `name`.
+    pub fn primary_for(&self, name: &str) -> &NodeInfo {
+        // parse() guarantees at least one node, so replicas_for (which
+        // takes max(1, ..) ≥ 1 entries) is never empty
+        self.replicas_for(name)[0]
+    }
+
+    /// Whether node `id` is one of the replicas for `name`.
+    pub fn owns(&self, id: &str, name: &str) -> bool {
+        self.replicas_for(name).iter().any(|n| n.id == id)
+    }
+}
+
+/// Router knobs. Defaults favor fast failover with deterministic,
+/// test-friendly breaker behavior.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Per-node connection config (wire version, timeouts, retries).
+    pub client: ClientConfig,
+    /// Consecutive failures that open a node's circuit breaker.
+    pub breaker_threshold: u32,
+    /// Base breaker cooldown, measured in router *operations* (not wall
+    /// clock — deterministic under test). Jitter adds up to one extra
+    /// base on top, seeded by `probe_seed`.
+    pub breaker_cooldown_ops: u64,
+    /// Seed for cooldown jitter (xorshift; deterministic per router).
+    pub probe_seed: u64,
+    /// Hedge reads to a second replica after this long without a reply;
+    /// `None` disables hedging.
+    pub hedge_threshold: Option<Duration>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            client: ClientConfig::default(),
+            breaker_threshold: 3,
+            breaker_cooldown_ops: 8,
+            probe_seed: 0x5DEE_CE66_D1CE_4E5D,
+            hedge_threshold: None,
+        }
+    }
+}
+
+/// Per-node breaker state, keyed by router op counter.
+#[derive(Debug, Default, Clone)]
+struct NodeState {
+    consecutive_failures: u32,
+    /// `Some(op)`: breaker open until the router op counter reaches `op`,
+    /// at which point a half-open ping probe decides.
+    open_until: Option<u64>,
+}
+
+/// Introspection snapshot of a node's breaker ([`RouterClient::node_health`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeHealth {
+    pub consecutive_failures: u32,
+    /// Open or awaiting its half-open recovery probe.
+    pub breaker_open: bool,
+}
+
+/// Cluster-aware client: routes each verb to a live replica of its
+/// artifact, failing over on retryable errors, with per-node circuit
+/// breakers and optional hedged reads. Single-threaded by design
+/// (`&mut self`); hedge legs use their own one-shot connections.
+pub struct RouterClient {
+    map: ClusterMap,
+    cfg: RouterConfig,
+    /// Lazily-dialed connection per node id; dropped on failure so the
+    /// next attempt re-dials.
+    clients: HashMap<String, ServeClient>,
+    states: HashMap<String, NodeState>,
+    /// Monotonic router operation counter (breaker cooldown clock).
+    ops: u64,
+    /// xorshift state for breaker cooldown jitter.
+    jitter: u64,
+}
+
+impl RouterClient {
+    pub fn new(map: ClusterMap, cfg: RouterConfig) -> RouterClient {
+        let jitter = cfg.probe_seed | 1; // xorshift must not start at 0
+        RouterClient {
+            map,
+            cfg,
+            clients: HashMap::new(),
+            states: HashMap::new(),
+            ops: 0,
+            jitter,
+        }
+    }
+
+    /// Connect with default routing config.
+    pub fn connect(map: ClusterMap) -> RouterClient {
+        RouterClient::new(map, RouterConfig::default())
+    }
+
+    pub fn map(&self) -> &ClusterMap {
+        &self.map
+    }
+
+    /// Breaker snapshot for `id` (all-clear for unknown ids).
+    pub fn node_health(&self, id: &str) -> NodeHealth {
+        let st = self.states.get(id).cloned().unwrap_or_default();
+        NodeHealth {
+            consecutive_failures: st.consecutive_failures,
+            breaker_open: st.open_until.is_some(),
+        }
+    }
+
+    /// Total routed operations so far (the breaker cooldown clock).
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    fn next_op(&mut self) -> u64 {
+        self.ops += 1;
+        self.ops
+    }
+
+    /// Jittered breaker cooldown in ops: `base + (0..base)`, seeded.
+    fn cooldown_jittered(&mut self) -> u64 {
+        let base = self.cfg.breaker_cooldown_ops.max(1);
+        let mut x = self.jitter;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.jitter = x;
+        base + x % base
+    }
+
+    /// Candidate `(id, addr)` list for a request: the artifact's
+    /// replicas in placement order, or every node (map order) for
+    /// nameless verbs like `methods`/`list`.
+    fn candidates(&self, name: Option<&str>) -> Vec<(String, String)> {
+        match name {
+            Some(n) => self
+                .map
+                .replicas_for(n)
+                .into_iter()
+                .map(|node| (node.id.clone(), node.addr.clone()))
+                .collect(),
+            None => self
+                .map
+                .nodes()
+                .iter()
+                .map(|node| (node.id.clone(), node.addr.clone()))
+                .collect(),
+        }
+    }
+
+    /// Whether the breaker admits traffic to `id` at op `op`. An open
+    /// breaker past its cooldown goes half-open: one O(1) ping probe on
+    /// a fresh connection decides between closing and re-opening.
+    fn admit(&mut self, id: &str, addr: &str, op: u64) -> bool {
+        let open_until = self.states.get(id).and_then(|s| s.open_until);
+        match open_until {
+            None => true,
+            Some(until) if op < until => false,
+            Some(_) => {
+                let ok = self.probe(addr);
+                let cooldown = self.cooldown_jittered();
+                let st = self.states.entry(id.to_string()).or_default();
+                if ok {
+                    st.open_until = None;
+                    st.consecutive_failures = 0;
+                    true
+                } else {
+                    st.open_until = Some(op + cooldown);
+                    false
+                }
+            }
+        }
+    }
+
+    /// Half-open recovery probe: one ping on a fresh non-retrying
+    /// connection (the cached client may be wedged on a dead socket).
+    fn probe(&mut self, addr: &str) -> bool {
+        let cfg = ClientConfig {
+            retries: 0,
+            ..self.cfg.client.clone()
+        };
+        match ServeClient::connect_with(addr, cfg) {
+            Ok(mut c) => c.ping().is_ok(),
+            Err(_) => false,
+        }
+    }
+
+    fn record_success(&mut self, id: &str) {
+        let st = self.states.entry(id.to_string()).or_default();
+        st.consecutive_failures = 0;
+        st.open_until = None;
+    }
+
+    fn record_failure(&mut self, id: &str, op: u64) {
+        let threshold = self.cfg.breaker_threshold.max(1);
+        let cooldown = self.cooldown_jittered();
+        let st = self.states.entry(id.to_string()).or_default();
+        st.consecutive_failures = st.consecutive_failures.saturating_add(1);
+        if st.consecutive_failures >= threshold {
+            st.open_until = Some(op + cooldown);
+        }
+        // a node that just failed us has a dead or misbehaving
+        // connection; drop it so the next attempt re-dials
+        self.clients.remove(id);
+    }
+
+    /// One attempt against one node, through its cached (or fresh)
+    /// connection and the client's own idempotent retry loop.
+    fn try_node(&mut self, id: &str, addr: &str, req: &Request, idempotent: bool) -> Result<Reply> {
+        if !self.clients.contains_key(id) {
+            let client = ServeClient::connect_with(addr, self.cfg.client.clone())
+                .with_context(|| format!("dial node `{id}` at {addr}"))?;
+            self.clients.insert(id.to_string(), client);
+        }
+        match self.clients.get_mut(id) {
+            Some(client) => client.roundtrip(req, idempotent),
+            None => bail!(ClientError::Io(format!("no connection to node `{id}`"))),
+        }
+    }
+
+    /// Route a request across its replicas with failover. Nodes behind
+    /// an open breaker are skipped on the first pass; if *every*
+    /// candidate is skipped the second pass tries them anyway
+    /// (fail-static beats refusing outright when the whole replica set
+    /// looks down).
+    pub fn route(&mut self, req: &Request, idempotent: bool) -> Result<Reply> {
+        let cands = self.candidates(req.name());
+        if cands.is_empty() {
+            bail!("cluster router: no candidate nodes");
+        }
+        let mut last: Option<anyhow::Error> = None;
+        for pass in 0..2u8 {
+            let mut tried = false;
+            for (id, addr) in &cands {
+                let op = self.next_op();
+                if pass == 0 && !self.admit(id, addr, op) {
+                    continue;
+                }
+                tried = true;
+                match self.try_node(id, addr, req, idempotent) {
+                    Ok(reply) => {
+                        self.record_success(id);
+                        return Ok(reply);
+                    }
+                    Err(e) if failover_worthy(&e) => {
+                        self.record_failure(id, op);
+                        last = Some(e);
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if tried {
+                break; // real attempts were made; don't re-dial the same nodes
+            }
+        }
+        Err(match last {
+            Some(e) => e.context("all replicas failed"),
+            None => anyhow::anyhow!("cluster router: every candidate refused"),
+        })
+    }
+
+    /// Route a read, hedging to the next replica when the first one is
+    /// slow. Falls back to plain [`route`] when hedging is disabled or
+    /// fewer than two breaker-closed replicas exist.
+    ///
+    /// [`route`]: RouterClient::route
+    fn hedged_route(&mut self, req: &Request) -> Result<Reply> {
+        let threshold = match self.cfg.hedge_threshold {
+            Some(t) => t,
+            None => return self.route(req, true),
+        };
+        let cands: Vec<(String, String)> = self
+            .candidates(req.name())
+            .into_iter()
+            .filter(|(id, _)| !self.node_health(id).breaker_open)
+            .take(2)
+            .collect();
+        if cands.len() < 2 {
+            return self.route(req, true);
+        }
+        let leg_cfg = ClientConfig {
+            retries: 0,
+            ..self.cfg.client.clone()
+        };
+        let (tx, rx) = mpsc::channel::<(String, Result<Reply>)>();
+        let launch = |id: String, addr: String, tx: mpsc::Sender<(String, Result<Reply>)>| {
+            let cfg = leg_cfg.clone();
+            let req = req.clone();
+            std::thread::spawn(move || {
+                let result = ServeClient::connect_with(&addr, cfg)
+                    .and_then(|mut c| c.roundtrip(&req, true));
+                let _ = tx.send((id, result));
+            });
+        };
+        launch(cands[0].0.clone(), cands[0].1.clone(), tx.clone());
+        let mut launched = 1usize;
+        let mut outstanding = 1usize;
+        // every leg has socket timeouts, so a generous cap only guards
+        // against both legs wedging simultaneously
+        let io_cap = self.cfg.client.io_timeout.unwrap_or(Duration::from_secs(60));
+        let final_wait = io_cap + self.cfg.client.connect_timeout + Duration::from_secs(1);
+        loop {
+            let wait = if launched < cands.len() { threshold } else { final_wait };
+            match rx.recv_timeout(wait) {
+                Ok((id, Ok(reply))) => {
+                    self.record_success(&id);
+                    return Ok(reply); // first good reply wins; the loser drains in its thread
+                }
+                Ok((id, Err(e))) => {
+                    outstanding -= 1;
+                    if !failover_worthy(&e) {
+                        return Err(e);
+                    }
+                    let op = self.next_op();
+                    self.record_failure(&id, op);
+                    if launched < cands.len() {
+                        // the first leg failed fast — hedge immediately
+                        launch(cands[launched].0.clone(), cands[launched].1.clone(), tx.clone());
+                        launched += 1;
+                        outstanding += 1;
+                    } else if outstanding == 0 {
+                        return Err(e.context("hedged read: all legs failed"));
+                    }
+                    // otherwise another leg is still in flight: wait for it
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if launched < cands.len() {
+                        launch(cands[launched].0.clone(), cands[launched].1.clone(), tx.clone());
+                        launched += 1;
+                        outstanding += 1;
+                    } else {
+                        bail!(ClientError::Io("hedged read: all legs timed out".into()));
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    bail!(ClientError::Io("hedged read: all legs vanished".into()));
+                }
+            }
+        }
+    }
+
+    /// Registered codec names (from any live node).
+    pub fn methods(&mut self) -> Result<Vec<String>> {
+        expect_names(self.route(&Request::Methods, true)?)
+    }
+
+    /// Artifact names (from any live node; replicas host identical sets).
+    pub fn list(&mut self) -> Result<Vec<String>> {
+        expect_names(self.route(&Request::List, true)?)
+    }
+
+    /// Load an artifact on a live replica.
+    pub fn open(&mut self, name: &str) -> Result<RemoteMeta> {
+        let req = Request::Open {
+            name: name.to_string(),
+        };
+        expect_meta(self.route(&req, true)?)
+    }
+
+    /// Metadata from a live replica.
+    pub fn stat(&mut self, name: &str) -> Result<RemoteMeta> {
+        let req = Request::Stat {
+            name: name.to_string(),
+        };
+        expect_meta(self.route(&req, true)?)
+    }
+
+    /// Decode one entry from a live replica (hedged when configured).
+    pub fn get(&mut self, name: &str, coords: &[usize]) -> Result<f32> {
+        let req = Request::Get {
+            name: name.to_string(),
+            coords: coords.to_vec(),
+        };
+        match self.hedged_route(&req)? {
+            Reply::Value(v) => Ok(v),
+            other => bail!("get returned a non-value reply {other:?}"),
+        }
+    }
+
+    /// Decode a batch from a live replica (hedged when configured).
+    pub fn batch_get(&mut self, name: &str, coords: &[Vec<usize>]) -> Result<Vec<f32>> {
+        let req = Request::BatchGet {
+            name: name.to_string(),
+            coords: coords.to_vec(),
+        };
+        match self.hedged_route(&req)? {
+            Reply::Values(vals) => {
+                if vals.len() != coords.len() {
+                    bail!(
+                        "batch-get returned {} values for {} coords",
+                        vals.len(),
+                        coords.len()
+                    );
+                }
+                Ok(vals)
+            }
+            other => bail!("batch-get returned a non-values reply {other:?}"),
+        }
+    }
+
+    /// Ping one specific node (bypasses placement; still counts toward
+    /// the breaker so operator probes observe the same health state).
+    pub fn ping_node(&mut self, id: &str) -> Result<()> {
+        let addr = match self.map.node(id) {
+            Some(n) => n.addr.clone(),
+            None => bail!("cluster router: unknown node `{id}`"),
+        };
+        let op = self.next_op();
+        match self.try_node(id, &addr, &Request::Ping, true) {
+            Ok(Reply::Pong) => {
+                self.record_success(id);
+                Ok(())
+            }
+            Ok(other) => bail!("ping returned a non-pong reply {other:?}"),
+            Err(e) => {
+                if failover_worthy(&e) {
+                    self.record_failure(id, op);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Cluster-stat from one specific node.
+    pub fn cluster_stat_node(&mut self, id: &str) -> Result<ClusterStatReply> {
+        let addr = match self.map.node(id) {
+            Some(n) => n.addr.clone(),
+            None => bail!("cluster router: unknown node `{id}`"),
+        };
+        match self.try_node(id, &addr, &Request::ClusterStat, true)? {
+            Reply::ClusterStat(s) => Ok(s),
+            other => bail!("cluster-stat returned an unexpected reply {other:?}"),
+        }
+    }
+
+    /// Tell node `target_id` to repair `name` by pulling it from the
+    /// artifact's *other* replicas (or, when the target is not a replica
+    /// of `name`, from all of them).
+    pub fn repair_on(&mut self, target_id: &str, name: &str) -> Result<RemoteMeta> {
+        let addr = match self.map.node(target_id) {
+            Some(n) => n.addr.clone(),
+            None => bail!("cluster router: unknown node `{target_id}`"),
+        };
+        let mut sources: Vec<String> = self
+            .map
+            .replicas_for(name)
+            .into_iter()
+            .filter(|n| n.id != target_id)
+            .map(|n| n.addr.clone())
+            .collect();
+        if sources.is_empty() {
+            bail!("repair `{name}` on `{target_id}`: no other replicas to pull from");
+        }
+        sources.sort();
+        let req = Request::Repair {
+            name: name.to_string(),
+            sources,
+        };
+        expect_meta(self.try_node(target_id, &addr, &req, true)?)
+    }
+}
+
+/// Failover when the error is retryable (transport, overload, deadline)
+/// or the node is draining — another replica can serve the read either
+/// way. Semantic errors (bad coords, unknown artifact on every replica)
+/// and protocol violations surface immediately.
+fn failover_worthy(e: &anyhow::Error) -> bool {
+    match e.downcast_ref::<ClientError>() {
+        Some(ce) if ce.is_retryable() => true,
+        Some(ClientError::Server(msg)) => msg.starts_with("draining"),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn three_node_map() -> ClusterMap {
+        ClusterMap::parse("a=127.0.0.1:1\nb=127.0.0.1:2\nc=127.0.0.1:3", 2).unwrap()
+    }
+
+    #[test]
+    fn map_parses_weights_epoch_comments_and_separators() {
+        let m = ClusterMap::parse(
+            "# comment line\nepoch=7\na=10.0.0.1:7070\nb=10.0.0.2:7070@2; c=10.0.0.3:7070",
+            2,
+        )
+        .unwrap();
+        assert_eq!(m.epoch, 7);
+        assert_eq!(m.replication, 2);
+        assert_eq!(m.len(), 3);
+        assert!(!m.is_empty());
+        assert_eq!(m.node("a").unwrap().addr, "10.0.0.1:7070");
+        assert_eq!(m.node("a").unwrap().weight, 1);
+        assert_eq!(m.node("b").unwrap().weight, 2);
+        assert_eq!(m.node("c").unwrap().addr, "10.0.0.3:7070");
+        assert!(m.node("missing").is_none());
+
+        // IPv6-ish addresses keep their colons; only the last @ splits
+        let m = ClusterMap::parse("x=[::1]:7070@3", 1).unwrap();
+        assert_eq!(m.node("x").unwrap().addr, "[::1]:7070");
+        assert_eq!(m.node("x").unwrap().weight, 3);
+    }
+
+    #[test]
+    fn map_rejects_garbage() {
+        assert!(ClusterMap::parse("", 2).is_err(), "no nodes");
+        assert!(ClusterMap::parse("   \n# only comments", 2).is_err());
+        assert!(ClusterMap::parse("a=1.2.3.4:1", 0).is_err(), "replication 0");
+        assert!(ClusterMap::parse("justanid", 2).is_err(), "missing =");
+        assert!(ClusterMap::parse("a=", 2).is_err(), "empty addr");
+        assert!(ClusterMap::parse("=addr", 2).is_err(), "empty id");
+        assert!(ClusterMap::parse("a b=addr", 2).is_err(), "id whitespace");
+        assert!(ClusterMap::parse("a=x:1@0", 2).is_err(), "zero weight");
+        assert!(ClusterMap::parse("a=x:1@yes", 2).is_err(), "bad weight");
+        assert!(ClusterMap::parse("a=x:1\na=x:2", 2).is_err(), "dup id");
+        assert!(ClusterMap::parse("epoch=banana\na=x:1", 2).is_err());
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_replicated() {
+        let m1 = three_node_map();
+        let m2 = three_node_map();
+        for name in ["traffic_ttd", "video_cpd", "climate_tkd", "stock_sz"] {
+            let r1: Vec<&str> = m1.replicas_for(name).iter().map(|n| n.id.as_str()).collect();
+            let r2: Vec<&str> = m2.replicas_for(name).iter().map(|n| n.id.as_str()).collect();
+            assert_eq!(r1, r2, "same map must place `{name}` identically");
+            assert_eq!(r1.len(), 2, "R=2 on 3 nodes");
+            assert_eq!(m1.primary_for(name).id, r1[0]);
+            // owns() agrees with replicas_for()
+            for node in m1.nodes() {
+                assert_eq!(m1.owns(&node.id, name), r1.contains(&node.id.as_str()));
+            }
+            // replicas are distinct nodes
+            assert_ne!(r1[0], r1[1]);
+        }
+        // replication clamps to the node count
+        let tiny = ClusterMap::parse("solo=127.0.0.1:1", 3).unwrap();
+        assert_eq!(tiny.replicas_for("anything").len(), 1);
+    }
+
+    #[test]
+    fn placement_spreads_and_respects_weights() {
+        let m = three_node_map();
+        let mut primaries: HashMap<String, usize> = HashMap::new();
+        for i in 0..600 {
+            let name = format!("artifact_{i}");
+            *primaries.entry(m.primary_for(&name).id.clone()).or_default() += 1;
+        }
+        for node in m.nodes() {
+            let share = *primaries.get(&node.id).unwrap_or(&0);
+            assert!(
+                share > 100,
+                "node {} owns only {share}/600 primaries — placement is skewed",
+                node.id
+            );
+        }
+
+        // a weight-4 node should attract visibly more primaries than
+        // weight-1 peers (exact ratio depends on the hash, so assert
+        // a loose dominance, not 4:1)
+        let heavy = ClusterMap::parse("a=x:1\nb=x:2@4\nc=x:3", 1).unwrap();
+        let mut counts: HashMap<String, usize> = HashMap::new();
+        for i in 0..900 {
+            let name = format!("artifact_{i}");
+            *counts.entry(heavy.primary_for(&name).id.clone()).or_default() += 1;
+        }
+        let b = *counts.get("b").unwrap_or(&0);
+        let a = *counts.get("a").unwrap_or(&0);
+        let c = *counts.get("c").unwrap_or(&0);
+        assert!(b > a && b > c, "weight-4 node b={b} should dominate a={a}, c={c}");
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_jitter_is_seeded() {
+        let cfg = RouterConfig {
+            breaker_threshold: 3,
+            breaker_cooldown_ops: 8,
+            ..RouterConfig::default()
+        };
+        let mut r1 = RouterClient::new(three_node_map(), cfg.clone());
+        let mut r2 = RouterClient::new(three_node_map(), cfg);
+
+        for r in [&mut r1, &mut r2] {
+            assert!(!r.node_health("a").breaker_open);
+            for _ in 0..2 {
+                let op = r.next_op();
+                r.record_failure("a", op);
+            }
+            assert!(!r.node_health("a").breaker_open, "below threshold");
+            assert_eq!(r.node_health("a").consecutive_failures, 2);
+            let op = r.next_op();
+            r.record_failure("a", op);
+            assert!(r.node_health("a").breaker_open, "threshold reached");
+        }
+        // seeded jitter: identical routers compute identical cooldowns
+        assert_eq!(
+            r1.states.get("a").unwrap().open_until,
+            r2.states.get("a").unwrap().open_until
+        );
+        let until = r1.states.get("a").unwrap().open_until.unwrap();
+        assert!(until > r1.ops(), "cooldown extends into the future");
+        assert!(until <= r1.ops() + 16, "cooldown bounded by 2x base (base 8 + jitter < 8)");
+
+        // success closes the breaker and clears the failure streak
+        r1.record_success("a");
+        let healed = NodeHealth {
+            consecutive_failures: 0,
+            breaker_open: false,
+        };
+        assert_eq!(r1.node_health("a"), healed);
+    }
+
+    #[test]
+    fn routing_fails_over_to_live_nodes_only_for_worthy_errors() {
+        let io: anyhow::Error = ClientError::Io("boom".into()).into();
+        let over: anyhow::Error = ClientError::Overloaded("overloaded: full".into()).into();
+        let dead: anyhow::Error = ClientError::Deadline("deadline exceeded".into()).into();
+        let drain: anyhow::Error =
+            ClientError::Server("draining: server is shutting down".into()).into();
+        let sem: anyhow::Error = ClientError::Server("no artifact `x`".into()).into();
+        let proto: anyhow::Error = ClientError::Protocol("bad frame".into()).into();
+        assert!(failover_worthy(&io));
+        assert!(failover_worthy(&over));
+        assert!(failover_worthy(&dead));
+        assert!(failover_worthy(&drain));
+        assert!(!failover_worthy(&sem));
+        assert!(!failover_worthy(&proto));
+        // context wrapping (as the client's retry loop adds) keeps the class
+        let wrapped = io.context("frame `get x 0`");
+        assert!(failover_worthy(&wrapped));
+    }
+
+    #[test]
+    fn candidates_follow_placement_for_named_and_map_order_for_nameless() {
+        let r = RouterClient::connect(three_node_map());
+        let named = r.candidates(Some("traffic_ttd"));
+        let placed: Vec<String> = r
+            .map()
+            .replicas_for("traffic_ttd")
+            .iter()
+            .map(|n| n.id.clone())
+            .collect();
+        assert_eq!(named.iter().map(|(id, _)| id.clone()).collect::<Vec<_>>(), placed);
+        let nameless = r.candidates(None);
+        assert_eq!(
+            nameless.iter().map(|(id, _)| id.clone()).collect::<Vec<_>>(),
+            vec!["a", "b", "c"]
+        );
+    }
+}

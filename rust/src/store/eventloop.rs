@@ -149,6 +149,7 @@ pub fn serve_store_eventloop(
         cfg.limits.clone(),
         cfg.faults.clone(),
     ));
+    server.set_epoch(cfg.cluster_epoch);
     let result = run(server.clone(), listener, &cfg);
     if let Ok(server) = Arc::try_unwrap(server) {
         server.shutdown();
@@ -412,6 +413,7 @@ mod imp {
                         accept_ready(
                             &listener,
                             &poller,
+                            &server,
                             cfg,
                             &mut conns,
                             &mut next_token,
@@ -497,10 +499,12 @@ mod imp {
         Ok(())
     }
 
-    /// Accept until `WouldBlock`, enforcing the open-connection cap.
+    /// Accept until `WouldBlock`, enforcing drain refusal and the
+    /// open-connection cap.
     fn accept_ready(
         listener: &TcpListener,
         poller: &sys::Poller,
+        server: &ArtifactServer,
         cfg: &StoreServeConfig,
         conns: &mut HashMap<u64, Conn>,
         next_token: &mut u64,
@@ -513,6 +517,14 @@ mod imp {
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                 Err(_) => break,
             };
+            if server.is_draining() {
+                // parity with the threaded front-end: a connection
+                // accepted while draining gets the typed refusal before
+                // close, instead of a silent drop
+                let mut s = stream;
+                let _ = s.write_all(super::super::server::DRAIN_REFUSAL_LINE);
+                continue;
+            }
             let cap = cfg.limits.max_open_conns;
             if cap > 0 && conns.len() >= cap {
                 // refuse over-cap connections explicitly (one short line
@@ -812,7 +824,14 @@ mod imp {
                 Ok(Poller { epfd })
             }
 
-            fn ctl(&self, op: c_int, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            fn ctl(
+                &self,
+                op: c_int,
+                fd: RawFd,
+                token: u64,
+                read: bool,
+                write: bool,
+            ) -> io::Result<()> {
                 let mut ev = EpollEvent {
                     events: (if read { EPOLLIN } else { 0 })
                         | (if write { EPOLLOUT } else { 0 })

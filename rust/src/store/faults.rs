@@ -26,10 +26,17 @@
 //!
 //! All probabilities default to 0, so `TCZ_FAULT="seed=7"` is a valid
 //! (inert) spec useful for threading a seed into the test suite.
+//!
+//! Beyond probabilistic injection, a plane carries a **kill switch**
+//! ([`FaultPlane::kill`]/[`FaultPlane::revive`]): while killed, every
+//! wrapped socket op fails immediately. Cluster chaos tests give each
+//! node its own plane, so flipping one switch blackholes exactly that
+//! node's traffic (its files stay intact — the node is unreachable,
+//! not wiped) and `revive` brings it back without restarting anything.
 
 use std::io::{self, Read, Write};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -138,6 +145,8 @@ pub struct FaultCounters {
     pub short_reads: AtomicU64,
     pub disconnects: AtomicU64,
     pub stalls: AtomicU64,
+    /// Socket ops refused because the plane's kill switch was on.
+    pub kill_refusals: AtomicU64,
 }
 
 // distinct op kinds mixed into the decision hash so e.g. the read-error
@@ -160,6 +169,7 @@ pub struct FaultPlane {
     spec: FaultSpec,
     ops: AtomicU64,
     counters: FaultCounters,
+    killed: AtomicBool,
 }
 
 impl FaultPlane {
@@ -168,6 +178,7 @@ impl FaultPlane {
             spec,
             ops: AtomicU64::new(0),
             counters: FaultCounters::default(),
+            killed: AtomicBool::new(false),
         }
     }
 
@@ -190,6 +201,24 @@ impl FaultPlane {
 
     pub fn counters(&self) -> &FaultCounters {
         &self.counters
+    }
+
+    /// Blackhole the node: every wrapped socket op fails until [`revive`].
+    /// Files are untouched — a killed node looks unreachable, not wiped.
+    ///
+    /// [`revive`]: FaultPlane::revive
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::SeqCst);
+    }
+
+    /// Clear the kill switch; subsequent socket ops flow normally again.
+    pub fn revive(&self) {
+        self.killed.store(false, Ordering::SeqCst);
+    }
+
+    /// Whether the kill switch is currently on.
+    pub fn is_killed(&self) -> bool {
+        self.killed.load(Ordering::SeqCst)
     }
 
     /// Deterministic roll in [0,1) for op kind `kind` at the next op index.
@@ -265,6 +294,10 @@ impl<S> FaultStream<S> {
 impl<S: Read> Read for FaultStream<S> {
     fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
         let p = &self.plane;
+        if p.is_killed() {
+            p.counters.kill_refusals.fetch_add(1, Ordering::Relaxed);
+            return Err(io::Error::new(io::ErrorKind::ConnectionReset, "node killed"));
+        }
         let op = p.next_op();
         if p.roll(op, K_STALL_R) < p.spec.stall {
             p.counters.stalls.fetch_add(1, Ordering::Relaxed);
@@ -289,6 +322,10 @@ impl<S: Read> Read for FaultStream<S> {
 impl<S: Write> Write for FaultStream<S> {
     fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
         let p = &self.plane;
+        if p.is_killed() {
+            p.counters.kill_refusals.fetch_add(1, Ordering::Relaxed);
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "node killed"));
+        }
         let op = p.next_op();
         if p.roll(op, K_STALL_W) < p.spec.stall {
             p.counters.stalls.fetch_add(1, Ordering::Relaxed);
@@ -418,6 +455,36 @@ mod tests {
         let mut s = plane.wrap(Vec::new());
         assert!(s.write(b"x").is_err());
         assert_eq!(plane.counters().net_errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn kill_switch_blackholes_socket_ops_and_revive_restores() {
+        use std::io::Cursor;
+        let plane = Arc::new(FaultPlane::new(FaultSpec::parse("seed=5").unwrap()));
+        assert!(!plane.is_killed());
+        let mut s = plane.wrap(Cursor::new(b"hello".to_vec()));
+        let mut buf = [0u8; 16];
+        assert_eq!(s.read(&mut buf).unwrap(), 5, "inert plane passes reads through");
+
+        plane.kill();
+        assert!(plane.is_killed());
+        let err = s.read(&mut buf).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        let mut w = plane.wrap(Vec::new());
+        let err = w.write(b"x").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+        assert_eq!(plane.counters().kill_refusals.load(Ordering::Relaxed), 2);
+
+        plane.revive();
+        assert!(!plane.is_killed());
+        assert!(w.write(b"x").is_ok(), "revive restores traffic");
+        // store-file reads are unaffected by the kill switch (blackhole, not wipe)
+        let dir = std::env::temp_dir().join("tcz_faults_kill_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f.bin");
+        std::fs::write(&path, b"data").unwrap();
+        plane.kill();
+        assert_eq!(plane.read_store_file(&path).unwrap(), b"data");
     }
 
     #[test]

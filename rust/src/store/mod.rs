@@ -41,6 +41,14 @@
 //! * [`faults::FaultPlane`] — an opt-in deterministic fault-injection
 //!   layer over store file reads and serving sockets, used by the
 //!   robustness test suite and the degraded-mode bench section.
+//! * [`cluster`] — replicated multi-node mode: a static membership map
+//!   with rendezvous (highest-random-weight) placement of artifacts onto
+//!   N nodes at R-way replication, plus [`cluster::RouterClient`] — the
+//!   cluster-aware client with per-node circuit breakers, failover on
+//!   retryable errors, and optional hedged reads. Nodes repair
+//!   quarantined or missing artifacts from healthy replicas over the v3
+//!   wire (`fetch`/`repair` verbs) through
+//!   [`ArtifactStore::install_bytes`].
 //!
 //! Failure handling: a container that fails to parse on load or hot
 //! reload is **quarantined** — the store keeps serving the last-good
@@ -56,6 +64,7 @@
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod client;
+pub mod cluster;
 pub mod eventloop;
 pub mod faults;
 pub mod planner;
@@ -279,7 +288,8 @@ fn recovery_scan_with_reap_age(
                     }
                     Err(e) => {
                         eprintln!("tcz store: quarantining {}: {e:#}", path.display());
-                        quarantine.insert(stem.to_string(), format!("torn-tail repair failed: {e:#}"));
+                        quarantine
+                            .insert(stem.to_string(), format!("torn-tail repair failed: {e:#}"));
                     }
                 }
             }
@@ -585,6 +595,49 @@ impl ArtifactStore {
             ))),
         }
     }
+
+    /// The raw container bytes of `<dir>/<name>.tcz`, verbatim — the
+    /// source side of replica repair. Goes through the fault plane like
+    /// any other store file read, so chaos schedules cover it.
+    pub fn read_artifact_bytes(&self, name: &str) -> Result<Vec<u8>> {
+        validate_name(name)?;
+        let path = self.dir.join(format!("{name}.tcz"));
+        match &self.faults {
+            Some(plane) => plane.read_store_file(&path),
+            None => std::fs::read(&path).with_context(|| format!("read {}", path.display())),
+        }
+    }
+
+    /// Install container bytes as `<dir>/<name>.tcz` atomically — the
+    /// target side of replica repair. The bytes are parsed **before**
+    /// anything touches the directory (a repair must never replace a file
+    /// with garbage), written to a `<name>.tcz.tmp.<pid>` temp, renamed
+    /// over the artifact, then opened through the normal revalidating
+    /// path — so the generation bumps and any standing quarantine heals
+    /// exactly like a hot reload.
+    pub fn install_bytes(&self, name: &str, bytes: &[u8]) -> Result<Opened> {
+        validate_name(name)?;
+        container::artifact_from_bytes(bytes)
+            .with_context(|| format!("install `{name}`: bytes are not a valid container"))?;
+        let tmp = self
+            .dir
+            .join(format!("{name}.tcz.tmp.{}", std::process::id()));
+        let path = self.dir.join(format!("{name}.tcz"));
+        std::fs::write(&tmp, bytes).with_context(|| format!("write {}", tmp.display()))?;
+        if let Err(e) = std::fs::rename(&tmp, &path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(anyhow::Error::new(e)
+                .context(format!("rename {} -> {}", tmp.display(), path.display())));
+        }
+        let out = self.open(name)?;
+        // `open` heals the quarantine on its fresh-load path; when the
+        // installed bytes are stamp-identical to the resident generation
+        // (same length/head, mtime inside fs granularity) it takes the
+        // resident fast path instead — the disk content was parsed above
+        // and is known good, so the quarantine still clears
+        lock_unpoisoned(&self.inner).quarantine.remove(name);
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -887,6 +940,40 @@ mod tests {
         let o = store.open("f").unwrap();
         assert_eq!(o.entry.meta.shape, vec![5, 4, 3]);
         assert_eq!(store.health("f"), Health::Ok);
+    }
+
+    #[test]
+    fn install_bytes_repairs_a_quarantined_artifact() {
+        let dir = store_dir("install_bytes");
+        save(&dir, "r", "ttd", &[5, 4, 3], 60);
+        let good = std::fs::read(dir.join("r.tcz")).unwrap();
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        let o1 = store.open("r").unwrap();
+        let baseline = o1.entry.artifact.lock().unwrap().decode_all();
+        // corrupt on disk -> reload quarantines, serves last-good
+        std::fs::write(dir.join("r.tcz"), b"XXXX garbage, not a container").unwrap();
+        store.open("r").unwrap();
+        assert_eq!(store.health("r"), Health::Quarantined);
+        // garbage bytes must be rejected before touching the directory
+        assert!(store.install_bytes("r", b"still not a container").is_err());
+        assert!(store.install_bytes("../evil", &good).is_err());
+        assert_eq!(store.health("r"), Health::Quarantined);
+        // installing the healthy replica's bytes heals + bumps generation
+        let o2 = store.install_bytes("r", &good).unwrap();
+        assert_eq!(store.health("r"), Health::Ok);
+        assert!(o2.reloaded);
+        assert_eq!(o2.entry.generation, 1);
+        let repaired = o2.entry.artifact.lock().unwrap().decode_all();
+        assert_eq!(baseline.data(), repaired.data(), "repair must be bit-exact");
+        // fetch side: the bytes served to peers are the installed bytes
+        assert_eq!(store.read_artifact_bytes("r").unwrap(), good);
+        // no temp left behind
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().contains(".tcz.tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files must not survive install");
     }
 
     #[test]

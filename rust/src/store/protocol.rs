@@ -40,6 +40,10 @@
 //! 6 get        u16 name_len, name, u16 ndims, ndims x u64 coord
 //! 7 batch-get  u16 name_len, name, u32 count, u16 ndims,
 //!              count*ndims x u64 coord (flat, row-major)
+//! 8 ping       (empty)
+//! 9 cluster-stat (empty)
+//! 10 fetch     u16 name_len, name
+//! 11 repair    u16 name_len, name, u16 count, count x (u16 len, addr)
 //! ```
 //!
 //! Reply bodies by tag:
@@ -58,6 +62,10 @@
 //! 5 err     u8 class (0 server / 1 overloaded / 2 deadline),
 //!           u32 msg_len, msg
 //! 6 hello   u8 server_version
+//! 7 pong    (empty)
+//! 8 cluster-stat  u64 epoch, u64 artifacts, u64 resident, u64 shed,
+//!                 u64 timeouts, u64 quarantined, u8 draining
+//! 9 bytes   u32 len, len x u8 (raw artifact container bytes)
 //! ```
 //!
 //! Values travel as raw IEEE-754 bits, so v3 replies are bit-identical to
@@ -94,6 +102,10 @@ const T_STAT: u8 = 4;
 const T_RELOAD: u8 = 5;
 const T_GET: u8 = 6;
 const T_BATCH_GET: u8 = 7;
+const T_PING: u8 = 8;
+const T_CLUSTER_STAT: u8 = 9;
+const T_FETCH: u8 = 10;
+const T_REPAIR: u8 = 11;
 
 // reply tags
 const R_NAMES: u8 = 1;
@@ -102,6 +114,9 @@ const R_VALUE: u8 = 3;
 const R_VALUES: u8 = 4;
 const R_ERR: u8 = 5;
 const R_HELLO: u8 = 6;
+const R_PONG: u8 = 7;
+const R_CLUSTER_STAT: u8 = 8;
+const R_BYTES: u8 = 9;
 
 /// One serving request, independent of wire encoding.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -123,18 +138,29 @@ pub enum Request {
         name: String,
         coords: Vec<Vec<usize>>,
     },
+    /// O(1) liveness probe; never touches the artifact LRU or tile cache.
+    Ping,
+    /// Cheap node-level counters for cluster routers and operators.
+    ClusterStat,
+    /// Raw artifact container bytes (replica repair source side).
+    Fetch { name: String },
+    /// Re-fetch a quarantined/missing artifact from one of `sources`
+    /// (peer addresses) and install it atomically (repair target side).
+    Repair { name: String, sources: Vec<String> },
 }
 
 impl Request {
     /// The artifact name this request addresses, if any.
     pub fn name(&self) -> Option<&str> {
         match self {
-            Request::Methods | Request::List => None,
+            Request::Methods | Request::List | Request::Ping | Request::ClusterStat => None,
             Request::Open { name }
             | Request::Stat { name }
             | Request::Reload { name }
             | Request::Get { name, .. }
-            | Request::BatchGet { name, .. } => Some(name),
+            | Request::BatchGet { name, .. }
+            | Request::Fetch { name }
+            | Request::Repair { name, .. } => Some(name),
         }
     }
 }
@@ -231,17 +257,38 @@ impl MetaReply {
     }
 }
 
+/// Node-level counters carried by `cluster-stat` replies. `epoch` is the
+/// cluster-map epoch the node was started with (0 when standalone);
+/// `artifacts` counts `.tcz` files in the store directory, `resident`
+/// the subset currently cached in the artifact LRU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterStatReply {
+    pub epoch: u64,
+    pub artifacts: u64,
+    pub resident: u64,
+    pub shed: u64,
+    pub timeouts: u64,
+    pub quarantined: u64,
+    pub draining: bool,
+}
+
 /// One serving reply, independent of wire encoding.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Reply {
     /// `methods` / `list`.
     Names(Vec<String>),
-    /// `open` / `stat` / `reload`.
+    /// `open` / `stat` / `reload` / `repair`.
     Meta(MetaReply),
     /// `get`.
     Value(f32),
     /// `batch-get`, in request order.
     Values(Vec<f32>),
+    /// `ping`.
+    Pong,
+    /// `cluster-stat`.
+    ClusterStat(ClusterStatReply),
+    /// `fetch`: the artifact's container bytes, verbatim from disk.
+    Bytes(Vec<u8>),
     /// Any failed request; the message is the v2 `ERR` line body.
     Err(ErrClass, String),
 }
@@ -325,6 +372,33 @@ pub fn parse_v2_request(line: &str) -> Result<Request> {
                 coords: parse_coord_block(block.trim())?,
             }
         }
+        "ping" => Request::Ping,
+        "cluster-stat" => Request::ClusterStat,
+        "fetch" => {
+            if rest.is_empty() {
+                bail!("usage: fetch <artifact>");
+            }
+            Request::Fetch {
+                name: rest.to_string(),
+            }
+        }
+        "repair" => {
+            if rest.is_empty() {
+                bail!("usage: repair <artifact> [addr,addr,...]");
+            }
+            let (name, srcs) = match rest.split_once(' ') {
+                Some((n, s)) => (n, s.trim()),
+                None => (rest, ""),
+            };
+            Request::Repair {
+                name: name.to_string(),
+                sources: srcs
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.to_string())
+                    .collect(),
+            }
+        }
         other => bail!("unknown command `{other}`"),
     })
 }
@@ -355,6 +429,23 @@ pub fn write_v2_request(req: &Request, out: &mut String) {
                     out.push(';');
                 }
                 push_coords(out, c);
+            }
+        }
+        Request::Ping => out.push_str("ping"),
+        Request::ClusterStat => out.push_str("cluster-stat"),
+        Request::Fetch { name } => {
+            let _ = write!(out, "fetch {name}");
+        }
+        Request::Repair { name, sources } => {
+            let _ = write!(out, "repair {name}");
+            if !sources.is_empty() {
+                out.push(' ');
+                for (i, s) in sources.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(s);
+                }
             }
         }
     }
@@ -436,11 +527,72 @@ pub fn write_v2_reply(reply: &Reply, out: &mut String) {
                 let _ = write!(out, "{v}");
             }
         }
+        Reply::Pong => out.push_str("OK pong"),
+        Reply::ClusterStat(s) => {
+            let _ = write!(
+                out,
+                "OK epoch={} artifacts={} resident={} shed={} timeouts={} \
+                 quarantined={} draining={}",
+                s.epoch, s.artifacts, s.resident, s.shed, s.timeouts, s.quarantined, s.draining
+            );
+        }
+        Reply::Bytes(bytes) => {
+            out.push_str("OK ");
+            out.reserve(bytes.len() * 2);
+            for b in bytes {
+                let _ = write!(out, "{b:02x}");
+            }
+        }
         Reply::Err(_, msg) => {
             out.push_str("ERR ");
             out.push_str(msg);
         }
     }
+}
+
+/// Parse the v2 `cluster-stat` reply body (`epoch=… artifacts=…` fields).
+/// Unknown fields are ignored (forward compatibility).
+fn parse_v2_cluster_stat(body: &str) -> Result<ClusterStatReply> {
+    let mut s = ClusterStatReply {
+        epoch: 0,
+        artifacts: 0,
+        resident: 0,
+        shed: 0,
+        timeouts: 0,
+        quarantined: 0,
+        draining: false,
+    };
+    for field in body.split_whitespace() {
+        let (k, v) = field
+            .split_once('=')
+            .with_context(|| format!("malformed cluster-stat field `{field}`"))?;
+        match k {
+            "epoch" => s.epoch = v.parse().context("bad epoch")?,
+            "artifacts" => s.artifacts = v.parse().context("bad artifacts")?,
+            "resident" => s.resident = v.parse().context("bad resident")?,
+            "shed" => s.shed = v.parse().context("bad shed")?,
+            "timeouts" => s.timeouts = v.parse().context("bad timeouts")?,
+            "quarantined" => s.quarantined = v.parse().context("bad quarantined")?,
+            "draining" => s.draining = v == "true",
+            _ => {}
+        }
+    }
+    Ok(s)
+}
+
+fn parse_v2_hex(body: &str) -> Result<Vec<u8>> {
+    let body = body.trim();
+    if body.len() % 2 != 0 {
+        bail!("odd-length hex body");
+    }
+    let mut out = Vec::with_capacity(body.len() / 2);
+    let bytes = body.as_bytes();
+    for pair in bytes.chunks_exact(2) {
+        let hi = (pair[0] as char).to_digit(16).context("bad hex digit")?;
+        let lo = (pair[1] as char).to_digit(16).context("bad hex digit")?;
+        out.push((hi * 16 + lo) as u8);
+    }
+    Ok(out)
 }
 
 /// Parse a v2 meta reply body (`method=… shape=…` fields) into the typed
@@ -534,9 +686,18 @@ pub fn parse_v2_reply(req: &Request, line: &str) -> Result<Reply> {
                 .map(|s| s.to_string())
                 .collect(),
         ),
-        Request::Open { .. } | Request::Stat { .. } | Request::Reload { .. } => {
-            Reply::Meta(parse_v2_meta(body)?)
+        Request::Open { .. }
+        | Request::Stat { .. }
+        | Request::Reload { .. }
+        | Request::Repair { .. } => Reply::Meta(parse_v2_meta(body)?),
+        Request::Ping => {
+            if body != "pong" {
+                bail!("malformed ping reply `{body}`");
+            }
+            Reply::Pong
         }
+        Request::ClusterStat => Reply::ClusterStat(parse_v2_cluster_stat(body)?),
+        Request::Fetch { .. } => Reply::Bytes(parse_v2_hex(body)?),
         Request::Get { .. } => Reply::Value(
             body.parse()
                 .with_context(|| format!("bad value `{body}`"))?,
@@ -662,6 +823,10 @@ pub fn encode_v3_request(id: u64, req: &Request, out: &mut Vec<u8>) {
         Request::Reload { name } => (T_RELOAD, Some(name)),
         Request::Get { name, .. } => (T_GET, Some(name)),
         Request::BatchGet { name, .. } => (T_BATCH_GET, Some(name)),
+        Request::Ping => (T_PING, None),
+        Request::ClusterStat => (T_CLUSTER_STAT, None),
+        Request::Fetch { name } => (T_FETCH, Some(name)),
+        Request::Repair { name, .. } => (T_REPAIR, Some(name)),
     };
     let at = start_frame(out, id, tag);
     if let Some(name) = name {
@@ -683,6 +848,12 @@ pub fn encode_v3_request(id: u64, req: &Request, out: &mut Vec<u8>) {
                 for &x in c {
                     put_u64(out, x as u64);
                 }
+            }
+        }
+        Request::Repair { sources, .. } => {
+            put_u16(out, sources.len() as u16);
+            for s in sources {
+                put_str(out, s);
             }
         }
         _ => {}
@@ -777,6 +948,22 @@ pub fn try_decode_v3_request(buf: &[u8]) -> Result<Option<(usize, u64, Request)>
             }
             Request::BatchGet { name, coords }
         }
+        T_PING => Request::Ping,
+        T_CLUSTER_STAT => Request::ClusterStat,
+        T_FETCH => Request::Fetch {
+            name: rd.str(MAX_NAME_LEN)?,
+        },
+        T_REPAIR => {
+            let name = rd.str(MAX_NAME_LEN)?;
+            let count = rd.u16()? as usize;
+            // each source costs at least its 2-byte length prefix
+            rd.need(count.checked_mul(2).context("repair count overflow")?)?;
+            let mut sources = Vec::with_capacity(count);
+            for _ in 0..count {
+                sources.push(rd.str(MAX_NAME_LEN)?);
+            }
+            Request::Repair { name, sources }
+        }
         other => bail!("unknown v3 request tag {other}"),
     };
     rd.done()?;
@@ -850,6 +1037,28 @@ pub fn encode_v3_reply(id: u64, reply: &Reply, out: &mut Vec<u8>) {
             for v in vals {
                 put_u32(out, v.to_bits());
             }
+            finish_frame(out, at);
+        }
+        Reply::Pong => {
+            let at = start_frame(out, id, R_PONG);
+            finish_frame(out, at);
+        }
+        Reply::ClusterStat(s) => {
+            let at = start_frame(out, id, R_CLUSTER_STAT);
+            put_u64(out, s.epoch);
+            put_u64(out, s.artifacts);
+            put_u64(out, s.resident);
+            put_u64(out, s.shed);
+            put_u64(out, s.timeouts);
+            put_u64(out, s.quarantined);
+            out.push(s.draining as u8);
+            finish_frame(out, at);
+        }
+        Reply::Bytes(bytes) => {
+            let at = start_frame(out, id, R_BYTES);
+            let n = bytes.len().min(MAX_V3_FRAME / 2);
+            put_u32(out, n as u32);
+            out.extend_from_slice(&bytes[..n]);
             finish_frame(out, at);
         }
         Reply::Err(class, msg) => {
@@ -946,6 +1155,23 @@ pub fn try_decode_v3_reply(buf: &[u8]) -> Result<Option<(usize, u64, V3Reply)>> 
             }
             Reply::Values(vals)
         }
+        R_PONG => Reply::Pong,
+        R_CLUSTER_STAT => Reply::ClusterStat(ClusterStatReply {
+            epoch: rd.u64()?,
+            artifacts: rd.u64()?,
+            resident: rd.u64()?,
+            shed: rd.u64()?,
+            timeouts: rd.u64()?,
+            quarantined: rd.u64()?,
+            draining: rd.u8()? != 0,
+        }),
+        R_BYTES => {
+            let n = rd.u32()? as usize;
+            rd.need(n)?;
+            let bytes = rd.b[rd.p..rd.p + n].to_vec();
+            rd.p += n;
+            Reply::Bytes(bytes)
+        }
         R_ERR => {
             let class = ErrClass::from_code(rd.u8()?)?;
             let n = rd.u32()? as usize;
@@ -1010,6 +1236,17 @@ mod tests {
             name: "empty".into(),
             coords: vec![],
         });
+        roundtrip_req(Request::Ping);
+        roundtrip_req(Request::ClusterStat);
+        roundtrip_req(Request::Fetch { name: "g.tcz".into() });
+        roundtrip_req(Request::Repair {
+            name: "g.tcz".into(),
+            sources: vec!["127.0.0.1:7070".into(), "127.0.0.1:7071".into()],
+        });
+        roundtrip_req(Request::Repair {
+            name: "g.tcz".into(),
+            sources: vec![],
+        });
     }
 
     #[test]
@@ -1019,6 +1256,18 @@ mod tests {
         roundtrip_reply(Reply::Value(-0.0));
         roundtrip_reply(Reply::Value(f32::NAN)); // NaN bits must survive
         roundtrip_reply(Reply::Values(vec![1.5, -2.25, f32::MIN_POSITIVE]));
+        roundtrip_reply(Reply::Pong);
+        roundtrip_reply(Reply::ClusterStat(ClusterStatReply {
+            epoch: 7,
+            artifacts: 4,
+            resident: 2,
+            shed: 1,
+            timeouts: 0,
+            quarantined: 1,
+            draining: true,
+        }));
+        roundtrip_reply(Reply::Bytes(vec![0x93, 0x00, 0xff, 0x41]));
+        roundtrip_reply(Reply::Bytes(vec![]));
         roundtrip_reply(Reply::Err(ErrClass::Overloaded, "overloaded: 9".into()));
         roundtrip_reply(Reply::Err(ErrClass::Deadline, "deadline: 1ms".into()));
         roundtrip_reply(Reply::Err(ErrClass::Server, "unknown artifact".into()));
@@ -1171,6 +1420,23 @@ mod tests {
                     coords: vec![vec![1, 2], vec![3, 4]],
                 },
             ),
+            ("ping", Request::Ping),
+            ("cluster-stat", Request::ClusterStat),
+            ("fetch abc", Request::Fetch { name: "abc".into() }),
+            (
+                "repair abc 10.0.0.1:7070,10.0.0.2:7070",
+                Request::Repair {
+                    name: "abc".into(),
+                    sources: vec!["10.0.0.1:7070".into(), "10.0.0.2:7070".into()],
+                },
+            ),
+            (
+                "repair abc",
+                Request::Repair {
+                    name: "abc".into(),
+                    sources: vec![],
+                },
+            ),
         ];
         for (line, want) in cases {
             assert_eq!(parse_v2_request(line).unwrap(), want, "{line}");
@@ -1220,6 +1486,42 @@ mod tests {
         )
         .unwrap();
         assert_eq!(back, Reply::Meta(meta));
+    }
+
+    #[test]
+    fn v2_cluster_verbs_roundtrip() {
+        let mut out = String::new();
+        write_v2_reply(&Reply::Pong, &mut out);
+        assert_eq!(out, "OK pong");
+        assert_eq!(parse_v2_reply(&Request::Ping, &out).unwrap(), Reply::Pong);
+
+        out.clear();
+        let stat = Reply::ClusterStat(ClusterStatReply {
+            epoch: 3,
+            artifacts: 4,
+            resident: 1,
+            shed: 2,
+            timeouts: 0,
+            quarantined: 1,
+            draining: false,
+        });
+        write_v2_reply(&stat, &mut out);
+        assert_eq!(
+            out,
+            "OK epoch=3 artifacts=4 resident=1 shed=2 timeouts=0 \
+             quarantined=1 draining=false"
+        );
+        assert_eq!(parse_v2_reply(&Request::ClusterStat, &out).unwrap(), stat);
+
+        out.clear();
+        let bytes = Reply::Bytes(vec![0x00, 0x93, 0xab, 0x10]);
+        write_v2_reply(&bytes, &mut out);
+        assert_eq!(out, "OK 0093ab10");
+        let req = Request::Fetch { name: "x".into() };
+        assert_eq!(parse_v2_reply(&req, &out).unwrap(), bytes);
+        assert!(parse_v2_reply(&req, "OK 009").is_err());
+        assert!(parse_v2_reply(&req, "OK 00zz").is_err());
+        assert!(parse_v2_reply(&Request::Ping, "OK nope").is_err());
     }
 
     #[test]

@@ -36,6 +36,13 @@
 //!                                     revalidation against the file on disk
 //! get <artifact> <i,j,k>           -> OK <value>
 //! batch-get <artifact> <i,j,k;...> -> OK <v1,v2,...>            values in request order
+//! ping                             -> OK pong                   O(1), never touches caches
+//! cluster-stat                     -> OK epoch=<e> artifacts=<n> resident=<n> shed=<n>
+//!                                     timeouts=<n> quarantined=<n> draining=<bool>
+//! fetch <artifact>                 -> OK <hex bytes>            raw container (repair source)
+//! repair <artifact> <addr,...>     -> same reply as open; re-fetches the artifact from
+//!                                     the first healthy source replica and installs it
+//!                                     atomically (temp+rename, generation bump)
 //! ```
 //!
 //! A malformed frame (unknown command, bad coordinates, unknown artifact)
@@ -52,6 +59,7 @@
 //! `get`/`batch-get` on a cached shard never stat the filesystem: the
 //! reload notification path is an explicit `open`/`reload` frame.
 
+use super::client::{ClientConfig, ServeClient, WireVersion};
 use super::eventloop::EventLoopConfig;
 use super::faults::FaultPlane;
 use super::lock_unpoisoned;
@@ -132,6 +140,9 @@ pub struct StoreServeConfig {
     /// Event-loop front-end knobs (outbound buffer cap, pipeline depth,
     /// executor threads); ignored by the thread-per-connection front-end.
     pub eventloop: EventLoopConfig,
+    /// Cluster-map epoch reported by the `cluster-stat` verb (0 =
+    /// standalone / no cluster map installed).
+    pub cluster_epoch: u64,
 }
 
 impl Default for StoreServeConfig {
@@ -145,6 +156,7 @@ impl Default for StoreServeConfig {
             limits: ServeLimits::default(),
             faults: None,
             eventloop: EventLoopConfig::default(),
+            cluster_epoch: 0,
         }
     }
 }
@@ -169,6 +181,8 @@ pub struct ArtifactServer {
     /// Set by [`ArtifactServer::drain`]: new decode requests are refused,
     /// in-flight ones finish.
     draining: AtomicBool,
+    /// Cluster-map epoch reported by `cluster-stat` (0 = standalone).
+    epoch: AtomicU64,
     faults: Option<Arc<FaultPlane>>,
 }
 
@@ -227,8 +241,19 @@ impl ArtifactServer {
             shed: AtomicU64::new(0),
             deadline_timeouts: AtomicU64::new(0),
             draining: AtomicBool::new(false),
+            epoch: AtomicU64::new(0),
             faults,
         }
+    }
+
+    /// Install the cluster-map epoch reported by `cluster-stat`.
+    pub fn set_epoch(&self, epoch: u64) {
+        self.epoch.store(epoch, Ordering::Release);
+    }
+
+    /// The cluster-map epoch this node was started with (0 = standalone).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
     }
 
     /// The backing store (test/introspection hook).
@@ -423,12 +448,87 @@ impl ArtifactServer {
     /// prediction (neural methods go to XLA when enabled).
     pub fn stat(&self, name: &str) -> Result<(ArtifactMeta, bool)> {
         let meta = self.store.stat(name)?;
-        // error-bounded artifacts never take the XLA path: corrections
-        // must be applied after model decode, so they serve via shards
-        let bulk = !(self.allow_xla
-            && meta.max_error.is_none()
-            && matches!(meta.method, "tensorcodec" | "neukron"));
+        let bulk = self.bulk_static(&meta);
         Ok((meta, bulk))
+    }
+
+    /// Static prediction of the `bulk` flag without starting a shard:
+    /// error-bounded artifacts never take the XLA path (corrections must
+    /// be applied after model decode, so they serve via shards).
+    fn bulk_static(&self, meta: &ArtifactMeta) -> bool {
+        !(self.allow_xla
+            && meta.max_error.is_none()
+            && matches!(meta.method, "tensorcodec" | "neukron"))
+    }
+
+    /// Raw container bytes of `name`, verbatim from disk — the source
+    /// side of replica repair. Refuses while quarantined (a repair must
+    /// never propagate a corrupt replica) and when the container exceeds
+    /// the v3 fetch-frame budget.
+    pub fn fetch_bytes(&self, name: &str) -> Result<Vec<u8>> {
+        if matches!(self.store.health(name), Health::Quarantined) {
+            bail!("artifact `{name}` is quarantined here; fetch from a healthy replica");
+        }
+        let bytes = self.store.read_artifact_bytes(name)?;
+        if bytes.len() > protocol::MAX_V3_FRAME / 2 {
+            bail!(
+                "artifact `{name}` ({} bytes) exceeds the fetch frame limit",
+                bytes.len()
+            );
+        }
+        Ok(bytes)
+    }
+
+    /// The target side of replica repair: pull `name`'s container bytes
+    /// from the first healthy source replica (v3 wire) and install them
+    /// atomically — temp file + rename, then a revalidating open, so the
+    /// generation bumps and any quarantine on `name` heals exactly like a
+    /// hot reload. Returns the repaired `(meta, bulk, generation)`.
+    pub fn repair_from(&self, name: &str, sources: &[String]) -> Result<(ArtifactMeta, bool, u64)> {
+        if sources.is_empty() {
+            bail!("repair `{name}`: no source replicas given");
+        }
+        let mut last: Option<anyhow::Error> = None;
+        for src in sources {
+            match self.pull_and_install(name, src) {
+                Ok(out) => return Ok(out),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow::anyhow!("repair `{name}`: all sources failed")))
+    }
+
+    fn pull_and_install(&self, name: &str, src: &str) -> Result<(ArtifactMeta, bool, u64)> {
+        let cfg = ClientConfig {
+            wire: WireVersion::V3,
+            retries: 1,
+            ..ClientConfig::default()
+        };
+        let mut client = ServeClient::connect_with(src, cfg)
+            .with_context(|| format!("repair `{name}`: dial source {src}"))?;
+        let bytes = client
+            .fetch(name)
+            .with_context(|| format!("repair `{name}`: fetch from {src}"))?;
+        let opened = self
+            .store
+            .install_bytes(name, &bytes)
+            .with_context(|| format!("repair `{name}`: install bytes from {src}"))?;
+        let meta = opened.entry.meta.clone();
+        let generation = opened.entry.generation;
+        let bulk = self.bulk_static(&meta);
+        // retire any stale-generation shard so the next decode request
+        // rebuilds on the repaired bytes
+        let mut shards = lock_unpoisoned(&self.shards);
+        for gone in &opened.evicted {
+            shards.remove(gone);
+        }
+        let stale = shards
+            .get(name)
+            .is_some_and(|sh| !Arc::ptr_eq(sh.entry(), &opened.entry));
+        if stale {
+            shards.remove(name);
+        }
+        Ok((meta, bulk, generation))
     }
 
     /// Artifact names available in the store directory.
@@ -523,6 +623,26 @@ impl ArtifactServer {
             }
             Request::Get { name, coords } => Reply::Value(self.get(name, coords)?),
             Request::BatchGet { name, coords } => Reply::Values(self.batch_get(name, coords)?),
+            // O(1) liveness probe: answered from atomics alone — no
+            // admission gate, no store/LRU access, no tile cache — so
+            // router health probes can never cause an eviction
+            Request::Ping => Reply::Pong,
+            Request::ClusterStat => Reply::ClusterStat(protocol::ClusterStatReply {
+                epoch: self.epoch(),
+                artifacts: self.list()?.len() as u64,
+                resident: self.store.resident_count() as u64,
+                shed: self.shed_count(),
+                timeouts: self.deadline_timeout_count(),
+                quarantined: self.store.quarantined_count() as u64,
+                draining: self.is_draining(),
+            }),
+            Request::Fetch { name } => Reply::Bytes(self.fetch_bytes(name)?),
+            Request::Repair { name, sources } => {
+                let (meta, bulk, generation) = self.repair_from(name, sources)?;
+                let mut m = MetaReply::from_meta(&meta, bulk);
+                m.generation = Some(generation);
+                Reply::Meta(m)
+            }
         })
     }
 }
@@ -558,6 +678,12 @@ fn is_poll_timeout(e: &std::io::Error) -> bool {
 /// connection gets one `ERR` and is closed instead of buffering
 /// unboundedly.
 pub(crate) const MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// Typed one-line refusal written to connections accepted while the
+/// server is draining, then the connection closes. Both front-ends write
+/// these exact bytes (parity contract covered by the regression tests);
+/// `ErrClass::classify` maps the `draining` prefix to a Server error.
+pub(crate) const DRAIN_REFUSAL_LINE: &[u8] = b"ERR draining: server is shutting down\n";
 
 /// Per-connection wire mode, decided by sniffing the first byte: the v3
 /// preamble magic can never start a v2 text line, so one port serves
@@ -700,15 +826,35 @@ pub fn serve_store_listener(
     let store = ArtifactStore::with_faults(dir, cfg.cache_bytes, cfg.faults.clone())?;
     let server = Arc::new(ArtifactServer::with_options(
         store,
-        cfg.policy,
+        cfg.policy.clone(),
         cfg.allow_xla,
         cfg.tile_bytes,
         cfg.limits.clone(),
         cfg.faults.clone(),
     ));
+    server.set_epoch(cfg.cluster_epoch);
+    run_store_listener(server, listener, &cfg)
+}
+
+/// Accept loop of the threaded front-end over an existing server and
+/// listener (the threaded counterpart of [`super::eventloop::run`]).
+/// Exposed so tests can hold the `Arc<ArtifactServer>` and drive
+/// drain/stat from outside.
+pub fn run_store_listener(
+    server: Arc<ArtifactServer>,
+    listener: TcpListener,
+    cfg: &StoreServeConfig,
+) -> Result<()> {
     let mut workers = Vec::new();
     for conn in listener.incoming().take(cfg.max_conns) {
-        let stream = conn?;
+        let mut stream = conn?;
+        if server.is_draining() {
+            // connections accepted while draining get the typed refusal
+            // before close (same bytes as the event-loop front-end)
+            use std::io::Write as _;
+            let _ = stream.write_all(DRAIN_REFUSAL_LINE);
+            continue;
+        }
         let server = server.clone();
         let limits = cfg.limits.clone();
         let faults = cfg.faults.clone();

@@ -1,0 +1,533 @@
+//! Replicated-cluster integration suite over real TCP nodes: HRW
+//! placement through the `RouterClient`, failover under a mid-burst node
+//! kill (every request answered bit-exactly, none lost), repair of a
+//! quarantined replica from a healthy one, the O(1) `ping` probe on both
+//! wires and both front-ends, typed drain refusals on both front-ends,
+//! and idempotent pipeline replay across injected disconnects. The CI
+//! faults matrix runs this suite under pinned `TCZ_FAULT` seeds.
+
+use std::io::{BufRead, BufReader};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tensorcodec::codec::{self, Budget, CodecConfig};
+use tensorcodec::coordinator::batcher::BatchPolicy;
+use tensorcodec::harness::random_coords;
+use tensorcodec::store::client::{ClientConfig, ServeClient, WireVersion};
+use tensorcodec::store::cluster::{ClusterMap, RouterClient, RouterConfig};
+use tensorcodec::store::eventloop;
+use tensorcodec::store::faults::{FaultPlane, FaultSpec};
+use tensorcodec::store::protocol::{parse_v2_reply, ErrClass, Reply, Request};
+use tensorcodec::store::server::{
+    run_store_listener, serve_store_listener, ArtifactServer, ServeLimits, StoreServeConfig,
+};
+use tensorcodec::store::ArtifactStore;
+use tensorcodec::tensor::DenseTensor;
+
+/// (name, method, shape, budget): the four-method artifact set shared
+/// with the other serving suites.
+fn artifact_specs() -> Vec<(&'static str, &'static str, Vec<usize>, Budget)> {
+    vec![
+        ("traffic_ttd", "ttd", vec![8, 6, 5], Budget::Params(500)),
+        ("video_cpd", "cpd", vec![6, 5, 4], Budget::Params(120)),
+        ("climate_tkd", "tkd", vec![7, 5, 4], Budget::Params(250)),
+        ("stock_sz", "sz", vec![6, 4, 3], Budget::RelError(0.2)),
+    ]
+}
+
+/// The chaos seed: taken from the `TCZ_FAULT` env spec when present (the
+/// CI job pins `seed=1` and `seed=1337`), default 1.
+fn chaos_seed() -> u64 {
+    std::env::var("TCZ_FAULT")
+        .ok()
+        .and_then(|s| FaultSpec::parse(&s).ok())
+        .map(|s| s.seed)
+        .unwrap_or(1)
+}
+
+fn build_store_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tcz_cluster_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    for (i, (name, method, shape, budget)) in artifact_specs().into_iter().enumerate() {
+        let t = DenseTensor::random_uniform(&shape, 100 + i as u64);
+        let c = codec::by_name(method).unwrap();
+        let a = c.compress(&t, &budget, &CodecConfig::default()).unwrap();
+        codec::save_artifact(&dir.join(format!("{name}.tcz")), a.as_ref()).unwrap();
+    }
+    dir
+}
+
+/// A replica's directory: a byte-identical copy of every artifact in
+/// `src` (replicas in this suite host identical sets).
+fn clone_store_dir(src: &Path, tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tcz_cluster_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    for (name, ..) in artifact_specs() {
+        let file = format!("{name}.tcz");
+        std::fs::copy(src.join(&file), dir.join(&file)).unwrap();
+    }
+    dir
+}
+
+fn small_policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 512,
+    }
+}
+
+fn reference_values(dir: &Path, name: &str, coords: &[Vec<usize>]) -> Vec<f32> {
+    let mut artifact = codec::load_artifact(&dir.join(format!("{name}.tcz"))).unwrap();
+    coords.iter().map(|c| artifact.get(c)).collect()
+}
+
+fn node_limits() -> ServeLimits {
+    ServeLimits {
+        request_timeout: Some(Duration::from_secs(5)),
+        max_inflight: 0,
+        io_timeout: Some(Duration::from_millis(100)),
+        idle_timeout: Some(Duration::from_secs(30)),
+        max_open_conns: 0,
+    }
+}
+
+/// One live cluster node: an event-loop front-end over its own store
+/// directory and fault plane (whose kill switch black-holes the node).
+struct Node {
+    id: &'static str,
+    addr: String,
+    dir: PathBuf,
+    server: Arc<ArtifactServer>,
+    plane: Arc<FaultPlane>,
+    handle: std::thread::JoinHandle<anyhow::Result<()>>,
+}
+
+/// Spawn an event-loop node over `dir` with the given fault spec. The
+/// node runs until [`Node::server`]'s drain flag is set and its last
+/// connection closes.
+fn spawn_node(id: &'static str, dir: &Path, epoch: u64, spec: FaultSpec) -> Node {
+    let plane = Arc::new(FaultPlane::new(spec));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let store = ArtifactStore::with_faults(dir, usize::MAX, Some(plane.clone())).unwrap();
+    let server = Arc::new(ArtifactServer::with_options(
+        store,
+        small_policy(),
+        false,
+        1 << 20,
+        node_limits(),
+        Some(plane.clone()),
+    ));
+    server.set_epoch(epoch);
+    let cfg = StoreServeConfig {
+        policy: small_policy(),
+        cache_bytes: usize::MAX,
+        allow_xla: false,
+        max_conns: usize::MAX,
+        tile_bytes: 1 << 20,
+        limits: node_limits(),
+        faults: Some(plane.clone()),
+        cluster_epoch: epoch,
+        ..Default::default()
+    };
+    let handle = {
+        let server = server.clone();
+        std::thread::spawn(move || eventloop::run(server, listener, &cfg))
+    };
+    Node {
+        id,
+        addr,
+        dir: dir.to_path_buf(),
+        server,
+        plane,
+        handle,
+    }
+}
+
+/// Drain every node and join its accept loop. Callers must drop their
+/// clients first — a drained event loop exits once its last connection
+/// closes.
+fn shutdown(nodes: Vec<Node>) {
+    for n in &nodes {
+        n.plane.revive();
+        n.server.drain();
+    }
+    for n in nodes {
+        n.handle.join().expect("node thread").expect("node result");
+    }
+}
+
+/// Static membership map over the nodes' actual bound addresses.
+fn map_of(nodes: &[Node], replication: usize, epoch: u64) -> ClusterMap {
+    let mut spec = format!("epoch={epoch}\n");
+    for n in nodes {
+        spec.push_str(&format!("{}={}\n", n.id, n.addr));
+    }
+    ClusterMap::parse(&spec, replication).unwrap()
+}
+
+/// Router knobs for the chaos tests: v3 wire, fast failure detection,
+/// a breaker that opens after 2 consecutive failures and stays open for
+/// the rest of the test (cooldown far beyond the op budget).
+fn router_cfg() -> RouterConfig {
+    RouterConfig {
+        client: ClientConfig {
+            wire: WireVersion::V3,
+            connect_timeout: Duration::from_secs(2),
+            io_timeout: Some(Duration::from_secs(2)),
+            retries: 1,
+            ..ClientConfig::default()
+        },
+        breaker_threshold: 2,
+        breaker_cooldown_ops: 10_000,
+        ..RouterConfig::default()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Frontend {
+    Threads,
+    EventLoop,
+}
+
+fn spawn_frontend(
+    frontend: Frontend,
+    dir: &Path,
+    cfg: StoreServeConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let dir = dir.to_path_buf();
+    let srv = std::thread::spawn(move || match frontend {
+        Frontend::Threads => serve_store_listener(listener, &dir, cfg),
+        Frontend::EventLoop => eventloop::serve_store_eventloop(listener, &dir, cfg),
+    });
+    (addr, srv)
+}
+
+fn frontends() -> Vec<Frontend> {
+    let mut f = vec![Frontend::Threads];
+    if eventloop::supported() {
+        f.push(Frontend::EventLoop);
+    }
+    f
+}
+
+/// Satellite: `ping` answers on the v2 *and* v3 wires, on both
+/// front-ends, and — with `cluster-stat` — never loads an artifact: the
+/// resident count stays 0 no matter how many probes land. The configured
+/// cluster epoch is echoed back.
+#[test]
+fn ping_is_o1_on_both_wires_and_frontends() {
+    let dir = build_store_dir("ping");
+    for frontend in frontends() {
+        let cfg = StoreServeConfig {
+            policy: small_policy(),
+            cache_bytes: usize::MAX,
+            allow_xla: false,
+            max_conns: 2,
+            tile_bytes: 1 << 20,
+            cluster_epoch: 7,
+            ..Default::default()
+        };
+        let (addr, srv) = spawn_frontend(frontend, &dir, cfg);
+        for wire in [WireVersion::V2, WireVersion::V3] {
+            let client_cfg = ClientConfig {
+                wire,
+                ..ClientConfig::default()
+            };
+            let mut c = ServeClient::connect_with(&addr, client_cfg).unwrap();
+            c.ping().unwrap();
+            let s = c.cluster_stat().unwrap();
+            assert_eq!(s.epoch, 7, "{frontend:?} {wire:?} epoch");
+            assert_eq!(s.artifacts, 4, "{frontend:?} {wire:?} artifact count");
+            assert_eq!(s.resident, 0, "{frontend:?} {wire:?}: probes must not load");
+            assert!(!s.draining, "{frontend:?} {wire:?} draining flag");
+            for _ in 0..32 {
+                c.ping().unwrap();
+            }
+            let after = c.cluster_stat().unwrap();
+            assert_eq!(after.resident, 0, "{frontend:?} {wire:?}: ping touched the LRU");
+            assert_eq!(after.quarantined, 0, "{frontend:?} {wire:?} quarantine count");
+        }
+        srv.join().expect("server thread").expect("server result");
+    }
+}
+
+/// Connect raw and expect the unprompted typed `draining` refusal line
+/// followed by EOF. Returns the raw line for cross-front-end parity.
+fn read_drain_refusal(addr: &str) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    match parse_v2_reply(&Request::List, line.trim_end()).unwrap() {
+        Reply::Err(ErrClass::Server, msg) => {
+            assert!(msg.starts_with("draining"), "refusal message: {msg}");
+        }
+        other => panic!("expected a typed draining refusal, got {other:?}"),
+    }
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "refusal then EOF");
+    line
+}
+
+/// Satellite: a connection accepted while the server drains gets the
+/// same typed refusal on the threaded and the event-loop front-ends —
+/// never a silent close.
+#[test]
+fn drain_refusal_is_typed_on_both_frontends() {
+    let dir = build_store_dir("drainref");
+    let mut refusals = Vec::new();
+
+    // threaded front-end: conn #1 is a live client, conn #2 arrives
+    // after drain and must be refused; take(2) then ends the loop
+    {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        let server = Arc::new(ArtifactServer::with_options(
+            store,
+            small_policy(),
+            false,
+            0,
+            node_limits(),
+            None,
+        ));
+        let cfg = StoreServeConfig {
+            policy: small_policy(),
+            cache_bytes: usize::MAX,
+            allow_xla: false,
+            max_conns: 2,
+            tile_bytes: 0,
+            limits: node_limits(),
+            ..Default::default()
+        };
+        let srv = {
+            let server = server.clone();
+            std::thread::spawn(move || run_store_listener(server, listener, &cfg))
+        };
+        let mut live = ServeClient::connect(&addr).unwrap();
+        live.ping().unwrap();
+        server.drain();
+        refusals.push(read_drain_refusal(&addr));
+        drop(live);
+        srv.join().expect("threaded server").expect("threaded result");
+    }
+
+    // event-loop front-end: the live connection keeps the loop running
+    // past the drain so the late connection exercises the refusal path
+    if eventloop::supported() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        let server = Arc::new(ArtifactServer::with_options(
+            store,
+            small_policy(),
+            false,
+            0,
+            node_limits(),
+            None,
+        ));
+        let cfg = StoreServeConfig {
+            policy: small_policy(),
+            cache_bytes: usize::MAX,
+            allow_xla: false,
+            max_conns: usize::MAX,
+            tile_bytes: 0,
+            limits: node_limits(),
+            ..Default::default()
+        };
+        let srv = {
+            let server = server.clone();
+            std::thread::spawn(move || eventloop::run(server, listener, &cfg))
+        };
+        let mut live = ServeClient::connect(&addr).unwrap();
+        live.ping().unwrap();
+        server.drain();
+        refusals.push(read_drain_refusal(&addr));
+        drop(live);
+        srv.join().expect("eventloop server").expect("eventloop result");
+    }
+
+    for r in &refusals {
+        assert_eq!(r, &refusals[0], "front-ends must send identical refusal bytes");
+    }
+}
+
+/// Satellite: a pipelined burst that loses its connection mid-flight is
+/// replayed wholesale (all requests are idempotent reads) and every
+/// successful burst yields exactly one bit-exact reply per request —
+/// never partial results, never duplicates, under pinned fault seeds.
+#[test]
+fn pipeline_disconnect_mid_burst_replays_idempotently() {
+    if !eventloop::supported() {
+        eprintln!("skipping: no event-loop backend on this platform");
+        return;
+    }
+    let dir = build_store_dir(&format!("pipedisc{}", chaos_seed()));
+    let node = spawn_node(
+        "solo",
+        &dir,
+        0,
+        FaultSpec {
+            seed: chaos_seed(),
+            disconnect: 0.02,
+            ..FaultSpec::default()
+        },
+    );
+
+    let shape = vec![8usize, 6, 5];
+    let coords = random_coords(&shape, 16, 4242);
+    let want = reference_values(&dir, "traffic_ttd", &coords);
+    let reqs: Vec<Request> = coords
+        .iter()
+        .map(|c| Request::Get {
+            name: "traffic_ttd".to_string(),
+            coords: c.clone(),
+        })
+        .collect();
+
+    let client_cfg = ClientConfig {
+        wire: WireVersion::V3,
+        io_timeout: Some(Duration::from_secs(2)),
+        ..ClientConfig::default()
+    };
+    let mut client = ServeClient::connect_with(&node.addr, client_cfg).unwrap();
+    let mut completed = 0u32;
+    let mut replays = 0u32;
+    while completed < 25 {
+        match client.pipeline(&reqs) {
+            Ok(replies) => {
+                assert_eq!(replies.len(), reqs.len(), "one reply per request, in order");
+                for (i, (r, w)) in replies.iter().zip(&want).enumerate() {
+                    match r {
+                        Reply::Value(v) => {
+                            assert_eq!(v.to_bits(), w.to_bits(), "burst entry {i}");
+                        }
+                        other => panic!("non-value reply {other:?} at burst entry {i}"),
+                    }
+                }
+                completed += 1;
+            }
+            Err(_) => {
+                // the burst is idempotent reads: replay it wholesale; a
+                // failed burst surfaces zero results, never partial ones
+                replays += 1;
+                assert!(replays < 10_000, "pipeline never recovers from disconnects");
+            }
+        }
+    }
+    let injected = node.plane.counters().disconnects.load(Ordering::Relaxed);
+    assert!(injected > 0, "no disconnects injected (seed {}): vacuous", chaos_seed());
+
+    drop(client);
+    shutdown(vec![node]);
+}
+
+/// Acceptance: 3 nodes, R=2. A mid-burst kill of the primary replica is
+/// absorbed by failover — every request gets a reply bit-identical to
+/// the single-node reference decode, zero lost — and the victim's
+/// breaker opens. The node then comes back with a corrupt artifact,
+/// quarantines it on reload, and `repair` pulls good bytes from the
+/// healthy replica and re-serves them bit-exactly.
+#[test]
+fn node_kill_mid_burst_fails_over_bit_exact_then_repairs() {
+    if !eventloop::supported() {
+        eprintln!("skipping: no event-loop backend on this platform");
+        return;
+    }
+    let tag = format!("kill{}", chaos_seed());
+    let src = build_store_dir(&format!("{tag}_src"));
+    let seeded = FaultSpec {
+        seed: chaos_seed(),
+        ..FaultSpec::default()
+    };
+    let ids = ["alpha", "beta", "gamma"];
+    let nodes: Vec<Node> = ids
+        .iter()
+        .enumerate()
+        .map(|(i, id)| {
+            let dir = clone_store_dir(&src, &format!("{tag}_n{i}"));
+            spawn_node(id, &dir, 3, seeded.clone())
+        })
+        .collect();
+    let map = map_of(&nodes, 2, 3);
+    let mut router = RouterClient::new(map.clone(), router_cfg());
+
+    // placement sanity through the live cluster: every artifact is
+    // readable and bit-identical to the reference decode
+    let specs = artifact_specs();
+    for (i, (name, _, shape, _)) in specs.iter().enumerate() {
+        let coords = random_coords(shape, 12, 7000 + i as u64);
+        let want = reference_values(&src, name, &coords);
+        let got = router.batch_get(name, &coords).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "cluster read of {name}");
+        }
+    }
+    assert_eq!(router.cluster_stat_node("alpha").unwrap().epoch, 3);
+
+    // kill the primary replica of traffic_ttd mid-burst
+    let victim_id = map.primary_for("traffic_ttd").id.clone();
+    let victim = nodes.iter().find(|n| n.id == victim_id).unwrap();
+    let coords = random_coords(&[8, 6, 5], 24, 0xBEEF);
+    let want = reference_values(&src, "traffic_ttd", &coords);
+    for (i, (c, w)) in coords.iter().zip(&want).enumerate() {
+        if i == coords.len() / 2 {
+            victim.plane.kill();
+        }
+        let got = router
+            .get("traffic_ttd", c)
+            .unwrap_or_else(|e| panic!("request {i} lost under node kill: {e:#}"));
+        assert_eq!(got.to_bits(), w.to_bits(), "wrong byte under failover at {i}");
+    }
+    assert!(
+        router.node_health(&victim_id).breaker_open,
+        "the victim's breaker never opened — the kill was not observed"
+    );
+    assert!(
+        victim.plane.counters().kill_refusals.load(Ordering::Relaxed) > 0,
+        "the kill switch never refused a socket op — vacuous"
+    );
+
+    // the rest of the catalog keeps serving from live replicas while
+    // the victim is dark
+    for (i, (name, _, shape, _)) in specs.iter().enumerate() {
+        let coords = random_coords(shape, 6, 7700 + i as u64);
+        let want = reference_values(&src, name, &coords);
+        let got = router.batch_get(name, &coords).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "read of {name} with a node dark");
+        }
+    }
+
+    // the node comes back with a corrupted artifact: reload quarantines
+    // it (last-good keeps serving), repair pulls from the healthy
+    // replica and heals it
+    victim.plane.revive();
+    std::fs::write(victim.dir.join("traffic_ttd.tcz"), b"not a tcz container").unwrap();
+    let mut direct = ServeClient::connect_with(&victim.addr, router_cfg().client).unwrap();
+    assert!(
+        direct.reload("traffic_ttd").is_err(),
+        "reload of a corrupt replica must fail"
+    );
+    assert_eq!(direct.stat("traffic_ttd").unwrap().health, "quarantined");
+
+    let repaired = router.repair_on(&victim_id, "traffic_ttd").unwrap();
+    assert_eq!(repaired.method, "ttd");
+    assert_eq!(direct.stat("traffic_ttd").unwrap().health, "ok");
+    let got = direct.batch_get("traffic_ttd", &coords).unwrap();
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.to_bits(), w.to_bits(), "repaired replica must re-serve bit-exactly");
+    }
+
+    drop(direct);
+    drop(router);
+    shutdown(nodes);
+}

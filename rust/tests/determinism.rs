@@ -449,6 +449,104 @@ fn server_replies_bit_identical_across_thread_counts() {
     }
 }
 
+/// Cluster-path determinism: values served through the replicated
+/// router (HRW placement → v3 wire → shard decode on a live node) are
+/// bit-identical across {forced scalar, auto dispatch} × {1, 8 threads}.
+/// A fresh 2-node cluster is spun up per setting so no shard or cache
+/// state leaks between sweep points.
+#[test]
+fn cluster_replies_bit_identical_across_simd_and_threads() {
+    use std::path::PathBuf;
+    use std::sync::Arc;
+    use tensorcodec::store::client::{ClientConfig, WireVersion};
+    use tensorcodec::store::cluster::{ClusterMap, RouterClient, RouterConfig};
+    use tensorcodec::store::eventloop;
+    use tensorcodec::store::server::{ArtifactServer, ServeLimits, StoreServeConfig};
+    use tensorcodec::store::ArtifactStore;
+
+    if !eventloop::supported() {
+        eprintln!("SKIP: no event-loop backend on this platform");
+        return;
+    }
+    let _g = lock();
+    let dir: PathBuf = std::env::temp_dir().join("tcz_determinism_cluster");
+    std::fs::create_dir_all(&dir).unwrap();
+    let t = DenseTensor::random_uniform(&[8, 7, 6], 21);
+    let c = codec::by_name("ttd").unwrap();
+    let a = c
+        .compress(&t, &Budget::Params(700), &CodecConfig::default())
+        .unwrap();
+    codec::save_artifact(&dir.join("det_ttd.tcz"), a.as_ref()).unwrap();
+    let mut coords = random_coords(&[8, 7, 6], 2000, 9);
+    sort_coords(&mut coords);
+
+    let spawn_node = || {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let store = ArtifactStore::new(&dir, usize::MAX).unwrap();
+        let server = Arc::new(ArtifactServer::with_options(
+            store,
+            tensorcodec::coordinator::batcher::BatchPolicy::default(),
+            false,
+            0,
+            ServeLimits::default(),
+            None,
+        ));
+        let cfg = StoreServeConfig {
+            max_conns: usize::MAX,
+            ..Default::default()
+        };
+        let handle = {
+            let server = server.clone();
+            std::thread::spawn(move || eventloop::run(server, listener, &cfg))
+        };
+        (addr, server, handle)
+    };
+
+    let mut reference: Option<(Vec<u32>, u32)> = None;
+    for simd in [Some(kernels::SimdIsa::Scalar), None] {
+        for threads in [1usize, 8] {
+            kernels::set_simd(simd);
+            kernels::set_threads(threads);
+            let nodes = [spawn_node(), spawn_node()];
+            let spec = format!("a={}\nb={}", nodes[0].0, nodes[1].0);
+            let map = ClusterMap::parse(&spec, 2).unwrap();
+            let router_cfg = RouterConfig {
+                client: ClientConfig {
+                    wire: WireVersion::V3,
+                    ..ClientConfig::default()
+                },
+                ..RouterConfig::default()
+            };
+            let mut router = RouterClient::new(map, router_cfg);
+            let block = router.batch_get("det_ttd", &coords).unwrap();
+            let one = router.get("det_ttd", &coords[17]).unwrap();
+            drop(router);
+            for (_, server, handle) in nodes {
+                server.drain();
+                handle.join().unwrap().unwrap();
+            }
+            let bits: Vec<u32> = block.iter().map(|v| v.to_bits()).collect();
+            match &reference {
+                None => reference = Some((bits, one.to_bits())),
+                Some((wb, wo)) => {
+                    assert_eq!(
+                        &bits, wb,
+                        "cluster decode differs at simd={simd:?} threads={threads}"
+                    );
+                    assert_eq!(
+                        one.to_bits(),
+                        *wo,
+                        "cluster point decode differs at simd={simd:?} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+    kernels::set_simd(None);
+    kernels::set_threads(0);
+}
+
 /// Full training determinism: same seed + same data ⇒ bit-identical
 /// `fit()` models at 1 vs 8 threads. Needs the XLA AOT artifacts.
 #[test]

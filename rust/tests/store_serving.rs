@@ -630,6 +630,7 @@ fn tcp_chaos_faulty_sockets_never_serve_a_wrong_byte() {
         },
         faults: Some(plane.clone()),
         eventloop: Default::default(),
+        cluster_epoch: 0,
     };
     let dir2 = dir.clone();
     let srv = std::thread::spawn(move || serve_store_listener(listener, &dir2, cfg));
